@@ -1,0 +1,173 @@
+//! Experiment harness: regenerate any (or all) of the paper's tables and
+//! figures from one binary.
+//!
+//! Run: `cargo run --release --example harness -- [table1|fig4|fig5|fig6|fig9|all] [--fast] [--fused]`
+
+use subppl::coordinator::experiments as exp;
+use subppl::coordinator::report::{results_dir, Table};
+use subppl::coordinator::FusedEval;
+use subppl::infer::{InterpreterEval, LocalEvaluator};
+
+fn evaluator(fused: bool) -> Box<dyn LocalEvaluator> {
+    if fused {
+        if let Ok(f) = FusedEval::open_default() {
+            return Box::new(f);
+        }
+        eprintln!("fused evaluator unavailable; using interpreter");
+    }
+    Box::new(InterpreterEval)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let fused = args.iter().any(|a| a == "--fused");
+    let which = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let all = which == "all";
+    let dir = results_dir();
+
+    if all || which == "table1" {
+        println!("\n================ Table 1: exact-MH scaling ================");
+        let rows = exp::table1_scaling(3);
+        let mut t = Table::new(&["model", "N_small", "N_large", "t_small", "t_large", "exponent"]);
+        for r in &rows {
+            t.row(&[
+                r.model.clone(),
+                r.n_small.to_string(),
+                r.n_large.to_string(),
+                format!("{:.5}s", r.t_small),
+                format!("{:.5}s", r.t_large),
+                format!("{:.2}", r.exponent),
+            ]);
+        }
+        t.print();
+        println!("(paper: all three scale linearly; exponent ~1.0)");
+    }
+
+    if all || which == "fig5" {
+        println!("\n================ Fig. 5: sublinearity ================");
+        let cfg = if fast {
+            exp::Fig5Config {
+                ns: vec![1_000, 3_000, 10_000, 30_000],
+                iters: 30,
+                ..Default::default()
+            }
+        } else {
+            exp::Fig5Config::default()
+        };
+        let mut ev = evaluator(fused);
+        let rows = exp::fig5_sublinear(&cfg, ev.as_mut());
+        let mut t = Table::new(&["N", "sections/iter", "E[sections]", "t_sub", "t_exact", "speedup"]);
+        for r in &rows {
+            t.row(&[
+                r.n.to_string(),
+                format!("{:.1}", r.avg_sections),
+                format!("{:.1}", r.expected_sections),
+                format!("{:.5}s", r.time_sub),
+                format!("{:.5}s", r.time_exact),
+                format!("{:.1}x", r.time_exact / r.time_sub),
+            ]);
+        }
+        t.print();
+        // fit the scaling exponent of sections vs N in log-log
+        if rows.len() >= 2 {
+            let (a, b) = (rows.first().unwrap(), rows.last().unwrap());
+            let expo = (b.avg_sections / a.avg_sections).ln() / (b.n as f64 / a.n as f64).ln();
+            println!("sections-vs-N exponent: {expo:.2} (1.0 = linear; paper: sublinear, near-flat)");
+        }
+        exp::fig5_csv(&rows)
+            .write_to(&dir.join("fig5_sublinear.csv"))
+            .unwrap();
+    }
+
+    if all || which == "fig4" {
+        println!("\n================ Fig. 4: BayesLR risk vs time ================");
+        let cfg = if fast {
+            exp::Fig4Config {
+                n_train: 2000,
+                n_test: 500,
+                steps: 120,
+                record_every: 10,
+                ..Default::default()
+            }
+        } else {
+            exp::Fig4Config::default()
+        };
+        let mut ev = evaluator(fused);
+        let curves = exp::fig4_risk(&cfg, ev.as_mut());
+        let mut t = Table::new(&["method", "seconds", "final risk", "final 0-1", "JB p"]);
+        for c in &curves {
+            let last = c.points.last().copied().unwrap_or((0.0, f64::NAN, f64::NAN));
+            t.row(&[
+                c.label.clone(),
+                format!("{:.2}", last.0),
+                format!("{:.6}", last.1),
+                format!("{:.4}", last.2),
+                format!("{:.3}", c.normality_p),
+            ]);
+        }
+        t.print();
+        exp::fig4_csv(&curves).write_to(&dir.join("fig4_risk.csv")).unwrap();
+    }
+
+    if all || which == "fig6" {
+        println!("\n================ Fig. 6: JointDPM accuracy vs time ================");
+        let cfg = if fast {
+            exp::Fig6Config {
+                n_train: 300,
+                n_test: 150,
+                sweeps: 10,
+                step_z: 30,
+                ..Default::default()
+            }
+        } else {
+            exp::Fig6Config::default()
+        };
+        let mut t = Table::new(&["method", "final seconds", "final accuracy", "clusters"]);
+        for (label, sub) in [("exact-mh", false), ("subsampled-eps0.3", true)] {
+            let pts = exp::fig6_dpm(&cfg, sub);
+            let last = pts.last().unwrap();
+            t.row(&[
+                label.to_string(),
+                format!("{:.2}", last.seconds),
+                format!("{:.4}", last.accuracy),
+                last.clusters.to_string(),
+            ]);
+        }
+        t.print();
+    }
+
+    if all || which == "fig9" {
+        println!("\n================ Fig. 9: stochastic volatility ================");
+        let cfg = if fast {
+            exp::Fig9Config {
+                series: 30,
+                sweeps: 60,
+                ..Default::default()
+            }
+        } else {
+            exp::Fig9Config::default()
+        };
+        let exact = exp::fig9_sv(&cfg, false);
+        let sub = exp::fig9_sv(&cfg, true);
+        let mut t = Table::new(&["method", "seconds", "phi ESS/s", "sig ESS/s"]);
+        for r in [&exact, &sub] {
+            t.row(&[
+                r.label.clone(),
+                format!("{:.2}", r.seconds),
+                format!("{:.3}", r.phi_ess_per_sec),
+                format!("{:.3}", r.sig_ess_per_sec),
+            ]);
+        }
+        t.print();
+        let (hist, acf) = exp::fig9_csv(&[exact, sub], 30);
+        hist.write_to(&dir.join("fig9_hist.csv")).unwrap();
+        acf.write_to(&dir.join("fig9_acf.csv")).unwrap();
+    }
+
+    println!("\nCSV series written under {}", dir.display());
+}

@@ -1,0 +1,140 @@
+"""AOT pipeline: lower every Layer-2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published ``xla`` 0.1.6 rust crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are shape-monomorphic, so we emit a small ladder of mini-batch
+sizes per kernel; the Rust runtime picks the smallest fitting variant and
+masks the padding rows.  A ``manifest.json`` indexes every artifact with
+its kind, shapes and input signature so the Rust side never hard-codes
+paths.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Mini-batch ladders.  m=100 is the paper's mini-batch; the runtime pads
+# 100 -> 128.  Large variants serve the exact-MH full-scoring path and the
+# test-set predictive sweep.
+RATIO_MS = [16, 64, 128, 256, 1024]
+PREDICT_MS = [256, 1024, 4096]
+AR1_MS = [16, 64, 128, 256, 1024]
+# Feature dims: 3 = synthetic 2-feature + bias (Fig. 5); 50 = MNIST-like
+# PCA surrogate (Fig. 4); 2 = JointDPM synthetic 2-d experts (Fig. 6).
+DS = [2, 3, 50]
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_catalog():
+    """(name, kind, fn, example_args, meta) for every artifact."""
+    catalog = []
+    for d in DS:
+        for m in RATIO_MS:
+            catalog.append(
+                (
+                    f"logistic_ratio_m{m}_d{d}",
+                    "logistic_ratio",
+                    model.logistic_ratio,
+                    (_spec(m, d), _spec(m), _spec(m), _spec(d), _spec(d)),
+                    {"m": m, "d": d},
+                )
+            )
+            catalog.append(
+                (
+                    f"logistic_loglik_m{m}_d{d}",
+                    "logistic_loglik",
+                    model.logistic_loglik,
+                    (_spec(m, d), _spec(m), _spec(m), _spec(d)),
+                    {"m": m, "d": d},
+                )
+            )
+        for m in PREDICT_MS:
+            catalog.append(
+                (
+                    f"logistic_predict_m{m}_d{d}",
+                    "logistic_predict",
+                    model.logistic_predict,
+                    (_spec(m, d), _spec(d)),
+                    {"m": m, "d": d},
+                )
+            )
+    for m in AR1_MS:
+        catalog.append(
+            (
+                f"gauss_ar1_ratio_m{m}",
+                "gauss_ar1_ratio",
+                model.gauss_ar1_ratio,
+                (_spec(m), _spec(m), _spec(m), _spec(4)),
+                {"m": m, "d": 0},
+            )
+        )
+    return catalog
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact-name filter (substring match)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    filters = args.only.split(",") if args.only else None
+    manifest = {"format": 1, "artifacts": []}
+    for name, kind, fn, example_args, meta in build_catalog():
+        if filters and not any(f in name for f in filters):
+            continue
+        text = to_hlo_text(fn, example_args)
+        rel = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, rel), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "kind": kind,
+                "path": rel,
+                "m": meta["m"],
+                "d": meta["d"],
+                "inputs": [list(a.shape) for a in example_args],
+                "dtype": "f32",
+            }
+        )
+        print(f"  wrote {rel} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    # TSV twin for the dependency-free Rust loader
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("# name\tkind\tpath\tm\td\n")
+        for a in manifest["artifacts"]:
+            f.write(f"{a['name']}\t{a['kind']}\t{a['path']}\t{a['m']}\t{a['d']}\n")
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

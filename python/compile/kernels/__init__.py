@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels for subppl.
+
+Each kernel is the per-element hot spot of one mini-batch likelihood
+(-ratio) evaluation that the Rust coordinator dispatches during a
+subsampled-MH transition (Alg. 3 of the paper).  All kernels are lowered
+with ``interpret=True`` so the emitted HLO runs on the CPU PJRT client;
+the BlockSpec structure is written for TPU VMEM tiling regardless (see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+from .logistic import (
+    logistic_ratio_pallas,
+    logistic_loglik_pallas,
+    logistic_predict_pallas,
+)
+from .gauss_ar1 import gauss_ar1_ratio_pallas
+
+__all__ = [
+    "logistic_ratio_pallas",
+    "logistic_loglik_pallas",
+    "logistic_predict_pallas",
+    "gauss_ar1_ratio_pallas",
+]

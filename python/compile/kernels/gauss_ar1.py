@@ -1,0 +1,75 @@
+"""Pallas kernel for stochastic-volatility local sections.
+
+A local section of the SV scaffold when sampling phi (or sigma) is
+``{(* phi h_{t-1}) (deterministic), h_t (absorbing Gaussian)}`` — the
+AR(1) transition density (paper §4.3, Fig. 9a).  Its contribution to the
+log-acceptance ratio is
+
+    l_t = log N(h_t | phi' h_{t-1}, sig'^2) - log N(h_t | phi h_{t-1}, sig^2)
+
+Unlike the austerity setting, these "data items" are *latent* states with
+chain dependencies; subsampling them is only valid at the scaffold level
+(paper §3.2 Remark), which is exactly what the Rust coordinator does —
+the kernel just scores whatever mini-batch of (h_{t-1}, h_t) pairs it is
+handed.
+
+Params are packed as (4,) = [phi_old, sig_old, phi_new, sig_new] so the
+artifact has a single scalar-parameter input.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_HALF_LOG_2PI = 0.5 * math.log(2.0 * math.pi)
+
+
+def _gauss_logpdf(x, mean, sig):
+    z = (x - mean) / sig
+    return -0.5 * z * z - jnp.log(sig) - _HALF_LOG_2PI
+
+
+def _ar1_ratio_kernel(hprev_ref, h_ref, mask_ref, params_ref, out_ref):
+    hprev = hprev_ref[...]    # (bm,)
+    h = h_ref[...]            # (bm,)
+    mask = mask_ref[...]      # (bm,)
+    p = params_ref[...]       # (4,) [phi_old, sig_old, phi_new, sig_new]
+    lp_old = _gauss_logpdf(h, p[0] * hprev, p[1])
+    lp_new = _gauss_logpdf(h, p[2] * hprev, p[3])
+    out_ref[...] = mask * (lp_new - lp_old)
+
+
+def _block_m(m):
+    if m % 128 == 0:
+        return 128
+    if m % 64 == 0:
+        return 64
+    return m
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gauss_ar1_ratio_pallas(h_prev, h, mask, params):
+    """Masked AR(1) transition log-density ratios.
+
+    Args:
+      h_prev: (m,) f32 parent states h_{t-1}.
+      h:      (m,) f32 child states h_t.
+      mask:   (m,) f32 1.0 live / 0.0 padding.
+      params: (4,) f32 [phi_old, sig_old, phi_new, sig_new].
+    Returns:
+      (m,) f32 masked ratios l_t.
+    """
+    (m,) = h.shape
+    bm = _block_m(m)
+    vec = pl.BlockSpec((bm,), lambda i: (i,))
+    return pl.pallas_call(
+        _ar1_ratio_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        grid=(m // bm,),
+        in_specs=[vec, vec, vec, pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=vec,
+        interpret=True,
+    )(h_prev, h, mask, params)

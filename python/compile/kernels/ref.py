@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package must match its oracle to float32 tolerance
+across the pytest/hypothesis shape sweep in python/tests/.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_HALF_LOG_2PI = 0.5 * math.log(2.0 * math.pi)
+
+
+def log_sigmoid_ref(z):
+    return -jnp.logaddexp(0.0, -z)
+
+
+def logistic_ratio_ref(x, t, mask, w_old, w_new):
+    z_old = t * (x @ w_old)
+    z_new = t * (x @ w_new)
+    return mask * (log_sigmoid_ref(z_new) - log_sigmoid_ref(z_old))
+
+
+def logistic_loglik_ref(x, t, mask, w):
+    return mask * log_sigmoid_ref(t * (x @ w))
+
+
+def logistic_predict_ref(x, w):
+    return jax.nn.sigmoid(x @ w)
+
+
+def gauss_logpdf_ref(x, mean, sig):
+    z = (x - mean) / sig
+    return -0.5 * z * z - jnp.log(sig) - _HALF_LOG_2PI
+
+
+def gauss_ar1_ratio_ref(h_prev, h, mask, params):
+    lp_old = gauss_logpdf_ref(h, params[0] * h_prev, params[1])
+    lp_new = gauss_logpdf_ref(h, params[2] * h_prev, params[3])
+    return mask * (lp_new - lp_old)

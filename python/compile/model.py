@@ -1,0 +1,44 @@
+"""Layer-2 JAX entry points that the AOT pipeline lowers to HLO text.
+
+Each function here is a *batched likelihood(-ratio) graph* — the piece of
+the paper's models (Table 1) that a mini-batch of scaffold local sections
+reduces to.  They call the Layer-1 Pallas kernels so both layers lower
+into the same HLO module; the Rust coordinator (Layer 3) loads the
+resulting artifacts and feeds them mini-batches on the transition hot
+path.  Python never runs at inference time.
+
+All entry points return 1-tuples: the AOT recipe lowers with
+``return_tuple=True`` and the Rust side unwraps with ``to_tuple1()``.
+"""
+
+from .kernels import (
+    gauss_ar1_ratio_pallas,
+    logistic_loglik_pallas,
+    logistic_predict_pallas,
+    logistic_ratio_pallas,
+)
+
+
+def logistic_ratio(x, t, mask, w_old, w_new):
+    """Per-section log-likelihood ratios for BayesLR / JointDPM weights.
+
+    This is the l_i of Eq. 6 for the logistic local-section family; the
+    sequential test (Alg. 2) consumes the individual entries, so the
+    vector is returned unreduced.
+    """
+    return (logistic_ratio_pallas(x, t, mask, w_old, w_new),)
+
+
+def logistic_loglik(x, t, mask, w):
+    """Per-section log-likelihoods (exact-MH full scoring path)."""
+    return (logistic_loglik_pallas(x, t, mask, w),)
+
+
+def logistic_predict(x, w):
+    """Predictive probabilities for the risk metric (Fig. 4)."""
+    return (logistic_predict_pallas(x, w),)
+
+
+def gauss_ar1_ratio(h_prev, h, mask, params):
+    """Per-section AR(1) transition ratios for the SV model (Fig. 9)."""
+    return (gauss_ar1_ratio_pallas(h_prev, h, mask, params),)

@@ -1,0 +1,90 @@
+"""AOT pipeline tests: lowering produces loadable HLO text with the right
+entry signature, and the catalog covers every kernel kind the Rust
+runtime expects."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+EXPECTED_KINDS = {
+    "logistic_ratio",
+    "logistic_loglik",
+    "logistic_predict",
+    "gauss_ar1_ratio",
+}
+
+
+def test_catalog_covers_all_kinds():
+    kinds = {kind for _, kind, _, _, _ in aot.build_catalog()}
+    assert kinds == EXPECTED_KINDS
+
+
+def test_catalog_names_unique():
+    names = [name for name, *_ in aot.build_catalog()]
+    assert len(names) == len(set(names))
+
+
+def test_catalog_includes_paper_minibatch_cover():
+    # Paper uses m=100 minibatches on D=50 MNIST features: the ladder must
+    # contain a variant with m >= 100 at d=50.
+    ms = [
+        meta["m"]
+        for _, kind, _, _, meta in aot.build_catalog()
+        if kind == "logistic_ratio" and meta["d"] == 50
+    ]
+    assert any(m >= 100 for m in ms)
+    assert min(ms) <= 16  # small tail batches don't pay for a 1024 pad
+
+
+def test_hlo_text_entry_signature():
+    spec = jax.ShapeDtypeStruct((16, 3), jnp.float32)
+    vec = jax.ShapeDtypeStruct((16,), jnp.float32)
+    w = jax.ShapeDtypeStruct((3,), jnp.float32)
+    text = aot.to_hlo_text(model.logistic_ratio, (spec, vec, vec, w, w))
+    assert text.startswith("HloModule")
+    assert "f32[16,3]" in text
+    # return_tuple=True => entry computation returns a 1-tuple
+    assert "->(f32[16]" in text.replace(" ", "")
+
+
+def test_hlo_text_is_deterministic():
+    spec = jax.ShapeDtypeStruct((16,), jnp.float32)
+    p = jax.ShapeDtypeStruct((4,), jnp.float32)
+    a = aot.to_hlo_text(model.gauss_ar1_ratio, (spec, spec, spec, p))
+    b = aot.to_hlo_text(model.gauss_ar1_ratio, (spec, spec, spec, p))
+    assert a == b
+
+
+@pytest.mark.slow
+def test_aot_main_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--only",
+            "logistic_ratio_m16_d3,gauss_ar1_ratio_m16",
+        ],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        check=True,
+        env=env,
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert "logistic_ratio_m16_d3" in names
+    assert "gauss_ar1_ratio_m16" in names
+    for a in manifest["artifacts"]:
+        assert (out / a["path"]).exists()
+        assert (out / a["path"]).read_text().startswith("HloModule")

@@ -1,0 +1,183 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal for Layer 1.
+
+Every Pallas kernel must match its pure-jnp reference to f32 tolerance,
+including under hypothesis-driven shape/value sweeps and at padding
+boundaries (mask rows must contribute exactly 0).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - environment-dependent
+    HAVE_HYPOTHESIS = False
+
+from compile.kernels import (
+    gauss_ar1_ratio_pallas,
+    logistic_loglik_pallas,
+    logistic_predict_pallas,
+    logistic_ratio_pallas,
+)
+from compile.kernels import ref
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def _logistic_inputs(seed, m, d, n_pad=0):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = _rand(k[0], m, d)
+    t = jnp.sign(_rand(k[1], m)).astype(jnp.float32)
+    t = jnp.where(t == 0, 1.0, t)
+    mask = jnp.ones((m,), jnp.float32)
+    if n_pad:
+        mask = mask.at[m - n_pad :].set(0.0)
+    w_old = _rand(k[2], d)
+    w_new = _rand(k[3], d)
+    return x, t, mask, w_old, w_new
+
+
+@pytest.mark.parametrize("m,d", [(16, 3), (64, 50), (128, 50), (256, 2), (100, 7), (1024, 50)])
+def test_logistic_ratio_matches_ref(m, d):
+    x, t, mask, w_old, w_new = _logistic_inputs(0, m, d)
+    got = logistic_ratio_pallas(x, t, mask, w_old, w_new)
+    want = ref.logistic_ratio_ref(x, t, mask, w_old, w_new)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("m,d,n_pad", [(128, 50, 28), (16, 3, 15), (64, 2, 1)])
+def test_logistic_ratio_padding_rows_are_zero(m, d, n_pad):
+    x, t, mask, w_old, w_new = _logistic_inputs(1, m, d, n_pad)
+    got = np.asarray(logistic_ratio_pallas(x, t, mask, w_old, w_new))
+    assert np.all(got[m - n_pad :] == 0.0)
+    want = ref.logistic_ratio_ref(x, t, mask, w_old, w_new)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_logistic_ratio_identity_weights_is_zero():
+    x, t, mask, w, _ = _logistic_inputs(2, 64, 5)
+    got = np.asarray(logistic_ratio_pallas(x, t, mask, w, w))
+    np.testing.assert_allclose(got, np.zeros(64), atol=1e-6)
+
+
+def test_logistic_ratio_extreme_logits_stable():
+    # Saturated logits must not produce inf/nan (log-sigmoid stability).
+    m, d = 16, 4
+    x = jnp.full((m, d), 100.0, jnp.float32)
+    t = jnp.ones((m,), jnp.float32)
+    mask = jnp.ones((m,), jnp.float32)
+    w_old = jnp.full((d,), -10.0, jnp.float32)
+    w_new = jnp.full((d,), 10.0, jnp.float32)
+    got = np.asarray(logistic_ratio_pallas(x, t, mask, w_old, w_new))
+    assert np.all(np.isfinite(got))
+    want = np.asarray(ref.logistic_ratio_ref(x, t, mask, w_old, w_new))
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("m,d", [(16, 3), (128, 50), (100, 2)])
+def test_logistic_loglik_matches_ref(m, d):
+    x, t, mask, w, _ = _logistic_inputs(3, m, d)
+    got = logistic_loglik_pallas(x, t, mask, w)
+    want = ref.logistic_loglik_ref(x, t, mask, w)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_loglik_consistent_with_ratio():
+    # ratio == loglik(new) - loglik(old), elementwise.
+    x, t, mask, w_old, w_new = _logistic_inputs(4, 128, 10)
+    r = logistic_ratio_pallas(x, t, mask, w_old, w_new)
+    l_new = logistic_loglik_pallas(x, t, mask, w_new)
+    l_old = logistic_loglik_pallas(x, t, mask, w_old)
+    np.testing.assert_allclose(r, l_new - l_old, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,d", [(256, 50), (1024, 3), (256, 2)])
+def test_logistic_predict_matches_ref(m, d):
+    x, _, _, w, _ = _logistic_inputs(5, m, d)
+    got = logistic_predict_pallas(x, w)
+    want = ref.logistic_predict_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    g = np.asarray(got)
+    assert np.all((g >= 0.0) & (g <= 1.0))
+
+
+@pytest.mark.parametrize("m", [16, 64, 128, 100, 256])
+def test_ar1_ratio_matches_ref(m):
+    k = jax.random.split(jax.random.PRNGKey(6), 3)
+    h_prev = _rand(k[0], m)
+    h = _rand(k[1], m)
+    mask = jnp.ones((m,), jnp.float32)
+    params = jnp.array([0.95, 0.1, 0.90, 0.15], jnp.float32)
+    got = gauss_ar1_ratio_pallas(h_prev, h, mask, params)
+    want = ref.gauss_ar1_ratio_ref(h_prev, h, mask, params)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_ar1_ratio_same_params_zero():
+    m = 64
+    k = jax.random.split(jax.random.PRNGKey(7), 2)
+    h_prev, h = _rand(k[0], m), _rand(k[1], m)
+    mask = jnp.ones((m,), jnp.float32)
+    params = jnp.array([0.9, 0.2, 0.9, 0.2], jnp.float32)
+    got = np.asarray(gauss_ar1_ratio_pallas(h_prev, h, mask, params))
+    np.testing.assert_allclose(got, np.zeros(m), atol=1e-6)
+
+
+def test_ar1_ratio_known_value():
+    # Hand-computed single element.
+    h_prev = jnp.array([1.0], jnp.float32)
+    h = jnp.array([0.5], jnp.float32)
+    mask = jnp.ones((1,), jnp.float32)
+    phi0, s0, phi1, s1 = 0.95, 0.1, 0.5, 0.2
+
+    def lp(x, mean, sig):
+        return -0.5 * ((x - mean) / sig) ** 2 - math.log(sig) - 0.5 * math.log(2 * math.pi)
+
+    want = lp(0.5, phi1 * 1.0, s1) - lp(0.5, phi0 * 1.0, s0)
+    params = jnp.array([phi0, s0, phi1, s1], jnp.float32)
+    got = float(gauss_ar1_ratio_pallas(h_prev, h, mask, params)[0])
+    assert abs(got - want) < 1e-4
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 32, 64, 100, 128]),
+        d=st.integers(min_value=1, max_value=64),
+        seed=st.integers(min_value=0, max_value=2**16),
+        scale=st.floats(min_value=0.01, max_value=10.0),
+    )
+    def test_hypothesis_logistic_ratio(m, d, seed, scale):
+        x, t, mask, w_old, w_new = _logistic_inputs(seed, m, d)
+        x = x * scale
+        got = logistic_ratio_pallas(x, t, mask, w_old, w_new)
+        want = ref.logistic_ratio_ref(x, t, mask, w_old, w_new)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 64, 100, 128]),
+        seed=st.integers(min_value=0, max_value=2**16),
+        phi=st.floats(min_value=-0.999, max_value=0.999),
+        sig=st.floats(min_value=0.01, max_value=5.0),
+    )
+    def test_hypothesis_ar1_ratio(m, seed, phi, sig):
+        k = jax.random.split(jax.random.PRNGKey(seed), 2)
+        h_prev, h = _rand(k[0], m), _rand(k[1], m)
+        mask = jnp.ones((m,), jnp.float32)
+        params = jnp.array([phi, sig, -phi, sig * 2.0], jnp.float32)
+        got = gauss_ar1_ratio_pallas(h_prev, h, mask, params)
+        want = ref.gauss_ar1_ratio_ref(h_prev, h, mask, params)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,179 @@
+//! Ablation benches for the design choices called out in DESIGN.md:
+//!  1. interpreter-walk vs XLA-fused local-section evaluation
+//!  2. finite-population correction on/off in the sequential test
+//!  3. mini-batch size sweep
+//! Run: `cargo bench --bench ablations`
+
+use std::time::Instant;
+use subppl::coordinator::chain::build_bayes_lr;
+use subppl::coordinator::FusedEval;
+use subppl::data::mnist_like;
+use subppl::infer::subsampled_mh::SparseSampler;
+use subppl::infer::{
+    subsampled_mh_transition, InterpreterEval, LocalEvaluator, Proposal, SequentialTest,
+    SubsampledConfig, TestState,
+};
+use subppl::math::Pcg64;
+use subppl::trace::partition::build_partition;
+
+fn main() {
+    ablate_fused();
+    ablate_fpc();
+    ablate_batch();
+}
+
+/// 1. fused XLA vs interpreter section evaluation (batch of 100, D=50).
+fn ablate_fused() {
+    println!("=== ablation: interpreter vs XLA-fused section evaluation ===");
+    let data = mnist_like::sized(12214, 50, 0);
+    let mut rng = Pcg64::seeded(1);
+    let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+    let p = build_partition(&trace, w).unwrap();
+    let new_w = {
+        let cur = trace.fresh_value(w);
+        Proposal::Drift(0.05).propose(&cur, &mut rng).unwrap()
+    };
+    let roots: Vec<_> = p.locals[..100].to_vec();
+    let reps = 200;
+
+    let mut interp = InterpreterEval;
+    // warm up
+    let want = interp.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        interp.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+    }
+    let t_interp = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("interpreter: {:.1} us per 100-section batch", t_interp * 1e6);
+
+    match FusedEval::open_default() {
+        Ok(mut fused) => {
+            fused = fused.always_fused();
+            let got = fused.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 2e-4, "fused != interpreter: {g} vs {w}");
+            }
+            // crossover sweep: batch size vs per-section cost, both paths
+            println!("{:>7} {:>16} {:>16} {:>9}", "batch", "interp us/sec", "xla us/sec", "ratio");
+            for &bs in &[16usize, 64, 100, 256, 1024, 4096] {
+                let roots: Vec<_> = p.locals[..bs.min(p.n())].to_vec();
+                let reps = (2000 / bs).max(5);
+                // warm up both paths (XLA compiles lazily per variant)
+                interp.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+                fused.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+                let t0 = Instant::now();
+                for _ in 0..reps {
+                    interp.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+                }
+                let ti = t0.elapsed().as_secs_f64() / (reps * roots.len()) as f64;
+                let t0 = Instant::now();
+                for _ in 0..reps {
+                    fused.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+                }
+                let tf = t0.elapsed().as_secs_f64() / (reps * roots.len()) as f64;
+                println!(
+                    "{:>7} {:>16.3} {:>16.3} {:>9.2}",
+                    roots.len(),
+                    ti * 1e6,
+                    tf * 1e6,
+                    ti / tf
+                );
+            }
+            println!("(default FusedEval routes batches < 256 to the interpreter)\n");
+        }
+        Err(e) => println!("fused unavailable: {e}\n"),
+    }
+}
+
+/// 2. does the finite-population correction matter?  Error rate of the
+/// test decision vs the exact decision, with and without FPC, on
+/// populations where the test frequently runs deep.
+fn ablate_fpc() {
+    println!("=== ablation: finite-population correction ===");
+    let mut rng = Pcg64::seeded(2);
+    let n = 2_000;
+    let mut wrong_with = 0usize;
+    let mut wrong_without = 0usize;
+    let mut consumed_with = 0usize;
+    let trials = 400;
+    for _ in 0..trials {
+        // borderline population: mean close to 0
+        let mu = 0.002 * rng.normal();
+        let pop: Vec<f64> = (0..n).map(|_| mu + 0.5 * rng.normal()).collect();
+        let truth = pop.iter().sum::<f64>() / n as f64 > 0.0;
+        // with FPC (the real implementation)
+        let mut test = SequentialTest::new(0.0, n, 0.05);
+        let mut sampler = SparseSampler::new(n);
+        let decision = loop {
+            let take = 100.min(sampler.remaining());
+            let batch: Vec<f64> = (0..take).map(|_| pop[sampler.next(&mut rng)]).collect();
+            if let TestState::Decided(d) = test.update(&batch) {
+                break d;
+            }
+        };
+        consumed_with += test.n();
+        if decision != truth {
+            wrong_with += 1;
+        }
+        // without FPC: emulate by lying about the population size (huge N
+        // makes the correction factor ~1)
+        let mut test = SequentialTest::new(0.0, usize::MAX >> 20, 0.05);
+        let mut sampler = SparseSampler::new(n);
+        let mut consumed = 0;
+        let decision = loop {
+            let take = 100.min(sampler.remaining());
+            if take == 0 {
+                // exhausted the real population: decide on the mean
+                break test.mean() > 0.0;
+            }
+            let batch: Vec<f64> = (0..take).map(|_| pop[sampler.next(&mut rng)]).collect();
+            consumed += take;
+            if let TestState::Decided(d) = test.update(&batch) {
+                break d;
+            }
+        };
+        let _ = consumed;
+        if decision != truth {
+            wrong_without += 1;
+        }
+    }
+    println!(
+        "error rate with FPC:    {:.3} (avg consumed {:.0}/{n})",
+        wrong_with as f64 / trials as f64,
+        consumed_with as f64 / trials as f64
+    );
+    println!("error rate without FPC: {:.3}", wrong_without as f64 / trials as f64);
+    println!("(FPC lets the test finish with an exact decision at n=N)\n");
+}
+
+/// 3. mini-batch size sweep: sections consumed + time per transition.
+fn ablate_batch() {
+    println!("=== ablation: mini-batch size m ===");
+    let data = mnist_like::sized(12214, 50, 3);
+    println!("{:>6} {:>16} {:>14}", "m", "sections/iter", "time/iter(s)");
+    for &m in &[10usize, 50, 100, 500, 1000] {
+        let mut rng = Pcg64::seeded(4);
+        let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+        let cfg = SubsampledConfig {
+            m,
+            eps: 0.01,
+            proposal: Proposal::Drift(0.05),
+            exact: false,
+        };
+        let mut ev = InterpreterEval;
+        let iters = 40;
+        let mut sections = 0usize;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let s = subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, &mut ev).unwrap();
+            sections += s.sections_evaluated;
+        }
+        println!(
+            "{:>6} {:>16.1} {:>14.6}",
+            m,
+            sections as f64 / iters as f64,
+            t0.elapsed().as_secs_f64() / iters as f64
+        );
+    }
+    println!("(paper uses m=100; too-small m pays per-batch overhead, too-large m overshoots)");
+}

@@ -1,0 +1,54 @@
+//! Bench: Fig. 4 — risk of the predictive mean vs wall clock for
+//! standard vs subsampled MH on the MNIST-surrogate BayesLR task.
+//! Run: `cargo bench --bench fig4_risk` (FAST=1 for a quick pass)
+
+use subppl::coordinator::experiments::{fig4_csv, fig4_risk, Fig4Config};
+use subppl::coordinator::report::results_dir;
+use subppl::infer::InterpreterEval;
+
+fn main() {
+    let fast = std::env::var("FAST").is_ok();
+    let cfg = if fast {
+        Fig4Config {
+            n_train: 2000,
+            n_test: 500,
+            steps: 100,
+            record_every: 10,
+            ..Default::default()
+        }
+    } else {
+        Fig4Config {
+            steps: 300,
+            ..Default::default()
+        }
+    };
+    println!(
+        "Fig. 4: N={} D={} steps={} m={}",
+        cfg.n_train, cfg.d, cfg.steps, cfg.m
+    );
+    let mut ev = InterpreterEval;
+    let curves = fig4_risk(&cfg, &mut ev);
+    println!(
+        "{:<22} {:>9} {:>9} {:>12} {:>10} {:>8}",
+        "method", "seconds", "accept%", "final risk", "final 0-1", "JB p"
+    );
+    for c in &curves {
+        let last = c.points.last().copied().unwrap_or((0.0, f64::NAN, f64::NAN));
+        println!(
+            "{:<22} {:>9.2} {:>9.1} {:>12.6} {:>10.4} {:>8.3}",
+            c.label,
+            last.0,
+            100.0 * c.accepted as f64 / c.transitions as f64,
+            last.1,
+            last.2,
+            c.normality_p
+        );
+    }
+    // shape check: per-transition cost of subsampled is below exact
+    let t_exact = curves[0].points.last().unwrap().0 / curves[0].transitions as f64;
+    let sub = curves.iter().find(|c| c.label.contains("0.01")).unwrap();
+    let t_sub = sub.points.last().unwrap().0 / sub.transitions as f64;
+    println!("\nper-transition: exact {t_exact:.5}s vs subsampled {t_sub:.5}s ({:.1}x)", t_exact / t_sub);
+    assert!(t_sub < t_exact, "subsampled transitions should be cheaper");
+    fig4_csv(&curves).write_to(&results_dir().join("fig4_risk.csv")).unwrap();
+}

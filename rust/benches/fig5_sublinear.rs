@@ -1,0 +1,53 @@
+//! Bench: Fig. 5 — sublinear per-transition scaling of subsampled MH.
+//! Regenerates (b) subsampled data points per iteration vs N and (c)
+//! running time per iteration vs N, both log-log, with the linear exact
+//! baseline for reference.
+//! Run: `cargo bench --bench fig5_sublinear` (FAST=1 for a quick pass)
+
+use subppl::coordinator::experiments::{fig5_csv, fig5_sublinear, Fig5Config};
+use subppl::coordinator::report::results_dir;
+use subppl::infer::InterpreterEval;
+
+fn main() {
+    let fast = std::env::var("FAST").is_ok();
+    let cfg = if fast {
+        Fig5Config {
+            ns: vec![1_000, 3_000, 10_000],
+            iters: 20,
+            ..Default::default()
+        }
+    } else {
+        Fig5Config {
+            ns: vec![1_000, 3_000, 10_000, 30_000, 100_000, 300_000],
+            iters: 50,
+            ..Default::default()
+        }
+    };
+    println!("Fig. 5: m={} eps={} sigma={}", cfg.m, cfg.eps, cfg.sigma);
+    let mut ev = InterpreterEval;
+    let rows = fig5_sublinear(&cfg, &mut ev);
+    println!(
+        "{:>9} {:>15} {:>13} {:>12} {:>12} {:>9}",
+        "N", "sections/iter", "E[sections]", "t_sub(s)", "t_exact(s)", "speedup"
+    );
+    for r in &rows {
+        println!(
+            "{:>9} {:>15.1} {:>13.1} {:>12.6} {:>12.6} {:>9.1}",
+            r.n,
+            r.avg_sections,
+            r.expected_sections,
+            r.time_sub,
+            r.time_exact,
+            r.time_exact / r.time_sub
+        );
+    }
+    let (a, b) = (rows.first().unwrap(), rows.last().unwrap());
+    let sec_expo = (b.avg_sections / a.avg_sections).ln() / (b.n as f64 / a.n as f64).ln();
+    let time_expo = (b.time_sub / a.time_sub).ln() / (b.n as f64 / a.n as f64).ln();
+    let exact_expo = (b.time_exact / a.time_exact).ln() / (b.n as f64 / a.n as f64).ln();
+    println!("\nlog-log slopes: sections {sec_expo:.2}, t_sub {time_expo:.2}, t_exact {exact_expo:.2}");
+    println!("(paper Fig. 5: subsampled slopes << 1, exact ~1)");
+    assert!(sec_expo < 0.6, "subsampled sections should scale sublinearly");
+    assert!(exact_expo > 0.6, "exact baseline should scale ~linearly");
+    fig5_csv(&rows).write_to(&results_dir().join("fig5_sublinear.csv")).unwrap();
+}

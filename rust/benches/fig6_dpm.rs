@@ -1,0 +1,45 @@
+//! Bench: Fig. 6 — JointDPM prediction accuracy vs running time, exact
+//! vs subsampled MH over the per-cluster expert weights.
+//! Run: `cargo bench --bench fig6_dpm` (FAST=1 for a quick pass)
+
+use subppl::coordinator::experiments::{fig6_dpm, Fig6Config};
+
+fn main() {
+    let fast = std::env::var("FAST").is_ok();
+    let cfg = if fast {
+        Fig6Config {
+            n_train: 300,
+            n_test: 150,
+            sweeps: 10,
+            step_z: 30,
+            ..Default::default()
+        }
+    } else {
+        Fig6Config::default()
+    };
+    println!(
+        "Fig. 6: N={} test={} sweeps={} eps={}",
+        cfg.n_train, cfg.n_test, cfg.sweeps, cfg.eps
+    );
+    println!(
+        "{:<20} {:>6} {:>9} {:>10} {:>9}",
+        "method", "sweep", "seconds", "accuracy", "clusters"
+    );
+    for (label, sub) in [("exact-mh", false), ("subsampled-eps0.3", true)] {
+        let pts = fig6_dpm(&cfg, sub);
+        for (i, p) in pts.iter().enumerate() {
+            if i == pts.len() - 1 || i % 5 == 0 {
+                println!(
+                    "{:<20} {:>6} {:>9.2} {:>10.4} {:>9}",
+                    label, i, p.seconds, p.accuracy, p.clusters
+                );
+            }
+        }
+        let last = pts.last().unwrap();
+        assert!(
+            last.accuracy.is_nan() || last.accuracy > 0.5,
+            "{label}: accuracy should beat chance, got {}",
+            last.accuracy
+        );
+    }
+}

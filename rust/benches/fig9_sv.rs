@@ -1,0 +1,64 @@
+//! Bench: Fig. 9 — stochastic volatility posterior histograms,
+//! autocorrelation, and ESS/s for exact vs subsampled parameter moves
+//! (latent states via particle Gibbs in both).
+//! Run: `cargo bench --bench fig9_sv` (FAST=1 for a quick pass)
+
+use subppl::coordinator::experiments::{fig9_csv, fig9_sv, Fig9Config};
+use subppl::coordinator::report::results_dir;
+use subppl::stats::RunningMoments;
+
+fn main() {
+    let fast = std::env::var("FAST").is_ok();
+    let cfg = if fast {
+        Fig9Config {
+            series: 30,
+            sweeps: 60,
+            ..Default::default()
+        }
+    } else {
+        Fig9Config {
+            sweeps: 200,
+            ..Default::default()
+        }
+    };
+    println!(
+        "Fig. 9: {} series x len {} (truth phi=0.95, sigma=0.1), sweeps={}",
+        cfg.series, cfg.len, cfg.sweeps
+    );
+    let exact = fig9_sv(&cfg, false);
+    let sub = fig9_sv(&cfg, true);
+    println!(
+        "{:<22} {:>9} {:>14} {:>14} {:>10} {:>10}",
+        "method", "seconds", "phi", "sigma", "phiESS/s", "sigESS/s"
+    );
+    for r in [&exact, &sub] {
+        let burn = r.phi_samples.len() / 5;
+        let mut pm = RunningMoments::new();
+        let mut sm = RunningMoments::new();
+        for &v in &r.phi_samples[burn..] {
+            pm.push(v);
+        }
+        for &v in &r.sig_samples[burn..] {
+            sm.push(v);
+        }
+        println!(
+            "{:<22} {:>9.2} {:>8.3}±{:.3} {:>8.3}±{:.3} {:>10.3} {:>10.3}",
+            r.label,
+            r.seconds,
+            pm.mean(),
+            pm.std(),
+            sm.mean(),
+            sm.std(),
+            r.phi_ess_per_sec,
+            r.sig_ess_per_sec
+        );
+    }
+    println!(
+        "\nESS/s gain (paper: ~2x): phi {:.2}x, sigma {:.2}x",
+        sub.phi_ess_per_sec / exact.phi_ess_per_sec,
+        sub.sig_ess_per_sec / exact.sig_ess_per_sec
+    );
+    let (hist, acf) = fig9_csv(&[exact, sub], 30);
+    hist.write_to(&results_dir().join("fig9_hist.csv")).unwrap();
+    acf.write_to(&results_dir().join("fig9_acf.csv")).unwrap();
+}

@@ -1,0 +1,106 @@
+//! Hot-path microbenchmarks (§Perf): per-operation costs on the
+//! subsampled-MH transition path, used to drive the optimization loop.
+//! Run: `cargo bench --bench hotpath`
+
+use std::time::Instant;
+use subppl::coordinator::chain::build_bayes_lr;
+use subppl::data::mnist_like;
+use subppl::infer::subsampled_mh::SparseSampler;
+use subppl::infer::{
+    gibbs_transition, mh_transition, subsampled_mh_transition, InterpreterEval, LocalEvaluator,
+    Proposal, SubsampledConfig,
+};
+use subppl::math::Pcg64;
+use subppl::trace::partition::build_partition;
+use subppl::trace::Trace;
+
+fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{label:<48} {:>12.3} us", per * 1e6);
+    per
+}
+
+fn main() {
+    println!("subppl hot-path microbenchmarks\n");
+    let data = mnist_like::sized(12214, 50, 0);
+    let mut rng = Pcg64::seeded(1);
+    let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+
+    bench("build_partition (N=12214)", 200, || {
+        let p = build_partition(&trace, w).unwrap();
+        std::hint::black_box(p.n());
+    });
+
+    let p = build_partition(&trace, w).unwrap();
+    let cur = trace.fresh_value(w);
+    let new_w = Proposal::Drift(0.05).propose(&cur, &mut rng).unwrap();
+    let roots: Vec<_> = p.locals[..100].to_vec();
+    let mut interp = InterpreterEval;
+    bench("interpreter eval_sections (m=100, D=50)", 500, || {
+        let ls = interp.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+        std::hint::black_box(ls.len());
+    });
+
+    bench("sparse sampler: 100 draws of 12214", 2000, || {
+        let mut s = SparseSampler::new(12214);
+        let mut acc = 0usize;
+        for _ in 0..100 {
+            acc += s.next(&mut rng);
+        }
+        std::hint::black_box(acc);
+    });
+
+    let cfg = SubsampledConfig {
+        m: 100,
+        eps: 0.01,
+        proposal: Proposal::Drift(0.05),
+        exact: false,
+    };
+    bench("subsampled_mh_transition (N=12214)", 200, || {
+        let s = subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, &mut interp).unwrap();
+        std::hint::black_box(s.sections_evaluated);
+    });
+
+    let exact = SubsampledConfig {
+        exact: true,
+        m: 1024,
+        ..cfg.clone()
+    };
+    bench("exact full-scan transition (N=12214)", 10, || {
+        let s = subsampled_mh_transition(&mut trace, &mut rng, w, &exact, &mut interp).unwrap();
+        std::hint::black_box(s.sections_evaluated);
+    });
+
+    // small-model kernels
+    let mut t2 = Trace::new();
+    let mut rng2 = Pcg64::seeded(2);
+    t2.run_program(
+        "[assume mu (normal 0 1)] [observe (normal mu 0.5) 1.0] [observe (normal mu 0.5) 0.5]",
+        &mut rng2,
+    )
+    .unwrap();
+    let mu = t2.lookup_node("mu").unwrap();
+    bench("exact mh_transition (3-node scaffold)", 5000, || {
+        let s = mh_transition(&mut t2, &mut rng2, mu, &Proposal::Drift(0.3)).unwrap();
+        std::hint::black_box(s.accepted);
+    });
+
+    let mut t3 = Trace::new();
+    let mut rng3 = Pcg64::seeded(3);
+    t3.run_program(
+        "[assume b (bernoulli 0.5)] [assume mu (if b 1.0 -1.0)] [observe (normal mu 1) 0.8]",
+        &mut rng3,
+    )
+    .unwrap();
+    let b = t3.lookup_node("b").unwrap();
+    bench("enumerative gibbs (2 candidates, branch flip)", 5000, || {
+        let s = gibbs_transition(&mut t3, &mut rng3, b).unwrap();
+        std::hint::black_box(s.accepted);
+    });
+}

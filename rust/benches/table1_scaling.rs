@@ -1,0 +1,26 @@
+//! Bench: Table 1 — exact-MH per-transition cost scales linearly in the
+//! model's scaling parameter (N / N_k / T).
+//! Run: `cargo bench --bench table1_scaling`
+
+use subppl::coordinator::experiments::table1_scaling;
+
+fn main() {
+    println!("Table 1: exact-MH transition scaling (paper: linear, exponent ~1)");
+    let rows = table1_scaling(3);
+    println!(
+        "{:<18} {:>9} {:>9} {:>12} {:>12} {:>9}",
+        "model", "N_small", "N_large", "t_small(s)", "t_large(s)", "exponent"
+    );
+    for r in &rows {
+        println!(
+            "{:<18} {:>9} {:>9} {:>12.6} {:>12.6} {:>9.2}",
+            r.model, r.n_small, r.n_large, r.t_small, r.t_large, r.exponent
+        );
+        assert!(
+            r.exponent > 0.6,
+            "{}: expected ~linear exact-MH scaling, got exponent {:.2}",
+            r.model,
+            r.exponent
+        );
+    }
+}

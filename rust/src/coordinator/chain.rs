@@ -1,0 +1,175 @@
+//! Model builders + chain driver for the paper's experiments.
+//!
+//! Traces with 10^4..10^6 observations are built programmatically
+//! (constructing `Directive` values directly) rather than by formatting
+//! and re-parsing program text, which would dominate setup time at
+//! large N.
+
+use crate::data::{sv_data::SvSeries, Dataset};
+use crate::math::Pcg64;
+use crate::ppl::ast::{Directive, Expr};
+use crate::ppl::value::Value;
+use crate::trace::node::NodeId;
+use crate::trace::pet::Trace;
+use std::rc::Rc;
+
+/// The paper's Bayesian logistic regression program (Fig. 3):
+/// w ~ N(0, prior_var I_D); y_i ~ Bernoulli(sigma(w . x_i)).
+/// Returns the trace and the weight node (scope 'w, block 0).
+pub fn build_bayes_lr(data: &Dataset, prior_var: f64, rng: &mut Pcg64) -> (Trace, NodeId) {
+    let d = data.d();
+    let mut trace = Trace::new();
+    let header = format!(
+        "[assume w (scope_include 'w 0 (multivariate_normal (vector {}) {prior_var}))]\n\
+         [assume f (lambda (x) (bernoulli (linear_logistic w x)))]",
+        vec!["0"; d].join(" ")
+    );
+    trace.run_program(&header, rng).unwrap();
+    // observations built as Directive values (no string round-trip)
+    let f_sym = Expr::sym("f");
+    for (x, &y) in data.x.iter().zip(&data.y) {
+        let obs = Directive::Observe(
+            Expr::app(vec![
+                f_sym.clone(),
+                Expr::constant(Value::Vector(Rc::new(x.clone()))),
+            ]),
+            Value::Bool(y),
+        );
+        trace.execute(&obs, rng).unwrap();
+    }
+    let w = trace.lookup_node("w").unwrap();
+    (trace, w)
+}
+
+/// The paper's JointDPM program (Fig. 7 top): CRP mixture of collapsed
+/// NIW feature models with per-cluster logistic experts.
+pub fn build_joint_dpm(data: &Dataset, rng: &mut Pcg64) -> Trace {
+    let d = data.d();
+    let zeros = vec!["0"; d].join(" ");
+    let header = format!(
+        "[assume alpha (scope_include 'hypers 0 (gamma 1 1))]\n\
+         [assume crp (make_crp alpha)]\n\
+         [assume z (mem (lambda (i) (scope_include 'z i (crp))))]\n\
+         [assume w (mem (lambda (k) (scope_include 'w k \
+            (multivariate_normal (vector {zeros}) 10.0))))]\n\
+         [assume c (mem (lambda (k) (make_collapsed_multivariate_normal \
+            (vector {zeros}) 1.0 {v0} 1.0)))]\n\
+         [assume x (lambda (i) ((c (z i))))]\n\
+         [assume y (lambda (i xv) (bernoulli (linear_logistic (w (z i)) xv)))]",
+        v0 = d + 2
+    );
+    let mut trace = Trace::new();
+    trace.run_program(&header, rng).unwrap();
+    let x_sym = Expr::sym("x");
+    let y_sym = Expr::sym("y");
+    for (i, (x, &y)) in data.x.iter().zip(&data.y).enumerate() {
+        let oi = Directive::Observe(
+            Expr::app(vec![x_sym.clone(), Expr::constant(Value::Int(i as i64))]),
+            Value::Vector(Rc::new(x.clone())),
+        );
+        trace.execute(&oi, rng).unwrap();
+        let yi = Directive::Observe(
+            Expr::app(vec![
+                y_sym.clone(),
+                Expr::constant(Value::Int(i as i64)),
+                Expr::constant(Value::Vector(Rc::new(x.clone()))),
+            ]),
+            Value::Bool(y),
+        );
+        trace.execute(&yi, rng).unwrap();
+    }
+    trace
+}
+
+/// The paper's stochastic-volatility program (Fig. 7 bottom) for a set
+/// of independent series sharing (phi, sigma).  States are tagged
+/// `(scope h_<series> t)`; returns the phi node and the sigma^2 node.
+pub fn build_sv(series: &[SvSeries], rng: &mut Pcg64) -> (Trace, NodeId, NodeId) {
+    let mut trace = Trace::new();
+    let header = "[assume sig2 (scope_include 'sig2 0 (inv_gamma 5 0.05))]\n\
+         [assume sig (sqrt sig2)]\n\
+         [assume phi (scope_include 'phi 0 (beta 5 1))]"
+        .to_string();
+    trace.run_program(&header, rng).unwrap();
+    for (s, sv) in series.iter().enumerate() {
+        let prog = format!(
+            "[assume h{s} (mem (lambda (t) (scope_include 'h{s} t \
+               (if (<= t 0) 0.0 (normal (* phi (h{s} (- t 1))) sig)))))]\n\
+             [assume x{s} (lambda (t) (normal 0 (exp (/ (h{s} t) 2))))]"
+        );
+        trace.run_program(&prog, rng).unwrap();
+        for (t, &xv) in sv.x.iter().enumerate() {
+            let obs = Directive::Observe(
+                Expr::app(vec![
+                    Expr::sym(&format!("x{s}")),
+                    Expr::constant(Value::Int((t + 1) as i64)),
+                ]),
+                Value::Real(xv),
+            );
+            trace.execute(&obs, rng).unwrap();
+        }
+    }
+    let phi = trace.lookup_node("phi").unwrap();
+    let sig2 = trace.lookup_node("sig2").unwrap();
+    (trace, phi, sig2)
+}
+
+/// Wall-clock helper: run `f` and return (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = std::time::Instant::now();
+    let r = f();
+    (r, start.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{dpm_data, mnist_like, sv_data, synth2d};
+
+    #[test]
+    fn bayes_lr_builds_fast_and_correctly() {
+        let data = synth2d::generate(2000, 0);
+        let mut rng = Pcg64::seeded(1);
+        let ((t, w), secs) = timed(|| build_bayes_lr(&data, 0.1, &mut rng));
+        assert!(secs < 5.0, "trace construction too slow: {secs}s");
+        assert_eq!(t.node(w).children.len(), 2000);
+        assert_eq!(t.num_live_nodes(), 1 + 2 * 2000);
+    }
+
+    #[test]
+    fn joint_dpm_builds_and_scores() {
+        let (data, _) = dpm_data::generate(50, 0);
+        let mut rng = Pcg64::seeded(2);
+        let mut t = build_joint_dpm(&data, &mut rng);
+        assert_eq!(t.scope_nodes("z").len(), 50);
+        assert!(!t.scope_nodes("w").is_empty());
+        assert!(t.log_joint().is_finite());
+    }
+
+    #[test]
+    fn sv_builds_and_scores() {
+        let cfg = sv_data::SvConfig {
+            series: 5,
+            len: 4,
+            ..Default::default()
+        };
+        let series = sv_data::generate(&cfg, 0);
+        let mut rng = Pcg64::seeded(3);
+        let (mut t, phi, sig2) = build_sv(&series, &mut rng);
+        assert!(t.node(phi).is_stochastic());
+        assert!(t.node(sig2).is_stochastic());
+        // phi's partition: 5 series x 4 states = 20 local sections
+        let p = crate::trace::partition::build_partition(&t, phi).unwrap();
+        assert_eq!(p.n(), 20);
+        assert!(t.log_joint().is_finite());
+    }
+
+    #[test]
+    fn mnist_like_scale_build() {
+        let data = mnist_like::sized(12214, 50, 0);
+        let mut rng = Pcg64::seeded(4);
+        let ((t, _), secs) = timed(|| build_bayes_lr(&data, 0.1, &mut rng));
+        assert_eq!(t.num_live_nodes(), 1 + 2 * 12214);
+        assert!(secs < 30.0, "full-scale build too slow: {secs}s");
+    }
+}

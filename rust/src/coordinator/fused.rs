@@ -1,0 +1,536 @@
+//! Fused local-section evaluation: the XLA-batched `LocalEvaluator`.
+//!
+//! When every local section of a partition matches a recognized shape,
+//! a mini-batch of sections reduces to one call into an AOT-compiled
+//! JAX/Pallas kernel (Layer 1/2) through PJRT:
+//!
+//! * **Logistic** — `{linear_logistic (det), bernoulli (absorb)}`, the
+//!   BayesLR / JointDPM weight sections → `logistic_ratio_m*_d*`.
+//! * **AR(1)** — `{(* phi h_prev) (det), h_t (absorb normal)}` or a bare
+//!   absorbing normal (sigma sections), the SV sections →
+//!   `gauss_ar1_ratio_m*`.
+//!
+//! Shape recognition is structural and per-root; any mismatch falls back
+//! to the interpreter walk for that batch, so the fused path is always
+//! semantics-preserving (tested against `InterpreterEval`).
+
+use crate::infer::subsampled_mh::{freshen_section, InterpreterEval, LocalEvaluator};
+use crate::ppl::sp::SpFamily;
+use crate::ppl::value::Value;
+use crate::runtime::artifacts::ArtifactRegistry;
+use crate::runtime::client::Input;
+use crate::trace::node::{ArgRef, NodeId, NodeKind};
+use crate::trace::partition::{OverrideCtx, Partition};
+use crate::trace::pet::Trace;
+use std::rc::Rc;
+
+/// The XLA-fused evaluator; falls back to the interpreter when a batch
+/// does not match a known section family.
+pub struct FusedEval {
+    pub registry: ArtifactRegistry,
+    fallback: InterpreterEval,
+    /// Batches smaller than this go to the interpreter: on the CPU PJRT
+    /// client the per-call dispatch overhead (~150us) exceeds the
+    /// arithmetic of a small mini-batch; the XLA path wins from a few
+    /// hundred sections up (measured in benches/ablations.rs §Perf) and
+    /// is the TPU-ready path.  Set to 0 to force XLA for every batch.
+    pub min_fused_batch: usize,
+    /// count of sections evaluated through XLA vs interpreter (perf
+    /// reporting / ablations)
+    pub fused_sections: usize,
+    pub fallback_sections: usize,
+}
+
+/// Extracted per-section inputs for the logistic kernel.
+struct LogisticRow {
+    x: Rc<Vec<f64>>,
+    t: f32,
+}
+
+/// Extracted per-section inputs for the AR(1) kernel.
+struct Ar1Row {
+    h_prev: f32,
+    h: f32,
+    /// per-row phi pair when the sampled variable is phi; (1,1) when the
+    /// mean is folded into h_prev (sigma sections)
+    phi_old: f32,
+    phi_new: f32,
+    sig_old: f32,
+    sig_new: f32,
+}
+
+impl FusedEval {
+    pub fn new(registry: ArtifactRegistry) -> Self {
+        FusedEval {
+            registry,
+            fallback: InterpreterEval,
+            min_fused_batch: 256,
+            fused_sections: 0,
+            fallback_sections: 0,
+        }
+    }
+
+    /// Force every batch through XLA regardless of size (ablations).
+    pub fn always_fused(mut self) -> Self {
+        self.min_fused_batch = 0;
+        self
+    }
+
+    pub fn open_default() -> Result<Self, String> {
+        Ok(Self::new(ArtifactRegistry::open_default()?))
+    }
+
+    /// Try to extract logistic rows for every root; None on mismatch.
+    fn extract_logistic(
+        trace: &Trace,
+        p: &Partition,
+        roots: &[NodeId],
+    ) -> Option<(Vec<LogisticRow>, usize)> {
+        let mut rows = Vec::with_capacity(roots.len());
+        let mut d = 0usize;
+        for &root in roots {
+            // root must be the linear_logistic det node...
+            let node = trace.node(root);
+            let lin = match &node.kind {
+                NodeKind::Det(crate::ppl::prim::Prim::LinearLogistic) => root,
+                // ...or a MemApp routing to the weights (JointDPM), whose
+                // single det child is the linear_logistic
+                NodeKind::MemApp { .. } => {
+                    let kids = &node.children;
+                    if kids.len() != 1 {
+                        return None;
+                    }
+                    let k = kids[0];
+                    match &trace.node(k).kind {
+                        NodeKind::Det(crate::ppl::prim::Prim::LinearLogistic) => k,
+                        _ => return None,
+                    }
+                }
+                _ => return None,
+            };
+            let lin_node = trace.node(lin);
+            // linear_logistic(w, x): x must be a constant vector
+            let x = match &lin_node.args[1] {
+                ArgRef::Const(Value::Vector(v)) => v.clone(),
+                _ => return None,
+            };
+            if d == 0 {
+                d = x.len();
+            } else if d != x.len() {
+                return None;
+            }
+            // single bernoulli child
+            if lin_node.children.len() != 1 {
+                return None;
+            }
+            let y = lin_node.children[0];
+            let y_node = trace.node(y);
+            if !matches!(y_node.kind, NodeKind::StochFam(SpFamily::Bernoulli)) {
+                return None;
+            }
+            let t = match y_node.value.as_bool() {
+                Some(true) => 1.0,
+                Some(false) => -1.0,
+                None => return None,
+            };
+            rows.push(LogisticRow { x, t });
+        }
+        let _ = p;
+        Some((rows, d))
+    }
+
+    /// Try to extract AR(1) rows; None on mismatch.
+    fn extract_ar1(
+        trace: &mut Trace,
+        p: &Partition,
+        roots: &[NodeId],
+        new_v: &Value,
+    ) -> Option<Vec<Ar1Row>> {
+        let mut rows = Vec::with_capacity(roots.len());
+        for &root in roots {
+            let node = trace.node(root);
+            match &node.kind {
+                // sigma-sampling: border child IS the absorbing normal,
+                // whose sig argument is in the global section
+                NodeKind::StochFam(SpFamily::Normal) => {
+                    let h = node.value.as_f64()? as f32;
+                    let mean = trace.arg_value(&node.args[0]).as_f64()? as f32;
+                    let sig_arg = node.args[1].clone();
+                    let sig_old = trace.arg_value(&sig_arg).as_f64()? as f32;
+                    let sig_new = {
+                        let mut ctx = OverrideCtx::new(trace);
+                        ctx.pin(p.v, new_v.clone());
+                        ctx.arg_candidate(&sig_arg).as_f64()? as f32
+                    };
+                    rows.push(Ar1Row {
+                        h_prev: mean,
+                        h,
+                        phi_old: 1.0,
+                        phi_new: 1.0,
+                        sig_old,
+                        sig_new,
+                    });
+                }
+                // phi-sampling: border child is (* phi h_prev) with a
+                // single absorbing normal child
+                NodeKind::Det(crate::ppl::prim::Prim::Mul) => {
+                    if node.args.len() != 2 || node.children.len() != 1 {
+                        return None;
+                    }
+                    // which arg is the sampled phi (== p.v or in global)?
+                    let (phi_arg, hp_arg) = match (&node.args[0], &node.args[1]) {
+                        (ArgRef::Node(a), other) if p.global_drg.contains(a) => {
+                            (ArgRef::Node(*a), other.clone())
+                        }
+                        (other, ArgRef::Node(b)) if p.global_drg.contains(b) => {
+                            (ArgRef::Node(*b), other.clone())
+                        }
+                        _ => return None,
+                    };
+                    let h_prev = trace.arg_value(&hp_arg).as_f64()? as f32;
+                    let phi_old = trace.arg_value(&phi_arg).as_f64()? as f32;
+                    let child = node.children[0];
+                    let cnode = trace.node(child);
+                    if !matches!(cnode.kind, NodeKind::StochFam(SpFamily::Normal)) {
+                        return None;
+                    }
+                    let h = cnode.value.as_f64()? as f32;
+                    let sig_arg = cnode.args[1].clone();
+                    let sig_old = trace.arg_value(&sig_arg).as_f64()? as f32;
+                    let (phi_new, sig_new) = {
+                        let mut ctx = OverrideCtx::new(trace);
+                        ctx.pin(p.v, new_v.clone());
+                        (
+                            ctx.arg_candidate(&phi_arg).as_f64()? as f32,
+                            ctx.arg_candidate(&sig_arg).as_f64()? as f32,
+                        )
+                    };
+                    rows.push(Ar1Row {
+                        h_prev,
+                        h,
+                        phi_old,
+                        phi_new,
+                        sig_old,
+                        sig_new,
+                    });
+                }
+                _ => return None,
+            }
+        }
+        Some(rows)
+    }
+
+    fn run_logistic(
+        &mut self,
+        rows: &[LogisticRow],
+        d: usize,
+        w_old: &[f64],
+        w_new: &[f64],
+    ) -> Result<Vec<f64>, String> {
+        let n = rows.len();
+        let (info, exe) = self.registry.pick_executable("logistic_ratio", n, d)?;
+        if info.m < n {
+            // batch exceeds the largest artifact: split
+            let mut out = Vec::with_capacity(n);
+            for chunk in rows.chunks(info.m) {
+                out.extend(self.run_logistic(chunk, d, w_old, w_new)?);
+            }
+            return Ok(out);
+        }
+        let m = info.m;
+        let mut x = vec![0f32; m * d];
+        let mut t = vec![0f32; m];
+        let mut mask = vec![0f32; m];
+        for (i, row) in rows.iter().enumerate() {
+            for (j, &v) in row.x.iter().enumerate() {
+                x[i * d + j] = v as f32;
+            }
+            t[i] = row.t;
+            mask[i] = 1.0;
+        }
+        let wo: Vec<f32> = w_old.iter().map(|&v| v as f32).collect();
+        let wn: Vec<f32> = w_new.iter().map(|&v| v as f32).collect();
+        let out = exe.run_f32(&[
+            Input { data: &x, shape: &[m, d] },
+            Input { data: &t, shape: &[m] },
+            Input { data: &mask, shape: &[m] },
+            Input { data: &wo, shape: &[d] },
+            Input { data: &wn, shape: &[d] },
+        ])?;
+        Ok(out[..n].iter().map(|&v| v as f64).collect())
+    }
+
+    fn run_ar1(&mut self, rows: &[Ar1Row]) -> Result<Vec<f64>, String> {
+        // rows share (phi_old, phi_new, sig_old, sig_new) in the SV model;
+        // if they don't (mixed sections), fall back per-row via the
+        // scalar formula — still exact, just not batched.
+        let homogeneous = rows
+            .windows(2)
+            .all(|w| {
+                w[0].phi_old == w[1].phi_old
+                    && w[0].phi_new == w[1].phi_new
+                    && w[0].sig_old == w[1].sig_old
+                    && w[0].sig_new == w[1].sig_new
+            });
+        if !homogeneous {
+            return Ok(rows
+                .iter()
+                .map(|r| {
+                    let lp = |phi: f32, sig: f32| {
+                        crate::dist::normal_logpdf(
+                            r.h as f64,
+                            (phi * r.h_prev) as f64,
+                            sig as f64,
+                        )
+                    };
+                    lp(r.phi_new, r.sig_new) - lp(r.phi_old, r.sig_old)
+                })
+                .collect());
+        }
+        let n = rows.len();
+        let (info, exe) = self.registry.pick_executable("gauss_ar1_ratio", n, 0)?;
+        if info.m < n {
+            let mut out = Vec::with_capacity(n);
+            for chunk in rows.chunks(info.m) {
+                out.extend(self.run_ar1(chunk)?);
+            }
+            return Ok(out);
+        }
+        let m = info.m;
+        let mut h_prev = vec![0f32; m];
+        let mut h = vec![0f32; m];
+        let mut mask = vec![0f32; m];
+        for (i, r) in rows.iter().enumerate() {
+            h_prev[i] = r.h_prev;
+            h[i] = r.h;
+            mask[i] = 1.0;
+        }
+        let params = [
+            rows[0].phi_old,
+            rows[0].sig_old,
+            rows[0].phi_new,
+            rows[0].sig_new,
+        ];
+        let out = exe.run_f32(&[
+            Input { data: &h_prev, shape: &[m] },
+            Input { data: &h, shape: &[m] },
+            Input { data: &mask, shape: &[m] },
+            Input { data: &params, shape: &[4] },
+        ])?;
+        Ok(out[..n].iter().map(|&v| v as f64).collect())
+    }
+
+    /// Predictive probabilities for a test block (Fig. 4 risk metric).
+    pub fn predict(&mut self, x_rows: &[Vec<f64>], w: &[f64]) -> Result<Vec<f64>, String> {
+        let d = w.len();
+        let n = x_rows.len();
+        let (info, exe) = self.registry.pick_executable("logistic_predict", n, d)?;
+        let m = info.m;
+        let mut out_all = Vec::with_capacity(n);
+        for chunk in x_rows.chunks(m) {
+            let mut x = vec![0f32; m * d];
+            for (i, row) in chunk.iter().enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    x[i * d + j] = v as f32;
+                }
+            }
+            let wv: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+            let out = exe.run_f32(&[
+                Input { data: &x, shape: &[m, d] },
+                Input { data: &wv, shape: &[d] },
+            ])?;
+            out_all.extend(out[..chunk.len()].iter().map(|&v| v as f64));
+        }
+        Ok(out_all)
+    }
+}
+
+impl LocalEvaluator for FusedEval {
+    fn eval_sections(
+        &mut self,
+        trace: &mut Trace,
+        p: &Partition,
+        roots: &[NodeId],
+        new_v: &Value,
+    ) -> Result<Vec<f64>, String> {
+        // small batches: PJRT dispatch overhead dominates; walk them
+        if roots.len() < self.min_fused_batch {
+            self.fallback_sections += roots.len();
+            return self.fallback.eval_sections(trace, p, roots, new_v);
+        }
+        // refresh lazily before structural inspection
+        for &r in roots {
+            freshen_section(trace, r);
+        }
+        // logistic family?
+        if let Some((rows, d)) = Self::extract_logistic(trace, p, roots) {
+            let w_old = trace
+                .fresh_value(p.v)
+                .as_vector()
+                .ok_or("logistic plan: principal must be a vector")?
+                .as_ref()
+                .clone();
+            let w_new = new_v
+                .as_vector()
+                .ok_or("logistic plan: candidate must be a vector")?
+                .as_ref()
+                .clone();
+            self.fused_sections += roots.len();
+            return self.run_logistic(&rows, d, &w_old, &w_new);
+        }
+        // AR(1) family?
+        if let Some(rows) = Self::extract_ar1(trace, p, roots, new_v) {
+            self.fused_sections += roots.len();
+            return self.run_ar1(&rows);
+        }
+        // generic fallback
+        self.fallback_sections += roots.len();
+        self.fallback.eval_sections(trace, p, roots, new_v)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-fused"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::subsampled_mh::LocalEvaluator;
+    use crate::math::Pcg64;
+    use crate::trace::partition::build_partition;
+
+    fn lr_trace(n: usize, d: usize, seed: u64) -> Trace {
+        let dims = (0..d).map(|_| "0".to_string()).collect::<Vec<_>>().join(" ");
+        let mut src = format!(
+            "[assume w (scope_include 'w 0 (multivariate_normal (vector {dims}) 0.5))]\n\
+             [assume f (lambda (x) (bernoulli (linear_logistic w x)))]\n"
+        );
+        let mut rng = Pcg64::new(seed, 9);
+        for _ in 0..n {
+            let xs: Vec<String> = (0..d).map(|_| format!("{}", rng.normal())).collect();
+            let lab = if rng.bernoulli(0.5) { "true" } else { "false" };
+            src.push_str(&format!("[observe (f (vector {})) {lab}]\n", xs.join(" ")));
+        }
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(seed);
+        t.run_program(&src, &mut rng).unwrap();
+        t
+    }
+
+    fn have_artifacts() -> bool {
+        if ArtifactRegistry::open_default().is_ok() {
+            true
+        } else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            false
+        }
+    }
+
+    #[test]
+    fn fused_matches_interpreter_logistic() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut t = lr_trace(60, 3, 1);
+        let v = t.lookup_node("w").unwrap();
+        let p = build_partition(&t, v).unwrap();
+        let new_w = Value::vector(vec![0.4, -0.3, 0.2]);
+        let roots: Vec<NodeId> = p.locals.clone();
+        let mut interp = InterpreterEval;
+        let want = interp.eval_sections(&mut t, &p, &roots, &new_w).unwrap();
+        let mut fused = FusedEval::open_default().unwrap().always_fused();
+        let got = fused.eval_sections(&mut t, &p, &roots, &new_w).unwrap();
+        assert_eq!(fused.fused_sections, 60);
+        assert_eq!(fused.fallback_sections, 0);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 2e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn fused_matches_interpreter_ar1() {
+        if !have_artifacts() {
+            return;
+        }
+        let src = r#"
+            [assume sig (sqrt (inv_gamma 5 0.05))]
+            [assume phi (scope_include 'phi 0 (beta 5 1))]
+            [assume h (mem (lambda (t) (if (<= t 0) 0.0 (normal (* phi (h (- t 1))) sig))))]
+            [assume x (lambda (t) (normal 0 (exp (/ (h t) 2))))]
+            [observe (x 1) 0.1] [observe (x 2) -0.2]
+            [observe (x 3) 0.05] [observe (x 4) 0.3]
+            [observe (x 5) -0.15] [observe (x 6) 0.2]
+        "#;
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(2);
+        t.run_program(src, &mut rng).unwrap();
+        let phi = t.lookup_node("phi").unwrap();
+        let p = build_partition(&t, phi).unwrap();
+        let roots = p.locals.clone();
+        let new_phi = Value::Real(0.5);
+        let mut interp = InterpreterEval;
+        let want = interp.eval_sections(&mut t, &p, &roots, &new_phi).unwrap();
+        let mut fused = FusedEval::open_default().unwrap().always_fused();
+        let got = fused.eval_sections(&mut t, &p, &roots, &new_phi).unwrap();
+        assert_eq!(fused.fused_sections, roots.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 2e-4, "{g} vs {w}");
+        }
+        // sigma sections too: v = the inv_gamma node
+        let sqrt_node = t.lookup_node("sig").unwrap();
+        let s2 = t.node(sqrt_node).args[0].node().unwrap();
+        let p2 = build_partition(&t, s2).unwrap();
+        let roots2 = p2.locals.clone();
+        let new_s2 = Value::Real(0.02);
+        let want2 = interp.eval_sections(&mut t, &p2, &roots2, &new_s2).unwrap();
+        let got2 = fused.eval_sections(&mut t, &p2, &roots2, &new_s2).unwrap();
+        for (g, w) in got2.iter().zip(&want2) {
+            assert!((g - w).abs() < 2e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn fused_subsampled_transition_runs() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut t = lr_trace(500, 3, 3);
+        let v = t.lookup_node("w").unwrap();
+        let mut rng = Pcg64::seeded(4);
+        let cfg = crate::infer::SubsampledConfig {
+            m: 100,
+            eps: 0.01,
+            proposal: crate::infer::Proposal::Drift(0.1),
+            exact: false,
+        };
+        let mut fused = FusedEval::open_default().unwrap().always_fused();
+        let mut accepted = 0;
+        for _ in 0..30 {
+            let s = crate::infer::subsampled_mh_transition(&mut t, &mut rng, v, &cfg, &mut fused)
+                .unwrap();
+            if s.accepted {
+                accepted += 1;
+            }
+        }
+        assert!(fused.fused_sections > 0);
+        assert!(t.log_joint().is_finite());
+        let _ = accepted;
+    }
+
+    #[test]
+    fn predict_matches_scalar_sigmoid() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut fused = FusedEval::open_default().unwrap();
+        let w = vec![0.5, -1.0];
+        let xs: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64 * 0.3, 1.0]).collect();
+        let probs = fused.predict(&xs, &w).unwrap();
+        for (x, p) in xs.iter().zip(&probs) {
+            let z = 0.5 * x[0] - x[1];
+            let want = 1.0 / (1.0 + (-z).exp());
+            assert!((p - want).abs() < 1e-5, "{p} vs {want}");
+        }
+    }
+}

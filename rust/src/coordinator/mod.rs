@@ -1,0 +1,12 @@
+//! Experiment coordination: model builders, the XLA-fused section
+//! evaluator, and reporting (tables/CSV) for regenerating every figure
+//! and table in the paper's evaluation.
+
+pub mod chain;
+pub mod experiments;
+pub mod fused;
+pub mod report;
+
+pub use chain::{build_bayes_lr, build_joint_dpm, build_sv, timed};
+pub use fused::FusedEval;
+pub use report::{histogram, results_dir, Csv, Table};

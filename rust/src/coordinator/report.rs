@@ -1,0 +1,146 @@
+//! Reporting: console tables and CSV series for the experiment harness
+//! (dependency-free stand-in for a plotting stack — every figure is
+//! regenerated as a CSV + aligned console table).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], out: &mut String| {
+            for i in 0..ncol {
+                let _ = write!(out, "{:<w$}  ", cells[i], w = widths[i]);
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &mut out);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep, &mut out);
+        for row in &self.rows {
+            line(row, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// CSV writer for figure series.
+pub struct Csv {
+    buf: String,
+}
+
+impl Csv {
+    pub fn new(headers: &[&str]) -> Csv {
+        Csv {
+            buf: format!("{}\n", headers.join(",")),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.buf.push_str(&cells.join(","));
+        self.buf.push('\n');
+    }
+
+    pub fn row_f(&mut self, cells: &[f64]) {
+        let strs: Vec<String> = cells.iter().map(|v| format!("{v}")).collect();
+        self.row(&strs);
+    }
+
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.buf.as_bytes())
+    }
+
+    pub fn contents(&self) -> &str {
+        &self.buf
+    }
+}
+
+/// Default results directory (`results/` at the repo root).
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("SUBPPL_RESULTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results"))
+}
+
+/// Histogram helper for Fig. 9b/c: counts over equal bins.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<(f64, usize)> {
+    let mut counts = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        if x >= lo && x < hi {
+            counts[((x - lo) / w) as usize] += 1;
+        }
+    }
+    counts
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| (lo + (i as f64 + 0.5) * w, c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].starts_with("a"));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut c = Csv::new(&["x", "y"]);
+        c.row_f(&[1.0, 2.5]);
+        c.row_f(&[2.0, -3.0]);
+        assert_eq!(c.contents(), "x,y\n1,2.5\n2,-3\n");
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let xs = [0.1, 0.2, 0.55, 0.9, 1.5];
+        let h = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(h[0].1, 2);
+        assert_eq!(h[1].1, 2); // 1.5 out of range
+    }
+}

@@ -1,0 +1,34 @@
+//! Synthetic data generators for the paper's experiments.
+//!
+//! The MNIST 7-vs-9 PCA features used in §4.1 are not available in this
+//! environment; `mnist_like` generates a surrogate with matched size,
+//! dimensionality and class overlap (see DESIGN.md §Substitutions).
+
+pub mod dpm_data;
+pub mod mnist_like;
+pub mod sv_data;
+pub mod synth2d;
+
+/// A binary-classification dataset with dense feature rows.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Row-major features, shape (n, d).
+    pub x: Vec<Vec<f64>>,
+    /// Labels.
+    pub y: Vec<bool>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.first().map_or(0, |r| r.len())
+    }
+
+    /// Fraction of positive labels.
+    pub fn positive_rate(&self) -> f64 {
+        self.y.iter().filter(|&&b| b).count() as f64 / self.y.len().max(1) as f64
+    }
+}

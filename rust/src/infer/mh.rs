@@ -1,0 +1,258 @@
+//! Exact single-site Metropolis–Hastings on scaffolds (paper Alg. 1).
+
+use crate::math::Pcg64;
+use crate::ppl::value::Value;
+use crate::trace::node::NodeId;
+use crate::trace::pet::Trace;
+use crate::trace::regen::{commit, detach, regen, rollback, Journal, RegenMode};
+use crate::trace::scaffold::build_scaffold;
+use std::rc::Rc;
+
+/// Proposal distribution for a principal node.
+#[derive(Clone, Debug)]
+pub enum Proposal {
+    /// Resimulate from the prior (q = p, prior terms cancel).
+    PriorResim,
+    /// Symmetric Gaussian random walk with the given std (reals and
+    /// vectors, elementwise).
+    Drift(f64),
+}
+
+impl Proposal {
+    /// Draw a proposed value given the current one.  Returns None if the
+    /// proposal type cannot handle the value's type.
+    pub fn propose(&self, current: &Value, rng: &mut Pcg64) -> Option<Value> {
+        match self {
+            Proposal::PriorResim => None, // handled by RegenMode::Sample
+            Proposal::Drift(sigma) => match current {
+                Value::Real(x) => Some(Value::Real(x + sigma * rng.normal())),
+                Value::Vector(v) => Some(Value::Vector(Rc::new(
+                    v.iter().map(|x| x + sigma * rng.normal()).collect(),
+                ))),
+                _ => None,
+            },
+        }
+    }
+}
+
+/// Statistics of one transition attempt.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransitionStats {
+    pub accepted: bool,
+    /// Total scaffold size touched (|D| + |A|).
+    pub scaffold_size: usize,
+    /// Local sections evaluated (subsampled kernels; 0 otherwise).
+    pub sections_evaluated: usize,
+}
+
+/// One exact MH transition for principal node `v`.
+pub fn mh_transition(
+    trace: &mut Trace,
+    rng: &mut Pcg64,
+    v: NodeId,
+    proposal: &Proposal,
+) -> Result<TransitionStats, String> {
+    // lazy §3.5: make sure everything this scaffold reads is fresh
+    trace.fresh_value(v);
+    let scaffold = build_scaffold(trace, v);
+    for &n in scaffold.drg.iter().chain(&scaffold.absorbing) {
+        for p in trace.node(n).dyn_parents() {
+            trace.fresh_value(p);
+        }
+    }
+    let current = trace.node(v).value.clone();
+    let mode = match proposal {
+        Proposal::PriorResim => RegenMode::Sample,
+        Proposal::Drift(_) => match proposal.propose(&current, rng) {
+            Some(new_val) => RegenMode::Forced(new_val),
+            None => {
+                return Err(format!(
+                    "drift proposal cannot handle a {}",
+                    current.type_name()
+                ))
+            }
+        },
+    };
+    let mut j = Journal::new();
+    let w_old = detach(trace, &scaffold, &mut j);
+    let w_new = regen(trace, &scaffold, mode, None, rng, &mut j)?;
+    // Eq. 3 with prior-regenerated transient sets:
+    //  - PriorResim: the principal's prior and proposal terms cancel
+    //  - Drift (symmetric): q terms cancel; prior terms remain
+    let log_alpha = match proposal {
+        Proposal::PriorResim => w_new.absorbed - w_old.absorbed,
+        Proposal::Drift(_) => {
+            (w_new.absorbed + w_new.principal) - (w_old.absorbed + w_old.principal)
+        }
+    };
+    let accepted = log_alpha >= 0.0 || rng.uniform_pos().ln() < log_alpha;
+    let stats = TransitionStats {
+        accepted,
+        scaffold_size: scaffold.size(),
+        sections_evaluated: 0,
+    };
+    if accepted {
+        commit(trace, j);
+    } else {
+        rollback(trace, j);
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::RunningMoments;
+
+    fn setup(src: &str, seed: u64) -> (Trace, Pcg64) {
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(seed);
+        t.run_program(src, &mut rng).unwrap();
+        (t, rng)
+    }
+
+    /// Normal-normal conjugate posterior check: mu ~ N(0,1), x|mu ~
+    /// N(mu, 1), observe x = 2 => posterior N(1, 1/2).
+    #[test]
+    fn normal_normal_posterior_drift() {
+        let (mut t, mut rng) = setup("[assume mu (normal 0 1)] [observe (normal mu 1) 2.0]", 1);
+        let v = t.lookup_node("mu").unwrap();
+        let prop = Proposal::Drift(0.8);
+        let mut m = RunningMoments::new();
+        for i in 0..60_000 {
+            mh_transition(&mut t, &mut rng, v, &prop).unwrap();
+            if i >= 5_000 {
+                m.push(t.value(v).as_f64().unwrap());
+            }
+        }
+        assert!((m.mean() - 1.0).abs() < 0.05, "mean {}", m.mean());
+        assert!((m.variance() - 0.5).abs() < 0.06, "var {}", m.variance());
+    }
+
+    #[test]
+    fn normal_normal_posterior_prior_resim() {
+        let (mut t, mut rng) = setup("[assume mu (normal 0 1)] [observe (normal mu 1) 2.0]", 2);
+        let v = t.lookup_node("mu").unwrap();
+        let mut m = RunningMoments::new();
+        for i in 0..120_000 {
+            mh_transition(&mut t, &mut rng, v, &Proposal::PriorResim).unwrap();
+            if i >= 5_000 {
+                m.push(t.value(v).as_f64().unwrap());
+            }
+        }
+        assert!((m.mean() - 1.0).abs() < 0.06, "mean {}", m.mean());
+        assert!((m.variance() - 0.5).abs() < 0.08, "var {}", m.variance());
+    }
+
+    /// Fig. 1 program: structural transitions through the if-branch.
+    /// Posterior over b: y=10 is 90 sigmas from mu=1 but gamma can reach
+    /// 10, so b should be false nearly always after inference.
+    #[test]
+    fn fig1_branch_flips_to_gamma() {
+        let src = r#"
+            [assume b (bernoulli 0.5)]
+            [assume mu (if b 1 (gamma 1 1))]
+            [assume y (normal mu 0.1)]
+            [observe y 10.0]
+        "#;
+        let (mut t, mut rng) = setup(src, 3);
+        let b = t.lookup_node("b").unwrap();
+        let mut false_count = 0;
+        let total = 4_000;
+        for _ in 0..total {
+            mh_transition(&mut t, &mut rng, b, &Proposal::PriorResim).unwrap();
+            // also move mu's gamma when present so the chain mixes
+            let mu = t.lookup_node("mu").unwrap();
+            if let crate::trace::node::NodeKind::If { branch, .. } = &t.node(mu).kind {
+                if let Some(g) = branch.node() {
+                    mh_transition(&mut t, &mut rng, g, &Proposal::Drift(0.5)).unwrap();
+                }
+            }
+            if !t.value(b).as_bool().unwrap() {
+                false_count += 1;
+            }
+        }
+        assert!(
+            false_count as f64 / total as f64 > 0.95,
+            "b=false fraction {}",
+            false_count as f64 / total as f64
+        );
+        // log_joint stays finite and consistent
+        let lj = t.log_joint();
+        assert!(lj.is_finite());
+    }
+
+    /// Rollback invariance: a rejected transition must restore the exact
+    /// joint density.
+    #[test]
+    fn reject_restores_log_joint() {
+        let src = r#"
+            [assume b (bernoulli 0.5)]
+            [assume mu (if b 1 (gamma 1 1))]
+            [assume y (normal mu 0.1)]
+            [observe y 10.0]
+        "#;
+        let (mut t, mut rng) = setup(src, 4);
+        for _ in 0..200 {
+            let before = t.log_joint();
+            let b = t.lookup_node("b").unwrap();
+            let stats = mh_transition(&mut t, &mut rng, b, &Proposal::PriorResim).unwrap();
+            if !stats.accepted {
+                let after = t.log_joint();
+                assert!(
+                    (before - after).abs() < 1e-9,
+                    "rollback drift: {before} vs {after}"
+                );
+            }
+        }
+    }
+
+    /// MH over the weights of a small logistic regression leaves the
+    /// trace consistent and scaffold size equals 1 + 2N.
+    #[test]
+    fn logistic_weights_scaffold_size() {
+        let mut src = String::from(
+            "[assume w (multivariate_normal (vector 0 0) 0.5)]\n\
+             [assume f (lambda (x) (bernoulli (linear_logistic w x)))]\n",
+        );
+        for i in 0..10 {
+            let lab = if i % 2 == 0 { "true" } else { "false" };
+            src.push_str(&format!("[observe (f (vector 1.0 {}.5)) {lab}]\n", i));
+        }
+        let (mut t, mut rng) = setup(&src, 5);
+        let w = t.lookup_node("w").unwrap();
+        let stats = mh_transition(&mut t, &mut rng, w, &Proposal::Drift(0.2)).unwrap();
+        assert_eq!(stats.scaffold_size, 1 + 2 * 10);
+    }
+
+    /// CRP alpha via maker-AAA: transition must be O(K), not O(N), and
+    /// the posterior should favor alpha consistent with the table count.
+    #[test]
+    fn crp_alpha_aaa_transition() {
+        let src = r#"
+            [assume alpha (gamma 1 1)]
+            [assume crp (make_crp alpha)]
+            [assume z (mem (lambda (i) (crp)))]
+        "#;
+        let mut prog = String::from(src);
+        for i in 0..30 {
+            prog.push_str(&format!("[assume z{i} (z {i})]\n"));
+        }
+        let (mut t, mut rng) = setup(&prog, 6);
+        let alpha = t.lookup_node("alpha").unwrap();
+        let stats = mh_transition(&mut t, &mut rng, alpha, &Proposal::Drift(0.3)).unwrap();
+        // D = {alpha, maker}; A = {} (applications absorbed at the maker)
+        assert!(
+            stats.scaffold_size <= 3,
+            "AAA failed: scaffold size {}",
+            stats.scaffold_size
+        );
+        let mut m = RunningMoments::new();
+        for _ in 0..4000 {
+            mh_transition(&mut t, &mut rng, alpha, &Proposal::Drift(0.3)).unwrap();
+            m.push(t.value(alpha).as_f64().unwrap());
+        }
+        assert!(m.mean() > 0.0);
+        assert!(t.log_joint().is_finite());
+    }
+}

@@ -1,0 +1,386 @@
+//! The inference-program interpreter.
+//!
+//! Inference is programmable (paper §1, Fig. 3/7): programs like
+//!
+//! ```text
+//! (cycle ((mh alpha all 1)
+//!         (gibbs z one 10)
+//!         (subsampled_mh w one 100 0.01 drift 0.1 1)
+//!         (pgibbs h (ordered_range 1 5) 16 1)) 100)
+//! ```
+//!
+//! address transitions to scope/block-tagged variables.  Commands can be
+//! built programmatically or parsed from the surface syntax.
+
+use crate::infer::gibbs::gibbs_transition;
+use crate::infer::mh::{mh_transition, Proposal, TransitionStats};
+use crate::infer::pgibbs::pgibbs_transition;
+use crate::infer::subsampled_mh::{
+    subsampled_mh_transition, InterpreterEval, LocalEvaluator, SubsampledConfig,
+};
+use crate::math::Pcg64;
+use crate::ppl::ast::Expr;
+use crate::ppl::value::Value;
+use crate::trace::node::NodeId;
+use crate::trace::pet::Trace;
+use std::rc::Rc;
+
+/// Which blocks of a scope a command targets.
+#[derive(Clone, Debug)]
+pub enum BlockSel {
+    /// One uniformly random non-empty block per step.
+    One,
+    /// Every block, in registration order.
+    All,
+    /// A specific block key.
+    Block(Value),
+}
+
+/// One inference command.
+#[derive(Clone, Debug)]
+pub enum InfCmd {
+    Mh {
+        scope: String,
+        block: BlockSel,
+        steps: usize,
+        proposal: Proposal,
+    },
+    Gibbs {
+        scope: String,
+        block: BlockSel,
+        steps: usize,
+    },
+    SubsampledMh {
+        scope: String,
+        block: BlockSel,
+        cfg: SubsampledConfig,
+        steps: usize,
+    },
+    PGibbs {
+        scope: String,
+        from: i64,
+        to: i64,
+        particles: usize,
+        steps: usize,
+    },
+    Cycle {
+        cmds: Vec<InfCmd>,
+        reps: usize,
+    },
+}
+
+/// Aggregate statistics of an inference run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InferStats {
+    pub transitions: usize,
+    pub accepted: usize,
+    pub sections_evaluated: usize,
+}
+
+impl InferStats {
+    fn absorb(&mut self, t: &TransitionStats) {
+        self.transitions += 1;
+        if t.accepted {
+            self.accepted += 1;
+        }
+        self.sections_evaluated += t.sections_evaluated;
+    }
+
+    pub fn acceptance_rate(&self) -> f64 {
+        self.accepted as f64 / self.transitions.max(1) as f64
+    }
+}
+
+/// Resolve a block selector to target principal nodes.
+fn targets(trace: &Trace, scope: &str, sel: &BlockSel, rng: &mut Pcg64) -> Vec<NodeId> {
+    let sc = match trace.scope(scope) {
+        Some(s) => s,
+        None => return vec![],
+    };
+    match sel {
+        BlockSel::One => {
+            let live = sc.live_blocks();
+            if live.is_empty() {
+                return vec![];
+            }
+            let b = live[rng.below(live.len())].clone();
+            sc.block_nodes(&b).to_vec()
+        }
+        BlockSel::All => sc
+            .blocks
+            .iter()
+            .flat_map(|(_, ns)| ns.iter().copied())
+            .collect(),
+        BlockSel::Block(b) => sc.block_nodes(b).to_vec(),
+    }
+}
+
+/// Execute one inference command against a trace.
+pub fn run_command(
+    trace: &mut Trace,
+    rng: &mut Pcg64,
+    cmd: &InfCmd,
+    evaluator: &mut dyn LocalEvaluator,
+) -> Result<InferStats, String> {
+    let mut stats = InferStats::default();
+    match cmd {
+        InfCmd::Mh {
+            scope,
+            block,
+            steps,
+            proposal,
+        } => {
+            for _ in 0..*steps {
+                for v in targets(trace, scope, block, rng) {
+                    stats.absorb(&mh_transition(trace, rng, v, proposal)?);
+                }
+            }
+        }
+        InfCmd::Gibbs { scope, block, steps } => {
+            for _ in 0..*steps {
+                for v in targets(trace, scope, block, rng) {
+                    stats.absorb(&gibbs_transition(trace, rng, v)?);
+                }
+            }
+        }
+        InfCmd::SubsampledMh {
+            scope,
+            block,
+            cfg,
+            steps,
+        } => {
+            for _ in 0..*steps {
+                for v in targets(trace, scope, block, rng) {
+                    stats.absorb(&subsampled_mh_transition(trace, rng, v, cfg, evaluator)?);
+                }
+            }
+        }
+        InfCmd::PGibbs {
+            scope,
+            from,
+            to,
+            particles,
+            steps,
+        } => {
+            let blocks: Vec<Value> = (*from..=*to).map(Value::Int).collect();
+            for _ in 0..*steps {
+                stats.absorb(&pgibbs_transition(trace, rng, scope, &blocks, *particles)?);
+            }
+        }
+        InfCmd::Cycle { cmds, reps } => {
+            for _ in 0..*reps {
+                for c in cmds {
+                    let s = run_command(trace, rng, c, evaluator)?;
+                    stats.transitions += s.transitions;
+                    stats.accepted += s.accepted;
+                    stats.sections_evaluated += s.sections_evaluated;
+                }
+            }
+        }
+    }
+    Ok(stats)
+}
+
+/// Convenience: run with the interpreter evaluator.
+pub fn infer(trace: &mut Trace, rng: &mut Pcg64, cmd: &InfCmd) -> Result<InferStats, String> {
+    run_command(trace, rng, cmd, &mut InterpreterEval)
+}
+
+// ---------------------------------------------------------------------
+// surface-syntax parsing
+// ---------------------------------------------------------------------
+
+/// Parse an inference program expression, e.g.
+/// `(cycle ((mh w one 1 drift 0.1) (gibbs z one 5)) 100)`.
+pub fn parse_infer(src: &str) -> Result<InfCmd, String> {
+    let expr = crate::ppl::parser::parse_expr(src)?;
+    convert(&expr)
+}
+
+fn sym_of(e: &Rc<Expr>) -> Result<String, String> {
+    match &**e {
+        Expr::Sym(s) => Ok(s.to_string()),
+        Expr::Const(Value::Sym(s)) => Ok(s.to_string()),
+        other => Err(format!("expected symbol, got {other:?}")),
+    }
+}
+
+fn num_of(e: &Rc<Expr>) -> Result<f64, String> {
+    match &**e {
+        Expr::Const(v) => v.as_f64().ok_or_else(|| format!("expected number, got {v}")),
+        other => Err(format!("expected number, got {other:?}")),
+    }
+}
+
+fn usize_of(e: &Rc<Expr>) -> Result<usize, String> {
+    Ok(num_of(e)? as usize)
+}
+
+fn block_of(e: &Rc<Expr>) -> Result<BlockSel, String> {
+    match &**e {
+        Expr::Sym(s) if &**s == "one" => Ok(BlockSel::One),
+        Expr::Sym(s) if &**s == "all" => Ok(BlockSel::All),
+        Expr::Const(v) => Ok(BlockSel::Block(v.clone())),
+        other => Err(format!("expected block selector, got {other:?}")),
+    }
+}
+
+/// Parse optional trailing `drift <sigma>` + `<steps>`.
+fn proposal_and_steps(rest: &[Rc<Expr>]) -> Result<(Proposal, usize), String> {
+    match rest {
+        [steps] => Ok((Proposal::PriorResim, usize_of(steps)?)),
+        [kind, sigma, steps] if sym_of(kind).as_deref() == Ok("drift") => {
+            Ok((Proposal::Drift(num_of(sigma)?), usize_of(steps)?))
+        }
+        _ => Err(format!("bad proposal/steps tail: {rest:?}")),
+    }
+}
+
+fn convert(expr: &Rc<Expr>) -> Result<InfCmd, String> {
+    let parts = match &**expr {
+        Expr::App(parts) => parts,
+        other => return Err(format!("expected (command ...), got {other:?}")),
+    };
+    let head = sym_of(&parts[0])?;
+    let arg = |i: usize| -> Result<&Rc<Expr>, String> {
+        parts
+            .get(i)
+            .ok_or_else(|| format!("({head} ...): missing argument {i}"))
+    };
+    match head.as_str() {
+        "mh" => {
+            let scope = sym_of(arg(1)?)?;
+            let block = block_of(arg(2)?)?;
+            if parts.len() < 4 {
+                return Err("(mh ...): missing steps".into());
+            }
+            let (proposal, steps) = proposal_and_steps(&parts[3..])?;
+            Ok(InfCmd::Mh {
+                scope,
+                block,
+                steps,
+                proposal,
+            })
+        }
+        "gibbs" => Ok(InfCmd::Gibbs {
+            scope: sym_of(arg(1)?)?,
+            block: block_of(arg(2)?)?,
+            steps: usize_of(arg(3)?)?,
+        }),
+        "subsampled_mh" => {
+            let scope = sym_of(arg(1)?)?;
+            let block = block_of(arg(2)?)?;
+            let m = usize_of(arg(3)?)?;
+            let eps = num_of(arg(4)?)?;
+            if parts.len() < 6 {
+                return Err("(subsampled_mh ...): missing steps".into());
+            }
+            let (proposal, steps) = proposal_and_steps(&parts[5..])?;
+            Ok(InfCmd::SubsampledMh {
+                scope,
+                block,
+                cfg: SubsampledConfig {
+                    m,
+                    eps,
+                    proposal,
+                    exact: false,
+                },
+                steps,
+            })
+        }
+        "pgibbs" => {
+            // (pgibbs h (ordered_range a b) P steps)
+            let scope = sym_of(arg(1)?)?;
+            let (from, to) = match &**arg(2)? {
+                Expr::App(range) if sym_of(&range[0]).as_deref() == Ok("ordered_range") => {
+                    (num_of(&range[1])? as i64, num_of(&range[2])? as i64)
+                }
+                other => return Err(format!("expected (ordered_range a b), got {other:?}")),
+            };
+            Ok(InfCmd::PGibbs {
+                scope,
+                from,
+                to,
+                particles: usize_of(arg(3)?)?,
+                steps: usize_of(arg(4)?)?,
+            })
+        }
+        "cycle" => {
+            let cmds = match &**arg(1)? {
+                Expr::App(inner) => inner.iter().map(convert).collect::<Result<Vec<_>, _>>()?,
+                other => return Err(format!("expected (cmds...), got {other:?}")),
+            };
+            Ok(InfCmd::Cycle {
+                cmds,
+                reps: usize_of(arg(2)?)?,
+            })
+        }
+        other => Err(format!("unknown inference command: {other}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_nested_cycle() {
+        let cmd = parse_infer(
+            "(cycle ((mh alpha all 1) (gibbs z one 10) \
+             (subsampled_mh w one 100 0.01 drift 0.1 1) \
+             (pgibbs h (ordered_range 1 5) 16 1)) 25)",
+        )
+        .unwrap();
+        match cmd {
+            InfCmd::Cycle { cmds, reps } => {
+                assert_eq!(reps, 25);
+                assert_eq!(cmds.len(), 4);
+                assert!(matches!(&cmds[0], InfCmd::Mh { scope, .. } if scope == "alpha"));
+                assert!(matches!(&cmds[1], InfCmd::Gibbs { .. }));
+                match &cmds[2] {
+                    InfCmd::SubsampledMh { cfg, .. } => {
+                        assert_eq!(cfg.m, 100);
+                        assert!((cfg.eps - 0.01).abs() < 1e-12);
+                        assert!(matches!(cfg.proposal, Proposal::Drift(s) if (s - 0.1).abs() < 1e-12));
+                    }
+                    c => panic!("{c:?}"),
+                }
+                assert!(
+                    matches!(&cmds[3], InfCmd::PGibbs { from: 1, to: 5, particles: 16, .. })
+                );
+            }
+            c => panic!("{c:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_infer("(frobnicate x)").is_err());
+        assert!(parse_infer("(mh)").is_err());
+        assert!(parse_infer("(pgibbs h (range 1 5) 16 1)").is_err());
+    }
+
+    #[test]
+    fn end_to_end_program_runs() {
+        let model = r#"
+            [assume mu (scope_include 'mu 0 (normal 0 1))]
+            [observe (normal mu 0.5) 1.2]
+            [observe (normal mu 0.5) 0.8]
+        "#;
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(1);
+        t.run_program(model, &mut rng).unwrap();
+        let cmd = parse_infer("(cycle ((mh mu one drift 0.5 1)) 2000)").unwrap();
+        let stats = infer(&mut t, &mut rng, &cmd).unwrap();
+        assert_eq!(stats.transitions, 2000);
+        assert!(stats.acceptance_rate() > 0.1);
+        // posterior mean of mu: prior N(0,1), 2 obs at 1.0 avg with var .25
+        // => posterior mean = (2/0.25 * 1.0)/(1 + 2/0.25) = 8/9
+        let mut m = crate::stats::RunningMoments::new();
+        for _ in 0..4000 {
+            infer(&mut t, &mut rng, &parse_infer("(mh mu one drift 0.5 1)").unwrap()).unwrap();
+            m.push(t.fresh_value(t.lookup_node("mu").unwrap()).as_f64().unwrap());
+        }
+        assert!((m.mean() - 8.0 / 9.0).abs() < 0.07, "mean {}", m.mean());
+    }
+}

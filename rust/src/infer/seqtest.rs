@@ -1,0 +1,213 @@
+//! Sequential test for the MH decision (paper Alg. 2).
+//!
+//! Given mu_0 and a stream of subsampled l_i's (drawn without
+//! replacement), incrementally test H1: mu > mu_0 vs H2: mu < mu_0 with
+//! a Student-t test whose standard error carries the finite-population
+//! correction sqrt(1 - (n-1)/(N-1)).  Stops when the p-value falls below
+//! epsilon, or when the whole population has been consumed (then the
+//! comparison is exact).
+
+use crate::math::special::student_t_sf;
+use crate::stats::RunningMoments;
+
+/// Outcome of feeding one mini-batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TestState {
+    /// Draw another mini-batch.
+    NeedMore,
+    /// Confident (or exhausted): accept H1 (mu > mu_0) => accept move.
+    Decided(bool),
+}
+
+/// Incremental state of one sequential test.
+#[derive(Clone, Debug)]
+pub struct SequentialTest {
+    mu0: f64,
+    n_total: usize,
+    eps: f64,
+    moments: RunningMoments,
+}
+
+impl SequentialTest {
+    pub fn new(mu0: f64, n_total: usize, eps: f64) -> Self {
+        assert!(n_total > 0);
+        assert!(eps > 0.0 && eps < 1.0);
+        SequentialTest {
+            mu0,
+            n_total,
+            eps,
+            moments: RunningMoments::new(),
+        }
+    }
+
+    /// Number of l_i consumed so far.
+    pub fn n(&self) -> usize {
+        self.moments.n()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.moments.mean()
+    }
+
+    /// Feed one mini-batch of l_i values; returns the updated state.
+    pub fn update(&mut self, batch: &[f64]) -> TestState {
+        for &l in batch {
+            self.moments.push(l);
+        }
+        let n = self.moments.n();
+        assert!(n <= self.n_total, "consumed more than the population");
+        let mu_hat = self.moments.mean();
+        if n == self.n_total {
+            // whole population seen: mu is exact
+            return TestState::Decided(mu_hat > self.mu0);
+        }
+        let s_l = self.moments.std();
+        if s_l == 0.0 {
+            // all values equal so far: no basis for a t-test; keep
+            // drawing (guards the all-equal early-iteration false stop)
+            return TestState::NeedMore;
+        }
+        // finite population correction (sampling w/o replacement)
+        let fpc = (1.0 - (n as f64 - 1.0) / (self.n_total as f64 - 1.0)).max(0.0);
+        let s = s_l / (n as f64).sqrt() * fpc.sqrt();
+        let t = (mu_hat - self.mu0).abs() / s;
+        let p = student_t_sf(t, (n - 1) as f64);
+        if p < self.eps {
+            TestState::Decided(mu_hat > self.mu0)
+        } else {
+            TestState::NeedMore
+        }
+    }
+}
+
+/// Run the full sequential test over a population with a supplied
+/// without-replacement sampler; returns (accept, n_consumed).
+/// `draw` must return the l value of the idx'th distinct element.
+pub fn run_sequential_test(
+    mu0: f64,
+    n_total: usize,
+    batch: usize,
+    eps: f64,
+    mut next_index: impl FnMut() -> usize,
+    mut draw: impl FnMut(usize) -> f64,
+) -> (bool, usize) {
+    let mut test = SequentialTest::new(mu0, n_total, eps);
+    let mut buf = Vec::with_capacity(batch);
+    loop {
+        buf.clear();
+        let take = batch.min(n_total - test.n());
+        for _ in 0..take {
+            buf.push(draw(next_index()));
+        }
+        match test.update(&buf) {
+            TestState::NeedMore => continue,
+            TestState::Decided(acc) => return (acc, test.n()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Pcg64;
+
+    fn population(n: usize, mean: f64, std: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n).map(|_| mean + std * rng.normal()).collect()
+    }
+
+    fn run_on(pop: &[f64], mu0: f64, m: usize, eps: f64, seed: u64) -> (bool, usize) {
+        let mut rng = Pcg64::seeded(seed);
+        let order = rng.sample_without_replacement(pop.len(), pop.len());
+        let mut it = order.into_iter();
+        run_sequential_test(
+            mu0,
+            pop.len(),
+            m,
+            eps,
+            move || it.next().unwrap(),
+            |i| pop[i],
+        )
+    }
+
+    #[test]
+    fn clear_accept_uses_few_samples() {
+        let pop = population(100_000, 1.0, 0.5, 1);
+        let (acc, n) = run_on(&pop, 0.0, 100, 0.01, 2);
+        assert!(acc);
+        assert!(n <= 300, "consumed {n} of 100k for an easy decision");
+    }
+
+    #[test]
+    fn clear_reject_uses_few_samples() {
+        let pop = population(100_000, -1.0, 0.5, 3);
+        let (acc, n) = run_on(&pop, 0.0, 100, 0.01, 4);
+        assert!(!acc);
+        assert!(n <= 300);
+    }
+
+    #[test]
+    fn borderline_consumes_more() {
+        // mean barely above mu0 relative to noise: needs more data
+        let pop = population(50_000, 0.004, 1.0, 5);
+        let (_, n_hard) = run_on(&pop, 0.0, 100, 0.01, 6);
+        let easy = population(50_000, 1.0, 1.0, 7);
+        let (_, n_easy) = run_on(&easy, 0.0, 100, 0.01, 8);
+        assert!(n_hard > 4 * n_easy, "hard {n_hard} vs easy {n_easy}");
+    }
+
+    #[test]
+    fn exhaustion_gives_exact_decision() {
+        // tiny population, huge variance: test can't conclude early, and
+        // the final decision must equal the exact comparison
+        let pop = vec![10.0, -9.0, 8.5, -8.0, 0.6];
+        let mu = pop.iter().sum::<f64>() / 5.0;
+        for seed in 0..20 {
+            let (acc, n) = run_on(&pop, 0.0, 2, 0.0001, seed);
+            assert_eq!(acc, mu > 0.0);
+            assert_eq!(n, 5);
+        }
+    }
+
+    #[test]
+    fn all_equal_values_never_false_stop() {
+        // s_l = 0 branch: must keep drawing to exhaustion
+        let pop = vec![0.5; 64];
+        let (acc, n) = run_on(&pop, 0.3, 8, 0.01, 9);
+        assert!(acc);
+        assert_eq!(n, 64, "should have consumed everything");
+    }
+
+    #[test]
+    fn decision_error_rate_shrinks_with_eps() {
+        // population mean slightly above mu0; count wrong decisions
+        let pop = population(20_000, 0.05, 1.0, 10);
+        let mu = pop.iter().sum::<f64>() / pop.len() as f64;
+        let truth = mu > 0.0;
+        let mut wrong_loose = 0;
+        let mut wrong_tight = 0;
+        for seed in 0..60 {
+            let (a, _) = run_on(&pop, 0.0, 100, 0.2, 100 + seed);
+            if a != truth {
+                wrong_loose += 1;
+            }
+            let (a, _) = run_on(&pop, 0.0, 100, 0.001, 100 + seed);
+            if a != truth {
+                wrong_tight += 1;
+            }
+        }
+        assert!(
+            wrong_tight <= wrong_loose,
+            "tight eps must not err more: {wrong_tight} vs {wrong_loose}"
+        );
+    }
+
+    #[test]
+    fn infinite_mu0_short_circuits_sensibly() {
+        // mu0 = +inf => H2 (reject) regardless; the caller short-circuits
+        // but the test itself must also survive it
+        let pop = population(1000, 0.0, 1.0, 11);
+        let (acc, _) = run_on(&pop, f64::INFINITY, 100, 0.01, 12);
+        assert!(!acc);
+    }
+}

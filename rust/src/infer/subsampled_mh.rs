@@ -1,0 +1,437 @@
+//! Sublinear-time approximate MH (paper Alg. 3).
+//!
+//! The transition never constructs the full scaffold: it builds the
+//! global section (v -> border), computes mu_0 from `log u` and the
+//! global weight, then draws mini-batches of *local sections* without
+//! replacement, scoring each non-destructively (override evaluation)
+//! until the sequential test (Alg. 2) decides.  Acceptance commits only
+//! the global section and bumps the staleness epoch; unvisited sections
+//! update lazily (§3.5).
+//!
+//! Section scoring is pluggable: the interpreter walk below is the
+//! general path; `coordinator::fused` supplies the XLA-batched path that
+//! dispatches mini-batches to the AOT Pallas kernels.
+
+use crate::infer::mh::{mh_transition, Proposal, TransitionStats};
+use crate::infer::seqtest::{SequentialTest, TestState};
+use crate::math::Pcg64;
+use crate::ppl::value::Value;
+use crate::trace::node::{NodeId, NodeKind};
+use crate::trace::partition::{
+    commit_global, discover_section, freshen_partition, OverrideCtx, Partition,
+};
+use crate::trace::pet::Trace;
+use std::collections::HashMap;
+
+/// Configuration of the subsampled kernel.
+#[derive(Clone, Debug)]
+pub struct SubsampledConfig {
+    /// Mini-batch size m.
+    pub m: usize,
+    /// Tolerance epsilon of the sequential test.
+    pub eps: f64,
+    pub proposal: Proposal,
+    /// Evaluate every local section and decide exactly — the "standard
+    /// MH" baseline sharing this code path (used by the benchmarks for a
+    /// fair runtime comparison).
+    pub exact: bool,
+}
+
+impl SubsampledConfig {
+    pub fn paper_defaults() -> Self {
+        SubsampledConfig {
+            m: 100,
+            eps: 0.01,
+            proposal: Proposal::Drift(0.1),
+            exact: false,
+        }
+    }
+}
+
+/// Pluggable mini-batch section scorer.
+pub trait LocalEvaluator {
+    /// l_i for each listed border child, under `new_v` pinned at `p.v`.
+    /// Must not mutate trace values other than lazy freshening.
+    fn eval_sections(
+        &mut self,
+        trace: &mut Trace,
+        p: &Partition,
+        roots: &[NodeId],
+        new_v: &Value,
+    ) -> Result<Vec<f64>, String>;
+
+    fn name(&self) -> &'static str {
+        "interpreter"
+    }
+}
+
+/// The general interpreter-walk evaluator.
+#[derive(Default)]
+pub struct InterpreterEval;
+
+impl LocalEvaluator for InterpreterEval {
+    fn eval_sections(
+        &mut self,
+        trace: &mut Trace,
+        p: &Partition,
+        roots: &[NodeId],
+        new_v: &Value,
+    ) -> Result<Vec<f64>, String> {
+        // lazy refresh of everything these sections read
+        for &r in roots {
+            freshen_section(trace, r);
+        }
+        let mut ctx = OverrideCtx::new(trace);
+        ctx.pin(p.v, new_v.clone());
+        let mut out = Vec::with_capacity(roots.len());
+        for &r in roots {
+            let sec = discover_section(ctx.trace, r);
+            out.push(ctx.section_ratio(&sec));
+        }
+        Ok(out)
+    }
+}
+
+/// Freshen a local section's nodes and their parents.
+pub fn freshen_section(trace: &mut Trace, root: NodeId) {
+    let mut stack = vec![root];
+    while let Some(n) = stack.pop() {
+        for pnode in trace.node(n).dyn_parents() {
+            trace.fresh_value(pnode);
+        }
+        if trace.node(n).is_stochastic() {
+            continue;
+        }
+        trace.fresh_value(n);
+        let children = trace.node(n).children.clone();
+        stack.extend(children);
+    }
+}
+
+/// Sparse Fisher–Yates: draw distinct indices from [0, n) incrementally
+/// in O(draws) time and memory — crucial for sublinearity at large N.
+pub struct SparseSampler {
+    n: usize,
+    drawn: usize,
+    map: HashMap<usize, usize>,
+}
+
+impl SparseSampler {
+    pub fn new(n: usize) -> Self {
+        SparseSampler {
+            n,
+            drawn: 0,
+            map: HashMap::new(),
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.n - self.drawn
+    }
+
+    pub fn next(&mut self, rng: &mut Pcg64) -> usize {
+        assert!(self.drawn < self.n, "sampler exhausted");
+        let j = self.drawn;
+        let r = j + rng.below(self.n - j);
+        let at = |m: &HashMap<usize, usize>, i: usize| *m.get(&i).unwrap_or(&i);
+        let out = at(&self.map, r);
+        let vj = at(&self.map, j);
+        self.map.insert(r, vj);
+        self.drawn += 1;
+        out
+    }
+}
+
+/// One subsampled MH transition for `v` (Alg. 3).  Falls back to exact
+/// scaffold MH when the variable has no border partition.
+pub fn subsampled_mh_transition(
+    trace: &mut Trace,
+    rng: &mut Pcg64,
+    v: NodeId,
+    cfg: &SubsampledConfig,
+    evaluator: &mut dyn LocalEvaluator,
+) -> Result<TransitionStats, String> {
+    trace.fresh_value(v);
+    let p = match trace.cached_partition(v) {
+        Some(p) => p,
+        None => return mh_transition(trace, rng, v, &cfg.proposal),
+    };
+    let p = &*p;
+    freshen_partition(trace, p);
+    let n_total = p.n();
+    let current = trace.node(v).value.clone();
+
+    // --- propose + global weight ---
+    let (new_v, w_global) = match &cfg.proposal {
+        Proposal::PriorResim => {
+            let nv = sample_prior_value(trace, v, rng)?;
+            (nv, 0.0) // prior terms cancel against q
+        }
+        Proposal::Drift(_) => {
+            let nv = cfg
+                .proposal
+                .propose(&current, rng)
+                .ok_or_else(|| format!("drift cannot handle {}", current.type_name()))?;
+            let lp_new = prior_logpdf(trace, v, &nv);
+            let lp_old = prior_logpdf(trace, v, &current);
+            (nv, lp_new - lp_old)
+        }
+    };
+
+    let mut stats = TransitionStats {
+        accepted: false,
+        scaffold_size: p.global_drg.len(),
+        sections_evaluated: 0,
+    };
+    // infinite global weights short-circuit the test entirely
+    if w_global == f64::NEG_INFINITY {
+        return Ok(stats);
+    }
+
+    let u = rng.uniform_pos();
+    let mu0 = (u.ln() - w_global) / n_total as f64;
+
+    let accept = if cfg.exact {
+        // full-population pass through the same evaluator (the baseline)
+        let mut sum = 0.0;
+        let mut idx = 0;
+        let chunk = cfg.m.max(1);
+        while idx < n_total {
+            let roots: Vec<NodeId> = p.locals[idx..(idx + chunk).min(n_total)].to_vec();
+            let ls = evaluator.eval_sections(trace, &p, &roots, &new_v)?;
+            sum += ls.iter().sum::<f64>();
+            idx += roots.len();
+            stats.sections_evaluated += roots.len();
+        }
+        sum / n_total as f64 > mu0
+    } else {
+        let mut test = SequentialTest::new(mu0, n_total, cfg.eps);
+        let mut sampler = SparseSampler::new(n_total);
+        let mut decided = None;
+        while decided.is_none() {
+            let take = cfg.m.min(sampler.remaining());
+            let roots: Vec<NodeId> = (0..take).map(|_| p.locals[sampler.next(rng)]).collect();
+            let ls = evaluator.eval_sections(trace, p, &roots, &new_v)?;
+            stats.sections_evaluated += roots.len();
+            if let TestState::Decided(acc) = test.update(&ls) {
+                decided = Some(acc);
+            }
+        }
+        decided.unwrap()
+    };
+
+    stats.scaffold_size += stats.sections_evaluated;
+    if accept {
+        commit_global(trace, p, new_v);
+        stats.accepted = true;
+    }
+    Ok(stats)
+}
+
+pub(crate) fn prior_logpdf(trace: &Trace, v: NodeId, value: &Value) -> f64 {
+    let node = trace.node(v);
+    let args: Vec<Value> = node
+        .args
+        .iter()
+        .map(|a| trace.arg_value(a).clone())
+        .collect();
+    match &node.kind {
+        NodeKind::StochFam(f) => f.logpdf(value, &args),
+        NodeKind::StochDyn { .. } | NodeKind::StochInst { .. } => {
+            let sp = trace.stoch_sp(v).unwrap();
+            trace.sp(sp).logpdf(value, &args)
+        }
+        k => panic!("prior_logpdf on {k:?}"),
+    }
+}
+
+pub(crate) fn sample_prior_value(
+    trace: &mut Trace,
+    v: NodeId,
+    rng: &mut Pcg64,
+) -> Result<Value, String> {
+    let args: Vec<Value> = trace.arg_values(&trace.node(v).args);
+    match &trace.node(v).kind {
+        NodeKind::StochFam(f) => f.sample(rng, &args),
+        NodeKind::StochDyn { .. } | NodeKind::StochInst { .. } => {
+            let sp = trace.stoch_sp(v).unwrap();
+            trace.sp(sp).sample(rng, &args)
+        }
+        k => Err(format!("sample_prior_value on {k:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::RunningMoments;
+
+    fn lr_program(n: usize, data_seed: u64) -> String {
+        let mut rng = Pcg64::new(data_seed, 77);
+        let mut src = String::from(
+            "[assume w (scope_include 'w 0 (multivariate_normal (vector 0 0) 0.5))]\n\
+             [assume f (lambda (x) (bernoulli (linear_logistic w x)))]\n",
+        );
+        // true boundary w* = (1.5, -1)
+        for _ in 0..n {
+            let (a, b) = (rng.normal(), rng.normal());
+            let p = 1.0 / (1.0 + (-(1.5 * a - b) as f64).exp());
+            let lab = if rng.uniform() < p { "true" } else { "false" };
+            src.push_str(&format!("[observe (f (vector {a} {b})) {lab}]\n"));
+        }
+        src
+    }
+
+    #[test]
+    fn sparse_sampler_is_a_permutation() {
+        let mut rng = Pcg64::seeded(0);
+        let mut s = SparseSampler::new(100);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            assert!(seen.insert(s.next(&mut rng)));
+        }
+        assert_eq!(seen.len(), 100);
+        assert!(seen.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn sparse_sampler_uniform_first_draw() {
+        let mut rng = Pcg64::seeded(1);
+        let mut counts = [0usize; 10];
+        for _ in 0..20_000 {
+            let mut s = SparseSampler::new(10);
+            counts[s.next(&mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 2000.0).abs() < 250.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn subsampled_consumes_fraction_for_clear_decisions() {
+        let src = lr_program(4000, 1);
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(2);
+        t.run_program(&src, &mut rng).unwrap();
+        let v = t.lookup_node("w").unwrap();
+        // a large drift step is nearly always clearly good or bad
+        let cfg = SubsampledConfig {
+            m: 100,
+            eps: 0.05,
+            proposal: Proposal::Drift(0.5),
+            exact: false,
+        };
+        let mut ev = InterpreterEval;
+        let mut total = 0usize;
+        let iters = 50;
+        for _ in 0..iters {
+            let s = subsampled_mh_transition(&mut t, &mut rng, v, &cfg, &mut ev).unwrap();
+            total += s.sections_evaluated;
+        }
+        let avg = total as f64 / iters as f64;
+        assert!(avg < 2000.0, "avg sections/transition {avg} of 4000");
+    }
+
+    #[test]
+    fn exact_mode_matches_scaffold_mh_posterior() {
+        // Run exact-mode partitioned MH; posterior mean of w should move
+        // towards the separator direction (1.5, -1).
+        let src = lr_program(800, 3);
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(4);
+        t.run_program(&src, &mut rng).unwrap();
+        let v = t.lookup_node("w").unwrap();
+        let cfg = SubsampledConfig {
+            m: 256,
+            eps: 0.01,
+            proposal: Proposal::Drift(0.12),
+            exact: true,
+        };
+        let mut ev = InterpreterEval;
+        let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());
+        for i in 0..4000 {
+            subsampled_mh_transition(&mut t, &mut rng, v, &cfg, &mut ev).unwrap();
+            if i > 500 {
+                let w = t.fresh_value(v);
+                let w = w.as_vector().unwrap().clone();
+                m0.push(w[0]);
+                m1.push(w[1]);
+            }
+        }
+        assert!(m0.mean() > 0.5, "w0 mean {}", m0.mean());
+        assert!(m1.mean() < -0.3, "w1 mean {}", m1.mean());
+    }
+
+    #[test]
+    fn subsampled_posterior_close_to_exact() {
+        // Same chain with the sequential test on: posterior must stay in
+        // the same region (bias is controlled by eps).
+        let src = lr_program(800, 3);
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(5);
+        t.run_program(&src, &mut rng).unwrap();
+        let v = t.lookup_node("w").unwrap();
+        let cfg = SubsampledConfig {
+            m: 100,
+            eps: 0.01,
+            proposal: Proposal::Drift(0.12),
+            exact: false,
+        };
+        let mut ev = InterpreterEval;
+        let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());
+        for i in 0..4000 {
+            subsampled_mh_transition(&mut t, &mut rng, v, &cfg, &mut ev).unwrap();
+            if i > 500 {
+                let w = t.fresh_value(v);
+                let w = w.as_vector().unwrap().clone();
+                m0.push(w[0]);
+                m1.push(w[1]);
+            }
+        }
+        assert!(m0.mean() > 0.5, "w0 mean {}", m0.mean());
+        assert!(m1.mean() < -0.3, "w1 mean {}", m1.mean());
+    }
+
+    #[test]
+    fn out_of_support_drift_rejects_immediately() {
+        let src = r#"
+            [assume phi (beta 5 1)]
+            [observe (normal phi 0.1) 0.9]
+            [observe (normal phi 0.1) 0.95]
+        "#;
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(6);
+        t.run_program(src, &mut rng).unwrap();
+        let v = t.lookup_node("phi").unwrap();
+        // huge drift: frequently proposes phi outside (0,1)
+        let cfg = SubsampledConfig {
+            m: 1,
+            eps: 0.01,
+            proposal: Proposal::Drift(50.0),
+            exact: false,
+        };
+        let mut ev = InterpreterEval;
+        for _ in 0..50 {
+            let s = subsampled_mh_transition(&mut t, &mut rng, v, &cfg, &mut ev).unwrap();
+            let phi = t.fresh_value(v).as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&phi), "phi left support: {phi} ({s:?})");
+        }
+    }
+
+    #[test]
+    fn no_partition_falls_back_to_exact_mh() {
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(7);
+        t.run_program(
+            "[assume x (normal 0 1)] [observe (normal x 1) 2.0]",
+            &mut rng,
+        )
+        .unwrap();
+        let v = t.lookup_node("x").unwrap();
+        let cfg = SubsampledConfig::paper_defaults();
+        let mut ev = InterpreterEval;
+        // single dependent: no border; must not panic
+        let s = subsampled_mh_transition(&mut t, &mut rng, v, &cfg, &mut ev).unwrap();
+        assert_eq!(s.sections_evaluated, 0);
+    }
+}

@@ -1,0 +1,32 @@
+//! # subppl — sublinear-time approximate MCMC transitions for probabilistic programs
+//!
+//! A from-scratch Rust reproduction of Chen, Mansinghka & Ghahramani
+//! (2014): a Venture-style probabilistic programming engine whose
+//! Metropolis–Hastings transitions for globally-coupled latent variables
+//! run in time *sublinear* in the number of dependent observations, by
+//! subsampling *local sections* of the transition's scaffold on the
+//! probabilistic execution trace (PET) and deciding accept/reject with a
+//! sequential Student-t test.
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — language, PET, scaffolds, inference kernels,
+//!   experiment coordination. Owns the transition hot path.
+//! * **L2/L1 (python/, build-time only)** — JAX + Pallas mini-batch
+//!   likelihood kernels, AOT-lowered to HLO text in `artifacts/`.
+//! * **runtime/** — loads the artifacts through XLA/PJRT (`xla` crate)
+//!   and serves batched log-likelihood-ratio evaluations to the
+//!   subsampled-MH hot loop.
+
+pub mod coordinator;
+pub mod data;
+pub mod dist;
+pub mod infer;
+pub mod math;
+pub mod ppl;
+pub mod runtime;
+pub mod stats;
+pub mod trace;
+
+pub use ppl::parser::{parse_program, parse_value};
+pub use ppl::value::Value;
+pub use trace::Trace;

@@ -1,0 +1,288 @@
+//! subppl CLI — run probabilistic programs and regenerate the paper's
+//! experiments.
+//!
+//! ```text
+//! subppl run <program.vnt> [--infer "<program>"] [--seed N] [--watch a,b]
+//! subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused]
+//! subppl artifacts                 # list the AOT artifact registry
+//! ```
+
+use std::io::Read;
+use subppl::coordinator::experiments as exp;
+use subppl::coordinator::report::{results_dir, Table};
+use subppl::coordinator::FusedEval;
+use subppl::infer::{infer, parse_infer, InterpreterEval, LocalEvaluator};
+use subppl::math::Pcg64;
+use subppl::trace::Trace;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn run(args: &[String]) -> Result<(), String> {
+    match args.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            eprintln!(
+                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused]\n  subppl artifacts"
+            );
+            Err("missing or unknown subcommand".into())
+        }
+    }
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let path = args.get(1).ok_or("run: missing program path")?;
+    let mut src = String::new();
+    if path == "-" {
+        std::io::stdin()
+            .read_to_string(&mut src)
+            .map_err(|e| e.to_string())?;
+    } else {
+        src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    }
+    let seed: u64 = opt(args, "--seed")
+        .unwrap_or("0")
+        .parse()
+        .map_err(|_| "bad --seed")?;
+    let samples: usize = opt(args, "--samples")
+        .unwrap_or("100")
+        .parse()
+        .map_err(|_| "bad --samples")?;
+    let mut trace = Trace::new();
+    let mut rng = Pcg64::seeded(seed);
+    trace.run_program(&src, &mut rng)?;
+    println!("trace: {} live nodes", trace.num_live_nodes());
+    println!("log joint: {:.4}", trace.log_joint());
+    if let Some(prog) = opt(args, "--infer") {
+        let cmd = parse_infer(prog)?;
+        let names: Vec<String> = opt(args, "--watch")
+            .map(|p| p.split(',').map(|s| s.to_string()).collect())
+            .unwrap_or_default();
+        let mut sums: Vec<f64> = vec![0.0; names.len()];
+        for s in 0..samples {
+            let stats = infer(&mut trace, &mut rng, &cmd)?;
+            if s == 0 {
+                println!(
+                    "per-iteration: {} transitions, acceptance {:.3}",
+                    stats.transitions,
+                    stats.acceptance_rate()
+                );
+            }
+            for (i, n) in names.iter().enumerate() {
+                if let Some(v) = trace.lookup_value(n).and_then(|v| v.as_f64()) {
+                    sums[i] += v;
+                }
+            }
+        }
+        for (i, n) in names.iter().enumerate() {
+            println!("posterior mean {n}: {:.5}", sums[i] / samples as f64);
+        }
+        println!("final log joint: {:.4}", trace.log_joint());
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<(), String> {
+    let reg = subppl::runtime::ArtifactRegistry::open_default()?;
+    let mut t = Table::new(&["name", "kind", "m", "d"]);
+    for a in reg.infos() {
+        t.row(&[
+            a.name.clone(),
+            a.kind.clone(),
+            a.m.to_string(),
+            a.d.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn evaluator_for(args: &[String]) -> Box<dyn LocalEvaluator> {
+    if flag(args, "--fused") {
+        match FusedEval::open_default() {
+            Ok(f) => return Box::new(f),
+            Err(e) => eprintln!("--fused unavailable ({e}); falling back to interpreter"),
+        }
+    }
+    Box::new(InterpreterEval)
+}
+
+fn cmd_experiment(args: &[String]) -> Result<(), String> {
+    let which = args.get(1).ok_or("experiment: missing name")?;
+    let fast = flag(args, "--fast");
+    let mut evaluator = evaluator_for(args);
+    let outdir = results_dir();
+    match which.as_str() {
+        "table1" => {
+            let rows = exp::table1_scaling(3);
+            let mut t = Table::new(&["model", "N_small", "N_large", "t_small(s)", "t_large(s)", "exponent"]);
+            for r in &rows {
+                t.row(&[
+                    r.model.clone(),
+                    r.n_small.to_string(),
+                    r.n_large.to_string(),
+                    format!("{:.5}", r.t_small),
+                    format!("{:.5}", r.t_large),
+                    format!("{:.2}", r.exponent),
+                ]);
+            }
+            t.print();
+        }
+        "fig5" => {
+            let cfg = if fast {
+                exp::Fig5Config {
+                    ns: vec![1_000, 3_000, 10_000],
+                    iters: 30,
+                    ..Default::default()
+                }
+            } else {
+                exp::Fig5Config::default()
+            };
+            let rows = exp::fig5_sublinear(&cfg, evaluator.as_mut());
+            let mut t = Table::new(&["N", "sections/iter", "E[sections]", "t_sub(s)", "t_exact(s)"]);
+            for r in &rows {
+                t.row(&[
+                    r.n.to_string(),
+                    format!("{:.1}", r.avg_sections),
+                    format!("{:.1}", r.expected_sections),
+                    format!("{:.5}", r.time_sub),
+                    format!("{:.5}", r.time_exact),
+                ]);
+            }
+            t.print();
+            exp::fig5_csv(&rows)
+                .write_to(&outdir.join("fig5_sublinear.csv"))
+                .map_err(|e| e.to_string())?;
+            println!("wrote {}", outdir.join("fig5_sublinear.csv").display());
+        }
+        "fig4" => {
+            let cfg = if fast {
+                exp::Fig4Config {
+                    n_train: 2000,
+                    n_test: 500,
+                    steps: 100,
+                    record_every: 5,
+                    ..Default::default()
+                }
+            } else {
+                exp::Fig4Config::default()
+            };
+            let curves = exp::fig4_risk(&cfg, evaluator.as_mut());
+            let mut t = Table::new(&[
+                "method",
+                "transitions",
+                "accept%",
+                "final risk",
+                "final 0-1",
+                "JB p",
+            ]);
+            for c in &curves {
+                let last = c.points.last().copied().unwrap_or((0.0, f64::NAN, f64::NAN));
+                t.row(&[
+                    c.label.clone(),
+                    c.transitions.to_string(),
+                    format!("{:.1}", 100.0 * c.accepted as f64 / c.transitions as f64),
+                    format!("{:.5}", last.1),
+                    format!("{:.4}", last.2),
+                    format!("{:.3}", c.normality_p),
+                ]);
+            }
+            t.print();
+            exp::fig4_csv(&curves)
+                .write_to(&outdir.join("fig4_risk.csv"))
+                .map_err(|e| e.to_string())?;
+            println!("wrote {}", outdir.join("fig4_risk.csv").display());
+        }
+        "fig6" => {
+            let cfg = if fast {
+                exp::Fig6Config {
+                    n_train: 300,
+                    n_test: 150,
+                    sweeps: 10,
+                    step_z: 30,
+                    ..Default::default()
+                }
+            } else {
+                exp::Fig6Config::default()
+            };
+            let mut t = Table::new(&["method", "sweep", "seconds", "accuracy", "clusters"]);
+            for (label, sub) in [("exact-mh", false), ("subsampled-eps0.3", true)] {
+                let pts = exp::fig6_dpm(&cfg, sub);
+                for (i, p) in pts.iter().enumerate() {
+                    t.row(&[
+                        label.to_string(),
+                        i.to_string(),
+                        format!("{:.2}", p.seconds),
+                        format!("{:.4}", p.accuracy),
+                        p.clusters.to_string(),
+                    ]);
+                }
+            }
+            t.print();
+        }
+        "fig9" => {
+            let cfg = if fast {
+                exp::Fig9Config {
+                    series: 30,
+                    sweeps: 60,
+                    ..Default::default()
+                }
+            } else {
+                exp::Fig9Config::default()
+            };
+            let exact = exp::fig9_sv(&cfg, false);
+            let sub = exp::fig9_sv(&cfg, true);
+            let mut t = Table::new(&[
+                "method",
+                "seconds",
+                "phi mean",
+                "sig mean",
+                "phi ESS/s",
+                "sig ESS/s",
+            ]);
+            for r in [&exact, &sub] {
+                let pm = r.phi_samples.iter().sum::<f64>() / r.phi_samples.len() as f64;
+                let sm = r.sig_samples.iter().sum::<f64>() / r.sig_samples.len() as f64;
+                t.row(&[
+                    r.label.clone(),
+                    format!("{:.2}", r.seconds),
+                    format!("{:.4}", pm),
+                    format!("{:.4}", sm),
+                    format!("{:.3}", r.phi_ess_per_sec),
+                    format!("{:.3}", r.sig_ess_per_sec),
+                ]);
+            }
+            t.print();
+            let (hist, acf) = exp::fig9_csv(&[exact, sub], 30);
+            hist.write_to(&outdir.join("fig9_hist.csv"))
+                .map_err(|e| e.to_string())?;
+            acf.write_to(&outdir.join("fig9_acf.csv"))
+                .map_err(|e| e.to_string())?;
+            println!("wrote {}", outdir.join("fig9_hist.csv").display());
+        }
+        other => return Err(format!("unknown experiment {other}")),
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Numerical foundations: special functions and deterministic PRNG.
+//!
+//! Everything here is implemented from scratch (no external numeric
+//! crates) so the engine is self-contained and bit-reproducible.
+
+pub mod rng;
+pub mod special;
+
+pub use rng::Pcg64;
+pub use special::{
+    erf, erfc, ln_beta, ln_gamma, log1p_exp, log_add_exp, log_sigmoid, reg_inc_beta,
+    student_t_cdf, student_t_sf,
+};

@@ -1,0 +1,338 @@
+//! Deterministic PRNG (PCG64-DXSM style) plus the distribution samplers
+//! the engine needs.  One seeded generator per chain gives bit-for-bit
+//! reproducible experiments on a fixed platform.
+
+/// PCG-64 DXSM generator (128-bit state, 64-bit output).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 64) | 0xda3e_39cb_94b9_5bdb) | 1;
+        let mut rng = Pcg64 {
+            state: 0,
+            inc,
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng
+    }
+
+    /// Seed-only constructor (stream 0).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Next raw 64 bits (DXSM output function).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let mut hi = (self.state >> 64) as u64;
+        let lo = (self.state as u64) | 1;
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(0xda94_2042_e4dd_58b5);
+        hi ^= hi >> 48;
+        hi.wrapping_mul(lo)
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1) — never exactly zero (safe for log()).
+    #[inline]
+    pub fn uniform_pos(&mut self) -> f64 {
+        loop {
+            let u = self.uniform();
+            if u > 0.0 {
+                return u;
+            }
+        }
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection method.
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Standard normal (Marsaglia polar method).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// N(mu, sigma^2).
+    pub fn normal_scaled(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Gamma(shape, scale=1) via Marsaglia–Tsang, with boost for shape < 1.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0, "gamma shape must be > 0");
+        if shape < 1.0 {
+            // Gamma(a) = Gamma(a+1) * U^{1/a}
+            let g = self.gamma(shape + 1.0);
+            let u = self.uniform_pos();
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.uniform_pos();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Gamma(shape, scale).
+    pub fn gamma_scaled(&mut self, shape: f64, scale: f64) -> f64 {
+        self.gamma(shape) * scale
+    }
+
+    /// Beta(a, b).
+    pub fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a);
+        let y = self.gamma(b);
+        x / (x + y)
+    }
+
+    /// Chi-squared with nu dof.
+    pub fn chi2(&mut self, nu: f64) -> f64 {
+        2.0 * self.gamma(0.5 * nu)
+    }
+
+    /// Student-t with nu dof.
+    pub fn student_t(&mut self, nu: f64) -> f64 {
+        self.normal() / (self.chi2(nu) / nu).sqrt()
+    }
+
+    /// Bernoulli(p) -> bool.
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Sample an index from unnormalized log-weights (Gumbel-free; uses
+    /// normalized CDF inversion for determinism).
+    pub fn categorical_log(&mut self, log_w: &[f64]) -> usize {
+        let m = log_w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let ws: Vec<f64> = log_w.iter().map(|l| (l - m).exp()).collect();
+        self.categorical(&ws)
+    }
+
+    /// Sample an index proportional to nonnegative weights.
+    pub fn categorical(&mut self, w: &[f64]) -> usize {
+        let total: f64 = w.iter().sum();
+        assert!(total > 0.0 && total.is_finite(), "categorical: bad weights");
+        let mut u = self.uniform() * total;
+        for (i, &wi) in w.iter().enumerate() {
+            u -= wi;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        w.len() - 1
+    }
+
+    /// Floyd's algorithm: k distinct indices from [0, n), order randomized.
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        // Fisher-Yates shuffle for unbiased order
+        for i in (1..out.len()).rev() {
+            let j = self.below(i + 1);
+            out.swap(i, j);
+        }
+        out
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::seeded(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut rng = Pcg64::seeded(1);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 5e-3);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(2);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut rng = Pcg64::seeded(3);
+        for &shape in &[0.5, 1.0, 3.0, 10.0] {
+            let n = 100_000;
+            let mut s1 = 0.0;
+            for _ in 0..n {
+                s1 += rng.gamma(shape);
+            }
+            let mean = s1 / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.05 * shape.max(1.0),
+                "shape={shape} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn beta_moments() {
+        let mut rng = Pcg64::seeded(4);
+        let (a, b) = (5.0, 1.0);
+        let n = 100_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            let x = rng.beta(a, b);
+            assert!((0.0..=1.0).contains(&x));
+            s += x;
+        }
+        assert!((s / n as f64 - a / (a + b)).abs() < 5e-3);
+    }
+
+    #[test]
+    fn below_uniformity() {
+        let mut rng = Pcg64::seeded(5);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn swr_distinct_and_complete() {
+        let mut rng = Pcg64::seeded(6);
+        for _ in 0..100 {
+            let ids = rng.sample_without_replacement(50, 13);
+            assert_eq!(ids.len(), 13);
+            let set: std::collections::HashSet<_> = ids.iter().collect();
+            assert_eq!(set.len(), 13);
+            assert!(ids.iter().all(|&i| i < 50));
+        }
+        // k == n returns a permutation
+        let ids = rng.sample_without_replacement(10, 10);
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn swr_is_uniform() {
+        // Every element appears ~ k/n of the time.
+        let mut rng = Pcg64::seeded(7);
+        let (n, k, trials) = (20, 5, 40_000);
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            for i in rng.sample_without_replacement(n, k) {
+                counts[i] += 1;
+            }
+        }
+        let expect = trials as f64 * k as f64 / n as f64;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 0.05 * expect, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn categorical_log_matches_weights() {
+        let mut rng = Pcg64::seeded(8);
+        let log_w = [0.0f64.ln(), 1.0f64.ln(), 3.0f64.ln()];
+        let log_w = [f64::NEG_INFINITY, log_w[1], log_w[2]];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[rng.categorical_log(&log_w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let frac2 = counts[2] as f64 / 40_000.0;
+        assert!((frac2 - 0.75).abs() < 0.02);
+    }
+}

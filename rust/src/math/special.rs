@@ -1,0 +1,303 @@
+//! Special functions: ln-gamma, erf/erfc, regularized incomplete beta,
+//! and the Student-t CDF used by the sequential test (Alg. 2).
+//!
+//! Accuracy targets are ~1e-12 relative for ln_gamma and ~1e-10 absolute
+//! for the beta/t functions — comfortably below the 1e-2..1e-3 tolerance
+//! levels ε at which the sequential test operates, so the test's decision
+//! boundary is limited by statistics, not by these approximations.
+
+/// Natural log of the Gamma function (Lanczos approximation, g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection: Gamma(x) Gamma(1-x) = pi / sin(pi x)
+        let s = (std::f64::consts::PI * x).sin();
+        return std::f64::consts::PI.ln() - s.abs().ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// ln B(a, b) = ln Gamma(a) + ln Gamma(b) - ln Gamma(a+b).
+pub fn ln_beta(a: f64, b: f64) -> f64 {
+    ln_gamma(a) + ln_gamma(b) - ln_gamma(a + b)
+}
+
+/// Error function, Abramowitz & Stegun 7.1.26-style rational + series;
+/// we use the complementary-function continued fraction for accuracy.
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Complementary error function (relative error < 1.2e-7 everywhere,
+/// much better near 0 via the series branch).
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    if x < 0.5 {
+        // erf via Taylor-like series: erf(x) = 2/sqrt(pi) * sum
+        let mut term = x;
+        let mut sum = x;
+        let x2 = x * x;
+        let mut n = 0u32;
+        while term.abs() > 1e-17 * sum.abs() && n < 200 {
+            n += 1;
+            term *= -x2 / n as f64;
+            sum += term / (2 * n + 1) as f64;
+        }
+        return 1.0 - 2.0 / std::f64::consts::PI.sqrt() * sum;
+    }
+    // Continued fraction (Lentz) for erfc(x) = exp(-x^2)/(x sqrt(pi)) * CF
+    let x2 = x * x;
+    let mut f = x;
+    let mut c = x;
+    let mut d = 0.0f64;
+    let tiny = 1e-300;
+    for i in 1..300 {
+        let a = 0.5 * i as f64;
+        // CF: x + a1/(x + a2/(x + ...)), a_i = i/2
+        d = x + a * d;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = x + a / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let delta = c * d;
+        f *= delta;
+        if (delta - 1.0).abs() < 1e-16 {
+            break;
+        }
+    }
+    (-x2).exp() / (f * std::f64::consts::PI.sqrt())
+}
+
+/// Regularized incomplete beta function I_x(a, b), continued fraction
+/// (Numerical Recipes `betacf`), valid for 0 <= x <= 1.
+pub fn reg_inc_beta(a: f64, b: f64, x: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&x), "reg_inc_beta: x={x} outside [0,1]");
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x == 1.0 {
+        return 1.0;
+    }
+    let ln_front = -ln_beta(a, b) + a * x.ln() + b * (1.0 - x).ln();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        (ln_front.exp()) * beta_cf(a, b, x) / a
+    } else {
+        1.0 - (ln_front.exp()) * beta_cf(b, a, 1.0 - x) / b
+    }
+}
+
+fn beta_cf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_IT: usize = 300;
+    const EPS: f64 = 3e-15;
+    const FPMIN: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_IT {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// CDF of the Student-t distribution with `nu` degrees of freedom.
+pub fn student_t_cdf(t: f64, nu: f64) -> f64 {
+    assert!(nu > 0.0);
+    if t.is_infinite() {
+        return if t > 0.0 { 1.0 } else { 0.0 };
+    }
+    let x = nu / (nu + t * t);
+    let p = 0.5 * reg_inc_beta(0.5 * nu, 0.5, x);
+    if t > 0.0 {
+        1.0 - p
+    } else {
+        p
+    }
+}
+
+/// Survival function 1 - CDF (more accurate in the tail we test against).
+pub fn student_t_sf(t: f64, nu: f64) -> f64 {
+    if t.is_infinite() {
+        return if t > 0.0 { 0.0 } else { 1.0 };
+    }
+    let x = nu / (nu + t * t);
+    let p = 0.5 * reg_inc_beta(0.5 * nu, 0.5, x);
+    if t > 0.0 {
+        p
+    } else {
+        1.0 - p
+    }
+}
+
+/// log(1 + exp(x)) without overflow.
+pub fn log1p_exp(x: f64) -> f64 {
+    if x > 35.0 {
+        x
+    } else if x < -35.0 {
+        x.exp()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Numerically stable log(sigmoid(x)) = -log(1 + exp(-x)).
+pub fn log_sigmoid(x: f64) -> f64 {
+    -log1p_exp(-x)
+}
+
+/// log(exp(a) + exp(b)) without overflow.
+pub fn log_add_exp(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let m = a.max(b);
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+/// log-sum-exp of a slice.
+pub fn log_sum_exp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if m == f64::NEG_INFINITY {
+        return m;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Gamma(n) = (n-1)!
+        assert!((ln_gamma(1.0)).abs() < 1e-12);
+        assert!((ln_gamma(2.0)).abs() < 1e-12);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-11);
+        assert!((ln_gamma(10.0) - 362880f64.ln()).abs() < 1e-10);
+        // Gamma(0.5) = sqrt(pi)
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-12);
+        // Reflection branch
+        assert!((ln_gamma(0.3) - 2.991_568_987_687_59f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-15);
+        assert!((erf(1.0) - 0.842_700_792_949_714_9).abs() < 1e-10);
+        assert!((erf(2.0) - 0.995_322_265_018_952_7).abs() < 1e-10);
+        assert!((erf(-1.0) + 0.842_700_792_949_714_9).abs() < 1e-10);
+        assert!((erfc(3.0) - 2.209_049_699_858_544e-5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inc_beta_symmetry_and_known() {
+        // I_x(a,b) = 1 - I_{1-x}(b,a)
+        for &(a, b, x) in &[(2.0, 3.0, 0.4), (0.5, 0.5, 0.3), (5.0, 1.0, 0.9)] {
+            let lhs = reg_inc_beta(a, b, x);
+            let rhs = 1.0 - reg_inc_beta(b, a, 1.0 - x);
+            assert!((lhs - rhs).abs() < 1e-12, "({a},{b},{x})");
+        }
+        // I_x(1,1) = x
+        assert!((reg_inc_beta(1.0, 1.0, 0.37) - 0.37).abs() < 1e-12);
+        // scipy.special.betainc(2, 3, 0.4) = 0.5248
+        assert!((reg_inc_beta(2.0, 3.0, 0.4) - 0.5248).abs() < 1e-10);
+    }
+
+    #[test]
+    fn student_t_cdf_known_values() {
+        // nu=1 is Cauchy: CDF(t) = 1/2 + atan(t)/pi
+        for &t in &[-3.0f64, -1.0, 0.0, 0.5, 2.0] {
+            let want = 0.5 + t.atan() / std::f64::consts::PI;
+            assert!((student_t_cdf(t, 1.0) - want).abs() < 1e-10, "t={t}");
+        }
+        // symmetric
+        assert!((student_t_cdf(0.0, 7.0) - 0.5).abs() < 1e-12);
+        // scipy.stats.t.cdf(1.5, 10) = 0.917745...
+        assert!((student_t_cdf(1.5, 10.0) - 0.917_746_87).abs() < 1e-6);
+        // large nu approaches normal: t.cdf(1.96, 1e6) ~ 0.975
+        assert!((student_t_cdf(1.96, 1e6) - 0.975).abs() < 2e-4);
+    }
+
+    #[test]
+    fn student_t_sf_complements_cdf() {
+        for &t in &[-4.0, -0.3, 0.0, 1.2, 8.0] {
+            for &nu in &[1.0, 4.0, 30.0] {
+                let s = student_t_sf(t, nu) + student_t_cdf(t, nu);
+                assert!((s - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn log_sigmoid_stable() {
+        assert!(log_sigmoid(1000.0).abs() < 1e-12);
+        assert!((log_sigmoid(-1000.0) + 1000.0).abs() < 1e-9);
+        assert!((log_sigmoid(0.0) + 2f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_add_exp_basic() {
+        assert!((log_add_exp(0.0, 0.0) - 2f64.ln()).abs() < 1e-12);
+        assert!((log_add_exp(f64::NEG_INFINITY, 3.0) - 3.0).abs() < 1e-12);
+        assert!((log_add_exp(1000.0, 1000.0) - (1000.0 + 2f64.ln())).abs() < 1e-9);
+        assert!((log_sum_exp(&[0.0, 0.0, 0.0]) - 3f64.ln()).abs() < 1e-12);
+    }
+}

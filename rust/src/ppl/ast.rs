@@ -1,0 +1,51 @@
+//! Abstract syntax of the modeling language.
+
+use crate::ppl::value::Value;
+use std::rc::Rc;
+
+/// An expression.  `Rc<Expr>` is shared between the AST and the trace
+/// nodes that need to re-evaluate it (If branches, mem bodies).
+#[derive(Clone, Debug)]
+pub enum Expr {
+    /// Literal constant.
+    Const(Value),
+    /// Variable reference.
+    Sym(Rc<str>),
+    /// (if pred conseq alt)
+    If(Rc<Expr>, Rc<Expr>, Rc<Expr>),
+    /// (lambda (params...) body)
+    Lambda(Vec<Rc<str>>, Rc<Expr>),
+    /// (let ((name expr)...) body)
+    Let(Vec<(Rc<str>, Rc<Expr>)>, Rc<Expr>),
+    /// (mem proc-expr)
+    Mem(Rc<Expr>),
+    /// (scope_include 'scope block expr)
+    ScopeInclude(Rc<Expr>, Rc<Expr>, Rc<Expr>),
+    /// (op args...)
+    App(Vec<Rc<Expr>>),
+}
+
+/// A top-level directive.
+#[derive(Clone, Debug)]
+pub enum Directive {
+    /// [assume name expr]
+    Assume(Rc<str>, Rc<Expr>),
+    /// [observe expr value]
+    Observe(Rc<Expr>, Value),
+    /// [predict expr]
+    Predict(Rc<Expr>),
+}
+
+impl Expr {
+    pub fn constant(v: Value) -> Rc<Expr> {
+        Rc::new(Expr::Const(v))
+    }
+
+    pub fn sym(s: &str) -> Rc<Expr> {
+        Rc::new(Expr::Sym(Rc::from(s)))
+    }
+
+    pub fn app(parts: Vec<Rc<Expr>>) -> Rc<Expr> {
+        Rc::new(Expr::App(parts))
+    }
+}

@@ -1,0 +1,86 @@
+//! Lexical environments.
+//!
+//! A binding maps a name either to a *static* value (primitives,
+//! closures, constants — things whose value can never change during
+//! inference) or to a trace *node* (assumed random variables, closure
+//! parameters backed by nodes).  Static bindings are what lets the
+//! evaluator constant-fold pure sub-expressions instead of materializing
+//! nodes for them.
+
+use crate::ppl::value::Value;
+use crate::trace::node::NodeId;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// What a name resolves to.
+#[derive(Clone, Debug)]
+pub enum Binding {
+    /// A value fixed for the lifetime of the trace.
+    Static(Value),
+    /// The node whose (mutable) value the name denotes.
+    Node(NodeId),
+}
+
+/// One environment frame.
+#[derive(Debug)]
+pub struct Env {
+    frame: RefCell<HashMap<Rc<str>, Binding>>,
+    parent: Option<EnvRef>,
+}
+
+pub type EnvRef = Rc<Env>;
+
+impl Env {
+    /// Fresh root environment.
+    pub fn root() -> EnvRef {
+        Rc::new(Env {
+            frame: RefCell::new(HashMap::new()),
+            parent: None,
+        })
+    }
+
+    /// Child environment extending `parent`.
+    pub fn child(parent: &EnvRef) -> EnvRef {
+        Rc::new(Env {
+            frame: RefCell::new(HashMap::new()),
+            parent: Some(parent.clone()),
+        })
+    }
+
+    /// Define (or shadow) a name in this frame.
+    pub fn define(self: &EnvRef, name: Rc<str>, b: Binding) {
+        self.frame.borrow_mut().insert(name, b);
+    }
+
+    /// Resolve a name, walking outward.
+    pub fn lookup(self: &EnvRef, name: &str) -> Option<Binding> {
+        if let Some(b) = self.frame.borrow().get(name) {
+            return Some(b.clone());
+        }
+        self.parent.as_ref().and_then(|p| p.lookup(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shadowing_and_parent_lookup() {
+        let root = Env::root();
+        root.define(Rc::from("x"), Binding::Static(Value::Int(1)));
+        root.define(Rc::from("y"), Binding::Static(Value::Int(2)));
+        let child = Env::child(&root);
+        child.define(Rc::from("x"), Binding::Static(Value::Int(10)));
+        match child.lookup("x") {
+            Some(Binding::Static(Value::Int(10))) => {}
+            b => panic!("{b:?}"),
+        }
+        match child.lookup("y") {
+            Some(Binding::Static(Value::Int(2))) => {}
+            b => panic!("{b:?}"),
+        }
+        assert!(child.lookup("z").is_none());
+    }
+}

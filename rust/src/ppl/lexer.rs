@@ -1,0 +1,143 @@
+//! Tokenizer for the s-expression surface syntax.
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Token {
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Quote,
+    Int(i64),
+    Real(f64),
+    Sym(String),
+    Bool(bool),
+}
+
+/// Tokenize a program string.  `;` starts a line comment and `#` too
+/// (the paper's listings use `#`).
+pub fn tokenize(src: &str) -> Result<Vec<Token>, String> {
+    let mut out = Vec::new();
+    let mut chars = src.chars().peekable();
+    while let Some(&c) = chars.peek() {
+        match c {
+            c if c.is_whitespace() => {
+                chars.next();
+            }
+            ';' | '#' => {
+                for c in chars.by_ref() {
+                    if c == '\n' {
+                        break;
+                    }
+                }
+            }
+            '(' => {
+                chars.next();
+                out.push(Token::LParen);
+            }
+            ')' => {
+                chars.next();
+                out.push(Token::RParen);
+            }
+            '[' => {
+                chars.next();
+                out.push(Token::LBracket);
+            }
+            ']' => {
+                chars.next();
+                out.push(Token::RBracket);
+            }
+            '\'' => {
+                chars.next();
+                out.push(Token::Quote);
+            }
+            _ => {
+                let mut atom = String::new();
+                while let Some(&c) = chars.peek() {
+                    if c.is_whitespace() || "()[]';#".contains(c) {
+                        break;
+                    }
+                    atom.push(c);
+                    chars.next();
+                }
+                out.push(classify_atom(&atom)?);
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn classify_atom(atom: &str) -> Result<Token, String> {
+    if atom.is_empty() {
+        return Err("empty atom".into());
+    }
+    match atom {
+        "true" | "#t" => return Ok(Token::Bool(true)),
+        "false" | "#f" => return Ok(Token::Bool(false)),
+        _ => {}
+    }
+    // int?
+    if let Ok(i) = atom.parse::<i64>() {
+        return Ok(Token::Int(i));
+    }
+    // real?
+    if let Ok(x) = atom.parse::<f64>() {
+        // reject things like "-" or "+" that parse::<f64> would not
+        return Ok(Token::Real(x));
+    }
+    Ok(Token::Sym(atom.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizes_basic_program() {
+        let toks = tokenize("[assume b (bernoulli 0.5)]").unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                Token::LBracket,
+                Token::Sym("assume".into()),
+                Token::Sym("b".into()),
+                Token::LParen,
+                Token::Sym("bernoulli".into()),
+                Token::Real(0.5),
+                Token::RParen,
+                Token::RBracket,
+            ]
+        );
+    }
+
+    #[test]
+    fn handles_comments_quotes_negatives() {
+        let toks = tokenize("; comment\n(foo 'bar -2 -0.5) # trailing").unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                Token::LParen,
+                Token::Sym("foo".into()),
+                Token::Quote,
+                Token::Sym("bar".into()),
+                Token::Int(-2),
+                Token::Real(-0.5),
+                Token::RParen,
+            ]
+        );
+    }
+
+    #[test]
+    fn booleans_and_symbols_with_specials() {
+        let toks = tokenize("true false <= foo_bar? *").unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                Token::Bool(true),
+                Token::Bool(false),
+                Token::Sym("<=".into()),
+                Token::Sym("foo_bar?".into()),
+                Token::Sym("*".into()),
+            ]
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! The modeling language: a Venture-style, Lisp-syntax probabilistic
+//! programming language with `assume` / `observe` / `predict` / `infer`
+//! directives, first-class stochastic procedures, `mem`, and
+//! `scope_include` tags that inference programs address transitions to.
+
+pub mod ast;
+pub mod env;
+pub mod lexer;
+pub mod parser;
+pub mod prim;
+pub mod sp;
+pub mod value;

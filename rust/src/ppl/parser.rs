@@ -1,0 +1,308 @@
+//! Parser: tokens -> directives / expressions.
+
+use crate::ppl::ast::{Directive, Expr};
+use crate::ppl::lexer::{tokenize, Token};
+use crate::ppl::value::Value;
+use std::rc::Rc;
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Token> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Result<Token, String> {
+        let t = self.toks.get(self.pos).cloned().ok_or("unexpected EOF")?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn expect(&mut self, t: Token) -> Result<(), String> {
+        let got = self.next()?;
+        if got == t {
+            Ok(())
+        } else {
+            Err(format!("expected {t:?}, got {got:?}"))
+        }
+    }
+
+    /// Parse one expression.
+    fn expr(&mut self) -> Result<Rc<Expr>, String> {
+        match self.next()? {
+            Token::Int(i) => Ok(Expr::constant(Value::Int(i))),
+            Token::Real(x) => Ok(Expr::constant(Value::Real(x))),
+            Token::Bool(b) => Ok(Expr::constant(Value::Bool(b))),
+            Token::Sym(s) => Ok(Expr::sym(&s)),
+            Token::Quote => match self.next()? {
+                Token::Sym(s) => Ok(Expr::constant(Value::sym(&s))),
+                t => Err(format!("expected symbol after quote, got {t:?}")),
+            },
+            Token::LParen => self.form(),
+            t => Err(format!("unexpected token {t:?}")),
+        }
+    }
+
+    /// Parse the inside of a `( ... )` form (opening paren consumed).
+    fn form(&mut self) -> Result<Rc<Expr>, String> {
+        // special forms dispatch on the head symbol
+        let head_is = |p: &Parser, s: &str| matches!(p.peek(), Some(Token::Sym(h)) if h == s);
+        if head_is(self, "if") {
+            self.next()?;
+            let p = self.expr()?;
+            let c = self.expr()?;
+            let a = self.expr()?;
+            self.expect(Token::RParen)?;
+            return Ok(Rc::new(Expr::If(p, c, a)));
+        }
+        if head_is(self, "lambda") {
+            self.next()?;
+            self.expect(Token::LParen)?;
+            let mut params = Vec::new();
+            loop {
+                match self.next()? {
+                    Token::RParen => break,
+                    Token::Sym(s) => params.push(Rc::from(s.as_str())),
+                    t => return Err(format!("bad lambda param {t:?}")),
+                }
+            }
+            let body = self.expr()?;
+            self.expect(Token::RParen)?;
+            return Ok(Rc::new(Expr::Lambda(params, body)));
+        }
+        if head_is(self, "let") {
+            self.next()?;
+            self.expect(Token::LParen)?;
+            let mut binds = Vec::new();
+            loop {
+                match self.next()? {
+                    Token::RParen => break,
+                    Token::LParen => {
+                        let name = match self.next()? {
+                            Token::Sym(s) => Rc::from(s.as_str()),
+                            t => return Err(format!("bad let name {t:?}")),
+                        };
+                        let e = self.expr()?;
+                        self.expect(Token::RParen)?;
+                        binds.push((name, e));
+                    }
+                    t => return Err(format!("bad let binding {t:?}")),
+                }
+            }
+            let body = self.expr()?;
+            self.expect(Token::RParen)?;
+            return Ok(Rc::new(Expr::Let(binds, body)));
+        }
+        if head_is(self, "mem") {
+            self.next()?;
+            let inner = self.expr()?;
+            self.expect(Token::RParen)?;
+            return Ok(Rc::new(Expr::Mem(inner)));
+        }
+        if head_is(self, "scope_include") {
+            self.next()?;
+            let scope = self.expr()?;
+            let block = self.expr()?;
+            let body = self.expr()?;
+            self.expect(Token::RParen)?;
+            return Ok(Rc::new(Expr::ScopeInclude(scope, block, body)));
+        }
+        if head_is(self, "quote") {
+            self.next()?;
+            let v = match self.next()? {
+                Token::Sym(s) => Value::sym(&s),
+                Token::Int(i) => Value::Int(i),
+                Token::Real(x) => Value::Real(x),
+                t => return Err(format!("bad quote payload {t:?}")),
+            };
+            self.expect(Token::RParen)?;
+            return Ok(Expr::constant(v));
+        }
+        // plain application
+        let mut parts = Vec::new();
+        loop {
+            if matches!(self.peek(), Some(Token::RParen)) {
+                self.next()?;
+                break;
+            }
+            if self.peek().is_none() {
+                return Err("unterminated form".into());
+            }
+            parts.push(self.expr()?);
+        }
+        if parts.is_empty() {
+            return Err("empty application ()".into());
+        }
+        Ok(Expr::app(parts))
+    }
+
+    /// Parse a `[directive ...]`.
+    fn directive(&mut self) -> Result<Directive, String> {
+        // opening bracket consumed by caller
+        let head = match self.next()? {
+            Token::Sym(s) => s,
+            t => return Err(format!("bad directive head {t:?}")),
+        };
+        let d = match head.as_str() {
+            "assume" => {
+                let name = match self.next()? {
+                    Token::Sym(s) => Rc::from(s.as_str()),
+                    t => return Err(format!("bad assume name {t:?}")),
+                };
+                let e = self.expr()?;
+                Directive::Assume(name, e)
+            }
+            "observe" => {
+                let e = self.expr()?;
+                let v = self.literal_value()?;
+                Directive::Observe(e, v)
+            }
+            "predict" => Directive::Predict(self.expr()?),
+            other => return Err(format!("unknown directive [{other} ...]")),
+        };
+        self.expect(Token::RBracket)?;
+        Ok(d)
+    }
+
+    /// Parse a literal value (for observe right-hand sides).
+    fn literal_value(&mut self) -> Result<Value, String> {
+        match self.next()? {
+            Token::Int(i) => Ok(Value::Int(i)),
+            Token::Real(x) => Ok(Value::Real(x)),
+            Token::Bool(b) => Ok(Value::Bool(b)),
+            Token::Quote => match self.next()? {
+                Token::Sym(s) => Ok(Value::sym(&s)),
+                t => Err(format!("bad quoted literal {t:?}")),
+            },
+            // (vector x1 x2 ...) literals, or (list ...)
+            Token::LParen => {
+                let head = match self.next()? {
+                    Token::Sym(s) => s,
+                    t => return Err(format!("bad literal form head {t:?}")),
+                };
+                let mut xs = Vec::new();
+                loop {
+                    match self.peek() {
+                        Some(Token::RParen) => {
+                            self.next()?;
+                            break;
+                        }
+                        _ => xs.push(self.literal_value()?),
+                    }
+                }
+                match head.as_str() {
+                    "vector" | "array" => {
+                        let nums: Option<Vec<f64>> = xs.iter().map(|v| v.as_f64()).collect();
+                        nums.map(Value::vector)
+                            .ok_or_else(|| "non-numeric vector literal".into())
+                    }
+                    "list" => Ok(Value::List(Rc::new(xs))),
+                    other => Err(format!("unknown literal constructor ({other} ...)")),
+                }
+            }
+            t => Err(format!("bad literal {t:?}")),
+        }
+    }
+}
+
+/// Parse a full program: a sequence of bracketed directives.
+pub fn parse_program(src: &str) -> Result<Vec<Directive>, String> {
+    let toks = tokenize(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    let mut out = Vec::new();
+    while let Some(t) = p.peek() {
+        match t {
+            Token::LBracket => {
+                p.next()?;
+                out.push(p.directive()?);
+            }
+            t => return Err(format!("expected [directive], got {t:?}")),
+        }
+    }
+    Ok(out)
+}
+
+/// Parse a single expression (for tests and the infer mini-language).
+pub fn parse_expr(src: &str) -> Result<Rc<Expr>, String> {
+    let toks = tokenize(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    let e = p.expr()?;
+    if p.peek().is_some() {
+        return Err("trailing tokens after expression".into());
+    }
+    Ok(e)
+}
+
+/// Parse a literal value.
+pub fn parse_value(src: &str) -> Result<Value, String> {
+    let toks = tokenize(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    p.literal_value()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_fig1_program() {
+        let src = r#"
+            [assume b (bernoulli 0.5)]
+            [assume mu (if b 1 (gamma 1 1))]
+            [assume y (normal mu 0.1)]
+            [observe y 10.0]
+        "#;
+        let prog = parse_program(src).unwrap();
+        assert_eq!(prog.len(), 4);
+        assert!(matches!(&prog[0], Directive::Assume(n, _) if &**n == "b"));
+        assert!(matches!(&prog[3], Directive::Observe(_, Value::Real(x)) if *x == 10.0));
+    }
+
+    #[test]
+    fn parses_lambda_mem_scope() {
+        let src = r#"
+            [assume h (mem (lambda (t) (if (<= t 0) 0 (normal (* 0.9 (h (- t 1))) 0.1))))]
+            [assume w (scope_include 'w 0 (normal 0 1))]
+        "#;
+        let prog = parse_program(src).unwrap();
+        assert_eq!(prog.len(), 2);
+        match &prog[0] {
+            Directive::Assume(_, e) => assert!(matches!(&**e, Expr::Mem(_))),
+            _ => panic!(),
+        }
+        match &prog[1] {
+            Directive::Assume(_, e) => assert!(matches!(&**e, Expr::ScopeInclude(..))),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_vector_observe() {
+        let prog = parse_program("[observe (f 1) (vector 1.0 2 -3.5)]").unwrap();
+        match &prog[0] {
+            Directive::Observe(_, Value::Vector(v)) => {
+                assert_eq!(***v, vec![1.0, 2.0, -3.5])
+            }
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_program("[assume]").is_err());
+        assert!(parse_program("(not-a-directive)").is_err());
+        assert!(parse_expr("(unclosed").is_err());
+        assert!(parse_expr("()").is_err());
+    }
+
+    #[test]
+    fn parses_let_and_quote() {
+        let e = parse_expr("(let ((a 1) (b (f a))) (+ a b))").unwrap();
+        assert!(matches!(&*e, Expr::Let(binds, _) if binds.len() == 2));
+        let q = parse_expr("(quote foo)").unwrap();
+        assert!(matches!(&*q, Expr::Const(Value::Sym(s)) if &**s == "foo"));
+    }
+}

@@ -1,0 +1,344 @@
+//! Deterministic builtin primitives.
+//!
+//! These are the `E_s`-only computations of the PET: pure functions of
+//! their argument values.  `apply` must be deterministic and total over
+//! the values the type checks admit — any failure is a program error
+//! surfaced as `Err`.
+
+use crate::ppl::value::Value;
+use std::rc::Rc;
+
+/// Identifier of a deterministic primitive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Prim {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Neg,
+    Exp,
+    Log,
+    Sqrt,
+    Pow,
+    Abs,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Not,
+    And,
+    Or,
+    Min,
+    Max,
+    /// sigmoid(dot(w, x)) — the logistic link of the paper's programs.
+    LinearLogistic,
+    /// dot(w, x)
+    Dot,
+    /// (vector x1 ... xn)
+    MakeVector,
+    /// (list v1 ... vn)
+    MakeList,
+    VecGet,
+    VecLen,
+    Sigmoid,
+    IntegerAdd1,
+}
+
+fn f(v: &Value, prim: Prim) -> Result<f64, String> {
+    v.as_f64()
+        .ok_or_else(|| format!("{prim:?}: expected number, got {}", v.type_name()))
+}
+
+fn need(args: &[Value], n: usize, prim: Prim) -> Result<(), String> {
+    if args.len() != n {
+        Err(format!("{prim:?}: expected {n} args, got {}", args.len()))
+    } else {
+        Ok(())
+    }
+}
+
+impl Prim {
+    /// Resolve a surface-syntax name to a primitive.
+    pub fn from_name(name: &str) -> Option<Prim> {
+        Some(match name {
+            "+" | "add" => Prim::Add,
+            "-" | "sub" => Prim::Sub,
+            "*" | "mul" => Prim::Mul,
+            "/" | "div" => Prim::Div,
+            "neg" => Prim::Neg,
+            "exp" => Prim::Exp,
+            "log" => Prim::Log,
+            "sqrt" => Prim::Sqrt,
+            "pow" => Prim::Pow,
+            "abs" => Prim::Abs,
+            "<" | "lt" => Prim::Lt,
+            "<=" | "lte" => Prim::Le,
+            ">" | "gt" => Prim::Gt,
+            ">=" | "gte" => Prim::Ge,
+            "=" | "eq" => Prim::Eq,
+            "not" => Prim::Not,
+            "and" => Prim::And,
+            "or" => Prim::Or,
+            "min" => Prim::Min,
+            "max" => Prim::Max,
+            "linear_logistic" => Prim::LinearLogistic,
+            "dot" => Prim::Dot,
+            "vector" | "array" => Prim::MakeVector,
+            "list" => Prim::MakeList,
+            "lookup" | "vec_get" => Prim::VecGet,
+            "size" | "vec_len" => Prim::VecLen,
+            "sigmoid" => Prim::Sigmoid,
+            "add1" => Prim::IntegerAdd1,
+            _ => return None,
+        })
+    }
+
+    /// Apply the primitive to argument values.
+    pub fn apply(self, args: &[Value]) -> Result<Value, String> {
+        use Prim::*;
+        match self {
+            Add | Mul | Min | Max => {
+                if args.is_empty() {
+                    return Err(format!("{self:?}: needs >=1 arg"));
+                }
+                // preserve int-ness when all args are ints and op is exact
+                if matches!(self, Add | Mul)
+                    && args.iter().all(|a| matches!(a, Value::Int(_)))
+                {
+                    let ints: Vec<i64> = args.iter().map(|a| a.as_int().unwrap()).collect();
+                    let v = match self {
+                        Add => ints.iter().sum::<i64>(),
+                        Mul => ints.iter().product::<i64>(),
+                        _ => unreachable!(),
+                    };
+                    return Ok(Value::Int(v));
+                }
+                let mut acc = f(&args[0], self)?;
+                for a in &args[1..] {
+                    let x = f(a, self)?;
+                    acc = match self {
+                        Add => acc + x,
+                        Mul => acc * x,
+                        Min => acc.min(x),
+                        Max => acc.max(x),
+                        _ => unreachable!(),
+                    };
+                }
+                Ok(Value::Real(acc))
+            }
+            Sub => {
+                need(args, 2, self).or_else(|_| need(args, 1, self))?;
+                if args.len() == 1 {
+                    return match &args[0] {
+                        Value::Int(i) => Ok(Value::Int(-i)),
+                        v => Ok(Value::Real(-f(v, self)?)),
+                    };
+                }
+                if let (Value::Int(a), Value::Int(b)) = (&args[0], &args[1]) {
+                    return Ok(Value::Int(a - b));
+                }
+                Ok(Value::Real(f(&args[0], self)? - f(&args[1], self)?))
+            }
+            Div => {
+                need(args, 2, self)?;
+                Ok(Value::Real(f(&args[0], self)? / f(&args[1], self)?))
+            }
+            Neg => {
+                need(args, 1, self)?;
+                match &args[0] {
+                    Value::Int(i) => Ok(Value::Int(-i)),
+                    v => Ok(Value::Real(-f(v, self)?)),
+                }
+            }
+            Exp => {
+                need(args, 1, self)?;
+                Ok(Value::Real(f(&args[0], self)?.exp()))
+            }
+            Log => {
+                need(args, 1, self)?;
+                Ok(Value::Real(f(&args[0], self)?.ln()))
+            }
+            Sqrt => {
+                need(args, 1, self)?;
+                Ok(Value::Real(f(&args[0], self)?.sqrt()))
+            }
+            Abs => {
+                need(args, 1, self)?;
+                Ok(Value::Real(f(&args[0], self)?.abs()))
+            }
+            Pow => {
+                need(args, 2, self)?;
+                Ok(Value::Real(f(&args[0], self)?.powf(f(&args[1], self)?)))
+            }
+            Lt | Le | Gt | Ge => {
+                need(args, 2, self)?;
+                let (a, b) = (f(&args[0], self)?, f(&args[1], self)?);
+                Ok(Value::Bool(match self {
+                    Lt => a < b,
+                    Le => a <= b,
+                    Gt => a > b,
+                    Ge => a >= b,
+                    _ => unreachable!(),
+                }))
+            }
+            Eq => {
+                need(args, 2, self)?;
+                Ok(Value::Bool(args[0].key_eq(&args[1])))
+            }
+            Not => {
+                need(args, 1, self)?;
+                let b = args[0]
+                    .as_bool()
+                    .ok_or_else(|| format!("not: expected bool, got {}", args[0].type_name()))?;
+                Ok(Value::Bool(!b))
+            }
+            And | Or => {
+                let mut acc = matches!(self, And);
+                for a in args {
+                    let b = a
+                        .as_bool()
+                        .ok_or_else(|| format!("{self:?}: expected bool"))?;
+                    acc = if matches!(self, And) { acc && b } else { acc || b };
+                }
+                Ok(Value::Bool(acc))
+            }
+            LinearLogistic | Dot => {
+                need(args, 2, self)?;
+                let w = args[0]
+                    .as_vector()
+                    .ok_or_else(|| format!("{self:?}: arg0 must be vector"))?;
+                let x = args[1]
+                    .as_vector()
+                    .ok_or_else(|| format!("{self:?}: arg1 must be vector"))?;
+                if w.len() != x.len() {
+                    return Err(format!("{self:?}: length mismatch {} vs {}", w.len(), x.len()));
+                }
+                let d: f64 = w.iter().zip(x.iter()).map(|(a, b)| a * b).sum();
+                Ok(Value::Real(if matches!(self, Dot) {
+                    d
+                } else {
+                    1.0 / (1.0 + (-d).exp())
+                }))
+            }
+            Sigmoid => {
+                need(args, 1, self)?;
+                let z = f(&args[0], self)?;
+                Ok(Value::Real(1.0 / (1.0 + (-z).exp())))
+            }
+            MakeVector => {
+                let xs: Result<Vec<f64>, String> = args
+                    .iter()
+                    .map(|a| a.as_f64().ok_or_else(|| "vector: non-numeric".to_string()))
+                    .collect();
+                Ok(Value::Vector(Rc::new(xs?)))
+            }
+            MakeList => Ok(Value::List(Rc::new(args.to_vec()))),
+            VecGet => {
+                need(args, 2, self)?;
+                let i = args[1]
+                    .as_int()
+                    .ok_or_else(|| "lookup: index must be int".to_string())?
+                    as usize;
+                match &args[0] {
+                    Value::Vector(v) => v
+                        .get(i)
+                        .map(|&x| Value::Real(x))
+                        .ok_or_else(|| format!("lookup: index {i} out of bounds {}", v.len())),
+                    Value::List(l) => l
+                        .get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("lookup: index {i} out of bounds {}", l.len())),
+                    v => Err(format!("lookup: expected vector/list, got {}", v.type_name())),
+                }
+            }
+            VecLen => {
+                need(args, 1, self)?;
+                match &args[0] {
+                    Value::Vector(v) => Ok(Value::Int(v.len() as i64)),
+                    Value::List(l) => Ok(Value::Int(l.len() as i64)),
+                    v => Err(format!("size: expected vector/list, got {}", v.type_name())),
+                }
+            }
+            IntegerAdd1 => {
+                need(args, 1, self)?;
+                Ok(Value::Int(
+                    args[0].as_int().ok_or_else(|| "add1: expected int".to_string())? + 1,
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_and_int_preservation() {
+        assert!(matches!(
+            Prim::Add.apply(&[Value::Int(1), Value::Int(2)]).unwrap(),
+            Value::Int(3)
+        ));
+        assert!(matches!(
+            Prim::Add.apply(&[Value::Int(1), Value::Real(2.5)]).unwrap(),
+            Value::Real(x) if x == 3.5
+        ));
+        assert!(matches!(
+            Prim::Sub.apply(&[Value::Int(5), Value::Int(7)]).unwrap(),
+            Value::Int(-2)
+        ));
+        assert!(matches!(
+            Prim::Mul.apply(&[Value::Real(3.0), Value::Real(4.0)]).unwrap(),
+            Value::Real(x) if x == 12.0
+        ));
+    }
+
+    #[test]
+    fn linear_logistic_matches_formula() {
+        let w = Value::vector(vec![1.0, -2.0]);
+        let x = Value::vector(vec![0.5, 0.25]);
+        let got = Prim::LinearLogistic.apply(&[w.clone(), x.clone()]).unwrap();
+        let dot = 1.0 * 0.5 + (-2.0) * 0.25;
+        let want = 1.0 / (1.0 + (-dot as f64).exp());
+        assert!(matches!(got, Value::Real(p) if (p - want).abs() < 1e-15));
+        let d = Prim::Dot.apply(&[w, x]).unwrap();
+        assert!(matches!(d, Value::Real(v) if (v - dot).abs() < 1e-15));
+    }
+
+    #[test]
+    fn comparisons_and_logic() {
+        assert!(matches!(
+            Prim::Le.apply(&[Value::Int(0), Value::Int(0)]).unwrap(),
+            Value::Bool(true)
+        ));
+        assert!(matches!(
+            Prim::Not.apply(&[Value::Bool(true)]).unwrap(),
+            Value::Bool(false)
+        ));
+        assert!(Prim::Not.apply(&[Value::Int(1)]).is_err());
+    }
+
+    #[test]
+    fn vector_ops() {
+        let v = Prim::MakeVector
+            .apply(&[Value::Int(1), Value::Real(2.5)])
+            .unwrap();
+        assert!(matches!(&v, Value::Vector(xs) if ***xs == vec![1.0, 2.5]));
+        let got = Prim::VecGet.apply(&[v.clone(), Value::Int(1)]).unwrap();
+        assert!(matches!(got, Value::Real(x) if x == 2.5));
+        assert!(Prim::VecGet.apply(&[v.clone(), Value::Int(9)]).is_err());
+        assert!(matches!(
+            Prim::VecLen.apply(&[v]).unwrap(),
+            Value::Int(2)
+        ));
+    }
+
+    #[test]
+    fn name_resolution() {
+        assert_eq!(Prim::from_name("+"), Some(Prim::Add));
+        assert_eq!(Prim::from_name("<="), Some(Prim::Le));
+        assert_eq!(Prim::from_name("linear_logistic"), Some(Prim::LinearLogistic));
+        assert_eq!(Prim::from_name("bernoulli"), None); // SPs are not prims
+    }
+}

@@ -1,0 +1,361 @@
+//! Stochastic procedures.
+//!
+//! Two flavors:
+//! * **Families** — stateless SPs applied directly to argument values
+//!   (`bernoulli`, `normal`, ...). Scoring is a pure function of
+//!   (value, args).
+//! * **Instances** — stateful SPs created by makers (`make_crp`,
+//!   `make_collapsed_multivariate_normal`). Their applications are
+//!   exchangeably coupled through an aux (sufficient statistics); the
+//!   incorporate/unincorporate discipline is what gives the PET O(1)
+//!   updates for these families (paper §1).
+
+use crate::dist;
+use crate::dist::{CollapsedNiw, CrpAux, MvNormal};
+use crate::math::Pcg64;
+use crate::ppl::value::Value;
+use std::rc::Rc;
+
+/// Stateless SP families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpFamily {
+    Bernoulli,
+    Normal,
+    Gamma,
+    InvGamma,
+    Beta,
+    UniformContinuous,
+    MvNormal,
+    StudentT,
+}
+
+/// Maker families (applications create SP instances).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MakerFamily {
+    Crp,
+    CollapsedMvn,
+}
+
+pub fn family_from_name(name: &str) -> Option<SpFamily> {
+    Some(match name {
+        "bernoulli" | "flip" => SpFamily::Bernoulli,
+        "normal" => SpFamily::Normal,
+        "gamma" => SpFamily::Gamma,
+        "inv_gamma" => SpFamily::InvGamma,
+        "beta" => SpFamily::Beta,
+        "uniform_continuous" | "uniform" => SpFamily::UniformContinuous,
+        "multivariate_normal" => SpFamily::MvNormal,
+        "student_t" => SpFamily::StudentT,
+        _ => return None,
+    })
+}
+
+pub fn maker_from_name(name: &str) -> Option<MakerFamily> {
+    Some(match name {
+        "make_crp" => MakerFamily::Crp,
+        "make_collapsed_multivariate_normal" => MakerFamily::CollapsedMvn,
+        _ => return None,
+    })
+}
+
+fn num(args: &[Value], i: usize) -> f64 {
+    args[i].as_f64().unwrap_or(f64::NAN)
+}
+
+impl SpFamily {
+    /// Log density/mass of `value` given `args`.
+    pub fn logpdf(self, value: &Value, args: &[Value]) -> f64 {
+        match self {
+            SpFamily::Bernoulli => match value.as_bool() {
+                Some(b) => {
+                    let p = if args.is_empty() { 0.5 } else { num(args, 0) };
+                    dist::bernoulli_logpmf(b, p)
+                }
+                None => f64::NEG_INFINITY,
+            },
+            SpFamily::Normal => match value.as_f64() {
+                Some(x) => dist::normal_logpdf(x, num(args, 0), num(args, 1)),
+                None => f64::NEG_INFINITY,
+            },
+            SpFamily::Gamma => match value.as_f64() {
+                Some(x) => dist::gamma_logpdf(x, num(args, 0), num(args, 1)),
+                None => f64::NEG_INFINITY,
+            },
+            SpFamily::InvGamma => match value.as_f64() {
+                Some(x) => dist::inv_gamma_logpdf(x, num(args, 0), num(args, 1)),
+                None => f64::NEG_INFINITY,
+            },
+            SpFamily::Beta => match value.as_f64() {
+                Some(x) => dist::beta_logpdf(x, num(args, 0), num(args, 1)),
+                None => f64::NEG_INFINITY,
+            },
+            SpFamily::UniformContinuous => match value.as_f64() {
+                Some(x) => dist::uniform_logpdf(x, num(args, 0), num(args, 1)),
+                None => f64::NEG_INFINITY,
+            },
+            SpFamily::StudentT => match value.as_f64() {
+                Some(x) => dist::student_t_logpdf(x, num(args, 0), num(args, 1), num(args, 2)),
+                None => f64::NEG_INFINITY,
+            },
+            SpFamily::MvNormal => match value.as_vector() {
+                Some(x) => match Self::mvn_from_args(args) {
+                    Some(mvn) => mvn.logpdf(x),
+                    None => f64::NEG_INFINITY,
+                },
+                None => f64::NEG_INFINITY,
+            },
+        }
+    }
+
+    /// Draw a value given args.
+    pub fn sample(self, rng: &mut Pcg64, args: &[Value]) -> Result<Value, String> {
+        use dist::Samplers;
+        Ok(match self {
+            SpFamily::Bernoulli => {
+                let p = if args.is_empty() { 0.5 } else { num(args, 0) };
+                Value::Bool(Samplers::bernoulli(rng, p))
+            }
+            SpFamily::Normal => Value::Real(Samplers::normal(rng, num(args, 0), num(args, 1))),
+            SpFamily::Gamma => Value::Real(Samplers::gamma(rng, num(args, 0), num(args, 1))),
+            SpFamily::InvGamma => {
+                Value::Real(Samplers::inv_gamma(rng, num(args, 0), num(args, 1)))
+            }
+            SpFamily::Beta => Value::Real(Samplers::beta(rng, num(args, 0), num(args, 1))),
+            SpFamily::UniformContinuous => {
+                Value::Real(Samplers::uniform(rng, num(args, 0), num(args, 1)))
+            }
+            SpFamily::StudentT => Value::Real(Samplers::student_t(
+                rng,
+                num(args, 0),
+                num(args, 1),
+                num(args, 2),
+            )),
+            SpFamily::MvNormal => {
+                let mvn = Self::mvn_from_args(args)
+                    .ok_or_else(|| "multivariate_normal: bad args".to_string())?;
+                Value::Vector(Rc::new(mvn.sample(rng)))
+            }
+        })
+    }
+
+    /// (multivariate_normal mean sig): sig may be a scalar (isotropic
+    /// variance), a vector (diagonal variances), or a matrix (full cov).
+    fn mvn_from_args(args: &[Value]) -> Option<MvNormal> {
+        let mean = args.first()?.as_vector()?.as_ref().clone();
+        match args.get(1)? {
+            Value::Real(_) | Value::Int(_) => Some(MvNormal::isotropic(mean, args[1].as_f64()?)),
+            Value::Vector(v) => Some(MvNormal::diagonal(mean, v.as_ref().clone())),
+            Value::Matrix(m) => MvNormal::full(mean, m),
+            _ => None,
+        }
+    }
+}
+
+/// State of an SP instance (in the trace's SP table).
+#[derive(Clone, Debug)]
+pub enum SpState {
+    Crp { alpha: f64, aux: CrpAux },
+    CollapsedMvn { niw: CollapsedNiw },
+}
+
+impl SpState {
+    /// Create instance state from maker args.
+    pub fn make(family: MakerFamily, args: &[Value]) -> Result<SpState, String> {
+        match family {
+            MakerFamily::Crp => {
+                let alpha = args
+                    .first()
+                    .and_then(|v| v.as_f64())
+                    .ok_or("make_crp: alpha must be numeric")?;
+                if alpha <= 0.0 {
+                    return Err(format!("make_crp: alpha must be > 0, got {alpha}"));
+                }
+                Ok(SpState::Crp {
+                    alpha,
+                    aux: CrpAux::new(),
+                })
+            }
+            MakerFamily::CollapsedMvn => {
+                let m0 = args
+                    .first()
+                    .and_then(|v| v.as_vector())
+                    .ok_or("make_collapsed_multivariate_normal: m0 must be vector")?
+                    .as_ref()
+                    .clone();
+                let k0 = args.get(1).and_then(|v| v.as_f64()).ok_or("bad k0")?;
+                let v0 = args.get(2).and_then(|v| v.as_f64()).ok_or("bad v0")?;
+                let s0 = match args.get(3) {
+                    Some(Value::Matrix(m)) => m.as_ref().clone(),
+                    Some(v) if v.as_f64().is_some() => {
+                        // scalar -> s * I
+                        let s = v.as_f64().unwrap();
+                        let d = m0.len();
+                        (0..d)
+                            .map(|i| (0..d).map(|j| if i == j { s } else { 0.0 }).collect())
+                            .collect()
+                    }
+                    _ => return Err("bad S0".into()),
+                };
+                Ok(SpState::CollapsedMvn {
+                    niw: CollapsedNiw::new(m0, k0, v0, s0),
+                })
+            }
+        }
+    }
+
+    /// Re-make parameters in place after a maker-argument change, keeping
+    /// the aux (sufficient statistics) intact.
+    pub fn update_params(&mut self, family: MakerFamily, args: &[Value]) -> Result<(), String> {
+        match (self, family) {
+            (SpState::Crp { alpha, .. }, MakerFamily::Crp) => {
+                let new_alpha = args
+                    .first()
+                    .and_then(|v| v.as_f64())
+                    .ok_or("make_crp: alpha must be numeric")?;
+                *alpha = new_alpha;
+                Ok(())
+            }
+            (SpState::CollapsedMvn { .. }, MakerFamily::CollapsedMvn) => {
+                // Hyperparameter inference for NIW is not exercised by the
+                // paper's programs; rebuilding stats-preserving state would
+                // go here.
+                Err("collapsed MVN hyperparameter updates not supported".into())
+            }
+            _ => Err("maker family mismatch".into()),
+        }
+    }
+
+    /// Predictive log density of `value` given current aux (value itself
+    /// must NOT be incorporated).
+    pub fn logpdf(&self, value: &Value, _args: &[Value]) -> f64 {
+        match self {
+            SpState::Crp { alpha, aux } => match value.as_int() {
+                Some(t) => {
+                    if *alpha <= 0.0 {
+                        return f64::NEG_INFINITY;
+                    }
+                    aux.predictive_logp(t, *alpha)
+                }
+                None => f64::NEG_INFINITY,
+            },
+            SpState::CollapsedMvn { niw } => match value.as_vector() {
+                Some(x) => niw.predictive_logpdf(x),
+                None => f64::NEG_INFINITY,
+            },
+        }
+    }
+
+    /// Sample from the predictive.
+    pub fn sample(&self, rng: &mut Pcg64, _args: &[Value]) -> Result<Value, String> {
+        Ok(match self {
+            SpState::Crp { alpha, aux } => Value::Int(aux.sample(rng, *alpha)),
+            SpState::CollapsedMvn { niw } => Value::Vector(Rc::new(niw.predictive_sample(rng))),
+        })
+    }
+
+    /// Add `value` to the sufficient statistics.
+    pub fn incorporate(&mut self, value: &Value) {
+        match self {
+            SpState::Crp { aux, .. } => aux.incorporate(value.as_int().expect("crp value")),
+            SpState::CollapsedMvn { niw } => {
+                niw.incorporate(value.as_vector().expect("mvn value"))
+            }
+        }
+    }
+
+    /// Remove `value` from the sufficient statistics.
+    pub fn unincorporate(&mut self, value: &Value) {
+        match self {
+            SpState::Crp { aux, .. } => aux.unincorporate(value.as_int().expect("crp value")),
+            SpState::CollapsedMvn { niw } => {
+                niw.unincorporate(value.as_vector().expect("mvn value"))
+            }
+        }
+    }
+
+    /// Joint log density of everything currently incorporated — the AAA
+    /// (absorbing-at-applications) score used when the *maker's* params
+    /// change (e.g. MH on the CRP concentration alpha).
+    pub fn logdensity_of_counts(&self) -> f64 {
+        match self {
+            SpState::Crp { alpha, aux } => aux.seating_logp(*alpha),
+            SpState::CollapsedMvn { niw } => niw.marginal_loglik(),
+        }
+    }
+
+    pub fn crp_aux(&self) -> Option<&CrpAux> {
+        match self {
+            SpState::Crp { aux, .. } => Some(aux),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_logpdfs_dispatch() {
+        let lp = SpFamily::Normal.logpdf(&Value::Real(0.0), &[Value::Real(0.0), Value::Real(1.0)]);
+        assert!((lp - dist::normal_logpdf(0.0, 0.0, 1.0)).abs() < 1e-14);
+        let lp = SpFamily::Bernoulli.logpdf(&Value::Bool(true), &[Value::Real(0.25)]);
+        assert!((lp - 0.25f64.ln()).abs() < 1e-14);
+        // type mismatch scores -inf
+        assert_eq!(
+            SpFamily::Bernoulli.logpdf(&Value::Real(1.0), &[Value::Real(0.5)]),
+            f64::NEG_INFINITY
+        );
+    }
+
+    #[test]
+    fn mvn_scalar_vector_matrix_args() {
+        let mean = Value::vector(vec![0.0, 0.0]);
+        let x = Value::vector(vec![0.5, -0.5]);
+        let iso = SpFamily::MvNormal.logpdf(&x, &[mean.clone(), Value::Real(2.0)]);
+        let diag = SpFamily::MvNormal.logpdf(&x, &[mean.clone(), Value::vector(vec![2.0, 2.0])]);
+        let full = SpFamily::MvNormal.logpdf(
+            &x,
+            &[
+                mean,
+                Value::Matrix(Rc::new(vec![vec![2.0, 0.0], vec![0.0, 2.0]])),
+            ],
+        );
+        assert!((iso - diag).abs() < 1e-12);
+        assert!((iso - full).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crp_instance_roundtrip() {
+        let mut sp = SpState::make(MakerFamily::Crp, &[Value::Real(1.0)]).unwrap();
+        let v0 = Value::Int(0);
+        let lp_first = sp.logpdf(&v0, &[]);
+        assert!((lp_first - 0.0f64).abs() < 1e-12); // first customer: p=alpha/alpha=1... log 1 = 0
+        sp.incorporate(&v0);
+        sp.incorporate(&v0);
+        let lp = sp.logpdf(&v0, &[]);
+        assert!((lp - (2.0f64 / 3.0).ln()).abs() < 1e-12);
+        sp.unincorporate(&v0);
+        sp.unincorporate(&v0);
+        assert_eq!(sp.crp_aux().unwrap().n(), 0);
+    }
+
+    #[test]
+    fn maker_rejects_bad_args() {
+        assert!(SpState::make(MakerFamily::Crp, &[Value::Real(-1.0)]).is_err());
+        assert!(SpState::make(MakerFamily::Crp, &[Value::sym("x")]).is_err());
+        assert!(SpState::make(MakerFamily::CollapsedMvn, &[Value::Real(1.0)]).is_err());
+    }
+
+    #[test]
+    fn crp_alpha_update_keeps_counts() {
+        let mut sp = SpState::make(MakerFamily::Crp, &[Value::Real(1.0)]).unwrap();
+        sp.incorporate(&Value::Int(0));
+        sp.incorporate(&Value::Int(1));
+        let before = sp.logdensity_of_counts();
+        sp.update_params(MakerFamily::Crp, &[Value::Real(2.0)]).unwrap();
+        let after = sp.logdensity_of_counts();
+        assert!(before != after);
+        assert_eq!(sp.crp_aux().unwrap().n(), 2);
+    }
+}

@@ -1,0 +1,279 @@
+//! Runtime values of the modeling language.
+//!
+//! Values are cheap to clone (heavyweight payloads behind `Rc`) because
+//! the trace stores one per node and the regen machinery snapshots them
+//! into the OmegaDB for rollback.
+
+use crate::ppl::ast::Expr;
+use crate::ppl::env::EnvRef;
+use crate::ppl::prim::Prim;
+use crate::ppl::sp::SpFamily;
+use std::rc::Rc;
+
+/// Identifier of a stateful SP instance living in the trace's SP table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SpId(pub u32);
+
+/// Identifier of a memoized procedure living in the trace's mem table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MemId(pub u32);
+
+/// A lambda closure: parameter list + body + captured environment.
+#[derive(Debug)]
+pub struct Closure {
+    pub params: Vec<Rc<str>>,
+    pub body: Rc<Expr>,
+    pub env: EnvRef,
+}
+
+/// A runtime value.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Bool(bool),
+    Int(i64),
+    Real(f64),
+    Sym(Rc<str>),
+    /// Dense numeric vector (feature rows, weight vectors, ...).
+    Vector(Rc<Vec<f64>>),
+    /// Dense numeric matrix, row major.
+    Matrix(Rc<Vec<Vec<f64>>>),
+    /// Heterogeneous list.
+    List(Rc<Vec<Value>>),
+    Closure(Rc<Closure>),
+    /// Builtin deterministic primitive.
+    Prim(Prim),
+    /// Stateless stochastic-procedure family (`bernoulli`, `normal`, ...).
+    SpFam(SpFamily),
+    /// Maker family (`make_crp`, ...): applications create SP instances.
+    MakerFam(crate::ppl::sp::MakerFamily),
+    /// Stateful SP instance created by a maker (`make_crp`, ...).
+    Sp(SpId),
+    /// Memoized procedure created by `mem`.
+    Mem(MemId),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Bool(_) => "bool",
+            Value::Int(_) => "int",
+            Value::Real(_) => "real",
+            Value::Sym(_) => "symbol",
+            Value::Vector(_) => "vector",
+            Value::Matrix(_) => "matrix",
+            Value::List(_) => "list",
+            Value::Closure(_) => "closure",
+            Value::Prim(_) => "primitive",
+            Value::SpFam(_) => "sp-family",
+            Value::MakerFam(_) => "maker",
+            Value::Sp(_) => "sp",
+            Value::Mem(_) => "mem-proc",
+        }
+    }
+
+    /// Numeric coercion: ints and reals both read as f64.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Real(x) => Some(*x),
+            Value::Int(i) => Some(*i as f64),
+            Value::Bool(b) => Some(if *b { 1.0 } else { 0.0 }),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Real(x) if x.fract() == 0.0 => Some(*x as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_vector(&self) -> Option<&Rc<Vec<f64>>> {
+        match self {
+            Value::Vector(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_matrix(&self) -> Option<&Rc<Vec<Vec<f64>>>> {
+        match self {
+            Value::Matrix(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn real(x: f64) -> Value {
+        Value::Real(x)
+    }
+
+    pub fn vector(xs: Vec<f64>) -> Value {
+        Value::Vector(Rc::new(xs))
+    }
+
+    pub fn sym(s: &str) -> Value {
+        Value::Sym(Rc::from(s))
+    }
+
+    /// Structural equality usable as a mem-cache / scope-block key.
+    /// Reals compare by bit pattern (exact), which is what key semantics
+    /// require: a key is equal iff it round-trips identically.
+    pub fn key_eq(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::Bool(a), Value::Bool(b)) => a == b,
+            (Value::Int(a), Value::Int(b)) => a == b,
+            (Value::Real(a), Value::Real(b)) => a.to_bits() == b.to_bits(),
+            (Value::Int(a), Value::Real(b)) | (Value::Real(b), Value::Int(a)) => {
+                b.fract() == 0.0 && *a == *b as i64
+            }
+            (Value::Sym(a), Value::Sym(b)) => a == b,
+            (Value::Vector(a), Value::Vector(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            (Value::List(a), Value::List(b)) => {
+                a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.key_eq(y))
+            }
+            (Value::Sp(a), Value::Sp(b)) => a == b,
+            (Value::Mem(a), Value::Mem(b)) => a == b,
+            _ => false,
+        }
+    }
+
+    fn key_hash_into(&self, h: &mut impl std::hash::Hasher) {
+        use std::hash::Hash;
+        match self {
+            Value::Bool(b) => {
+                0u8.hash(h);
+                b.hash(h);
+            }
+            Value::Int(i) => {
+                1u8.hash(h);
+                (*i as f64).to_bits().hash(h);
+            }
+            Value::Real(x) => {
+                1u8.hash(h); // same tag as Int so 1 and 1.0 collide (key_eq allows)
+                x.to_bits().hash(h);
+            }
+            Value::Sym(s) => {
+                2u8.hash(h);
+                s.hash(h);
+            }
+            Value::Vector(v) => {
+                3u8.hash(h);
+                for x in v.iter() {
+                    x.to_bits().hash(h);
+                }
+            }
+            Value::List(l) => {
+                4u8.hash(h);
+                for v in l.iter() {
+                    v.key_hash_into(h);
+                }
+            }
+            Value::Sp(id) => {
+                5u8.hash(h);
+                id.0.hash(h);
+            }
+            Value::Mem(id) => {
+                6u8.hash(h);
+                id.0.hash(h);
+            }
+            other => panic!("value of type {} cannot be a key", other.type_name()),
+        }
+    }
+}
+
+/// A vector of values usable as a hash-map key (mem cache, scope blocks).
+#[derive(Clone, Debug)]
+pub struct KeyVec(pub Vec<Value>);
+
+impl PartialEq for KeyVec {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.len() == other.0.len()
+            && self.0.iter().zip(&other.0).all(|(a, b)| a.key_eq(b))
+    }
+}
+impl Eq for KeyVec {}
+
+impl std::hash::Hash for KeyVec {
+    fn hash<H: std::hash::Hasher>(&self, h: &mut H) {
+        for v in &self.0 {
+            v.key_hash_into(h);
+        }
+    }
+}
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Real(x) => write!(f, "{x}"),
+            Value::Sym(s) => write!(f, "'{s}"),
+            Value::Vector(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, " ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+            Value::Matrix(m) => write!(f, "<matrix {}x{}>", m.len(), m.first().map_or(0, |r| r.len())),
+            Value::List(l) => {
+                write!(f, "(")?;
+                for (i, v) in l.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, " ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, ")")
+            }
+            Value::Closure(_) => write!(f, "<closure>"),
+            Value::Prim(p) => write!(f, "<prim {p:?}>"),
+            Value::SpFam(s) => write!(f, "<sp {s:?}>"),
+            Value::MakerFam(m) => write!(f, "<maker {m:?}>"),
+            Value::Sp(id) => write!(f, "<sp-instance {}>", id.0),
+            Value::Mem(id) => write!(f, "<mem {}>", id.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn key_eq_int_real_cross() {
+        assert!(Value::Int(3).key_eq(&Value::Real(3.0)));
+        assert!(!Value::Int(3).key_eq(&Value::Real(3.5)));
+    }
+
+    #[test]
+    fn keyvec_hashmap_roundtrip() {
+        let mut m: HashMap<KeyVec, i32> = HashMap::new();
+        m.insert(KeyVec(vec![Value::Int(1), Value::sym("a")]), 10);
+        m.insert(KeyVec(vec![Value::Int(2)]), 20);
+        assert_eq!(m[&KeyVec(vec![Value::Real(1.0), Value::sym("a")])], 10);
+        assert_eq!(m[&KeyVec(vec![Value::Int(2)])], 20);
+        assert!(!m.contains_key(&KeyVec(vec![Value::Int(3)])));
+    }
+
+    #[test]
+    fn as_f64_coercions() {
+        assert_eq!(Value::Int(2).as_f64(), Some(2.0));
+        assert_eq!(Value::Bool(true).as_f64(), Some(1.0));
+        assert_eq!(Value::sym("x").as_f64(), None);
+    }
+}

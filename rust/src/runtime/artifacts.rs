@@ -1,0 +1,192 @@
+//! Artifact registry: indexes the AOT manifest and lazily compiles the
+//! right (kind, batch-size, dim) variant on demand.
+//!
+//! Artifacts are shape-monomorphic, so the registry keeps a ladder of
+//! mini-batch sizes per kind and picks the smallest variant that fits a
+//! request, padding the remainder with mask = 0 rows.
+
+use crate::runtime::client::{Executable, XlaRuntime};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// One row of the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: String,
+    pub path: String,
+    pub m: usize,
+    pub d: usize,
+}
+
+/// The registry: manifest + lazily compiled executables.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    runtime: XlaRuntime,
+    infos: Vec<ArtifactInfo>,
+    compiled: HashMap<String, Rc<Executable>>,
+}
+
+/// Parse the TSV manifest (written by python/compile/aot.py alongside
+/// the JSON twin; TSV keeps the Rust side dependency-free).
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactInfo>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 5 {
+            return Err(format!(
+                "manifest line {}: expected 5 columns, got {}",
+                lineno + 1,
+                cols.len()
+            ));
+        }
+        out.push(ArtifactInfo {
+            name: cols[0].to_string(),
+            kind: cols[1].to_string(),
+            path: cols[2].to_string(),
+            m: cols[3].parse().map_err(|e| format!("bad m: {e}"))?,
+            d: cols[4].parse().map_err(|e| format!("bad d: {e}"))?,
+        });
+    }
+    Ok(out)
+}
+
+impl ArtifactRegistry {
+    /// Open a registry over an artifacts directory.
+    pub fn open(dir: &Path) -> Result<ArtifactRegistry, String> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.tsv"))
+            .map_err(|e| format!("read manifest.tsv in {dir:?}: {e}"))?;
+        let infos = parse_manifest(&manifest)?;
+        let runtime = XlaRuntime::cpu()?;
+        Ok(ArtifactRegistry {
+            dir: dir.to_path_buf(),
+            runtime,
+            infos,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Default location: `$SUBPPL_ARTIFACTS` or `<repo>/artifacts`.
+    pub fn open_default() -> Result<ArtifactRegistry, String> {
+        let dir = std::env::var("SUBPPL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+        Self::open(&dir)
+    }
+
+    pub fn infos(&self) -> &[ArtifactInfo] {
+        &self.infos
+    }
+
+    /// Smallest variant of `kind` (matching `d` if it has a feature dim)
+    /// whose batch size fits `m_needed`; falls back to the largest.
+    pub fn pick(&self, kind: &str, m_needed: usize, d: usize) -> Option<&ArtifactInfo> {
+        let fits = self
+            .infos
+            .iter()
+            .filter(|a| a.kind == kind && (a.d == d || a.d == 0))
+            .filter(|a| a.m >= m_needed)
+            .min_by_key(|a| a.m);
+        fits.or_else(|| {
+            self.infos
+                .iter()
+                .filter(|a| a.kind == kind && (a.d == d || a.d == 0))
+                .max_by_key(|a| a.m)
+        })
+    }
+
+    /// Compile (or fetch) the executable for an artifact name.
+    pub fn executable(&mut self, name: &str) -> Result<Rc<Executable>, String> {
+        if let Some(e) = self.compiled.get(name) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .infos
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| format!("unknown artifact {name}"))?;
+        let exe = Rc::new(self.runtime.load_hlo_text(&self.dir.join(&info.path))?);
+        self.compiled.insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// pick + compile in one step; returns (info, executable).
+    pub fn pick_executable(
+        &mut self,
+        kind: &str,
+        m_needed: usize,
+        d: usize,
+    ) -> Result<(ArtifactInfo, Rc<Executable>), String> {
+        let info = self
+            .pick(kind, m_needed, d)
+            .ok_or_else(|| format!("no artifact for kind={kind} d={d}"))?
+            .clone();
+        let exe = self.executable(&info.name)?;
+        Ok((info, exe))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_rows() {
+        let text = "# name\tkind\tpath\tm\td\n\
+                    logistic_ratio_m16_d3\tlogistic_ratio\tlogistic_ratio_m16_d3.hlo.txt\t16\t3\n\
+                    gauss_ar1_ratio_m64\tgauss_ar1_ratio\tgauss_ar1_ratio_m64.hlo.txt\t64\t0\n";
+        let infos = parse_manifest(text).unwrap();
+        assert_eq!(infos.len(), 2);
+        assert_eq!(infos[0].m, 16);
+        assert_eq!(infos[1].kind, "gauss_ar1_ratio");
+    }
+
+    #[test]
+    fn rejects_malformed_manifest() {
+        assert!(parse_manifest("a\tb\tc\n").is_err());
+        assert!(parse_manifest("a\tb\tc\tnot_a_number\t0\n").is_err());
+    }
+
+    #[test]
+    fn pick_prefers_smallest_fitting() {
+        let text = "\
+            r16\tlogistic_ratio\tp\t16\t3\n\
+            r128\tlogistic_ratio\tp\t128\t3\n\
+            r1024\tlogistic_ratio\tp\t1024\t3\n";
+        let infos = parse_manifest(text).unwrap();
+        // emulate pick() logic without a runtime
+        let pick = |needed: usize| {
+            infos
+                .iter()
+                .filter(|a| a.m >= needed)
+                .min_by_key(|a| a.m)
+                .or_else(|| infos.iter().max_by_key(|a| a.m))
+                .unwrap()
+                .m
+        };
+        assert_eq!(pick(10), 16);
+        assert_eq!(pick(100), 128);
+        assert_eq!(pick(129), 1024);
+        assert_eq!(pick(5000), 1024); // fall back to largest
+    }
+
+    #[test]
+    fn open_and_compile_if_built() {
+        let Ok(mut reg) = ArtifactRegistry::open_default() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(!reg.infos().is_empty());
+        let (info, exe) = reg.pick_executable("logistic_ratio", 100, 50).unwrap();
+        assert!(info.m >= 100);
+        assert_eq!(info.d, 50);
+        // compile is cached
+        let again = reg.executable(&info.name).unwrap();
+        assert!(Rc::ptr_eq(&exe, &again));
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT client wrapper: loads AOT HLO-text artifacts and executes them.
+//!
+//! The interchange format is HLO *text* (not serialized protos): jax>=0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/README.md).  Entry computations return 1-tuples
+//! (`return_tuple=True`), unwrapped here with `to_tuple1`.
+
+use std::path::Path;
+
+/// A PJRT client (CPU).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled executable with a fixed input signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// An f32 input buffer with a shape.
+pub struct Input<'a> {
+    pub data: &'a [f32],
+    pub shape: &'a [usize],
+}
+
+impl XlaRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<XlaRuntime, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu: {e:?}"))?;
+        Ok(XlaRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable, String> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or("non-utf8 artifact path")?,
+        )
+        .map_err(|e| format!("HLO parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("XLA compile {path:?}: {e:?}"))?;
+        Ok(Executable { exe })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 inputs; returns the flattened f32 output (the
+    /// single tuple element).
+    pub fn run_f32(&self, inputs: &[Input]) -> Result<Vec<f32>, String> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            let lit = xla::Literal::vec1(inp.data);
+            let dims: Vec<i64> = inp.shape.iter().map(|&d| d as i64).collect();
+            let lit = lit
+                .reshape(&dims)
+                .map_err(|e| format!("reshape {:?}: {e:?}", inp.shape))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("to_literal: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| format!("to_tuple1: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| format!("to_vec: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = std::env::var("SUBPPL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+        if dir.join("manifest.tsv").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn loads_and_runs_logistic_ratio() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = XlaRuntime::cpu().unwrap();
+        let exe = rt
+            .load_hlo_text(&dir.join("logistic_ratio_m16_d3.hlo.txt"))
+            .unwrap();
+        let m = 16;
+        let d = 3;
+        let x: Vec<f32> = (0..m * d).map(|i| (i as f32) * 0.01 - 0.2).collect();
+        let t: Vec<f32> = (0..m).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let mask = vec![1.0f32; m];
+        let w_old = vec![0.1f32, -0.2, 0.3];
+        let w_new = vec![0.2f32, 0.1, -0.1];
+        let out = exe
+            .run_f32(&[
+                Input { data: &x, shape: &[m, d] },
+                Input { data: &t, shape: &[m] },
+                Input { data: &mask, shape: &[m] },
+                Input { data: &w_old, shape: &[d] },
+                Input { data: &w_new, shape: &[d] },
+            ])
+            .unwrap();
+        assert_eq!(out.len(), m);
+        // check against the Rust-side formula
+        let logsig = |z: f64| crate::math::special::log_sigmoid(z);
+        for i in 0..m {
+            let xi = &x[i * d..(i + 1) * d];
+            let dot = |w: &[f32]| -> f64 {
+                xi.iter().zip(w).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+            };
+            let want = logsig(t[i] as f64 * dot(&w_new)) - logsig(t[i] as f64 * dot(&w_old));
+            assert!(
+                (out[i] as f64 - want).abs() < 1e-5,
+                "i={i}: {} vs {want}",
+                out[i]
+            );
+        }
+    }
+
+    #[test]
+    fn mask_zeroes_padding() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = XlaRuntime::cpu().unwrap();
+        let exe = rt
+            .load_hlo_text(&dir.join("gauss_ar1_ratio_m16.hlo.txt"))
+            .unwrap();
+        let m = 16;
+        let h_prev: Vec<f32> = (0..m).map(|i| i as f32 * 0.1).collect();
+        let h: Vec<f32> = (0..m).map(|i| i as f32 * 0.05).collect();
+        let mut mask = vec![1.0f32; m];
+        for v in mask.iter_mut().skip(10) {
+            *v = 0.0;
+        }
+        let params = vec![0.95f32, 0.1, 0.5, 0.2];
+        let out = exe
+            .run_f32(&[
+                Input { data: &h_prev, shape: &[m] },
+                Input { data: &h, shape: &[m] },
+                Input { data: &mask, shape: &[m] },
+                Input { data: &params, shape: &[4] },
+            ])
+            .unwrap();
+        for (i, &o) in out.iter().enumerate().skip(10) {
+            assert_eq!(o, 0.0, "padding row {i} leaked: {o}");
+        }
+        assert!(out[1] != 0.0);
+    }
+}

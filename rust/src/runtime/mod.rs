@@ -1,0 +1,10 @@
+//! XLA/PJRT runtime: loads the AOT-compiled L1/L2 artifacts (HLO text
+//! emitted by python/compile/aot.py) and serves batched log-likelihood
+//! evaluations to the Layer-3 hot path.  Python never runs at inference
+//! time: after `make artifacts` the Rust binary is self-contained.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactInfo, ArtifactRegistry};
+pub use client::{Executable, Input, XlaRuntime};

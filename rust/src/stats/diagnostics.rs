@@ -1,0 +1,150 @@
+//! Chain diagnostics: running moments, autocorrelation, effective sample
+//! size.  Fig. 9d of the paper reports autocorrelation vs *wall-clock lag*
+//! and ESS per second; `ess` here is ESS per sample, and the harness
+//! divides by measured runtime.
+
+/// Numerically stable running mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct RunningMoments {
+    n: usize,
+    mean: f64,
+    m2: f64,
+}
+
+impl RunningMoments {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Unbiased sample variance (n-1 denominator); 0 for n < 2.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Sample autocorrelation function up to `max_lag` (inclusive), biased
+/// (n-denominator) estimator as standard for ACF plots.
+pub fn autocorrelation(xs: &[f64], max_lag: usize) -> Vec<f64> {
+    let n = xs.len();
+    if n < 2 {
+        return vec![1.0];
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let c0: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    if c0 == 0.0 {
+        return vec![1.0; max_lag.min(n - 1) + 1];
+    }
+    (0..=max_lag.min(n - 1))
+        .map(|k| {
+            let ck: f64 = (0..n - k)
+                .map(|i| (xs[i] - mean) * (xs[i + k] - mean))
+                .sum::<f64>()
+                / n as f64;
+            ck / c0
+        })
+        .collect()
+}
+
+/// Effective sample size via Geyer's initial positive sequence: truncate
+/// the ACF at the first lag where the sum of an adjacent pair of
+/// autocorrelations goes non-positive.
+pub fn ess(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 4 {
+        return n as f64;
+    }
+    let acf = autocorrelation(xs, n - 1);
+    let mut sum_rho = 0.0;
+    let mut k = 1;
+    while k + 1 < acf.len() {
+        let pair = acf[k] + acf[k + 1];
+        if pair <= 0.0 {
+            break;
+        }
+        sum_rho += pair;
+        k += 2;
+    }
+    let tau = 1.0 + 2.0 * sum_rho;
+    (n as f64 / tau).min(n as f64).max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Pcg64;
+
+    #[test]
+    fn running_moments_match_direct() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.5];
+        let mut rm = RunningMoments::new();
+        for &x in &xs {
+            rm.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / 5.0;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / 4.0;
+        assert!((rm.mean() - mean).abs() < 1e-12);
+        assert!((rm.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn acf_lag0_is_one_and_iid_decays() {
+        let mut rng = Pcg64::seeded(42);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.normal()).collect();
+        let acf = autocorrelation(&xs, 10);
+        assert!((acf[0] - 1.0).abs() < 1e-12);
+        for &a in &acf[1..] {
+            assert!(a.abs() < 0.06, "iid acf too large: {a}");
+        }
+    }
+
+    #[test]
+    fn ess_iid_near_n() {
+        let mut rng = Pcg64::seeded(43);
+        let xs: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
+        let e = ess(&xs);
+        assert!(e > 2500.0, "iid ESS too small: {e}");
+    }
+
+    #[test]
+    fn ess_ar1_much_smaller() {
+        // AR(1) with rho=0.95: tau ~ (1+rho)/(1-rho) = 39
+        let mut rng = Pcg64::seeded(44);
+        let n = 20_000;
+        let rho = 0.95;
+        let mut xs = Vec::with_capacity(n);
+        let mut x = 0.0;
+        for _ in 0..n {
+            x = rho * x + (1.0 - rho * rho as f64).sqrt() * rng.normal();
+            xs.push(x);
+        }
+        let e = ess(&xs);
+        let expected = n as f64 / ((1.0 + rho) / (1.0 - rho));
+        assert!(
+            e > 0.4 * expected && e < 2.5 * expected,
+            "ESS {e} vs expected ~{expected}"
+        );
+    }
+}

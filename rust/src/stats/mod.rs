@@ -1,0 +1,11 @@
+//! MCMC diagnostics and experiment metrics: running moments,
+//! autocorrelation / effective sample size, predictive risk, and the
+//! §3.3 normality safeguard.
+
+pub mod diagnostics;
+pub mod normality;
+pub mod risk;
+
+pub use diagnostics::{autocorrelation, ess, RunningMoments};
+pub use normality::{jarque_bera, NormalityReport};
+pub use risk::{log_loss, predictive_risk, zero_one_error};

@@ -1,0 +1,144 @@
+//! Normality safeguard (§3.3): the sequential test assumes the CLT holds
+//! for mini-batch means of the l_i; heavy-tailed l_i (the Bardenet
+//! counter-example) break it.  We ship a Jarque–Bera test the harness can
+//! run on trial-run mini-batch means and report alongside the chain.
+
+use crate::math::special::ln_gamma;
+
+/// Jarque–Bera statistic and approximate p-value (chi^2_2 tail).
+#[derive(Clone, Copy, Debug)]
+pub struct NormalityReport {
+    pub n: usize,
+    pub skewness: f64,
+    pub excess_kurtosis: f64,
+    pub jb_stat: f64,
+    pub p_value: f64,
+    /// true if normality is NOT rejected at the 1% level.
+    pub plausibly_normal: bool,
+}
+
+/// Jarque–Bera normality test over a sample.
+pub fn jarque_bera(xs: &[f64]) -> NormalityReport {
+    let n = xs.len();
+    assert!(n >= 8, "jarque_bera needs >= 8 samples");
+    let nf = n as f64;
+    let mean = xs.iter().sum::<f64>() / nf;
+    let m2 = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / nf;
+    let m3 = xs.iter().map(|x| (x - mean).powi(3)).sum::<f64>() / nf;
+    let m4 = xs.iter().map(|x| (x - mean).powi(4)).sum::<f64>() / nf;
+    let (skew, kurt) = if m2 > 0.0 {
+        (m3 / m2.powf(1.5), m4 / (m2 * m2) - 3.0)
+    } else {
+        (0.0, 0.0)
+    };
+    let jb = nf / 6.0 * (skew * skew + 0.25 * kurt * kurt);
+    let p = chi2_sf(jb, 2.0);
+    NormalityReport {
+        n,
+        skewness: skew,
+        excess_kurtosis: kurt,
+        jb_stat: jb,
+        p_value: p,
+        plausibly_normal: p > 0.01,
+    }
+}
+
+/// Chi-squared survival function via the regularized upper incomplete
+/// gamma; for k=2 it reduces to exp(-x/2) (used by JB).
+fn chi2_sf(x: f64, k: f64) -> f64 {
+    if x <= 0.0 {
+        return 1.0;
+    }
+    if (k - 2.0).abs() < 1e-12 {
+        return (-0.5 * x).exp();
+    }
+    1.0 - lower_reg_gamma(0.5 * k, 0.5 * x)
+}
+
+/// Regularized lower incomplete gamma P(a, x) (series + continued fraction).
+fn lower_reg_gamma(a: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        // series
+        let mut sum = 1.0 / a;
+        let mut term = sum;
+        for n in 1..500 {
+            term *= x / (a + n as f64);
+            sum += term;
+            if term.abs() < sum.abs() * 1e-15 {
+                break;
+            }
+        }
+        (a * x.ln() - x - ln_gamma(a)).exp() * sum
+    } else {
+        // continued fraction for Q(a,x)
+        let mut b = x + 1.0 - a;
+        let mut c = 1e300;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..500 {
+            let an = -(i as f64) * (i as f64 - a);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < 1e-300 {
+                d = 1e-300;
+            }
+            c = b + an / c;
+            if c.abs() < 1e-300 {
+                c = 1e-300;
+            }
+            d = 1.0 / d;
+            let del = d * c;
+            h *= del;
+            if (del - 1.0).abs() < 1e-15 {
+                break;
+            }
+        }
+        1.0 - (a * x.ln() - x - ln_gamma(a)).exp() * h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Pcg64;
+
+    #[test]
+    fn gaussian_sample_passes() {
+        let mut rng = Pcg64::seeded(7);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.normal()).collect();
+        let rep = jarque_bera(&xs);
+        assert!(rep.plausibly_normal, "{rep:?}");
+        assert!(rep.skewness.abs() < 0.1);
+    }
+
+    #[test]
+    fn heavy_tailed_sample_fails() {
+        // Cauchy-ish: ratio of normals
+        let mut rng = Pcg64::seeded(8);
+        let xs: Vec<f64> = (0..5000)
+            .map(|_| rng.normal() / rng.normal().abs().max(1e-3))
+            .collect();
+        let rep = jarque_bera(&xs);
+        assert!(!rep.plausibly_normal, "{rep:?}");
+    }
+
+    #[test]
+    fn skewed_sample_fails() {
+        let mut rng = Pcg64::seeded(9);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.gamma(0.5)).collect();
+        let rep = jarque_bera(&xs);
+        assert!(!rep.plausibly_normal, "{rep:?}");
+        assert!(rep.skewness > 1.0);
+    }
+
+    #[test]
+    fn chi2_sf_known() {
+        // chi2_2 sf(x) = exp(-x/2)
+        assert!((chi2_sf(4.0, 2.0) - (-2.0f64).exp()).abs() < 1e-12);
+        // chi2_1: sf(3.841) ~ 0.05
+        assert!((chi2_sf(3.841, 1.0) - 0.05).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,122 @@
+//! Predictive-risk metrics for the Fig. 4 / Fig. 6 experiments.
+//!
+//! Following Korattikara et al. (2014), the "risk of the predictive
+//! mean" at time t is the squared error of the running Monte-Carlo
+//! average of the predictive probabilities against a long-run reference
+//! predictive, averaged over the test set.  The harness computes the
+//! reference from an extended exact-MH run.
+
+/// Mean squared difference between a running predictive mean and a
+/// reference predictive, averaged over test points.
+pub fn predictive_risk(pred_mean: &[f64], reference: &[f64]) -> f64 {
+    assert_eq!(pred_mean.len(), reference.len());
+    assert!(!pred_mean.is_empty());
+    pred_mean
+        .iter()
+        .zip(reference)
+        .map(|(p, r)| (p - r) * (p - r))
+        .sum::<f64>()
+        / pred_mean.len() as f64
+}
+
+/// 0/1 classification error of thresholded predictive probabilities.
+pub fn zero_one_error(probs: &[f64], labels: &[bool]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    assert!(!probs.is_empty());
+    let wrong = probs
+        .iter()
+        .zip(labels)
+        .filter(|(p, &y)| (**p >= 0.5) != y)
+        .count();
+    wrong as f64 / probs.len() as f64
+}
+
+/// Average negative log-likelihood of labels under predictive probs.
+pub fn log_loss(probs: &[f64], labels: &[bool]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    assert!(!probs.is_empty());
+    let eps = 1e-12;
+    -probs
+        .iter()
+        .zip(labels)
+        .map(|(p, &y)| {
+            let p = p.clamp(eps, 1.0 - eps);
+            if y {
+                p.ln()
+            } else {
+                (1.0 - p).ln()
+            }
+        })
+        .sum::<f64>()
+        / probs.len() as f64
+}
+
+/// Accumulates the running average of per-test-point predictions over the
+/// chain, so risk can be reported at any time point.
+#[derive(Clone, Debug)]
+pub struct PredictiveAccumulator {
+    sum: Vec<f64>,
+    n: usize,
+}
+
+impl PredictiveAccumulator {
+    pub fn new(n_test: usize) -> Self {
+        PredictiveAccumulator {
+            sum: vec![0.0; n_test],
+            n: 0,
+        }
+    }
+
+    pub fn push(&mut self, probs: &[f64]) {
+        assert_eq!(probs.len(), self.sum.len());
+        for (s, p) in self.sum.iter_mut().zip(probs) {
+            *s += p;
+        }
+        self.n += 1;
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> Vec<f64> {
+        assert!(self.n > 0, "no predictions accumulated");
+        self.sum.iter().map(|s| s / self.n as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn risk_zero_iff_equal() {
+        let p = [0.2, 0.8, 0.5];
+        assert_eq!(predictive_risk(&p, &p), 0.0);
+        let q = [0.3, 0.8, 0.5];
+        assert!((predictive_risk(&p, &q) - 0.01 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_one_counts_misclassifications() {
+        let probs = [0.9, 0.1, 0.6, 0.4];
+        let labels = [true, true, false, false];
+        assert!((zero_one_error(&probs, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_loss_perfect_is_zero() {
+        let probs = [1.0, 0.0];
+        let labels = [true, false];
+        assert!(log_loss(&probs, &labels) < 1e-10);
+    }
+
+    #[test]
+    fn accumulator_averages() {
+        let mut acc = PredictiveAccumulator::new(2);
+        acc.push(&[0.0, 1.0]);
+        acc.push(&[1.0, 1.0]);
+        assert_eq!(acc.mean(), vec![0.5, 1.0]);
+        assert_eq!(acc.n(), 2);
+    }
+}

@@ -1,0 +1,13 @@
+//! The probabilistic execution trace (PET) and its transformations:
+//! evaluation, scaffolds, detach/regenerate, partitioning, staleness.
+
+pub mod eval;
+pub mod node;
+pub mod partition;
+pub mod pet;
+pub mod regen;
+pub mod scaffold;
+
+pub use eval::Evaluator;
+pub use node::{ArgRef, EvalResult, Node, NodeId, NodeKind};
+pub use pet::Trace;

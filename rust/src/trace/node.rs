@@ -1,0 +1,165 @@
+//! PET nodes.
+//!
+//! A node is one executed computation (Def. 1).  Statistical parents
+//! (`E_s`) are implied by the node's kind + argument references; children
+//! lists are maintained explicitly as the reverse edges, because both
+//! scaffold construction (Defs. 2–5) and border detection (Def. 6) walk
+//! the trace downstream.
+
+use crate::ppl::ast::Expr;
+use crate::ppl::env::EnvRef;
+use crate::ppl::prim::Prim;
+use crate::ppl::sp::{MakerFamily, SpFamily};
+use crate::ppl::value::{KeyVec, MemId, SpId, Value};
+use std::rc::Rc;
+
+/// Index into the trace's node arena.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// An argument position: either a compile-time constant (no node is
+/// materialized — this is what keeps per-observation node counts low) or
+/// a reference to a parent node.
+#[derive(Clone, Debug)]
+pub enum ArgRef {
+    Const(Value),
+    Node(NodeId),
+}
+
+impl ArgRef {
+    pub fn node(&self) -> Option<NodeId> {
+        match self {
+            ArgRef::Node(id) => Some(*id),
+            ArgRef::Const(_) => None,
+        }
+    }
+}
+
+/// Result of evaluating an expression: a constant-folded value or a node.
+#[derive(Clone, Debug)]
+pub enum EvalResult {
+    Static(Value),
+    Node(NodeId),
+}
+
+impl EvalResult {
+    pub fn as_argref(&self) -> ArgRef {
+        match self {
+            EvalResult::Static(v) => ArgRef::Const(v.clone()),
+            EvalResult::Node(id) => ArgRef::Node(*id),
+        }
+    }
+
+    pub fn node(&self) -> Option<NodeId> {
+        match self {
+            EvalResult::Node(id) => Some(*id),
+            EvalResult::Static(_) => None,
+        }
+    }
+}
+
+/// What kind of computation a node represents.
+#[derive(Clone, Debug)]
+pub enum NodeKind {
+    /// Deterministic primitive application; value = prim(args).
+    Det(Prim),
+    /// Stochastic application of a stateless family; args are params.
+    StochFam(SpFamily),
+    /// Stochastic application whose operator is the value of node `op`
+    /// (must be `Value::Sp`); e.g. `((c (z i)))` in the JointDPM program.
+    StochDyn { op: NodeId },
+    /// Stochastic application of a fixed SP instance (operator was a
+    /// static `Value::Sp`, e.g. a maker with constant args).
+    StochInst { sp: SpId },
+    /// Maker application: creates/owns SP instance `sp`; value = Sp(sp).
+    /// Recomputation updates the instance's params in place (AAA).
+    Maker { family: MakerFamily, sp: SpId },
+    /// Memoized application: `key` computed from args routes to a cache
+    /// entry of `mem`; value mirrors the target's value.
+    MemApp {
+        mem: MemId,
+        key: KeyVec,
+        target: EvalResult,
+    },
+    /// `if` with a dynamic predicate (args[0]); the chosen branch's nodes
+    /// are existential children (`E_e`), owned by this node.
+    If {
+        expr: Rc<Expr>, // the full If expression, for branch re-eval
+        env: EnvRef,
+        take_conseq: bool,
+        branch: EvalResult,
+        owned: Vec<NodeId>,
+    },
+    /// Closure-application passthrough: value mirrors `inner`.
+    Inner { inner: NodeId },
+}
+
+/// One executed computation in the PET.
+#[derive(Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    pub value: Value,
+    /// Semantic arguments (operands; If predicate at position 0).
+    pub args: Vec<ArgRef>,
+    /// Reverse statistical edges.
+    pub children: Vec<NodeId>,
+    /// Observation constraint?
+    pub observed: bool,
+    /// Slot liveness (false after unevaluation).
+    pub alive: bool,
+}
+
+impl Node {
+    pub fn new(kind: NodeKind, value: Value, args: Vec<ArgRef>) -> Node {
+        Node {
+            kind,
+            value,
+            args,
+            children: Vec::new(),
+            observed: false,
+            alive: true,
+        }
+    }
+
+    /// Dynamic (node-backed) parents implied by kind + args.
+    pub fn dyn_parents(&self) -> Vec<NodeId> {
+        let mut ps: Vec<NodeId> = self.args.iter().filter_map(|a| a.node()).collect();
+        match &self.kind {
+            NodeKind::StochDyn { op } => ps.push(*op),
+            NodeKind::MemApp { target, .. } => {
+                if let Some(t) = target.node() {
+                    ps.push(t);
+                }
+            }
+            NodeKind::If { branch, .. } => {
+                if let Some(b) = branch.node() {
+                    ps.push(b);
+                }
+            }
+            NodeKind::Inner { inner } => ps.push(*inner),
+            _ => {}
+        }
+        ps.sort_unstable();
+        ps.dedup();
+        ps
+    }
+
+    /// Is this node a stochastic computation (has a log density)?
+    pub fn is_stochastic(&self) -> bool {
+        matches!(
+            self.kind,
+            NodeKind::StochFam(_) | NodeKind::StochDyn { .. } | NodeKind::StochInst { .. }
+        )
+    }
+
+    /// Is this node deterministic given its parents (value propagates)?
+    pub fn is_deterministic(&self) -> bool {
+        !self.is_stochastic()
+    }
+}

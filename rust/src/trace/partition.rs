@@ -1,0 +1,386 @@
+//! Global/local partition of a scaffold (paper §3.1, Defs. 6–8) and
+//! non-destructive override scoring.
+//!
+//! Subsampled transitions never detach local sections: each sampled
+//! section's contribution l_i (Eq. 6) is computed by *override
+//! evaluation* — recomputing the section's deterministic nodes against a
+//! candidate value of the global section without mutating the trace.
+//! Committing an accepted proposal writes only the global section and
+//! bumps the staleness epoch; unvisited sections are refreshed lazily
+//! (§3.5).
+
+use crate::trace::node::{ArgRef, NodeId, NodeKind};
+use crate::trace::pet::Trace;
+use crate::trace::scaffold::{build_scaffold, find_border};
+use crate::ppl::value::Value;
+use std::collections::HashMap;
+
+/// The partitioned scaffold of a global variable.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub v: NodeId,
+    /// Border node b(s, v) (Def. 6).
+    pub border: NodeId,
+    /// D ∩ global: the single-link path v..=border (topological order).
+    pub global_drg: Vec<NodeId>,
+    /// Children of the border: the roots of the N local sections.
+    pub locals: Vec<NodeId>,
+    /// structure_version at build time (for cache revalidation).
+    pub built_at: u64,
+}
+
+impl Partition {
+    pub fn n(&self) -> usize {
+        self.locals.len()
+    }
+}
+
+/// One local section (Def. 8), discovered lazily from a border child.
+#[derive(Clone, Debug, Default)]
+pub struct Section {
+    /// Deterministic members (D ∩ local_i), topological order.
+    pub dets: Vec<NodeId>,
+    /// Absorbing members (A ∩ local_i).
+    pub absorbing: Vec<NodeId>,
+}
+
+/// Build the partition for `v`, or None if its scaffold has no border
+/// (fewer than 2 dependents) — callers fall back to exact MH.
+pub fn build_partition(trace: &Trace, v: NodeId) -> Option<Partition> {
+    let scaffold = build_scaffold(trace, v);
+    let border = find_border(trace, &scaffold)?;
+    // global D = path v -> border (all deterministic but v)
+    let mut global_drg = vec![v];
+    let mut cur = v;
+    while cur != border {
+        let kids: Vec<NodeId> = trace.node(cur).children.clone();
+        debug_assert_eq!(kids.len(), 1, "pre-border path must be a single link");
+        cur = kids[0];
+        global_drg.push(cur);
+    }
+    let locals = trace.node(border).children.clone();
+    Some(Partition {
+        v,
+        border,
+        global_drg,
+        locals,
+        built_at: trace.structure_version,
+    })
+}
+
+/// Discover the local section rooted at border child `root`.
+pub fn discover_section(trace: &Trace, root: NodeId) -> Section {
+    let mut sec = Section::default();
+    let mut stack = vec![root];
+    while let Some(n) = stack.pop() {
+        if trace.node(n).is_stochastic() {
+            sec.absorbing.push(n);
+        } else {
+            sec.dets.push(n);
+            for &c in &trace.node(n).children {
+                stack.push(c);
+            }
+        }
+    }
+    // dets discovered root-first is already parent-before-child for the
+    // single-chain sections our models produce; general DAGs are small
+    // enough to sort by a second pass if ever needed.
+    sec
+}
+
+/// Non-destructive override evaluation context.
+///
+/// `overrides` pins candidate values for nodes (the proposed global
+/// section); `candidate_value` computes what any node's value *would be*
+/// under those pins, recursing through deterministic parents and memoizing.
+pub struct OverrideCtx<'t> {
+    pub trace: &'t Trace,
+    overrides: HashMap<NodeId, Value>,
+    memo: HashMap<NodeId, Value>,
+}
+
+impl<'t> OverrideCtx<'t> {
+    pub fn new(trace: &'t Trace) -> Self {
+        OverrideCtx {
+            trace,
+            overrides: HashMap::new(),
+            memo: HashMap::new(),
+        }
+    }
+
+    pub fn pin(&mut self, node: NodeId, value: Value) {
+        self.overrides.insert(node, value);
+        self.memo.clear();
+    }
+
+    /// Value of `id` under the pins (committed values elsewhere).
+    /// The caller must have freshened the relevant region (lazy §3.5
+    /// updates) before constructing the ctx.
+    pub fn candidate_value(&mut self, id: NodeId) -> Value {
+        if let Some(v) = self.overrides.get(&id) {
+            return v.clone();
+        }
+        if let Some(v) = self.memo.get(&id) {
+            return v.clone();
+        }
+        let node = self.trace.node(id);
+        let v = if node.is_stochastic() {
+            node.value.clone()
+        } else {
+            // recompute iff some ancestor is pinned; otherwise committed
+            // value is already correct
+            if !self.any_pinned_ancestor(id) {
+                node.value.clone()
+            } else {
+                match &node.kind {
+                    NodeKind::Det(prim) => {
+                        let args: Vec<Value> =
+                            node.args.iter().map(|a| self.arg_candidate(a)).collect();
+                        prim.apply(&args).expect("override recompute failed")
+                    }
+                    NodeKind::MemApp { target, .. } => match target {
+                        crate::trace::node::EvalResult::Node(t) => self.candidate_value(*t),
+                        crate::trace::node::EvalResult::Static(v) => v.clone(),
+                    },
+                    NodeKind::If { branch, .. } => match branch {
+                        crate::trace::node::EvalResult::Node(b) => self.candidate_value(*b),
+                        crate::trace::node::EvalResult::Static(v) => v.clone(),
+                    },
+                    NodeKind::Inner { inner } => self.candidate_value(*inner),
+                    NodeKind::Maker { .. } => node.value.clone(),
+                    _ => unreachable!(),
+                }
+            }
+        };
+        self.memo.insert(id, v.clone());
+        v
+    }
+
+    pub fn arg_candidate(&mut self, a: &ArgRef) -> Value {
+        match a {
+            ArgRef::Const(v) => v.clone(),
+            ArgRef::Node(id) => self.candidate_value(*id),
+        }
+    }
+
+    fn any_pinned_ancestor(&mut self, id: NodeId) -> bool {
+        // cheap DFS; sections are tiny.  memoized values imply resolved.
+        if self.overrides.contains_key(&id) {
+            return true;
+        }
+        self.trace.node(id).dyn_parents().iter().any(|&p| {
+            self.overrides.contains_key(&p)
+                || (!self.trace.node(p).is_stochastic() && self.any_pinned_ancestor(p))
+        })
+    }
+
+    /// log p(value(n) | candidate parent values) for a stochastic node.
+    pub fn logpdf_candidate(&mut self, n: NodeId) -> f64 {
+        let node = self.trace.node(n);
+        let value = node.value.clone();
+        let args: Vec<Value> = node.args.iter().map(|a| self.arg_candidate(a)).collect();
+        match &node.kind {
+            NodeKind::StochFam(f) => f.logpdf(&value, &args),
+            NodeKind::StochDyn { .. } | NodeKind::StochInst { .. } => {
+                let sp = self.trace.stoch_sp(n).expect("instance sp");
+                self.trace.sp(sp).logpdf(&value, &args)
+            }
+            k => panic!("logpdf_candidate on {k:?}"),
+        }
+    }
+
+    /// log p(value(n) | committed parent values).
+    pub fn logpdf_committed(&self, n: NodeId) -> f64 {
+        let node = self.trace.node(n);
+        let args: Vec<Value> = node
+            .args
+            .iter()
+            .map(|a| self.trace.arg_value(a).clone())
+            .collect();
+        match &node.kind {
+            NodeKind::StochFam(f) => f.logpdf(&node.value, &args),
+            NodeKind::StochDyn { .. } | NodeKind::StochInst { .. } => {
+                let sp = self.trace.stoch_sp(n).expect("instance sp");
+                self.trace.sp(sp).logpdf(&node.value, &args)
+            }
+            k => panic!("logpdf_committed on {k:?}"),
+        }
+    }
+
+    /// l_i for a local section: sum over its absorbing nodes of
+    /// log p(x | new global) - log p(x | old global).
+    ///
+    /// Exchangeable absorbing nodes are rejected: a subsampled transition
+    /// cannot maintain their sufficient statistics consistently (the
+    /// paper's experiments never require this — logistic and Gaussian
+    /// sections only).
+    pub fn section_ratio(&mut self, sec: &Section) -> f64 {
+        let mut l = 0.0;
+        for &a in &sec.absorbing {
+            assert!(
+                self.trace.stoch_sp(a).is_none(),
+                "subsampled transitions over exchangeable local sections are unsupported"
+            );
+            l += self.logpdf_candidate(a) - self.logpdf_committed(a);
+        }
+        l
+    }
+}
+
+/// Freshen everything a partition's global section + a set of local
+/// sections read (call before constructing an OverrideCtx).
+pub fn freshen_partition(trace: &mut Trace, p: &Partition) {
+    for &n in &p.global_drg {
+        for q in trace.node(n).dyn_parents() {
+            trace.fresh_value(q);
+        }
+        trace.fresh_value(n);
+    }
+}
+
+/// Commit an accepted subsampled proposal: write the global section's
+/// new values, then bump the epoch so unvisited local sections are
+/// refreshed lazily on next touch (§3.5, Fig. 2d).
+pub fn commit_global(trace: &mut Trace, p: &Partition, new_principal: Value) {
+    trace.set_value(p.v, new_principal);
+    // recompute the (short) global path eagerly
+    let rest: Vec<NodeId> = p.global_drg[1..].to_vec();
+    for n in rest {
+        if let Some(v) = trace.compute_det_value(n) {
+            trace.set_value(n, v);
+        }
+    }
+    trace.bump_epoch();
+    // re-stamp the global section as fresh under the new epoch
+    let all: Vec<NodeId> = p.global_drg.clone();
+    for n in all {
+        let v = trace.node(n).value.clone();
+        trace.set_value(n, v);
+    }
+}
+
+/// Validate a cached partition against the current trace structure.
+pub fn partition_valid(trace: &Trace, p: &Partition) -> bool {
+    p.built_at == trace.structure_version
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Pcg64;
+
+    fn lr_trace(n: usize, seed: u64) -> Trace {
+        let mut src = String::from(
+            "[assume w (scope_include 'w 0 (multivariate_normal (vector 0 0 0) 0.1))]\n\
+             [assume f (lambda (x) (bernoulli (linear_logistic w x)))]\n",
+        );
+        let mut rng = Pcg64::seeded(seed ^ 0xabc);
+        for _ in 0..n {
+            let (a, b) = (rng.normal(), rng.normal());
+            let lab = if rng.bernoulli(0.5) { "true" } else { "false" };
+            src.push_str(&format!("[observe (f (vector {a} {b} 1.0)) {lab}]\n"));
+        }
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(seed);
+        t.run_program(&src, &mut rng).unwrap();
+        t
+    }
+
+    #[test]
+    fn lr_partition_shape() {
+        let t = lr_trace(20, 0);
+        let w = t.lookup_node("w").unwrap();
+        let p = build_partition(&t, w).unwrap();
+        assert_eq!(p.border, w);
+        assert_eq!(p.global_drg, vec![w]);
+        assert_eq!(p.n(), 20);
+        for &root in &p.locals {
+            let sec = discover_section(&t, root);
+            assert_eq!(sec.dets.len(), 1); // linlog
+            assert_eq!(sec.absorbing.len(), 1); // bernoulli
+        }
+    }
+
+    #[test]
+    fn section_ratio_matches_manual_logistic() {
+        let mut t = lr_trace(5, 1);
+        let w = t.lookup_node("w").unwrap();
+        let p = build_partition(&t, w).unwrap();
+        freshen_partition(&mut t, &p);
+        let w_old = t.value(w).as_vector().unwrap().as_ref().clone();
+        let w_new: Vec<f64> = w_old.iter().map(|x| x + 0.3).collect();
+        let mut ctx = OverrideCtx::new(&t);
+        ctx.pin(w, Value::vector(w_new.clone()));
+        for &root in &p.locals.clone() {
+            let sec = discover_section(&t, root);
+            let l = ctx.section_ratio(&sec);
+            // manual: bernoulli(linear_logistic(w, x))
+            let y_node = sec.absorbing[0];
+            let lin = sec.dets[0];
+            let x = match &t.node(lin).args[1] {
+                ArgRef::Const(Value::Vector(v)) => v.clone(),
+                a => panic!("{a:?}"),
+            };
+            let yv = t.node(y_node).value.as_bool().unwrap();
+            let dot = |wv: &[f64]| -> f64 { wv.iter().zip(x.iter()).map(|(a, b)| a * b).sum() };
+            let lp = |z: f64| crate::dist::bernoulli_logit_logpmf(yv, z);
+            let want = lp(dot(&w_new)) - lp(dot(&w_old));
+            assert!((l - want).abs() < 1e-9, "{l} vs {want}");
+        }
+    }
+
+    #[test]
+    fn commit_global_leaves_stale_then_lazy_refresh() {
+        let mut t = lr_trace(8, 2);
+        let w = t.lookup_node("w").unwrap();
+        let p = build_partition(&t, w).unwrap();
+        let w_new = Value::vector(vec![0.5, -0.5, 0.1]);
+        commit_global(&mut t, &p, w_new.clone());
+        // local linlog nodes are stale now
+        let sec = discover_section(&t, p.locals[0]);
+        let lin = sec.dets[0];
+        assert!(!t.is_fresh(lin));
+        // lazy refresh computes the value under the new w
+        let v = t.fresh_value(lin).as_f64().unwrap();
+        let x = match &t.node(lin).args[1] {
+            ArgRef::Const(Value::Vector(v)) => v.clone(),
+            a => panic!("{a:?}"),
+        };
+        let wv = w_new.as_vector().unwrap();
+        let dot: f64 = wv.iter().zip(x.iter()).map(|(a, b)| a * b).sum();
+        let want = 1.0 / (1.0 + (-dot).exp());
+        assert!((v - want).abs() < 1e-12);
+        assert!(t.is_fresh(lin));
+    }
+
+    #[test]
+    fn sv_partition_for_sig_has_stoch_roots() {
+        let src = r#"
+            [assume sig (sqrt (inv_gamma 5 0.05))]
+            [assume phi (beta 5 1)]
+            [assume h (mem (lambda (t) (if (<= t 0) 0.0 (normal (* phi (h (- t 1))) sig))))]
+            [assume x (lambda (t) (normal 0 (exp (/ (h t) 2))))]
+            [observe (x 1) 0.1]
+            [observe (x 2) -0.2]
+            [observe (x 3) 0.05]
+            [observe (x 4) 0.3]
+        "#;
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(3);
+        t.run_program(src, &mut rng).unwrap();
+        // `sig` is the sqrt det node; the sampled variable is its
+        // inv_gamma argument.  Border must be the sqrt node.
+        let sqrt_node = t.lookup_node("sig").unwrap();
+        let v = t.node(sqrt_node).args[0].node().unwrap();
+        assert!(t.node(v).is_stochastic());
+        let p = build_partition(&t, v).unwrap();
+        assert_eq!(p.border, sqrt_node);
+        assert_eq!(p.n(), 4);
+        // local sections: each h_t is directly absorbing (size-1 section)
+        for &root in &p.locals {
+            let sec = discover_section(&t, root);
+            assert_eq!(sec.dets.len(), 0);
+            assert_eq!(sec.absorbing.len(), 1);
+        }
+    }
+}

@@ -1,0 +1,612 @@
+//! The probabilistic execution trace (PET, Def. 1): node arena, SP/mem
+//! tables, scope registry, directives, lazy staleness (§3.5), and joint
+//! density (Eq. 1).
+
+use crate::math::Pcg64;
+use crate::ppl::ast::Directive;
+use crate::ppl::env::{Binding, Env, EnvRef};
+use crate::ppl::sp::SpState;
+use crate::ppl::value::{Closure, KeyVec, MemId, SpId, Value};
+use crate::trace::node::{ArgRef, EvalResult, Node, NodeId, NodeKind};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// A memoized procedure: body closure + cache of evaluated applications.
+#[derive(Debug)]
+pub struct MemState {
+    pub closure: Rc<Closure>,
+    pub cache: HashMap<KeyVec, CacheEntry>,
+}
+
+/// One mem-cache entry; `owned` are the nodes created when the body was
+/// evaluated for this key (freed when the entry is purged).
+#[derive(Debug)]
+pub struct CacheEntry {
+    pub target: EvalResult,
+    pub refcount: u32,
+    pub owned: Vec<NodeId>,
+}
+
+/// Scope registry: `(scope_include 'name block expr)` tags principal
+/// nodes so inference programs can address them.
+#[derive(Debug, Default)]
+pub struct Scope {
+    pub blocks: Vec<(Value, Vec<NodeId>)>,
+    index: HashMap<KeyVec, usize>,
+}
+
+impl Scope {
+    fn register(&mut self, block: Value, node: NodeId) {
+        let key = KeyVec(vec![block.clone()]);
+        let idx = *self.index.entry(key).or_insert_with(|| {
+            self.blocks.push((block, Vec::new()));
+            self.blocks.len() - 1
+        });
+        self.blocks[idx].1.push(node);
+    }
+
+    fn deregister(&mut self, block: &Value, node: NodeId) {
+        if let Some(&idx) = self.index.get(&KeyVec(vec![block.clone()])) {
+            self.blocks[idx].1.retain(|&n| n != node);
+        }
+    }
+
+    pub fn block_nodes(&self, block: &Value) -> &[NodeId] {
+        match self.index.get(&KeyVec(vec![block.clone()])) {
+            Some(&idx) => &self.blocks[idx].1,
+            None => &[],
+        }
+    }
+
+    /// Non-empty blocks.
+    pub fn live_blocks(&self) -> Vec<&Value> {
+        self.blocks
+            .iter()
+            .filter(|(_, ns)| !ns.is_empty())
+            .map(|(b, _)| b)
+            .collect()
+    }
+}
+
+/// Record of an executed top-level directive.
+#[derive(Debug)]
+pub struct DirectiveRecord {
+    pub directive: Directive,
+    pub result: EvalResult,
+    pub owned: Vec<NodeId>,
+}
+
+/// The trace.
+pub struct Trace {
+    pub(crate) nodes: Vec<Node>,
+    free: Vec<u32>,
+    pub(crate) sps: Vec<SpState>,
+    pub(crate) mems: Vec<MemState>,
+    pub global_env: EnvRef,
+    pub(crate) scopes: HashMap<Rc<str>, Scope>,
+    node_scope: HashMap<NodeId, (Rc<str>, Value)>,
+    /// Staleness epoch (§3.5): a deterministic node is fresh iff its
+    /// epoch equals this.
+    pub(crate) epoch: u64,
+    /// Node epochs live out-of-line so `fresh_value` can run with `&self`
+    /// node borrows (u64 per slot, index-aligned with `nodes`).
+    pub(crate) epochs: Vec<u64>,
+    /// Bumped on any structural change (node alloc/free/rekey/branch
+    /// swap).  Caches keyed on structure (border partitions, fused
+    /// plans) revalidate against this.
+    pub structure_version: u64,
+    pub(crate) records: Vec<DirectiveRecord>,
+    pub(crate) observations: Vec<NodeId>,
+    /// Border-partition cache (Defs. 6-8), keyed by principal node and
+    /// validated against `structure_version` — rebuilding the partition
+    /// clones the border's N-child list, which would otherwise make
+    /// every subsampled transition O(N).
+    partition_cache: RefCell<HashMap<NodeId, Rc<crate::trace::partition::Partition>>>,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace {
+            nodes: Vec::new(),
+            free: Vec::new(),
+            sps: Vec::new(),
+            mems: Vec::new(),
+            global_env: Env::root(),
+            scopes: HashMap::new(),
+            node_scope: HashMap::new(),
+            epoch: 0,
+            epochs: Vec::new(),
+            structure_version: 0,
+            records: Vec::new(),
+            observations: Vec::new(),
+            partition_cache: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Cached global/local partition for a principal node (None if the
+    /// variable has no border).  Rebuilt when the trace structure has
+    /// changed since the cached copy was built.
+    pub fn cached_partition(
+        &self,
+        v: NodeId,
+    ) -> Option<Rc<crate::trace::partition::Partition>> {
+        if let Some(p) = self.partition_cache.borrow().get(&v) {
+            if p.built_at == self.structure_version {
+                return Some(p.clone());
+            }
+        }
+        let p = Rc::new(crate::trace::partition::build_partition(self, v)?);
+        self.partition_cache.borrow_mut().insert(v, p.clone());
+        Some(p)
+    }
+
+    // ---------------- arena ----------------
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        let n = &self.nodes[id.idx()];
+        debug_assert!(n.alive, "access to dead node {id:?}");
+        n
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        let n = &mut self.nodes[id.idx()];
+        debug_assert!(n.alive, "access to dead node {id:?}");
+        n
+    }
+
+    pub fn num_live_nodes(&self) -> usize {
+        self.nodes.len() - self.free.len()
+    }
+
+    /// Allocate a node and wire child edges into its dynamic parents.
+    pub fn alloc(&mut self, node: Node) -> NodeId {
+        let parents = node.dyn_parents();
+        let id = match self.free.pop() {
+            Some(slot) => {
+                self.nodes[slot as usize] = node;
+                self.epochs[slot as usize] = self.epoch;
+                NodeId(slot)
+            }
+            None => {
+                self.nodes.push(node);
+                self.epochs.push(self.epoch);
+                NodeId((self.nodes.len() - 1) as u32)
+            }
+        };
+        for p in parents {
+            self.nodes[p.idx()].children.push(id);
+        }
+        self.structure_version += 1;
+        id
+    }
+
+    /// Free a node slot.  Caller is responsible for having removed child
+    /// edges / aux incorporation first (see regen::unevaluate).
+    pub(crate) fn free_slot(&mut self, id: NodeId) {
+        let n = &mut self.nodes[id.idx()];
+        debug_assert!(n.alive, "double free of {id:?}");
+        n.alive = false;
+        n.children.clear();
+        n.args.clear();
+        n.value = Value::Bool(false);
+        self.free.push(id.0);
+        self.structure_version += 1;
+    }
+
+    pub(crate) fn add_child_edge(&mut self, parent: NodeId, child: NodeId) {
+        self.nodes[parent.idx()].children.push(child);
+    }
+
+    pub(crate) fn remove_child_edge(&mut self, parent: NodeId, child: NodeId) {
+        let ch = &mut self.nodes[parent.idx()].children;
+        if let Some(pos) = ch.iter().rposition(|&c| c == child) {
+            ch.swap_remove(pos);
+        }
+    }
+
+    // ---------------- SP / mem tables ----------------
+
+    pub fn push_sp(&mut self, sp: SpState) -> SpId {
+        self.sps.push(sp);
+        SpId((self.sps.len() - 1) as u32)
+    }
+
+    pub fn sp(&self, id: SpId) -> &SpState {
+        &self.sps[id.0 as usize]
+    }
+
+    pub fn sp_mut(&mut self, id: SpId) -> &mut SpState {
+        &mut self.sps[id.0 as usize]
+    }
+
+    pub fn push_mem(&mut self, closure: Rc<Closure>) -> MemId {
+        self.mems.push(MemState {
+            closure,
+            cache: HashMap::new(),
+        });
+        MemId((self.mems.len() - 1) as u32)
+    }
+
+    pub fn mem(&self, id: MemId) -> &MemState {
+        &self.mems[id.0 as usize]
+    }
+
+    pub fn mem_mut(&mut self, id: MemId) -> &mut MemState {
+        &mut self.mems[id.0 as usize]
+    }
+
+    /// The SP instance a stochastic node currently scores against, if it
+    /// is an instance application.
+    pub fn stoch_sp(&self, id: NodeId) -> Option<SpId> {
+        match &self.node(id).kind {
+            NodeKind::StochDyn { op } => match &self.node(*op).value {
+                Value::Sp(sp) => Some(*sp),
+                v => panic!("StochDyn operator is {} not an SP", v.type_name()),
+            },
+            NodeKind::StochInst { sp } => Some(*sp),
+            _ => None,
+        }
+    }
+
+    /// Whether a stochastic node is exchangeably coupled (instance SP).
+    pub fn is_exchangeable(&self, id: NodeId) -> bool {
+        matches!(
+            self.node(id).kind,
+            NodeKind::StochDyn { .. } | NodeKind::StochInst { .. }
+        )
+    }
+
+    // ---------------- values ----------------
+
+    pub fn value(&self, id: NodeId) -> &Value {
+        &self.node(id).value
+    }
+
+    pub fn arg_value<'a>(&'a self, a: &'a ArgRef) -> &'a Value {
+        match a {
+            ArgRef::Const(v) => v,
+            ArgRef::Node(id) => self.value(*id),
+        }
+    }
+
+    pub fn arg_values(&self, args: &[ArgRef]) -> Vec<Value> {
+        args.iter().map(|a| self.arg_value(a).clone()).collect()
+    }
+
+    pub fn result_value(&self, r: &EvalResult) -> Value {
+        match r {
+            EvalResult::Static(v) => v.clone(),
+            EvalResult::Node(id) => self.value(*id).clone(),
+        }
+    }
+
+    /// Set a node's value directly and stamp it fresh.
+    pub fn set_value(&mut self, id: NodeId, v: Value) {
+        self.nodes[id.idx()].value = v;
+        self.epochs[id.idx()] = self.epoch;
+    }
+
+    // ---------------- staleness (§3.5) ----------------
+
+    /// Invalidate every deterministic node's cached value; they will be
+    /// recomputed lazily on first access.  Called after an accepted
+    /// subsampled transition, whose unvisited local sections are stale.
+    pub fn bump_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
+    pub fn is_fresh(&self, id: NodeId) -> bool {
+        self.epochs[id.idx()] == self.epoch
+    }
+
+    /// Value with lazy recomputation: deterministic nodes stale since the
+    /// last epoch bump are recomputed from (recursively freshened)
+    /// parents.  Stochastic nodes are never stale — their values are
+    /// samples, not functions.
+    pub fn fresh_value(&mut self, id: NodeId) -> Value {
+        if self.epochs[id.idx()] == self.epoch {
+            return self.node(id).value.clone();
+        }
+        self.freshen(id);
+        self.node(id).value.clone()
+    }
+
+    fn freshen(&mut self, id: NodeId) {
+        if self.epochs[id.idx()] == self.epoch {
+            return;
+        }
+        // mark first to cut cycles (there are none in a DAG, but keeps
+        // repeated visits O(1))
+        self.epochs[id.idx()] = self.epoch;
+        if self.node(id).is_stochastic() {
+            return;
+        }
+        // freshen dynamic parents, then recompute
+        for p in self.node(id).dyn_parents() {
+            self.freshen(p);
+        }
+        let new_val = self.compute_det_value(id);
+        if let Some(v) = new_val {
+            self.nodes[id.idx()].value = v;
+        }
+    }
+
+    /// Pure recomputation of a deterministic node's value from current
+    /// parent values.  Returns None for kinds whose value cannot change
+    /// without a structural transition (Maker) — those keep their value.
+    /// Panics if a lazy recompute would require a structural change
+    /// (stale If branch flip / MemApp re-key), which subsampled
+    /// transitions are prohibited from introducing (paper §3.1).
+    pub fn compute_det_value(&self, id: NodeId) -> Option<Value> {
+        let node = self.node(id);
+        match &node.kind {
+            NodeKind::Det(prim) => {
+                let args = self.arg_values(&node.args);
+                Some(prim.apply(&args).unwrap_or_else(|e| {
+                    panic!("recompute of {prim:?} failed: {e}")
+                }))
+            }
+            NodeKind::MemApp { key, target, .. } => {
+                let new_key = KeyVec(self.arg_values(&node.args));
+                assert!(
+                    new_key == *key,
+                    "lazy recompute changed a mem key (structural change)"
+                );
+                Some(self.result_value(target))
+            }
+            NodeKind::If {
+                take_conseq,
+                branch,
+                ..
+            } => {
+                let pred = self
+                    .arg_value(&node.args[0])
+                    .as_bool()
+                    .expect("if predicate must be bool");
+                assert_eq!(
+                    pred, *take_conseq,
+                    "lazy recompute flipped an if branch (structural change)"
+                );
+                Some(self.result_value(branch))
+            }
+            NodeKind::Inner { inner } => Some(self.value(*inner).clone()),
+            NodeKind::Maker { .. } => None,
+            NodeKind::StochFam(_) | NodeKind::StochDyn { .. } | NodeKind::StochInst { .. } => None,
+        }
+    }
+
+    /// Eagerly recompute deterministic descendants of `id` (used after
+    /// constraining an observation at construction time).
+    pub fn propagate_det(&mut self, id: NodeId) {
+        let children = self.node(id).children.clone();
+        for c in children {
+            if self.node(c).is_deterministic() {
+                if let Some(v) = self.compute_det_value(c) {
+                    self.set_value(c, v);
+                }
+                self.propagate_det(c);
+            }
+        }
+    }
+
+    // ---------------- scoring ----------------
+
+    /// Log density of a stochastic node's current value given its current
+    /// (fresh) argument values.  For exchangeable nodes this is the
+    /// predictive *with the node's own value still incorporated* — use
+    /// the detach/regen discipline (regen.rs) for correct ratios.
+    pub fn logpdf_current(&mut self, id: NodeId) -> f64 {
+        for p in self.node(id).dyn_parents() {
+            self.freshen(p);
+        }
+        let node = self.node(id);
+        match &node.kind {
+            NodeKind::StochFam(f) => {
+                let args = self.arg_values(&node.args);
+                f.logpdf(&node.value, &args)
+            }
+            NodeKind::StochDyn { .. } | NodeKind::StochInst { .. } => {
+                let sp = self.stoch_sp(id).unwrap();
+                let args = self.arg_values(&self.node(id).args);
+                self.sp(sp).logpdf(&self.node(id).value, &args)
+            }
+            k => panic!("logpdf of non-stochastic node {k:?}"),
+        }
+    }
+
+    /// Joint log density of the trace (Eq. 1).  Exchangeable families are
+    /// scored by rebuilding their predictive chain in node-id order,
+    /// which equals the joint by exchangeability.
+    pub fn log_joint(&mut self) -> f64 {
+        let ids: Vec<NodeId> = (0..self.nodes.len() as u32)
+            .map(NodeId)
+            .filter(|id| self.nodes[id.idx()].alive)
+            .collect();
+        for &id in &ids {
+            self.freshen(id);
+        }
+        // rebuild aux chains
+        let mut temp_sps: HashMap<SpId, SpState> = HashMap::new();
+        let mut total = 0.0;
+        for &id in &ids {
+            let node = &self.nodes[id.idx()];
+            match &node.kind {
+                NodeKind::StochFam(f) => {
+                    let args = self.arg_values(&node.args);
+                    total += f.logpdf(&node.value, &args);
+                }
+                NodeKind::StochDyn { .. } | NodeKind::StochInst { .. } => {
+                    let sp_id = self.stoch_sp(id).unwrap();
+                    let fresh = temp_sps.entry(sp_id).or_insert_with(|| {
+                        // clone hyperparams, reset aux by unmaking
+                        let mut clone = self.sps[sp_id.0 as usize].clone();
+                        reset_aux(&mut clone);
+                        clone
+                    });
+                    let node = &self.nodes[id.idx()];
+                    let args = node
+                        .args
+                        .iter()
+                        .map(|a| match a {
+                            ArgRef::Const(v) => v.clone(),
+                            ArgRef::Node(n) => self.nodes[n.idx()].value.clone(),
+                        })
+                        .collect::<Vec<_>>();
+                    total += fresh.logpdf(&node.value, &args);
+                    fresh.incorporate(&node.value);
+                }
+                _ => {}
+            }
+        }
+        total
+    }
+
+    // ---------------- scopes ----------------
+
+    pub fn register_scope(&mut self, scope: Rc<str>, block: Value, node: NodeId) {
+        self.scopes
+            .entry(scope.clone())
+            .or_default()
+            .register(block.clone(), node);
+        self.node_scope.insert(node, (scope, block));
+    }
+
+    pub(crate) fn deregister_scope(&mut self, node: NodeId) -> Option<(Rc<str>, Value)> {
+        if let Some((scope, block)) = self.node_scope.remove(&node) {
+            if let Some(s) = self.scopes.get_mut(&scope) {
+                s.deregister(&block, node);
+            }
+            Some((scope, block))
+        } else {
+            None
+        }
+    }
+
+    pub fn scope(&self, name: &str) -> Option<&Scope> {
+        self.scopes.get(name)
+    }
+
+    /// All principal nodes in a scope, across blocks.
+    pub fn scope_nodes(&self, name: &str) -> Vec<NodeId> {
+        self.scopes
+            .get(name)
+            .map(|s| s.blocks.iter().flat_map(|(_, ns)| ns.iter().copied()).collect())
+            .unwrap_or_default()
+    }
+
+    // ---------------- directives ----------------
+
+    /// Execute one directive (delegates to the evaluator).
+    pub fn execute(&mut self, d: &Directive, rng: &mut Pcg64) -> Result<EvalResult, String> {
+        crate::trace::eval::execute_directive(self, d, rng)
+    }
+
+    /// Parse and execute a whole program.
+    pub fn run_program(&mut self, src: &str, rng: &mut Pcg64) -> Result<(), String> {
+        let prog = crate::ppl::parser::parse_program(src)?;
+        for d in &prog {
+            self.execute(d, rng)?;
+        }
+        Ok(())
+    }
+
+    /// Value bound to an assumed name (freshened).
+    pub fn lookup_value(&mut self, name: &str) -> Option<Value> {
+        match self.global_env.lookup(name)? {
+            Binding::Static(v) => Some(v),
+            Binding::Node(id) => Some(self.fresh_value(id)),
+        }
+    }
+
+    /// Node bound to an assumed name (if node-backed).
+    pub fn lookup_node(&self, name: &str) -> Option<NodeId> {
+        match self.global_env.lookup(name)? {
+            Binding::Node(id) => Some(id),
+            Binding::Static(_) => None,
+        }
+    }
+
+    pub fn observations(&self) -> &[NodeId] {
+        &self.observations
+    }
+
+    /// Follow the value-source chain down to the stochastic node that
+    /// ultimately produced a result (for observe / scope registration).
+    pub fn principal_node(&self, r: &EvalResult) -> Option<NodeId> {
+        let mut id = r.node()?;
+        loop {
+            match &self.node(id).kind {
+                NodeKind::StochFam(_)
+                | NodeKind::StochDyn { .. }
+                | NodeKind::StochInst { .. } => return Some(id),
+                NodeKind::Inner { inner } => id = *inner,
+                NodeKind::MemApp { target, .. } => match target {
+                    EvalResult::Node(t) => id = *t,
+                    EvalResult::Static(_) => return None,
+                },
+                NodeKind::If { branch, .. } => match branch {
+                    EvalResult::Node(b) => id = *b,
+                    EvalResult::Static(_) => return None,
+                },
+                NodeKind::Det(_) | NodeKind::Maker { .. } => return None,
+            }
+        }
+    }
+
+    /// Constrain the stochastic source of `r` to the observed value.
+    pub fn constrain(&mut self, r: &EvalResult, obs: Value) -> Result<NodeId, String> {
+        let target = self
+            .principal_node(r)
+            .ok_or("observe: expression has no stochastic source")?;
+        if self.node(target).observed {
+            return Err("observe: node already observed".into());
+        }
+        // exchangeable values move between aux states
+        if let Some(sp) = self.stoch_sp(target) {
+            let old = self.node(target).value.clone();
+            self.sp_mut(sp).unincorporate(&old);
+            self.sp_mut(sp).incorporate(&obs);
+        }
+        self.node_mut(target).observed = true;
+        self.set_value(target, obs.clone());
+        // propagate through the passthrough chain up to r and any det children
+        let mut id = r.node();
+        while let Some(cur) = id {
+            if cur == target {
+                break;
+            }
+            self.set_value(cur, obs.clone());
+            id = match &self.node(cur).kind {
+                NodeKind::Inner { inner } => Some(*inner),
+                NodeKind::MemApp { target: t, .. } => t.node(),
+                NodeKind::If { branch, .. } => branch.node(),
+                _ => None,
+            };
+        }
+        self.propagate_det(target);
+        self.observations.push(target);
+        Ok(target)
+    }
+}
+
+/// Reset an SP instance's aux to empty (for log_joint's rebuild).
+fn reset_aux(sp: &mut SpState) {
+    match sp {
+        SpState::Crp { aux, .. } => *aux = crate::dist::CrpAux::new(),
+        SpState::CollapsedMvn { niw } => {
+            *niw = crate::dist::CollapsedNiw::new(
+                niw.m0.clone(),
+                niw.k0,
+                niw.v0,
+                niw.s0.clone(),
+            )
+        }
+    }
+}

@@ -1,0 +1,662 @@
+//! Journaled detach & regenerate (Alg. 1 steps 3–4 and 10).
+//!
+//! Every trace mutation performed while detaching or regenerating a
+//! scaffold is recorded in a [`Journal`]; rejection is an exact reverse
+//! replay, acceptance frees the disconnected ("limbo") subtraces.  This
+//! covers the transient set T (Def. 3) dynamically: if-branch swaps and
+//! mem re-keys discovered during regen journal their structural effects,
+//! and their acceptance-ratio factors cancel because transient subtraces
+//! are created and destroyed with prior simulations (Eq. 3).
+
+use crate::math::Pcg64;
+use crate::ppl::sp::MakerFamily;
+use crate::ppl::value::{KeyVec, MemId, SpId, Value};
+use crate::trace::eval::Evaluator;
+use crate::trace::node::{EvalResult, NodeId, NodeKind};
+use crate::trace::pet::{CacheEntry, Trace};
+use crate::trace::scaffold::Scaffold;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+/// How the principal node's new value is chosen during regen.
+#[derive(Clone, Debug)]
+pub enum RegenMode {
+    /// Resimulate from the prior.
+    Sample,
+    /// Force a specific value (drift proposals, gibbs enumeration).
+    Forced(Value),
+}
+
+/// Weight components of a detach or regen pass (log scale).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Weights {
+    /// Sum over absorbing nodes (incl. maker AAA terms).
+    pub absorbed: f64,
+    /// Prior log density of the principal node's value.
+    pub principal: f64,
+}
+
+/// One reversible trace mutation.
+#[derive(Debug)]
+enum Op {
+    SetValue { node: NodeId, old: Value },
+    Incorporated { sp: SpId, value: Value },
+    Unincorporated { sp: SpId, value: Value },
+    EdgeAdded { parent: NodeId, child: NodeId },
+    EdgeRemoved { parent: NodeId, child: NodeId },
+    NodeCreated { id: NodeId },
+    CacheRefInc { mem: MemId, key: KeyVec },
+    CacheRefDec { mem: MemId, key: KeyVec },
+    CacheInserted { mem: MemId, key: KeyVec },
+    CacheRemoved { mem: MemId, key: KeyVec, entry: CacheEntry },
+    SetMemRoute {
+        node: NodeId,
+        old_key: KeyVec,
+        old_target: EvalResult,
+    },
+    SetBranch {
+        node: NodeId,
+        old_take: bool,
+        old_branch: EvalResult,
+        old_owned: Vec<NodeId>,
+    },
+    MakerParams { sp: SpId, old_params: Vec<Value> },
+    ScopeDeregistered {
+        node: NodeId,
+        scope: Rc<str>,
+        block: Value,
+    },
+}
+
+/// The mutation journal of one transition attempt.
+#[derive(Debug, Default)]
+pub struct Journal {
+    ops: Vec<Op>,
+    /// Disconnected nodes to free on commit (kept alive for rollback).
+    limbo: Vec<NodeId>,
+    /// Stochastic values drawn during regen, in creation order (used by
+    /// enumerative gibbs to replay the winning candidate exactly).
+    pub draws: Vec<Value>,
+}
+
+impl Journal {
+    pub fn new() -> Journal {
+        Journal::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty() && self.limbo.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------
+// detach
+// ---------------------------------------------------------------------
+
+/// Detach a scaffold: unincorporate + score absorbing nodes under the
+/// current (old) parent values, then score the principal node's prior.
+/// Deterministic values are left in place (regen overwrites them).
+pub fn detach(trace: &mut Trace, s: &Scaffold, j: &mut Journal) -> Weights {
+    let mut w = Weights::default();
+    // absorbing first, while parent values are still old
+    for &a in &s.absorbing {
+        w.absorbed += score_detach(trace, a, j);
+    }
+    // D in reverse topological order; only v is stochastic, makers AAA
+    for &n in s.drg.iter().rev() {
+        match &trace.node(n).kind {
+            NodeKind::Maker { sp, .. } => {
+                w.absorbed += trace.sp(*sp).logdensity_of_counts();
+            }
+            _ if n == s.v => {
+                w.principal += score_detach(trace, n, j);
+            }
+            _ => {}
+        }
+    }
+    w
+}
+
+/// Unincorporate (if exchangeable) and score one stochastic node under
+/// current parent values.
+fn score_detach(trace: &mut Trace, n: NodeId, j: &mut Journal) -> f64 {
+    let value = trace.node(n).value.clone();
+    if let Some(sp) = trace.stoch_sp(n) {
+        trace.sp_mut(sp).unincorporate(&value);
+        j.ops.push(Op::Unincorporated { sp, value: value.clone() });
+        let args = trace.arg_values(&trace.node(n).args);
+        trace.sp(sp).logpdf(&value, &args)
+    } else {
+        match &trace.node(n).kind {
+            NodeKind::StochFam(f) => {
+                let args = trace.arg_values(&trace.node(n).args);
+                f.logpdf(&value, &args)
+            }
+            k => panic!("score_detach on non-stochastic {k:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// regen
+// ---------------------------------------------------------------------
+
+/// Regenerate a detached scaffold: propose/force the principal value,
+/// propagate deterministically through D (journaling branch swaps and
+/// mem re-keys), then re-score + incorporate the absorbing nodes.
+pub fn regen(
+    trace: &mut Trace,
+    s: &Scaffold,
+    mode: RegenMode,
+    replay: Option<VecDeque<Value>>,
+    rng: &mut Pcg64,
+    j: &mut Journal,
+) -> Result<Weights, String> {
+    let mut w = Weights::default();
+    let mut replay = replay;
+    for &n in &s.drg {
+        if n == s.v {
+            let new_val = match &mode {
+                RegenMode::Forced(v) => v.clone(),
+                RegenMode::Sample => sample_prior(trace, n, rng)?,
+            };
+            w.principal += score_regen_stoch(trace, n, new_val, j);
+        } else {
+            regen_det(trace, n, &mut replay, rng, j)?;
+        }
+        if let NodeKind::Maker { family, sp } = trace.node(n).kind {
+            // AAA: params changed; re-score the joint of all applications
+            let old_params = maker_params(trace, n);
+            let args = trace.arg_values(&trace.node(n).args);
+            trace
+                .sp_mut(sp)
+                .update_params(family, &args)
+                .map_err(|e| format!("maker update failed: {e}"))?;
+            j.ops.push(Op::MakerParams {
+                sp,
+                old_params,
+            });
+            w.absorbed += trace.sp(sp).logdensity_of_counts();
+        }
+    }
+    for &a in &s.absorbing {
+        w.absorbed += score_regen(trace, a, j);
+    }
+    Ok(w)
+}
+
+fn maker_params(trace: &Trace, maker_node: NodeId) -> Vec<Value> {
+    // current (pre-update) parameter values live in the SP state; for the
+    // families we support the only mutable param is CRP alpha.
+    match &trace.node(maker_node).kind {
+        NodeKind::Maker { sp, .. } => match trace.sp(*sp) {
+            crate::ppl::sp::SpState::Crp { alpha, .. } => vec![Value::Real(*alpha)],
+            crate::ppl::sp::SpState::CollapsedMvn { .. } => vec![],
+        },
+        k => panic!("maker_params on {k:?}"),
+    }
+}
+
+/// Sample the principal node from its prior (its own family/instance).
+fn sample_prior(trace: &mut Trace, n: NodeId, rng: &mut Pcg64) -> Result<Value, String> {
+    let args = trace.arg_values(&trace.node(n).args);
+    match &trace.node(n).kind {
+        NodeKind::StochFam(f) => f.sample(rng, &args),
+        NodeKind::StochDyn { .. } | NodeKind::StochInst { .. } => {
+            let sp = trace.stoch_sp(n).unwrap();
+            trace.sp(sp).sample(rng, &args)
+        }
+        k => Err(format!("sample_prior on {k:?}")),
+    }
+}
+
+/// Set + score + incorporate the principal node's new value.
+fn score_regen_stoch(trace: &mut Trace, n: NodeId, new_val: Value, j: &mut Journal) -> f64 {
+    let args = trace.arg_values(&trace.node(n).args);
+    let old = trace.node(n).value.clone();
+    let lp;
+    if let Some(sp) = trace.stoch_sp(n) {
+        lp = trace.sp(sp).logpdf(&new_val, &args);
+        trace.sp_mut(sp).incorporate(&new_val);
+        j.ops.push(Op::Incorporated {
+            sp,
+            value: new_val.clone(),
+        });
+    } else {
+        match &trace.node(n).kind {
+            NodeKind::StochFam(f) => lp = f.logpdf(&new_val, &args),
+            k => panic!("score_regen_stoch on {k:?}"),
+        }
+    }
+    trace.set_value(n, new_val);
+    j.ops.push(Op::SetValue { node: n, old });
+    lp
+}
+
+/// Re-score + incorporate an absorbing node under the new parent values.
+fn score_regen(trace: &mut Trace, n: NodeId, j: &mut Journal) -> f64 {
+    let value = trace.node(n).value.clone();
+    if let Some(sp) = trace.stoch_sp(n) {
+        let args = trace.arg_values(&trace.node(n).args);
+        let lp = trace.sp(sp).logpdf(&value, &args);
+        trace.sp_mut(sp).incorporate(&value);
+        j.ops.push(Op::Incorporated { sp, value });
+        lp
+    } else {
+        match &trace.node(n).kind {
+            NodeKind::StochFam(f) => {
+                let args = trace.arg_values(&trace.node(n).args);
+                f.logpdf(&value, &args)
+            }
+            k => panic!("score_regen on non-stochastic {k:?}"),
+        }
+    }
+}
+
+/// Recompute one deterministic D node, handling structural transitions.
+fn regen_det(
+    trace: &mut Trace,
+    n: NodeId,
+    replay: &mut Option<VecDeque<Value>>,
+    rng: &mut Pcg64,
+    j: &mut Journal,
+) -> Result<(), String> {
+    match trace.node(n).kind.clone() {
+        NodeKind::Det(prim) => {
+            let args = trace.arg_values(&trace.node(n).args);
+            let new_val = prim.apply(&args)?;
+            let old = trace.node(n).value.clone();
+            trace.set_value(n, new_val);
+            j.ops.push(Op::SetValue { node: n, old });
+            Ok(())
+        }
+        NodeKind::Inner { inner } => {
+            let new_val = trace.value(inner).clone();
+            let old = trace.node(n).value.clone();
+            trace.set_value(n, new_val);
+            j.ops.push(Op::SetValue { node: n, old });
+            Ok(())
+        }
+        NodeKind::Maker { .. } => Ok(()), // handled by the AAA pass in regen()
+        NodeKind::MemApp { mem, key, target } => {
+            let new_key = KeyVec(trace.arg_values(&trace.node(n).args));
+            if new_key == key {
+                let new_val = trace.result_value(&target);
+                let old = trace.node(n).value.clone();
+                trace.set_value(n, new_val);
+                j.ops.push(Op::SetValue { node: n, old });
+                return Ok(());
+            }
+            rekey_memapp(trace, n, mem, key, target, new_key, replay, rng, j)
+        }
+        NodeKind::If {
+            expr,
+            env,
+            take_conseq,
+            branch,
+            ..
+        } => {
+            let pred = trace
+                .arg_value(&trace.node(n).args[0])
+                .as_bool()
+                .ok_or("if predicate must be bool")?;
+            if pred == take_conseq {
+                let new_val = trace.result_value(&branch);
+                let old = trace.node(n).value.clone();
+                trace.set_value(n, new_val);
+                j.ops.push(Op::SetValue { node: n, old });
+                return Ok(());
+            }
+            swap_branch(trace, n, &expr, &env, pred, replay, rng, j)
+        }
+        k => panic!("regen_det on {k:?}"),
+    }
+}
+
+/// Re-route a MemApp to a new key: release the old cache entry
+/// (disconnecting its subtrace if the refcount hits zero), acquire /
+/// create the new one.
+#[allow(clippy::too_many_arguments)]
+fn rekey_memapp(
+    trace: &mut Trace,
+    n: NodeId,
+    mem: MemId,
+    old_key: KeyVec,
+    old_target: EvalResult,
+    new_key: KeyVec,
+    replay: &mut Option<VecDeque<Value>>,
+    rng: &mut Pcg64,
+    j: &mut Journal,
+) -> Result<(), String> {
+    // --- release old route ---
+    if let Some(t) = old_target.node() {
+        trace.remove_child_edge(t, n);
+        j.ops.push(Op::EdgeRemoved { parent: t, child: n });
+    }
+    {
+        let entry = trace
+            .mem_mut(mem)
+            .cache
+            .get_mut(&old_key)
+            .expect("memapp old key missing from cache");
+        entry.refcount -= 1;
+        j.ops.push(Op::CacheRefDec {
+            mem,
+            key: old_key.clone(),
+        });
+        if entry.refcount == 0 {
+            let entry = trace.mem_mut(mem).cache.remove(&old_key).unwrap();
+            detach_subtree(trace, &entry.owned, j);
+            j.ops.push(Op::CacheRemoved {
+                mem,
+                key: old_key.clone(),
+                entry,
+            });
+        }
+    }
+    // --- acquire new route ---
+    let new_target = eval_in_txn(trace, replay, rng, j, |ev| {
+        ev.mem_lookup_or_eval(mem, &new_key)
+    })?;
+    trace
+        .mem_mut(mem)
+        .cache
+        .get_mut(&new_key)
+        .expect("entry just ensured")
+        .refcount += 1;
+    j.ops.push(Op::CacheRefInc {
+        mem,
+        key: new_key.clone(),
+    });
+    if let Some(t) = new_target.node() {
+        trace.add_child_edge(t, n);
+        j.ops.push(Op::EdgeAdded { parent: t, child: n });
+    }
+    let new_val = trace.result_value(&new_target);
+    let old_val = trace.node(n).value.clone();
+    if let NodeKind::MemApp { key, target, .. } = &mut trace.node_mut(n).kind {
+        *key = new_key;
+        *target = new_target;
+    }
+    trace.set_value(n, new_val);
+    j.ops.push(Op::SetMemRoute {
+        node: n,
+        old_key,
+        old_target,
+    });
+    j.ops.push(Op::SetValue { node: n, old: old_val });
+    Ok(())
+}
+
+/// Flip an If node to the other branch: disconnect the old branch's
+/// subtrace, evaluate the new branch from the prior.
+fn swap_branch(
+    trace: &mut Trace,
+    n: NodeId,
+    expr: &Rc<crate::ppl::ast::Expr>,
+    env: &crate::ppl::env::EnvRef,
+    pred: bool,
+    replay: &mut Option<VecDeque<Value>>,
+    rng: &mut Pcg64,
+    j: &mut Journal,
+) -> Result<(), String> {
+    let (old_take, old_branch, old_owned) = match &trace.node(n).kind {
+        NodeKind::If {
+            take_conseq,
+            branch,
+            owned,
+            ..
+        } => (*take_conseq, branch.clone(), owned.clone()),
+        k => panic!("swap_branch on {k:?}"),
+    };
+    // disconnect old branch
+    if let Some(b) = old_branch.node() {
+        trace.remove_child_edge(b, n);
+        j.ops.push(Op::EdgeRemoved { parent: b, child: n });
+    }
+    detach_subtree(trace, &old_owned, j);
+    // evaluate new branch
+    let branch_expr = match &**expr {
+        crate::ppl::ast::Expr::If(_, conseq, alt) => {
+            if pred {
+                conseq.clone()
+            } else {
+                alt.clone()
+            }
+        }
+        e => panic!("If node holds non-if expr {e:?}"),
+    };
+    let mut new_owned: Vec<NodeId> = Vec::new();
+    let new_branch = eval_in_txn_collect(trace, replay, rng, j, &mut new_owned, |ev| {
+        ev.eval(&branch_expr, env)
+    })?;
+    if let Some(b) = new_branch.node() {
+        trace.add_child_edge(b, n);
+        j.ops.push(Op::EdgeAdded { parent: b, child: n });
+    }
+    let new_val = trace.result_value(&new_branch);
+    let old_val = trace.node(n).value.clone();
+    if let NodeKind::If {
+        take_conseq,
+        branch,
+        owned,
+        ..
+    } = &mut trace.node_mut(n).kind
+    {
+        *take_conseq = pred;
+        *branch = new_branch;
+        *owned = new_owned;
+    }
+    trace.set_value(n, new_val);
+    j.ops.push(Op::SetBranch {
+        node: n,
+        old_take,
+        old_branch,
+        old_owned,
+    });
+    j.ops.push(Op::SetValue { node: n, old: old_val });
+    Ok(())
+}
+
+/// Run a sub-evaluation inside the transaction, converting the
+/// evaluator's side effects into journal ops.
+fn eval_in_txn<T>(
+    trace: &mut Trace,
+    replay: &mut Option<VecDeque<Value>>,
+    rng: &mut Pcg64,
+    j: &mut Journal,
+    f: impl FnOnce(&mut Evaluator) -> Result<T, String>,
+) -> Result<T, String> {
+    let mut sink = Vec::new();
+    eval_in_txn_collect(trace, replay, rng, j, &mut sink, f)
+}
+
+fn eval_in_txn_collect<T>(
+    trace: &mut Trace,
+    replay: &mut Option<VecDeque<Value>>,
+    rng: &mut Pcg64,
+    j: &mut Journal,
+    owned_sink: &mut Vec<NodeId>,
+    f: impl FnOnce(&mut Evaluator) -> Result<T, String>,
+) -> Result<T, String> {
+    let mut ev = Evaluator::new(trace, rng);
+    ev.replay = replay.take();
+    let result = f(&mut ev)?;
+    *replay = ev.replay.take();
+    // scoped log = nodes owned directly by this sub-eval's owner
+    let scoped = std::mem::take(&mut ev.created);
+    // full log = every node created (incl. ones owned by mem entries)
+    let all = std::mem::take(&mut ev.all_created);
+    let inserted = std::mem::take(&mut ev.inserted_cache);
+    let ref_incs = std::mem::take(&mut ev.ref_incs);
+    drop(ev);
+    for &id in &all {
+        // record draws for replay (creation order)
+        if trace.node(id).is_stochastic() {
+            j.draws.push(trace.node(id).value.clone());
+        }
+        j.ops.push(Op::NodeCreated { id });
+    }
+    owned_sink.extend(scoped.iter().copied());
+    for (mem, key) in inserted {
+        j.ops.push(Op::CacheInserted { mem, key });
+    }
+    for (mem, key) in ref_incs {
+        j.ops.push(Op::CacheRefInc { mem, key });
+    }
+    Ok(result)
+}
+
+/// Disconnect an owned subtree (old branch contents / purged mem entry):
+/// unincorporate its stochastic draws, release its mem routes, remove
+/// edges to retained nodes, deregister scopes.  Nodes stay allocated in
+/// limbo until commit.
+fn detach_subtree(trace: &mut Trace, owned: &[NodeId], j: &mut Journal) {
+    for &id in owned {
+        debug_assert!(
+            !trace.node(id).observed,
+            "structural transition would discard an observation"
+        );
+        // nested owners first
+        match trace.node(id).kind.clone() {
+            NodeKind::If { branch, owned: inner, .. } => {
+                if let Some(b) = branch.node() {
+                    trace.remove_child_edge(b, id);
+                    j.ops.push(Op::EdgeRemoved { parent: b, child: id });
+                }
+                detach_subtree(trace, &inner, j);
+            }
+            NodeKind::MemApp { mem, key, target } => {
+                if let Some(t) = target.node() {
+                    trace.remove_child_edge(t, id);
+                    j.ops.push(Op::EdgeRemoved { parent: t, child: id });
+                }
+                let entry = trace.mem_mut(mem).cache.get_mut(&key).expect("cache entry");
+                entry.refcount -= 1;
+                j.ops.push(Op::CacheRefDec { mem, key: key.clone() });
+                if entry.refcount == 0 {
+                    let entry = trace.mem_mut(mem).cache.remove(&key).unwrap();
+                    detach_subtree(trace, &entry.owned, j);
+                    j.ops.push(Op::CacheRemoved { mem, key, entry });
+                }
+            }
+            NodeKind::StochFam(_) | NodeKind::StochDyn { .. } | NodeKind::StochInst { .. } => {
+                if let Some(sp) = trace.stoch_sp(id) {
+                    let value = trace.node(id).value.clone();
+                    trace.sp_mut(sp).unincorporate(&value);
+                    j.ops.push(Op::Unincorporated { sp, value });
+                }
+            }
+            _ => {}
+        }
+        // remove this node's edges into retained parents (args + op)
+        for p in trace.node(id).dyn_parents() {
+            if !owned.contains(&p) {
+                trace.remove_child_edge(p, id);
+                j.ops.push(Op::EdgeRemoved { parent: p, child: id });
+            }
+        }
+        if let Some((scope, block)) = trace.deregister_scope(id) {
+            j.ops.push(Op::ScopeDeregistered {
+                node: id,
+                scope,
+                block,
+            });
+        }
+        j.limbo.push(id);
+    }
+}
+
+// ---------------------------------------------------------------------
+// commit / rollback
+// ---------------------------------------------------------------------
+
+/// Accept: free every disconnected node.
+pub fn commit(trace: &mut Trace, j: Journal) {
+    for id in j.limbo {
+        trace.free_slot(id);
+    }
+}
+
+/// Reject: reverse-replay every mutation.
+pub fn rollback(trace: &mut Trace, j: Journal) {
+    for op in j.ops.into_iter().rev() {
+        match op {
+            Op::SetValue { node, old } => {
+                trace.set_value(node, old);
+            }
+            Op::Incorporated { sp, value } => trace.sp_mut(sp).unincorporate(&value),
+            Op::Unincorporated { sp, value } => trace.sp_mut(sp).incorporate(&value),
+            Op::EdgeAdded { parent, child } => trace.remove_child_edge(parent, child),
+            Op::EdgeRemoved { parent, child } => trace.add_child_edge(parent, child),
+            Op::NodeCreated { id } => {
+                // reverse creation order guarantees no retained node still
+                // points at `id`; unincorporate + unlink + free
+                if trace.node(id).is_stochastic() {
+                    if let Some(sp) = trace.stoch_sp(id) {
+                        let value = trace.node(id).value.clone();
+                        trace.sp_mut(sp).unincorporate(&value);
+                    }
+                }
+                for p in trace.node(id).dyn_parents() {
+                    trace.remove_child_edge(p, id);
+                }
+                trace.deregister_scope(id);
+                trace.free_slot(id);
+            }
+            Op::CacheRefInc { mem, key } => {
+                trace.mem_mut(mem).cache.get_mut(&key).expect("cache entry").refcount -= 1;
+            }
+            Op::CacheRefDec { mem, key } => {
+                trace.mem_mut(mem).cache.get_mut(&key).expect("cache entry").refcount += 1;
+            }
+            Op::CacheInserted { mem, key } => {
+                trace.mem_mut(mem).cache.remove(&key);
+            }
+            Op::CacheRemoved { mem, key, entry } => {
+                trace.mem_mut(mem).cache.insert(key, entry);
+            }
+            Op::SetMemRoute {
+                node,
+                old_key,
+                old_target,
+            } => {
+                if let NodeKind::MemApp { key, target, .. } = &mut trace.node_mut(node).kind {
+                    *key = old_key;
+                    *target = old_target;
+                }
+            }
+            Op::SetBranch {
+                node,
+                old_take,
+                old_branch,
+                old_owned,
+            } => {
+                if let NodeKind::If {
+                    take_conseq,
+                    branch,
+                    owned,
+                    ..
+                } = &mut trace.node_mut(node).kind
+                {
+                    *take_conseq = old_take;
+                    *branch = old_branch;
+                    *owned = old_owned;
+                }
+            }
+            Op::MakerParams { sp, old_params } => {
+                let family = match trace.sp(sp) {
+                    crate::ppl::sp::SpState::Crp { .. } => MakerFamily::Crp,
+                    crate::ppl::sp::SpState::CollapsedMvn { .. } => MakerFamily::CollapsedMvn,
+                };
+                trace
+                    .sp_mut(sp)
+                    .update_params(family, &old_params)
+                    .expect("maker rollback");
+            }
+            Op::ScopeDeregistered { node, scope, block } => {
+                trace.register_scope(scope, block, node);
+            }
+        }
+    }
+}

@@ -1,0 +1,295 @@
+//! Scaffold construction (paper §2.1, Defs. 2–5).
+//!
+//! For a principal node `v`, the scaffold is:
+//! * `drg` — the *target set* D: `v` plus every descendant whose value is
+//!   a deterministic function of values in D (Def. 2), in topological
+//!   order;
+//! * `absorbing` — the set A: stochastic nodes outside D with a parent in
+//!   D (Def. 4), which re-score rather than re-sample;
+//! * the transient set T (Def. 3) is not enumerated statically: branch
+//!   swaps and mem re-keys are discovered (and journaled) during regen,
+//!   and their weight factors cancel because transient subtraces are
+//!   regenerated from the prior (Eq. 3).
+
+use crate::trace::node::{NodeId, NodeKind};
+use crate::trace::pet::Trace;
+use std::collections::{HashMap, HashSet};
+
+/// The scaffold of a principal node.
+#[derive(Clone, Debug)]
+pub struct Scaffold {
+    pub v: NodeId,
+    /// D, topologically ordered (v first).
+    pub drg: Vec<NodeId>,
+    /// A: absorbing stochastic nodes.
+    pub absorbing: Vec<NodeId>,
+}
+
+impl Scaffold {
+    pub fn size(&self) -> usize {
+        self.drg.len() + self.absorbing.len()
+    }
+}
+
+/// Build the scaffold for principal node `v` (must be stochastic).
+pub fn build_scaffold(trace: &Trace, v: NodeId) -> Scaffold {
+    assert!(
+        trace.node(v).is_stochastic(),
+        "principal node must be stochastic"
+    );
+    let mut in_drg: HashSet<NodeId> = HashSet::new();
+    let mut absorbing: Vec<NodeId> = Vec::new();
+    let mut absorbed: HashSet<NodeId> = HashSet::new();
+    in_drg.insert(v);
+    let mut frontier = vec![v];
+    while let Some(n) = frontier.pop() {
+        for &c in &trace.node(n).children {
+            if in_drg.contains(&c) {
+                continue;
+            }
+            if trace.node(c).is_stochastic() {
+                if absorbed.insert(c) {
+                    absorbing.push(c);
+                }
+            } else {
+                // deterministic descendant: joins D
+                in_drg.insert(c);
+                frontier.push(c);
+            }
+        }
+    }
+    // AAA (absorb-at-applications): an application of an SP *instance*
+    // whose maker node is in D is scored collectively through the
+    // maker's logdensity_of_counts (regen.rs), provided the application
+    // depends on D only through the maker — drop it from A.
+    absorbing.retain(|&a| {
+        let node = trace.node(a);
+        if let NodeKind::StochDyn { op } = node.kind {
+            let op_is_d_maker =
+                in_drg.contains(&op) && matches!(trace.node(op).kind, NodeKind::Maker { .. });
+            if op_is_d_maker {
+                let other_d_parent = node
+                    .dyn_parents()
+                    .iter()
+                    .any(|p| *p != op && in_drg.contains(p));
+                return other_d_parent; // keep only if D reaches it another way
+            }
+        }
+        true
+    });
+    let drg = topo_order(trace, &in_drg, v);
+    Scaffold { v, drg, absorbing }
+}
+
+/// Topological order of the D set (restricted to in-D edges), `v` first.
+fn topo_order(trace: &Trace, in_drg: &HashSet<NodeId>, v: NodeId) -> Vec<NodeId> {
+    let mut indeg: HashMap<NodeId, usize> = HashMap::with_capacity(in_drg.len());
+    for &n in in_drg {
+        let d = trace
+            .node(n)
+            .dyn_parents()
+            .iter()
+            .filter(|p| in_drg.contains(p))
+            .count();
+        indeg.insert(n, d);
+    }
+    let mut ready: Vec<NodeId> = indeg
+        .iter()
+        .filter(|(_, &d)| d == 0)
+        .map(|(&n, _)| n)
+        .collect();
+    // make the order deterministic; v (the root) first
+    ready.sort_unstable();
+    if let Some(pos) = ready.iter().position(|&n| n == v) {
+        ready.swap(0, pos);
+    }
+    let mut order = Vec::with_capacity(in_drg.len());
+    let mut queue = std::collections::VecDeque::from(ready);
+    while let Some(n) = queue.pop_front() {
+        order.push(n);
+        let mut newly: Vec<NodeId> = Vec::new();
+        for &c in &trace.node(n).children {
+            if let Some(d) = indeg.get_mut(&c) {
+                *d -= 1;
+                if *d == 0 {
+                    newly.push(c);
+                }
+            }
+        }
+        newly.sort_unstable();
+        for c in newly {
+            queue.push_back(c);
+        }
+    }
+    assert_eq!(
+        order.len(),
+        in_drg.len(),
+        "cycle in deterministic dependency graph?"
+    );
+    order
+}
+
+/// Border node (Def. 6): the first descendant of `v` inside the scaffold
+/// with more than one scaffold child; `v` itself if it fans out directly.
+/// Returns None if the scaffold never fans out (< 2 dependents).
+pub fn find_border(trace: &Trace, scaffold: &Scaffold) -> Option<NodeId> {
+    let in_scaffold: HashSet<NodeId> = scaffold
+        .drg
+        .iter()
+        .chain(&scaffold.absorbing)
+        .copied()
+        .collect();
+    let mut cur = scaffold.v;
+    loop {
+        let kids: Vec<NodeId> = trace
+            .node(cur)
+            .children
+            .iter()
+            .filter(|c| in_scaffold.contains(c))
+            .copied()
+            .collect();
+        match kids.len() {
+            0 => return None,
+            1 => {
+                let k = kids[0];
+                // an absorbing child terminates the single-link walk
+                if trace.node(k).is_stochastic() {
+                    return None;
+                }
+                cur = k;
+            }
+            _ => return Some(cur),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Pcg64;
+
+    fn setup(src: &str, seed: u64) -> Trace {
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(seed);
+        t.run_program(src, &mut rng).unwrap();
+        t
+    }
+
+    #[test]
+    fn plain_bayes_net_scaffold() {
+        // x -> y observed: D = {x}, A = {y}
+        let t = setup("[assume x (normal 0 1)] [observe (normal x 0.5) 1.0]", 0);
+        let x = t.lookup_node("x").unwrap();
+        let s = build_scaffold(&t, x);
+        assert_eq!(s.drg, vec![x]);
+        assert_eq!(s.absorbing.len(), 1);
+        assert!(t.node(s.absorbing[0]).observed);
+    }
+
+    #[test]
+    fn deterministic_chain_joins_drg() {
+        let t = setup(
+            r#"
+            [assume x (normal 0 1)]
+            [assume y (* 2 (+ x 1))]
+            [observe (normal y 0.5) 1.0]
+            "#,
+            1,
+        );
+        let x = t.lookup_node("x").unwrap();
+        let s = build_scaffold(&t, x);
+        assert_eq!(s.drg.len(), 3); // x, (+ x 1), (* 2 _)
+        assert_eq!(s.drg[0], x);
+        assert_eq!(s.absorbing.len(), 1);
+        // topological: parents before children
+        let pos: std::collections::HashMap<_, _> =
+            s.drg.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+        for &n in &s.drg {
+            for p in t.node(n).dyn_parents() {
+                if let Some(&pi) = pos.get(&p) {
+                    assert!(pi < pos[&n]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_child_absorbs_and_stops() {
+        // x -> y (stoch) -> z (stoch): scaffold of x must not include z
+        let t = setup(
+            r#"
+            [assume x (normal 0 1)]
+            [assume y (normal x 1)]
+            [assume z (normal y 1)]
+            "#,
+            2,
+        );
+        let x = t.lookup_node("x").unwrap();
+        let y = t.lookup_node("y").unwrap();
+        let z = t.lookup_node("z").unwrap();
+        let s = build_scaffold(&t, x);
+        assert_eq!(s.drg, vec![x]);
+        assert_eq!(s.absorbing, vec![y]);
+        assert!(!s.absorbing.contains(&z));
+    }
+
+    #[test]
+    fn border_is_v_for_regression_fanout() {
+        let mut src = String::from(
+            "[assume w (multivariate_normal (vector 0 0) 0.1)]\n\
+             [assume f (lambda (x) (bernoulli (linear_logistic w x)))]\n",
+        );
+        for i in 0..5 {
+            src.push_str(&format!("[observe (f (vector {i} 1.0)) true]\n"));
+        }
+        let t = setup(&src, 3);
+        let w = t.lookup_node("w").unwrap();
+        let s = build_scaffold(&t, w);
+        assert_eq!(s.drg.len(), 1 + 5); // w + 5 linlog dets
+        assert_eq!(s.absorbing.len(), 5);
+        assert_eq!(find_border(&t, &s), Some(w));
+    }
+
+    #[test]
+    fn border_descends_single_det_link() {
+        // v -> (det) single link -> fans out to many
+        let mut src = String::from("[assume v (normal 0 1)]\n[assume u (* 2 v)]\n");
+        for i in 0..4 {
+            src.push_str(&format!("[observe (normal u {}) 0.5]\n", i + 1));
+        }
+        let t = setup(&src, 4);
+        let v = t.lookup_node("v").unwrap();
+        let u = t.lookup_node("u").unwrap();
+        let s = build_scaffold(&t, v);
+        assert_eq!(find_border(&t, &s), Some(u));
+    }
+
+    #[test]
+    fn no_border_for_single_dependent() {
+        let t = setup("[assume x (normal 0 1)] [observe (normal x 1) 0.0]", 5);
+        let x = t.lookup_node("x").unwrap();
+        let s = build_scaffold(&t, x);
+        assert_eq!(find_border(&t, &s), None);
+    }
+
+    #[test]
+    fn sv_phi_scaffold_shape() {
+        let src = r#"
+            [assume sig 0.1]
+            [assume phi (beta 5 1)]
+            [assume h (mem (lambda (t) (if (<= t 0) 0.0 (normal (* phi (h (- t 1))) sig))))]
+            [assume x (lambda (t) (normal 0 (exp (/ (h t) 2))))]
+            [observe (x 1) 0.1]
+            [observe (x 2) -0.2]
+            [observe (x 3) 0.05]
+        "#;
+        let t = setup(src, 6);
+        let phi = t.lookup_node("phi").unwrap();
+        let s = build_scaffold(&t, phi);
+        // D: phi + 3 multiply nodes
+        assert_eq!(s.drg.len(), 4);
+        // A: h_1..h_3
+        assert_eq!(s.absorbing.len(), 3);
+        assert_eq!(find_border(&t, &s), Some(phi));
+    }
+}

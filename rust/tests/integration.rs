@@ -1,0 +1,190 @@
+//! Integration tests: whole-stack behaviour across the engine,
+//! inference kernels, runtime, and experiment drivers.
+
+use subppl::coordinator::chain::{build_bayes_lr, build_joint_dpm, build_sv};
+use subppl::coordinator::experiments::{dpm_accuracy, fig9_sv, Fig9Config};
+use subppl::data::{dpm_data, sv_data, synth2d};
+use subppl::infer::{
+    gibbs_transition, infer, parse_infer, subsampled_mh_transition, InterpreterEval, Proposal,
+    SubsampledConfig,
+};
+use subppl::math::Pcg64;
+use subppl::stats::RunningMoments;
+use subppl::trace::Trace;
+
+/// Full paper program (Fig. 3): model + data + inference, end to end,
+/// checking that subsampled MH finds the separator on synthetic data.
+#[test]
+fn bayes_lr_end_to_end_subsampled() {
+    let data = synth2d::generate(3000, 1);
+    let mut rng = Pcg64::seeded(2);
+    let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+    let cfg = SubsampledConfig {
+        m: 100,
+        eps: 0.01,
+        proposal: Proposal::Drift(0.08),
+        exact: false,
+    };
+    let mut ev = InterpreterEval;
+    let mut w_mean = vec![RunningMoments::new(), RunningMoments::new(), RunningMoments::new()];
+    for i in 0..3000 {
+        subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, &mut ev).unwrap();
+        if i > 500 {
+            let wv = trace.fresh_value(w);
+            let wv = wv.as_vector().unwrap().clone();
+            for (m, &v) in w_mean.iter_mut().zip(wv.iter()) {
+                m.push(v);
+            }
+        }
+    }
+    // the separator points along (+1, +1): both feature weights positive
+    assert!(w_mean[0].mean() > 0.2, "w0 = {}", w_mean[0].mean());
+    assert!(w_mean[1].mean() > 0.2, "w1 = {}", w_mean[1].mean());
+    // classification accuracy with the posterior-mean weights
+    let wv: Vec<f64> = w_mean.iter().map(|m| m.mean()).collect();
+    let correct = data
+        .x
+        .iter()
+        .zip(&data.y)
+        .filter(|(x, &y)| {
+            let z: f64 = x.iter().zip(&wv).map(|(a, b)| a * b).sum();
+            (z > 0.0) == y
+        })
+        .count();
+    assert!(correct as f64 / data.n() as f64 > 0.9);
+}
+
+/// Subsampled-vs-exact posterior agreement on the same data (the bias of
+/// the approximate chain is controlled by eps — Thm. 1).
+#[test]
+fn subsampled_bias_is_small() {
+    let data = synth2d::generate(1500, 3);
+    let run = |exact: bool, seed: u64| -> f64 {
+        let mut rng = Pcg64::seeded(seed);
+        let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+        let cfg = SubsampledConfig {
+            m: 100,
+            eps: 0.01,
+            proposal: Proposal::Drift(0.08),
+            exact,
+        };
+        let mut ev = InterpreterEval;
+        let mut m = RunningMoments::new();
+        for i in 0..2500 {
+            subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, &mut ev).unwrap();
+            if i > 400 {
+                let wv = trace.fresh_value(w);
+                m.push(wv.as_vector().unwrap()[0]);
+            }
+        }
+        m.mean()
+    };
+    let exact = run(true, 4);
+    let sub = run(false, 5);
+    assert!(
+        (exact - sub).abs() < 0.12,
+        "posterior means diverged: exact {exact} vs subsampled {sub}"
+    );
+}
+
+/// JointDPM: the full inference program improves test accuracy and keeps
+/// sufficient statistics consistent over cluster birth/death.
+#[test]
+fn joint_dpm_end_to_end() {
+    let (train, _) = dpm_data::generate(400, 7);
+    let (test, _) = dpm_data::generate(200, 8);
+    let mut rng = Pcg64::seeded(9);
+    let mut trace = build_joint_dpm(&train, &mut rng);
+    let acc0 = dpm_accuracy(&mut trace, &train, &test);
+    let mut ev = InterpreterEval;
+    let alpha = trace.lookup_node("alpha").unwrap();
+    for _ in 0..8 {
+        subppl::infer::mh_transition(&mut trace, &mut rng, alpha, &Proposal::Drift(0.3)).unwrap();
+        let zs = trace.scope_nodes("z");
+        for _ in 0..60 {
+            let z = zs[rng.below(zs.len())];
+            gibbs_transition(&mut trace, &mut rng, z).unwrap();
+        }
+        let ws = trace.scope_nodes("w");
+        let wk = ws[rng.below(ws.len())];
+        let cfg = SubsampledConfig {
+            m: 100,
+            eps: 0.3,
+            proposal: Proposal::Drift(0.25),
+            exact: false,
+        };
+        subsampled_mh_transition(&mut trace, &mut rng, wk, &cfg, &mut ev).unwrap();
+    }
+    let acc1 = dpm_accuracy(&mut trace, &train, &test);
+    assert!(acc1 > 0.55, "accuracy after inference: {acc1} (started {acc0})");
+    assert!(trace.log_joint().is_finite());
+    // CRP bookkeeping: total count equals the number of data points
+    let crp_sp = match trace.lookup_value("crp").unwrap() {
+        subppl::Value::Sp(id) => id,
+        v => panic!("{v}"),
+    };
+    assert_eq!(trace.sp(crp_sp).crp_aux().unwrap().n(), 400);
+}
+
+/// SV smoke at paper scale knobs (reduced sweeps): posterior
+/// concentrates near the generating parameters.
+#[test]
+fn sv_end_to_end_posterior_sane() {
+    let cfg = Fig9Config {
+        series: 60,
+        len: 5,
+        sweeps: 150,
+        particles: 10,
+        h_per_param: 2,
+        m: 100,
+        eps: 1e-3,
+        seed: 21,
+    };
+    let r = fig9_sv(&cfg, true);
+    let burn = r.phi_samples.len() / 3;
+    let phi_mean: f64 =
+        r.phi_samples[burn..].iter().sum::<f64>() / (r.phi_samples.len() - burn) as f64;
+    let sig_mean: f64 =
+        r.sig_samples[burn..].iter().sum::<f64>() / (r.sig_samples.len() - burn) as f64;
+    assert!((0.6..1.0).contains(&phi_mean), "phi {phi_mean}");
+    assert!((0.05..0.3).contains(&sig_mean), "sigma {sig_mean}");
+}
+
+/// The surface-syntax inference program drives the same machinery.
+#[test]
+fn surface_syntax_program_end_to_end() {
+    let model = r#"
+        [assume phi (scope_include 'phi 0 (beta 5 1))]
+        [assume h (mem (lambda (t) (scope_include 'h t
+            (if (<= t 0) 0.0 (normal (* phi (h (- t 1))) 0.2)))))]
+        [assume x (lambda (t) (normal 0 (exp (/ (h t) 2))))]
+        [observe (x 1) 0.3] [observe (x 2) -0.1] [observe (x 3) 0.2]
+        [observe (x 4) 0.15] [observe (x 5) -0.2]
+    "#;
+    let mut trace = Trace::new();
+    let mut rng = Pcg64::seeded(31);
+    trace.run_program(model, &mut rng).unwrap();
+    let cmd = parse_infer(
+        "(cycle ((pgibbs h (ordered_range 1 5) 8 1) \
+                 (subsampled_mh phi one 2 0.01 drift 0.05 1)) 300)",
+    )
+    .unwrap();
+    let stats = infer(&mut trace, &mut rng, &cmd).unwrap();
+    assert!(stats.transitions >= 600);
+    let phi = trace.lookup_value("phi").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&phi));
+    assert!(trace.log_joint().is_finite());
+}
+
+/// build_sv at the paper's full scale (200 series x 5) constructs the
+/// trace in reasonable time and with the expected partition.
+#[test]
+fn sv_full_scale_build() {
+    let series = sv_data::generate(&sv_data::SvConfig::default(), 41);
+    let mut rng = Pcg64::seeded(42);
+    let (trace, phi, sig2) = build_sv(&series, &mut rng);
+    let p = trace.cached_partition(phi).unwrap();
+    assert_eq!(p.n(), 200 * 5);
+    let p2 = trace.cached_partition(sig2).unwrap();
+    assert_eq!(p2.n(), 200 * 5);
+}
