@@ -1,18 +1,25 @@
 //! Hot-path microbenchmarks (§Perf): per-operation costs on the
 //! subsampled-MH transition path, used to drive the optimization loop.
-//! Run: `cargo bench --bench hotpath`
+//!
+//! Run: `cargo bench --bench hotpath` (`-- --quick` for the CI smoke
+//! pass).  Emits `BENCH_hotpath.json` at the repository root so the
+//! perf trajectory of the section scorers is tracked across PRs:
+//! sections/sec for the interpreter walk vs the planned arena scorer at
+//! N in {1e3, 1e4, 1e5} on the logistic-regression workload.
 
+use std::fmt::Write as _;
 use std::time::Instant;
 use subppl::coordinator::chain::build_bayes_lr;
 use subppl::data::mnist_like;
 use subppl::infer::subsampled_mh::SparseSampler;
 use subppl::infer::{
     gibbs_transition, mh_transition, subsampled_mh_transition, InterpreterEval, LocalEvaluator,
-    Proposal, SubsampledConfig,
+    PlannedEval, Proposal, SubsampledConfig,
 };
 use subppl::math::Pcg64;
-use subppl::trace::partition::build_partition;
+use subppl::trace::partition::{build_partition, Partition};
 use subppl::trace::Trace;
+use subppl::Value;
 
 fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     // warmup
@@ -26,35 +33,160 @@ fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     per
 }
 
+/// Throughput of one evaluator over the partition's sections: scores
+/// mini-batches of `m` roots until `target` sections are consumed,
+/// repeated `reps` times; returns sections/sec.
+fn sections_per_sec(
+    ev: &mut dyn LocalEvaluator,
+    trace: &mut Trace,
+    p: &Partition,
+    new_w: &Value,
+    m: usize,
+    target: usize,
+    reps: usize,
+) -> f64 {
+    let score = |ev: &mut dyn LocalEvaluator, trace: &mut Trace| {
+        let mut done = 0usize;
+        let mut idx = 0usize;
+        while done < target {
+            let end = (idx + m).min(p.locals.len());
+            let roots = &p.locals[idx..end];
+            let ls = ev.eval_sections(trace, p, roots, new_w).unwrap();
+            std::hint::black_box(ls.len());
+            done += roots.len();
+            idx = if end == p.locals.len() { 0 } else { end };
+        }
+        done
+    };
+    // warmup builds the plan cache / arena capacity
+    score(&mut *ev, &mut *trace);
+    let t0 = Instant::now();
+    let mut total = 0usize;
+    for _ in 0..reps {
+        total += score(&mut *ev, &mut *trace);
+    }
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+struct SweepRow {
+    n: usize,
+    d: usize,
+    m: usize,
+    interp_sps: f64,
+    planned_sps: f64,
+}
+
+fn scorer_sweep(ns: &[usize], d: usize, m: usize) -> Vec<SweepRow> {
+    let mut rows = Vec::new();
+    for &n in ns {
+        let data = mnist_like::sized(n, d, 0);
+        let mut rng = Pcg64::seeded(1);
+        let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+        let p = build_partition(&trace, w).unwrap();
+        let cur = trace.fresh_value(w);
+        let new_w = Proposal::Drift(0.05).propose(&cur, &mut rng).unwrap();
+        let target = n.min(4000);
+        let reps = if n >= 100_000 { 2 } else { 5 };
+        let mut interp = InterpreterEval;
+        let interp_sps =
+            sections_per_sec(&mut interp, &mut trace, &p, &new_w, m, target, reps);
+        let mut planned = PlannedEval::new();
+        let planned_sps =
+            sections_per_sec(&mut planned, &mut trace, &p, &new_w, m, target, reps);
+        println!(
+            "scorer sweep N={n:<7} interp {interp_sps:>12.0} sections/s   planned {planned_sps:>12.0} sections/s   speedup {:.2}x",
+            planned_sps / interp_sps
+        );
+        rows.push(SweepRow {
+            n,
+            d,
+            m,
+            interp_sps,
+            planned_sps,
+        });
+    }
+    rows
+}
+
+fn emit_json(rows: &[SweepRow], micro: &[(String, f64)]) {
+    let mut out = String::from("{\n  \"bench\": \"hotpath\",\n  \"workload\": \"bayes_lr\",\n  \"scorer_sweep\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "    {{\"n\": {}, \"d\": {}, \"m\": {}, \"interpreter_sections_per_sec\": {:.1}, \"planned_sections_per_sec\": {:.1}, \"speedup\": {:.3}}}{}",
+            r.n,
+            r.d,
+            r.m,
+            r.interp_sps,
+            r.planned_sps,
+            r.planned_sps / r.interp_sps,
+            if i + 1 == rows.len() { "" } else { "," }
+        );
+    }
+    out.push_str("  ],\n  \"micro_us\": {\n");
+    for (i, (label, us)) in micro.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "    \"{label}\": {:.3}{}",
+            us * 1e6,
+            if i + 1 == micro.len() { "" } else { "," }
+        );
+    }
+    out.push_str("  }\n}\n");
+    // repo root = parent of the cargo manifest dir (rust/)
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_hotpath.json"))
+        .unwrap_or_else(|| "BENCH_hotpath.json".into());
+    match std::fs::write(&path, &out) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
 fn main() {
-    println!("subppl hot-path microbenchmarks\n");
-    let data = mnist_like::sized(12214, 50, 0);
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!("subppl hot-path microbenchmarks{}\n", if quick { " (quick)" } else { "" });
+    let mut micro: Vec<(String, f64)> = Vec::new();
+
+    let n0 = if quick { 4000 } else { 12214 };
+    let data = mnist_like::sized(n0, 50, 0);
     let mut rng = Pcg64::seeded(1);
     let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
 
-    bench("build_partition (N=12214)", 200, || {
+    let t = bench(&format!("build_partition (N={n0})"), if quick { 50 } else { 200 }, || {
         let p = build_partition(&trace, w).unwrap();
         std::hint::black_box(p.n());
     });
+    micro.push(("build_partition".into(), t));
 
     let p = build_partition(&trace, w).unwrap();
     let cur = trace.fresh_value(w);
     let new_w = Proposal::Drift(0.05).propose(&cur, &mut rng).unwrap();
     let roots: Vec<_> = p.locals[..100].to_vec();
     let mut interp = InterpreterEval;
-    bench("interpreter eval_sections (m=100, D=50)", 500, || {
+    let t = bench("interpreter eval_sections (m=100, D=50)", if quick { 100 } else { 500 }, || {
         let ls = interp.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
         std::hint::black_box(ls.len());
     });
+    micro.push(("interpreter_eval_sections_m100".into(), t));
 
-    bench("sparse sampler: 100 draws of 12214", 2000, || {
-        let mut s = SparseSampler::new(12214);
+    let mut planned = PlannedEval::new();
+    let t = bench("planned eval_sections (m=100, D=50)", if quick { 100 } else { 500 }, || {
+        let ls = planned.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+        std::hint::black_box(ls.len());
+    });
+    micro.push(("planned_eval_sections_m100".into(), t));
+
+    let t = bench(&format!("sparse sampler: 100 draws of {n0}"), 2000, || {
+        let mut s = SparseSampler::new(n0);
         let mut acc = 0usize;
         for _ in 0..100 {
             acc += s.next(&mut rng);
         }
         std::hint::black_box(acc);
     });
+    micro.push(("sparse_sampler_100_draws".into(), t));
 
     let cfg = SubsampledConfig {
         m: 100,
@@ -62,20 +194,28 @@ fn main() {
         proposal: Proposal::Drift(0.05),
         exact: false,
     };
-    bench("subsampled_mh_transition (N=12214)", 200, || {
+    let t = bench(&format!("subsampled transition, planned (N={n0})"), if quick { 50 } else { 200 }, || {
+        let s = subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, &mut planned).unwrap();
+        std::hint::black_box(s.sections_evaluated);
+    });
+    micro.push(("subsampled_transition_planned".into(), t));
+
+    let t = bench(&format!("subsampled transition, interpreter (N={n0})"), if quick { 50 } else { 200 }, || {
         let s = subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, &mut interp).unwrap();
         std::hint::black_box(s.sections_evaluated);
     });
+    micro.push(("subsampled_transition_interpreter".into(), t));
 
     let exact = SubsampledConfig {
         exact: true,
         m: 1024,
         ..cfg.clone()
     };
-    bench("exact full-scan transition (N=12214)", 10, || {
-        let s = subsampled_mh_transition(&mut trace, &mut rng, w, &exact, &mut interp).unwrap();
+    let t = bench(&format!("exact full-scan transition (N={n0})"), if quick { 3 } else { 10 }, || {
+        let s = subsampled_mh_transition(&mut trace, &mut rng, w, &exact, &mut planned).unwrap();
         std::hint::black_box(s.sections_evaluated);
     });
+    micro.push(("exact_full_scan_transition".into(), t));
 
     // small-model kernels
     let mut t2 = Trace::new();
@@ -86,10 +226,11 @@ fn main() {
     )
     .unwrap();
     let mu = t2.lookup_node("mu").unwrap();
-    bench("exact mh_transition (3-node scaffold)", 5000, || {
+    let t = bench("exact mh_transition (3-node scaffold)", 5000, || {
         let s = mh_transition(&mut t2, &mut rng2, mu, &Proposal::Drift(0.3)).unwrap();
         std::hint::black_box(s.accepted);
     });
+    micro.push(("exact_mh_3_node".into(), t));
 
     let mut t3 = Trace::new();
     let mut rng3 = Pcg64::seeded(3);
@@ -99,8 +240,32 @@ fn main() {
     )
     .unwrap();
     let b = t3.lookup_node("b").unwrap();
-    bench("enumerative gibbs (2 candidates, branch flip)", 5000, || {
+    let t = bench("enumerative gibbs (2 candidates, branch flip)", 5000, || {
         let s = gibbs_transition(&mut t3, &mut rng3, b).unwrap();
         std::hint::black_box(s.accepted);
     });
+    micro.push(("enumerative_gibbs_branch_flip".into(), t));
+
+    // ---- scorer throughput sweep (the BENCH_hotpath.json payload) ----
+    println!();
+    let ns: Vec<usize> = if quick {
+        vec![1_000, 10_000]
+    } else {
+        vec![1_000, 10_000, 100_000]
+    };
+    let rows = scorer_sweep(&ns, 50, 100);
+    // write the artifact before asserting, so a regression failure still
+    // leaves the numbers behind for triage
+    emit_json(&rows, &micro);
+    for r in &rows {
+        // regression canary with a noise margin (shared CI runners); the
+        // expected steady-state ratio is well above 2x
+        assert!(
+            r.planned_sps > 0.8 * r.interp_sps,
+            "planned scorer regressed below the interpreter at N={}: {:.0} vs {:.0} sections/s",
+            r.n,
+            r.planned_sps,
+            r.interp_sps
+        );
+    }
 }

@@ -15,7 +15,7 @@ use crate::coordinator::report::{histogram, Csv};
 use crate::data::{dpm_data, mnist_like, sv_data, synth2d, Dataset};
 use crate::infer::{
     gibbs_transition, mh_transition, pgibbs_transition, subsampled_mh_transition,
-    InterpreterEval, LocalEvaluator, Proposal, SubsampledConfig,
+    LocalEvaluator, PlannedEval, Proposal, SubsampledConfig,
 };
 use crate::math::Pcg64;
 use crate::ppl::value::Value;
@@ -389,7 +389,7 @@ pub fn fig6_dpm(cfg: &Fig6Config, subsampled: bool) -> Vec<Fig6Point> {
     let (test, _) = dpm_data::generate(cfg.n_test, cfg.seed + 1);
     let mut rng = Pcg64::new(cfg.seed, 3);
     let mut trace = build_joint_dpm(&train, &mut rng);
-    let mut ev = InterpreterEval;
+    let mut ev = PlannedEval::new();
     let alpha = trace.lookup_node("alpha").unwrap();
     let mut points = Vec::new();
     let t0 = Instant::now();
@@ -554,7 +554,7 @@ pub fn fig9_sv(cfg: &Fig9Config, subsampled: bool) -> Fig9Result {
     let series = sv_data::generate(&data_cfg, cfg.seed);
     let mut rng = Pcg64::new(cfg.seed, 4);
     let (mut trace, phi, sig2) = build_sv(&series, &mut rng);
-    let mut ev = InterpreterEval;
+    let mut ev = PlannedEval::new();
     let kcfg = SubsampledConfig {
         m: cfg.m,
         eps: cfg.eps,
@@ -618,7 +618,7 @@ pub struct Table1Row {
 /// scaling parameter (N / N_k / T) for all three models.
 pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
     let mut rows = Vec::new();
-    let mut ev = InterpreterEval;
+    let mut ev = PlannedEval::new();
     // BayesLR: scaling N
     {
         let mut time_at = |n: usize| {
@@ -840,7 +840,7 @@ mod tests {
             iters: 10,
             ..Default::default()
         };
-        let mut ev = InterpreterEval;
+        let mut ev = PlannedEval::new();
         let rows = fig5_sublinear(&cfg, &mut ev);
         assert_eq!(rows.len(), 2);
         // subsampled evaluates fewer sections than N at the larger size

@@ -11,10 +11,12 @@
 //!   `gauss_ar1_ratio_m*`.
 //!
 //! Shape recognition is structural and per-root; any mismatch falls back
-//! to the interpreter walk for that batch, so the fused path is always
-//! semantics-preserving (tested against `InterpreterEval`).
+//! to the planned arena scorer (`PlannedEval`, itself bitwise-equivalent
+//! to the interpreter oracle) for that batch, so the fused path is
+//! always semantics-preserving.
 
-use crate::infer::subsampled_mh::{freshen_section, InterpreterEval, LocalEvaluator};
+use crate::infer::planned::PlannedEval;
+use crate::infer::subsampled_mh::{freshen_section, LocalEvaluator};
 use crate::ppl::sp::SpFamily;
 use crate::ppl::value::Value;
 use crate::runtime::artifacts::ArtifactRegistry;
@@ -28,12 +30,15 @@ use std::rc::Rc;
 /// does not match a known section family.
 pub struct FusedEval {
     pub registry: ArtifactRegistry,
-    fallback: InterpreterEval,
-    /// Batches smaller than this go to the interpreter: on the CPU PJRT
-    /// client the per-call dispatch overhead (~150us) exceeds the
-    /// arithmetic of a small mini-batch; the XLA path wins from a few
-    /// hundred sections up (measured in benches/ablations.rs §Perf) and
-    /// is the TPU-ready path.  Set to 0 to force XLA for every batch.
+    fallback: PlannedEval,
+    /// Batches smaller than this go to the planned arena scorer: on the
+    /// CPU PJRT client the per-call dispatch overhead (~150us) exceeds
+    /// the arithmetic of a small mini-batch.  Note the fallback is now
+    /// PlannedEval (several times faster per section than the old
+    /// interpreter walk), so the XLA break-even batch is larger than the
+    /// interpreter-era ablations suggest — re-measure with
+    /// benches/ablations.rs before tuning.  Set to 0 to force XLA for
+    /// every batch.
     pub min_fused_batch: usize,
     /// count of sections evaluated through XLA vs interpreter (perf
     /// reporting / ablations)
@@ -63,7 +68,7 @@ impl FusedEval {
     pub fn new(registry: ArtifactRegistry) -> Self {
         FusedEval {
             registry,
-            fallback: InterpreterEval,
+            fallback: PlannedEval::new(),
             min_fused_batch: 256,
             fused_sections: 0,
             fallback_sections: 0,
@@ -353,7 +358,7 @@ impl LocalEvaluator for FusedEval {
         roots: &[NodeId],
         new_v: &Value,
     ) -> Result<Vec<f64>, String> {
-        // small batches: PJRT dispatch overhead dominates; walk them
+        // small batches: PJRT dispatch overhead dominates; replay plans
         if roots.len() < self.min_fused_batch {
             self.fallback_sections += roots.len();
             return self.fallback.eval_sections(trace, p, roots, new_v);
@@ -396,7 +401,7 @@ impl LocalEvaluator for FusedEval {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::infer::subsampled_mh::LocalEvaluator;
+    use crate::infer::subsampled_mh::{InterpreterEval, LocalEvaluator};
     use crate::math::Pcg64;
     use crate::trace::partition::build_partition;
 

@@ -1,0 +1,774 @@
+//! Probability distributions: scalar log densities, samplers, and the
+//! sufficient-statistics state of the exchangeable families (CRP,
+//! collapsed normal-inverse-Wishart).
+//!
+//! Conventions:
+//! * `gamma(a, b)` is shape/rate; `inv_gamma(a, b)` is shape/scale, so
+//!   `1/X ~ InvGamma(a, b)` when `X ~ Gamma(a, rate = b)`.
+//! * `normal(mu, sigma)` takes the standard deviation.
+//! * Out-of-support values score `-inf` rather than erroring, so MH
+//!   proposals that leave the support are rejected by the ratio.
+
+use crate::math::special::{ln_beta, ln_gamma, log_sigmoid};
+use crate::math::Pcg64;
+use std::collections::BTreeMap;
+
+const LN_2PI: f64 = 1.837_877_066_409_345_3;
+const LN_PI: f64 = 1.144_729_885_849_400_2;
+
+// ---------------------------------------------------------------------
+// scalar log densities
+// ---------------------------------------------------------------------
+
+pub fn bernoulli_logpmf(b: bool, p: f64) -> f64 {
+    if !(0.0..=1.0).contains(&p) {
+        return f64::NEG_INFINITY;
+    }
+    if b {
+        p.ln()
+    } else {
+        (1.0 - p).ln()
+    }
+}
+
+/// log Bernoulli(b | sigmoid(z)) without forming the probability —
+/// numerically stable for |z| large (the fused-kernel formula).
+pub fn bernoulli_logit_logpmf(b: bool, z: f64) -> f64 {
+    if b {
+        log_sigmoid(z)
+    } else {
+        log_sigmoid(-z)
+    }
+}
+
+pub fn normal_logpdf(x: f64, mu: f64, sigma: f64) -> f64 {
+    if !(sigma > 0.0) {
+        return f64::NEG_INFINITY;
+    }
+    let z = (x - mu) / sigma;
+    -0.5 * z * z - sigma.ln() - 0.5 * LN_2PI
+}
+
+/// Gamma(shape a, rate b).
+pub fn gamma_logpdf(x: f64, a: f64, b: f64) -> f64 {
+    if !(a > 0.0 && b > 0.0) || !(x > 0.0) {
+        return f64::NEG_INFINITY;
+    }
+    a * b.ln() + (a - 1.0) * x.ln() - b * x - ln_gamma(a)
+}
+
+/// InvGamma(shape a, scale b).
+pub fn inv_gamma_logpdf(x: f64, a: f64, b: f64) -> f64 {
+    if !(a > 0.0 && b > 0.0) || !(x > 0.0) {
+        return f64::NEG_INFINITY;
+    }
+    a * b.ln() - (a + 1.0) * x.ln() - b / x - ln_gamma(a)
+}
+
+pub fn beta_logpdf(x: f64, a: f64, b: f64) -> f64 {
+    if !(a > 0.0 && b > 0.0) || !(0.0..=1.0).contains(&x) {
+        return f64::NEG_INFINITY;
+    }
+    // guard 0 * ln(0) at the support edges when an exponent is exactly 0
+    let t1 = if a == 1.0 { 0.0 } else { (a - 1.0) * x.ln() };
+    let t2 = if b == 1.0 { 0.0 } else { (b - 1.0) * (1.0 - x).ln() };
+    t1 + t2 - ln_beta(a, b)
+}
+
+pub fn uniform_logpdf(x: f64, a: f64, b: f64) -> f64 {
+    if !(b > a) || x < a || x > b {
+        return f64::NEG_INFINITY;
+    }
+    -(b - a).ln()
+}
+
+/// Student-t with `nu` dof, location `loc`, scale `scale`.
+pub fn student_t_logpdf(x: f64, nu: f64, loc: f64, scale: f64) -> f64 {
+    if !(nu > 0.0 && scale > 0.0) {
+        return f64::NEG_INFINITY;
+    }
+    let z = (x - loc) / scale;
+    ln_gamma(0.5 * (nu + 1.0)) - ln_gamma(0.5 * nu)
+        - 0.5 * (nu * std::f64::consts::PI).ln()
+        - scale.ln()
+        - 0.5 * (nu + 1.0) * (z * z / nu).ln_1p()
+}
+
+// ---------------------------------------------------------------------
+// samplers (thin, convention-fixing wrappers over math::Pcg64)
+// ---------------------------------------------------------------------
+
+/// Namespaced samplers matching the log densities above.
+pub struct Samplers;
+
+impl Samplers {
+    pub fn bernoulli(rng: &mut Pcg64, p: f64) -> bool {
+        rng.bernoulli(p)
+    }
+
+    pub fn normal(rng: &mut Pcg64, mu: f64, sigma: f64) -> f64 {
+        rng.normal_scaled(mu, sigma)
+    }
+
+    /// Gamma(shape, rate).
+    pub fn gamma(rng: &mut Pcg64, shape: f64, rate: f64) -> f64 {
+        rng.gamma(shape) / rate
+    }
+
+    /// InvGamma(shape, scale).
+    pub fn inv_gamma(rng: &mut Pcg64, shape: f64, scale: f64) -> f64 {
+        scale / rng.gamma(shape)
+    }
+
+    pub fn beta(rng: &mut Pcg64, a: f64, b: f64) -> f64 {
+        rng.beta(a, b)
+    }
+
+    pub fn uniform(rng: &mut Pcg64, a: f64, b: f64) -> f64 {
+        a + (b - a) * rng.uniform()
+    }
+
+    pub fn student_t(rng: &mut Pcg64, nu: f64, loc: f64, scale: f64) -> f64 {
+        loc + scale * rng.student_t(nu)
+    }
+}
+
+// ---------------------------------------------------------------------
+// CRP sufficient statistics
+// ---------------------------------------------------------------------
+
+/// Seating counts of a Chinese restaurant process instance.
+///
+/// Tables are `i64` ids; a `BTreeMap` keeps enumeration order
+/// deterministic (bit-reproducible categorical draws and gibbs
+/// candidate lists).  Fresh tables come from a monotone counter so a
+/// freed id is never silently resurrected with stale mem-cache state.
+#[derive(Clone, Debug, Default)]
+pub struct CrpAux {
+    counts: BTreeMap<i64, usize>,
+    n: usize,
+    next_table: i64,
+}
+
+impl CrpAux {
+    pub fn new() -> CrpAux {
+        CrpAux::default()
+    }
+
+    /// Total number of incorporated customers.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn count(&self, table: i64) -> usize {
+        self.counts.get(&table).copied().unwrap_or(0)
+    }
+
+    /// Occupied tables in ascending id order.
+    pub fn tables(&self) -> Vec<i64> {
+        self.counts.keys().copied().collect()
+    }
+
+    pub fn num_tables(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// An id no table has ever used (safe as a gibbs auxiliary table).
+    pub fn fresh_table(&self) -> i64 {
+        self.next_table
+    }
+
+    pub fn incorporate(&mut self, table: i64) {
+        *self.counts.entry(table).or_insert(0) += 1;
+        self.n += 1;
+        self.next_table = self.next_table.max(table + 1);
+    }
+
+    pub fn unincorporate(&mut self, table: i64) {
+        let c = self
+            .counts
+            .get_mut(&table)
+            .expect("crp unincorporate: table has no customers");
+        *c -= 1;
+        if *c == 0 {
+            self.counts.remove(&table);
+        }
+        self.n -= 1;
+    }
+
+    /// Predictive log probability of seating the next customer at
+    /// `table` (which may be unoccupied => the alpha/new-table term).
+    pub fn predictive_logp(&self, table: i64, alpha: f64) -> f64 {
+        let denom = self.n as f64 + alpha;
+        match self.count(table) {
+            0 => (alpha / denom).ln(),
+            c => (c as f64 / denom).ln(),
+        }
+    }
+
+    /// Draw the next customer's table from the predictive.
+    pub fn sample(&self, rng: &mut Pcg64, alpha: f64) -> i64 {
+        let total = self.n as f64 + alpha;
+        let mut u = rng.uniform() * total;
+        for (&t, &c) in &self.counts {
+            u -= c as f64;
+            if u <= 0.0 {
+                return t;
+            }
+        }
+        self.next_table
+    }
+
+    /// Joint log probability of the current seating (EPPF): the product
+    /// of the predictive chain in any insertion order,
+    /// `alpha^K prod_t (c_t - 1)! / prod_{i<n} (alpha + i)`.
+    pub fn seating_logp(&self, alpha: f64) -> f64 {
+        if !(alpha > 0.0) {
+            return f64::NEG_INFINITY;
+        }
+        let mut lp = self.counts.len() as f64 * alpha.ln();
+        for &c in self.counts.values() {
+            lp += ln_gamma(c as f64);
+        }
+        lp + ln_gamma(alpha) - ln_gamma(alpha + self.n as f64)
+    }
+}
+
+// ---------------------------------------------------------------------
+// small dense matrix helpers (d is 2..50 in the paper's programs)
+// ---------------------------------------------------------------------
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite
+/// matrix; None if the matrix is not PD (or not square).
+fn cholesky(a: &[Vec<f64>]) -> Option<Vec<Vec<f64>>> {
+    let d = a.len();
+    let mut l = vec![vec![0.0; d]; d];
+    for i in 0..d {
+        if a[i].len() != d {
+            return None;
+        }
+        for j in 0..=i {
+            let mut s = a[i][j];
+            for k in 0..j {
+                s -= l[i][k] * l[j][k];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                l[i][i] = s.sqrt();
+            } else {
+                l[i][j] = s / l[j][j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// log |A| from A's Cholesky factor.
+fn chol_logdet(l: &[Vec<f64>]) -> f64 {
+    2.0 * l.iter().enumerate().map(|(i, row)| row[i].ln()).sum::<f64>()
+}
+
+/// Solve L y = b (forward substitution) and return |y|^2 = b' A^-1 b.
+fn chol_quadform(l: &[Vec<f64>], b: &[f64]) -> f64 {
+    let d = b.len();
+    let mut y = vec![0.0; d];
+    let mut q = 0.0;
+    for i in 0..d {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i][k] * y[k];
+        }
+        let yi = s / l[i][i];
+        y[i] = yi;
+        q += yi * yi;
+    }
+    q
+}
+
+// ---------------------------------------------------------------------
+// multivariate normal
+// ---------------------------------------------------------------------
+
+/// A multivariate normal with precomputed Cholesky factor of the
+/// covariance.  Degenerate parameterizations (non-positive variances)
+/// build an invalid instance that scores `-inf` everywhere.
+#[derive(Clone, Debug)]
+pub struct MvNormal {
+    mean: Vec<f64>,
+    /// Lower-triangular Cholesky factor of the covariance; empty when
+    /// the parameterization is invalid.
+    chol: Vec<Vec<f64>>,
+    log_det: f64,
+    valid: bool,
+}
+
+impl MvNormal {
+    /// Covariance `var * I`.
+    pub fn isotropic(mean: Vec<f64>, var: f64) -> MvNormal {
+        let d = mean.len();
+        Self::diagonal(mean, vec![var; d])
+    }
+
+    /// Diagonal covariance.
+    pub fn diagonal(mean: Vec<f64>, vars: Vec<f64>) -> MvNormal {
+        let d = mean.len();
+        if vars.len() != d || vars.iter().any(|&v| !(v > 0.0)) {
+            return MvNormal {
+                mean,
+                chol: Vec::new(),
+                log_det: f64::NAN,
+                valid: false,
+            };
+        }
+        let mut chol = vec![vec![0.0; d]; d];
+        let mut log_det = 0.0;
+        for i in 0..d {
+            chol[i][i] = vars[i].sqrt();
+            log_det += vars[i].ln();
+        }
+        MvNormal {
+            mean,
+            chol,
+            log_det,
+            valid: true,
+        }
+    }
+
+    /// Full covariance matrix; None on shape mismatch or non-PD input.
+    pub fn full(mean: Vec<f64>, cov: &[Vec<f64>]) -> Option<MvNormal> {
+        if cov.len() != mean.len() {
+            return None;
+        }
+        let chol = cholesky(cov)?;
+        let log_det = chol_logdet(&chol);
+        Some(MvNormal {
+            mean,
+            chol,
+            log_det,
+            valid: true,
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn logpdf(&self, x: &[f64]) -> f64 {
+        if !self.valid || x.len() != self.mean.len() {
+            return f64::NEG_INFINITY;
+        }
+        let d = self.mean.len();
+        let diff: Vec<f64> = x.iter().zip(&self.mean).map(|(a, b)| a - b).collect();
+        let q = chol_quadform(&self.chol, &diff);
+        -0.5 * q - 0.5 * self.log_det - 0.5 * d as f64 * LN_2PI
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> Vec<f64> {
+        let d = self.mean.len();
+        if !self.valid {
+            return vec![f64::NAN; d];
+        }
+        let z: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut out = self.mean.clone();
+        for i in 0..d {
+            for (k, &zk) in z.iter().enumerate().take(i + 1) {
+                out[i] += self.chol[i][k] * zk;
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// collapsed normal-inverse-Wishart
+// ---------------------------------------------------------------------
+
+/// Sufficient statistics of a collapsed NIW feature model (the JointDPM
+/// per-cluster density).  Incorporate/unincorporate are O(d^2); scoring
+/// is O(d^3) on the (tiny) per-cluster posterior matrices.
+///
+/// Formulas follow Murphy, "Conjugate Bayesian analysis of the Gaussian
+/// distribution": posterior (k_n, v_n, m_n, S_n), multivariate-t
+/// predictive, and the closed-form marginal likelihood.
+#[derive(Clone, Debug)]
+pub struct CollapsedNiw {
+    pub m0: Vec<f64>,
+    pub k0: f64,
+    pub v0: f64,
+    pub s0: Vec<Vec<f64>>,
+    n: usize,
+    /// sum_i x_i
+    sum: Vec<f64>,
+    /// sum_i x_i x_i'
+    sumsq: Vec<Vec<f64>>,
+}
+
+impl CollapsedNiw {
+    pub fn new(m0: Vec<f64>, k0: f64, v0: f64, s0: Vec<Vec<f64>>) -> CollapsedNiw {
+        let d = m0.len();
+        assert!(k0 > 0.0, "NIW k0 must be > 0");
+        assert!(v0 > d as f64 - 1.0, "NIW v0 must exceed d - 1");
+        assert_eq!(s0.len(), d, "NIW S0 must be d x d");
+        CollapsedNiw {
+            m0,
+            k0,
+            v0,
+            s0,
+            n: 0,
+            sum: vec![0.0; d],
+            sumsq: vec![vec![0.0; d]; d],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.m0.len()
+    }
+
+    pub fn incorporate(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.d(), "NIW incorporate: dim mismatch");
+        self.n += 1;
+        for i in 0..x.len() {
+            self.sum[i] += x[i];
+            for j in 0..x.len() {
+                self.sumsq[i][j] += x[i] * x[j];
+            }
+        }
+    }
+
+    pub fn unincorporate(&mut self, x: &[f64]) {
+        assert!(self.n > 0, "NIW unincorporate on empty state");
+        assert_eq!(x.len(), self.d(), "NIW unincorporate: dim mismatch");
+        self.n -= 1;
+        for i in 0..x.len() {
+            self.sum[i] -= x[i];
+            for j in 0..x.len() {
+                self.sumsq[i][j] -= x[i] * x[j];
+            }
+        }
+    }
+
+    /// Posterior hyperparameters (k_n, v_n, m_n, S_n) from the current
+    /// sufficient statistics:
+    ///   S_n = S_0 + sumsq + k_0 m_0 m_0' - k_n m_n m_n'.
+    fn posterior(&self) -> (f64, f64, Vec<f64>, Vec<Vec<f64>>) {
+        let d = self.d();
+        let kn = self.k0 + self.n as f64;
+        let vn = self.v0 + self.n as f64;
+        let mn: Vec<f64> = (0..d)
+            .map(|i| (self.k0 * self.m0[i] + self.sum[i]) / kn)
+            .collect();
+        let mut sn = self.s0.clone();
+        for i in 0..d {
+            for j in 0..d {
+                sn[i][j] += self.sumsq[i][j] + self.k0 * self.m0[i] * self.m0[j]
+                    - kn * mn[i] * mn[j];
+            }
+        }
+        (kn, vn, mn, sn)
+    }
+
+    /// Predictive density: multivariate Student-t with
+    /// nu = v_n - d + 1, location m_n, scale S_n (k_n + 1)/(k_n nu).
+    pub fn predictive_logpdf(&self, x: &[f64]) -> f64 {
+        let d = self.d();
+        if x.len() != d {
+            return f64::NEG_INFINITY;
+        }
+        let (kn, vn, mn, sn) = self.posterior();
+        let nu = vn - d as f64 + 1.0;
+        let scale = (kn + 1.0) / (kn * nu);
+        let sigma: Vec<Vec<f64>> = sn
+            .iter()
+            .map(|row| row.iter().map(|v| v * scale).collect())
+            .collect();
+        let Some(l) = cholesky(&sigma) else {
+            return f64::NEG_INFINITY;
+        };
+        let diff: Vec<f64> = x.iter().zip(&mn).map(|(a, b)| a - b).collect();
+        let q = chol_quadform(&l, &diff);
+        ln_gamma(0.5 * (nu + d as f64)) - ln_gamma(0.5 * nu)
+            - 0.5 * d as f64 * (nu.ln() + LN_PI)
+            - 0.5 * chol_logdet(&l)
+            - 0.5 * (nu + d as f64) * (q / nu).ln_1p()
+    }
+
+    /// Draw from the multivariate-t predictive.
+    pub fn predictive_sample(&self, rng: &mut Pcg64) -> Vec<f64> {
+        let d = self.d();
+        let (kn, vn, mn, sn) = self.posterior();
+        let nu = vn - d as f64 + 1.0;
+        let scale = (kn + 1.0) / (kn * nu);
+        let sigma: Vec<Vec<f64>> = sn
+            .iter()
+            .map(|row| row.iter().map(|v| v * scale).collect())
+            .collect();
+        let Some(l) = cholesky(&sigma) else {
+            return vec![f64::NAN; d];
+        };
+        // x = m_n + L z sqrt(nu / w), w ~ chi2(nu)
+        let w = rng.chi2(nu);
+        let s = (nu / w).sqrt();
+        let z: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut out = mn;
+        for i in 0..d {
+            for (k, &zk) in z.iter().enumerate().take(i + 1) {
+                out[i] += l[i][k] * zk * s;
+            }
+        }
+        out
+    }
+
+    /// Closed-form marginal log likelihood of everything incorporated
+    /// (the AAA score when the maker's hyperparameters are in D):
+    ///   log p(X) = -(n d / 2) log pi
+    ///            + lnGamma_d(v_n/2) - lnGamma_d(v_0/2)
+    ///            + (v_0/2) log|S_0| - (v_n/2) log|S_n|
+    ///            + (d/2)(log k_0 - log k_n).
+    pub fn marginal_loglik(&self) -> f64 {
+        let d = self.d();
+        if self.n == 0 {
+            return 0.0;
+        }
+        let (kn, vn, _, sn) = self.posterior();
+        let (Some(l0), Some(ln_)) = (cholesky(&self.s0), cholesky(&sn)) else {
+            return f64::NEG_INFINITY;
+        };
+        -0.5 * (self.n * d) as f64 * LN_PI
+            + ln_multigamma(d, 0.5 * vn)
+            - ln_multigamma(d, 0.5 * self.v0)
+            + 0.5 * self.v0 * chol_logdet(&l0)
+            - 0.5 * vn * chol_logdet(&ln_)
+            + 0.5 * d as f64 * (self.k0.ln() - kn.ln())
+    }
+}
+
+/// Multivariate log-gamma: ln Gamma_d(a).
+fn ln_multigamma(d: usize, a: f64) -> f64 {
+    let mut s = 0.25 * (d * (d - 1)) as f64 * LN_PI;
+    for j in 1..=d {
+        s += ln_gamma(a + 0.5 * (1.0 - j as f64));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_logpdf_known() {
+        // standard normal at 0: -0.5 ln(2 pi)
+        assert!((normal_logpdf(0.0, 0.0, 1.0) + 0.918_938_533_204_672_7).abs() < 1e-12);
+        // scaling: N(1, 2^2) at 3 = phi(1)/2
+        let want = -0.5 - 2f64.ln() - 0.5 * LN_2PI;
+        assert!((normal_logpdf(3.0, 1.0, 2.0) - want).abs() < 1e-12);
+        assert_eq!(normal_logpdf(0.0, 0.0, 0.0), f64::NEG_INFINITY);
+        assert_eq!(normal_logpdf(0.0, 0.0, -1.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn bernoulli_variants_agree() {
+        for &z in &[-3.0, -0.5, 0.0, 0.7, 4.0] {
+            let p = 1.0 / (1.0 + (-z as f64).exp());
+            for &b in &[true, false] {
+                let a = bernoulli_logpmf(b, p);
+                let c = bernoulli_logit_logpmf(b, z);
+                assert!((a - c).abs() < 1e-12, "z={z} b={b}: {a} vs {c}");
+            }
+        }
+        assert_eq!(bernoulli_logpmf(true, 1.5), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn gamma_inv_gamma_consistency() {
+        // scipy.stats.gamma(2, scale=1/3).logpdf(0.5) = ln(9*0.5*e^-1.5)
+        let want = (9.0f64 * 0.5).ln() - 1.5;
+        assert!((gamma_logpdf(0.5, 2.0, 3.0) - want).abs() < 1e-12);
+        // if X ~ Gamma(a, rate b) then Y = 1/X ~ InvGamma(a, b):
+        // f_Y(y) = f_X(1/y) / y^2
+        for &(a, b, y) in &[(2.0, 3.0, 0.7), (5.0, 0.05, 0.01), (1.0, 1.0, 2.0)] {
+            let lhs = inv_gamma_logpdf(y, a, b);
+            let rhs = gamma_logpdf(1.0 / y, a, b) - 2.0 * y.ln();
+            assert!((lhs - rhs).abs() < 1e-10, "({a},{b},{y})");
+        }
+        assert_eq!(gamma_logpdf(-1.0, 2.0, 1.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn beta_logpdf_known_and_edges() {
+        // Beta(2,2) at 0.5: ln(6 * 0.25)
+        assert!((beta_logpdf(0.5, 2.0, 2.0) - 1.5f64.ln()).abs() < 1e-12);
+        // Beta(5,1) at 1.0: density 5 x^4 -> ln 5 (edge must not NaN)
+        assert!((beta_logpdf(1.0, 5.0, 1.0) - 5f64.ln()).abs() < 1e-12);
+        assert_eq!(beta_logpdf(-0.1, 2.0, 2.0), f64::NEG_INFINITY);
+        assert_eq!(beta_logpdf(1.1, 2.0, 2.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn student_t_matches_cauchy_and_normal_limits() {
+        // nu=1 is Cauchy: ln(1/(pi (1 + x^2)))
+        let want = -(std::f64::consts::PI * (1.0 + 4.0)).ln();
+        assert!((student_t_logpdf(2.0, 1.0, 0.0, 1.0) - want).abs() < 1e-10);
+        // large nu approaches the normal
+        let t = student_t_logpdf(0.7, 1e7, 0.0, 1.0);
+        let n = normal_logpdf(0.7, 0.0, 1.0);
+        assert!((t - n).abs() < 1e-5, "{t} vs {n}");
+    }
+
+    #[test]
+    fn samplers_match_densities_in_moments() {
+        let mut rng = Pcg64::seeded(1);
+        let n = 60_000;
+        // Gamma(3, rate 2): mean 1.5
+        let m: f64 = (0..n).map(|_| Samplers::gamma(&mut rng, 3.0, 2.0)).sum::<f64>() / n as f64;
+        assert!((m - 1.5).abs() < 0.03, "gamma mean {m}");
+        // InvGamma(5, scale 0.05): mean 0.05/4
+        let m: f64 =
+            (0..n).map(|_| Samplers::inv_gamma(&mut rng, 5.0, 0.05)).sum::<f64>() / n as f64;
+        assert!((m - 0.0125).abs() < 2e-4, "inv_gamma mean {m}");
+        // Uniform(-1, 3): mean 1
+        let m: f64 = (0..n).map(|_| Samplers::uniform(&mut rng, -1.0, 3.0)).sum::<f64>() / n as f64;
+        assert!((m - 1.0).abs() < 0.02, "uniform mean {m}");
+    }
+
+    #[test]
+    fn crp_roundtrip_and_eppf() {
+        let mut aux = CrpAux::new();
+        let alpha = 1.3;
+        assert_eq!(aux.predictive_logp(0, alpha), 0.0); // first customer
+        aux.incorporate(0);
+        aux.incorporate(0);
+        aux.incorporate(1);
+        assert_eq!(aux.n(), 3);
+        assert_eq!(aux.count(0), 2);
+        assert_eq!(aux.tables(), vec![0, 1]);
+        assert_eq!(aux.fresh_table(), 2);
+        // EPPF equals the telescoped predictive chain
+        let chain = (alpha / alpha).ln()
+            + (1.0 / (1.0 + alpha)).ln()
+            + (alpha / (2.0 + alpha)).ln();
+        assert!((aux.seating_logp(alpha) - chain).abs() < 1e-12);
+        aux.unincorporate(1);
+        assert_eq!(aux.tables(), vec![0]);
+        // freed id is never reissued
+        assert_eq!(aux.fresh_table(), 2);
+    }
+
+    #[test]
+    fn crp_sample_matches_predictive() {
+        let mut aux = CrpAux::new();
+        for _ in 0..6 {
+            aux.incorporate(0);
+        }
+        for _ in 0..2 {
+            aux.incorporate(1);
+        }
+        let alpha = 2.0;
+        let mut rng = Pcg64::seeded(7);
+        let mut counts = std::collections::HashMap::new();
+        let trials = 50_000;
+        for _ in 0..trials {
+            *counts.entry(aux.sample(&mut rng, alpha)).or_insert(0usize) += 1;
+        }
+        let frac0 = counts[&0] as f64 / trials as f64;
+        let fresh = counts.get(&aux.fresh_table()).copied().unwrap_or(0) as f64 / trials as f64;
+        assert!((frac0 - 0.6).abs() < 0.01, "{frac0}");
+        assert!((fresh - 0.2).abs() < 0.01, "{fresh}");
+    }
+
+    #[test]
+    fn mvn_logpdf_matches_scalar_product() {
+        let mvn = MvNormal::isotropic(vec![1.0, -2.0], 4.0);
+        let x = [0.0, 0.0];
+        let want = normal_logpdf(0.0, 1.0, 2.0) + normal_logpdf(0.0, -2.0, 2.0);
+        assert!((mvn.logpdf(&x) - want).abs() < 1e-12);
+        // full covariance agrees with diagonal when off-diagonals are 0
+        let full = MvNormal::full(
+            vec![1.0, -2.0],
+            &[vec![4.0, 0.0], vec![0.0, 4.0]],
+        )
+        .unwrap();
+        assert!((full.logpdf(&x) - want).abs() < 1e-12);
+        // non-PD covariance is rejected
+        assert!(MvNormal::full(vec![0.0, 0.0], &[vec![1.0, 2.0], vec![2.0, 1.0]]).is_none());
+        // invalid variance scores -inf
+        assert_eq!(MvNormal::isotropic(vec![0.0], -1.0).logpdf(&[0.0]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn mvn_correlated_logpdf_known() {
+        // cov [[2, 1], [1, 2]]: det 3, inv = [[2,-1],[-1,2]]/3
+        let mvn = MvNormal::full(vec![0.0, 0.0], &[vec![2.0, 1.0], vec![1.0, 2.0]]).unwrap();
+        let x = [1.0, -1.0];
+        // det = 3, x' cov^-1 x = 2
+        let want = -0.5 * 2.0 - 0.5 * 3f64.ln() - LN_2PI;
+        assert!((mvn.logpdf(&x) - want).abs() < 1e-12, "{}", mvn.logpdf(&x));
+    }
+
+    #[test]
+    fn mvn_sample_moments() {
+        let mvn = MvNormal::full(vec![1.0, 2.0], &[vec![2.0, 1.0], vec![1.0, 2.0]]).unwrap();
+        let mut rng = Pcg64::seeded(3);
+        let n = 60_000;
+        let (mut m0, mut m1, mut c01) = (0.0, 0.0, 0.0);
+        let samples: Vec<Vec<f64>> = (0..n).map(|_| mvn.sample(&mut rng)).collect();
+        for s in &samples {
+            m0 += s[0];
+            m1 += s[1];
+        }
+        m0 /= n as f64;
+        m1 /= n as f64;
+        for s in &samples {
+            c01 += (s[0] - m0) * (s[1] - m1);
+        }
+        c01 /= n as f64;
+        assert!((m0 - 1.0).abs() < 0.03, "{m0}");
+        assert!((m1 - 2.0).abs() < 0.03, "{m1}");
+        assert!((c01 - 1.0).abs() < 0.06, "{c01}");
+    }
+
+    #[test]
+    fn niw_chain_equals_marginal() {
+        // sum of predictives along any insertion order = marginal loglik
+        let mut niw = CollapsedNiw::new(
+            vec![0.0, 0.0],
+            1.0,
+            4.0,
+            vec![vec![1.0, 0.0], vec![0.0, 1.0]],
+        );
+        let xs = [[0.3, -0.1], [1.2, 0.4], [-0.7, 0.9], [0.05, 0.0]];
+        let mut chain = 0.0;
+        for x in &xs {
+            chain += niw.predictive_logpdf(x);
+            niw.incorporate(x);
+        }
+        let marginal = niw.marginal_loglik();
+        assert!((chain - marginal).abs() < 1e-9, "{chain} vs {marginal}");
+        // remove/re-add identity
+        niw.unincorporate(&xs[1]);
+        let pred = niw.predictive_logpdf(&xs[1]);
+        niw.incorporate(&xs[1]);
+        assert!((niw.marginal_loglik() - marginal).abs() < 1e-9);
+        assert!(pred.is_finite());
+    }
+
+    #[test]
+    fn niw_predictive_is_normalized_1d_check() {
+        // d=1 collapses to a scalar Student-t; compare against it
+        let niw = CollapsedNiw::new(vec![0.5], 2.0, 3.0, vec![vec![1.5]]);
+        let (kn, vn, mn, sn) = (2.0, 3.0, vec![0.5], vec![vec![1.5]]);
+        let nu = vn - 1.0 + 1.0;
+        let scale = (sn[0][0] * (kn + 1.0) / (kn * nu)).sqrt();
+        for &x in &[-1.0, 0.0, 0.5, 2.0] {
+            let want = student_t_logpdf(x, nu, mn[0], scale);
+            let got = niw.predictive_logpdf(&[x]);
+            assert!((got - want).abs() < 1e-10, "x={x}: {got} vs {want}");
+        }
+    }
+}

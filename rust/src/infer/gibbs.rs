@@ -69,6 +69,11 @@ pub fn gibbs_transition(
     let mut weights = Vec::with_capacity(cands.len());
     let mut draws: Vec<Vec<Value>> = Vec::with_capacity(cands.len());
     for cand in &cands {
+        // candidate scoring is a scratch evaluation: rollback restores
+        // the exact structure, so restore the version stamp too — K
+        // rolled-back candidate regens per transition would otherwise
+        // invalidate the partition/plan caches on every gibbs step
+        let structure_v0 = trace.structure_version;
         let mut jk = Journal::new();
         let w = regen(
             trace,
@@ -81,6 +86,7 @@ pub fn gibbs_transition(
         weights.push(w.absorbed + w.principal);
         draws.push(jk.draws.clone());
         rollback(trace, jk);
+        trace.structure_version = structure_v0;
     }
     let pick = rng.categorical_log(&weights);
     let mut jf = Journal::new();

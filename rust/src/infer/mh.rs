@@ -73,6 +73,13 @@ pub fn mh_transition(
             }
         },
     };
+    // Rollback restores the exact pre-transition structure, so the
+    // structure version is restored too — otherwise every rejected
+    // structural proposal would spuriously invalidate the partition and
+    // section-plan caches.  Safe because nothing builds cache entries
+    // while a journal is open (caches are only written from the
+    // subsampled/evaluator layer, never inside detach/regen).
+    let structure_v0 = trace.structure_version;
     let mut j = Journal::new();
     let w_old = detach(trace, &scaffold, &mut j);
     let w_new = regen(trace, &scaffold, mode, None, rng, &mut j)?;
@@ -95,6 +102,7 @@ pub fn mh_transition(
         commit(trace, j);
     } else {
         rollback(trace, j);
+        trace.structure_version = structure_v0;
     }
     Ok(stats)
 }

@@ -3,6 +3,7 @@
 //! * `mh` — exact single-site MH on scaffolds (Alg. 1)
 //! * `seqtest` — the sequential Student-t test (Alg. 2)
 //! * `subsampled_mh` — sublinear approximate MH (Alg. 3)
+//! * `planned` — the default arena-backed section scorer (cached plans)
 //! * `gibbs` — enumerative single-site Gibbs (CRP reassignment)
 //! * `pgibbs` — particle Gibbs (conditional SMC) over state chains
 //! * `program` — the `(cycle (...) k)` inference-program interpreter
@@ -10,6 +11,7 @@
 pub mod gibbs;
 pub mod mh;
 pub mod pgibbs;
+pub mod planned;
 pub mod program;
 pub mod seqtest;
 pub mod subsampled_mh;
@@ -17,6 +19,7 @@ pub mod subsampled_mh;
 pub use gibbs::gibbs_transition;
 pub use mh::{mh_transition, Proposal, TransitionStats};
 pub use pgibbs::pgibbs_transition;
+pub use planned::PlannedEval;
 pub use program::{infer, parse_infer, run_command, BlockSel, InfCmd, InferStats};
 pub use seqtest::{SequentialTest, TestState};
 pub use subsampled_mh::{

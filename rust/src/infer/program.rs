@@ -15,9 +15,8 @@
 use crate::infer::gibbs::gibbs_transition;
 use crate::infer::mh::{mh_transition, Proposal, TransitionStats};
 use crate::infer::pgibbs::pgibbs_transition;
-use crate::infer::subsampled_mh::{
-    subsampled_mh_transition, InterpreterEval, LocalEvaluator, SubsampledConfig,
-};
+use crate::infer::planned::PlannedEval;
+use crate::infer::subsampled_mh::{subsampled_mh_transition, LocalEvaluator, SubsampledConfig};
 use crate::math::Pcg64;
 use crate::ppl::ast::Expr;
 use crate::ppl::value::Value;
@@ -181,9 +180,9 @@ pub fn run_command(
     Ok(stats)
 }
 
-/// Convenience: run with the interpreter evaluator.
+/// Convenience: run with the default (planned, arena-backed) evaluator.
 pub fn infer(trace: &mut Trace, rng: &mut Pcg64, cmd: &InfCmd) -> Result<InferStats, String> {
-    run_command(trace, rng, cmd, &mut InterpreterEval)
+    run_command(trace, rng, cmd, &mut PlannedEval::new())
 }
 
 // ---------------------------------------------------------------------

@@ -11,7 +11,7 @@ use std::io::Read;
 use subppl::coordinator::experiments as exp;
 use subppl::coordinator::report::{results_dir, Table};
 use subppl::coordinator::FusedEval;
-use subppl::infer::{infer, parse_infer, InterpreterEval, LocalEvaluator};
+use subppl::infer::{infer, parse_infer, LocalEvaluator, PlannedEval};
 use subppl::math::Pcg64;
 use subppl::trace::Trace;
 
@@ -123,10 +123,10 @@ fn evaluator_for(args: &[String]) -> Box<dyn LocalEvaluator> {
     if flag(args, "--fused") {
         match FusedEval::open_default() {
             Ok(f) => return Box::new(f),
-            Err(e) => eprintln!("--fused unavailable ({e}); falling back to interpreter"),
+            Err(e) => eprintln!("--fused unavailable ({e}); falling back to planned evaluator"),
         }
     }
-    Box::new(InterpreterEval)
+    Box::new(PlannedEval::new())
 }
 
 fn cmd_experiment(args: &[String]) -> Result<(), String> {

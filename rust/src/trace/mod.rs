@@ -5,9 +5,11 @@ pub mod eval;
 pub mod node;
 pub mod partition;
 pub mod pet;
+pub mod plan;
 pub mod regen;
 pub mod scaffold;
 
 pub use eval::Evaluator;
 pub use node::{ArgRef, EvalResult, Node, NodeId, NodeKind};
 pub use pet::Trace;
+pub use plan::{ScorerArena, SectionPlan};

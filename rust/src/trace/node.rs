@@ -127,24 +127,39 @@ impl Node {
         }
     }
 
-    /// Dynamic (node-backed) parents implied by kind + args.
-    pub fn dyn_parents(&self) -> Vec<NodeId> {
-        let mut ps: Vec<NodeId> = self.args.iter().filter_map(|a| a.node()).collect();
+    /// Visit every dynamic (node-backed) parent implied by kind + args,
+    /// possibly with duplicates — the allocation-free core of
+    /// `dyn_parents`, and the single definition of the parent set (hot
+    /// paths like `freshen_section` iterate through this instead of
+    /// duplicating the kind dispatch).
+    pub fn for_each_dyn_parent(&self, mut f: impl FnMut(NodeId)) {
+        for a in &self.args {
+            if let ArgRef::Node(id) = a {
+                f(*id);
+            }
+        }
         match &self.kind {
-            NodeKind::StochDyn { op } => ps.push(*op),
+            NodeKind::StochDyn { op } => f(*op),
             NodeKind::MemApp { target, .. } => {
                 if let Some(t) = target.node() {
-                    ps.push(t);
+                    f(t);
                 }
             }
             NodeKind::If { branch, .. } => {
                 if let Some(b) = branch.node() {
-                    ps.push(b);
+                    f(b);
                 }
             }
-            NodeKind::Inner { inner } => ps.push(*inner),
+            NodeKind::Inner { inner } => f(*inner),
             _ => {}
         }
+    }
+
+    /// Dynamic (node-backed) parents implied by kind + args, sorted and
+    /// deduplicated.
+    pub fn dyn_parents(&self) -> Vec<NodeId> {
+        let mut ps: Vec<NodeId> = Vec::new();
+        self.for_each_dyn_parent(|p| ps.push(p));
         ps.sort_unstable();
         ps.dedup();
         ps

@@ -244,18 +244,16 @@ pub fn freshen_partition(trace: &mut Trace, p: &Partition) {
 pub fn commit_global(trace: &mut Trace, p: &Partition, new_principal: Value) {
     trace.set_value(p.v, new_principal);
     // recompute the (short) global path eagerly
-    let rest: Vec<NodeId> = p.global_drg[1..].to_vec();
-    for n in rest {
+    for &n in &p.global_drg[1..] {
         if let Some(v) = trace.compute_det_value(n) {
             trace.set_value(n, v);
         }
     }
     trace.bump_epoch();
-    // re-stamp the global section as fresh under the new epoch
-    let all: Vec<NodeId> = p.global_drg.clone();
-    for n in all {
-        let v = trace.node(n).value.clone();
-        trace.set_value(n, v);
+    // re-stamp the global section as fresh under the new epoch — its
+    // values were just written, so only the epoch stamp moves
+    for &n in &p.global_drg {
+        trace.touch(n);
     }
 }
 

@@ -92,9 +92,15 @@ pub struct Trace {
     /// Node epochs live out-of-line so `fresh_value` can run with `&self`
     /// node borrows (u64 per slot, index-aligned with `nodes`).
     pub(crate) epochs: Vec<u64>,
-    /// Bumped on any structural change (node alloc/free/rekey/branch
-    /// swap).  Caches keyed on structure (border partitions, fused
-    /// plans) revalidate against this.
+    /// Bumped on any structural change (node alloc/free, child-edge
+    /// rewiring from rekeys/branch swaps).  Caches keyed on structure
+    /// (border partitions, section plans) revalidate against this.
+    /// Invariant: rejected transitions restore this to its
+    /// pre-journal value after `rollback` (the structure is exactly
+    /// restored), which is sound only because cache entries are never
+    /// created while a journal is open — do not call
+    /// `cached_partition`/`cached_section_plan` from inside
+    /// detach/regen/rollback.
     pub structure_version: u64,
     pub(crate) records: Vec<DirectiveRecord>,
     pub(crate) observations: Vec<NodeId>,
@@ -103,7 +109,21 @@ pub struct Trace {
     /// clones the border's N-child list, which would otherwise make
     /// every subsampled transition O(N).
     partition_cache: RefCell<HashMap<NodeId, Rc<crate::trace::partition::Partition>>>,
+    /// Section-plan cache (trace/plan.rs), keyed by (principal, border
+    /// child) and validated against `structure_version` exactly like the
+    /// partition cache — re-lowering a section per mini-batch would put
+    /// the graph walk back on the hot path the plans exist to remove.
+    /// The principal is part of the key because lowering is
+    /// partition-relative (`PlanArg::Global` indices): two principals
+    /// whose partitions share border children need distinct plans.
+    plan_cache: RefCell<HashMap<(NodeId, NodeId), Rc<crate::trace::plan::SectionPlan>>>,
+    /// Process-unique id of this trace (evaluators that carry per-trace
+    /// caches validate against it — `structure_version` alone is not
+    /// unique across traces).
+    pub instance_id: u64,
 }
+
+static TRACE_IDS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
 impl Default for Trace {
     fn default() -> Self {
@@ -127,6 +147,8 @@ impl Trace {
             records: Vec::new(),
             observations: Vec::new(),
             partition_cache: RefCell::new(HashMap::new()),
+            plan_cache: RefCell::new(HashMap::new()),
+            instance_id: TRACE_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
         }
     }
 
@@ -145,6 +167,28 @@ impl Trace {
         let p = Rc::new(crate::trace::partition::build_partition(self, v)?);
         self.partition_cache.borrow_mut().insert(v, p.clone());
         Some(p)
+    }
+
+    /// Cached replayable plan for the local section rooted at border
+    /// child `root` of partition `p`.  Stale plans (any structural
+    /// change since lowering) are rebuilt, never reused; value-only
+    /// changes keep plans valid because plans store value *sources*,
+    /// not values.  Errors propagate for section shapes the planned
+    /// path does not support (callers fall back to the interpreter).
+    pub fn cached_section_plan(
+        &self,
+        p: &crate::trace::partition::Partition,
+        root: NodeId,
+    ) -> Result<Rc<crate::trace::plan::SectionPlan>, String> {
+        let key = (p.v, root);
+        if let Some(pl) = self.plan_cache.borrow().get(&key) {
+            if pl.built_at == self.structure_version {
+                return Ok(pl.clone());
+            }
+        }
+        let pl = Rc::new(crate::trace::plan::lower_section(self, p, root)?);
+        self.plan_cache.borrow_mut().insert(key, pl.clone());
+        Ok(pl)
     }
 
     // ---------------- arena ----------------
@@ -200,8 +244,14 @@ impl Trace {
         self.structure_version += 1;
     }
 
+    /// Child-edge rewiring is structural: a mem re-key between two
+    /// *existing* cache entries (or a branch swap between node-backed
+    /// branches) changes border children without allocating or freeing
+    /// a node, so these must bump `structure_version` themselves or the
+    /// partition/plan caches would serve stale children lists.
     pub(crate) fn add_child_edge(&mut self, parent: NodeId, child: NodeId) {
         self.nodes[parent.idx()].children.push(child);
+        self.structure_version += 1;
     }
 
     pub(crate) fn remove_child_edge(&mut self, parent: NodeId, child: NodeId) {
@@ -209,6 +259,7 @@ impl Trace {
         if let Some(pos) = ch.iter().rposition(|&c| c == child) {
             ch.swap_remove(pos);
         }
+        self.structure_version += 1;
     }
 
     // ---------------- SP / mem tables ----------------
@@ -293,6 +344,13 @@ impl Trace {
         self.epochs[id.idx()] = self.epoch;
     }
 
+    /// Re-stamp a node as fresh under the current epoch without cloning
+    /// or replacing its value (commit_global re-marks the global section
+    /// after an epoch bump; the values were just written).
+    pub fn touch(&mut self, id: NodeId) {
+        self.epochs[id.idx()] = self.epoch;
+    }
+
     // ---------------- staleness (§3.5) ----------------
 
     /// Invalidate every deterministic node's cached value; they will be
@@ -316,6 +374,16 @@ impl Trace {
         }
         self.freshen(id);
         self.node(id).value.clone()
+    }
+
+    /// Freshen a node (and, recursively, its parents) without cloning
+    /// its value — the no-copy variant of `fresh_value` for callers that
+    /// only need the committed value to be current in the trace.
+    #[inline]
+    pub fn ensure_fresh(&mut self, id: NodeId) {
+        if self.epochs[id.idx()] != self.epoch {
+            self.freshen(id);
+        }
     }
 
     fn freshen(&mut self, id: NodeId) {

@@ -1,0 +1,463 @@
+//! Compiled section plans: the allocation-free fast path for scoring
+//! local sections under a pinned global section.
+//!
+//! # Why
+//!
+//! The subsampled-MH inner loop (Alg. 3) scores hundreds of local
+//! sections per transition.  The general interpreter path
+//! (`partition::OverrideCtx`) re-discovers each section's graph, probes
+//! two `HashMap`s per node, and walks `any_pinned_ancestor` recursively
+//! — all of it redundant after the first visit, because a section's
+//! *structure* only changes when the trace structure changes.  A
+//! [`SectionPlan`] lowers that structure once into a flat op list whose
+//! inputs are resolved to slot indices; replaying it is a tight loop
+//! over `Vec`s with zero hashing and zero per-call allocation (the
+//! [`ScorerArena`] is reused across batches).
+//!
+//! # Plan lifecycle
+//!
+//! 1. **discover** — `partition::discover_section` walks the trace from
+//!    a border child, collecting deterministic members and absorbing
+//!    (stochastic) leaves.
+//! 2. **lower** — [`lower_section`] topologically orders the
+//!    deterministic members, assigns each a slot, and resolves every
+//!    argument to one of: an owned constant, a slot, an index into the
+//!    partition's global section, or a committed trace read.
+//! 3. **cache** — `Trace::cached_section_plan` memoizes the plan per
+//!    border child, stamped with `structure_version` at build time.
+//! 4. **invalidate** — any structural trace change (node alloc/free,
+//!    branch swap, mem re-key) bumps `Trace::structure_version`, which
+//!    makes every cached plan stale exactly like the partition cache;
+//!    the next lookup rebuilds.  Pure value changes (accepted proposals,
+//!    epoch bumps) do NOT invalidate plans: plans store *where* to read
+//!    values, never the values themselves.
+//!
+//! Sections whose shape the lowering does not support (exchangeable
+//! absorbers) yield an `Err`; callers fall back to the interpreter walk,
+//! which keeps the planned path semantics-preserving by construction.
+
+use crate::ppl::prim::Prim;
+use crate::ppl::sp::SpFamily;
+use crate::ppl::value::Value;
+use crate::trace::node::{ArgRef, EvalResult, NodeId, NodeKind};
+use crate::trace::partition::{discover_section, Partition};
+use crate::trace::pet::Trace;
+use std::collections::{HashMap, HashSet};
+
+/// Where a plan reads one input from at evaluation time.
+#[derive(Clone, Debug)]
+pub enum PlanArg {
+    /// Compile-time constant, cloned once at lowering.
+    Const(Value),
+    /// Candidate value of an in-section deterministic node (arena slot).
+    Slot(u32),
+    /// Candidate value of the k-th global-section node (0 = principal).
+    Global(u32),
+    /// Committed trace value of a node outside the section and the
+    /// global path — such a node cannot depend on the principal (the
+    /// border is the first fan-out), so candidate == committed.
+    Trace(NodeId),
+}
+
+/// One lowered deterministic computation, filling an arena slot.
+#[derive(Clone, Debug)]
+pub enum PlanOp {
+    /// `slot[out] = prim(args)`
+    Prim {
+        prim: Prim,
+        out: u32,
+        args: Vec<PlanArg>,
+    },
+    /// `slot[out] = arg` — MemApp / If / Inner value passthrough.
+    Copy { out: u32, from: PlanArg },
+    /// `slot[out] = committed value of node` — Maker nodes, whose value
+    /// cannot change without a structural transition.
+    Committed { out: u32, node: NodeId },
+}
+
+/// One absorbing node: `l += logpdf(value | candidate args)
+///                        - logpdf(value | committed args)`.
+#[derive(Clone, Debug)]
+pub struct AbsorbOp {
+    pub node: NodeId,
+    pub fam: SpFamily,
+    /// Candidate-side argument sources, in `node.args` order.
+    pub args: Vec<PlanArg>,
+}
+
+/// A compiled local section (Def. 8), replayable against any candidate
+/// value of the global section.
+#[derive(Debug)]
+pub struct SectionPlan {
+    /// The border child this plan was lowered from.
+    pub root: NodeId,
+    /// Number of arena slots (= deterministic members).
+    pub n_slots: u32,
+    /// Deterministic ops in dependency order.
+    pub ops: Vec<PlanOp>,
+    /// Absorbing scores, in discovery order (matches the interpreter's
+    /// summation order bit-for-bit).
+    pub absorbers: Vec<AbsorbOp>,
+    /// Every node whose committed value the plan reads; freshened
+    /// (lazy §3.5) before each evaluation.
+    pub touch: Vec<NodeId>,
+    /// `Trace::structure_version` at lowering time (cache validation).
+    pub built_at: u64,
+}
+
+/// Lower the local section rooted at border child `root` of partition
+/// `p` into a replayable plan.  Errors on section shapes the planned
+/// path does not support (exchangeable absorbers); callers fall back to
+/// the interpreter walk.
+pub fn lower_section(trace: &Trace, p: &Partition, root: NodeId) -> Result<SectionPlan, String> {
+    let sec = discover_section(trace, root);
+    let det_set: HashSet<NodeId> = sec.dets.iter().copied().collect();
+    let order = topo_dets(trace, &det_set)?;
+    let slot_of: HashMap<NodeId, u32> = order
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| (n, i as u32))
+        .collect();
+    let global_pos: HashMap<NodeId, u32> = p
+        .global_drg
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| (n, i as u32))
+        .collect();
+
+    let resolve = |a: &ArgRef| -> PlanArg {
+        match a {
+            ArgRef::Const(v) => PlanArg::Const(v.clone()),
+            ArgRef::Node(id) => {
+                if let Some(&s) = slot_of.get(id) {
+                    PlanArg::Slot(s)
+                } else if let Some(&g) = global_pos.get(id) {
+                    PlanArg::Global(g)
+                } else {
+                    PlanArg::Trace(*id)
+                }
+            }
+        }
+    };
+    let resolve_result = |r: &EvalResult| -> PlanArg {
+        match r {
+            EvalResult::Static(v) => PlanArg::Const(v.clone()),
+            EvalResult::Node(id) => resolve(&ArgRef::Node(*id)),
+        }
+    };
+
+    let mut ops = Vec::with_capacity(order.len());
+    for &n in &order {
+        let out = slot_of[&n];
+        let node = trace.node(n);
+        let op = match &node.kind {
+            NodeKind::Det(prim) => PlanOp::Prim {
+                prim: *prim,
+                out,
+                args: node.args.iter().map(|a| resolve(a)).collect(),
+            },
+            NodeKind::MemApp { target, .. } => PlanOp::Copy {
+                out,
+                from: resolve_result(target),
+            },
+            NodeKind::If { branch, .. } => PlanOp::Copy {
+                out,
+                from: resolve_result(branch),
+            },
+            NodeKind::Inner { inner } => PlanOp::Copy {
+                out,
+                from: resolve(&ArgRef::Node(*inner)),
+            },
+            NodeKind::Maker { .. } => PlanOp::Committed { out, node: n },
+            k => return Err(format!("plan: stochastic node in det set: {k:?}")),
+        };
+        ops.push(op);
+    }
+
+    let mut absorbers = Vec::with_capacity(sec.absorbing.len());
+    for &a in &sec.absorbing {
+        let node = trace.node(a);
+        let fam = match &node.kind {
+            NodeKind::StochFam(f) => *f,
+            // Exchangeable absorbers are rejected for the same reason
+            // OverrideCtx::section_ratio asserts on them: a subsampled
+            // transition cannot keep their sufficient statistics
+            // consistent.  The interpreter fallback enforces that.
+            k => return Err(format!("plan: unsupported absorbing node {k:?}")),
+        };
+        absorbers.push(AbsorbOp {
+            node: a,
+            fam,
+            args: node.args.iter().map(|a| resolve(a)).collect(),
+        });
+    }
+
+    // Everything the committed side reads must be fresh before replay:
+    // in-section dets (their committed values feed the committed logpdf)
+    // and every external parent (feeds both sides).  Freshening is
+    // recursive through parents, so this list is sufficient.
+    let mut touch: Vec<NodeId> = Vec::new();
+    for &n in &order {
+        touch.push(n);
+        for q in trace.node(n).dyn_parents() {
+            if !det_set.contains(&q) {
+                touch.push(q);
+            }
+        }
+    }
+    for &a in &sec.absorbing {
+        for q in trace.node(a).dyn_parents() {
+            if !det_set.contains(&q) {
+                touch.push(q);
+            }
+        }
+    }
+    touch.sort_unstable();
+    touch.dedup();
+
+    Ok(SectionPlan {
+        root,
+        n_slots: order.len() as u32,
+        ops,
+        absorbers,
+        touch,
+        built_at: trace.structure_version,
+    })
+}
+
+/// Topological order of the section's deterministic members restricted
+/// to in-section edges — the same Kahn walk scaffold construction uses,
+/// so the ordering discipline has one definition.
+fn topo_dets(trace: &Trace, det_set: &HashSet<NodeId>) -> Result<Vec<NodeId>, String> {
+    crate::trace::scaffold::kahn_order_set(trace, det_set, None)
+        .ok_or_else(|| "plan: cyclic or duplicated in-section dependencies".to_string())
+}
+
+/// Candidate values of the whole global section under `new_v` pinned at
+/// the principal: `out[0] = new_v`, and each further path node is
+/// recomputed through `OverrideCtx` — deliberately the *same code* the
+/// interpreter oracle runs, so the bitwise-identity contract cannot
+/// drift.  The path is O(1) nodes and this runs once per mini-batch, so
+/// the ctx's per-call maps are off the per-section hot path.
+pub fn candidate_globals(
+    trace: &Trace,
+    p: &Partition,
+    new_v: &Value,
+    out: &mut Vec<Value>,
+) -> Result<(), String> {
+    let mut ctx = crate::trace::partition::OverrideCtx::new(trace);
+    ctx.pin(p.v, new_v.clone());
+    out.clear();
+    out.push(new_v.clone());
+    for &g in &p.global_drg[1..] {
+        out.push(ctx.candidate_value(g));
+    }
+    Ok(())
+}
+
+/// Reusable evaluation scratch: slot values, a logpdf argument buffer,
+/// and the batch-shared candidate globals.  Allocated once per chain and
+/// cleared — not freed — between sections, so steady-state replay does
+/// no heap allocation (Value clones are `Copy`-sized or `Rc` bumps).
+#[derive(Default)]
+pub struct ScorerArena {
+    slots: Vec<Value>,
+    args: Vec<Value>,
+    pub globals: Vec<Value>,
+}
+
+fn read_arg(a: &PlanArg, trace: &Trace, slots: &[Value], globals: &[Value]) -> Value {
+    match a {
+        PlanArg::Const(v) => v.clone(),
+        PlanArg::Slot(i) => slots[*i as usize].clone(),
+        PlanArg::Global(k) => globals[*k as usize].clone(),
+        PlanArg::Trace(id) => trace.value(*id).clone(),
+    }
+}
+
+impl ScorerArena {
+    pub fn new() -> ScorerArena {
+        ScorerArena::default()
+    }
+
+    /// l_i (Eq. 6) for one planned section: replay the det ops into the
+    /// slots, then sum candidate-minus-committed scores over absorbers.
+    /// The caller must have freshened `plan.touch` and filled
+    /// `self.globals` (via [`candidate_globals`]) first.
+    pub fn section_ratio(&mut self, trace: &Trace, plan: &SectionPlan) -> Result<f64, String> {
+        let ScorerArena {
+            slots,
+            args,
+            globals,
+        } = self;
+        slots.clear();
+        slots.resize(plan.n_slots as usize, Value::Bool(false));
+        for op in &plan.ops {
+            match op {
+                PlanOp::Prim {
+                    prim,
+                    out,
+                    args: pargs,
+                } => {
+                    args.clear();
+                    for a in pargs {
+                        args.push(read_arg(a, trace, slots, globals));
+                    }
+                    slots[*out as usize] = prim
+                        .apply(args)
+                        .map_err(|e| format!("plan replay: {e}"))?;
+                }
+                PlanOp::Copy { out, from } => {
+                    slots[*out as usize] = read_arg(from, trace, slots, globals);
+                }
+                PlanOp::Committed { out, node } => {
+                    slots[*out as usize] = trace.value(*node).clone();
+                }
+            }
+        }
+        let mut l = 0.0;
+        for ab in &plan.absorbers {
+            let node = trace.node(ab.node);
+            args.clear();
+            for a in &ab.args {
+                args.push(read_arg(a, trace, slots, globals));
+            }
+            let cand = ab.fam.logpdf(&node.value, args);
+            args.clear();
+            for a in &node.args {
+                args.push(trace.arg_value(a).clone());
+            }
+            let committed = ab.fam.logpdf(&node.value, args);
+            l += cand - committed;
+        }
+        Ok(l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Pcg64;
+    use crate::trace::partition::{build_partition, OverrideCtx};
+
+    fn lr_trace(n: usize, seed: u64) -> Trace {
+        let mut src = String::from(
+            "[assume w (scope_include 'w 0 (multivariate_normal (vector 0 0 0) 0.1))]\n\
+             [assume f (lambda (x) (bernoulli (linear_logistic w x)))]\n",
+        );
+        let mut rng = Pcg64::seeded(seed ^ 0x5eed);
+        for _ in 0..n {
+            let (a, b) = (rng.normal(), rng.normal());
+            let lab = if rng.bernoulli(0.5) { "true" } else { "false" };
+            src.push_str(&format!("[observe (f (vector {a} {b} 1.0)) {lab}]\n"));
+        }
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(seed);
+        t.run_program(&src, &mut rng).unwrap();
+        t
+    }
+
+    #[test]
+    fn lr_plan_shape_and_replay_matches_interpreter() {
+        let t = lr_trace(12, 0);
+        let w = t.lookup_node("w").unwrap();
+        let p = build_partition(&t, w).unwrap();
+        let new_w = Value::vector(vec![0.4, -0.2, 0.1]);
+        let mut arena = ScorerArena::new();
+        candidate_globals(&t, &p, &new_w, &mut arena.globals).unwrap();
+        for &root in &p.locals {
+            let plan = lower_section(&t, &p, root).unwrap();
+            assert_eq!(plan.n_slots, 1); // the linear_logistic det
+            assert_eq!(plan.absorbers.len(), 1); // the bernoulli
+            assert_eq!(plan.built_at, t.structure_version);
+            let got = arena.section_ratio(&t, &plan).unwrap();
+            let sec = discover_section(&t, root);
+            let mut ctx = OverrideCtx::new(&t);
+            ctx.pin(w, new_w.clone());
+            let want = ctx.section_ratio(&sec);
+            assert!(
+                got.to_bits() == want.to_bits(),
+                "planned {got} != interpreter {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn sv_global_path_candidates_match_override_ctx() {
+        // sig = sqrt(sig2): the partition's global path has length 2 and
+        // the plan reads Global(1), exercising candidate_globals.
+        let src = r#"
+            [assume sig2 (inv_gamma 5 0.05)]
+            [assume sig (sqrt sig2)]
+            [assume phi (beta 5 1)]
+            [assume h (mem (lambda (t) (if (<= t 0) 0.0 (normal (* phi (h (- t 1))) sig))))]
+            [assume x (lambda (t) (normal 0 (exp (/ (h t) 2))))]
+            [observe (x 1) 0.1]
+            [observe (x 2) -0.2]
+            [observe (x 3) 0.05]
+        "#;
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(3);
+        t.run_program(src, &mut rng).unwrap();
+        let v = t.lookup_node("sig2").unwrap();
+        let p = build_partition(&t, v).unwrap();
+        assert_eq!(p.global_drg.len(), 2);
+        let new_v = Value::Real(0.02);
+        let mut globals = Vec::new();
+        candidate_globals(&t, &p, &new_v, &mut globals).unwrap();
+        let mut ctx = OverrideCtx::new(&t);
+        ctx.pin(v, new_v.clone());
+        for (k, &g) in p.global_drg.iter().enumerate() {
+            let want = ctx.candidate_value(g);
+            assert!(
+                globals[k].as_f64().unwrap().to_bits() == want.as_f64().unwrap().to_bits(),
+                "global {k}: {:?} vs {:?}",
+                globals[k],
+                want
+            );
+        }
+        // and the sections replay identically
+        let mut arena = ScorerArena::new();
+        arena.globals = globals;
+        for &root in &p.locals {
+            let plan = lower_section(&t, &p, root).unwrap();
+            let got = arena.section_ratio(&t, &plan).unwrap();
+            let sec = discover_section(&t, root);
+            let want = ctx.section_ratio(&sec);
+            assert!(got.to_bits() == want.to_bits(), "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn plan_rejects_exchangeable_absorbers() {
+        // Sections absorbing into an exchangeably-coupled SP instance
+        // cannot be planned (their sufficient statistics couple the
+        // sections); lowering must refuse so callers fall back to the
+        // interpreter, which enforces the same restriction.
+        let mut src = String::from(
+            "[assume mu (normal 0 1)]\n\
+             [assume c (make_collapsed_multivariate_normal (vector 0 0) 1.0 4.0 1.0)]\n\
+             [assume x (lambda (i) (c (vector mu i)))]\n",
+        );
+        for i in 0..4 {
+            src.push_str(&format!("[assume x{i} (x {i})]\n"));
+        }
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(4);
+        t.run_program(&src, &mut rng).unwrap();
+        let mu = t.lookup_node("mu").unwrap();
+        let p = build_partition(&t, mu).unwrap();
+        assert_eq!(p.n(), 4);
+        for &root in &p.locals {
+            assert!(
+                lower_section(&t, &p, root).is_err(),
+                "exchangeable absorber must not lower"
+            );
+        }
+        // and a well-formed logistic section still lowers fine
+        let t2 = lr_trace(4, 9);
+        let w = t2.lookup_node("w").unwrap();
+        let p2 = build_partition(&t2, w).unwrap();
+        assert!(lower_section(&t2, &p2, p2.locals[0]).is_ok());
+    }
+}

@@ -83,13 +83,27 @@ pub fn build_scaffold(trace: &Trace, v: NodeId) -> Scaffold {
 
 /// Topological order of the D set (restricted to in-D edges), `v` first.
 fn topo_order(trace: &Trace, in_drg: &HashSet<NodeId>, v: NodeId) -> Vec<NodeId> {
-    let mut indeg: HashMap<NodeId, usize> = HashMap::with_capacity(in_drg.len());
-    for &n in in_drg {
+    kahn_order_set(trace, in_drg, Some(v)).expect("cycle in deterministic dependency graph?")
+}
+
+/// Kahn topological sort of `set` restricted to in-set edges, with
+/// deterministic (sorted) tie-breaking; `first`, if given, leads the
+/// initial ready list.  Shared by scaffold construction and section-plan
+/// lowering (trace/plan.rs) so the ordering discipline — which the
+/// planned scorer's bitwise-identity contract depends on — has exactly
+/// one definition.  Returns None on a cycle in the restricted graph.
+pub(crate) fn kahn_order_set(
+    trace: &Trace,
+    set: &HashSet<NodeId>,
+    first: Option<NodeId>,
+) -> Option<Vec<NodeId>> {
+    let mut indeg: HashMap<NodeId, usize> = HashMap::with_capacity(set.len());
+    for &n in set {
         let d = trace
             .node(n)
             .dyn_parents()
             .iter()
-            .filter(|p| in_drg.contains(p))
+            .filter(|p| set.contains(*p))
             .count();
         indeg.insert(n, d);
     }
@@ -98,12 +112,13 @@ fn topo_order(trace: &Trace, in_drg: &HashSet<NodeId>, v: NodeId) -> Vec<NodeId>
         .filter(|(_, &d)| d == 0)
         .map(|(&n, _)| n)
         .collect();
-    // make the order deterministic; v (the root) first
     ready.sort_unstable();
-    if let Some(pos) = ready.iter().position(|&n| n == v) {
-        ready.swap(0, pos);
+    if let Some(v) = first {
+        if let Some(pos) = ready.iter().position(|&n| n == v) {
+            ready.swap(0, pos);
+        }
     }
-    let mut order = Vec::with_capacity(in_drg.len());
+    let mut order = Vec::with_capacity(set.len());
     let mut queue = std::collections::VecDeque::from(ready);
     while let Some(n) = queue.pop_front() {
         order.push(n);
@@ -121,12 +136,10 @@ fn topo_order(trace: &Trace, in_drg: &HashSet<NodeId>, v: NodeId) -> Vec<NodeId>
             queue.push_back(c);
         }
     }
-    assert_eq!(
-        order.len(),
-        in_drg.len(),
-        "cycle in deterministic dependency graph?"
-    );
-    order
+    if order.len() != set.len() {
+        return None;
+    }
+    Some(order)
 }
 
 /// Border node (Def. 6): the first descendant of `v` inside the scaffold
@@ -145,7 +158,7 @@ pub fn find_border(trace: &Trace, scaffold: &Scaffold) -> Option<NodeId> {
             .node(cur)
             .children
             .iter()
-            .filter(|c| in_scaffold.contains(c))
+            .filter(|c| in_scaffold.contains(*c))
             .copied()
             .collect();
         match kids.len() {
