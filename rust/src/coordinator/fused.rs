@@ -17,10 +17,12 @@
 
 use crate::infer::planned::PlannedEval;
 use crate::infer::subsampled_mh::{freshen_section, LocalEvaluator};
+use crate::ppl::prim::Prim;
 use crate::ppl::sp::SpFamily;
 use crate::ppl::value::Value;
 use crate::runtime::artifacts::ArtifactRegistry;
 use crate::runtime::client::Input;
+use crate::trace::batch::{ColAbsorb, ColOp, ColS, ColV, SBind, VBind};
 use crate::trace::node::{ArgRef, NodeId, NodeKind};
 use crate::trace::partition::{OverrideCtx, Partition};
 use crate::trace::pet::Trace;
@@ -85,6 +87,70 @@ impl FusedEval {
         Ok(Self::new(ArtifactRegistry::open_default()?))
     }
 
+    /// Plan-aware logistic extraction: when the batch's roots all live
+    /// in one shape-keyed group whose column program is the logistic
+    /// section (`sigmoid(dot(w, x))` + one bernoulli absorber), the
+    /// kernel inputs are read straight out of the group's slot tables —
+    /// no per-root node-structure walk.  `None` falls back to the
+    /// structural walk below.
+    fn extract_logistic_planned(
+        trace: &Trace,
+        p: &Partition,
+        roots: &[NodeId],
+    ) -> Option<(Vec<LogisticRow>, usize)> {
+        let set = trace.cached_batch_plans(p);
+        let &(gi, _) = set.of_root.get(roots.first()?)?;
+        let g = &set.groups[gi as usize];
+        let cols = &g.cols;
+        // sigmoid(dot(w, x_j)): either directly on the global weight
+        // vector (BayesLR) or through a vector copy of it (the JointDPM
+        // MemApp routing)
+        let xbind = match cols.ops.as_slice() {
+            [ColOp::Dot { sigmoid: true, out, a: ColV::Global(0), b: ColV::Bind(b) }] => {
+                (*out, *b)
+            }
+            [ColOp::CopyV { out: c, from: ColV::Global(0) }, ColOp::Dot { sigmoid: true, out, a: ColV::Slot(s), b: ColV::Bind(b) }]
+                if s == c =>
+            {
+                (*out, *b)
+            }
+            _ => return None,
+        };
+        let (dot_out, xbind) = xbind;
+        match cols.absorbers.as_slice() {
+            [ColAbsorb { fam: SpFamily::Bernoulli, cand }]
+                if matches!(cand.as_slice(), [ColS::Slot(s)] if *s == dot_out) => {}
+            _ => return None,
+        }
+        let nvb = cols.n_vbind as usize;
+        let nab = cols.absorbers.len();
+        let mut rows = Vec::with_capacity(roots.len());
+        let mut d = 0usize;
+        for &root in roots {
+            let &(gj, mi) = set.of_root.get(&root)?;
+            if gj != gi {
+                return None; // mixed shapes: one kernel cannot cover the batch
+            }
+            let m = mi as usize;
+            let x = match &g.vbinds[m * nvb + xbind as usize] {
+                VBind::Const(v) => v.clone(),
+                VBind::Node(_) => return None,
+            };
+            if d == 0 {
+                d = x.len();
+            } else if d != x.len() {
+                return None;
+            }
+            let t = match trace.node(g.absorbers[m * nab]).value.as_bool() {
+                Some(true) => 1.0,
+                Some(false) => -1.0,
+                None => return None,
+            };
+            rows.push(LogisticRow { x, t });
+        }
+        Some((rows, d))
+    }
+
     /// Try to extract logistic rows for every root; None on mismatch.
     fn extract_logistic(
         trace: &Trace,
@@ -142,6 +208,100 @@ impl FusedEval {
         }
         let _ = p;
         Some((rows, d))
+    }
+
+    /// Plan-aware AR(1) extraction (phi and sigma section shapes) from
+    /// a group's slot tables, computing the candidate globals once per
+    /// batch (the structural walk below re-runs an `OverrideCtx` per
+    /// root).  `None` falls back to the structural walk.
+    fn extract_ar1_planned(
+        trace: &Trace,
+        p: &Partition,
+        roots: &[NodeId],
+        new_v: &Value,
+    ) -> Option<Vec<Ar1Row>> {
+        let set = trace.cached_batch_plans(p);
+        let &(gi, _) = set.of_root.get(roots.first()?)?;
+        let g = &set.groups[gi as usize];
+        let cols = &g.cols;
+        #[derive(Clone, Copy)]
+        enum SigSrc {
+            Global(u32),
+            Bind(u32),
+        }
+        let (phi_global, mean_bind, sig_src) =
+            match (cols.ops.as_slice(), cols.absorbers.as_slice()) {
+                // phi sections: (* phi h_prev) det + one absorbing normal
+                (
+                    [ColOp::Map { prim: Prim::Mul, out, args }],
+                    [ColAbsorb { fam: SpFamily::Normal, cand }],
+                ) => {
+                    let (kphi, hb) = match args.as_slice() {
+                        [ColS::Global(k), ColS::Bind(b)] => (*k, *b),
+                        [ColS::Bind(b), ColS::Global(k)] => (*k, *b),
+                        _ => return None,
+                    };
+                    let sig = match cand.as_slice() {
+                        [ColS::Slot(s), ColS::Global(ks)] if s == out => SigSrc::Global(*ks),
+                        [ColS::Slot(s), ColS::Bind(bs)] if s == out => SigSrc::Bind(*bs),
+                        _ => return None,
+                    };
+                    (Some(kphi), hb, sig)
+                }
+                // sigma sections: the border child IS the absorbing
+                // normal; the mean is folded into h_prev
+                ([], [ColAbsorb { fam: SpFamily::Normal, cand }]) => match cand.as_slice() {
+                    [ColS::Bind(bm), ColS::Global(ks)] => (None, *bm, SigSrc::Global(*ks)),
+                    _ => return None,
+                },
+                _ => return None,
+            };
+        // candidate globals once per batch — the same code path the
+        // interpreter oracle runs, so f32 narrowing is the only loss
+        let mut globals = Vec::new();
+        crate::trace::plan::candidate_globals(trace, p, new_v, &mut globals).ok()?;
+        let (phi_old, phi_new) = match phi_global {
+            Some(k) => (
+                trace.value(p.global_drg[k as usize]).as_f64()? as f32,
+                globals.get(k as usize)?.as_f64()? as f32,
+            ),
+            None => (1.0, 1.0),
+        };
+        let nsb = cols.n_sbind as usize;
+        let nab = cols.absorbers.len();
+        let sval = |m: usize, b: u32| -> Option<f64> {
+            match &g.sbinds[m * nsb + b as usize] {
+                SBind::Const(x) => Some(*x),
+                SBind::Node(id) => trace.value(*id).as_f64(),
+            }
+        };
+        let mut rows = Vec::with_capacity(roots.len());
+        for &root in roots {
+            let &(gj, mi) = set.of_root.get(&root)?;
+            if gj != gi {
+                return None;
+            }
+            let m = mi as usize;
+            let node = trace.node(g.absorbers[m * nab]);
+            let h = node.value.as_f64()? as f32;
+            let h_prev = sval(m, mean_bind)? as f32;
+            let sig_old = trace.arg_value(&node.args[1]).as_f64()? as f32;
+            let sig_new = match sig_src {
+                SigSrc::Global(ks) => globals.get(ks as usize)?.as_f64()? as f32,
+                // an off-path sig cannot depend on the principal:
+                // candidate == committed
+                SigSrc::Bind(bs) => sval(m, bs)? as f32,
+            };
+            rows.push(Ar1Row {
+                h_prev,
+                h,
+                phi_old,
+                phi_new,
+                sig_old,
+                sig_new,
+            });
+        }
+        Some(rows)
     }
 
     /// Try to extract AR(1) rows; None on mismatch.
@@ -367,8 +527,12 @@ impl LocalEvaluator for FusedEval {
         for &r in roots {
             freshen_section(trace, r);
         }
-        // logistic family?
-        if let Some((rows, d)) = Self::extract_logistic(trace, p, roots) {
+        // logistic family? (slot tables first, structural walk second)
+        let logistic = match Self::extract_logistic_planned(trace, p, roots) {
+            Some(rd) => Some(rd),
+            None => Self::extract_logistic(trace, p, roots),
+        };
+        if let Some((rows, d)) = logistic {
             let w_old = trace
                 .fresh_value(p.v)
                 .as_vector()
@@ -383,8 +547,12 @@ impl LocalEvaluator for FusedEval {
             self.fused_sections += roots.len();
             return self.run_logistic(&rows, d, &w_old, &w_new);
         }
-        // AR(1) family?
-        if let Some(rows) = Self::extract_ar1(trace, p, roots, new_v) {
+        // AR(1) family? (slot tables first, structural walk second)
+        let ar1 = match Self::extract_ar1_planned(trace, p, roots, new_v) {
+            Some(rows) => Some(rows),
+            None => Self::extract_ar1(trace, p, roots, new_v),
+        };
+        if let Some(rows) = ar1 {
             self.fused_sections += roots.len();
             return self.run_ar1(&rows);
         }
@@ -521,6 +689,75 @@ mod tests {
         assert!(fused.fused_sections > 0);
         assert!(t.log_joint().is_finite());
         let _ = accepted;
+    }
+
+    /// The slot-table fast path must produce exactly the rows the
+    /// structural walk produces (runs without XLA artifacts: extraction
+    /// is independent of the PJRT runtime).
+    #[test]
+    fn planned_extraction_matches_structural_walk_logistic() {
+        let t = lr_trace(40, 3, 5);
+        let v = t.lookup_node("w").unwrap();
+        let p = build_partition(&t, v).unwrap();
+        let roots = p.locals.clone();
+        let (rows_walk, d_walk) = FusedEval::extract_logistic(&t, &p, &roots).unwrap();
+        let (rows_plan, d_plan) =
+            FusedEval::extract_logistic_planned(&t, &p, &roots).expect("planned path missed");
+        assert_eq!(d_walk, d_plan);
+        assert_eq!(rows_walk.len(), rows_plan.len());
+        for (a, b) in rows_walk.iter().zip(&rows_plan) {
+            assert_eq!(a.t, b.t);
+            assert_eq!(a.x, b.x);
+        }
+    }
+
+    #[test]
+    fn planned_extraction_matches_structural_walk_ar1() {
+        let src = r#"
+            [assume sig2 (scope_include 'sig2 0 (inv_gamma 5 0.05))]
+            [assume sig (sqrt sig2)]
+            [assume phi (scope_include 'phi 0 (beta 5 1))]
+            [assume h (mem (lambda (t) (if (<= t 0) 0.0 (normal (* phi (h (- t 1))) sig))))]
+            [assume x (lambda (t) (normal 0 (exp (/ (h t) 2))))]
+            [observe (x 1) 0.1] [observe (x 2) -0.2]
+            [observe (x 3) 0.05] [observe (x 4) 0.3]
+        "#;
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(6);
+        t.run_program(src, &mut rng).unwrap();
+        // phi sections: (* phi h_prev) + absorbing normal
+        let phi = t.lookup_node("phi").unwrap();
+        let p = build_partition(&t, phi).unwrap();
+        let roots = p.locals.clone();
+        let new_phi = Value::Real(0.45);
+        let plan_rows =
+            FusedEval::extract_ar1_planned(&t, &p, &roots, &new_phi).expect("planned path missed");
+        let walk_rows = FusedEval::extract_ar1(&mut t, &p, &roots, &new_phi).unwrap();
+        assert_eq!(plan_rows.len(), walk_rows.len());
+        for (a, b) in plan_rows.iter().zip(&walk_rows) {
+            assert_eq!(a.h_prev, b.h_prev);
+            assert_eq!(a.h, b.h);
+            assert_eq!(a.phi_old, b.phi_old);
+            assert_eq!(a.phi_new, b.phi_new);
+            assert_eq!(a.sig_old, b.sig_old);
+            assert_eq!(a.sig_new, b.sig_new);
+        }
+        // sigma sections: bare absorbing normal through the sqrt global
+        let sig2 = t.lookup_node("sig2").unwrap();
+        let p2 = build_partition(&t, sig2).unwrap();
+        let roots2 = p2.locals.clone();
+        let new_s2 = Value::Real(0.03);
+        let plan_rows =
+            FusedEval::extract_ar1_planned(&t, &p2, &roots2, &new_s2).expect("planned path missed");
+        let walk_rows = FusedEval::extract_ar1(&mut t, &p2, &roots2, &new_s2).unwrap();
+        assert_eq!(plan_rows.len(), walk_rows.len());
+        for (a, b) in plan_rows.iter().zip(&walk_rows) {
+            assert_eq!(a.h_prev, b.h_prev);
+            assert_eq!(a.h, b.h);
+            assert_eq!((a.phi_old, a.phi_new), (1.0, 1.0));
+            assert_eq!(a.sig_old, b.sig_old);
+            assert_eq!(a.sig_new, b.sig_new);
+        }
     }
 
     #[test]

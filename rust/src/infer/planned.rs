@@ -1,22 +1,34 @@
 //! The planned local-section evaluator: the default hot path for
 //! subsampled MH.
 //!
-//! `PlannedEval` scores mini-batches by replaying cached
-//! [`SectionPlan`](crate::trace::plan::SectionPlan)s through a reusable
-//! [`ScorerArena`] — no graph walks, no hash probes, no per-call
-//! allocation in steady state.  The candidate value of the global
-//! section is computed once per batch and shared by every section.
+//! `PlannedEval` scores mini-batches in three tiers, cheapest first:
 //!
-//! `InterpreterEval` remains the general path and the differential-
-//! testing oracle: plans must reproduce its `l_i` values *bitwise* (the
-//! tests below enforce this on all three paper model families), because
-//! both paths perform the same float operations in the same order.
-//! Sections the lowering cannot express fall back to the interpreter
-//! per root, with a structure-versioned negative cache so unplannable
-//! roots don't pay a failed lowering per mini-batch.
+//! 1. **batched** (default) — the sampled roots are grouped by
+//!    [`ShapeKey`](crate::trace::batch::ShapeKey) through the trace's
+//!    cached [`BatchPlanSet`](crate::trace::batch::BatchPlanSet); each
+//!    group replays *one* op list column-wise over all of its sampled
+//!    sections through an f64 [`RegFile`] — no `Value` enum dispatch,
+//!    no per-section plan lookup.
+//! 2. **scalar** — sections outside any batched group (non-f64 shapes,
+//!    shape mismatches) replay their cached
+//!    [`SectionPlan`](crate::trace::plan::SectionPlan) individually
+//!    through the reusable [`ScorerArena`].
+//! 3. **interpreter** — sections the lowering cannot express at all
+//!    fall back to the `OverrideCtx` walk per root, with a
+//!    structure-versioned negative cache so unplannable roots don't pay
+//!    a failed lowering per mini-batch.
+//!
+//! The candidate value of the global section is computed once per batch
+//! and shared by every tier.  `InterpreterEval` remains the general
+//! path and the differential-testing oracle: both planned tiers must
+//! reproduce its `l_i` values *bitwise* (the tests below and
+//! `tests/differential.rs` enforce this on all three paper model
+//! families), because all paths perform the same float operations in
+//! the same order.
 
 use crate::infer::subsampled_mh::{InterpreterEval, LocalEvaluator};
 use crate::ppl::value::Value;
+use crate::trace::batch::RegFile;
 use crate::trace::node::NodeId;
 use crate::trace::partition::Partition;
 use crate::trace::pet::Trace;
@@ -24,9 +36,13 @@ use crate::trace::plan::{candidate_globals, ScorerArena};
 use std::collections::HashSet;
 
 /// Arena-backed batch scorer over cached section plans.
-#[derive(Default)]
 pub struct PlannedEval {
     arena: ScorerArena,
+    regs: RegFile,
+    /// Group sampled roots by shape and replay each group's column
+    /// program (false = score every section individually; the
+    /// differential harness runs both modes against the oracle).
+    batched: bool,
     fallback: InterpreterEval,
     /// Roots whose lowering failed on trace `neg_trace` at structure
     /// version `neg_version` (skip retrying until the trace structure —
@@ -35,15 +51,84 @@ pub struct PlannedEval {
     neg: HashSet<NodeId>,
     neg_trace: u64,
     neg_version: u64,
-    /// Sections scored through plans vs the interpreter fallback
-    /// (perf reporting / ablations).
+    /// Sections scored through plans (batched or scalar) vs the
+    /// interpreter fallback (perf reporting / ablations).
     pub planned_sections: usize,
+    /// Subset of `planned_sections` that went through a grouped
+    /// column replay.
+    pub batched_sections: usize,
     pub fallback_sections: usize,
+    /// Per-call scratch: for each group, the sampled (member, output
+    /// position) pairs; reused so steady state allocates nothing.
+    sel: Vec<Vec<(u32, u32)>>,
+    batch_out: Vec<f64>,
+}
+
+impl Default for PlannedEval {
+    fn default() -> Self {
+        PlannedEval::new()
+    }
 }
 
 impl PlannedEval {
+    /// The default evaluator: shape-grouped batch replay with scalar
+    /// and interpreter fallbacks.
     pub fn new() -> PlannedEval {
-        PlannedEval::default()
+        PlannedEval {
+            arena: ScorerArena::new(),
+            regs: RegFile::new(),
+            batched: true,
+            fallback: InterpreterEval,
+            neg: HashSet::new(),
+            neg_trace: 0,
+            neg_version: 0,
+            planned_sections: 0,
+            batched_sections: 0,
+            fallback_sections: 0,
+            sel: Vec::new(),
+            batch_out: Vec::new(),
+        }
+    }
+
+    /// Score every section individually through its own plan (PR 1
+    /// behavior) — the middle rung of the differential ladder.
+    pub fn scalar() -> PlannedEval {
+        PlannedEval {
+            batched: false,
+            ..PlannedEval::new()
+        }
+    }
+
+    /// Scalar or interpreter scoring of one root into `out[pos]`.
+    fn eval_one(
+        &mut self,
+        trace: &mut Trace,
+        p: &Partition,
+        r: NodeId,
+        new_v: &Value,
+        out: &mut [f64],
+        pos: usize,
+    ) -> Result<(), String> {
+        if !self.neg.contains(&r) {
+            match trace.cached_section_plan(p, r) {
+                Ok(plan) => {
+                    for &t in &plan.touch {
+                        trace.ensure_fresh(t);
+                    }
+                    out[pos] = self.arena.section_ratio(trace, &plan)?;
+                    self.planned_sections += 1;
+                    return Ok(());
+                }
+                Err(_) => {
+                    self.neg.insert(r);
+                }
+            }
+        }
+        // unplannable section: general interpreter walk for this root
+        self.fallback_sections += 1;
+        let ls = self.fallback.eval_sections(trace, p, &[r], new_v)?;
+        out[pos] = ls[0];
+        Ok(())
     }
 }
 
@@ -66,33 +151,72 @@ impl LocalEvaluator for PlannedEval {
             trace.ensure_fresh(g);
         }
         candidate_globals(trace, p, new_v, &mut self.arena.globals)?;
-        let mut out = Vec::with_capacity(roots.len());
-        for &r in roots {
-            if !self.neg.contains(&r) {
-                match trace.cached_section_plan(p, r) {
-                    Ok(plan) => {
-                        for &t in &plan.touch {
-                            trace.ensure_fresh(t);
-                        }
-                        out.push(self.arena.section_ratio(trace, &plan)?);
-                        self.planned_sections += 1;
-                        continue;
+        let mut out = vec![0.0f64; roots.len()];
+        // (output position, root) pairs left for the scalar tiers
+        let mut rest: Vec<(usize, NodeId)> = Vec::new();
+        if self.batched {
+            let set = trace.cached_batch_plans(p);
+            if self.sel.len() < set.groups.len() {
+                self.sel.resize_with(set.groups.len(), Vec::new);
+            }
+            for s in &mut self.sel {
+                s.clear();
+            }
+            for (pos, &r) in roots.iter().enumerate() {
+                match set.of_root.get(&r) {
+                    Some(&(gi, mi)) => self.sel[gi as usize].push((mi, pos as u32)),
+                    None => rest.push((pos, r)),
+                }
+            }
+            for (gi, group) in set.groups.iter().enumerate() {
+                if self.sel[gi].is_empty() {
+                    continue;
+                }
+                // lazy §3.5 refresh of everything the sampled slot
+                // tables read
+                for k in 0..self.sel[gi].len() {
+                    let (mi, _) = self.sel[gi][k];
+                    for &t in group.touch_of(mi as usize) {
+                        trace.ensure_fresh(t);
                     }
+                }
+                let sel = &self.sel[gi];
+                match self
+                    .regs
+                    .replay(trace, group, sel, &self.arena.globals, &mut self.batch_out)
+                {
+                    Ok(()) => {
+                        for (&(_, pos), &l) in sel.iter().zip(&self.batch_out) {
+                            out[pos as usize] = l;
+                        }
+                        self.planned_sections += sel.len();
+                        self.batched_sections += sel.len();
+                    }
+                    // replay refused (a binding changed type): re-score
+                    // this group's sample on the scalar path, which
+                    // reproduces the oracle exactly
                     Err(_) => {
-                        self.neg.insert(r);
+                        for &(_, pos) in sel {
+                            rest.push((pos as usize, roots[pos as usize]));
+                        }
                     }
                 }
             }
-            // unplannable section: general interpreter walk for this root
-            self.fallback_sections += 1;
-            let ls = self.fallback.eval_sections(trace, p, &[r], new_v)?;
-            out.push(ls[0]);
+        } else {
+            rest.extend(roots.iter().copied().enumerate());
+        }
+        for (pos, r) in rest {
+            self.eval_one(trace, p, r, new_v, &mut out, pos)?;
         }
         Ok(out)
     }
 
     fn name(&self) -> &'static str {
-        "planned"
+        if self.batched {
+            "planned-batched"
+        } else {
+            "planned"
+        }
     }
 }
 
@@ -116,7 +240,8 @@ mod tests {
         }
     }
 
-    /// Differential: logistic regression (Fig. 3), whole population.
+    /// Differential: logistic regression (Fig. 3), whole population —
+    /// interpreter vs scalar plans vs shape-grouped batch replay.
     #[test]
     fn planned_matches_interpreter_bitwise_logistic() {
         let data = synth2d::generate(400, 1);
@@ -129,12 +254,40 @@ mod tests {
             let roots = p.locals.clone();
             let mut interp = InterpreterEval;
             let want = interp.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
-            let mut planned = PlannedEval::new();
-            let got = planned.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+            let mut scalar = PlannedEval::scalar();
+            let got = scalar.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
             assert_bitwise(&got, &want);
-            assert_eq!(planned.planned_sections, roots.len(), "step {step}");
-            assert_eq!(planned.fallback_sections, 0);
+            assert_eq!(scalar.planned_sections, roots.len(), "step {step}");
+            assert_eq!(scalar.batched_sections, 0);
+            assert_eq!(scalar.fallback_sections, 0);
+            let mut batched = PlannedEval::new();
+            let got = batched.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+            assert_bitwise(&got, &want);
+            assert_eq!(batched.planned_sections, roots.len(), "step {step}");
+            assert_eq!(batched.batched_sections, roots.len(), "step {step}");
+            assert_eq!(batched.fallback_sections, 0);
         }
+    }
+
+    /// The batched path must score a *sampled subset* (not just whole
+    /// populations) identically to the oracle, in sampled order.
+    #[test]
+    fn batched_subset_matches_interpreter_bitwise() {
+        let data = synth2d::generate(300, 11);
+        let mut rng = Pcg64::seeded(12);
+        let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+        let p = trace.cached_partition(w).unwrap();
+        let cur = trace.fresh_value(w);
+        let new_w = Proposal::Drift(0.15).propose(&cur, &mut rng).unwrap();
+        // a shuffled, strict subset of the locals
+        let idx = rng.sample_without_replacement(p.n(), 97);
+        let roots: Vec<_> = idx.iter().map(|&i| p.locals[i]).collect();
+        let mut interp = InterpreterEval;
+        let want = interp.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+        let mut batched = PlannedEval::new();
+        let got = batched.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+        assert_bitwise(&got, &want);
+        assert_eq!(batched.batched_sections, roots.len());
     }
 
     /// Differential: JointDPM expert weights (Fig. 7 top) — sections
@@ -159,6 +312,9 @@ mod tests {
             let got = planned.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
             assert_bitwise(&got, &want);
             assert_eq!(planned.fallback_sections, 0);
+            // DPM weight sections route a *vector* global through a
+            // MemApp copy — they must still hit the columnar path
+            assert_eq!(planned.batched_sections, roots.len());
             checked += 1;
         }
         assert!(checked > 0, "no DPM cluster had a border partition");
@@ -188,6 +344,7 @@ mod tests {
             let got = planned.eval_sections(&mut trace, &p, &roots, &new_v).unwrap();
             assert_bitwise(&got, &want);
             assert_eq!(planned.planned_sections, roots.len());
+            assert_eq!(planned.batched_sections, roots.len());
             assert_eq!(planned.fallback_sections, 0);
         }
     }
@@ -286,6 +443,7 @@ mod tests {
             }
         }
         assert!(ev.planned_sections > 0);
+        assert!(ev.batched_sections > 0, "default evaluator must batch");
         assert_eq!(ev.fallback_sections, 0);
         // synth2d's separator points along (+1, +1)
         assert!(m0.mean() > 0.2, "w0 mean {}", m0.mean());

@@ -49,9 +49,16 @@ impl SubsampledConfig {
 }
 
 /// Pluggable mini-batch section scorer.
+///
+/// The transition hands each sampled mini-batch to `eval_sections` as
+/// one call (never root-by-root): evaluators that batch — the default
+/// `PlannedEval` groups the roots by section shape and replays one op
+/// list per group, `FusedEval` dispatches whole batches to XLA — rely
+/// on seeing the full mini-batch at once.
 pub trait LocalEvaluator {
-    /// l_i for each listed border child, under `new_v` pinned at `p.v`.
-    /// Must not mutate trace values other than lazy freshening.
+    /// l_i for each listed border child, under `new_v` pinned at `p.v`,
+    /// in `roots` order.  Must not mutate trace values other than lazy
+    /// freshening.
     fn eval_sections(
         &mut self,
         trace: &mut Trace,
@@ -206,25 +213,32 @@ pub fn subsampled_mh_transition(
     let mu0 = (u.ln() - w_global) / n_total as f64;
 
     let accept = if cfg.exact {
-        // full-population pass through the same evaluator (the baseline)
+        // full-population pass through the same evaluator (the
+        // baseline); chunks are contiguous slices of the locals, so a
+        // batching evaluator sees whole same-shaped runs at once
         let mut sum = 0.0;
         let mut idx = 0;
         let chunk = cfg.m.max(1);
         while idx < n_total {
-            let roots: Vec<NodeId> = p.locals[idx..(idx + chunk).min(n_total)].to_vec();
-            let ls = evaluator.eval_sections(trace, &p, &roots, &new_v)?;
+            let end = (idx + chunk).min(n_total);
+            let ls = evaluator.eval_sections(trace, p, &p.locals[idx..end], &new_v)?;
             sum += ls.iter().sum::<f64>();
-            idx += roots.len();
-            stats.sections_evaluated += roots.len();
+            stats.sections_evaluated += end - idx;
+            idx = end;
         }
         sum / n_total as f64 > mu0
     } else {
         let mut test = SequentialTest::new(mu0, n_total, cfg.eps);
         let mut sampler = SparseSampler::new(n_total);
         let mut decided = None;
+        // one reused mini-batch buffer: the whole batch goes to the
+        // evaluator in a single call (PlannedEval groups it by shape
+        // and replays one op list per group)
+        let mut roots: Vec<NodeId> = Vec::with_capacity(cfg.m.max(1));
         while decided.is_none() {
             let take = cfg.m.min(sampler.remaining());
-            let roots: Vec<NodeId> = (0..take).map(|_| p.locals[sampler.next(rng)]).collect();
+            roots.clear();
+            roots.extend((0..take).map(|_| p.locals[sampler.next(rng)]));
             let ls = evaluator.eval_sections(trace, p, &roots, &new_v)?;
             stats.sections_evaluated += roots.len();
             if let TestState::Decided(acc) = test.update(&ls) {

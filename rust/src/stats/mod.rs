@@ -1,9 +1,11 @@
 //! MCMC diagnostics and experiment metrics: running moments,
-//! autocorrelation / effective sample size, predictive risk, and the
-//! §3.3 normality safeguard.
+//! autocorrelation / effective sample size, predictive risk, the §3.3
+//! normality safeguard, and the seeded program generator backing the
+//! shape-key property tests.
 
 pub mod diagnostics;
 pub mod normality;
+pub mod propgen;
 pub mod risk;
 
 pub use diagnostics::{autocorrelation, ess, RunningMoments};

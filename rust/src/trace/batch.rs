@@ -1,0 +1,1221 @@
+//! Shape-keyed batch plans: one op list scores a whole mini-batch of
+//! same-shaped local sections through an f64 register file.
+//!
+//! # Why
+//!
+//! PR 1's [`SectionPlan`]s made each section cheap individually, but the
+//! subsampled-MH inner loop still replayed them one at a time: one plan
+//! lookup, one `Value`-typed arena pass, and one absorber dispatch per
+//! section.  The paper's workloads score *hundreds of structurally
+//! identical sections per mini-batch* (every LR observation lowers to
+//! the same `linear_logistic` + `bernoulli` op pair; every SV step to
+//! the same `mul` + `normal` pair) — exactly the "minibatch MH as a
+//! vectorizable inner loop" framing of Angelino et al. (2016).  This
+//! module groups sections by a structural [`ShapeKey`] and lowers each
+//! group once into a [`BatchGroup`]: a single op list plus per-section
+//! *slot tables* (constants, trace reads, absorber nodes).  Replay walks
+//! the op list once, executing each op column-wise over all sampled
+//! sections through a [`RegFile`] of plain `f64` registers — no `Value`
+//! enum dispatch, no per-section hashing, and the memory access pattern
+//! XLA kernels want (the slot tables are the kernel inputs; see
+//! `coordinator/fused.rs`).
+//!
+//! # Bitwise-identity contract
+//!
+//! The columnar replay performs, for every section, the *same scalar
+//! f64 operations in the same order* as `Prim::apply` and
+//! `SpFamily::logpdf` do on the interpreter/`ScorerArena` path, so its
+//! `l_i` values are bit-for-bit identical (enforced by the unit tests
+//! here, `infer/planned.rs`, and `tests/differential.rs`).  Anything
+//! that could break that contract is rejected at lowering or replay
+//! time and falls back to the scalar per-section path:
+//!
+//! * non-f64 slots or bindings (int/bool constants, `Value::Sp`
+//!   committed reads, matrices/lists) — the interpreter's int-preserving
+//!   arithmetic could diverge from a float register, so those shapes
+//!   are never batch-replayed;
+//! * prims outside the scalar whitelist (comparisons, vector
+//!   constructors, lookups);
+//! * exchangeable or multivariate absorbers;
+//! * type changes discovered at replay (a trace read that is no longer
+//!   `Value::Real`) — the whole batch returns `Err` and the caller
+//!   re-scores it per section.
+//!
+//! # Lifecycle
+//!
+//! Groups are built per partition by [`build_batch_plans`] (cached as
+//! `Trace::cached_batch_plans`), stamped with `structure_version`, and
+//! rebuilt — never patched — after any structural change, exactly like
+//! the partition and section-plan caches.  Value-only changes (accepted
+//! proposals, epoch bumps, observation rewrites) keep groups valid:
+//! slot tables store *where* to read values, never values themselves.
+
+use crate::ppl::prim::Prim;
+use crate::ppl::sp::SpFamily;
+use crate::ppl::value::Value;
+use crate::trace::node::NodeId;
+use crate::trace::partition::Partition;
+use crate::trace::pet::Trace;
+use crate::trace::plan::{PlanArg, PlanOp, SectionPlan};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::rc::Rc;
+
+/// One cell of a vector-typed column (register or binding).
+type VCell = Option<Rc<Vec<f64>>>;
+
+/// Structural fingerprint of a lowered section: the op list modulo its
+/// per-section bindings (constant *values*, trace node *ids*, absorber
+/// node *ids* are excluded; constant type classes and vector arities are
+/// included, because a shared op list must agree on them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ShapeKey(pub u64);
+
+/// Type class of a value for shape purposes.  `Vec(len)` carries the
+/// arity: two dot products over different dimensions are different
+/// shapes (they cannot share a kernel or an op list).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Cls {
+    Real,
+    Int,
+    Bool,
+    Vec(usize),
+    Other,
+}
+
+fn value_class(v: &Value) -> Cls {
+    match v {
+        Value::Real(_) => Cls::Real,
+        Value::Int(_) => Cls::Int,
+        Value::Bool(_) => Cls::Bool,
+        Value::Vector(x) => Cls::Vec(x.len()),
+        _ => Cls::Other,
+    }
+}
+
+fn hash_value_class(v: &Value, h: &mut DefaultHasher) {
+    match value_class(v) {
+        Cls::Real => 0u8.hash(h),
+        Cls::Int => 1u8.hash(h),
+        Cls::Bool => 2u8.hash(h),
+        Cls::Vec(n) => {
+            3u8.hash(h);
+            n.hash(h);
+        }
+        Cls::Other => 4u8.hash(h),
+    }
+}
+
+fn hash_arg(a: &PlanArg, h: &mut DefaultHasher) {
+    match a {
+        PlanArg::Const(v) => {
+            0u8.hash(h);
+            hash_value_class(v, h);
+        }
+        PlanArg::Slot(i) => {
+            1u8.hash(h);
+            i.hash(h);
+        }
+        PlanArg::Global(k) => {
+            2u8.hash(h);
+            k.hash(h);
+        }
+        // the node id is a binding, not structure
+        PlanArg::Trace(_) => 3u8.hash(h),
+    }
+}
+
+fn hash_args(args: &[PlanArg], h: &mut DefaultHasher) {
+    args.len().hash(h);
+    for a in args {
+        hash_arg(a, h);
+    }
+}
+
+impl ShapeKey {
+    /// Structural hash of a lowered section plan.
+    pub fn of(plan: &SectionPlan) -> ShapeKey {
+        let mut h = DefaultHasher::new();
+        plan.n_slots.hash(&mut h);
+        plan.ops.len().hash(&mut h);
+        for op in &plan.ops {
+            match op {
+                PlanOp::Prim { prim, out, args } => {
+                    0u8.hash(&mut h);
+                    prim.hash(&mut h);
+                    out.hash(&mut h);
+                    hash_args(args, &mut h);
+                }
+                PlanOp::Copy { out, from } => {
+                    1u8.hash(&mut h);
+                    out.hash(&mut h);
+                    hash_arg(from, &mut h);
+                }
+                PlanOp::Committed { out, .. } => {
+                    2u8.hash(&mut h);
+                    out.hash(&mut h);
+                }
+            }
+        }
+        plan.absorbers.len().hash(&mut h);
+        for ab in &plan.absorbers {
+            ab.fam.hash(&mut h);
+            hash_args(&ab.args, &mut h);
+        }
+        ShapeKey(h.finish())
+    }
+}
+
+fn arg_matches(t: &PlanArg, m: &PlanArg) -> bool {
+    match (t, m) {
+        (PlanArg::Const(a), PlanArg::Const(b)) => value_class(a) == value_class(b),
+        (PlanArg::Slot(a), PlanArg::Slot(b)) => a == b,
+        (PlanArg::Global(a), PlanArg::Global(b)) => a == b,
+        (PlanArg::Trace(_), PlanArg::Trace(_)) => true,
+        _ => false,
+    }
+}
+
+fn args_match(t: &[PlanArg], m: &[PlanArg]) -> bool {
+    t.len() == m.len() && t.iter().zip(m).all(|(a, b)| arg_matches(a, b))
+}
+
+/// Full structural comparison — the authoritative check behind the
+/// [`ShapeKey`] hash, run per member when a group forms, so a hash
+/// collision can never mix shapes into one op list.
+pub fn same_shape(t: &SectionPlan, m: &SectionPlan) -> bool {
+    if t.n_slots != m.n_slots
+        || t.ops.len() != m.ops.len()
+        || t.absorbers.len() != m.absorbers.len()
+    {
+        return false;
+    }
+    for (x, y) in t.ops.iter().zip(&m.ops) {
+        let ok = match (x, y) {
+            (
+                PlanOp::Prim { prim: p1, out: o1, args: a1 },
+                PlanOp::Prim { prim: p2, out: o2, args: a2 },
+            ) => p1 == p2 && o1 == o2 && args_match(a1, a2),
+            (PlanOp::Copy { out: o1, from: f1 }, PlanOp::Copy { out: o2, from: f2 }) => {
+                o1 == o2 && arg_matches(f1, f2)
+            }
+            (PlanOp::Committed { out: o1, .. }, PlanOp::Committed { out: o2, .. }) => o1 == o2,
+            _ => false,
+        };
+        if !ok {
+            return false;
+        }
+    }
+    t.absorbers
+        .iter()
+        .zip(&m.absorbers)
+        .all(|(a, b)| a.fam == b.fam && args_match(&a.args, &b.args))
+}
+
+// ---------------------------------------------------------------------
+// f64 lowering: the shared column program
+// ---------------------------------------------------------------------
+
+/// Scalar (f64) operand of a column op.
+#[derive(Clone, Copy, Debug)]
+pub enum ColS {
+    /// f64 register (column) written by an earlier op.
+    Slot(u32),
+    /// Candidate value of the k-th global-section node (batch-shared).
+    Global(u32),
+    /// Per-section scalar binding column (constant or trace read).
+    Bind(u32),
+}
+
+/// Vector operand of a column op.
+#[derive(Clone, Copy, Debug)]
+pub enum ColV {
+    /// Vector register written by an earlier `CopyV`.
+    Slot(u32),
+    /// Candidate value of the k-th global-section node (batch-shared).
+    Global(u32),
+    /// Per-section vector binding (constant or trace read).
+    Bind(u32),
+}
+
+/// One column op, executed over every selected section before the next
+/// op runs (column-wise replay).
+#[derive(Clone, Debug)]
+pub enum ColOp {
+    /// `s[out][j] = prim(args[j]...)` — scalar whitelist prims only.
+    Map { prim: Prim, out: u32, args: Vec<ColS> },
+    /// `s[out][j] = dot(a[j], b[j])`, optionally through the logistic
+    /// link — the lowering of `Prim::Dot` / `Prim::LinearLogistic`.
+    Dot { sigmoid: bool, out: u32, a: ColV, b: ColV },
+    CopyS { out: u32, from: ColS },
+    CopyV { out: u32, from: ColV },
+}
+
+/// One absorbing score: `l[j] += logpdf(value_j | cand args) -
+/// logpdf(value_j | committed args)` for a scalar SP family.
+#[derive(Clone, Debug)]
+pub struct ColAbsorb {
+    pub fam: SpFamily,
+    /// Candidate-side argument sources, in `node.args` order.
+    pub cand: Vec<ColS>,
+}
+
+/// Where one per-section binding lives inside a member's `SectionPlan`
+/// (used to extract the member's slot-table row in the same canonical
+/// order the lowering assigned binding indices).
+#[derive(Clone, Copy, Debug)]
+enum ArgPath {
+    OpArg(u32, u32),
+    CopyFrom(u32),
+    AbsorbArg(u32, u32),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BindKind {
+    Scalar,
+    /// Vector binding with the template's arity: `ShapeKey` does not
+    /// hash trace-read arities (the node id is a binding), so member
+    /// extraction must enforce the template's length or a single
+    /// mixed-arity member would `Err` every replay of its group.
+    Vector(u32),
+}
+
+/// The f64-lowered column program shared by every member of a group.
+#[derive(Debug)]
+pub struct ColShape {
+    pub n_sregs: u32,
+    pub n_vregs: u32,
+    pub n_sbind: u32,
+    pub n_vbind: u32,
+    pub ops: Vec<ColOp>,
+    pub absorbers: Vec<ColAbsorb>,
+    bind_plan: Vec<(ArgPath, BindKind)>,
+}
+
+/// One entry of a per-section scalar slot table.
+#[derive(Clone, Debug)]
+pub enum SBind {
+    /// Constant, pre-narrowed to f64 at group build (strictly from
+    /// `Value::Real`, so no int-preservation divergence is possible).
+    Const(f64),
+    /// Committed trace value, read (strictly as `Value::Real`) at
+    /// replay time after freshening.
+    Node(NodeId),
+}
+
+/// One entry of a per-section vector slot table.
+#[derive(Clone, Debug)]
+pub enum VBind {
+    Const(Rc<Vec<f64>>),
+    Node(NodeId),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Ty {
+    S,
+    V,
+}
+
+/// Lowering state: slot -> typed register mapping + binding allocation.
+struct Low {
+    slot_map: Vec<Option<(Ty, u32)>>,
+    n_s: u32,
+    n_v: u32,
+    n_sb: u32,
+    n_vb: u32,
+    bind_plan: Vec<(ArgPath, BindKind)>,
+}
+
+impl Low {
+    fn alloc_s(&mut self, slot: u32) -> u32 {
+        let r = self.n_s;
+        self.n_s += 1;
+        self.slot_map[slot as usize] = Some((Ty::S, r));
+        r
+    }
+
+    fn alloc_v(&mut self, slot: u32) -> u32 {
+        let r = self.n_v;
+        self.n_v += 1;
+        self.slot_map[slot as usize] = Some((Ty::V, r));
+        r
+    }
+
+    fn sbind(&mut self, path: ArgPath) -> ColS {
+        let i = self.n_sb;
+        self.n_sb += 1;
+        self.bind_plan.push((path, BindKind::Scalar));
+        ColS::Bind(i)
+    }
+
+    fn vbind(&mut self, path: ArgPath, arity: u32) -> ColV {
+        let i = self.n_vb;
+        self.n_vb += 1;
+        self.bind_plan.push((path, BindKind::Vector(arity)));
+        ColV::Bind(i)
+    }
+
+    /// Lower one argument as a scalar operand; `None` when the argument
+    /// is not provably f64 (caller abandons the f64 lowering).
+    fn scalar_arg(
+        &mut self,
+        trace: &Trace,
+        p: &Partition,
+        a: &PlanArg,
+        path: ArgPath,
+    ) -> Option<ColS> {
+        match a {
+            PlanArg::Const(Value::Real(_)) => Some(self.sbind(path)),
+            PlanArg::Const(_) => None,
+            PlanArg::Slot(s) => match self.slot_map[*s as usize] {
+                Some((Ty::S, r)) => Some(ColS::Slot(r)),
+                _ => None,
+            },
+            PlanArg::Global(k) => {
+                match value_class(trace.value(p.global_drg[*k as usize])) {
+                    Cls::Real => Some(ColS::Global(*k)),
+                    _ => None,
+                }
+            }
+            PlanArg::Trace(id) => match value_class(trace.value(*id)) {
+                Cls::Real => Some(self.sbind(path)),
+                _ => None,
+            },
+        }
+    }
+
+    /// Lower one argument as a vector operand.
+    fn vec_arg(
+        &mut self,
+        trace: &Trace,
+        p: &Partition,
+        a: &PlanArg,
+        path: ArgPath,
+    ) -> Option<ColV> {
+        match a {
+            PlanArg::Const(Value::Vector(v)) => Some(self.vbind(path, v.len() as u32)),
+            PlanArg::Const(_) => None,
+            PlanArg::Slot(s) => match self.slot_map[*s as usize] {
+                Some((Ty::V, r)) => Some(ColV::Slot(r)),
+                _ => None,
+            },
+            PlanArg::Global(k) => {
+                match value_class(trace.value(p.global_drg[*k as usize])) {
+                    Cls::Vec(_) => Some(ColV::Global(*k)),
+                    _ => None,
+                }
+            }
+            PlanArg::Trace(id) => match value_class(trace.value(*id)) {
+                Cls::Vec(n) => Some(self.vbind(path, n as u32)),
+                _ => None,
+            },
+        }
+    }
+
+    /// Class of a copy source (decides scalar vs vector register).
+    fn copy_class(&self, trace: &Trace, p: &Partition, a: &PlanArg) -> Cls {
+        match a {
+            PlanArg::Const(v) => value_class(v),
+            PlanArg::Slot(s) => match self.slot_map[*s as usize] {
+                Some((Ty::S, _)) => Cls::Real,
+                Some((Ty::V, _)) => Cls::Vec(0),
+                None => Cls::Other,
+            },
+            PlanArg::Global(k) => value_class(trace.value(p.global_drg[*k as usize])),
+            PlanArg::Trace(id) => value_class(trace.value(*id)),
+        }
+    }
+}
+
+/// Arity accepted by the scalar whitelist, mirroring `Prim::apply`.
+fn scalar_prim_arity_ok(prim: Prim, n: usize) -> bool {
+    use Prim::*;
+    match prim {
+        Add | Mul | Min | Max => n >= 1,
+        Sub => n == 1 || n == 2,
+        Div | Pow => n == 2,
+        Neg | Exp | Log | Sqrt | Abs | Sigmoid => n == 1,
+        _ => false,
+    }
+}
+
+/// Lower a template plan to the shared f64 column program, or `None`
+/// when the shape is not (provably) f64-clean — the group then scores
+/// per section through the scalar `ScorerArena` path.
+pub fn lower_cols(trace: &Trace, p: &Partition, plan: &SectionPlan) -> Option<ColShape> {
+    let mut low = Low {
+        slot_map: vec![None; plan.n_slots as usize],
+        n_s: 0,
+        n_v: 0,
+        n_sb: 0,
+        n_vb: 0,
+        bind_plan: Vec::new(),
+    };
+    let mut ops: Vec<ColOp> = Vec::with_capacity(plan.ops.len());
+    for (oi, op) in plan.ops.iter().enumerate() {
+        let oi = oi as u32;
+        match op {
+            PlanOp::Prim { prim, out, args } => match prim {
+                Prim::LinearLogistic | Prim::Dot => {
+                    if args.len() != 2 {
+                        return None;
+                    }
+                    let a = low.vec_arg(trace, p, &args[0], ArgPath::OpArg(oi, 0))?;
+                    let b = low.vec_arg(trace, p, &args[1], ArgPath::OpArg(oi, 1))?;
+                    let r = low.alloc_s(*out);
+                    ops.push(ColOp::Dot {
+                        sigmoid: matches!(prim, Prim::LinearLogistic),
+                        out: r,
+                        a,
+                        b,
+                    });
+                }
+                _ if scalar_prim_arity_ok(*prim, args.len()) => {
+                    let mut cargs = Vec::with_capacity(args.len());
+                    for (ai, a) in args.iter().enumerate() {
+                        cargs.push(low.scalar_arg(trace, p, a, ArgPath::OpArg(oi, ai as u32))?);
+                    }
+                    let r = low.alloc_s(*out);
+                    ops.push(ColOp::Map {
+                        prim: *prim,
+                        out: r,
+                        args: cargs,
+                    });
+                }
+                _ => return None,
+            },
+            PlanOp::Copy { out, from } => match low.copy_class(trace, p, from) {
+                Cls::Real => {
+                    let f = low.scalar_arg(trace, p, from, ArgPath::CopyFrom(oi))?;
+                    let r = low.alloc_s(*out);
+                    ops.push(ColOp::CopyS { out: r, from: f });
+                }
+                Cls::Vec(_) => {
+                    let f = low.vec_arg(trace, p, from, ArgPath::CopyFrom(oi))?;
+                    let r = low.alloc_v(*out);
+                    ops.push(ColOp::CopyV { out: r, from: f });
+                }
+                _ => return None,
+            },
+            // Maker values (Value::Sp) are never f64-representable.
+            PlanOp::Committed { .. } => return None,
+        }
+    }
+    let mut absorbers = Vec::with_capacity(plan.absorbers.len());
+    for (bi, ab) in plan.absorbers.iter().enumerate() {
+        if matches!(ab.fam, SpFamily::MvNormal) {
+            return None;
+        }
+        let mut cand = Vec::with_capacity(ab.args.len());
+        for (ai, a) in ab.args.iter().enumerate() {
+            cand.push(low.scalar_arg(trace, p, a, ArgPath::AbsorbArg(bi as u32, ai as u32))?);
+        }
+        absorbers.push(ColAbsorb { fam: ab.fam, cand });
+    }
+    Some(ColShape {
+        n_sregs: low.n_s,
+        n_vregs: low.n_v,
+        n_sbind: low.n_sb,
+        n_vbind: low.n_vb,
+        ops,
+        absorbers,
+        bind_plan: low.bind_plan,
+    })
+}
+
+/// Extract one member's slot-table row by following the template's
+/// binding paths through the member's plan.  `None` on any kind
+/// mismatch — including a *trace-read* binding whose current value
+/// class does not fit the column type (`ShapeKey` hashes `Trace` args
+/// as a bare tag, so an Int-valued read can share a key with a
+/// Real-valued template; admitting it would make every replay of the
+/// whole group `Err` into the scalar path).  A rejected member stays
+/// scalar alone; the rest of the group keeps vectorizing.
+fn extract_binds(
+    trace: &Trace,
+    shape: &ColShape,
+    plan: &SectionPlan,
+) -> Option<(Vec<SBind>, Vec<VBind>)> {
+    let mut sb = Vec::with_capacity(shape.n_sbind as usize);
+    let mut vb = Vec::with_capacity(shape.n_vbind as usize);
+    for &(path, kind) in &shape.bind_plan {
+        let arg: &PlanArg = match path {
+            ArgPath::OpArg(oi, ai) => match plan.ops.get(oi as usize)? {
+                PlanOp::Prim { args, .. } => args.get(ai as usize)?,
+                _ => return None,
+            },
+            ArgPath::CopyFrom(oi) => match plan.ops.get(oi as usize)? {
+                PlanOp::Copy { from, .. } => from,
+                _ => return None,
+            },
+            ArgPath::AbsorbArg(bi, ai) => plan.absorbers.get(bi as usize)?.args.get(ai as usize)?,
+        };
+        match (kind, arg) {
+            (BindKind::Scalar, PlanArg::Const(Value::Real(x))) => sb.push(SBind::Const(*x)),
+            (BindKind::Scalar, PlanArg::Trace(id)) => {
+                if value_class(trace.value(*id)) != Cls::Real {
+                    return None;
+                }
+                sb.push(SBind::Node(*id));
+            }
+            // const arities are already part of the ShapeKey/same_shape
+            // structure; the check is defense in depth
+            (BindKind::Vector(arity), PlanArg::Const(Value::Vector(v))) => {
+                if v.len() as u32 != arity {
+                    return None;
+                }
+                vb.push(VBind::Const(v.clone()));
+            }
+            (BindKind::Vector(arity), PlanArg::Trace(id)) => match trace.value(*id) {
+                Value::Vector(v) if v.len() as u32 == arity => vb.push(VBind::Node(*id)),
+                _ => return None,
+            },
+            _ => return None,
+        }
+    }
+    Some((sb, vb))
+}
+
+// ---------------------------------------------------------------------
+// Groups and the per-partition set
+// ---------------------------------------------------------------------
+
+/// A batched group: the shared column program plus flat per-section
+/// slot tables (SoA layout; strides are the shape's binding counts).
+#[derive(Debug)]
+pub struct BatchGroup {
+    pub key: ShapeKey,
+    /// The structural template every member was verified against.
+    pub template: Rc<SectionPlan>,
+    /// The shared f64 column program (groups only exist for shapes
+    /// that lowered; shapes that fail to lower stay unbatched).
+    pub cols: ColShape,
+    /// Border-child root of each member, in membership order.
+    pub roots: Vec<NodeId>,
+    /// Scalar slot tables, stride `cols.n_sbind`.
+    pub sbinds: Vec<SBind>,
+    /// Vector slot tables, stride `cols.n_vbind`.
+    pub vbinds: Vec<VBind>,
+    /// Absorber nodes, stride `template.absorbers.len()`.
+    pub absorbers: Vec<NodeId>,
+    /// Concatenated freshen-before-replay node lists; member `m` owns
+    /// `touch[touch_off[m]..touch_off[m+1]]`.
+    pub touch: Vec<NodeId>,
+    pub touch_off: Vec<u32>,
+}
+
+impl BatchGroup {
+    pub fn len(&self) -> usize {
+        self.roots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.roots.is_empty()
+    }
+
+    /// The freshen list of member `m`.
+    pub fn touch_of(&self, m: usize) -> &[NodeId] {
+        &self.touch[self.touch_off[m] as usize..self.touch_off[m + 1] as usize]
+    }
+}
+
+/// All batchable sections of one partition, grouped by shape.
+#[derive(Debug)]
+pub struct BatchPlanSet {
+    pub groups: Vec<BatchGroup>,
+    /// root -> (group index, member index).  Roots absent from the map
+    /// (unlowerable sections, shape mismatches, non-f64 shapes) are
+    /// scored per section by the caller.
+    pub of_root: HashMap<NodeId, (u32, u32)>,
+    /// `Trace::structure_version` at build time (cache validation).
+    pub built_at: u64,
+}
+
+impl BatchPlanSet {
+    /// Sections covered by a batched group.
+    pub fn batched_roots(&self) -> usize {
+        self.of_root.len()
+    }
+}
+
+/// Group every local section of partition `p` by shape and lower each
+/// group's column program.  Sections that cannot be planned, cannot be
+/// f64-lowered, or structurally mismatch their group's template are
+/// simply left out of `of_root` (scalar fallback), never mis-grouped.
+pub fn build_batch_plans(trace: &Trace, p: &Partition) -> BatchPlanSet {
+    let mut by_key: HashMap<ShapeKey, u32> = HashMap::new();
+    let mut groups: Vec<BatchGroup> = Vec::new();
+    let mut of_root: HashMap<NodeId, (u32, u32)> = HashMap::new();
+    for &root in &p.locals {
+        let Ok(plan) = trace.cached_section_plan(p, root) else {
+            continue;
+        };
+        let key = ShapeKey::of(&plan);
+        let gi = match by_key.get(&key) {
+            Some(&gi) => gi,
+            None => {
+                // a member whose lowering fails stays scalar, but does
+                // NOT ban the key: a later same-shaped member with
+                // f64-clean trace reads may still found the group
+                // (lowering is O(ops), and this runs once per rebuild)
+                let Some(cols) = lower_cols(trace, p, &plan) else {
+                    continue;
+                };
+                groups.push(BatchGroup {
+                    key,
+                    template: plan.clone(),
+                    cols,
+                    roots: Vec::new(),
+                    sbinds: Vec::new(),
+                    vbinds: Vec::new(),
+                    absorbers: Vec::new(),
+                    touch: Vec::new(),
+                    touch_off: vec![0],
+                });
+                let gi = (groups.len() - 1) as u32;
+                by_key.insert(key, gi);
+                gi
+            }
+        };
+        let g = &mut groups[gi as usize];
+        if !Rc::ptr_eq(&plan, &g.template) && !same_shape(&g.template, &plan) {
+            continue; // hash collision: keep the member on the scalar path
+        }
+        let Some((sb, vb)) = extract_binds(trace, &g.cols, &plan) else {
+            continue;
+        };
+        let mi = g.roots.len() as u32;
+        g.roots.push(root);
+        g.sbinds.extend(sb);
+        g.vbinds.extend(vb);
+        g.absorbers.extend(plan.absorbers.iter().map(|a| a.node));
+        g.touch.extend_from_slice(&plan.touch);
+        g.touch_off.push(g.touch.len() as u32);
+        of_root.insert(root, (gi, mi));
+    }
+    BatchPlanSet {
+        groups,
+        of_root,
+        built_at: trace.structure_version,
+    }
+}
+
+// ---------------------------------------------------------------------
+// The register file and the columnar replay
+// ---------------------------------------------------------------------
+
+fn s_at(
+    arg: ColS,
+    sregs: &[f64],
+    sbind: &[f64],
+    globals: &[Value],
+    w: usize,
+    j: usize,
+) -> Result<f64, String> {
+    match arg {
+        ColS::Slot(r) => Ok(sregs[r as usize * w + j]),
+        ColS::Bind(b) => Ok(sbind[b as usize * w + j]),
+        ColS::Global(k) => match globals.get(k as usize) {
+            Some(Value::Real(x)) => Ok(*x),
+            v => Err(format!(
+                "batch replay: global {k} is not a real ({})",
+                v.map_or("missing", |v| v.type_name())
+            )),
+        },
+    }
+}
+
+fn v_at<'a>(
+    arg: ColV,
+    vregs: &'a [VCell],
+    vbind: &'a [VCell],
+    globals: &'a [Value],
+    w: usize,
+    j: usize,
+) -> Result<&'a Rc<Vec<f64>>, String> {
+    match arg {
+        ColV::Slot(r) => vregs[r as usize * w + j]
+            .as_ref()
+            .ok_or_else(|| "batch replay: uninitialized vector register".to_string()),
+        ColV::Bind(b) => vbind[b as usize * w + j]
+            .as_ref()
+            .ok_or_else(|| "batch replay: uninitialized vector binding".to_string()),
+        ColV::Global(k) => match globals.get(k as usize) {
+            Some(Value::Vector(v)) => Ok(v),
+            v => Err(format!(
+                "batch replay: global {k} is not a vector ({})",
+                v.map_or("missing", |v| v.type_name())
+            )),
+        },
+    }
+}
+
+/// `logpdf(value | args)` for a scalar SP family, matching
+/// `SpFamily::logpdf`'s coercions bit-for-bit (`num` = `as_f64` with
+/// NaN for out-of-class, applied identically on both sides).
+fn scalar_fam_logpdf(fam: SpFamily, node_value: &Value, arg: impl Fn(usize) -> f64, n_args: usize) -> Result<f64, String> {
+    use crate::dist;
+    Ok(match fam {
+        SpFamily::Bernoulli => {
+            let b = node_value
+                .as_bool()
+                .ok_or("batch replay: bernoulli value is not a bool")?;
+            let p = if n_args == 0 { 0.5 } else { arg(0) };
+            dist::bernoulli_logpmf(b, p)
+        }
+        SpFamily::Normal => {
+            let x = value_f64(node_value)?;
+            dist::normal_logpdf(x, arg(0), arg(1))
+        }
+        SpFamily::Gamma => {
+            let x = value_f64(node_value)?;
+            dist::gamma_logpdf(x, arg(0), arg(1))
+        }
+        SpFamily::InvGamma => {
+            let x = value_f64(node_value)?;
+            dist::inv_gamma_logpdf(x, arg(0), arg(1))
+        }
+        SpFamily::Beta => {
+            let x = value_f64(node_value)?;
+            dist::beta_logpdf(x, arg(0), arg(1))
+        }
+        SpFamily::UniformContinuous => {
+            let x = value_f64(node_value)?;
+            dist::uniform_logpdf(x, arg(0), arg(1))
+        }
+        SpFamily::StudentT => {
+            let x = value_f64(node_value)?;
+            dist::student_t_logpdf(x, arg(0), arg(1), arg(2))
+        }
+        SpFamily::MvNormal => return Err("batch replay: multivariate absorber".into()),
+    })
+}
+
+fn value_f64(v: &Value) -> Result<f64, String> {
+    v.as_f64()
+        .ok_or_else(|| format!("batch replay: absorber value is not numeric ({})", v.type_name()))
+}
+
+/// Reusable f64 register file: slot columns, binding columns, and the
+/// per-batch output.  Cleared — not freed — between batches, so
+/// steady-state replay does no heap allocation beyond `Rc` bumps for
+/// vector bindings.
+#[derive(Default)]
+pub struct RegFile {
+    sregs: Vec<f64>,
+    vregs: Vec<VCell>,
+    sbind: Vec<f64>,
+    vbind: Vec<VCell>,
+}
+
+impl RegFile {
+    pub fn new() -> RegFile {
+        RegFile::default()
+    }
+
+    /// Columnar replay of `group` over the selected members.  `sel`
+    /// holds `(member index, caller tag)` pairs; only the member index
+    /// is read here — outputs land in `out` in `sel` order.  The caller
+    /// must have freshened each member's touch list and filled
+    /// `globals` (via `plan::candidate_globals`) first.
+    ///
+    /// On `Err`, no output is valid and the caller must re-score the
+    /// batch per section (the scalar path reproduces the interpreter
+    /// oracle exactly, including its error/`-inf` behavior).
+    pub fn replay(
+        &mut self,
+        trace: &Trace,
+        group: &BatchGroup,
+        sel: &[(u32, u32)],
+        globals: &[Value],
+        out: &mut Vec<f64>,
+    ) -> Result<(), String> {
+        let cols = &group.cols;
+        let w = sel.len();
+        out.clear();
+        out.resize(w, 0.0);
+        if w == 0 {
+            return Ok(());
+        }
+        let RegFile {
+            sregs,
+            vregs,
+            sbind,
+            vbind,
+        } = self;
+
+        // --- prefetch the per-section binding columns ---
+        let nsb = cols.n_sbind as usize;
+        sbind.clear();
+        sbind.resize(nsb * w, 0.0);
+        for b in 0..nsb {
+            for (j, &(m, _)) in sel.iter().enumerate() {
+                sbind[b * w + j] = match &group.sbinds[m as usize * nsb + b] {
+                    SBind::Const(x) => *x,
+                    SBind::Node(id) => match trace.value(*id) {
+                        Value::Real(x) => *x,
+                        v => {
+                            return Err(format!(
+                                "batch replay: scalar binding is {} not real",
+                                v.type_name()
+                            ))
+                        }
+                    },
+                };
+            }
+        }
+        let nvb = cols.n_vbind as usize;
+        vbind.clear();
+        vbind.resize(nvb * w, None);
+        for b in 0..nvb {
+            for (j, &(m, _)) in sel.iter().enumerate() {
+                vbind[b * w + j] = Some(match &group.vbinds[m as usize * nvb + b] {
+                    VBind::Const(v) => v.clone(),
+                    VBind::Node(id) => match trace.value(*id) {
+                        Value::Vector(v) => v.clone(),
+                        v => {
+                            return Err(format!(
+                                "batch replay: vector binding is {} not vector",
+                                v.type_name()
+                            ))
+                        }
+                    },
+                });
+            }
+        }
+
+        // --- column ops ---
+        sregs.clear();
+        sregs.resize(cols.n_sregs as usize * w, 0.0);
+        vregs.clear();
+        vregs.resize(cols.n_vregs as usize * w, None);
+        for op in &cols.ops {
+            match op {
+                ColOp::Map { prim, out: o, args } => {
+                    use Prim::*;
+                    for j in 0..w {
+                        let a0 = s_at(args[0], sregs, sbind, globals, w, j)?;
+                        let r = match prim {
+                            // identical fold order to Prim::apply
+                            Add | Mul | Min | Max => {
+                                let mut acc = a0;
+                                for &a in &args[1..] {
+                                    let x = s_at(a, sregs, sbind, globals, w, j)?;
+                                    acc = match prim {
+                                        Add => acc + x,
+                                        Mul => acc * x,
+                                        Min => acc.min(x),
+                                        Max => acc.max(x),
+                                        _ => unreachable!(),
+                                    };
+                                }
+                                acc
+                            }
+                            Sub => {
+                                if args.len() == 1 {
+                                    -a0
+                                } else {
+                                    a0 - s_at(args[1], sregs, sbind, globals, w, j)?
+                                }
+                            }
+                            Div => a0 / s_at(args[1], sregs, sbind, globals, w, j)?,
+                            Pow => a0.powf(s_at(args[1], sregs, sbind, globals, w, j)?),
+                            Neg => -a0,
+                            Exp => a0.exp(),
+                            Log => a0.ln(),
+                            Sqrt => a0.sqrt(),
+                            Abs => a0.abs(),
+                            Sigmoid => 1.0 / (1.0 + (-a0).exp()),
+                            _ => return Err(format!("batch replay: prim {prim:?} not columnar")),
+                        };
+                        sregs[*o as usize * w + j] = r;
+                    }
+                }
+                ColOp::Dot { sigmoid, out: o, a, b } => {
+                    for j in 0..w {
+                        let av = v_at(*a, vregs, vbind, globals, w, j)?;
+                        let bv = v_at(*b, vregs, vbind, globals, w, j)?;
+                        if av.len() != bv.len() {
+                            return Err(format!(
+                                "batch replay: dot length mismatch {} vs {}",
+                                av.len(),
+                                bv.len()
+                            ));
+                        }
+                        // same accumulation order as Prim::apply's
+                        // zip/map/sum (fold from 0.0 in index order)
+                        let mut d = 0.0f64;
+                        for (x, y) in av.iter().zip(bv.iter()) {
+                            d += x * y;
+                        }
+                        sregs[*o as usize * w + j] =
+                            if *sigmoid { 1.0 / (1.0 + (-d).exp()) } else { d };
+                    }
+                }
+                ColOp::CopyS { out: o, from } => {
+                    for j in 0..w {
+                        let x = s_at(*from, sregs, sbind, globals, w, j)?;
+                        sregs[*o as usize * w + j] = x;
+                    }
+                }
+                ColOp::CopyV { out: o, from } => {
+                    for j in 0..w {
+                        let v = v_at(*from, vregs, vbind, globals, w, j)?.clone();
+                        vregs[*o as usize * w + j] = Some(v);
+                    }
+                }
+            }
+        }
+
+        // --- absorbers: l[j] += cand - committed, in absorber order ---
+        let nab = cols.absorbers.len();
+        for (bi, ab) in cols.absorbers.iter().enumerate() {
+            for (j, &(m, _)) in sel.iter().enumerate() {
+                let node_id = group.absorbers[m as usize * nab + bi];
+                let node = trace.node(node_id);
+                if ab.cand.len() != node.args.len() {
+                    return Err("batch replay: absorber arity changed".into());
+                }
+                // candidate side: args from registers/bindings/globals
+                let mut cand_args = [0.0f64; 4];
+                if ab.cand.len() > cand_args.len() {
+                    return Err("batch replay: absorber arity > 4".into());
+                }
+                for (ai, &a) in ab.cand.iter().enumerate() {
+                    cand_args[ai] = s_at(a, sregs, sbind, globals, w, j)?;
+                }
+                let cand = scalar_fam_logpdf(
+                    ab.fam,
+                    &node.value,
+                    |i| cand_args[i],
+                    ab.cand.len(),
+                )?;
+                // committed side: args read from the trace, with the
+                // same as_f64-or-NaN coercion SpFamily::logpdf applies
+                let committed = scalar_fam_logpdf(
+                    ab.fam,
+                    &node.value,
+                    |i| trace.arg_value(&node.args[i]).as_f64().unwrap_or(f64::NAN),
+                    node.args.len(),
+                )?;
+                out[j] += cand - committed;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::subsampled_mh::{InterpreterEval, LocalEvaluator};
+    use crate::math::Pcg64;
+    use crate::trace::plan::candidate_globals;
+
+    fn lr_trace(n: usize, seed: u64) -> Trace {
+        let mut src = String::from(
+            "[assume w (scope_include 'w 0 (multivariate_normal (vector 0 0 0) 0.1))]\n\
+             [assume f (lambda (x) (bernoulli (linear_logistic w x)))]\n",
+        );
+        let mut rng = Pcg64::seeded(seed ^ 0xbeef);
+        for _ in 0..n {
+            let (a, b) = (rng.normal(), rng.normal());
+            let lab = if rng.bernoulli(0.5) { "true" } else { "false" };
+            src.push_str(&format!("[observe (f (vector {a} {b} 1.0)) {lab}]\n"));
+        }
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(seed);
+        t.run_program(&src, &mut rng).unwrap();
+        t
+    }
+
+    #[test]
+    fn lr_sections_form_one_group_and_replay_bitwise() {
+        let mut t = lr_trace(24, 0);
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let set = t.cached_batch_plans(&p);
+        assert_eq!(set.groups.len(), 1, "LR sections must share one shape");
+        assert_eq!(set.batched_roots(), 24);
+        let g = &set.groups[0];
+        assert_eq!(g.len(), 24);
+        assert_eq!(g.cols.n_vbind, 1); // the per-observation x vector
+        assert_eq!(g.cols.absorbers.len(), 1);
+
+        let new_w = Value::vector(vec![0.3, -0.1, 0.2]);
+        let mut globals = Vec::new();
+        candidate_globals(&t, &p, &new_w, &mut globals).unwrap();
+        let sel: Vec<(u32, u32)> = (0..g.len() as u32).map(|m| (m, m)).collect();
+        let mut rf = RegFile::new();
+        let mut out = Vec::new();
+        rf.replay(&t, g, &sel, &globals, &mut out).unwrap();
+
+        let roots = g.roots.clone();
+        let mut interp = InterpreterEval;
+        let p2 = t.cached_partition(w).unwrap();
+        let want = interp.eval_sections(&mut t, &p2, &roots, &new_w).unwrap();
+        for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "l[{i}]: batched {a} vs interpreter {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn subset_selection_matches_full_replay() {
+        let t = lr_trace(16, 1);
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let set = t.cached_batch_plans(&p);
+        let g = &set.groups[0];
+        let new_w = Value::vector(vec![-0.2, 0.4, 0.05]);
+        let mut globals = Vec::new();
+        candidate_globals(&t, &p, &new_w, &mut globals).unwrap();
+        let mut rf = RegFile::new();
+        let all: Vec<(u32, u32)> = (0..g.len() as u32).map(|m| (m, m)).collect();
+        let mut full = Vec::new();
+        rf.replay(&t, g, &all, &globals, &mut full).unwrap();
+        // a scattered subset must read the same slot-table rows
+        let sub: Vec<(u32, u32)> = vec![(3, 0), (11, 1), (0, 2), (7, 3)];
+        let mut part = Vec::new();
+        rf.replay(&t, g, &sub, &globals, &mut part).unwrap();
+        for (k, &(m, _)) in sub.iter().enumerate() {
+            assert_eq!(part[k].to_bits(), full[m as usize].to_bits());
+        }
+    }
+
+    #[test]
+    fn shape_keys_separate_det_chains_and_arities() {
+        // three shapes over the same principal: logistic, gaussian dot,
+        // gaussian exp(dot); plus logistic at a different dimension on a
+        // second principal
+        let src = "\
+            [assume w (scope_include 'w 0 (multivariate_normal (vector 0 0) 0.5))]\n\
+            [assume w2 (scope_include 'w2 0 (multivariate_normal (vector 0 0 0) 0.5))]\n\
+            [assume f (lambda (x) (bernoulli (linear_logistic w x)))]\n\
+            [assume gn (lambda (x s) (normal (dot w x) s))]\n\
+            [assume ge (lambda (x s) (normal (exp (dot w x)) s))]\n\
+            [observe (f (vector 1.0 0.5)) true]\n\
+            [observe (f (vector -0.3 0.8)) false]\n\
+            [observe (gn (vector 0.2 0.1) 0.7) 0.4]\n\
+            [observe (gn (vector 0.9 -0.4) 1.2) -0.1]\n\
+            [observe (ge (vector 0.5 0.5) 0.9) 1.3]\n\
+            [observe (ge (vector -0.2 0.6) 0.8) 0.7]\n\
+            [assume f2 (lambda (x) (bernoulli (linear_logistic w2 x)))]\n\
+            [observe (f2 (vector 1.0 0.5 0.2)) true]\n\
+            [observe (f2 (vector -1.0 0.25 0.1)) false]\n";
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(2);
+        t.run_program(src, &mut rng).unwrap();
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        assert_eq!(p.n(), 6);
+        let mut keys = Vec::new();
+        for &root in &p.locals {
+            let plan = t.cached_section_plan(&p, root).unwrap();
+            keys.push(ShapeKey::of(&plan));
+        }
+        // obs order: f f gn gn ge ge
+        assert_eq!(keys[0], keys[1]);
+        assert_eq!(keys[2], keys[3]);
+        assert_eq!(keys[4], keys[5]);
+        assert_ne!(keys[0], keys[2]);
+        assert_ne!(keys[0], keys[4]);
+        assert_ne!(keys[2], keys[4]);
+        let set = t.cached_batch_plans(&p);
+        assert_eq!(set.groups.len(), 3);
+        assert_eq!(set.batched_roots(), 6);
+        // same op pattern at a different vector arity is a different shape
+        let w2 = t.lookup_node("w2").unwrap();
+        let p2 = t.cached_partition(w2).unwrap();
+        let plan2 = t.cached_section_plan(&p2, p2.locals[0]).unwrap();
+        assert_ne!(ShapeKey::of(&plan2), keys[0]);
+    }
+
+    #[test]
+    fn mixed_shape_groups_replay_bitwise() {
+        let src = "\
+            [assume w (scope_include 'w 0 (multivariate_normal (vector 0 0) 0.5))]\n\
+            [assume f (lambda (x) (bernoulli (linear_logistic w x)))]\n\
+            [assume gn (lambda (x s) (normal (dot w x) s))]\n\
+            [observe (f (vector 1.0 0.5)) true]\n\
+            [observe (gn (vector 0.2 0.1) 0.7) 0.4]\n\
+            [observe (f (vector -0.3 0.8)) false]\n\
+            [observe (gn (vector 0.9 -0.4) 1.2) -0.1]\n";
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(3);
+        t.run_program(src, &mut rng).unwrap();
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let set = t.cached_batch_plans(&p);
+        assert_eq!(set.groups.len(), 2);
+        let new_w = Value::vector(vec![0.15, -0.35]);
+        let mut globals = Vec::new();
+        candidate_globals(&t, &p, &new_w, &mut globals).unwrap();
+        let mut interp = InterpreterEval;
+        let mut rf = RegFile::new();
+        for g in &set.groups {
+            let sel: Vec<(u32, u32)> = (0..g.len() as u32).map(|m| (m, m)).collect();
+            let mut out = Vec::new();
+            rf.replay(&t, g, &sel, &globals, &mut out).unwrap();
+            let roots = g.roots.clone();
+            let p2 = t.cached_partition(w).unwrap();
+            let want = interp
+                .eval_sections(&mut t, &p2, &roots, &new_w)
+                .unwrap();
+            for (a, b) in out.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    /// Cache identity discipline: reuse while the structure is
+    /// unchanged, wholesale rebuild on any structural change.  The
+    /// child-edge-rewiring (mem re-key) variant of this regression —
+    /// with a bitwise post-rekey oracle check — lives in
+    /// `tests/shapekey.rs::batch_plans_rebuild_after_mem_rekey`.
+    #[test]
+    fn batch_set_cached_until_structure_changes() {
+        let mut t = lr_trace(10, 7);
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let set_a = t.cached_batch_plans(&p);
+        let set_b = t.cached_batch_plans(&p);
+        assert!(Rc::ptr_eq(&set_a, &set_b), "unchanged structure must reuse");
+        assert_eq!(set_a.built_at, t.structure_version);
+        assert_eq!(set_a.batched_roots(), 10);
+        // a structural change (node allocation from a new observation)
+        // must rebuild the set, never patch it
+        let mut rng = Pcg64::seeded(8);
+        t.run_program("[observe (f (vector 0.3 0.4 1.0)) true]", &mut rng)
+            .unwrap();
+        let p2 = t.cached_partition(w).unwrap();
+        let set_c = t.cached_batch_plans(&p2);
+        assert!(!Rc::ptr_eq(&set_a, &set_c), "stale set must rebuild");
+        assert_eq!(set_c.built_at, t.structure_version);
+        assert_ne!(set_c.built_at, set_a.built_at);
+        assert_eq!(set_c.batched_roots(), 11);
+    }
+
+    #[test]
+    fn int_constants_stay_on_the_scalar_path() {
+        // (+ (dot w x) 1) with an integer constant: Prim::apply would
+        // keep int-ness semantics the register file cannot reproduce, so
+        // the shape must refuse to f64-lower
+        let src = "\
+            [assume w (scope_include 'w 0 (multivariate_normal (vector 0 0) 0.5))]\n\
+            [assume g (lambda (x) (normal (+ (dot w x) 1) 0.8))]\n\
+            [observe (g (vector 1.0 0.5)) 0.4]\n\
+            [observe (g (vector 0.3 -0.2)) 1.1]\n";
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(4);
+        t.run_program(src, &mut rng).unwrap();
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let set = t.cached_batch_plans(&p);
+        assert_eq!(set.batched_roots(), 0, "int-const shape must not batch");
+        assert!(set.groups.is_empty());
+    }
+}

@@ -1,6 +1,7 @@
 //! The probabilistic execution trace (PET) and its transformations:
 //! evaluation, scaffolds, detach/regenerate, partitioning, staleness.
 
+pub mod batch;
 pub mod eval;
 pub mod node;
 pub mod partition;
@@ -9,6 +10,7 @@ pub mod plan;
 pub mod regen;
 pub mod scaffold;
 
+pub use batch::{BatchGroup, BatchPlanSet, RegFile, ShapeKey};
 pub use eval::Evaluator;
 pub use node::{ArgRef, EvalResult, Node, NodeId, NodeKind};
 pub use pet::Trace;

@@ -117,6 +117,12 @@ pub struct Trace {
     /// partition-relative (`PlanArg::Global` indices): two principals
     /// whose partitions share border children need distinct plans.
     plan_cache: RefCell<HashMap<(NodeId, NodeId), Rc<crate::trace::plan::SectionPlan>>>,
+    /// Shape-keyed batch-plan cache (trace/batch.rs), keyed by principal
+    /// and validated against `structure_version` like the other two:
+    /// groups hold per-section slot tables whose *node ids* would dangle
+    /// across structural changes, so a stale set is rebuilt wholesale,
+    /// never patched.
+    batch_cache: RefCell<HashMap<NodeId, Rc<crate::trace::batch::BatchPlanSet>>>,
     /// Process-unique id of this trace (evaluators that carry per-trace
     /// caches validate against it — `structure_version` alone is not
     /// unique across traces).
@@ -148,6 +154,7 @@ impl Trace {
             observations: Vec::new(),
             partition_cache: RefCell::new(HashMap::new()),
             plan_cache: RefCell::new(HashMap::new()),
+            batch_cache: RefCell::new(HashMap::new()),
             instance_id: TRACE_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
         }
     }
@@ -189,6 +196,28 @@ impl Trace {
         let pl = Rc::new(crate::trace::plan::lower_section(self, p, root)?);
         self.plan_cache.borrow_mut().insert(key, pl.clone());
         Ok(pl)
+    }
+
+    /// Cached shape-keyed batch plans for partition `p` (trace/batch.rs):
+    /// every local section grouped by structural shape, each group
+    /// carrying one f64 column program plus per-section slot tables.
+    /// Built eagerly over the whole partition on first use and rebuilt —
+    /// not patched — whenever the trace structure has changed since, the
+    /// same discipline as `cached_partition`/`cached_section_plan`
+    /// (value-only changes keep sets valid: slot tables store where to
+    /// read values, never values).
+    pub fn cached_batch_plans(
+        &self,
+        p: &crate::trace::partition::Partition,
+    ) -> Rc<crate::trace::batch::BatchPlanSet> {
+        if let Some(s) = self.batch_cache.borrow().get(&p.v) {
+            if s.built_at == self.structure_version {
+                return s.clone();
+            }
+        }
+        let s = Rc::new(crate::trace::batch::build_batch_plans(self, p));
+        self.batch_cache.borrow_mut().insert(p.v, s.clone());
+        s
     }
 
     // ---------------- arena ----------------

@@ -35,6 +35,13 @@
 //! Sections whose shape the lowering does not support (exchangeable
 //! absorbers) yield an `Err`; callers fall back to the interpreter walk,
 //! which keeps the planned path semantics-preserving by construction.
+//!
+//! Plans are also the input of the *vectorized* layer
+//! (`trace/batch.rs`): same-shaped plans — equal
+//! [`ShapeKey`](crate::trace::batch::ShapeKey)s — are grouped into one
+//! shared column program plus per-section slot tables, replayed through
+//! an f64 register file.  The [`ScorerArena`] below remains the scalar
+//! fallback for shapes the f64 lowering refuses.
 
 use crate::ppl::prim::Prim;
 use crate::ppl::sp::SpFamily;

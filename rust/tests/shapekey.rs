@@ -1,0 +1,190 @@
+//! Property tests for `ShapeKey` and the shape-keyed batch-plan cache,
+//! driven by the seeded program generator in `stats::propgen` (no
+//! external proptest dependency: `seed in 0..K` with a deterministic
+//! PRNG is reproducible in CI).
+//!
+//! Contracts under test:
+//! * same-shape sections must collide on one `ShapeKey` (and land in
+//!   one batch group), regardless of their constants and labels;
+//! * differently-shaped sections — a longer det chain, or the same
+//!   chain at a different vector arity — must not collide;
+//! * batch-plan sets invalidate on `structure_version` bumps caused by
+//!   child-edge rewiring (a mem re-key between existing clusters), and
+//!   a rebuilt set scores bitwise-identically to the interpreter.
+
+use std::collections::HashMap;
+use subppl::infer::{gibbs_transition, InterpreterEval, LocalEvaluator, PlannedEval};
+use subppl::math::Pcg64;
+use subppl::stats::propgen::{self, CLASS_LOGISTIC};
+use subppl::trace::{ShapeKey, Trace};
+use subppl::Value;
+
+#[test]
+fn same_shape_collides_different_shape_separates() {
+    for seed in 0..8u64 {
+        let gp = propgen::gen_program(seed, 14, 3);
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(seed);
+        t.run_program(&gp.src, &mut rng)
+            .unwrap_or_else(|e| panic!("seed {seed}: program failed: {e}"));
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).expect("w has a border partition");
+        assert_eq!(p.n(), gp.w_classes.len(), "seed {seed}");
+
+        // key per section, in border-child (= observation) order
+        let keys: Vec<ShapeKey> = p
+            .locals
+            .iter()
+            .map(|&root| ShapeKey::of(&t.cached_section_plan(&p, root).unwrap()))
+            .collect();
+        let mut key_of_class: HashMap<u8, ShapeKey> = HashMap::new();
+        for (i, (&key, &class)) in keys.iter().zip(&gp.w_classes).enumerate() {
+            match key_of_class.get(&class) {
+                // same shape (same class, arbitrary constants): collide
+                Some(&k) => assert_eq!(
+                    k, key,
+                    "seed {seed}: section {i} (class {class}) split its shape group"
+                ),
+                None => {
+                    key_of_class.insert(class, key);
+                }
+            }
+        }
+        // different det chains: distinct keys
+        let distinct: Vec<ShapeKey> = key_of_class.values().copied().collect();
+        for (a, ka) in distinct.iter().enumerate() {
+            for kb in &distinct[a + 1..] {
+                assert_ne!(ka, kb, "seed {seed}: classes collided");
+            }
+        }
+        // the batch set mirrors the key structure exactly
+        let set = t.cached_batch_plans(&p);
+        assert_eq!(set.groups.len(), key_of_class.len(), "seed {seed}");
+        assert_eq!(set.batched_roots(), p.n(), "seed {seed}");
+        for (i, &root) in p.locals.iter().enumerate() {
+            let &(gi, _) = set.of_root.get(&root).unwrap();
+            assert_eq!(
+                set.groups[gi as usize].key, keys[i],
+                "seed {seed}: root {i} grouped under the wrong key"
+            );
+        }
+
+        // same op chain at a different vector arity must not collide
+        let w2 = t.lookup_node("w2").unwrap();
+        let p2 = t.cached_partition(w2).expect("w2 has a border partition");
+        let k2 = ShapeKey::of(&t.cached_section_plan(&p2, p2.locals[0]).unwrap());
+        assert_ne!(
+            k2, key_of_class[&CLASS_LOGISTIC],
+            "seed {seed}: logistic shapes at d and d+1 collided"
+        );
+    }
+}
+
+#[test]
+fn batch_groups_replay_bitwise_on_generated_programs() {
+    for seed in 0..4u64 {
+        let gp = propgen::gen_program(seed, 12, 2);
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(seed ^ 0xf00d);
+        t.run_program(&gp.src, &mut rng).unwrap();
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let roots = p.locals.clone();
+        let new_w = Value::vector(vec![0.2 + seed as f64 * 0.05, -0.3]);
+        let mut interp = InterpreterEval;
+        let want = interp.eval_sections(&mut t, &p, &roots, &new_w).unwrap();
+        let mut batched = PlannedEval::new();
+        let got = batched.eval_sections(&mut t, &p, &roots, &new_w).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "seed {seed}: l[{i}] batched {a} vs interpreter {b}"
+            );
+        }
+        assert_eq!(batched.batched_sections, roots.len(), "seed {seed}");
+    }
+}
+
+/// Regression (mem re-key mid-run): a gibbs transition that re-keys a
+/// `(z i)` application between two existing clusters rewires child
+/// edges without allocating nodes.  The batch-plan set for the affected
+/// cluster must be rebuilt — if a stale slot table (old absorber node
+/// ids, old touch lists) were replayed, the bitwise comparison against
+/// the interpreter below would diverge.
+#[test]
+fn batch_plans_rebuild_after_mem_rekey() {
+    let n = 12;
+    let mut rng = Pcg64::seeded(21);
+    let mut src = String::from(
+        "[assume crp (make_crp 2.0)]\n\
+         [assume z (mem (lambda (i) (scope_include 'z i (crp))))]\n\
+         [assume muk (mem (lambda (k) (scope_include 'muk k (normal 0 3))))]\n\
+         [assume x (lambda (i) (normal (muk (z i)) 0.8))]\n",
+    );
+    for i in 0..n {
+        src.push_str(&format!("[observe (x {i}) {}]\n", (i % 5) as f64 - 2.0));
+    }
+    let mut trace = Trace::new();
+    trace.run_program(&src, &mut rng).unwrap();
+    let find = |trace: &Trace| {
+        trace
+            .scope_nodes("muk")
+            .into_iter()
+            .find_map(|mk| trace.cached_partition(mk).map(|p| (mk, p)))
+    };
+
+    // before the re-key: batched == interpreter, and the set is cached
+    let (_, p) = find(&trace).expect("no cluster with >= 2 points");
+    let set_before = trace.cached_batch_plans(&p);
+    assert!(set_before.batched_roots() > 0);
+    let roots = p.locals.clone();
+    let new_v = Value::Real(0.7);
+    let mut interp = InterpreterEval;
+    let want = interp.eval_sections(&mut trace, &p, &roots, &new_v).unwrap();
+    let mut batched = PlannedEval::new();
+    let got = batched.eval_sections(&mut trace, &p, &roots, &new_v).unwrap();
+    for (a, b) in got.iter().zip(&want) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // churn cluster assignments until a committed re-key changes the
+    // structure (rejected candidates restore the version)
+    let v0 = trace.structure_version;
+    let zs = trace.scope_nodes("z");
+    let mut changed = false;
+    for step in 0..2000 {
+        let z = zs[step % zs.len()];
+        gibbs_transition(&mut trace, &mut rng, z).unwrap();
+        if trace.structure_version != v0 {
+            changed = true;
+            break;
+        }
+    }
+    assert!(changed, "gibbs churn never re-keyed a mem application");
+
+    // after: the set must be rebuilt against the new structure, and the
+    // batched scores must still match the oracle bit-for-bit
+    let (_, p2) = find(&trace).expect("all clusters died");
+    let set_after = trace.cached_batch_plans(&p2);
+    assert_eq!(set_after.built_at, trace.structure_version);
+    assert_ne!(
+        set_after.built_at, set_before.built_at,
+        "stale batch-plan set survived a structural change"
+    );
+    let roots2 = p2.locals.clone();
+    let want = interp
+        .eval_sections(&mut trace, &p2, &roots2, &new_v)
+        .unwrap();
+    let mut batched = PlannedEval::new();
+    let got = batched
+        .eval_sections(&mut trace, &p2, &roots2, &new_v)
+        .unwrap();
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "post-rekey l[{i}]: batched {a} vs interpreter {b}"
+        );
+    }
+    assert_eq!(batched.batched_sections, roots2.len());
+}
