@@ -159,6 +159,7 @@ fn ablate_batch() {
             eps: 0.01,
             proposal: Proposal::Drift(0.05),
             exact: false,
+            threads: 1,
         };
         let mut ev = InterpreterEval;
         let iters = 40;

@@ -17,9 +17,14 @@ use subppl::infer::{
     PlannedEval, Proposal, SubsampledConfig,
 };
 use subppl::math::Pcg64;
+use subppl::runtime::pool::WorkerPool;
 use subppl::trace::partition::{build_partition, Partition};
 use subppl::trace::Trace;
 use subppl::Value;
+
+/// Chunk size of the thread-sweep replays: large enough that a 4-way
+/// shard still hands each worker hundreds of sections.
+const PAR_M: usize = 1024;
 
 fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     // warmup
@@ -75,7 +80,13 @@ struct SweepRow {
     interp_sps: f64,
     planned_sps: f64,
     batched_sps: f64,
+    /// Thread sweep at chunk `PAR_M`: sections/sec with 1/2/4 worker
+    /// threads.  The 1-thread column is the sequential batched path at
+    /// the same chunk size, so the ratios isolate pure thread scaling.
+    par_sps: [f64; 3],
 }
+
+const PAR_THREADS: [usize; 3] = [1, 2, 4];
 
 fn scorer_sweep(ns: &[usize], d: usize, m: usize) -> Vec<SweepRow> {
     let mut rows = Vec::new();
@@ -101,6 +112,21 @@ fn scorer_sweep(ns: &[usize], d: usize, m: usize) -> Vec<SweepRow> {
             "scorer sweep N={n:<7} interp {interp_sps:>12.0} sections/s   planned {planned_sps:>12.0} sections/s   batched {batched_sps:>12.0} sections/s   batched/planned {:.2}x",
             batched_sps / planned_sps
         );
+        // thread sweep: same kernel, chunk PAR_M, 1/2/4 workers
+        let mut par_sps = [0.0f64; 3];
+        for (i, &t) in PAR_THREADS.iter().enumerate() {
+            let mut ev = if t == 1 {
+                PlannedEval::new()
+            } else {
+                PlannedEval::with_pool(WorkerPool::new(t))
+            };
+            par_sps[i] =
+                sections_per_sec(&mut ev, &mut trace, &p, &new_w, PAR_M, target, reps);
+        }
+        println!(
+            "thread sweep N={n:<7} (m={PAR_M})  t1 {:>12.0}   t2 {:>12.0}   t4 {:>12.0} sections/s   t4/t1 {:.2}x",
+            par_sps[0], par_sps[1], par_sps[2], par_sps[2] / par_sps[0]
+        );
         rows.push(SweepRow {
             n,
             d,
@@ -108,6 +134,7 @@ fn scorer_sweep(ns: &[usize], d: usize, m: usize) -> Vec<SweepRow> {
             interp_sps,
             planned_sps,
             batched_sps,
+            par_sps,
         });
     }
     rows
@@ -118,7 +145,7 @@ fn emit_json(rows: &[SweepRow], micro: &[(String, f64)]) {
     for (i, r) in rows.iter().enumerate() {
         let _ = writeln!(
             out,
-            "    {{\"n\": {}, \"d\": {}, \"m\": {}, \"interpreter_sections_per_sec\": {:.1}, \"planned_sections_per_sec\": {:.1}, \"batched_sections_per_sec\": {:.1}, \"speedup\": {:.3}, \"batched_over_planned\": {:.3}}}{}",
+            "    {{\"n\": {}, \"d\": {}, \"m\": {}, \"interpreter_sections_per_sec\": {:.1}, \"planned_sections_per_sec\": {:.1}, \"batched_sections_per_sec\": {:.1}, \"speedup\": {:.3}, \"batched_over_planned\": {:.3}, \"parallel_m\": {}, \"parallel_sections_per_sec\": {{\"t1\": {:.1}, \"t2\": {:.1}, \"t4\": {:.1}}}, \"parallel_t4_over_t1\": {:.3}}}{}",
             r.n,
             r.d,
             r.m,
@@ -127,6 +154,11 @@ fn emit_json(rows: &[SweepRow], micro: &[(String, f64)]) {
             r.batched_sps,
             r.planned_sps / r.interp_sps,
             r.batched_sps / r.planned_sps,
+            PAR_M,
+            r.par_sps[0],
+            r.par_sps[1],
+            r.par_sps[2],
+            r.par_sps[2] / r.par_sps[0],
             if i + 1 == rows.len() { "" } else { "," }
         );
     }
@@ -207,6 +239,7 @@ fn main() {
         eps: 0.01,
         proposal: Proposal::Drift(0.05),
         exact: false,
+        threads: 1,
     };
     let t = bench(&format!("subsampled transition, batched (N={n0})"), if quick { 50 } else { 200 }, || {
         let s = subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, &mut batched).unwrap();
@@ -228,6 +261,7 @@ fn main() {
 
     let exact = SubsampledConfig {
         exact: true,
+        threads: 1,
         m: 1024,
         ..cfg.clone()
     };
@@ -315,6 +349,36 @@ fn main() {
                 r.n,
                 r.batched_sps,
                 r.planned_sps
+            );
+        }
+        // ---- thread-sweep self-check ----
+        // the dispatch cutoff + shard sizing must keep 4 threads from
+        // ever *losing* to 1 (0.85 = shared-runner noise margin); on a
+        // single-core machine 4 workers are pure oversubscription, so
+        // the check needs real parallelism to be meaningful
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if cores >= 2 {
+            assert!(
+                r.par_sps[2] > 0.85 * r.par_sps[0],
+                "4-thread replay slower than sequential at N={}: {:.0} vs {:.0} sections/s",
+                r.n,
+                r.par_sps[2],
+                r.par_sps[0]
+            );
+        }
+        // and must deliver real scaling on the big population — only
+        // meaningful when the machine actually has >= 4 cores
+        if r.n >= 100_000 && cores >= 4 {
+            assert!(
+                r.par_sps[2] >= 1.5 * r.par_sps[0],
+                "4-thread replay must be >= 1.5x sequential at N={}: {:.0} vs {:.0} sections/s",
+                r.n,
+                r.par_sps[2],
+                r.par_sps[0]
+            );
+        } else if r.n >= 100_000 {
+            println!(
+                "note: skipping the 1.5x 4-thread assertion ({cores} cores available)"
             );
         }
     }

@@ -81,6 +81,7 @@ pub fn fig5_sublinear(cfg: &Fig5Config, evaluator: &mut dyn LocalEvaluator) -> V
             eps: cfg.eps,
             proposal: Proposal::Drift(cfg.sigma),
             exact: true,
+            threads: 0,
         };
         for _ in 0..5 {
             subsampled_mh_transition(&mut trace, &mut rng, w, &warm, evaluator).unwrap();
@@ -226,6 +227,7 @@ pub fn fig4_reference(
         eps: cfg.eps,
         proposal: Proposal::Drift(cfg.sigma),
         exact: true,
+        threads: 0,
     };
     let mut acc = PredictiveAccumulator::new(test.n());
     for i in 0..(cfg.steps * 2) {
@@ -389,7 +391,14 @@ pub fn fig6_dpm(cfg: &Fig6Config, subsampled: bool) -> Vec<Fig6Point> {
     let (test, _) = dpm_data::generate(cfg.n_test, cfg.seed + 1);
     let mut rng = Pcg64::new(cfg.seed, 3);
     let mut trace = build_joint_dpm(&train, &mut rng);
-    let mut ev = PlannedEval::new();
+    let kcfg = SubsampledConfig {
+        m: cfg.m,
+        eps: cfg.eps,
+        proposal: Proposal::Drift(cfg.sigma),
+        exact: !subsampled,
+        threads: 0,
+    };
+    let mut ev = PlannedEval::for_config(&kcfg);
     let alpha = trace.lookup_node("alpha").unwrap();
     let mut points = Vec::new();
     let t0 = Instant::now();
@@ -406,12 +415,6 @@ pub fn fig6_dpm(cfg: &Fig6Config, subsampled: bool) -> Vec<Fig6Point> {
         let ws = trace.scope_nodes("w");
         if !ws.is_empty() {
             let wk = ws[rng.below(ws.len())];
-            let kcfg = SubsampledConfig {
-                m: cfg.m,
-                eps: cfg.eps,
-                proposal: Proposal::Drift(cfg.sigma),
-                exact: !subsampled,
-            };
             subsampled_mh_transition(&mut trace, &mut rng, wk, &kcfg, &mut ev).unwrap();
         }
         let acc = dpm_accuracy(&mut trace, &train, &test);
@@ -554,13 +557,14 @@ pub fn fig9_sv(cfg: &Fig9Config, subsampled: bool) -> Fig9Result {
     let series = sv_data::generate(&data_cfg, cfg.seed);
     let mut rng = Pcg64::new(cfg.seed, 4);
     let (mut trace, phi, sig2) = build_sv(&series, &mut rng);
-    let mut ev = PlannedEval::new();
     let kcfg = SubsampledConfig {
         m: cfg.m,
         eps: cfg.eps,
         proposal: Proposal::Drift(0.02),
         exact: !subsampled,
+        threads: 0,
     };
+    let mut ev = PlannedEval::for_config(&kcfg);
     let mut phi_samples = Vec::with_capacity(cfg.sweeps);
     let mut sig_samples = Vec::with_capacity(cfg.sweeps);
     let t0 = Instant::now();
@@ -599,6 +603,27 @@ pub fn fig9_sv(cfg: &Fig9Config, subsampled: bool) -> Fig9Result {
     }
 }
 
+/// Repeated-trial Fig. 9: `trials` independent replicas, run
+/// concurrently on the shared worker pool (one `Trace` per worker task,
+/// per-trial seeds) — the multi-chain driver's experiment entry point.
+/// Results come back in trial order and are deterministic for a fixed
+/// seed regardless of worker scheduling, because every trial derives
+/// its RNG streams from its own seed.
+pub fn fig9_repeated(
+    cfg: &Fig9Config,
+    subsampled: bool,
+    trials: usize,
+) -> Result<Vec<Fig9Result>, String> {
+    let base = cfg.clone();
+    crate::coordinator::multichain::run_chains_global(trials, cfg.seed, move |c, _rng| {
+        // fig9_sv derives all of its randomness from cfg.seed, so each
+        // trial just gets a distinct seed
+        let mut cfg = base.clone();
+        cfg.seed = base.seed.wrapping_add(1 + c as u64);
+        fig9_sv(&cfg, subsampled)
+    })
+}
+
 // ---------------------------------------------------------------------
 // Table 1 — scaling overview
 // ---------------------------------------------------------------------
@@ -618,7 +643,7 @@ pub struct Table1Row {
 /// scaling parameter (N / N_k / T) for all three models.
 pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
     let mut rows = Vec::new();
-    let mut ev = PlannedEval::new();
+    let mut ev = PlannedEval::auto();
     // BayesLR: scaling N
     {
         let mut time_at = |n: usize| {
@@ -630,6 +655,7 @@ pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
                 eps: 0.01,
                 proposal: Proposal::Drift(0.1),
                 exact: true,
+                threads: 0,
             };
             let iters = 10;
             let t0 = Instant::now();
@@ -665,6 +691,7 @@ pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
                 eps: 0.01,
                 proposal: Proposal::Drift(0.02),
                 exact: true,
+                threads: 0,
             };
             let iters = 10;
             let t0 = Instant::now();
@@ -702,6 +729,7 @@ pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
                 eps: 0.01,
                 proposal: Proposal::Drift(0.1),
                 exact: true,
+                threads: 0,
             };
             let iters = 5;
             let t0 = Instant::now();

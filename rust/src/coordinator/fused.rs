@@ -22,11 +22,10 @@ use crate::ppl::sp::SpFamily;
 use crate::ppl::value::Value;
 use crate::runtime::artifacts::ArtifactRegistry;
 use crate::runtime::client::Input;
-use crate::trace::batch::{ColAbsorb, ColOp, ColS, ColV, SBind, VBind};
+use crate::trace::batch::{ColAbsorb, ColOp, ColS, ColV};
 use crate::trace::node::{ArgRef, NodeId, NodeKind};
 use crate::trace::partition::{OverrideCtx, Partition};
 use crate::trace::pet::Trace;
-use std::rc::Rc;
 
 /// The XLA-fused evaluator; falls back to the interpreter when a batch
 /// does not match a known section family.
@@ -48,22 +47,44 @@ pub struct FusedEval {
     pub fallback_sections: usize,
 }
 
-/// Extracted per-section inputs for the logistic kernel.
-struct LogisticRow {
-    x: Rc<Vec<f64>>,
-    t: f32,
+/// Columnar inputs for the logistic kernel: `x` row-major `[n, d]`,
+/// targets ±1 — exactly the buffers the XLA executable consumes, so
+/// dispatch is a pad-and-copy, not a row loop.  The plan-aware
+/// extractor fills these straight from `BatchGroup` slot tables
+/// (`narrow_vbind_into`); the structural-walk fallback fills the same
+/// layout row by row.
+struct LogisticCols {
+    x: Vec<f32>,
+    t: Vec<f32>,
+    d: usize,
 }
 
-/// Extracted per-section inputs for the AR(1) kernel.
-struct Ar1Row {
-    h_prev: f32,
-    h: f32,
-    /// per-row phi pair when the sampled variable is phi; (1,1) when the
-    /// mean is folded into h_prev (sigma sections)
-    phi_old: f32,
-    phi_new: f32,
-    sig_old: f32,
-    sig_new: f32,
+/// Columnar inputs for the AR(1) kernel (SoA).  `phi_*` are (1, 1)
+/// columns when the mean is folded into `h_prev` (sigma sections).
+struct Ar1Cols {
+    h_prev: Vec<f32>,
+    h: Vec<f32>,
+    phi_old: Vec<f32>,
+    phi_new: Vec<f32>,
+    sig_old: Vec<f32>,
+    sig_new: Vec<f32>,
+}
+
+impl Ar1Cols {
+    fn with_capacity(n: usize) -> Ar1Cols {
+        Ar1Cols {
+            h_prev: Vec::with_capacity(n),
+            h: Vec::with_capacity(n),
+            phi_old: Vec::with_capacity(n),
+            phi_new: Vec::with_capacity(n),
+            sig_old: Vec::with_capacity(n),
+            sig_new: Vec::with_capacity(n),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.h.len()
+    }
 }
 
 impl FusedEval {
@@ -97,7 +118,7 @@ impl FusedEval {
         trace: &Trace,
         p: &Partition,
         roots: &[NodeId],
-    ) -> Option<(Vec<LogisticRow>, usize)> {
+    ) -> Option<LogisticCols> {
         let set = trace.cached_batch_plans(p);
         let &(gi, _) = set.of_root.get(roots.first()?)?;
         let g = &set.groups[gi as usize];
@@ -122,42 +143,37 @@ impl FusedEval {
                 if matches!(cand.as_slice(), [ColS::Slot(s)] if *s == dot_out) => {}
             _ => return None,
         }
-        let nvb = cols.n_vbind as usize;
-        let nab = cols.absorbers.len();
-        let mut rows = Vec::with_capacity(roots.len());
-        let mut d = 0usize;
+        let mut members = Vec::with_capacity(roots.len());
         for &root in roots {
             let &(gj, mi) = set.of_root.get(&root)?;
             if gj != gi {
                 return None; // mixed shapes: one kernel cannot cover the batch
             }
-            let m = mi as usize;
-            let x = match &g.vbinds[m * nvb + xbind as usize] {
-                VBind::Const(v) => v.clone(),
-                VBind::Node(_) => return None,
-            };
-            if d == 0 {
-                d = x.len();
-            } else if d != x.len() {
-                return None;
-            }
-            let t = match trace.node(g.absorbers[m * nab]).value.as_bool() {
-                Some(true) => 1.0,
-                Some(false) => -1.0,
-                None => return None,
-            };
-            rows.push(LogisticRow { x, t });
+            members.push(mi);
         }
-        Some((rows, d))
+        // columnar narrowing straight off the slot table
+        let mut x = Vec::new();
+        let d = g.narrow_vbind_into(trace, xbind, &members, &mut x)?;
+        let mut t = Vec::with_capacity(members.len());
+        for &m in &members {
+            match trace.node(g.absorber_of(m as usize, 0)).value.as_bool() {
+                Some(true) => t.push(1.0),
+                Some(false) => t.push(-1.0),
+                None => return None,
+            }
+        }
+        Some(LogisticCols { x, t, d })
     }
 
-    /// Try to extract logistic rows for every root; None on mismatch.
+    /// Structural-walk fallback: extract the same columnar buffers row
+    /// by row from node structure; None on mismatch.
     fn extract_logistic(
         trace: &Trace,
         p: &Partition,
         roots: &[NodeId],
-    ) -> Option<(Vec<LogisticRow>, usize)> {
-        let mut rows = Vec::with_capacity(roots.len());
+    ) -> Option<LogisticCols> {
+        let mut x_col = Vec::new();
+        let mut t_col = Vec::with_capacity(roots.len());
         let mut d = 0usize;
         for &root in roots {
             // root must be the linear_logistic det node...
@@ -204,10 +220,11 @@ impl FusedEval {
                 Some(false) => -1.0,
                 None => return None,
             };
-            rows.push(LogisticRow { x, t });
+            x_col.extend(x.iter().map(|&v| v as f32));
+            t_col.push(t);
         }
         let _ = p;
-        Some((rows, d))
+        Some(LogisticCols { x: x_col, t: t_col, d })
     }
 
     /// Plan-aware AR(1) extraction (phi and sigma section shapes) from
@@ -219,7 +236,7 @@ impl FusedEval {
         p: &Partition,
         roots: &[NodeId],
         new_v: &Value,
-    ) -> Option<Vec<Ar1Row>> {
+    ) -> Option<Ar1Cols> {
         let set = trace.cached_batch_plans(p);
         let &(gi, _) = set.of_root.get(roots.first()?)?;
         let g = &set.groups[gi as usize];
@@ -267,51 +284,49 @@ impl FusedEval {
             ),
             None => (1.0, 1.0),
         };
-        let nsb = cols.n_sbind as usize;
-        let nab = cols.absorbers.len();
-        let sval = |m: usize, b: u32| -> Option<f64> {
-            match &g.sbinds[m * nsb + b as usize] {
-                SBind::Const(x) => Some(*x),
-                SBind::Node(id) => trace.value(*id).as_f64(),
-            }
-        };
-        let mut rows = Vec::with_capacity(roots.len());
+        let mut members = Vec::with_capacity(roots.len());
         for &root in roots {
             let &(gj, mi) = set.of_root.get(&root)?;
             if gj != gi {
                 return None;
             }
-            let m = mi as usize;
-            let node = trace.node(g.absorbers[m * nab]);
-            let h = node.value.as_f64()? as f32;
-            let h_prev = sval(m, mean_bind)? as f32;
-            let sig_old = trace.arg_value(&node.args[1]).as_f64()? as f32;
-            let sig_new = match sig_src {
-                SigSrc::Global(ks) => globals.get(ks as usize)?.as_f64()? as f32,
-                // an off-path sig cannot depend on the principal:
-                // candidate == committed
-                SigSrc::Bind(bs) => sval(m, bs)? as f32,
-            };
-            rows.push(Ar1Row {
-                h_prev,
-                h,
-                phi_old,
-                phi_new,
-                sig_old,
-                sig_new,
-            });
+            members.push(mi);
         }
-        Some(rows)
+        let n = members.len();
+        let mut out = Ar1Cols::with_capacity(n);
+        // h_prev column straight off the slot table
+        g.narrow_sbind_into(trace, mean_bind, &members, &mut out.h_prev)?;
+        // h + committed sig columns from the absorber nodes
+        for &m in &members {
+            let node = trace.node(g.absorber_of(m as usize, 0));
+            out.h.push(node.value.as_f64()? as f32);
+            out.sig_old.push(trace.arg_value(&node.args[1]).as_f64()? as f32);
+        }
+        // candidate sig column: batch-shared global or per-section bind
+        match sig_src {
+            SigSrc::Global(ks) => {
+                let s = globals.get(ks as usize)?.as_f64()? as f32;
+                out.sig_new.resize(n, s);
+            }
+            // an off-path sig cannot depend on the principal:
+            // candidate == committed
+            SigSrc::Bind(bs) => {
+                g.narrow_sbind_into(trace, bs, &members, &mut out.sig_new)?;
+            }
+        }
+        out.phi_old.resize(n, phi_old);
+        out.phi_new.resize(n, phi_new);
+        Some(out)
     }
 
-    /// Try to extract AR(1) rows; None on mismatch.
+    /// Structural-walk fallback for the AR(1) columns; None on mismatch.
     fn extract_ar1(
         trace: &mut Trace,
         p: &Partition,
         roots: &[NodeId],
         new_v: &Value,
-    ) -> Option<Vec<Ar1Row>> {
-        let mut rows = Vec::with_capacity(roots.len());
+    ) -> Option<Ar1Cols> {
+        let mut out = Ar1Cols::with_capacity(roots.len());
         for &root in roots {
             let node = trace.node(root);
             match &node.kind {
@@ -327,14 +342,12 @@ impl FusedEval {
                         ctx.pin(p.v, new_v.clone());
                         ctx.arg_candidate(&sig_arg).as_f64()? as f32
                     };
-                    rows.push(Ar1Row {
-                        h_prev: mean,
-                        h,
-                        phi_old: 1.0,
-                        phi_new: 1.0,
-                        sig_old,
-                        sig_new,
-                    });
+                    out.h_prev.push(mean);
+                    out.h.push(h);
+                    out.phi_old.push(1.0);
+                    out.phi_new.push(1.0);
+                    out.sig_old.push(sig_old);
+                    out.sig_new.push(sig_new);
                 }
                 // phi-sampling: border child is (* phi h_prev) with a
                 // single absorbing normal child
@@ -370,117 +383,132 @@ impl FusedEval {
                             ctx.arg_candidate(&sig_arg).as_f64()? as f32,
                         )
                     };
-                    rows.push(Ar1Row {
-                        h_prev,
-                        h,
-                        phi_old,
-                        phi_new,
-                        sig_old,
-                        sig_new,
-                    });
+                    out.h_prev.push(h_prev);
+                    out.h.push(h);
+                    out.phi_old.push(phi_old);
+                    out.phi_new.push(phi_new);
+                    out.sig_old.push(sig_old);
+                    out.sig_new.push(sig_new);
                 }
                 _ => return None,
             }
         }
-        Some(rows)
+        Some(out)
     }
 
     fn run_logistic(
         &mut self,
-        rows: &[LogisticRow],
-        d: usize,
+        cols: &LogisticCols,
         w_old: &[f64],
         w_new: &[f64],
     ) -> Result<Vec<f64>, String> {
-        let n = rows.len();
+        let wo: Vec<f32> = w_old.iter().map(|&v| v as f32).collect();
+        let wn: Vec<f32> = w_new.iter().map(|&v| v as f32).collect();
+        self.run_logistic_cols(&cols.x, &cols.t, cols.d, &wo, &wn)
+    }
+
+    fn run_logistic_cols(
+        &mut self,
+        x: &[f32],
+        t: &[f32],
+        d: usize,
+        wo: &[f32],
+        wn: &[f32],
+    ) -> Result<Vec<f64>, String> {
+        let n = t.len();
         let (info, exe) = self.registry.pick_executable("logistic_ratio", n, d)?;
         if info.m < n {
-            // batch exceeds the largest artifact: split
+            // batch exceeds the largest artifact: split on row ranges
+            // (the columnar layout makes chunks plain subslices)
             let mut out = Vec::with_capacity(n);
-            for chunk in rows.chunks(info.m) {
-                out.extend(self.run_logistic(chunk, d, w_old, w_new)?);
+            let mut lo = 0usize;
+            while lo < n {
+                let hi = (lo + info.m).min(n);
+                out.extend(self.run_logistic_cols(&x[lo * d..hi * d], &t[lo..hi], d, wo, wn)?);
+                lo = hi;
             }
             return Ok(out);
         }
         let m = info.m;
-        let mut x = vec![0f32; m * d];
-        let mut t = vec![0f32; m];
+        // pad to the artifact's batch: one copy per input, no row loop
+        let mut xp = vec![0f32; m * d];
+        xp[..n * d].copy_from_slice(x);
+        let mut tp = vec![0f32; m];
+        tp[..n].copy_from_slice(t);
         let mut mask = vec![0f32; m];
-        for (i, row) in rows.iter().enumerate() {
-            for (j, &v) in row.x.iter().enumerate() {
-                x[i * d + j] = v as f32;
-            }
-            t[i] = row.t;
-            mask[i] = 1.0;
-        }
-        let wo: Vec<f32> = w_old.iter().map(|&v| v as f32).collect();
-        let wn: Vec<f32> = w_new.iter().map(|&v| v as f32).collect();
+        mask[..n].fill(1.0);
         let out = exe.run_f32(&[
-            Input { data: &x, shape: &[m, d] },
-            Input { data: &t, shape: &[m] },
+            Input { data: &xp, shape: &[m, d] },
+            Input { data: &tp, shape: &[m] },
             Input { data: &mask, shape: &[m] },
-            Input { data: &wo, shape: &[d] },
-            Input { data: &wn, shape: &[d] },
+            Input { data: wo, shape: &[d] },
+            Input { data: wn, shape: &[d] },
         ])?;
         Ok(out[..n].iter().map(|&v| v as f64).collect())
     }
 
-    fn run_ar1(&mut self, rows: &[Ar1Row]) -> Result<Vec<f64>, String> {
-        // rows share (phi_old, phi_new, sig_old, sig_new) in the SV model;
-        // if they don't (mixed sections), fall back per-row via the
-        // scalar formula — still exact, just not batched.
-        let homogeneous = rows
-            .windows(2)
-            .all(|w| {
-                w[0].phi_old == w[1].phi_old
-                    && w[0].phi_new == w[1].phi_new
-                    && w[0].sig_old == w[1].sig_old
-                    && w[0].sig_new == w[1].sig_new
-            });
+    fn run_ar1(&mut self, cols: &Ar1Cols) -> Result<Vec<f64>, String> {
+        // sections share (phi_old, phi_new, sig_old, sig_new) in the SV
+        // model; if they don't (mixed sections), fall back per-row via
+        // the scalar formula — still exact, just not batched.
+        let uniform = |c: &[f32]| c.windows(2).all(|w| w[0] == w[1]);
+        let homogeneous = uniform(&cols.phi_old)
+            && uniform(&cols.phi_new)
+            && uniform(&cols.sig_old)
+            && uniform(&cols.sig_new);
         if !homogeneous {
-            return Ok(rows
-                .iter()
-                .map(|r| {
+            return Ok((0..cols.len())
+                .map(|i| {
                     let lp = |phi: f32, sig: f32| {
                         crate::dist::normal_logpdf(
-                            r.h as f64,
-                            (phi * r.h_prev) as f64,
+                            cols.h[i] as f64,
+                            (phi * cols.h_prev[i]) as f64,
                             sig as f64,
                         )
                     };
-                    lp(r.phi_new, r.sig_new) - lp(r.phi_old, r.sig_old)
+                    lp(cols.phi_new[i], cols.sig_new[i]) - lp(cols.phi_old[i], cols.sig_old[i])
                 })
                 .collect());
         }
-        let n = rows.len();
+        let params = [
+            cols.phi_old[0],
+            cols.sig_old[0],
+            cols.phi_new[0],
+            cols.sig_new[0],
+        ];
+        self.run_ar1_cols(&cols.h_prev, &cols.h, &params)
+    }
+
+    fn run_ar1_cols(
+        &mut self,
+        h_prev: &[f32],
+        h: &[f32],
+        params: &[f32; 4],
+    ) -> Result<Vec<f64>, String> {
+        let n = h.len();
         let (info, exe) = self.registry.pick_executable("gauss_ar1_ratio", n, 0)?;
         if info.m < n {
             let mut out = Vec::with_capacity(n);
-            for chunk in rows.chunks(info.m) {
-                out.extend(self.run_ar1(chunk)?);
+            let mut lo = 0usize;
+            while lo < n {
+                let hi = (lo + info.m).min(n);
+                out.extend(self.run_ar1_cols(&h_prev[lo..hi], &h[lo..hi], params)?);
+                lo = hi;
             }
             return Ok(out);
         }
         let m = info.m;
-        let mut h_prev = vec![0f32; m];
-        let mut h = vec![0f32; m];
+        let mut hp = vec![0f32; m];
+        hp[..n].copy_from_slice(h_prev);
+        let mut hv = vec![0f32; m];
+        hv[..n].copy_from_slice(h);
         let mut mask = vec![0f32; m];
-        for (i, r) in rows.iter().enumerate() {
-            h_prev[i] = r.h_prev;
-            h[i] = r.h;
-            mask[i] = 1.0;
-        }
-        let params = [
-            rows[0].phi_old,
-            rows[0].sig_old,
-            rows[0].phi_new,
-            rows[0].sig_new,
-        ];
+        mask[..n].fill(1.0);
         let out = exe.run_f32(&[
-            Input { data: &h_prev, shape: &[m] },
-            Input { data: &h, shape: &[m] },
+            Input { data: &hp, shape: &[m] },
+            Input { data: &hv, shape: &[m] },
             Input { data: &mask, shape: &[m] },
-            Input { data: &params, shape: &[4] },
+            Input { data: params, shape: &[4] },
         ])?;
         Ok(out[..n].iter().map(|&v| v as f64).collect())
     }
@@ -532,7 +560,7 @@ impl LocalEvaluator for FusedEval {
             Some(rd) => Some(rd),
             None => Self::extract_logistic(trace, p, roots),
         };
-        if let Some((rows, d)) = logistic {
+        if let Some(cols) = logistic {
             let w_old = trace
                 .fresh_value(p.v)
                 .as_vector()
@@ -545,16 +573,16 @@ impl LocalEvaluator for FusedEval {
                 .as_ref()
                 .clone();
             self.fused_sections += roots.len();
-            return self.run_logistic(&rows, d, &w_old, &w_new);
+            return self.run_logistic(&cols, &w_old, &w_new);
         }
         // AR(1) family? (slot tables first, structural walk second)
         let ar1 = match Self::extract_ar1_planned(trace, p, roots, new_v) {
-            Some(rows) => Some(rows),
+            Some(cols) => Some(cols),
             None => Self::extract_ar1(trace, p, roots, new_v),
         };
-        if let Some(rows) = ar1 {
+        if let Some(cols) = ar1 {
             self.fused_sections += roots.len();
-            return self.run_ar1(&rows);
+            return self.run_ar1(&cols);
         }
         // generic fallback
         self.fallback_sections += roots.len();
@@ -676,6 +704,7 @@ mod tests {
             eps: 0.01,
             proposal: crate::infer::Proposal::Drift(0.1),
             exact: false,
+            threads: 1,
         };
         let mut fused = FusedEval::open_default().unwrap().always_fused();
         let mut accepted = 0;
@@ -700,15 +729,12 @@ mod tests {
         let v = t.lookup_node("w").unwrap();
         let p = build_partition(&t, v).unwrap();
         let roots = p.locals.clone();
-        let (rows_walk, d_walk) = FusedEval::extract_logistic(&t, &p, &roots).unwrap();
-        let (rows_plan, d_plan) =
+        let walk = FusedEval::extract_logistic(&t, &p, &roots).unwrap();
+        let plan =
             FusedEval::extract_logistic_planned(&t, &p, &roots).expect("planned path missed");
-        assert_eq!(d_walk, d_plan);
-        assert_eq!(rows_walk.len(), rows_plan.len());
-        for (a, b) in rows_walk.iter().zip(&rows_plan) {
-            assert_eq!(a.t, b.t);
-            assert_eq!(a.x, b.x);
-        }
+        assert_eq!(walk.d, plan.d);
+        assert_eq!(walk.t, plan.t);
+        assert_eq!(walk.x, plan.x, "columnar x buffers must be identical");
     }
 
     #[test]
@@ -730,34 +756,31 @@ mod tests {
         let p = build_partition(&t, phi).unwrap();
         let roots = p.locals.clone();
         let new_phi = Value::Real(0.45);
-        let plan_rows =
+        let plan =
             FusedEval::extract_ar1_planned(&t, &p, &roots, &new_phi).expect("planned path missed");
-        let walk_rows = FusedEval::extract_ar1(&mut t, &p, &roots, &new_phi).unwrap();
-        assert_eq!(plan_rows.len(), walk_rows.len());
-        for (a, b) in plan_rows.iter().zip(&walk_rows) {
-            assert_eq!(a.h_prev, b.h_prev);
-            assert_eq!(a.h, b.h);
-            assert_eq!(a.phi_old, b.phi_old);
-            assert_eq!(a.phi_new, b.phi_new);
-            assert_eq!(a.sig_old, b.sig_old);
-            assert_eq!(a.sig_new, b.sig_new);
-        }
+        let walk = FusedEval::extract_ar1(&mut t, &p, &roots, &new_phi).unwrap();
+        assert_eq!(plan.len(), walk.len());
+        assert_eq!(plan.h_prev, walk.h_prev);
+        assert_eq!(plan.h, walk.h);
+        assert_eq!(plan.phi_old, walk.phi_old);
+        assert_eq!(plan.phi_new, walk.phi_new);
+        assert_eq!(plan.sig_old, walk.sig_old);
+        assert_eq!(plan.sig_new, walk.sig_new);
         // sigma sections: bare absorbing normal through the sqrt global
         let sig2 = t.lookup_node("sig2").unwrap();
         let p2 = build_partition(&t, sig2).unwrap();
         let roots2 = p2.locals.clone();
         let new_s2 = Value::Real(0.03);
-        let plan_rows =
+        let plan =
             FusedEval::extract_ar1_planned(&t, &p2, &roots2, &new_s2).expect("planned path missed");
-        let walk_rows = FusedEval::extract_ar1(&mut t, &p2, &roots2, &new_s2).unwrap();
-        assert_eq!(plan_rows.len(), walk_rows.len());
-        for (a, b) in plan_rows.iter().zip(&walk_rows) {
-            assert_eq!(a.h_prev, b.h_prev);
-            assert_eq!(a.h, b.h);
-            assert_eq!((a.phi_old, a.phi_new), (1.0, 1.0));
-            assert_eq!(a.sig_old, b.sig_old);
-            assert_eq!(a.sig_new, b.sig_new);
-        }
+        let walk = FusedEval::extract_ar1(&mut t, &p2, &roots2, &new_s2).unwrap();
+        assert_eq!(plan.len(), walk.len());
+        assert_eq!(plan.h_prev, walk.h_prev);
+        assert_eq!(plan.h, walk.h);
+        assert!(plan.phi_old.iter().all(|&x| x == 1.0));
+        assert!(plan.phi_new.iter().all(|&x| x == 1.0));
+        assert_eq!(plan.sig_old, walk.sig_old);
+        assert_eq!(plan.sig_new, walk.sig_new);
     }
 
     #[test]

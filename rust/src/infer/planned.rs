@@ -19,21 +19,30 @@
 //!    a failed lowering per mini-batch.
 //!
 //! The candidate value of the global section is computed once per batch
-//! and shared by every tier.  `InterpreterEval` remains the general
-//! path and the differential-testing oracle: both planned tiers must
-//! reproduce its `l_i` values *bitwise* (the tests below and
-//! `tests/differential.rs` enforce this on all three paper model
+//! and shared by every tier.  Tier 1 has a *parallel* variant
+//! ([`PlannedEval::with_pool`] / [`PlannedEval::auto`]): batches above
+//! a cutoff are packed once and their kernel sharded across the
+//! persistent worker pool (`runtime::pool`) — the fourth rung of the
+//! differential ladder, bitwise identical to the sequential rungs
+//! because shards run the very same kernel over disjoint sections.
+//!
+//! `InterpreterEval` remains the general path and the
+//! differential-testing oracle: every planned tier must reproduce its
+//! `l_i` values *bitwise* (the tests below, `tests/differential.rs`,
+//! and `tests/parallel.rs` enforce this on all three paper model
 //! families), because all paths perform the same float operations in
 //! the same order.
 
-use crate::infer::subsampled_mh::{InterpreterEval, LocalEvaluator};
+use crate::infer::subsampled_mh::{InterpreterEval, LocalEvaluator, SubsampledConfig};
 use crate::ppl::value::Value;
-use crate::trace::batch::RegFile;
+use crate::runtime::pool::{resolve_threads, ShardScorer, WorkerPool};
+use crate::trace::batch::{PackedBatch, RegFile};
 use crate::trace::node::NodeId;
 use crate::trace::partition::Partition;
 use crate::trace::pet::Trace;
 use crate::trace::plan::{candidate_globals, ScorerArena};
 use std::collections::HashSet;
+use std::sync::Arc;
 
 /// Arena-backed batch scorer over cached section plans.
 pub struct PlannedEval {
@@ -43,6 +52,10 @@ pub struct PlannedEval {
     /// program (false = score every section individually; the
     /// differential harness runs both modes against the oracle).
     batched: bool,
+    /// Shard large packed batches across the worker pool (`None` =
+    /// sequential replay; results are bitwise identical either way, so
+    /// this is purely a wall-clock knob).
+    shard: Option<ShardScorer>,
     fallback: InterpreterEval,
     /// Roots whose lowering failed on trace `neg_trace` at structure
     /// version `neg_version` (skip retrying until the trace structure —
@@ -62,6 +75,11 @@ pub struct PlannedEval {
     /// position) pairs; reused so steady state allocates nothing.
     sel: Vec<Vec<(u32, u32)>>,
     batch_out: Vec<f64>,
+    /// Reusable packed batch for the parallel rung: handed to the pool
+    /// behind an `Arc` per dispatch and reclaimed afterwards, so the
+    /// sharded path matches the sequential path's cleared-not-freed
+    /// buffer discipline.
+    packed_spare: Option<PackedBatch>,
 }
 
 impl Default for PlannedEval {
@@ -71,13 +89,14 @@ impl Default for PlannedEval {
 }
 
 impl PlannedEval {
-    /// The default evaluator: shape-grouped batch replay with scalar
-    /// and interpreter fallbacks.
+    /// The default *sequential* evaluator: shape-grouped batch replay
+    /// with scalar and interpreter fallbacks (exactly `threads = 1`).
     pub fn new() -> PlannedEval {
         PlannedEval {
             arena: ScorerArena::new(),
             regs: RegFile::new(),
             batched: true,
+            shard: None,
             fallback: InterpreterEval,
             neg: HashSet::new(),
             neg_trace: 0,
@@ -87,6 +106,7 @@ impl PlannedEval {
             fallback_sections: 0,
             sel: Vec::new(),
             batch_out: Vec::new(),
+            packed_spare: None,
         }
     }
 
@@ -97,6 +117,56 @@ impl PlannedEval {
             batched: false,
             ..PlannedEval::new()
         }
+    }
+
+    /// Batched evaluator that shards large replays across `pool` — the
+    /// fourth rung of the differential ladder (interpreter → scalar →
+    /// batched → parallel-batched), bitwise identical to all of them.
+    /// A 1-thread pool degenerates to the sequential path.
+    pub fn with_pool(pool: Arc<WorkerPool>) -> PlannedEval {
+        PlannedEval {
+            shard: Some(ShardScorer::new(pool)),
+            ..PlannedEval::new()
+        }
+    }
+
+    /// The auto-parallel evaluator: shares the process-wide pool sized
+    /// by `SUBPPL_THREADS` / available parallelism.  Falls back to the
+    /// sequential evaluator on single-core machines.
+    pub fn auto() -> PlannedEval {
+        if crate::runtime::pool::auto_threads() > 1 {
+            PlannedEval::with_pool(WorkerPool::global().clone())
+        } else {
+            PlannedEval::new()
+        }
+    }
+
+    /// Evaluator for a subsampled-MH config's thread knob: `0` = auto
+    /// (available parallelism), `1` = today's sequential behavior
+    /// exactly, `n > 1` = shard across the shared pool (which is sized
+    /// at first use; a knob larger than the pool still uses the pool's
+    /// worker count).
+    pub fn for_config(cfg: &SubsampledConfig) -> PlannedEval {
+        if resolve_threads(cfg.threads) > 1 {
+            PlannedEval::with_pool(WorkerPool::global().clone())
+        } else {
+            PlannedEval::new()
+        }
+    }
+
+    /// Lower the parallel-dispatch cutoff (tests force the sharded path
+    /// on small workloads with this).
+    pub fn with_min_parallel(mut self, min_sections: usize) -> PlannedEval {
+        if let Some(s) = self.shard.as_mut() {
+            s.min_sections = min_sections;
+        }
+        self
+    }
+
+    /// Sections that went through pool shards (0 for sequential
+    /// evaluators).
+    pub fn sharded_sections(&self) -> usize {
+        self.shard.as_ref().map_or(0, |s| s.sharded_sections)
     }
 
     /// Scalar or interpreter scoring of one root into `out[pos]`.
@@ -181,10 +251,28 @@ impl LocalEvaluator for PlannedEval {
                     }
                 }
                 let sel = &self.sel[gi];
-                match self
-                    .regs
-                    .replay(trace, group, sel, &self.arena.globals, &mut self.batch_out)
-                {
+                // parallel rung: pack once (into the reclaimed spare
+                // batch), shard the kernel across the pool; otherwise
+                // the sequential pack+replay.  Both run the same
+                // kernel, so results are bitwise identical.
+                let replayed = match self.shard.as_mut() {
+                    Some(sh) if sh.should_dispatch(sel.len()) => {
+                        let mut pb = self.packed_spare.take().unwrap_or_default();
+                        match pb.pack_into(trace, group, sel, &self.arena.globals) {
+                            Ok(()) => sh.replay(pb, &mut self.batch_out).map(|spare| {
+                                self.packed_spare = spare;
+                            }),
+                            Err(e) => {
+                                self.packed_spare = Some(pb);
+                                Err(e)
+                            }
+                        }
+                    }
+                    _ => self
+                        .regs
+                        .replay(trace, group, sel, &self.arena.globals, &mut self.batch_out),
+                };
+                match replayed {
                     Ok(()) => {
                         for (&(_, pos), &l) in sel.iter().zip(&self.batch_out) {
                             out[pos as usize] = l;
@@ -212,10 +300,10 @@ impl LocalEvaluator for PlannedEval {
     }
 
     fn name(&self) -> &'static str {
-        if self.batched {
-            "planned-batched"
-        } else {
-            "planned"
+        match (self.batched, self.shard.is_some()) {
+            (true, true) => "planned-parallel",
+            (true, false) => "planned-batched",
+            (false, _) => "planned",
         }
     }
 }
@@ -430,6 +518,7 @@ mod tests {
             eps: 0.01,
             proposal: Proposal::Drift(0.08),
             exact: false,
+            threads: 1,
         };
         let mut ev = PlannedEval::new();
         let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());

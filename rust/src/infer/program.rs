@@ -180,9 +180,13 @@ pub fn run_command(
     Ok(stats)
 }
 
-/// Convenience: run with the default (planned, arena-backed) evaluator.
+/// Convenience: run with the default (planned, arena-backed) evaluator
+/// in auto-parallel mode — large batch replays shard across the shared
+/// worker pool (`SUBPPL_THREADS` / available parallelism; bitwise
+/// identical to the sequential evaluator, so results don't depend on
+/// the machine).
 pub fn infer(trace: &mut Trace, rng: &mut Pcg64, cmd: &InfCmd) -> Result<InferStats, String> {
-    run_command(trace, rng, cmd, &mut PlannedEval::new())
+    run_command(trace, rng, cmd, &mut PlannedEval::auto())
 }
 
 // ---------------------------------------------------------------------
@@ -283,6 +287,7 @@ fn convert(expr: &Rc<Expr>) -> Result<InfCmd, String> {
                     eps,
                     proposal,
                     exact: false,
+                    threads: 0,
                 },
                 steps,
             })

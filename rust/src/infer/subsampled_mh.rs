@@ -35,6 +35,14 @@ pub struct SubsampledConfig {
     /// MH" baseline sharing this code path (used by the benchmarks for a
     /// fair runtime comparison).
     pub exact: bool,
+    /// Worker threads for batch replay (consumed by
+    /// `PlannedEval::for_config`): `0` = auto (the `SUBPPL_THREADS`
+    /// env var, else available parallelism), `1` = today's sequential
+    /// behavior exactly, `n > 1` = shard large batches across the
+    /// shared worker pool.  Purely a wall-clock knob — the parallel
+    /// path is bitwise identical to the sequential one, so traces and
+    /// acceptance decisions do not depend on it.
+    pub threads: usize,
 }
 
 impl SubsampledConfig {
@@ -44,6 +52,7 @@ impl SubsampledConfig {
             eps: 0.01,
             proposal: Proposal::Drift(0.1),
             exact: false,
+            threads: 0,
         }
     }
 }
@@ -348,6 +357,7 @@ mod tests {
             eps: 0.05,
             proposal: Proposal::Drift(0.5),
             exact: false,
+            threads: 1,
         };
         let mut ev = InterpreterEval;
         let mut total = 0usize;
@@ -374,6 +384,7 @@ mod tests {
             eps: 0.01,
             proposal: Proposal::Drift(0.12),
             exact: true,
+            threads: 1,
         };
         let mut ev = InterpreterEval;
         let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());
@@ -404,6 +415,7 @@ mod tests {
             eps: 0.01,
             proposal: Proposal::Drift(0.12),
             exact: false,
+            threads: 1,
         };
         let mut ev = InterpreterEval;
         let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());
@@ -437,6 +449,7 @@ mod tests {
             eps: 0.01,
             proposal: Proposal::Drift(50.0),
             exact: false,
+            threads: 1,
         };
         let mut ev = InterpreterEval;
         for _ in 0..50 {

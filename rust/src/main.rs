@@ -3,16 +3,25 @@
 //!
 //! ```text
 //! subppl run <program.vnt> [--infer "<program>"] [--seed N] [--watch a,b]
+//!            [--threads T] [--chains R]
 //! subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused]
+//!            [--threads T] [--chains R]
 //! subppl artifacts                 # list the AOT artifact registry
 //! ```
+//!
+//! `--threads` sets the batch-replay worker count (default: auto via
+//! `SUBPPL_THREADS` or available parallelism; `1` = sequential; results
+//! are bitwise identical either way).  `--chains R` runs R independent
+//! replicas concurrently on the same pool (per-chain PCG streams).
 
 use std::io::Read;
+use std::sync::Arc;
 use subppl::coordinator::experiments as exp;
 use subppl::coordinator::report::{results_dir, Table};
-use subppl::coordinator::FusedEval;
-use subppl::infer::{infer, parse_infer, LocalEvaluator, PlannedEval};
+use subppl::coordinator::{multichain, FusedEval};
+use subppl::infer::{parse_infer, run_command, LocalEvaluator, PlannedEval};
 use subppl::math::Pcg64;
+use subppl::runtime::pool::{resolve_threads, WorkerPool};
 use subppl::trace::Trace;
 
 fn main() {
@@ -45,11 +54,68 @@ fn run(args: &[String]) -> Result<(), String> {
         Some("artifacts") => cmd_artifacts(),
         _ => {
             eprintln!(
-                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused]\n  subppl artifacts"
+                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--threads T] [--chains R]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused] [--threads T] [--chains R]\n  subppl artifacts"
             );
             Err("missing or unknown subcommand".into())
         }
     }
+}
+
+/// Result of one `subppl run` chain.
+struct ChainReport {
+    live: usize,
+    initial_lj: f64,
+    means: Vec<f64>,
+    final_lj: f64,
+    /// First-iteration inference stats: (transitions, acceptance rate).
+    per_iter: Option<(usize, f64)>,
+}
+
+/// One chain's worth of `subppl run`: build the trace, optionally run
+/// the inference program, and report watched posterior means.
+fn run_one_chain(
+    src: &str,
+    infer_prog: Option<&str>,
+    names: &[String],
+    samples: usize,
+    pool: Option<Arc<WorkerPool>>,
+    rng: &mut Pcg64,
+) -> Result<ChainReport, String> {
+    let mut trace = Trace::new();
+    trace.run_program(src, rng)?;
+    let live = trace.num_live_nodes();
+    let initial_lj = trace.log_joint();
+    let mut means = vec![0.0; names.len()];
+    let mut per_iter = None;
+    if let Some(prog) = infer_prog {
+        let cmd = parse_infer(prog)?;
+        let mut ev: Box<dyn LocalEvaluator> = match pool {
+            Some(p) => Box::new(PlannedEval::with_pool(p)),
+            None => Box::new(PlannedEval::new()),
+        };
+        let mut sums: Vec<f64> = vec![0.0; names.len()];
+        for s in 0..samples {
+            let stats = run_command(&mut trace, rng, &cmd, ev.as_mut())?;
+            if s == 0 {
+                per_iter = Some((stats.transitions, stats.acceptance_rate()));
+            }
+            for (i, n) in names.iter().enumerate() {
+                if let Some(v) = trace.lookup_value(n).and_then(|v| v.as_f64()) {
+                    sums[i] += v;
+                }
+            }
+        }
+        for (i, s) in sums.iter().enumerate() {
+            means[i] = s / samples as f64;
+        }
+    }
+    Ok(ChainReport {
+        live,
+        initial_lj,
+        means,
+        final_lj: trace.log_joint(),
+        per_iter,
+    })
 }
 
 fn cmd_run(args: &[String]) -> Result<(), String> {
@@ -70,36 +136,67 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         .unwrap_or("100")
         .parse()
         .map_err(|_| "bad --samples")?;
-    let mut trace = Trace::new();
-    let mut rng = Pcg64::seeded(seed);
-    trace.run_program(&src, &mut rng)?;
-    println!("trace: {} live nodes", trace.num_live_nodes());
-    println!("log joint: {:.4}", trace.log_joint());
-    if let Some(prog) = opt(args, "--infer") {
-        let cmd = parse_infer(prog)?;
-        let names: Vec<String> = opt(args, "--watch")
-            .map(|p| p.split(',').map(|s| s.to_string()).collect())
-            .unwrap_or_default();
-        let mut sums: Vec<f64> = vec![0.0; names.len()];
-        for s in 0..samples {
-            let stats = infer(&mut trace, &mut rng, &cmd)?;
-            if s == 0 {
-                println!(
-                    "per-iteration: {} transitions, acceptance {:.3}",
-                    stats.transitions,
-                    stats.acceptance_rate()
-                );
-            }
-            for (i, n) in names.iter().enumerate() {
-                if let Some(v) = trace.lookup_value(n).and_then(|v| v.as_f64()) {
-                    sums[i] += v;
-                }
+    let chains: usize = opt(args, "--chains")
+        .unwrap_or("1")
+        .parse()
+        .map_err(|_| "bad --chains")?;
+    let names: Vec<String> = opt(args, "--watch")
+        .map(|p| p.split(',').map(|s| s.to_string()).collect())
+        .unwrap_or_default();
+    let infer_prog = opt(args, "--infer").map(|s| s.to_string());
+
+    if chains > 1 {
+        // concurrent replicas: one Trace per pool worker, per-chain PCG
+        // streams; deterministic in (seed, chain index)
+        let pool = WorkerPool::global().clone();
+        let src = src.clone();
+        let names_c = names.clone();
+        let results = multichain::run_chains(&pool, chains, seed, move |_c, mut rng| {
+            run_one_chain(&src, infer_prog.as_deref(), &names_c, samples, None, &mut rng)
+        })?;
+        let mut t = Table::new(&["chain", "live nodes", "final log joint"]);
+        let mut pooled = vec![0.0; names.len()];
+        for (c, r) in results.iter().enumerate() {
+            let rep = r.as_ref().map_err(|e| e.clone())?;
+            t.row(&[
+                c.to_string(),
+                rep.live.to_string(),
+                format!("{:.4}", rep.final_lj),
+            ]);
+            for (i, m) in rep.means.iter().enumerate() {
+                pooled[i] += m;
             }
         }
+        t.print();
         for (i, n) in names.iter().enumerate() {
-            println!("posterior mean {n}: {:.5}", sums[i] / samples as f64);
+            println!(
+                "posterior mean {n} (pooled over {chains} chains): {:.5}",
+                pooled[i] / chains as f64
+            );
         }
-        println!("final log joint: {:.4}", trace.log_joint());
+        return Ok(());
+    }
+
+    let pool = pool_for(args);
+    let mut rng = Pcg64::seeded(seed);
+    let rep = run_one_chain(
+        &src,
+        infer_prog.as_deref(),
+        &names,
+        samples,
+        pool,
+        &mut rng,
+    )?;
+    println!("trace: {} live nodes", rep.live);
+    println!("log joint: {:.4}", rep.initial_lj);
+    if let Some((transitions, acceptance)) = rep.per_iter {
+        println!("per-iteration: {transitions} transitions, acceptance {acceptance:.3}");
+    }
+    if infer_prog.is_some() {
+        for (i, n) in names.iter().enumerate() {
+            println!("posterior mean {n}: {:.5}", rep.means[i]);
+        }
+        println!("final log joint: {:.4}", rep.final_lj);
     }
     Ok(())
 }
@@ -119,6 +216,19 @@ fn cmd_artifacts() -> Result<(), String> {
     Ok(())
 }
 
+/// The shared worker pool when `--threads` (default: auto) resolves to
+/// more than one worker; `None` means sequential replay.
+fn pool_for(args: &[String]) -> Option<Arc<WorkerPool>> {
+    let threads: usize = opt(args, "--threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    if resolve_threads(threads) > 1 {
+        Some(WorkerPool::global().clone())
+    } else {
+        None
+    }
+}
+
 fn evaluator_for(args: &[String]) -> Box<dyn LocalEvaluator> {
     if flag(args, "--fused") {
         match FusedEval::open_default() {
@@ -126,7 +236,10 @@ fn evaluator_for(args: &[String]) -> Box<dyn LocalEvaluator> {
             Err(e) => eprintln!("--fused unavailable ({e}); falling back to planned evaluator"),
         }
     }
-    Box::new(PlannedEval::new())
+    match pool_for(args) {
+        Some(pool) => Box::new(PlannedEval::with_pool(pool)),
+        None => Box::new(PlannedEval::new()),
+    }
 }
 
 fn cmd_experiment(args: &[String]) -> Result<(), String> {
@@ -252,6 +365,27 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
             } else {
                 exp::Fig9Config::default()
             };
+            let chains: usize = opt(args, "--chains")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(1);
+            if chains > 1 {
+                // repeated trials, run concurrently on the worker pool
+                let mut t = Table::new(&["method", "trial", "seconds", "phi ESS/s", "sig ESS/s"]);
+                for (label, sub) in [("exact-mh", false), ("subsampled", true)] {
+                    let rs = exp::fig9_repeated(&cfg, sub, chains)?;
+                    for (i, r) in rs.iter().enumerate() {
+                        t.row(&[
+                            label.to_string(),
+                            i.to_string(),
+                            format!("{:.2}", r.seconds),
+                            format!("{:.3}", r.phi_ess_per_sec),
+                            format!("{:.3}", r.sig_ess_per_sec),
+                        ]);
+                    }
+                }
+                t.print();
+                return Ok(());
+            }
             let exact = exp::fig9_sv(&cfg, false);
             let sub = exp::fig9_sv(&cfg, true);
             let mut t = Table::new(&[

@@ -1,10 +1,18 @@
-//! XLA/PJRT runtime: loads the AOT-compiled L1/L2 artifacts (HLO text
-//! emitted by python/compile/aot.py) and serves batched log-likelihood
-//! evaluations to the Layer-3 hot path.  Python never runs at inference
-//! time: after `make artifacts` the Rust binary is self-contained.
+//! Execution runtimes beneath the Layer-3 hot path:
+//!
+//! * **XLA/PJRT** (`artifacts`/`client`) — loads the AOT-compiled L1/L2
+//!   artifacts (HLO text emitted by python/compile/aot.py) and serves
+//!   batched log-likelihood evaluations.  Python never runs at
+//!   inference time: after `make artifacts` the Rust binary is
+//!   self-contained.
+//! * **Worker pool** (`pool`) — the dependency-free persistent thread
+//!   pool behind the sharded batch scorer and the concurrent
+//!   multi-chain driver.
 
 pub mod artifacts;
 pub mod client;
+pub mod pool;
 
 pub use artifacts::{ArtifactInfo, ArtifactRegistry};
 pub use client::{Executable, Input, XlaRuntime};
+pub use pool::{auto_threads, resolve_threads, ShardScorer, WorkerPool};

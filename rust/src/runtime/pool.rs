@@ -1,0 +1,385 @@
+//! Dependency-free persistent worker pool + the sharded batch scorer.
+//!
+//! The engine's first concurrency subsystem: a fixed set of
+//! `std::thread` workers, spawned once and reused across transitions
+//! (thread spawn is ~10us — far more than a mini-batch replay — so a
+//! per-batch scoped-thread design would erase the win).  Two job kinds
+//! flow through one queue:
+//!
+//! * **shards** — contiguous ranges of a [`PackedBatch`]'s sections,
+//!   replayed through the worker's private register scratch
+//!   ([`ShardScorer`] below);
+//! * **tasks** — arbitrary `FnOnce` closures, used by the multi-chain
+//!   driver (`coordinator::multichain`) to run independent `Trace`s
+//!   with per-chain PCG streams.
+//!
+//! # Send boundaries
+//!
+//! `Trace`, `Value`, and the plan caches are `Rc`-based and never cross
+//! a thread boundary.  The *only* data shared with workers is the
+//! `Arc<PackedBatch>` — plain `f64` buffers produced by the pack stage
+//! (`trace/batch.rs`), immutable for the duration of the dispatch — and
+//! whatever a task closure owns outright.  Workers keep their scratch
+//! (`RegFile`-equivalent register storage) thread-local, so the replay
+//! inner loop takes no locks: the queue mutex is touched once per job,
+//! not per section.
+//!
+//! # Determinism
+//!
+//! Sharding cannot reorder arithmetic: every section's `l_i` is a
+//! function of its own packed column only, and each shard writes a
+//! disjoint `out[lo..hi]` range addressed by shard index, so results
+//! are assembled in deterministic shard order no matter which worker
+//! finishes first.  `tests/parallel.rs` pins this with bitwise
+//! lockstep runs against the sequential evaluator.
+
+use crate::trace::batch::PackedBatch;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+thread_local! {
+    /// Set inside pool worker threads.  A [`ShardScorer`] running *on*
+    /// a worker (a multi-chain task whose evaluator is parallel) must
+    /// not dispatch back into the pool — with every worker occupied by
+    /// a blocking chain task, queued shards would never run (deadlock).
+    /// Replay is bitwise identical either way, so the nested case just
+    /// runs inline.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Whether the current thread is a pool worker.
+pub fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|c| c.get())
+}
+
+/// A generic closure job (multi-chain driver).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// One shard of a packed batch: replay `lo..hi` and send the result
+/// back tagged with the shard index.
+struct ShardJob {
+    batch: Arc<PackedBatch>,
+    lo: usize,
+    hi: usize,
+    shard: usize,
+    done: Sender<(usize, Vec<f64>)>,
+}
+
+enum Job {
+    Shard(ShardJob),
+    Task(Task),
+}
+
+struct Shared {
+    queue: Mutex<(VecDeque<Job>, bool)>,
+    available: Condvar,
+}
+
+impl Shared {
+    fn push(&self, job: Job) {
+        let mut q = self.queue.lock().unwrap();
+        q.0.push_back(job);
+        drop(q);
+        self.available.notify_one();
+    }
+
+    /// Blocks until a job is available; `None` on shutdown.
+    fn pop(&self) -> Option<Job> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(job) = q.0.pop_front() {
+                return Some(job);
+            }
+            if q.1 {
+                return None;
+            }
+            q = self.available.wait(q).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.queue.lock().unwrap().1 = true;
+        self.available.notify_all();
+    }
+}
+
+/// The persistent pool.  Dropping it shuts the workers down; the
+/// process-wide [`WorkerPool::global`] instance lives for the process.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` workers (clamped to >= 1).  A
+    /// 1-thread pool is valid but [`ShardScorer`] never dispatches to
+    /// it — `threads == 1` means the sequential path, exactly.
+    pub fn new(threads: usize) -> Arc<WorkerPool> {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new((VecDeque::new(), false)),
+            available: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("subppl-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("worker spawn failed")
+            })
+            .collect();
+        Arc::new(WorkerPool {
+            shared,
+            handles,
+            threads,
+        })
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Enqueue a generic task (the multi-chain driver's entry point).
+    pub fn submit(&self, task: Task) {
+        self.shared.push(Job::Task(task));
+    }
+
+    fn submit_shard(&self, job: ShardJob) {
+        self.shared.push(Job::Shard(job));
+    }
+
+    /// The process-wide pool, spawned once on first use with
+    /// [`auto_threads`] workers.  All auto-parallel evaluators and the
+    /// multi-chain driver share it, so the process never oversubscribes
+    /// the machine with per-evaluator thread sets.
+    pub fn global() -> &'static Arc<WorkerPool> {
+        static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+        GLOBAL.get_or_init(|| WorkerPool::new(auto_threads()))
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    IN_POOL_WORKER.with(|c| c.set(true));
+    // per-worker scratch: the worker-private half of a RegFile (the
+    // packed batch supplies the immutable half)
+    let mut sregs: Vec<f64> = Vec::new();
+    while let Some(job) = shared.pop() {
+        match job {
+            // a panicking kernel must not kill the worker: the thread
+            // survives, the unsent Sender drops, and the dispatcher's
+            // recv errors into the scalar-path fallback instead of
+            // hanging on a pool that silently lost capacity
+            Job::Shard(s) => {
+                let ShardJob {
+                    batch,
+                    lo,
+                    hi,
+                    shard,
+                    done,
+                } = s;
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    let mut out = vec![0.0f64; hi - lo];
+                    batch.replay_range(lo, hi, &mut sregs, &mut out);
+                    out
+                }));
+                // drop our Arc before reporting, so once the dispatcher
+                // holds every result it also holds the only reference
+                // and can reclaim the batch's buffers
+                drop(batch);
+                if let Ok(out) = result {
+                    // a dropped receiver (dispatcher gave up) is fine
+                    let _ = done.send((shard, out));
+                }
+            }
+            // same story for tasks; the task's owner observes a panic
+            // through its own channel disconnecting
+            Job::Task(f) => {
+                let _ = catch_unwind(AssertUnwindSafe(f));
+            }
+        }
+    }
+}
+
+/// Thread count for `threads = 0` (auto): `SUBPPL_THREADS` if set,
+/// otherwise the machine's available parallelism.
+pub fn auto_threads() -> usize {
+    std::env::var("SUBPPL_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Resolve a `SubsampledConfig::threads`-style knob: `0` = auto.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        auto_threads()
+    } else {
+        threads
+    }
+}
+
+/// Front-end that shards a packed batch across the pool and reduces the
+/// per-shard `l_i` vectors back in deterministic shard order.  Owns the
+/// dispatch policy: batches below [`min_sections`](Self::min_sections)
+/// (or a 1-thread pool) replay inline on the calling thread — the same
+/// kernel, so the choice is invisible to results.
+pub struct ShardScorer {
+    pool: Arc<WorkerPool>,
+    /// Smallest batch worth dispatching: below this, queue/channel
+    /// overhead (~2us/shard) beats the arithmetic saved.  Lowered by
+    /// tests to force the parallel path on small workloads.
+    pub min_sections: usize,
+    /// Sections scored through pool shards (perf reporting).
+    pub sharded_sections: usize,
+    /// Inline scratch for the non-dispatched case.
+    sregs: Vec<f64>,
+}
+
+impl ShardScorer {
+    pub fn new(pool: Arc<WorkerPool>) -> ShardScorer {
+        ShardScorer {
+            pool,
+            min_sections: 256,
+            sharded_sections: 0,
+            sregs: Vec::new(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Whether a batch of `w` sections is worth packing for dispatch
+    /// (callers with a reusable sequential `RegFile` check this first
+    /// to avoid allocating a throwaway packed batch).  Always false on
+    /// a pool worker thread — see [`in_pool_worker`].
+    pub fn should_dispatch(&self, w: usize) -> bool {
+        self.pool.threads() > 1 && w >= self.min_sections && !in_pool_worker()
+    }
+
+    /// Replay a packed batch into `out`, sharding across the pool when
+    /// the batch is large enough.  Bitwise identical to
+    /// `RegFile::replay` on the same batch — both run
+    /// `PackedBatch::replay_range` over the same columns.
+    ///
+    /// Returns the batch back (buffers intact) so the caller can reuse
+    /// its allocations for the next pack; `None` only in the rare case
+    /// a worker still held a reference when the last result landed.
+    pub fn replay(
+        &mut self,
+        batch: PackedBatch,
+        out: &mut Vec<f64>,
+    ) -> Result<Option<PackedBatch>, String> {
+        let w = batch.width();
+        out.clear();
+        out.resize(w, 0.0);
+        let threads = self.pool.threads();
+        if !self.should_dispatch(w) {
+            batch.replay_range(0, w, &mut self.sregs, out);
+            return Ok(Some(batch));
+        }
+        let shards = threads.min(w);
+        let chunk = w.div_ceil(shards);
+        let batch = Arc::new(batch);
+        let (tx, rx) = channel();
+        let mut sent = 0usize;
+        let mut lo = 0usize;
+        while lo < w {
+            let hi = (lo + chunk).min(w);
+            self.pool.submit_shard(ShardJob {
+                batch: batch.clone(),
+                lo,
+                hi,
+                shard: sent,
+                done: tx.clone(),
+            });
+            sent += 1;
+            lo = hi;
+        }
+        drop(tx);
+        let mut received = 0usize;
+        while received < sent {
+            match rx.recv() {
+                Ok((shard, ls)) => {
+                    let off = shard * chunk;
+                    out[off..off + ls.len()].copy_from_slice(&ls);
+                    received += 1;
+                }
+                // a worker died mid-shard or panicked before sending:
+                // surface an error so the caller re-scores on the
+                // scalar path
+                Err(_) => return Err("worker pool: shard worker failed".into()),
+            }
+        }
+        self.sharded_sections += w;
+        // workers drop their Arc before sending, so after the last
+        // result this is normally the only reference left
+        Ok(Arc::try_unwrap(batch).ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_tasks_and_shuts_down() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.threads(), 3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..24 {
+            let c = counter.clone();
+            let tx = tx.clone();
+            pool.submit(Box::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            }));
+        }
+        drop(tx);
+        for _ in 0..24 {
+            rx.recv().expect("task did not run");
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 24);
+        drop(pool); // Drop joins the workers; must not hang
+    }
+
+    #[test]
+    fn task_panic_does_not_kill_the_worker() {
+        let pool = WorkerPool::new(1);
+        pool.submit(Box::new(|| panic!("deliberate")));
+        let (tx, rx) = channel();
+        pool.submit(Box::new(move || {
+            let _ = tx.send(42);
+        }));
+        assert_eq!(rx.recv().unwrap(), 42, "worker died after a task panic");
+    }
+
+    #[test]
+    fn resolve_threads_semantics() {
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(5), 5);
+        assert!(resolve_threads(0) >= 1);
+    }
+}

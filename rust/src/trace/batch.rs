@@ -30,15 +30,20 @@
 //! that could break that contract is rejected at lowering or replay
 //! time and falls back to the scalar per-section path:
 //!
-//! * non-f64 slots or bindings (int/bool constants, `Value::Sp`
-//!   committed reads, matrices/lists) — the interpreter's int-preserving
-//!   arithmetic could diverge from a float register, so those shapes
-//!   are never batch-replayed;
+//! * non-f64 slots or bindings (`Value::Sp` committed reads,
+//!   matrices/lists) — with one deliberate widening: int/bool operands
+//!   *are* admitted, through coercing (`as_f64`) bindings, exactly at
+//!   positions where `Prim::apply`/`SpFamily::logpdf` provably apply
+//!   the same coercion (always-float prims, logpdf args, and
+//!   `Add`/`Mul`/`Sub` with a guaranteed-`Real` sibling).  All-int
+//!   `Add`/`Mul`/`Sub` still refuses — the interpreter's
+//!   int-preserving branch could fire and diverge from a float
+//!   register;
 //! * prims outside the scalar whitelist (comparisons, vector
 //!   constructors, lookups);
 //! * exchangeable or multivariate absorbers;
-//! * type changes discovered at replay (a trace read that is no longer
-//!   `Value::Real`) — the whole batch returns `Err` and the caller
+//! * type changes discovered at pack time (a trace read that no longer
+//!   fits its binding) — the whole batch returns `Err` and the caller
 //!   re-scores it per section.
 //!
 //! # Lifecycle
@@ -49,6 +54,22 @@
 //! the partition and section-plan caches.  Value-only changes (accepted
 //! proposals, epoch bumps, observation rewrites) keep groups valid:
 //! slot tables store *where* to read values, never values themselves.
+//!
+//! # Pack/replay split (the parallel rung)
+//!
+//! Replay is two stages.  **Pack** ([`PackedBatch::pack_into`]) performs
+//! every trace read — binding columns, batch-shared globals, absorber
+//! values and committed arguments — single-threaded, into flat `f64`
+//! buffers; anything that would have made the old replay `Err` (a
+//! binding whose type changed, a non-numeric absorber value) errors
+//! here instead, with the same scalar-path fallback.  **Replay**
+//! ([`PackedBatch::replay_range`]) is then pure arithmetic over those
+//! buffers: no `Trace`, no `Rc`, no allocation — which makes
+//! `PackedBatch` `Send + Sync` and lets `runtime::pool::ShardScorer`
+//! run contiguous section ranges on worker threads.  Every section's
+//! `l_i` depends only on its own column `j`, so the sharded replay is
+//! bitwise identical to the sequential one *by construction*: both run
+//! the same kernel over the same columns.
 
 use crate::ppl::prim::Prim;
 use crate::ppl::sp::SpFamily;
@@ -61,9 +82,6 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::rc::Rc;
-
-/// One cell of a vector-typed column (register or binding).
-type VCell = Option<Rc<Vec<f64>>>;
 
 /// Structural fingerprint of a lowered section: the op list modulo its
 /// per-section bindings (constant *values*, trace node *ids*, absorber
@@ -222,8 +240,13 @@ pub fn same_shape(t: &SectionPlan, m: &SectionPlan) -> bool {
 pub enum ColS {
     /// f64 register (column) written by an earlier op.
     Slot(u32),
-    /// Candidate value of the k-th global-section node (batch-shared).
+    /// Candidate value of the k-th global-section node (batch-shared),
+    /// required to be `Value::Real` at pack time.
     Global(u32),
+    /// Like `Global`, but coerced through `as_f64` at pack time — only
+    /// emitted for operand positions the interpreter provably coerces
+    /// the same way (see the int-widening rules in `lower_cols`).
+    GlobalNum(u32),
     /// Per-section scalar binding column (constant or trace read).
     Bind(u32),
 }
@@ -273,7 +296,13 @@ enum ArgPath {
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum BindKind {
+    /// Strict `f64` binding: only `Value::Real` reads are admitted, so a
+    /// runtime type change makes the pack `Err` into the scalar path.
     Scalar,
+    /// Coercing numeric binding (`as_f64`): admitted only at operand
+    /// positions where the interpreter itself coerces through `as_f64`,
+    /// so int/bool values replay bitwise-identically.
+    ScalarNum,
     /// Vector binding with the template's arity: `ShapeKey` does not
     /// hash trace-read arities (the node id is a binding), so member
     /// extraction must enforce the template's length or a single
@@ -288,6 +317,9 @@ pub struct ColShape {
     pub n_vregs: u32,
     pub n_sbind: u32,
     pub n_vbind: u32,
+    /// Arity of each vector-binding column (template arity, enforced per
+    /// member at extraction).
+    pub varities: Vec<u32>,
     pub ops: Vec<ColOp>,
     pub absorbers: Vec<ColAbsorb>,
     bind_plan: Vec<(ArgPath, BindKind)>,
@@ -296,12 +328,18 @@ pub struct ColShape {
 /// One entry of a per-section scalar slot table.
 #[derive(Clone, Debug)]
 pub enum SBind {
-    /// Constant, pre-narrowed to f64 at group build (strictly from
-    /// `Value::Real`, so no int-preservation divergence is possible).
+    /// Constant, pre-narrowed to f64 at group build — from `Value::Real`
+    /// directly, or from `Value::Int` at a coercing operand position
+    /// (`i as f64` is exactly the interpreter's `as_f64`, so no
+    /// int-preservation divergence is possible).
     Const(f64),
     /// Committed trace value, read (strictly as `Value::Real`) at
-    /// replay time after freshening.
+    /// pack time after freshening.
     Node(NodeId),
+    /// Committed trace value at a coercing operand position, read
+    /// through `as_f64` at pack time — exactly the coercion
+    /// `Prim::apply`'s float fold and `SpFamily::logpdf` apply.
+    NodeNum(NodeId),
 }
 
 /// One entry of a per-section vector slot table.
@@ -324,6 +362,7 @@ struct Low {
     n_v: u32,
     n_sb: u32,
     n_vb: u32,
+    varities: Vec<u32>,
     bind_plan: Vec<(ArgPath, BindKind)>,
 }
 
@@ -342,31 +381,60 @@ impl Low {
         r
     }
 
-    fn sbind(&mut self, path: ArgPath) -> ColS {
+    fn sbind(&mut self, path: ArgPath, kind: BindKind) -> ColS {
         let i = self.n_sb;
         self.n_sb += 1;
-        self.bind_plan.push((path, BindKind::Scalar));
+        self.bind_plan.push((path, kind));
         ColS::Bind(i)
     }
 
     fn vbind(&mut self, path: ArgPath, arity: u32) -> ColV {
         let i = self.n_vb;
         self.n_vb += 1;
+        self.varities.push(arity);
         self.bind_plan.push((path, BindKind::Vector(arity)));
         ColV::Bind(i)
     }
 
+    /// Whether an argument is guaranteed to read as `Value::Real` in any
+    /// *successful* batch replay: constants are checked here, f64
+    /// registers hold interpreter-`Real` results by induction, and
+    /// global/trace reads verified `Real` here are re-checked strictly
+    /// at pack time (a runtime type change falls back to the scalar
+    /// path).  Such an argument witnesses that `Prim::apply`'s all-int
+    /// branch cannot fire, so sibling int operands may be coerced.
+    fn guaranteed_real(&self, trace: &Trace, p: &Partition, a: &PlanArg) -> bool {
+        match a {
+            PlanArg::Const(v) => matches!(v, Value::Real(_)),
+            PlanArg::Slot(s) => matches!(self.slot_map[*s as usize], Some((Ty::S, _))),
+            PlanArg::Global(k) => {
+                value_class(trace.value(p.global_drg[*k as usize])) == Cls::Real
+            }
+            PlanArg::Trace(id) => value_class(trace.value(*id)) == Cls::Real,
+        }
+    }
+
     /// Lower one argument as a scalar operand; `None` when the argument
-    /// is not provably f64 (caller abandons the f64 lowering).
+    /// is not provably f64-safe (caller abandons the f64 lowering).
+    ///
+    /// `coerce` marks operand positions where the interpreter itself
+    /// applies `as_f64` (always-float prims, `SpFamily::logpdf` args,
+    /// or an `Add`/`Mul`/`Sub` with a guaranteed-`Real` sibling): there,
+    /// int constants and int/bool-classed reads are admitted through
+    /// coercing bindings and stay bitwise-identical by construction.
     fn scalar_arg(
         &mut self,
         trace: &Trace,
         p: &Partition,
         a: &PlanArg,
         path: ArgPath,
+        coerce: bool,
     ) -> Option<ColS> {
         match a {
-            PlanArg::Const(Value::Real(_)) => Some(self.sbind(path)),
+            PlanArg::Const(Value::Real(_)) => Some(self.sbind(path, BindKind::Scalar)),
+            PlanArg::Const(Value::Int(_)) if coerce => {
+                Some(self.sbind(path, BindKind::ScalarNum))
+            }
             PlanArg::Const(_) => None,
             PlanArg::Slot(s) => match self.slot_map[*s as usize] {
                 Some((Ty::S, r)) => Some(ColS::Slot(r)),
@@ -375,11 +443,15 @@ impl Low {
             PlanArg::Global(k) => {
                 match value_class(trace.value(p.global_drg[*k as usize])) {
                     Cls::Real => Some(ColS::Global(*k)),
+                    Cls::Int | Cls::Bool if coerce => Some(ColS::GlobalNum(*k)),
                     _ => None,
                 }
             }
             PlanArg::Trace(id) => match value_class(trace.value(*id)) {
-                Cls::Real => Some(self.sbind(path)),
+                Cls::Real => Some(self.sbind(path, BindKind::Scalar)),
+                Cls::Int | Cls::Bool if coerce => {
+                    Some(self.sbind(path, BindKind::ScalarNum))
+                }
                 _ => None,
             },
         }
@@ -440,6 +512,17 @@ fn scalar_prim_arity_ok(prim: Prim, n: usize) -> bool {
     }
 }
 
+/// Whitelist prims whose `Prim::apply` coerces *every* argument through
+/// `as_f64` and always produces `Value::Real` — int operands at these
+/// positions replay bitwise-identically from an f64 column.  `Add`,
+/// `Mul`, unary `Sub`/`Neg`, and binary `Sub` are excluded: they
+/// preserve int-ness when all arguments are ints, so they coerce only
+/// when a guaranteed-`Real` sibling rules that branch out.
+fn prim_always_coerces(prim: Prim) -> bool {
+    use Prim::*;
+    matches!(prim, Min | Max | Div | Pow | Exp | Log | Sqrt | Abs | Sigmoid)
+}
+
 /// Lower a template plan to the shared f64 column program, or `None`
 /// when the shape is not (provably) f64-clean — the group then scores
 /// per section through the scalar `ScorerArena` path.
@@ -450,6 +533,7 @@ pub fn lower_cols(trace: &Trace, p: &Partition, plan: &SectionPlan) -> Option<Co
         n_v: 0,
         n_sb: 0,
         n_vb: 0,
+        varities: Vec::new(),
         bind_plan: Vec::new(),
     };
     let mut ops: Vec<ColOp> = Vec::with_capacity(plan.ops.len());
@@ -472,9 +556,23 @@ pub fn lower_cols(trace: &Trace, p: &Partition, plan: &SectionPlan) -> Option<Co
                     });
                 }
                 _ if scalar_prim_arity_ok(*prim, args.len()) => {
+                    // int widening: every operand of an always-coercing
+                    // prim goes through as_f64 in Prim::apply; for
+                    // Add/Mul/Sub a guaranteed-Real sibling forces the
+                    // float fold, which coerces the remaining operands
+                    // the same way.  Without a witness the all-int
+                    // branch could fire, so the shape stays scalar.
+                    let coerce = prim_always_coerces(*prim)
+                        || args.iter().any(|a| low.guaranteed_real(trace, p, a));
                     let mut cargs = Vec::with_capacity(args.len());
                     for (ai, a) in args.iter().enumerate() {
-                        cargs.push(low.scalar_arg(trace, p, a, ArgPath::OpArg(oi, ai as u32))?);
+                        cargs.push(low.scalar_arg(
+                            trace,
+                            p,
+                            a,
+                            ArgPath::OpArg(oi, ai as u32),
+                            coerce,
+                        )?);
                     }
                     let r = low.alloc_s(*out);
                     ops.push(ColOp::Map {
@@ -487,7 +585,7 @@ pub fn lower_cols(trace: &Trace, p: &Partition, plan: &SectionPlan) -> Option<Co
             },
             PlanOp::Copy { out, from } => match low.copy_class(trace, p, from) {
                 Cls::Real => {
-                    let f = low.scalar_arg(trace, p, from, ArgPath::CopyFrom(oi))?;
+                    let f = low.scalar_arg(trace, p, from, ArgPath::CopyFrom(oi), false)?;
                     let r = low.alloc_s(*out);
                     ops.push(ColOp::CopyS { out: r, from: f });
                 }
@@ -509,7 +607,15 @@ pub fn lower_cols(trace: &Trace, p: &Partition, plan: &SectionPlan) -> Option<Co
         }
         let mut cand = Vec::with_capacity(ab.args.len());
         for (ai, a) in ab.args.iter().enumerate() {
-            cand.push(low.scalar_arg(trace, p, a, ArgPath::AbsorbArg(bi as u32, ai as u32))?);
+            // SpFamily::logpdf coerces every argument through as_f64
+            // (`num`), so absorber operands always admit int widening
+            cand.push(low.scalar_arg(
+                trace,
+                p,
+                a,
+                ArgPath::AbsorbArg(bi as u32, ai as u32),
+                true,
+            )?);
         }
         absorbers.push(ColAbsorb { fam: ab.fam, cand });
     }
@@ -518,6 +624,7 @@ pub fn lower_cols(trace: &Trace, p: &Partition, plan: &SectionPlan) -> Option<Co
         n_vregs: low.n_v,
         n_sbind: low.n_sb,
         n_vbind: low.n_vb,
+        varities: low.varities,
         ops,
         absorbers,
         bind_plan: low.bind_plan,
@@ -558,6 +665,19 @@ fn extract_binds(
                     return None;
                 }
                 sb.push(SBind::Node(*id));
+            }
+            // coercing positions: the const class matches the template
+            // (ShapeKey/same_shape), so ScalarNum consts are ints; trace
+            // reads may be any as_f64-able class (the interpreter
+            // coerces them identically at these positions)
+            (BindKind::ScalarNum, PlanArg::Const(Value::Int(i))) => {
+                sb.push(SBind::Const(*i as f64))
+            }
+            (BindKind::ScalarNum, PlanArg::Trace(id)) => {
+                match value_class(trace.value(*id)) {
+                    Cls::Real | Cls::Int | Cls::Bool => sb.push(SBind::NodeNum(*id)),
+                    _ => return None,
+                }
             }
             // const arities are already part of the ShapeKey/same_shape
             // structure; the check is defense in depth
@@ -617,6 +737,64 @@ impl BatchGroup {
     /// The freshen list of member `m`.
     pub fn touch_of(&self, m: usize) -> &[NodeId] {
         &self.touch[self.touch_off[m] as usize..self.touch_off[m + 1] as usize]
+    }
+
+    /// The absorbing node of member `m` at absorber position `bi`.
+    pub fn absorber_of(&self, m: usize, bi: usize) -> NodeId {
+        self.absorbers[m * self.template.absorbers.len() + bi]
+    }
+
+    /// Columnar f32 narrowing of vector-binding column `col` for the
+    /// listed members, appended row-major (`members.len() x arity`) into
+    /// `out` — the XLA kernels' input layout, read straight off the slot
+    /// table with no per-row node-structure walk.  Returns the column
+    /// arity; `None` if any member's current value no longer fits the
+    /// column (callers fall back to the structural walk).  Trace-read
+    /// members must be freshened first (the evaluators already do).
+    pub fn narrow_vbind_into(
+        &self,
+        trace: &Trace,
+        col: u32,
+        members: &[u32],
+        out: &mut Vec<f32>,
+    ) -> Option<usize> {
+        let nvb = self.cols.n_vbind as usize;
+        let d = self.cols.varities[col as usize] as usize;
+        out.reserve(members.len() * d);
+        for &m in members {
+            match &self.vbinds[m as usize * nvb + col as usize] {
+                VBind::Const(v) => out.extend(v.iter().map(|&x| x as f32)),
+                VBind::Node(id) => match trace.value(*id) {
+                    Value::Vector(v) if v.len() == d => {
+                        out.extend(v.iter().map(|&x| x as f32))
+                    }
+                    _ => return None,
+                },
+            }
+        }
+        Some(d)
+    }
+
+    /// Columnar f32 narrowing of scalar-binding column `col` for the
+    /// listed members, appended into `out`.  `None` if any member's
+    /// current value is non-numeric.
+    pub fn narrow_sbind_into(
+        &self,
+        trace: &Trace,
+        col: u32,
+        members: &[u32],
+        out: &mut Vec<f32>,
+    ) -> Option<()> {
+        let nsb = self.cols.n_sbind as usize;
+        out.reserve(members.len());
+        for &m in members {
+            let x = match &self.sbinds[m as usize * nsb + col as usize] {
+                SBind::Const(x) => *x,
+                SBind::Node(id) | SBind::NodeNum(id) => trace.value(*id).as_f64()?,
+            };
+            out.push(x as f32);
+        }
+        Some(())
     }
 }
 
@@ -702,206 +880,394 @@ pub fn build_batch_plans(trace: &Trace, p: &Partition) -> BatchPlanSet {
 }
 
 // ---------------------------------------------------------------------
-// The register file and the columnar replay
+// The packed batch: pack (trace reads) + replay (pure f64 kernel)
 // ---------------------------------------------------------------------
 
-fn s_at(
-    arg: ColS,
-    sregs: &[f64],
-    sbind: &[f64],
-    globals: &[Value],
+/// Scalar operand of a packed op: global reads are resolved to
+/// batch-shared constants at pack time.
+#[derive(Clone, Copy, Debug)]
+enum PScal {
+    /// f64 register written by an earlier packed op.
+    Slot(u32),
+    /// Per-section scalar binding column.
+    Bind(u32),
+    /// Batch-shared constant (resolved global or folded value).
+    Const(f64),
+}
+
+/// Vector operand of a packed dot: a per-section binding column or a
+/// batch-shared (global) vector.
+#[derive(Clone, Copy, Debug)]
+enum PVec {
+    Bind(u32),
+    Shared(u32),
+}
+
+/// One packed op.  `CopyV` is resolved away at pack time (vector values
+/// are immutable, so vector registers are just aliases), leaving only
+/// scalar work for the kernel.
+#[derive(Clone, Debug)]
+enum POp {
+    /// `s[out][j] = prim(args...)`; args at `(offset, len)` in the pool.
+    Map { prim: Prim, out: u32, args: (u32, u32) },
+    Dot { sigmoid: bool, out: u32, a: PVec, b: PVec },
+    CopyS { out: u32, from: PScal },
+}
+
+#[derive(Clone, Debug)]
+struct PAbsorb {
+    fam: SpFamily,
+    /// Candidate-side args at `(offset, len)` in the operand pool.
+    args: (u32, u32),
+    /// Offset of the committed-arg block in `ab_cargs` (`len * w`
+    /// floats, arg-major).
+    cargs: u32,
+}
+
+/// A fully packed mini-batch: every trace/global read resolved into
+/// flat `f64` buffers, plus the op list to run over them.  Plain data
+/// throughout — `Send + Sync` — so [`replay_range`](Self::replay_range)
+/// can run on worker threads over disjoint section ranges with no locks
+/// and no `Trace` access.  Buffers are cleared, not freed, between
+/// packs, so the sequential path stays allocation-free in steady state.
+#[derive(Default, Debug)]
+pub struct PackedBatch {
     w: usize,
-    j: usize,
-) -> Result<f64, String> {
-    match arg {
-        ColS::Slot(r) => Ok(sregs[r as usize * w + j]),
-        ColS::Bind(b) => Ok(sbind[b as usize * w + j]),
+    n_sregs: u32,
+    ops: Vec<POp>,
+    /// Shared operand pool for `Map` args and absorber candidate args.
+    args: Vec<PScal>,
+    absorbers: Vec<PAbsorb>,
+    /// Scalar binding columns, column-major (`b * w + j`).
+    sbind: Vec<f64>,
+    /// Flattened vector binding columns; column `b` holds `w` vectors of
+    /// arity `vcols[b].1` starting at `vcols[b].0`.
+    vbind: Vec<f64>,
+    vcols: Vec<(u32, u32)>,
+    /// Batch-shared vectors (resolved vector globals), `(offset, len)`.
+    shared: Vec<f64>,
+    scols: Vec<(u32, u32)>,
+    /// Absorber values, column-major (`bi * w + j`); Bernoulli values
+    /// encoded 1.0/0.0.
+    ab_vals: Vec<f64>,
+    /// Committed absorber args, per-absorber arg-major blocks.
+    ab_cargs: Vec<f64>,
+    /// Pack-time scratch: vector-register -> resolved source.
+    vsrc: Vec<Option<PVec>>,
+}
+
+/// Resolve a scalar operand against the batch's candidate globals.
+fn pscal(a: ColS, globals: &[Value]) -> Result<PScal, String> {
+    Ok(match a {
+        ColS::Slot(r) => PScal::Slot(r),
+        ColS::Bind(b) => PScal::Bind(b),
         ColS::Global(k) => match globals.get(k as usize) {
-            Some(Value::Real(x)) => Ok(*x),
-            v => Err(format!(
-                "batch replay: global {k} is not a real ({})",
-                v.map_or("missing", |v| v.type_name())
-            )),
+            Some(Value::Real(x)) => PScal::Const(*x),
+            v => {
+                return Err(format!(
+                    "batch pack: global {k} is not a real ({})",
+                    v.map_or("missing", |v| v.type_name())
+                ))
+            }
         },
-    }
-}
-
-fn v_at<'a>(
-    arg: ColV,
-    vregs: &'a [VCell],
-    vbind: &'a [VCell],
-    globals: &'a [Value],
-    w: usize,
-    j: usize,
-) -> Result<&'a Rc<Vec<f64>>, String> {
-    match arg {
-        ColV::Slot(r) => vregs[r as usize * w + j]
-            .as_ref()
-            .ok_or_else(|| "batch replay: uninitialized vector register".to_string()),
-        ColV::Bind(b) => vbind[b as usize * w + j]
-            .as_ref()
-            .ok_or_else(|| "batch replay: uninitialized vector binding".to_string()),
-        ColV::Global(k) => match globals.get(k as usize) {
-            Some(Value::Vector(v)) => Ok(v),
-            v => Err(format!(
-                "batch replay: global {k} is not a vector ({})",
-                v.map_or("missing", |v| v.type_name())
-            )),
+        ColS::GlobalNum(k) => match globals.get(k as usize).and_then(|v| v.as_f64()) {
+            Some(x) => PScal::Const(x),
+            None => return Err(format!("batch pack: global {k} is not numeric")),
         },
-    }
-}
-
-/// `logpdf(value | args)` for a scalar SP family, matching
-/// `SpFamily::logpdf`'s coercions bit-for-bit (`num` = `as_f64` with
-/// NaN for out-of-class, applied identically on both sides).
-fn scalar_fam_logpdf(fam: SpFamily, node_value: &Value, arg: impl Fn(usize) -> f64, n_args: usize) -> Result<f64, String> {
-    use crate::dist;
-    Ok(match fam {
-        SpFamily::Bernoulli => {
-            let b = node_value
-                .as_bool()
-                .ok_or("batch replay: bernoulli value is not a bool")?;
-            let p = if n_args == 0 { 0.5 } else { arg(0) };
-            dist::bernoulli_logpmf(b, p)
-        }
-        SpFamily::Normal => {
-            let x = value_f64(node_value)?;
-            dist::normal_logpdf(x, arg(0), arg(1))
-        }
-        SpFamily::Gamma => {
-            let x = value_f64(node_value)?;
-            dist::gamma_logpdf(x, arg(0), arg(1))
-        }
-        SpFamily::InvGamma => {
-            let x = value_f64(node_value)?;
-            dist::inv_gamma_logpdf(x, arg(0), arg(1))
-        }
-        SpFamily::Beta => {
-            let x = value_f64(node_value)?;
-            dist::beta_logpdf(x, arg(0), arg(1))
-        }
-        SpFamily::UniformContinuous => {
-            let x = value_f64(node_value)?;
-            dist::uniform_logpdf(x, arg(0), arg(1))
-        }
-        SpFamily::StudentT => {
-            let x = value_f64(node_value)?;
-            dist::student_t_logpdf(x, arg(0), arg(1), arg(2))
-        }
-        SpFamily::MvNormal => return Err("batch replay: multivariate absorber".into()),
     })
 }
 
-fn value_f64(v: &Value) -> Result<f64, String> {
-    v.as_f64()
-        .ok_or_else(|| format!("batch replay: absorber value is not numeric ({})", v.type_name()))
-}
-
-/// Reusable f64 register file: slot columns, binding columns, and the
-/// per-batch output.  Cleared — not freed — between batches, so
-/// steady-state replay does no heap allocation beyond `Rc` bumps for
-/// vector bindings.
-#[derive(Default)]
-pub struct RegFile {
-    sregs: Vec<f64>,
-    vregs: Vec<VCell>,
-    sbind: Vec<f64>,
-    vbind: Vec<VCell>,
-}
-
-impl RegFile {
-    pub fn new() -> RegFile {
-        RegFile::default()
+impl PackedBatch {
+    /// Number of selected sections (the batch width).
+    pub fn width(&self) -> usize {
+        self.w
     }
 
-    /// Columnar replay of `group` over the selected members.  `sel`
-    /// holds `(member index, caller tag)` pairs; only the member index
-    /// is read here — outputs land in `out` in `sel` order.  The caller
-    /// must have freshened each member's touch list and filled
-    /// `globals` (via `plan::candidate_globals`) first.
+    /// Pack into a fresh batch (the parallel path, which hands the
+    /// result to the worker pool behind an `Arc`).
+    pub fn pack(
+        trace: &Trace,
+        group: &BatchGroup,
+        sel: &[(u32, u32)],
+        globals: &[Value],
+    ) -> Result<PackedBatch, String> {
+        let mut pb = PackedBatch::default();
+        pb.pack_into(trace, group, sel, globals)?;
+        Ok(pb)
+    }
+
+    /// Perform every trace read the replay needs, single-threaded, into
+    /// this batch's flat buffers.  `sel` holds `(member index, caller
+    /// tag)` pairs; only the member index is read here.  The caller must
+    /// have freshened each member's touch list and filled `globals`
+    /// (via `plan::candidate_globals`) first.
     ///
-    /// On `Err`, no output is valid and the caller must re-score the
-    /// batch per section (the scalar path reproduces the interpreter
-    /// oracle exactly, including its error/`-inf` behavior).
-    pub fn replay(
+    /// On `Err`, the batch is not replayable and the caller must
+    /// re-score the selection per section (the scalar path reproduces
+    /// the interpreter oracle exactly, including its error/`-inf`
+    /// behavior).
+    pub fn pack_into(
         &mut self,
         trace: &Trace,
         group: &BatchGroup,
         sel: &[(u32, u32)],
         globals: &[Value],
-        out: &mut Vec<f64>,
     ) -> Result<(), String> {
         let cols = &group.cols;
         let w = sel.len();
-        out.clear();
-        out.resize(w, 0.0);
+        self.w = w;
+        self.n_sregs = cols.n_sregs;
+        self.ops.clear();
+        self.args.clear();
+        self.absorbers.clear();
+        self.sbind.clear();
+        self.vbind.clear();
+        self.vcols.clear();
+        self.shared.clear();
+        self.scols.clear();
+        self.ab_vals.clear();
+        self.ab_cargs.clear();
+        self.vsrc.clear();
+        self.vsrc.resize(cols.n_vregs as usize, None);
         if w == 0 {
             return Ok(());
         }
-        let RegFile {
-            sregs,
-            vregs,
-            sbind,
-            vbind,
-        } = self;
 
-        // --- prefetch the per-section binding columns ---
+        // --- per-section scalar binding columns ---
         let nsb = cols.n_sbind as usize;
-        sbind.clear();
-        sbind.resize(nsb * w, 0.0);
+        self.sbind.resize(nsb * w, 0.0);
         for b in 0..nsb {
             for (j, &(m, _)) in sel.iter().enumerate() {
-                sbind[b * w + j] = match &group.sbinds[m as usize * nsb + b] {
+                self.sbind[b * w + j] = match &group.sbinds[m as usize * nsb + b] {
                     SBind::Const(x) => *x,
                     SBind::Node(id) => match trace.value(*id) {
                         Value::Real(x) => *x,
                         v => {
                             return Err(format!(
-                                "batch replay: scalar binding is {} not real",
+                                "batch pack: scalar binding is {} not real",
                                 v.type_name()
                             ))
                         }
                     },
+                    SBind::NodeNum(id) => {
+                        let v = trace.value(*id);
+                        v.as_f64().ok_or_else(|| {
+                            format!(
+                                "batch pack: numeric binding is {} not coercible",
+                                v.type_name()
+                            )
+                        })?
+                    }
                 };
             }
         }
+
+        // --- per-section vector binding columns (flattened copies) ---
         let nvb = cols.n_vbind as usize;
-        vbind.clear();
-        vbind.resize(nvb * w, None);
         for b in 0..nvb {
-            for (j, &(m, _)) in sel.iter().enumerate() {
-                vbind[b * w + j] = Some(match &group.vbinds[m as usize * nvb + b] {
-                    VBind::Const(v) => v.clone(),
+            let ar = cols.varities[b] as usize;
+            let off = self.vbind.len() as u32;
+            self.vcols.push((off, ar as u32));
+            for &(m, _) in sel {
+                match &group.vbinds[m as usize * nvb + b] {
+                    // const arities were verified against the template
+                    // at group build and cannot change
+                    VBind::Const(v) => self.vbind.extend_from_slice(v.as_slice()),
                     VBind::Node(id) => match trace.value(*id) {
-                        Value::Vector(v) => v.clone(),
+                        Value::Vector(v) if v.len() == ar => {
+                            self.vbind.extend_from_slice(v.as_slice())
+                        }
+                        Value::Vector(v) => {
+                            return Err(format!(
+                                "batch pack: vector binding length {} != {ar}",
+                                v.len()
+                            ))
+                        }
                         v => {
                             return Err(format!(
-                                "batch replay: vector binding is {} not vector",
+                                "batch pack: vector binding is {} not vector",
                                 v.type_name()
                             ))
                         }
                     },
-                });
+                }
             }
         }
 
-        // --- column ops ---
-        sregs.clear();
-        sregs.resize(cols.n_sregs as usize * w, 0.0);
-        vregs.clear();
-        vregs.resize(cols.n_vregs as usize * w, None);
+        // --- ops: resolve globals and alias vector registers away ---
         for op in &cols.ops {
             match op {
-                ColOp::Map { prim, out: o, args } => {
+                ColOp::Map { prim, out, args } => {
+                    let off = self.args.len() as u32;
+                    for &a in args {
+                        let p = pscal(a, globals)?;
+                        self.args.push(p);
+                    }
+                    self.ops.push(POp::Map {
+                        prim: *prim,
+                        out: *out,
+                        args: (off, args.len() as u32),
+                    });
+                }
+                ColOp::Dot { sigmoid, out, a, b } => {
+                    let pa = self.vec_operand(*a, globals)?;
+                    let pb = self.vec_operand(*b, globals)?;
+                    let (la, lb) = (self.pvec_len(pa), self.pvec_len(pb));
+                    if la != lb {
+                        return Err(format!(
+                            "batch pack: dot length mismatch {la} vs {lb}"
+                        ));
+                    }
+                    self.ops.push(POp::Dot {
+                        sigmoid: *sigmoid,
+                        out: *out,
+                        a: pa,
+                        b: pb,
+                    });
+                }
+                ColOp::CopyS { out, from } => {
+                    let f = pscal(*from, globals)?;
+                    self.ops.push(POp::CopyS { out: *out, from: f });
+                }
+                ColOp::CopyV { out, from } => {
+                    let v = self.vec_operand(*from, globals)?;
+                    self.vsrc[*out as usize] = Some(v);
+                }
+            }
+        }
+
+        // --- absorbers: values + committed args, prefetched ---
+        let nab = cols.absorbers.len();
+        self.ab_vals.resize(nab * w, 0.0);
+        for (bi, ab) in cols.absorbers.iter().enumerate() {
+            let off = self.args.len() as u32;
+            for &a in &ab.cand {
+                let p = pscal(a, globals)?;
+                self.args.push(p);
+            }
+            let n_args = ab.cand.len();
+            let coff = self.ab_cargs.len() as u32;
+            self.ab_cargs.resize(coff as usize + n_args * w, 0.0);
+            for (j, &(m, _)) in sel.iter().enumerate() {
+                let node = trace.node(group.absorbers[m as usize * nab + bi]);
+                if node.args.len() != n_args {
+                    return Err("batch pack: absorber arity changed".into());
+                }
+                self.ab_vals[bi * w + j] = match ab.fam {
+                    SpFamily::Bernoulli => match node.value.as_bool() {
+                        Some(b) => b as u8 as f64,
+                        None => {
+                            return Err("batch pack: bernoulli value is not a bool".into())
+                        }
+                    },
+                    _ => node.value.as_f64().ok_or_else(|| {
+                        format!(
+                            "batch pack: absorber value is not numeric ({})",
+                            node.value.type_name()
+                        )
+                    })?,
+                };
+                // committed side: the same as_f64-or-NaN coercion
+                // SpFamily::logpdf applies
+                for (ai, arg) in node.args.iter().enumerate() {
+                    self.ab_cargs[coff as usize + ai * w + j] =
+                        trace.arg_value(arg).as_f64().unwrap_or(f64::NAN);
+                }
+            }
+            self.absorbers.push(PAbsorb {
+                fam: ab.fam,
+                args: (off, n_args as u32),
+                cargs: coff,
+            });
+        }
+        Ok(())
+    }
+
+    fn vec_operand(&mut self, a: ColV, globals: &[Value]) -> Result<PVec, String> {
+        Ok(match a {
+            ColV::Bind(b) => PVec::Bind(b),
+            ColV::Slot(r) => self.vsrc[r as usize]
+                .ok_or("batch pack: uninitialized vector register")?,
+            ColV::Global(k) => match globals.get(k as usize) {
+                Some(Value::Vector(v)) => {
+                    let off = self.shared.len() as u32;
+                    self.shared.extend_from_slice(v.as_slice());
+                    self.scols.push((off, v.len() as u32));
+                    PVec::Shared((self.scols.len() - 1) as u32)
+                }
+                v => {
+                    return Err(format!(
+                        "batch pack: global {k} is not a vector ({})",
+                        v.map_or("missing", |v| v.type_name())
+                    ))
+                }
+            },
+        })
+    }
+
+    fn pvec_len(&self, a: PVec) -> usize {
+        match a {
+            PVec::Bind(b) => self.vcols[b as usize].1 as usize,
+            PVec::Shared(s) => self.scols[s as usize].1 as usize,
+        }
+    }
+
+    #[inline]
+    fn scal(&self, a: PScal, sregs: &[f64], ws: usize, jj: usize, j: usize) -> f64 {
+        match a {
+            PScal::Slot(r) => sregs[r as usize * ws + jj],
+            PScal::Bind(b) => self.sbind[b as usize * self.w + j],
+            PScal::Const(c) => c,
+        }
+    }
+
+    #[inline]
+    fn vec_at(&self, a: PVec, j: usize) -> &[f64] {
+        match a {
+            PVec::Bind(b) => {
+                let (off, ar) = self.vcols[b as usize];
+                let (off, ar) = (off as usize, ar as usize);
+                &self.vbind[off + j * ar..off + (j + 1) * ar]
+            }
+            PVec::Shared(s) => {
+                let (off, len) = self.scols[s as usize];
+                &self.shared[off as usize..(off + len) as usize]
+            }
+        }
+    }
+
+    /// Replay sections `lo..hi` of the packed batch into `out` (length
+    /// `hi - lo`), using `sregs` as register scratch.  Pure arithmetic
+    /// over the packed buffers: infallible, `Trace`-free, and per-`j`
+    /// independent — the computation for section `j` is the *same
+    /// scalar f64 operations in the same order* no matter how the range
+    /// is sharded, which is the whole bitwise-identity argument for the
+    /// parallel path.
+    pub fn replay_range(&self, lo: usize, hi: usize, sregs: &mut Vec<f64>, out: &mut [f64]) {
+        debug_assert!(lo <= hi && hi <= self.w);
+        debug_assert_eq!(out.len(), hi - lo);
+        let w = self.w;
+        let ws = hi - lo;
+        out.fill(0.0);
+        if ws == 0 {
+            return;
+        }
+        sregs.clear();
+        sregs.resize(self.n_sregs as usize * ws, 0.0);
+        for op in &self.ops {
+            match op {
+                POp::Map { prim, out: o, args } => {
                     use Prim::*;
-                    for j in 0..w {
-                        let a0 = s_at(args[0], sregs, sbind, globals, w, j)?;
+                    let argv = &self.args[args.0 as usize..(args.0 + args.1) as usize];
+                    for j in lo..hi {
+                        let jj = j - lo;
+                        let a0 = self.scal(argv[0], sregs, ws, jj, j);
                         let r = match prim {
                             // identical fold order to Prim::apply
                             Add | Mul | Min | Max => {
                                 let mut acc = a0;
-                                for &a in &args[1..] {
-                                    let x = s_at(a, sregs, sbind, globals, w, j)?;
+                                for &a in &argv[1..] {
+                                    let x = self.scal(a, sregs, ws, jj, j);
                                     acc = match prim {
                                         Add => acc + x,
                                         Mul => acc * x,
@@ -913,95 +1279,128 @@ impl RegFile {
                                 acc
                             }
                             Sub => {
-                                if args.len() == 1 {
+                                if argv.len() == 1 {
                                     -a0
                                 } else {
-                                    a0 - s_at(args[1], sregs, sbind, globals, w, j)?
+                                    a0 - self.scal(argv[1], sregs, ws, jj, j)
                                 }
                             }
-                            Div => a0 / s_at(args[1], sregs, sbind, globals, w, j)?,
-                            Pow => a0.powf(s_at(args[1], sregs, sbind, globals, w, j)?),
+                            Div => a0 / self.scal(argv[1], sregs, ws, jj, j),
+                            Pow => a0.powf(self.scal(argv[1], sregs, ws, jj, j)),
                             Neg => -a0,
                             Exp => a0.exp(),
                             Log => a0.ln(),
                             Sqrt => a0.sqrt(),
                             Abs => a0.abs(),
                             Sigmoid => 1.0 / (1.0 + (-a0).exp()),
-                            _ => return Err(format!("batch replay: prim {prim:?} not columnar")),
+                            // lower_cols admits only the scalar whitelist
+                            _ => unreachable!("non-columnar prim in packed batch"),
                         };
-                        sregs[*o as usize * w + j] = r;
+                        sregs[*o as usize * ws + jj] = r;
                     }
                 }
-                ColOp::Dot { sigmoid, out: o, a, b } => {
-                    for j in 0..w {
-                        let av = v_at(*a, vregs, vbind, globals, w, j)?;
-                        let bv = v_at(*b, vregs, vbind, globals, w, j)?;
-                        if av.len() != bv.len() {
-                            return Err(format!(
-                                "batch replay: dot length mismatch {} vs {}",
-                                av.len(),
-                                bv.len()
-                            ));
-                        }
+                POp::Dot { sigmoid, out: o, a, b } => {
+                    for j in lo..hi {
+                        let av = self.vec_at(*a, j);
+                        let bv = self.vec_at(*b, j);
                         // same accumulation order as Prim::apply's
                         // zip/map/sum (fold from 0.0 in index order)
                         let mut d = 0.0f64;
                         for (x, y) in av.iter().zip(bv.iter()) {
                             d += x * y;
                         }
-                        sregs[*o as usize * w + j] =
+                        sregs[*o as usize * ws + (j - lo)] =
                             if *sigmoid { 1.0 / (1.0 + (-d).exp()) } else { d };
                     }
                 }
-                ColOp::CopyS { out: o, from } => {
-                    for j in 0..w {
-                        let x = s_at(*from, sregs, sbind, globals, w, j)?;
-                        sregs[*o as usize * w + j] = x;
-                    }
-                }
-                ColOp::CopyV { out: o, from } => {
-                    for j in 0..w {
-                        let v = v_at(*from, vregs, vbind, globals, w, j)?.clone();
-                        vregs[*o as usize * w + j] = Some(v);
+                POp::CopyS { out: o, from } => {
+                    for j in lo..hi {
+                        let jj = j - lo;
+                        let x = self.scal(*from, sregs, ws, jj, j);
+                        sregs[*o as usize * ws + jj] = x;
                     }
                 }
             }
         }
 
         // --- absorbers: l[j] += cand - committed, in absorber order ---
-        let nab = cols.absorbers.len();
-        for (bi, ab) in cols.absorbers.iter().enumerate() {
-            for (j, &(m, _)) in sel.iter().enumerate() {
-                let node_id = group.absorbers[m as usize * nab + bi];
-                let node = trace.node(node_id);
-                if ab.cand.len() != node.args.len() {
-                    return Err("batch replay: absorber arity changed".into());
-                }
-                // candidate side: args from registers/bindings/globals
-                let mut cand_args = [0.0f64; 4];
-                if ab.cand.len() > cand_args.len() {
-                    return Err("batch replay: absorber arity > 4".into());
-                }
-                for (ai, &a) in ab.cand.iter().enumerate() {
-                    cand_args[ai] = s_at(a, sregs, sbind, globals, w, j)?;
-                }
-                let cand = scalar_fam_logpdf(
-                    ab.fam,
-                    &node.value,
-                    |i| cand_args[i],
-                    ab.cand.len(),
-                )?;
-                // committed side: args read from the trace, with the
-                // same as_f64-or-NaN coercion SpFamily::logpdf applies
-                let committed = scalar_fam_logpdf(
-                    ab.fam,
-                    &node.value,
-                    |i| trace.arg_value(&node.args[i]).as_f64().unwrap_or(f64::NAN),
-                    node.args.len(),
-                )?;
-                out[j] += cand - committed;
+        let sr: &[f64] = sregs;
+        for (bi, ab) in self.absorbers.iter().enumerate() {
+            let argv = &self.args[ab.args.0 as usize..(ab.args.0 + ab.args.1) as usize];
+            let n_args = argv.len();
+            let coff = ab.cargs as usize;
+            for j in lo..hi {
+                let jj = j - lo;
+                let val = self.ab_vals[bi * w + j];
+                let cand =
+                    packed_fam_logpdf(ab.fam, val, |i| self.scal(argv[i], sr, ws, jj, j), n_args);
+                let committed =
+                    packed_fam_logpdf(ab.fam, val, |i| self.ab_cargs[coff + i * w + j], n_args);
+                out[jj] += cand - committed;
             }
         }
+    }
+}
+
+/// `logpdf(value | args)` for a scalar SP family over packed f64 data,
+/// matching `SpFamily::logpdf`'s coercions bit-for-bit (values and args
+/// were coerced identically — `as_f64`, NaN for out-of-class — at pack
+/// time).
+fn packed_fam_logpdf(fam: SpFamily, val: f64, arg: impl Fn(usize) -> f64, n_args: usize) -> f64 {
+    use crate::dist;
+    match fam {
+        SpFamily::Bernoulli => {
+            let p = if n_args == 0 { 0.5 } else { arg(0) };
+            dist::bernoulli_logpmf(val != 0.0, p)
+        }
+        SpFamily::Normal => dist::normal_logpdf(val, arg(0), arg(1)),
+        SpFamily::Gamma => dist::gamma_logpdf(val, arg(0), arg(1)),
+        SpFamily::InvGamma => dist::inv_gamma_logpdf(val, arg(0), arg(1)),
+        SpFamily::Beta => dist::beta_logpdf(val, arg(0), arg(1)),
+        SpFamily::UniformContinuous => dist::uniform_logpdf(val, arg(0), arg(1)),
+        SpFamily::StudentT => dist::student_t_logpdf(val, arg(0), arg(1), arg(2)),
+        // lower_cols rejects multivariate absorbers
+        SpFamily::MvNormal => unreachable!("multivariate absorber in packed batch"),
+    }
+}
+
+/// Reusable sequential replay state: one [`PackedBatch`] plus the
+/// scalar-register scratch, cleared — not freed — between batches.  The
+/// pool workers own the same storage privately on the parallel path
+/// (`runtime::pool`), so no state is shared across threads except the
+/// immutable packed batch itself.
+#[derive(Default)]
+pub struct RegFile {
+    packed: PackedBatch,
+    sregs: Vec<f64>,
+}
+
+impl RegFile {
+    pub fn new() -> RegFile {
+        RegFile::default()
+    }
+
+    /// Sequential columnar replay of `group` over the selected members
+    /// (outputs land in `out` in `sel` order): pack, then run the
+    /// kernel over the full range.  The parallel path
+    /// (`runtime::pool::ShardScorer`) runs the *same* kernel over
+    /// contiguous shards of the same packed batch, so the two are
+    /// bitwise identical by construction.
+    ///
+    /// On `Err`, no output is valid and the caller must re-score the
+    /// batch per section.
+    pub fn replay(
+        &mut self,
+        trace: &Trace,
+        group: &BatchGroup,
+        sel: &[(u32, u32)],
+        globals: &[Value],
+        out: &mut Vec<f64>,
+    ) -> Result<(), String> {
+        self.packed.pack_into(trace, group, sel, globals)?;
+        out.clear();
+        out.resize(sel.len(), 0.0);
+        self.packed.replay_range(0, sel.len(), &mut self.sregs, out);
         Ok(())
     }
 }
@@ -1200,10 +1599,11 @@ mod tests {
     }
 
     #[test]
-    fn int_constants_stay_on_the_scalar_path() {
-        // (+ (dot w x) 1) with an integer constant: Prim::apply would
-        // keep int-ness semantics the register file cannot reproduce, so
-        // the shape must refuse to f64-lower
+    fn int_constants_batch_when_a_real_sibling_forces_the_float_fold() {
+        // (+ (dot w x) 1): the dot result is guaranteed Real, so
+        // Prim::apply takes the float fold and coerces the int constant
+        // through as_f64 — the f64 lowering may admit it and must stay
+        // bitwise identical to the interpreter
         let src = "\
             [assume w (scope_include 'w 0 (multivariate_normal (vector 0 0) 0.5))]\n\
             [assume g (lambda (x) (normal (+ (dot w x) 1) 0.8))]\n\
@@ -1215,7 +1615,106 @@ mod tests {
         let w = t.lookup_node("w").unwrap();
         let p = t.cached_partition(w).unwrap();
         let set = t.cached_batch_plans(&p);
-        assert_eq!(set.batched_roots(), 0, "int-const shape must not batch");
-        assert!(set.groups.is_empty());
+        assert_eq!(set.batched_roots(), 2, "int-const widened shape must batch");
+        let g = &set.groups[0];
+        let new_w = Value::vector(vec![0.2, -0.4]);
+        let mut globals = Vec::new();
+        candidate_globals(&t, &p, &new_w, &mut globals).unwrap();
+        let sel: Vec<(u32, u32)> = (0..g.len() as u32).map(|m| (m, m)).collect();
+        let mut rf = RegFile::new();
+        let mut out = Vec::new();
+        rf.replay(&t, g, &sel, &globals, &mut out).unwrap();
+        let roots = g.roots.clone();
+        let mut interp = InterpreterEval;
+        let mut t2 = t;
+        let p2 = t2.cached_partition(w).unwrap();
+        let want = interp.eval_sections(&mut t2, &p2, &roots, &new_w).unwrap();
+        for (a, b) in out.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "widened int shape diverged");
+        }
+    }
+
+    /// The witness rule, tested straight on `lower_cols`: an
+    /// `Add`/`Mul`/`Sub` whose operands are *all* possibly-int must
+    /// refuse the f64 lowering (`Prim::apply`'s int-preserving branch
+    /// could fire), while one guaranteed-`Real` sibling admits the int
+    /// constant through the coercing binding.
+    #[test]
+    fn all_int_arithmetic_refuses_to_lower() {
+        use crate::trace::plan::AbsorbOp;
+        let t = lr_trace(2, 14);
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let absorber = {
+            let real_plan = t.cached_section_plan(&p, p.locals[0]).unwrap();
+            real_plan.absorbers[0].node
+        };
+        let mk = |args: Vec<PlanArg>| SectionPlan {
+            root: p.locals[0],
+            n_slots: 1,
+            ops: vec![PlanOp::Prim {
+                prim: Prim::Add,
+                out: 0,
+                args,
+            }],
+            absorbers: vec![AbsorbOp {
+                node: absorber,
+                fam: SpFamily::Normal,
+                args: vec![PlanArg::Slot(0), PlanArg::Const(Value::Real(1.0))],
+            }],
+            touch: vec![],
+            built_at: t.structure_version,
+        };
+        // all-int operands: no witness, must refuse
+        let all_int = mk(vec![
+            PlanArg::Const(Value::Int(1)),
+            PlanArg::Const(Value::Int(2)),
+        ]);
+        assert!(lower_cols(&t, &p, &all_int).is_none());
+        // a Real sibling forces the float fold: the int is admitted
+        let widened = mk(vec![
+            PlanArg::Const(Value::Real(0.5)),
+            PlanArg::Const(Value::Int(2)),
+        ]);
+        let cols = lower_cols(&t, &p, &widened).expect("witnessed int must lower");
+        // two op binds (Real + widened Int) plus the absorber's Real arg
+        assert_eq!(cols.n_sbind, 3);
+    }
+
+    /// The sharded kernel is the sequential kernel: any split of the
+    /// packed range must reproduce the full-range replay bit-for-bit.
+    #[test]
+    fn packed_range_splits_are_bitwise_identical() {
+        let t = lr_trace(33, 21);
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let set = t.cached_batch_plans(&p);
+        let g = &set.groups[0];
+        let new_w = Value::vector(vec![0.1, -0.25, 0.3]);
+        let mut globals = Vec::new();
+        candidate_globals(&t, &p, &new_w, &mut globals).unwrap();
+        let sel: Vec<(u32, u32)> = (0..g.len() as u32).map(|m| (m, m)).collect();
+        let pb = PackedBatch::pack(&t, g, &sel, &globals).unwrap();
+        let n = pb.width();
+        let mut sregs = Vec::new();
+        let mut full = vec![0.0; n];
+        pb.replay_range(0, n, &mut sregs, &mut full);
+        for &shards in &[2usize, 3, 5, 7] {
+            let chunk = n.div_ceil(shards);
+            let mut pieced = vec![0.0; n];
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + chunk).min(n);
+                pb.replay_range(lo, hi, &mut sregs, &mut pieced[lo..hi]);
+                lo = hi;
+            }
+            for (i, (a, b)) in pieced.iter().zip(&full).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "shards={shards}: l[{i}] diverged"
+                );
+            }
+        }
     }
 }

@@ -10,7 +10,7 @@ pub mod plan;
 pub mod regen;
 pub mod scaffold;
 
-pub use batch::{BatchGroup, BatchPlanSet, RegFile, ShapeKey};
+pub use batch::{BatchGroup, BatchPlanSet, PackedBatch, RegFile, ShapeKey};
 pub use eval::Evaluator;
 pub use node::{ArgRef, EvalResult, Node, NodeId, NodeKind};
 pub use pet::Trace;

@@ -124,6 +124,37 @@ fn li_bitwise_stochastic_volatility() {
     }
 }
 
+/// Int-widened shapes — previously scalar-fallback — must now batch
+/// *and* stay bitwise identical: `(+ (dot w x) 1)` carries an int
+/// constant that `Prim::apply` coerces through `as_f64` because the dot
+/// result is a guaranteed `Real` (the float fold), which is exactly how
+/// the f64 lowering replays it.
+#[test]
+fn li_bitwise_int_widened_shape() {
+    let mut src = String::from(
+        "[assume w (scope_include 'w 0 (multivariate_normal (vector 0 0) 0.5))]\n\
+         [assume g (lambda (x) (normal (+ (dot w x) 1) 0.8))]\n",
+    );
+    let mut rng = Pcg64::seeded(91);
+    for _ in 0..80 {
+        let (a, b) = (rng.normal(), rng.normal());
+        let y = rng.normal();
+        src.push_str(&format!("[observe (g (vector {a} {b})) {y}]\n"));
+    }
+    let mut trace = Trace::new();
+    trace.run_program(&src, &mut rng).unwrap();
+    let w = trace.lookup_node("w").unwrap();
+    let cur = trace.fresh_value(w);
+    for step in 0..3 {
+        let new_w = Proposal::Drift(0.2).propose(&cur, &mut rng).unwrap();
+        let (planned, batched, fallback) =
+            li_three_ways(&mut trace, w, &new_w, &format!("int-widened step {step}"));
+        assert_eq!(planned, 80);
+        assert_eq!(batched, 80, "int-widened sections must batch");
+        assert_eq!(fallback, 0);
+    }
+}
+
 // ---------------------------------------------------------------------
 // 200-transition lockstep runs
 // ---------------------------------------------------------------------
@@ -139,6 +170,7 @@ fn run_lr_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         eps: 0.01,
         proposal: Proposal::Drift(0.1),
         exact: false,
+        threads: 1,
     };
     let mut out = Vec::with_capacity(steps);
     for _ in 0..steps {
@@ -166,6 +198,7 @@ fn run_sv_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         eps: 0.01,
         proposal: Proposal::Drift(0.03),
         exact: false,
+        threads: 1,
     };
     let mut out = Vec::with_capacity(steps);
     for i in 0..steps {
@@ -193,6 +226,7 @@ fn run_dpm_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         eps: 0.01,
         proposal: Proposal::Drift(0.25),
         exact: false,
+        threads: 1,
     };
     let mut out = Vec::with_capacity(steps);
     for i in 0..steps {

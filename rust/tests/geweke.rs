@@ -125,8 +125,15 @@ fn geweke_subsampled_mh_logistic_regression() {
         eps: 0.01,
         proposal: Proposal::Drift(0.4),
         exact: false,
+        // auto: the CI geweke job runs with SUBPPL_THREADS=4, so the
+        // parallel rung gets Geweke-level statistical coverage too;
+        // z-scores cannot depend on the thread count (the parallel
+        // path is bitwise identical)
+        threads: 0,
     };
-    let mut ev = PlannedEval::new();
+    // the default dispatch cutoff (256) would never engage on m=8
+    // mini-batches — force dispatch so "parallel coverage" is real
+    let mut ev = PlannedEval::for_config(&cfg).with_min_parallel(1);
     let rounds = 1200;
     let burn = 200;
     let mut g1 = Vec::with_capacity(rounds - burn);

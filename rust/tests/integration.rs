@@ -24,6 +24,7 @@ fn bayes_lr_end_to_end_subsampled() {
         eps: 0.01,
         proposal: Proposal::Drift(0.08),
         exact: false,
+        threads: 1,
     };
     let mut ev = InterpreterEval;
     let mut w_mean = vec![RunningMoments::new(), RunningMoments::new(), RunningMoments::new()];
@@ -112,6 +113,7 @@ fn joint_dpm_end_to_end() {
             eps: 0.3,
             proposal: Proposal::Drift(0.25),
             exact: false,
+            threads: 1,
         };
         subsampled_mh_transition(&mut trace, &mut rng, wk, &cfg, &mut ev).unwrap();
     }

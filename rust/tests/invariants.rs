@@ -264,6 +264,7 @@ fn prop_subsampled_respects_support() {
             eps: 0.05,
             proposal: Proposal::Drift(sigma),
             exact: false,
+            threads: 1,
         };
         let mut ev = InterpreterEval;
         for _ in 0..60 {

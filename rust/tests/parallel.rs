@@ -1,0 +1,261 @@
+//! The parallel rung of the differential ladder: sequential batched
+//! replay vs pool-sharded replay must be *bitwise identical* — on whole
+//! populations, on sampled mini-batches, across thread counts, over
+//! long lockstep chains, and across structural churn while the pool
+//! stays alive.
+//!
+//! The sharded path runs the very same `PackedBatch::replay_range`
+//! kernel as the sequential path over disjoint section ranges, so any
+//! divergence here means shared state leaked across the `Send`
+//! boundary — fail loudly.
+
+use std::sync::Arc;
+use subppl::coordinator::chain::{build_bayes_lr, build_joint_dpm, build_sv};
+use subppl::data::{dpm_data, sv_data, synth2d};
+use subppl::infer::{
+    gibbs_transition, subsampled_mh_transition, InterpreterEval, LocalEvaluator, PlannedEval,
+    Proposal, SubsampledConfig,
+};
+use subppl::math::Pcg64;
+use subppl::runtime::pool::WorkerPool;
+use subppl::trace::node::NodeId;
+use subppl::trace::Trace;
+use subppl::Value;
+
+/// A forced-dispatch parallel evaluator on a fresh pool of `threads`
+/// workers (cutoff 1, so even small mini-batches shard).
+fn parallel_eval(threads: usize) -> PlannedEval {
+    PlannedEval::with_pool(WorkerPool::new(threads)).with_min_parallel(1)
+}
+
+fn assert_bitwise(label: &str, got: &[f64], want: &[f64]) {
+    assert_eq!(got.len(), want.len(), "{label}: length mismatch");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "{label}: l[{i}] differs: {a} vs {b}"
+        );
+    }
+}
+
+/// Whole-population l_i through the interpreter oracle, the sequential
+/// batched evaluator, and pool-sharded evaluators at 1/2/4 threads.
+fn li_across_thread_counts(trace: &mut Trace, v: NodeId, new_v: &Value, label: &str) {
+    let p = trace.cached_partition(v).expect("no border partition");
+    let roots = p.locals.clone();
+    let mut interp = InterpreterEval;
+    let want = interp.eval_sections(trace, &p, &roots, new_v).unwrap();
+    let mut seq = PlannedEval::new();
+    let got = seq.eval_sections(trace, &p, &roots, new_v).unwrap();
+    assert_bitwise(&format!("{label}/sequential"), &got, &want);
+    for threads in [1usize, 2, 4] {
+        let mut par = parallel_eval(threads);
+        let got = par.eval_sections(trace, &p, &roots, new_v).unwrap();
+        assert_bitwise(&format!("{label}/threads{threads}"), &got, &want);
+        assert_eq!(par.fallback_sections, 0, "{label}/threads{threads}");
+        if threads == 1 {
+            // threads = 1 must be the sequential path, exactly
+            assert_eq!(par.sharded_sections(), 0, "{label}: 1-thread pool dispatched");
+        } else {
+            assert_eq!(
+                par.sharded_sections(),
+                par.batched_sections,
+                "{label}/threads{threads}: forced dispatch must shard every batched section"
+            );
+            assert!(par.sharded_sections() > 0, "{label}: pool never engaged");
+        }
+    }
+}
+
+#[test]
+fn li_bitwise_parallel_logistic_regression() {
+    let data = synth2d::generate(700, 61);
+    let mut rng = Pcg64::seeded(62);
+    let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+    let cur = trace.fresh_value(w);
+    for step in 0..3 {
+        let new_w = Proposal::Drift(0.2).propose(&cur, &mut rng).unwrap();
+        li_across_thread_counts(&mut trace, w, &new_w, &format!("lr step {step}"));
+    }
+}
+
+#[test]
+fn li_bitwise_parallel_joint_dpm() {
+    let (data, _) = dpm_data::generate(60, 3);
+    let mut rng = Pcg64::seeded(63);
+    let mut trace = build_joint_dpm(&data, &mut rng);
+    let mut checked = 0;
+    for wk in trace.scope_nodes("w") {
+        if trace.cached_partition(wk).is_none() {
+            continue; // singleton cluster: no border
+        }
+        let cur = trace.fresh_value(wk);
+        let new_w = Proposal::Drift(0.3).propose(&cur, &mut rng).unwrap();
+        li_across_thread_counts(&mut trace, wk, &new_w, &format!("dpm w{checked}"));
+        checked += 1;
+    }
+    assert!(checked > 0, "no DPM cluster had a border partition");
+}
+
+#[test]
+fn li_bitwise_parallel_stochastic_volatility() {
+    let cfg = sv_data::SvConfig {
+        series: 8,
+        len: 6,
+        ..Default::default()
+    };
+    let series = sv_data::generate(&cfg, 64);
+    let mut rng = Pcg64::seeded(65);
+    let (mut trace, phi, sig2) = build_sv(&series, &mut rng);
+    for (v, sigma, label) in [(phi, 0.05, "sv/phi"), (sig2, 0.01, "sv/sig2")] {
+        let cur = trace.fresh_value(v);
+        let new_v = Proposal::Drift(sigma).propose(&cur, &mut rng).unwrap();
+        li_across_thread_counts(&mut trace, v, &new_v, label);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 200-transition lockstep with a live pool
+// ---------------------------------------------------------------------
+
+type StepRecord = (bool, usize, Vec<u64>);
+
+fn value_bits(v: &Value) -> Vec<u64> {
+    match v {
+        Value::Real(x) => vec![x.to_bits()],
+        Value::Vector(xs) => xs.iter().map(|x| x.to_bits()).collect(),
+        other => panic!("unexpected principal value {other:?}"),
+    }
+}
+
+fn run_lr_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
+    let data = synth2d::generate(600, 71);
+    let mut rng = Pcg64::seeded(72);
+    let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+    let cfg = SubsampledConfig {
+        m: 50,
+        eps: 0.01,
+        proposal: Proposal::Drift(0.1),
+        exact: false,
+        threads: 1, // inert: the evaluator is passed in explicitly
+    };
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let s = subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, ev).unwrap();
+        out.push((
+            s.accepted,
+            s.sections_evaluated,
+            value_bits(&trace.fresh_value(w)),
+        ));
+    }
+    out
+}
+
+#[test]
+fn lockstep_200_transitions_threads_4() {
+    let mut interp = InterpreterEval;
+    let mut seq = PlannedEval::new();
+    let mut par = parallel_eval(4);
+    let runs = [
+        run_lr_chain(&mut interp, 200),
+        run_lr_chain(&mut seq, 200),
+        run_lr_chain(&mut par, 200),
+    ];
+    for (r, run) in runs.iter().enumerate().skip(1) {
+        for (i, (a, b)) in runs[0].iter().zip(run).enumerate() {
+            assert_eq!(a, b, "evaluator {r} diverged from the oracle at step {i}");
+        }
+    }
+    assert!(
+        runs[0].iter().any(|(acc, _, _)| *acc),
+        "no transition was ever accepted"
+    );
+    assert!(par.sharded_sections() > 0, "pool never engaged over 200 transitions");
+}
+
+// ---------------------------------------------------------------------
+// stale-plan regression: structural churn while the pool is alive
+// ---------------------------------------------------------------------
+
+/// Gibbs transitions re-key mems between clusters (bumping
+/// `structure_version` and invalidating every batch plan) *between*
+/// subsampled transitions scored through the same live pool.  The
+/// parallel evaluator must keep matching the oracle bitwise across
+/// every rebuild — a stale packed binding or slot table would diverge
+/// within a few steps.
+fn run_dpm_churn_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
+    let (data, _) = dpm_data::generate(40, 3);
+    let mut rng = Pcg64::seeded(73);
+    let mut trace = build_joint_dpm(&data, &mut rng);
+    let zs = trace.scope_nodes("z");
+    let cfg = SubsampledConfig {
+        m: 8,
+        eps: 0.01,
+        proposal: Proposal::Drift(0.25),
+        exact: false,
+        threads: 1, // inert: the evaluator is passed in explicitly
+    };
+    let mut out = Vec::with_capacity(steps);
+    for i in 0..steps {
+        gibbs_transition(&mut trace, &mut rng, zs[i % zs.len()]).unwrap();
+        for wk in trace.scope_nodes("w") {
+            let s = subsampled_mh_transition(&mut trace, &mut rng, wk, &cfg, ev).unwrap();
+            out.push((
+                s.accepted,
+                s.sections_evaluated,
+                value_bits(&trace.fresh_value(wk)),
+            ));
+        }
+    }
+    out
+}
+
+#[test]
+fn stale_plan_regression_structure_bump_with_live_pool() {
+    let mut interp = InterpreterEval;
+    // one pool, one evaluator, alive across all the churn
+    let mut par = parallel_eval(4);
+    let oracle = run_dpm_churn_chain(&mut interp, 50);
+    let sharded = run_dpm_churn_chain(&mut par, 50);
+    for (i, (a, b)) in oracle.iter().zip(&sharded).enumerate() {
+        assert_eq!(a, b, "parallel evaluator diverged at step {i} (stale plan?)");
+    }
+    assert!(par.sharded_sections() > 0, "pool never engaged during churn");
+    assert_eq!(par.fallback_sections, 0);
+}
+
+// ---------------------------------------------------------------------
+// multi-chain driver determinism under scheduling
+// ---------------------------------------------------------------------
+
+/// Concurrent chains must reproduce their inline (same-seed) runs
+/// bit-for-bit: the driver hands each chain its own PCG stream and
+/// never shares trace state across workers.
+#[test]
+fn multichain_matches_inline_runs() {
+    use subppl::coordinator::multichain::{chain_rng, run_chains};
+    let chain = |_c: usize, mut rng: Pcg64| -> Vec<u64> {
+        let data = synth2d::generate(150, 81);
+        let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+        let cfg = SubsampledConfig {
+            m: 30,
+            eps: 0.01,
+            proposal: Proposal::Drift(0.15),
+            exact: false,
+            threads: 1,
+        };
+        let mut ev = PlannedEval::new();
+        let mut bits = Vec::new();
+        for _ in 0..40 {
+            subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, &mut ev).unwrap();
+            bits.extend(value_bits(&trace.fresh_value(w)));
+        }
+        bits
+    };
+    let pool: Arc<WorkerPool> = WorkerPool::new(4);
+    let parallel = run_chains(&pool, 4, 17, chain).unwrap();
+    for (c, got) in parallel.iter().enumerate() {
+        let want = chain(c, chain_rng(17, c));
+        assert_eq!(got, &want, "chain {c} diverged from its inline run");
+    }
+}
