@@ -1,0 +1,182 @@
+#!/usr/bin/env python3
+"""Validate BENCH_hotpath.json against its expected schema.
+
+The perf-trajectory artifact is uploaded from every bench run; this
+gate makes sure it is actually well-formed before it lands — a bench
+refactor that drops a column (or emits NaN/absent self-checks) would
+otherwise silently produce an artifact that breaks trajectory tooling
+weeks later.
+
+Usage:
+    python3 scripts/check_bench.py ../BENCH_hotpath.json [--full]
+
+--full additionally requires the N=1e5 sweep row (the nightly bench;
+the PR smoke pass runs --quick, which stops at N=1e4).
+
+Exit status 0 on success, 1 with a readable report on any violation.
+Stdlib only.
+"""
+
+import json
+import math
+import sys
+
+SWEEP_SCALAR_KEYS = {
+    "n": int,
+    "d": int,
+    "m": int,
+    "interpreter_sections_per_sec": float,
+    "planned_sections_per_sec": float,
+    "batched_sections_per_sec": float,
+    "speedup": float,
+    "batched_over_planned": float,
+    "parallel_m": int,
+    "parallel_t4_over_t1": float,
+}
+THREAD_KEYS = ("t1", "t2", "t4")
+REQUIRED_NS = {1_000, 10_000}
+FULL_NS = {100_000}
+
+# every micro bench the hotpath driver records, so a silently dropped
+# metric fails here rather than disappearing from the trajectory
+MICRO_KEYS = {
+    "build_partition",
+    "interpreter_eval_sections_m100",
+    "planned_eval_sections_m100",
+    "batched_eval_sections_m100",
+    "sparse_sampler_100_draws",
+    "subsampled_transition_batched",
+    "subsampled_transition_planned",
+    "subsampled_transition_interpreter",
+    "exact_full_scan_transition",
+    "exact_full_scan_transition_batched",
+    "exact_mh_3_node",
+    "enumerative_gibbs_branch_flip",
+}
+
+SELF_CHECK_KEYS = {
+    "planned_not_below_interpreter",
+    "batched_not_below_planned",
+    "batched_wins_at_1e5",
+    "t4_not_below_t1",
+    "t4_speedup_1p5x_at_1e5",
+}
+
+errors = []
+
+
+def err(msg):
+    errors.append(msg)
+
+
+def positive_finite(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool) \
+        and math.isfinite(x) and x > 0
+
+
+def check_sweep_row(i, row):
+    for key, kind in SWEEP_SCALAR_KEYS.items():
+        if key not in row:
+            err(f"scorer_sweep[{i}]: missing column {key!r}")
+            continue
+        v = row[key]
+        if kind is int and not (isinstance(v, int) and not isinstance(v, bool)):
+            err(f"scorer_sweep[{i}].{key}: expected integer, got {v!r}")
+        elif not positive_finite(v):
+            err(f"scorer_sweep[{i}].{key}: expected positive finite number, got {v!r}")
+    par = row.get("parallel_sections_per_sec")
+    if not isinstance(par, dict):
+        err(f"scorer_sweep[{i}]: missing parallel_sections_per_sec object")
+        return
+    for t in THREAD_KEYS:
+        if t not in par:
+            err(f"scorer_sweep[{i}].parallel_sections_per_sec: missing thread column {t!r}")
+        elif not positive_finite(par[t]):
+            err(
+                f"scorer_sweep[{i}].parallel_sections_per_sec.{t}: "
+                f"expected positive finite number, got {par[t]!r}"
+            )
+    extra = set(par) - set(THREAD_KEYS)
+    if extra:
+        err(f"scorer_sweep[{i}].parallel_sections_per_sec: unexpected keys {sorted(extra)}")
+
+
+def check_self_checks(checks):
+    for name in sorted(SELF_CHECK_KEYS):
+        if name not in checks:
+            err(f"self_checks: missing {name!r}")
+            continue
+        v = checks[name]
+        if v is True:
+            continue
+        if isinstance(v, str) and v.startswith("skipped"):
+            continue  # core-count / quick-sweep gated checks may skip
+        err(f"self_checks.{name}: expected true or 'skipped: ...', got {v!r}")
+    extra = set(checks) - SELF_CHECK_KEYS
+    if extra:
+        err(f"self_checks: unexpected keys {sorted(extra)}")
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    full = "--full" in argv[1:]
+    if len(args) != 1:
+        print(__doc__, file=sys.stderr)
+        return 1
+    path = args[0]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        print(f"check_bench: {path} not found (did the bench run?)", file=sys.stderr)
+        return 1
+    except json.JSONDecodeError as e:
+        print(f"check_bench: {path} is not valid JSON: {e}", file=sys.stderr)
+        return 1
+
+    if doc.get("bench") != "hotpath":
+        err(f"bench: expected 'hotpath', got {doc.get('bench')!r}")
+    if doc.get("workload") != "bayes_lr":
+        err(f"workload: expected 'bayes_lr', got {doc.get('workload')!r}")
+
+    sweep = doc.get("scorer_sweep")
+    if not isinstance(sweep, list) or not sweep:
+        err("scorer_sweep: missing or empty")
+        sweep = []
+    for i, row in enumerate(sweep):
+        check_sweep_row(i, row)
+    ns = {row.get("n") for row in sweep}
+    want = REQUIRED_NS | (FULL_NS if full else set())
+    missing = want - ns
+    if missing:
+        err(f"scorer_sweep: missing rows for N in {sorted(missing)} (have {sorted(ns)})")
+
+    micro = doc.get("micro_us")
+    if not isinstance(micro, dict):
+        err("micro_us: missing")
+    else:
+        for key in sorted(MICRO_KEYS - set(micro)):
+            err(f"micro_us: missing {key!r}")
+        for key, v in micro.items():
+            if not positive_finite(v):
+                err(f"micro_us.{key}: expected positive finite number, got {v!r}")
+
+    checks = doc.get("self_checks")
+    if not isinstance(checks, dict):
+        err("self_checks: missing (bench predates the self-describing artifact?)")
+    else:
+        check_self_checks(checks)
+
+    if errors:
+        print(f"check_bench: {path} FAILED {len(errors)} check(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    n_rows = len(sweep)
+    print(f"check_bench: {path} ok ({n_rows} sweep rows, N = {sorted(ns)}, "
+          f"{len(doc.get('micro_us', {}))} micro metrics, self-checks clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -11,6 +11,8 @@
 //! | Fig. 9  | `fig9_sv` | SV posterior hists + autocorr + ESS/s |
 
 use crate::coordinator::chain::{build_bayes_lr, build_joint_dpm, build_sv};
+use crate::coordinator::monitor::{ConvergenceMonitor, DiagSnapshot};
+use crate::coordinator::multichain::ChainSink;
 use crate::coordinator::report::{histogram, Csv};
 use crate::data::{dpm_data, mnist_like, sv_data, synth2d, Dataset};
 use crate::infer::{
@@ -271,6 +273,7 @@ pub fn fig4_curve(
         eps,
         proposal: Proposal::Drift(cfg.sigma),
         exact,
+        threads: 0,
     };
     let mut acc = PredictiveAccumulator::new(test.n());
     let mut points = Vec::new();
@@ -549,6 +552,18 @@ pub struct Fig9Result {
 }
 
 pub fn fig9_sv(cfg: &Fig9Config, subsampled: bool) -> Fig9Result {
+    fig9_sv_monitored(cfg, subsampled, None)
+}
+
+/// [`fig9_sv`] with an optional [`ChainSink`]: when monitored, every
+/// sweep's (phi, sigma) draw is streamed to the convergence monitor in
+/// small batches.  The sink is write-only, so the monitored run's
+/// samples are bitwise identical to the unmonitored run's.
+pub fn fig9_sv_monitored(
+    cfg: &Fig9Config,
+    subsampled: bool,
+    sink: Option<&ChainSink>,
+) -> Fig9Result {
     let data_cfg = sv_data::SvConfig {
         series: cfg.series,
         len: cfg.len,
@@ -567,6 +582,8 @@ pub fn fig9_sv(cfg: &Fig9Config, subsampled: bool) -> Fig9Result {
     let mut ev = PlannedEval::for_config(&kcfg);
     let mut phi_samples = Vec::with_capacity(cfg.sweeps);
     let mut sig_samples = Vec::with_capacity(cfg.sweeps);
+    // 16 rows per channel send; BufferedSink flushes the tail on drop
+    let mut buf = sink.map(|s| s.clone().buffered(16));
     let t0 = Instant::now();
     let blocks: Vec<Value> = (1..=cfg.len as i64).map(Value::Int).collect();
     for _ in 0..cfg.sweeps {
@@ -585,9 +602,15 @@ pub fn fig9_sv(cfg: &Fig9Config, subsampled: bool) -> Fig9Result {
         // (subsampled_mh sig2 ...) (subsampled_mh phi ...)
         subsampled_mh_transition(&mut trace, &mut rng, sig2, &kcfg, &mut ev).unwrap();
         subsampled_mh_transition(&mut trace, &mut rng, phi, &kcfg, &mut ev).unwrap();
-        phi_samples.push(trace.fresh_value(phi).as_f64().unwrap());
-        sig_samples.push(trace.fresh_value(sig2).as_f64().unwrap().sqrt());
+        let phi_v = trace.fresh_value(phi).as_f64().unwrap();
+        let sig_v = trace.fresh_value(sig2).as_f64().unwrap().sqrt();
+        phi_samples.push(phi_v);
+        sig_samples.push(sig_v);
+        if let Some(b) = buf.as_mut() {
+            b.push(vec![phi_v, sig_v]);
+        }
     }
+    drop(buf); // flush the tail before the result is reported
     let seconds = t0.elapsed().as_secs_f64();
     Fig9Result {
         label: if subsampled {
@@ -614,14 +637,55 @@ pub fn fig9_repeated(
     subsampled: bool,
     trials: usize,
 ) -> Result<Vec<Fig9Result>, String> {
+    fig9_repeated_monitored(cfg, subsampled, trials, 0).map(|(rs, _)| rs)
+}
+
+/// [`fig9_repeated`] with streaming convergence diagnostics: when
+/// `monitor_every > 0`, every trial streams its per-sweep (phi, sigma)
+/// draws over the ChainEvent lane, and the returned snapshots record
+/// split-R̂ / rank-R̂ / ESS across trials at every `monitor_every`-sweep
+/// boundary (plus the end-of-run snapshot).  Snapshot contents are
+/// deterministic in the seed — the monitor folds chains by index over
+/// fixed prefixes — and trial results are bitwise identical to the
+/// unmonitored run's.
+pub fn fig9_repeated_monitored(
+    cfg: &Fig9Config,
+    subsampled: bool,
+    trials: usize,
+    monitor_every: usize,
+) -> Result<(Vec<Fig9Result>, Vec<DiagSnapshot>), String> {
     let base = cfg.clone();
-    crate::coordinator::multichain::run_chains_global(trials, cfg.seed, move |c, _rng| {
+    let chain = move |c: usize, sink: Option<ChainSink>| -> Fig9Result {
         // fig9_sv derives all of its randomness from cfg.seed, so each
         // trial just gets a distinct seed
         let mut cfg = base.clone();
         cfg.seed = base.seed.wrapping_add(1 + c as u64);
-        fig9_sv(&cfg, subsampled)
-    })
+        fig9_sv_monitored(&cfg, subsampled, sink.as_ref())
+    };
+    if monitor_every == 0 {
+        let rs = crate::coordinator::multichain::run_chains_global(
+            trials,
+            cfg.seed,
+            move |c, _rng| chain(c, None),
+        )?;
+        return Ok((rs, Vec::new()));
+    }
+    let params = vec!["phi".to_string(), "sigma".to_string()];
+    let mut mon = ConvergenceMonitor::new(trials, &params, monitor_every);
+    let mut snaps = Vec::new();
+    let rs = crate::coordinator::multichain::run_chains_monitored(
+        crate::runtime::pool::WorkerPool::global(),
+        trials,
+        cfg.seed,
+        move |c, _rng, sink| chain(c, Some(sink)),
+        |ev| {
+            mon.absorb(ev);
+            snaps.extend(mon.ready_snapshots());
+        },
+    )?;
+    // end-of-run snapshot when the sweep count isn't a boundary multiple
+    snaps.extend(mon.finish());
+    Ok((rs, snaps))
 }
 
 // ---------------------------------------------------------------------
@@ -907,6 +971,39 @@ mod tests {
         assert_eq!(r.phi_samples.len(), 10);
         assert!(r.phi_samples.iter().all(|p| (0.0..=1.0).contains(p)));
         assert!(r.sig_samples.iter().all(|s| *s > 0.0));
+    }
+
+    #[test]
+    fn fig9_repeated_monitored_smoke() {
+        let cfg = Fig9Config {
+            series: 3,
+            len: 3,
+            sweeps: 12,
+            particles: 4,
+            h_per_param: 1,
+            ..Default::default()
+        };
+        let (rs, snaps) = fig9_repeated_monitored(&cfg, true, 2, 5).unwrap();
+        assert_eq!(rs.len(), 2);
+        // boundaries at 5 and 10 sweeps, plus the end-of-run snapshot
+        assert_eq!(
+            snaps.iter().map(|s| s.draws_per_chain).collect::<Vec<_>>(),
+            vec![5, 10, 12]
+        );
+        for s in &snaps {
+            assert_eq!(s.chains, 2);
+            let names: Vec<&str> = s.params.iter().map(|p| p.name.as_str()).collect();
+            assert_eq!(names, vec!["phi", "sigma"]);
+        }
+        // the sink is write-only: monitored trials must reproduce the
+        // unmonitored ones bit-for-bit
+        let plain = fig9_repeated(&cfg, true, 2).unwrap();
+        for (a, b) in rs.iter().zip(&plain) {
+            let bits =
+                |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a.phi_samples), bits(&b.phi_samples));
+            assert_eq!(bits(&a.sig_samples), bits(&b.sig_samples));
+        }
     }
 
     #[test]

@@ -1,15 +1,19 @@
 //! Experiment coordination: model builders, the XLA-fused section
-//! evaluator, the concurrent multi-chain driver, and reporting
-//! (tables/CSV) for regenerating every figure and table in the paper's
-//! evaluation.
+//! evaluator, the concurrent multi-chain driver with its streaming
+//! convergence monitor, and reporting (tables/CSV) for regenerating
+//! every figure and table in the paper's evaluation.
 
 pub mod chain;
 pub mod experiments;
 pub mod fused;
+pub mod monitor;
 pub mod multichain;
 pub mod report;
 
 pub use chain::{build_bayes_lr, build_joint_dpm, build_sv, timed};
 pub use fused::FusedEval;
-pub use multichain::{chain_rng, run_chains, run_chains_global};
+pub use monitor::{monitor_csv, ChainEvent, ConvergenceMonitor, DiagSnapshot, ParamDiag};
+pub use multichain::{
+    chain_rng, run_chains, run_chains_global, run_chains_monitored, BufferedSink, ChainSink,
+};
 pub use report::{histogram, results_dir, Csv, Table};

@@ -1,0 +1,391 @@
+//! Streaming multi-chain convergence monitor.
+//!
+//! Approximate transitions perturb the stationary distribution (§3.3 of
+//! the paper bounds the perturbation but cannot see a stuck chain), so
+//! any long subsampled run wants *online* convergence evidence rather
+//! than end-of-run summaries.  The pieces:
+//!
+//! * chains running on the worker pool stream recorded draws through a
+//!   [`ChainSink`] (the `ChainEvent` lane of
+//!   `coordinator::multichain::run_chains_monitored`);
+//! * the dispatching thread folds every event into this
+//!   [`ConvergenceMonitor`] — per-chain, per-parameter accumulators
+//!   keyed by *chain index*;
+//! * whenever every chain has crossed the next `every`-draw boundary,
+//!   the monitor emits a [`DiagSnapshot`]: split-R̂, rank-normalized R̂
+//!   (Vehtari et al. 2021), and Geyer ESS per watched parameter
+//!   (`stats::diagnostics`).
+//!
+//! # Determinism
+//!
+//! Chains report concurrently, so the *arrival order* of events is
+//! scheduling-dependent — but snapshot contents are not: accumulators
+//! are keyed by chain index, every snapshot is computed over exactly the
+//! first `k * every` draws of *each* chain (reduced in chain-index
+//! order), and boundaries only fire once the slowest chain has reached
+//! them.  `tests/monitor.rs` pins snapshot bit-equality across reruns
+//! and against a sequential fold of the same draws, and
+//! `tests/parallel.rs` pins that monitoring never perturbs the chains
+//! themselves (the sink is write-only).
+
+use crate::coordinator::report::Csv;
+use crate::stats::{ess_lazy, rank_normalized_rhat, split_rhat};
+use std::fmt::Write as _;
+
+/// A batch of recorded draws from one chain: `draws[s][p]` is the value
+/// of watched parameter `p` at recorded sample `s`.  Produced by a
+/// [`ChainSink`](crate::coordinator::multichain::ChainSink), consumed by
+/// [`ConvergenceMonitor::absorb`].
+#[derive(Clone, Debug)]
+pub struct ChainEvent {
+    pub chain: usize,
+    pub draws: Vec<Vec<f64>>,
+}
+
+/// One parameter's diagnostics within a snapshot.
+#[derive(Clone, Debug)]
+pub struct ParamDiag {
+    pub name: String,
+    /// Pooled posterior mean over the snapshot window.
+    pub mean: f64,
+    /// Split-R̂ over the per-chain prefixes.
+    pub rhat: f64,
+    /// Rank-normalized split-R̂ (robust to heavy tails).
+    pub rank_rhat: f64,
+    /// Total effective sample size (sum of per-chain Geyer ESS).
+    pub ess: f64,
+}
+
+/// Periodic diagnostics row: every watched parameter's convergence
+/// state over the first `draws_per_chain` draws of each of `chains`
+/// chains.
+#[derive(Clone, Debug)]
+pub struct DiagSnapshot {
+    pub draws_per_chain: usize,
+    pub chains: usize,
+    pub params: Vec<ParamDiag>,
+}
+
+impl DiagSnapshot {
+    /// One console line per snapshot, e.g.
+    /// `[monitor] n=200/chain  phi: R-hat=1.012 rank=1.009 ESS=312.4  sigma: ...`.
+    pub fn render(&self) -> String {
+        let mut out = format!("[monitor] n={}/chain", self.draws_per_chain);
+        for p in &self.params {
+            let _ = write!(
+                out,
+                "  {}: R-hat={:.3} rank={:.3} ESS={:.1}",
+                p.name, p.rhat, p.rank_rhat, p.ess
+            );
+        }
+        out
+    }
+
+    /// Worst (largest) R̂ across parameters, taking the rank-normalized
+    /// variant into account — the single number to gate on.  NaN
+    /// poisons the result (a parameter that produced no usable draws
+    /// must never read as converged).
+    pub fn max_rhat(&self) -> f64 {
+        let mut worst = f64::NEG_INFINITY;
+        for p in &self.params {
+            for r in [p.rhat, p.rank_rhat] {
+                if r.is_nan() {
+                    return f64::NAN;
+                }
+                worst = worst.max(r);
+            }
+        }
+        worst
+    }
+}
+
+/// CSV of labeled snapshot sequences (one row per snapshot x
+/// parameter), for experiment artifacts like `fig9_monitor.csv` where
+/// several methods' monitor trajectories land in one file.
+pub fn monitor_csv(groups: &[(&str, &[DiagSnapshot])]) -> Csv {
+    let mut csv = Csv::new(&[
+        "run",
+        "draws_per_chain",
+        "chains",
+        "param",
+        "mean",
+        "rhat",
+        "rank_rhat",
+        "ess",
+    ]);
+    for (label, snaps) in groups {
+        for s in *snaps {
+            for p in &s.params {
+                csv.row(&[
+                    label.to_string(),
+                    s.draws_per_chain.to_string(),
+                    s.chains.to_string(),
+                    p.name.clone(),
+                    p.mean.to_string(),
+                    p.rhat.to_string(),
+                    p.rank_rhat.to_string(),
+                    p.ess.to_string(),
+                ]);
+            }
+        }
+    }
+    csv
+}
+
+/// Online fold of [`ChainEvent`]s into periodic [`DiagSnapshot`]s.
+pub struct ConvergenceMonitor {
+    every: usize,
+    params: Vec<String>,
+    /// `draws[chain][param]` — all draws recorded so far, keyed by chain
+    /// index so fold order never depends on event arrival order.
+    draws: Vec<Vec<Vec<f64>>>,
+    /// Next per-chain draw count at which a snapshot fires.
+    next_boundary: usize,
+    /// Horizon of the last snapshot handed out (boundary or final), so
+    /// [`finish`](Self::finish) never duplicates the last boundary.
+    last_emitted: usize,
+}
+
+impl ConvergenceMonitor {
+    /// Monitor `chains` chains over the named parameters, snapshotting
+    /// every `every` draws per chain (`every >= 1`).
+    pub fn new(chains: usize, params: &[String], every: usize) -> ConvergenceMonitor {
+        assert!(every >= 1, "monitor cadence must be >= 1");
+        assert!(!params.is_empty(), "monitor needs at least one parameter");
+        ConvergenceMonitor {
+            every,
+            params: params.to_vec(),
+            draws: vec![vec![Vec::new(); params.len()]; chains],
+            next_boundary: every,
+            last_emitted: 0,
+        }
+    }
+
+    pub fn params(&self) -> &[String] {
+        &self.params
+    }
+
+    /// Fold one event into the per-chain accumulators.  Rows must have
+    /// one value per watched parameter; mismatched rows are rejected so
+    /// a miswired sink fails loudly rather than skewing diagnostics.
+    pub fn absorb(&mut self, ev: ChainEvent) {
+        let slot = &mut self.draws[ev.chain];
+        for row in &ev.draws {
+            assert_eq!(
+                row.len(),
+                self.params.len(),
+                "chain {} sent a row of {} values for {} watched parameters",
+                ev.chain,
+                row.len(),
+                self.params.len()
+            );
+            for (p, &x) in row.iter().enumerate() {
+                slot[p].push(x);
+            }
+        }
+    }
+
+    /// Draws recorded so far by the slowest chain — the snapshot
+    /// horizon.
+    pub fn min_len(&self) -> usize {
+        self.draws
+            .iter()
+            .map(|c| c[0].len())
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Snapshots whose boundary every chain has now crossed, in
+    /// boundary order.  Call after each `absorb`; a batch that jumps
+    /// several boundaries yields several snapshots.
+    pub fn ready_snapshots(&mut self) -> Vec<DiagSnapshot> {
+        let mut out = Vec::new();
+        while self.min_len() >= self.next_boundary {
+            out.push(self.snapshot_at(self.next_boundary));
+            self.last_emitted = self.next_boundary;
+            self.next_boundary += self.every;
+        }
+        out
+    }
+
+    /// The end-of-run snapshot: diagnostics over the first `min_len`
+    /// draws of every chain, when that horizon wasn't already emitted
+    /// as a boundary snapshot.  `None` until every chain has at least 4
+    /// draws (or when the run ended exactly on the last boundary) —
+    /// every call site wants exactly this dedup, so it lives here.
+    pub fn finish(&mut self) -> Option<DiagSnapshot> {
+        let n = self.min_len();
+        if n < 4 || n == self.last_emitted {
+            return None;
+        }
+        self.last_emitted = n;
+        Some(self.snapshot_at(n))
+    }
+
+    /// Fold-order-normalized reduction: chains enter in index order,
+    /// truncated to exactly the first `n` draws each, so the result is a
+    /// pure function of (chain contents, n).
+    fn snapshot_at(&self, n: usize) -> DiagSnapshot {
+        let params = self
+            .params
+            .iter()
+            .enumerate()
+            .map(|(p, name)| {
+                let series: Vec<&[f64]> =
+                    self.draws.iter().map(|c| &c[p][..n]).collect();
+                let total: f64 = series.iter().map(|s| s.iter().sum::<f64>()).sum();
+                let ess = series.iter().map(|s| ess_lazy(s)).sum();
+                ParamDiag {
+                    name: name.clone(),
+                    mean: total / (n * series.len()) as f64,
+                    rhat: split_rhat(&series),
+                    rank_rhat: rank_normalized_rhat(&series),
+                    ess,
+                }
+            })
+            .collect();
+        DiagSnapshot {
+            draws_per_chain: n,
+            chains: self.draws.len(),
+            params,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Pcg64;
+
+    fn event(chain: usize, rows: &[[f64; 2]]) -> ChainEvent {
+        ChainEvent {
+            chain,
+            draws: rows.iter().map(|r| r.to_vec()).collect(),
+        }
+    }
+
+    #[test]
+    fn boundaries_fire_only_when_every_chain_crosses() {
+        let names = vec!["a".to_string(), "b".to_string()];
+        let mut mon = ConvergenceMonitor::new(2, &names, 4);
+        let mut rng = Pcg64::seeded(7);
+        let mut rows = |k: usize| -> Vec<[f64; 2]> {
+            (0..k).map(|_| [rng.normal(), rng.normal()]).collect()
+        };
+        mon.absorb(event(0, &rows(10)));
+        // chain 1 hasn't reported: nothing fires
+        assert!(mon.ready_snapshots().is_empty());
+        assert!(mon.finish().is_none());
+        mon.absorb(event(1, &rows(5)));
+        // min is now 5: the n=4 boundary fires, n=8 doesn't
+        let snaps = mon.ready_snapshots();
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].draws_per_chain, 4);
+        assert_eq!(snaps[0].chains, 2);
+        assert_eq!(snaps[0].params.len(), 2);
+        // one batch can cross several boundaries at once
+        mon.absorb(event(1, &rows(8)));
+        let snaps = mon.ready_snapshots();
+        assert_eq!(
+            snaps.iter().map(|s| s.draws_per_chain).collect::<Vec<_>>(),
+            vec![8]
+        );
+        mon.absorb(event(0, &rows(6)));
+        let snaps = mon.ready_snapshots();
+        assert_eq!(
+            snaps.iter().map(|s| s.draws_per_chain).collect::<Vec<_>>(),
+            vec![12]
+        );
+        // min is 13, one past the emitted boundary: finish() emits it
+        // once and only once
+        let fin = mon.finish().unwrap();
+        assert_eq!(fin.draws_per_chain, 13);
+        assert!(mon.finish().is_none(), "finish() must not re-emit");
+        // a run ending exactly on a boundary yields no extra snapshot
+        mon.absorb(event(0, &rows(3)));
+        mon.absorb(event(1, &rows(3)));
+        assert_eq!(mon.ready_snapshots().len(), 1); // boundary 16
+        assert!(mon.finish().is_none(), "boundary-aligned end re-emitted");
+    }
+
+    /// Arrival order must not matter: the same draws delivered in
+    /// scrambled chain order produce bit-identical snapshots.
+    #[test]
+    fn fold_order_normalized_by_chain_index() {
+        let names = vec!["x".to_string()];
+        let mut rng = Pcg64::seeded(8);
+        let chains: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..40).map(|_| rng.normal()).collect())
+            .collect();
+        let ev = |c: usize, lo: usize, hi: usize| ChainEvent {
+            chain: c,
+            draws: chains[c][lo..hi].iter().map(|&x| vec![x]).collect(),
+        };
+        // in-order delivery
+        let mut a = ConvergenceMonitor::new(3, &names, 10);
+        let mut a_snaps = Vec::new();
+        for c in 0..3 {
+            a.absorb(ev(c, 0, 40));
+            a_snaps.extend(a.ready_snapshots());
+        }
+        // interleaved, reversed delivery in odd-sized batches
+        let mut b = ConvergenceMonitor::new(3, &names, 10);
+        let mut b_snaps = Vec::new();
+        for (c, lo, hi) in [
+            (2, 0, 7),
+            (0, 0, 33),
+            (1, 0, 40),
+            (2, 7, 40),
+            (0, 33, 40),
+        ] {
+            b.absorb(ev(c, lo, hi));
+            b_snaps.extend(b.ready_snapshots());
+        }
+        assert_eq!(a_snaps.len(), 4);
+        assert_eq!(a_snaps.len(), b_snaps.len());
+        for (s, t) in a_snaps.iter().zip(&b_snaps) {
+            assert_eq!(s.draws_per_chain, t.draws_per_chain);
+            for (p, q) in s.params.iter().zip(&t.params) {
+                assert_eq!(p.rhat.to_bits(), q.rhat.to_bits());
+                assert_eq!(p.rank_rhat.to_bits(), q.rank_rhat.to_bits());
+                assert_eq!(p.ess.to_bits(), q.ess.to_bits());
+                assert_eq!(p.mean.to_bits(), q.mean.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_flags_a_stuck_chain() {
+        let names = vec!["x".to_string()];
+        let mut mon = ConvergenceMonitor::new(2, &names, 200);
+        let mut rng = Pcg64::seeded(9);
+        let healthy: Vec<Vec<f64>> = (0..200).map(|_| vec![rng.normal()]).collect();
+        let stuck: Vec<Vec<f64>> =
+            (0..200).map(|_| vec![6.0 + 0.01 * rng.normal()]).collect();
+        mon.absorb(ChainEvent { chain: 0, draws: healthy });
+        mon.absorb(ChainEvent { chain: 1, draws: stuck });
+        let snaps = mon.ready_snapshots();
+        assert_eq!(snaps.len(), 1);
+        let s = &snaps[0];
+        assert!(s.max_rhat() > 2.0, "stuck chain not flagged: {}", s.max_rhat());
+        let line = s.render();
+        assert!(line.contains("[monitor] n=200/chain"), "{line}");
+        assert!(line.contains("x: R-hat="), "{line}");
+    }
+
+    #[test]
+    fn monitor_csv_has_a_row_per_param() {
+        let names = vec!["a".to_string(), "b".to_string()];
+        let mut mon = ConvergenceMonitor::new(1, &names, 8);
+        let mut rng = Pcg64::seeded(10);
+        let rows: Vec<Vec<f64>> =
+            (0..16).map(|_| vec![rng.normal(), rng.normal()]).collect();
+        mon.absorb(ChainEvent { chain: 0, draws: rows });
+        let snaps = mon.ready_snapshots();
+        assert_eq!(snaps.len(), 2);
+        let csv = monitor_csv(&[("smoke", snaps.as_slice())]);
+        assert_eq!(csv.contents().lines().count(), 1 + 2 * 2);
+        assert!(csv.contents().starts_with("run,draws_per_chain,chains,param,"));
+        assert!(csv.contents().lines().nth(1).unwrap().starts_with("smoke,8,1,a,"));
+    }
+}

@@ -17,10 +17,19 @@
 //!
 //! Do not call [`run_chains`] from *inside* a pool task: the driver
 //! blocks on its chains and a 1-thread pool would deadlock.
+//!
+//! [`run_chains_monitored`] adds a *ChainEvent lane*: each chain gets a
+//! [`ChainSink`] through which it streams recorded draws while running,
+//! and the dispatching thread folds those events (typically into a
+//! [`ConvergenceMonitor`](crate::coordinator::monitor::ConvergenceMonitor))
+//! between result arrivals.  The lane is write-only from the chain's
+//! point of view, so monitoring cannot perturb chain results — pinned by
+//! `tests/monitor.rs`.
 
+use crate::coordinator::monitor::ChainEvent;
 use crate::math::Pcg64;
 use crate::runtime::pool::WorkerPool;
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
 /// RNG stream offset for chain replicas, keeping them disjoint from the
@@ -84,6 +93,158 @@ where
     run_chains(WorkerPool::global(), chains, seed, f)
 }
 
+/// Messages on the event lane: draw batches while a chain runs, one
+/// `Done` marker when it finishes.  mpsc preserves per-sender order, so
+/// every event a chain sent precedes its own `Done`.
+enum MonitorMsg {
+    Event(ChainEvent),
+    Done,
+}
+
+/// A chain's handle on the event lane of [`run_chains_monitored`]:
+/// write-only, clonable, and fire-and-forget (a dropped receiver means
+/// the driver already bailed — sends are silently discarded, never an
+/// error the chain has to handle).
+#[derive(Clone)]
+pub struct ChainSink {
+    chain: usize,
+    tx: Sender<MonitorMsg>,
+}
+
+impl ChainSink {
+    /// The chain index this sink reports as.
+    pub fn chain(&self) -> usize {
+        self.chain
+    }
+
+    /// Stream a batch of recorded draws (`rows[s][p]` = watched
+    /// parameter `p` at recorded sample `s`).  Empty batches are
+    /// dropped.
+    pub fn send(&self, rows: Vec<Vec<f64>>) {
+        if rows.is_empty() {
+            return;
+        }
+        let _ = self.tx.send(MonitorMsg::Event(ChainEvent {
+            chain: self.chain,
+            draws: rows,
+        }));
+    }
+
+    /// Wrap this sink in a row buffer that flushes every `cap` rows and
+    /// on drop — the one place the batching-with-trailing-flush pattern
+    /// lives, so call sites cannot forget the tail rows.
+    pub fn buffered(self, cap: usize) -> BufferedSink {
+        BufferedSink {
+            sink: self,
+            cap: cap.max(1),
+            rows: Vec::new(),
+        }
+    }
+}
+
+/// Row-buffering wrapper over a [`ChainSink`] (see
+/// [`ChainSink::buffered`]): amortizes the channel send over `cap`
+/// recorded rows, and the `Drop` impl flushes whatever is pending, so
+/// the monitor always sees every recorded draw.
+pub struct BufferedSink {
+    sink: ChainSink,
+    cap: usize,
+    rows: Vec<Vec<f64>>,
+}
+
+impl BufferedSink {
+    /// Record one row of watched-parameter values.
+    pub fn push(&mut self, row: Vec<f64>) {
+        self.rows.push(row);
+        if self.rows.len() >= self.cap {
+            self.flush();
+        }
+    }
+
+    /// Send everything buffered so far (also runs on drop).
+    pub fn flush(&mut self) {
+        self.sink.send(std::mem::take(&mut self.rows));
+    }
+}
+
+impl Drop for BufferedSink {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// [`run_chains`] with a streaming event lane: `f(index, rng, sink)`
+/// additionally receives a [`ChainSink`] and may stream recorded draws
+/// through it at any point; the dispatching thread calls `on_event` for
+/// every batch (in arrival order) while it waits for chains to finish.
+/// Chain results are returned in chain order exactly as `run_chains`
+/// does, and are unaffected by the sink — it carries copies out, never
+/// state in.
+///
+/// `on_event` runs on the *calling* thread, so it can borrow local
+/// mutable state (a `ConvergenceMonitor`, a progress printer) without
+/// any `Send` bound.
+pub fn run_chains_monitored<T, F, E>(
+    pool: &Arc<WorkerPool>,
+    chains: usize,
+    seed: u64,
+    f: F,
+    mut on_event: E,
+) -> Result<Vec<T>, String>
+where
+    T: Send + 'static,
+    F: Fn(usize, Pcg64, ChainSink) -> T + Send + Sync + 'static,
+    E: FnMut(ChainEvent),
+{
+    if chains == 0 {
+        return Ok(Vec::new());
+    }
+    let f = Arc::new(f);
+    let (rtx, rrx) = channel::<(usize, T)>();
+    let (etx, erx) = channel::<MonitorMsg>();
+    for c in 0..chains {
+        let f = f.clone();
+        let rtx = rtx.clone();
+        let etx = etx.clone();
+        pool.submit(Box::new(move || {
+            let sink = ChainSink {
+                chain: c,
+                tx: etx.clone(),
+            };
+            let out = f(c, chain_rng(seed, c), sink);
+            // result first, then the Done marker: by the time the driver
+            // has seen every Done, every result is already in flight
+            let _ = rtx.send((c, out));
+            let _ = etx.send(MonitorMsg::Done);
+        }));
+    }
+    drop(rtx);
+    drop(etx);
+    let mut done = 0usize;
+    while done < chains {
+        match erx.recv() {
+            Ok(MonitorMsg::Event(ev)) => on_event(ev),
+            Ok(MonitorMsg::Done) => done += 1,
+            // all event senders dropped before every chain reported: a
+            // chain panicked (its catch_unwind dropped the senders)
+            Err(_) => return Err("multichain: a chain worker panicked".into()),
+        }
+    }
+    // per-sender FIFO means no events can trail a chain's own Done, but
+    // a clone held by a still-unwinding closure costs nothing to drain
+    while let Ok(MonitorMsg::Event(ev)) = erx.try_recv() {
+        on_event(ev);
+    }
+    let mut slots: Vec<Option<T>> = (0..chains).map(|_| None).collect();
+    for _ in 0..chains {
+        match rrx.recv() {
+            Ok((c, out)) => slots[c] = Some(out),
+            Err(_) => return Err("multichain: a chain worker panicked".into()),
+        }
+    }
+    Ok(slots.into_iter().map(|s| s.expect("chain reported")).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,6 +276,105 @@ mod tests {
             c
         });
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn monitored_chains_stream_events_and_return_in_order() {
+        let pool = WorkerPool::new(3);
+        let mut per_chain_rows = vec![0usize; 4];
+        let results = run_chains_monitored(
+            &pool,
+            4,
+            23,
+            |c, mut rng, sink| {
+                let mut last = 0.0;
+                for _ in 0..3 {
+                    let rows: Vec<Vec<f64>> = (0..5)
+                        .map(|_| {
+                            last = rng.normal();
+                            vec![last]
+                        })
+                        .collect();
+                    sink.send(rows);
+                }
+                sink.send(Vec::new()); // empty batches are dropped
+                (c, last)
+            },
+            |ev| {
+                for row in &ev.draws {
+                    assert_eq!(row.len(), 1);
+                }
+                per_chain_rows[ev.chain] += ev.draws.len();
+            },
+        )
+        .unwrap();
+        // every chain's 15 draws arrived, results in chain order
+        assert_eq!(per_chain_rows, vec![15; 4]);
+        for (i, &(c, _)) in results.iter().enumerate() {
+            assert_eq!(i, c);
+        }
+        // deterministic: the same run reproduces results bit-for-bit
+        let again = run_chains_monitored(
+            &pool,
+            4,
+            23,
+            |c, mut rng, sink| {
+                let mut last = 0.0;
+                for _ in 0..15 {
+                    last = rng.normal();
+                }
+                sink.send(vec![vec![last]]);
+                (c, last)
+            },
+            |_| {},
+        )
+        .unwrap();
+        for (a, b) in results.iter().zip(&again) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+    }
+
+    #[test]
+    fn buffered_sink_flushes_tail_on_drop() {
+        let pool = WorkerPool::new(2);
+        let mut batches = Vec::new();
+        run_chains_monitored(
+            &pool,
+            1,
+            3,
+            |_c, _rng, sink| {
+                let mut b = sink.buffered(4);
+                for i in 0..10 {
+                    b.push(vec![i as f64]);
+                }
+                // drop flushes the trailing partial batch
+            },
+            |ev| batches.push(ev.draws.len()),
+        )
+        .unwrap();
+        assert_eq!(batches, vec![4, 4, 2], "tail rows lost or re-batched");
+    }
+
+    #[test]
+    fn monitored_chain_panic_surfaces_as_error() {
+        let pool = WorkerPool::new(2);
+        let mut events = 0usize;
+        let r = run_chains_monitored(
+            &pool,
+            3,
+            1,
+            |c, _, sink| {
+                sink.send(vec![vec![c as f64]]);
+                if c == 1 {
+                    panic!("deliberate chain failure");
+                }
+                c
+            },
+            |_| events += 1,
+        );
+        assert!(r.is_err());
+        assert!(events <= 3, "saw {events} events from 3 chains");
     }
 
     /// Chains build real traces and run real transitions concurrently;

@@ -19,7 +19,7 @@ pub mod subsampled_mh;
 pub use gibbs::gibbs_transition;
 pub use mh::{mh_transition, Proposal, TransitionStats};
 pub use pgibbs::pgibbs_transition;
-pub use planned::PlannedEval;
+pub use planned::{EvalStats, PlannedEval};
 pub use program::{infer, parse_infer, run_command, BlockSel, InfCmd, InferStats};
 pub use seqtest::{SequentialTest, TestState};
 pub use subsampled_mh::{

@@ -44,6 +44,24 @@ use crate::trace::plan::{candidate_globals, ScorerArena};
 use std::collections::HashSet;
 use std::sync::Arc;
 
+/// Point-in-time counters of one evaluator's scoring traffic, grouped
+/// by tier — the monitor/reporting snapshot hook.  Cheap to copy;
+/// subtract two snapshots to get per-interval rates.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EvalStats {
+    /// Sections scored through cached plans (scalar or batched tiers).
+    pub planned: usize,
+    /// Subset of `planned` replayed through a grouped column program.
+    pub batched: usize,
+    /// Sections that fell back to the interpreter walk.
+    pub fallback: usize,
+    /// Sections replayed through worker-pool shards.
+    pub sharded: usize,
+    /// Sections the dispatching thread replayed inline by work-stealing
+    /// queued shards while waiting on the pool.
+    pub stolen: usize,
+}
+
 /// Arena-backed batch scorer over cached section plans.
 pub struct PlannedEval {
     arena: ScorerArena,
@@ -167,6 +185,35 @@ impl PlannedEval {
     /// evaluators).
     pub fn sharded_sections(&self) -> usize {
         self.shard.as_ref().map_or(0, |s| s.sharded_sections)
+    }
+
+    /// Sections the dispatching thread replayed inline by work-stealing
+    /// queued shards (0 for sequential evaluators).
+    pub fn stolen_sections(&self) -> usize {
+        self.shard.as_ref().map_or(0, |s| s.stolen_sections)
+    }
+
+    /// Enable/disable the work-stealing dispatcher (default on for pool
+    /// evaluators; results are bitwise identical either way —
+    /// `tests/parallel.rs` pins this).
+    pub fn with_work_stealing(mut self, steal: bool) -> PlannedEval {
+        if let Some(s) = self.shard.as_mut() {
+            s.steal = steal;
+        }
+        self
+    }
+
+    /// Snapshot the scoring counters (the monitor/report hook): call at
+    /// recording cadence and diff consecutive snapshots for
+    /// per-interval tier traffic.
+    pub fn stats(&self) -> EvalStats {
+        EvalStats {
+            planned: self.planned_sections,
+            batched: self.batched_sections,
+            fallback: self.fallback_sections,
+            sharded: self.sharded_sections(),
+            stolen: self.stolen_sections(),
+        }
     }
 
     /// Scalar or interpreter scoring of one root into `out[pos]`.

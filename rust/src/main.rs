@@ -3,9 +3,9 @@
 //!
 //! ```text
 //! subppl run <program.vnt> [--infer "<program>"] [--seed N] [--watch a,b]
-//!            [--threads T] [--chains R]
+//!            [--threads T] [--chains R] [--monitor-every K]
 //! subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused]
-//!            [--threads T] [--chains R]
+//!            [--threads T] [--chains R] [--monitor-every K]
 //! subppl artifacts                 # list the AOT artifact registry
 //! ```
 //!
@@ -13,10 +13,16 @@
 //! `SUBPPL_THREADS` or available parallelism; `1` = sequential; results
 //! are bitwise identical either way).  `--chains R` runs R independent
 //! replicas concurrently on the same pool (per-chain PCG streams).
+//! `--monitor-every K` streams convergence diagnostics while the chains
+//! run: every K recorded draws (per chain) a `[monitor]` line reports
+//! split-R-hat, rank-normalized R-hat, and total ESS for each watched
+//! parameter.  Snapshot contents are deterministic in the seed.
 
 use std::io::Read;
 use std::sync::Arc;
 use subppl::coordinator::experiments as exp;
+use subppl::coordinator::monitor::{monitor_csv, ConvergenceMonitor, DiagSnapshot};
+use subppl::coordinator::multichain::ChainSink;
 use subppl::coordinator::report::{results_dir, Table};
 use subppl::coordinator::{multichain, FusedEval};
 use subppl::infer::{parse_infer, run_command, LocalEvaluator, PlannedEval};
@@ -54,7 +60,7 @@ fn run(args: &[String]) -> Result<(), String> {
         Some("artifacts") => cmd_artifacts(),
         _ => {
             eprintln!(
-                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--threads T] [--chains R]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused] [--threads T] [--chains R]\n  subppl artifacts"
+                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--threads T] [--chains R] [--monitor-every K]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused] [--threads T] [--chains R] [--monitor-every K]\n  subppl artifacts"
             );
             Err("missing or unknown subcommand".into())
         }
@@ -72,13 +78,17 @@ struct ChainReport {
 }
 
 /// One chain's worth of `subppl run`: build the trace, optionally run
-/// the inference program, and report watched posterior means.
+/// the inference program, and report watched posterior means.  When a
+/// `sink` is given, every recorded sample's watched values are also
+/// streamed to the convergence monitor (write-only: the sink cannot
+/// change what the chain computes).
 fn run_one_chain(
     src: &str,
     infer_prog: Option<&str>,
     names: &[String],
     samples: usize,
     pool: Option<Arc<WorkerPool>>,
+    sink: Option<&ChainSink>,
     rng: &mut Pcg64,
 ) -> Result<ChainReport, String> {
     let mut trace = Trace::new();
@@ -94,15 +104,25 @@ fn run_one_chain(
             None => Box::new(PlannedEval::new()),
         };
         let mut sums: Vec<f64> = vec![0.0; names.len()];
+        // 32 rows per channel send; BufferedSink flushes the tail on drop
+        let mut buf = sink.map(|s| s.clone().buffered(32));
         for s in 0..samples {
             let stats = run_command(&mut trace, rng, &cmd, ev.as_mut())?;
             if s == 0 {
                 per_iter = Some((stats.transitions, stats.acceptance_rate()));
             }
+            let mut row = Vec::with_capacity(names.len());
             for (i, n) in names.iter().enumerate() {
-                if let Some(v) = trace.lookup_value(n).and_then(|v| v.as_f64()) {
-                    sums[i] += v;
+                match trace.lookup_value(n).and_then(|v| v.as_f64()) {
+                    Some(v) => {
+                        sums[i] += v;
+                        row.push(v);
+                    }
+                    None => row.push(f64::NAN),
                 }
+            }
+            if let Some(b) = buf.as_mut() {
+                b.push(row);
             }
         }
         for (i, s) in sums.iter().enumerate() {
@@ -144,6 +164,19 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         .map(|p| p.split(',').map(|s| s.to_string()).collect())
         .unwrap_or_default();
     let infer_prog = opt(args, "--infer").map(|s| s.to_string());
+    let monitor_every: usize = opt(args, "--monitor-every")
+        .unwrap_or("0")
+        .parse()
+        .map_err(|_| "bad --monitor-every")?;
+    if monitor_every > 0 && names.is_empty() {
+        return Err("--monitor-every needs --watch to name the monitored parameters".into());
+    }
+    if monitor_every > 0 && infer_prog.is_none() {
+        return Err("--monitor-every needs --infer (no transitions, no draws to monitor)".into());
+    }
+    if monitor_every > 0 && chains < 2 {
+        return Err("--monitor-every compares chains: use --chains 2 or more".into());
+    }
 
     if chains > 1 {
         // concurrent replicas: one Trace per pool worker, per-chain PCG
@@ -151,9 +184,42 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         let pool = WorkerPool::global().clone();
         let src = src.clone();
         let names_c = names.clone();
-        let results = multichain::run_chains(&pool, chains, seed, move |_c, mut rng| {
-            run_one_chain(&src, infer_prog.as_deref(), &names_c, samples, None, &mut rng)
-        })?;
+        let chain = move |_c: usize, mut rng: Pcg64, sink: Option<ChainSink>| {
+            run_one_chain(
+                &src,
+                infer_prog.as_deref(),
+                &names_c,
+                samples,
+                None,
+                sink.as_ref(),
+                &mut rng,
+            )
+        };
+        let results = if monitor_every > 0 {
+            // live convergence lines as every chain crosses each
+            // monitor_every-sample boundary; contents deterministic in
+            // the seed (fold-order normalized by chain index)
+            let mut mon = ConvergenceMonitor::new(chains, &names, monitor_every);
+            let results = multichain::run_chains_monitored(
+                &pool,
+                chains,
+                seed,
+                move |c, rng, sink| chain(c, rng, Some(sink)),
+                |ev| {
+                    mon.absorb(ev);
+                    for snap in mon.ready_snapshots() {
+                        println!("{}", snap.render());
+                    }
+                },
+            )?;
+            // end-of-run snapshot (deduped against the last boundary)
+            if let Some(fin) = mon.finish() {
+                println!("{}", fin.render());
+            }
+            results
+        } else {
+            multichain::run_chains(&pool, chains, seed, move |c, rng| chain(c, rng, None))?
+        };
         let mut t = Table::new(&["chain", "live nodes", "final log joint"]);
         let mut pooled = vec![0.0; names.len()];
         for (c, r) in results.iter().enumerate() {
@@ -185,6 +251,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         &names,
         samples,
         pool,
+        None,
         &mut rng,
     )?;
     println!("trace: {} live nodes", rep.live);
@@ -250,7 +317,14 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
     match which.as_str() {
         "table1" => {
             let rows = exp::table1_scaling(3);
-            let mut t = Table::new(&["model", "N_small", "N_large", "t_small(s)", "t_large(s)", "exponent"]);
+            let mut t = Table::new(&[
+                "model",
+                "N_small",
+                "N_large",
+                "t_small(s)",
+                "t_large(s)",
+                "exponent",
+            ]);
             for r in &rows {
                 t.row(&[
                     r.model.clone(),
@@ -274,7 +348,8 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
                 exp::Fig5Config::default()
             };
             let rows = exp::fig5_sublinear(&cfg, evaluator.as_mut());
-            let mut t = Table::new(&["N", "sections/iter", "E[sections]", "t_sub(s)", "t_exact(s)"]);
+            let mut t =
+                Table::new(&["N", "sections/iter", "E[sections]", "t_sub(s)", "t_exact(s)"]);
             for r in &rows {
                 t.row(&[
                     r.n.to_string(),
@@ -368,11 +443,25 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
             let chains: usize = opt(args, "--chains")
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(1);
+            let monitor_every: usize = match opt(args, "--monitor-every") {
+                Some(s) => s.parse().map_err(|_| "bad --monitor-every")?,
+                None => 0,
+            };
+            if monitor_every > 0 && chains < 2 {
+                return Err(
+                    "--monitor-every on fig9 compares repeated trials: use --chains 2 or more"
+                        .into(),
+                );
+            }
             if chains > 1 {
-                // repeated trials, run concurrently on the worker pool
+                // repeated trials, run concurrently on the worker pool,
+                // with streaming cross-trial convergence snapshots when
+                // --monitor-every is given
                 let mut t = Table::new(&["method", "trial", "seconds", "phi ESS/s", "sig ESS/s"]);
+                let mut all_snaps = Vec::new();
                 for (label, sub) in [("exact-mh", false), ("subsampled", true)] {
-                    let rs = exp::fig9_repeated(&cfg, sub, chains)?;
+                    let (rs, snaps) =
+                        exp::fig9_repeated_monitored(&cfg, sub, chains, monitor_every)?;
                     for (i, r) in rs.iter().enumerate() {
                         t.row(&[
                             label.to_string(),
@@ -382,8 +471,22 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
                             format!("{:.3}", r.sig_ess_per_sec),
                         ]);
                     }
+                    for s in &snaps {
+                        println!("{label} {}", s.render());
+                    }
+                    all_snaps.push((label, snaps));
                 }
                 t.print();
+                if all_snaps.iter().any(|(_, s)| !s.is_empty()) {
+                    let groups: Vec<(&str, &[DiagSnapshot])> = all_snaps
+                        .iter()
+                        .map(|(l, s)| (*l, s.as_slice()))
+                        .collect();
+                    let csv = monitor_csv(&groups);
+                    csv.write_to(&outdir.join("fig9_monitor.csv"))
+                        .map_err(|e| e.to_string())?;
+                    println!("wrote {}", outdir.join("fig9_monitor.csv").display());
+                }
                 return Ok(());
             }
             let exact = exp::fig9_sv(&cfg, false);

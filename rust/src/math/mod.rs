@@ -8,6 +8,6 @@ pub mod special;
 
 pub use rng::Pcg64;
 pub use special::{
-    erf, erfc, ln_beta, ln_gamma, log1p_exp, log_add_exp, log_sigmoid, reg_inc_beta,
-    student_t_cdf, student_t_sf,
+    erf, erfc, inv_normal_cdf, ln_beta, ln_gamma, log1p_exp, log_add_exp, log_sigmoid,
+    normal_cdf, reg_inc_beta, student_t_cdf, student_t_sf,
 };

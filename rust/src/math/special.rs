@@ -221,6 +221,70 @@ pub fn log_sum_exp(xs: &[f64]) -> f64 {
     m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
 }
 
+/// Standard normal CDF via the complementary error function.
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// Inverse standard normal CDF (probit), Acklam's rational
+/// approximation (|relative error| < 1.15e-9 on (0, 1)) — used by the
+/// rank-normalization step of the convergence diagnostics.
+pub fn inv_normal_cdf(p: f64) -> f64 {
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p.is_nan() || !(0.0..=1.0).contains(&p) {
+        return f64::NAN;
+    }
+    if p == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p == 1.0 {
+        return f64::INFINITY;
+    }
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,5 +363,22 @@ mod tests {
         assert!((log_add_exp(f64::NEG_INFINITY, 3.0) - 3.0).abs() < 1e-12);
         assert!((log_add_exp(1000.0, 1000.0) - (1000.0 + 2f64.ln())).abs() < 1e-9);
         assert!((log_sum_exp(&[0.0, 0.0, 0.0]) - 3f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inv_normal_cdf_round_trips() {
+        assert!(inv_normal_cdf(0.5).abs() < 1e-9);
+        // scipy.stats.norm.ppf(0.975) = 1.959963984540054
+        assert!((inv_normal_cdf(0.975) - 1.959_963_984_540_054).abs() < 1e-7);
+        // probit is the inverse of the erf-based CDF across both branches
+        for &x in &[-3.5, -1.0, -0.1, 0.0, 0.4, 2.0, 3.2] {
+            let p = normal_cdf(x);
+            assert!((inv_normal_cdf(p) - x).abs() < 1e-5, "x={x}");
+        }
+        // antisymmetric
+        assert!((inv_normal_cdf(0.01) + inv_normal_cdf(0.99)).abs() < 1e-9);
+        assert!(inv_normal_cdf(0.0) == f64::NEG_INFINITY);
+        assert!(inv_normal_cdf(1.0) == f64::INFINITY);
+        assert!(inv_normal_cdf(-0.1).is_nan());
     }
 }

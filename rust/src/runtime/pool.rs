@@ -37,7 +37,7 @@ use crate::trace::batch::PackedBatch;
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Sender, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -104,6 +104,21 @@ impl Shared {
     fn close(&self) {
         self.queue.lock().unwrap().1 = true;
         self.available.notify_all();
+    }
+
+    /// Pop the first *shard* job still waiting in the queue, skipping
+    /// over generic tasks — the work-stealing dispatcher must never
+    /// block itself on an arbitrary long-running chain task, but any
+    /// unclaimed shard (its own or another dispatcher's) is a bounded,
+    /// self-contained unit it can safely run inline.  Returns `None`
+    /// when no shard is queued.
+    fn steal_shard(&self) -> Option<ShardJob> {
+        let mut q = self.queue.lock().unwrap();
+        let pos = q.0.iter().position(|j| matches!(j, Job::Shard(_)))?;
+        match q.0.remove(pos) {
+            Some(Job::Shard(s)) => Some(s),
+            _ => unreachable!("position() found a shard at this index"),
+        }
     }
 }
 
@@ -173,6 +188,37 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Replay one shard job and report its result — shared by the worker
+/// loop and the work-stealing dispatcher, so a stolen shard runs the
+/// exact same code a worker would have run.
+///
+/// A panicking kernel must not kill the executing thread: the thread
+/// survives, the unsent `Sender` drops, and the owning dispatcher's
+/// `recv` errors into the scalar-path fallback instead of hanging on a
+/// pool that silently lost capacity.
+fn run_shard_job(s: ShardJob, sregs: &mut Vec<f64>) {
+    let ShardJob {
+        batch,
+        lo,
+        hi,
+        shard,
+        done,
+    } = s;
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let mut out = vec![0.0f64; hi - lo];
+        batch.replay_range(lo, hi, sregs, &mut out);
+        out
+    }));
+    // drop our Arc before reporting, so once the dispatcher holds every
+    // result it also holds the only reference and can reclaim the
+    // batch's buffers
+    drop(batch);
+    if let Ok(out) = result {
+        // a dropped receiver (dispatcher gave up) is fine
+        let _ = done.send((shard, out));
+    }
+}
+
 fn worker_loop(shared: &Shared) {
     IN_POOL_WORKER.with(|c| c.set(true));
     // per-worker scratch: the worker-private half of a RegFile (the
@@ -180,34 +226,9 @@ fn worker_loop(shared: &Shared) {
     let mut sregs: Vec<f64> = Vec::new();
     while let Some(job) = shared.pop() {
         match job {
-            // a panicking kernel must not kill the worker: the thread
-            // survives, the unsent Sender drops, and the dispatcher's
-            // recv errors into the scalar-path fallback instead of
-            // hanging on a pool that silently lost capacity
-            Job::Shard(s) => {
-                let ShardJob {
-                    batch,
-                    lo,
-                    hi,
-                    shard,
-                    done,
-                } = s;
-                let result = catch_unwind(AssertUnwindSafe(|| {
-                    let mut out = vec![0.0f64; hi - lo];
-                    batch.replay_range(lo, hi, &mut sregs, &mut out);
-                    out
-                }));
-                // drop our Arc before reporting, so once the dispatcher
-                // holds every result it also holds the only reference
-                // and can reclaim the batch's buffers
-                drop(batch);
-                if let Ok(out) = result {
-                    // a dropped receiver (dispatcher gave up) is fine
-                    let _ = done.send((shard, out));
-                }
-            }
-            // same story for tasks; the task's owner observes a panic
-            // through its own channel disconnecting
+            Job::Shard(s) => run_shard_job(s, &mut sregs),
+            // a panicking task's owner observes the failure through its
+            // own channel disconnecting
             Job::Task(f) => {
                 let _ = catch_unwind(AssertUnwindSafe(f));
             }
@@ -243,14 +264,32 @@ pub fn resolve_threads(threads: usize) -> usize {
 /// dispatch policy: batches below [`min_sections`](Self::min_sections)
 /// (or a 1-thread pool) replay inline on the calling thread — the same
 /// kernel, so the choice is invisible to results.
+///
+/// While waiting for results the dispatcher *work-steals*: instead of
+/// blocking on the result channel it pops unclaimed shard jobs off the
+/// shared queue and runs the replay kernel inline (see
+/// [`replay`](Self::replay)).  On small pools this removes the
+/// idle-dispatcher bubble — with `t` workers the old design left the
+/// `t+1`-th runnable thread (the dispatcher itself) parked on `recv`
+/// while its own shards sat in the queue.  Results are unchanged: a
+/// stolen shard runs the same kernel over the same disjoint range and
+/// reports through the same shard-indexed reduce.
 pub struct ShardScorer {
     pool: Arc<WorkerPool>,
     /// Smallest batch worth dispatching: below this, queue/channel
     /// overhead (~2us/shard) beats the arithmetic saved.  Lowered by
     /// tests to force the parallel path on small workloads.
     pub min_sections: usize,
+    /// Whether the dispatching thread helps drain queued shards while
+    /// waiting (default true; tests pin bitwise identity across both
+    /// settings).
+    pub steal: bool,
     /// Sections scored through pool shards (perf reporting).
     pub sharded_sections: usize,
+    /// Sections the dispatching thread replayed inline by stealing
+    /// queued shards — its own, or (when several dispatchers share the
+    /// pool) another dispatcher's (perf reporting).
+    pub stolen_sections: usize,
     /// Inline scratch for the non-dispatched case.
     sregs: Vec<f64>,
 }
@@ -260,7 +299,9 @@ impl ShardScorer {
         ShardScorer {
             pool,
             min_sections: 256,
+            steal: true,
             sharded_sections: 0,
+            stolen_sections: 0,
             sregs: Vec::new(),
         }
     }
@@ -319,6 +360,43 @@ impl ShardScorer {
         drop(tx);
         let mut received = 0usize;
         while received < sent {
+            // drain whatever is already done without blocking (stop as
+            // soon as everything arrived — after the last result every
+            // sender is gone and one more try_recv would read the
+            // disconnect as a failure)
+            while received < sent {
+                match rx.try_recv() {
+                    Ok((shard, ls)) => {
+                        let off = shard * chunk;
+                        out[off..off + ls.len()].copy_from_slice(&ls);
+                        received += 1;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    // every sender dropped without sending everything: a
+                    // worker died mid-shard or the kernel panicked
+                    Err(TryRecvError::Disconnected) => {
+                        return Err("worker pool: shard worker failed".into());
+                    }
+                }
+            }
+            if received >= sent {
+                break;
+            }
+            // work-steal: run an unclaimed shard inline rather than
+            // parking this thread while its own work sits in the queue.
+            // The stolen shard goes through the identical `run_shard_job`
+            // (same kernel, same disjoint range, same shard-indexed
+            // reduce), so stealing is invisible to results.
+            if self.steal {
+                if let Some(job) = self.pool.shared.steal_shard() {
+                    let sections = job.hi - job.lo;
+                    run_shard_job(job, &mut self.sregs);
+                    self.stolen_sections += sections;
+                    continue;
+                }
+            }
+            // nothing left to steal: the remaining shards are already on
+            // workers — block until one reports
             match rx.recv() {
                 Ok((shard, ls)) => {
                     let off = shard * chunk;
@@ -381,5 +459,37 @@ mod tests {
         assert_eq!(resolve_threads(1), 1);
         assert_eq!(resolve_threads(5), 5);
         assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn steal_shard_skips_tasks() {
+        // a queue holding [Task, Shard] must hand the shard to a
+        // stealer and leave the task in place
+        let shared = Shared {
+            queue: Mutex::new((VecDeque::new(), false)),
+            available: Condvar::new(),
+        };
+        assert!(shared.steal_shard().is_none(), "empty queue stole something");
+        shared.push(Job::Task(Box::new(|| {})));
+        let (tx, rx) = channel();
+        shared.push(Job::Shard(ShardJob {
+            batch: Arc::new(PackedBatch::default()),
+            lo: 0,
+            hi: 0,
+            shard: 0,
+            done: tx,
+        }));
+        let job = shared.steal_shard().expect("shard not stolen past the task");
+        assert_eq!(job.shard, 0);
+        run_shard_job(job, &mut Vec::new());
+        let (shard, out) = rx.recv().unwrap();
+        assert_eq!((shard, out.len()), (0, 0));
+        // the task is still queued, the shard is gone
+        {
+            let mut q = shared.queue.lock().unwrap();
+            assert_eq!(q.0.len(), 1);
+            assert!(matches!(q.0.pop_front(), Some(Job::Task(_))));
+        }
+        assert!(shared.steal_shard().is_none());
     }
 }

@@ -1,7 +1,19 @@
 //! Chain diagnostics: running moments, autocorrelation, effective sample
-//! size.  Fig. 9d of the paper reports autocorrelation vs *wall-clock lag*
-//! and ESS per second; `ess` here is ESS per sample, and the harness
-//! divides by measured runtime.
+//! size, and the multi-chain convergence estimators behind the streaming
+//! monitor (`coordinator::monitor`).  Fig. 9d of the paper reports
+//! autocorrelation vs *wall-clock lag* and ESS per second; `ess` here is
+//! ESS per sample, and the harness divides by measured runtime.
+//!
+//! The multi-chain estimators follow Gelman et al. (BDA3) / Vehtari et
+//! al. (2021): [`split_rhat`] splits every chain in half so within-chain
+//! non-stationarity shows up as between-"chain" variance, and
+//! [`rank_normalized_rhat`] applies the same statistic to
+//! rank-normalized draws so heavy tails cannot mask divergence.  Both
+//! reduce over chains in *index order* — the streaming monitor feeds
+//! them per-chain accumulators keyed by chain index, so results never
+//! depend on worker arrival order.
+
+use crate::math::inv_normal_cdf;
 
 /// Numerically stable running mean/variance (Welford).
 #[derive(Clone, Debug, Default)]
@@ -70,11 +82,16 @@ pub fn autocorrelation(xs: &[f64], max_lag: usize) -> Vec<f64> {
 
 /// Effective sample size via Geyer's initial positive sequence: truncate
 /// the ACF at the first lag where the sum of an adjacent pair of
-/// autocorrelations goes non-positive.
+/// autocorrelations goes non-positive.  NaN draws yield NaN (the final
+/// clamp would otherwise launder a NaN tau into the healthiest possible
+/// ESS = n).
 pub fn ess(xs: &[f64]) -> f64 {
     let n = xs.len();
     if n < 4 {
         return n as f64;
+    }
+    if xs.iter().any(|x| x.is_nan()) {
+        return f64::NAN;
     }
     let acf = autocorrelation(xs, n - 1);
     let mut sum_rho = 0.0;
@@ -89,6 +106,184 @@ pub fn ess(xs: &[f64]) -> f64 {
     }
     let tau = 1.0 + 2.0 * sum_rho;
     (n as f64 / tau).min(n as f64).max(1.0)
+}
+
+/// Geyer ESS with *lazily* computed autocovariances: identical
+/// estimator (and bitwise-identical result) to [`ess`], but autocovariance
+/// lags are computed one pair at a time and stop at the Geyer truncation
+/// point instead of materializing the full O(n^2) ACF.  The streaming
+/// monitor calls this per snapshot, where chains are long and the
+/// truncation lag is short.
+pub fn ess_lazy(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 4 {
+        return n as f64;
+    }
+    // NaN poisons (mirrors `ess`): without this, every Geyer pair is
+    // NaN so the loop never truncates (an O(n^2) walk) and the final
+    // clamp turns the NaN tau into ESS = n — "fully converged"
+    if xs.iter().any(|x| x.is_nan()) {
+        return f64::NAN;
+    }
+    // same biased (n-denominator) estimator as `autocorrelation`, in the
+    // same accumulation order, so the two paths agree bit-for-bit
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let c0: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    if c0 == 0.0 {
+        // constant series: `autocorrelation` pins the ACF at 1, so the
+        // Geyer sum never terminates usefully; match `ess` by walking
+        // the same all-ones sequence
+        let max_pairs = (n - 1).saturating_sub(1).div_ceil(2);
+        let tau = 1.0 + 2.0 * (2 * max_pairs) as f64;
+        return (n as f64 / tau).min(n as f64).max(1.0);
+    }
+    let rho = |k: usize| -> f64 {
+        let ck: f64 = (0..n - k)
+            .map(|i| (xs[i] - mean) * (xs[i + k] - mean))
+            .sum::<f64>()
+            / n as f64;
+        ck / c0
+    };
+    let mut sum_rho = 0.0;
+    let mut k = 1;
+    // acf indices run 0..=n-1, so pairs exist while k + 1 <= n - 1
+    while k + 1 < n {
+        let pair = rho(k) + rho(k + 1);
+        if pair <= 0.0 {
+            break;
+        }
+        sum_rho += pair;
+        k += 2;
+    }
+    let tau = 1.0 + 2.0 * sum_rho;
+    (n as f64 / tau).min(n as f64).max(1.0)
+}
+
+/// Streaming ESS accumulator: push draws one at a time, read the current
+/// Geyer estimate on demand.  The estimate is recomputed lazily (only
+/// when draws arrived since the last read) via [`ess_lazy`], so reads at
+/// monitor cadence cost O(n * tau) rather than O(n^2), and agree with
+/// the batch [`ess`] of the same draws bit-for-bit.
+///
+/// The multi-chain monitor deliberately does *not* use this type: its
+/// snapshots are computed over fixed per-chain prefixes (first `k *
+/// every` draws) so contents stay deterministic under scheduling, while
+/// this accumulator always reflects everything pushed so far.  It is
+/// the right tool for single-stream consumers (harnesses tracking one
+/// chain's ESS as it grows).
+#[derive(Clone, Debug, Default)]
+pub struct StreamingEss {
+    xs: Vec<f64>,
+    cached_at: usize,
+    cached: f64,
+}
+
+impl StreamingEss {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn n(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Current effective sample size of everything pushed so far.
+    pub fn value(&mut self) -> f64 {
+        if self.cached_at != self.xs.len() {
+            self.cached = ess_lazy(&self.xs);
+            self.cached_at = self.xs.len();
+        }
+        self.cached
+    }
+}
+
+/// Split-R̂ (potential scale reduction) over `chains`, each truncated to
+/// the shortest chain's length: every chain is split into two halves, so
+/// the statistic also flags within-chain drift.  Returns NaN when no
+/// chain has >= 4 draws.  A constant, identical set of chains returns
+/// exactly 1.0; constant chains at *different* values return +inf.
+///
+/// Chains are reduced in slice order — callers that fold concurrent
+/// chains must order them by chain index first (the streaming monitor
+/// does) so the result is independent of worker scheduling.
+pub fn split_rhat(chains: &[&[f64]]) -> f64 {
+    let n = match chains.iter().map(|c| c.len()).min() {
+        Some(n) if n >= 4 => n,
+        _ => return f64::NAN,
+    };
+    let half = n / 2;
+    // 2M half-chains of equal length (drop the middle draw when n is odd)
+    let mut moments = Vec::with_capacity(2 * chains.len());
+    for c in chains {
+        for part in [&c[..half], &c[n - half..n]] {
+            let mut rm = RunningMoments::new();
+            for &x in part {
+                rm.push(x);
+            }
+            moments.push(rm);
+        }
+    }
+    let m = moments.len() as f64;
+    let l = half as f64;
+    let w = moments.iter().map(|rm| rm.variance()).sum::<f64>() / m;
+    let mut between = RunningMoments::new();
+    for rm in &moments {
+        between.push(rm.mean());
+    }
+    let b = l * between.variance();
+    if w <= 0.0 {
+        return if b <= 0.0 { 1.0 } else { f64::INFINITY };
+    }
+    let var_plus = (l - 1.0) / l * w + b / l;
+    (var_plus / w).sqrt()
+}
+
+/// Rank-normalized split-R̂ (Vehtari et al. 2021): pooled draws are
+/// replaced by normal scores of their fractional ranks
+/// (z = Phi^-1((r - 3/8) / (S + 1/4)), average ranks on ties) before the
+/// split statistic, so heavy-tailed or skewed posteriors cannot hide a
+/// location disagreement between chains.  NaN when no chain has >= 4
+/// draws.
+pub fn rank_normalized_rhat(chains: &[&[f64]]) -> f64 {
+    let n = match chains.iter().map(|c| c.len()).min() {
+        Some(n) if n >= 4 => n,
+        _ => return f64::NAN,
+    };
+    // NaN draws must poison the result like they poison `split_rhat` —
+    // ranking would launder them into ordinary scores (total_cmp groups
+    // NaNs, giving a missing parameter a clean-looking rank-Rhat)
+    if chains.iter().any(|c| c[..n].iter().any(|x| x.is_nan())) {
+        return f64::NAN;
+    }
+    // pool the first n draws of every chain, remembering provenance
+    let total = n * chains.len();
+    let mut order: Vec<usize> = (0..total).collect();
+    let at = |flat: usize| chains[flat / n][flat % n];
+    order.sort_by(|&a, &b| at(a).total_cmp(&at(b)));
+    let mut z = vec![0.0f64; total];
+    let s = total as f64;
+    let mut i = 0;
+    while i < total {
+        // average ranks over ties (total_cmp groups identical bit
+        // patterns together; equal f64 values compare equal)
+        let mut j = i + 1;
+        while j < total && at(order[j]) == at(order[i]) {
+            j += 1;
+        }
+        // 1-based ranks i+1 ..= j averaged
+        let rank = (i + j + 1) as f64 / 2.0;
+        let score = inv_normal_cdf((rank - 0.375) / (s + 0.25));
+        for &flat in &order[i..j] {
+            z[flat] = score;
+        }
+        i = j;
+    }
+    let normalized: Vec<&[f64]> = (0..chains.len()).map(|c| &z[c * n..(c + 1) * n]).collect();
+    split_rhat(&normalized)
 }
 
 #[cfg(test)]
@@ -126,6 +321,149 @@ mod tests {
         let xs: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
         let e = ess(&xs);
         assert!(e > 2500.0, "iid ESS too small: {e}");
+    }
+
+    #[test]
+    fn ess_lazy_matches_batch_bitwise() {
+        let mut rng = Pcg64::seeded(45);
+        // iid, AR(1), short, and constant series must all agree exactly
+        let iid: Vec<f64> = (0..3000).map(|_| rng.normal()).collect();
+        let mut ar1 = Vec::with_capacity(3000);
+        let mut x = 0.0;
+        for _ in 0..3000 {
+            x = 0.9 * x + rng.normal();
+            ar1.push(x);
+        }
+        let short: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+        let tiny = vec![1.0, 2.0, 3.0];
+        let constant = vec![2.5; 100];
+        let poisoned = vec![1.0, f64::NAN, 2.0, 3.0, 4.0];
+        for (label, xs) in [
+            ("iid", &iid),
+            ("ar1", &ar1),
+            ("short", &short),
+            ("tiny", &tiny),
+            ("constant", &constant),
+            ("poisoned", &poisoned),
+        ] {
+            assert_eq!(
+                ess(xs).to_bits(),
+                ess_lazy(xs).to_bits(),
+                "{label}: lazy ESS diverged from batch"
+            );
+        }
+        // NaN draws must read as NaN, never as a healthy ESS = n
+        assert!(ess(&poisoned).is_nan());
+        assert!(ess_lazy(&poisoned).is_nan());
+    }
+
+    #[test]
+    fn streaming_ess_agrees_with_batch() {
+        let mut rng = Pcg64::seeded(46);
+        let mut se = StreamingEss::new();
+        let mut xs = Vec::new();
+        let mut x = 0.0;
+        for i in 0..2000 {
+            x = 0.8 * x + rng.normal();
+            se.push(x);
+            xs.push(x);
+            // read at several intermediate sizes: every read must equal
+            // the batch estimator over the same prefix, bit-for-bit
+            if [10usize, 100, 999, 2000].contains(&(i + 1)) {
+                assert_eq!(se.value().to_bits(), ess(&xs).to_bits(), "n={}", i + 1);
+                // a second read with no new draws hits the cache
+                assert_eq!(se.value().to_bits(), ess(&xs).to_bits());
+            }
+        }
+        assert_eq!(se.n(), 2000);
+    }
+
+    #[test]
+    fn split_rhat_identical_chains_near_one() {
+        // independent chains from the same stationary distribution
+        let chains: Vec<Vec<f64>> = (0..4)
+            .map(|c| {
+                let mut rng = Pcg64::new(50, c);
+                (0..800).map(|_| rng.normal()).collect()
+            })
+            .collect();
+        let refs: Vec<&[f64]> = chains.iter().map(|c| c.as_slice()).collect();
+        let r = split_rhat(&refs);
+        assert!((0.98..1.02).contains(&r), "iid split-Rhat {r}");
+        let rr = rank_normalized_rhat(&refs);
+        assert!((0.98..1.02).contains(&rr), "iid rank-Rhat {rr}");
+    }
+
+    #[test]
+    fn split_rhat_flags_mean_shift() {
+        let mut chains: Vec<Vec<f64>> = (0..4)
+            .map(|c| {
+                let mut rng = Pcg64::new(51, c);
+                (0..800).map(|_| rng.normal()).collect()
+            })
+            .collect();
+        for x in chains[0].iter_mut() {
+            *x += 4.0; // one chain stuck in a different mode
+        }
+        let refs: Vec<&[f64]> = chains.iter().map(|c| c.as_slice()).collect();
+        let r = split_rhat(&refs);
+        assert!(r > 1.5, "shifted split-Rhat only {r}");
+        // the rank transform compresses a one-sided shift (the stuck
+        // chain just owns the top quarter of ranks), so its expected
+        // value here is ~1.5; it still must clearly exceed the null
+        let rr = rank_normalized_rhat(&refs);
+        assert!(rr > 1.25, "shifted rank-Rhat only {rr}");
+    }
+
+    #[test]
+    fn rank_rhat_sees_through_heavy_tails() {
+        // a shifted chain with infinite-variance (t_2) tails: the
+        // occasional enormous outlier inflates the plain statistic's
+        // within-chain variance, but the rank transform is immune to
+        // tail magnitude — the location disagreement must still read as
+        // a large rank-Rhat
+        let mut rng = Pcg64::seeded(52);
+        let a: Vec<f64> = (0..600).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..600).map(|_| 8.0 + rng.student_t(2.0)).collect();
+        let rr = rank_normalized_rhat(&[&a, &b]);
+        assert!(rr > 1.5, "rank-Rhat missed a gross shift: {rr}");
+        // sanity: same-distribution heavy tails stay near 1
+        let c: Vec<f64> = (0..600).map(|_| rng.student_t(2.0)).collect();
+        let d: Vec<f64> = (0..600).map(|_| rng.student_t(2.0)).collect();
+        let rr = rank_normalized_rhat(&[&c, &d]);
+        assert!((0.97..1.05).contains(&rr), "heavy-tail null rank-Rhat {rr}");
+    }
+
+    #[test]
+    fn split_rhat_edge_cases() {
+        // fewer than 4 draws per chain: undefined
+        assert!(split_rhat(&[&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]]).is_nan());
+        assert!(rank_normalized_rhat(&[&[1.0], &[2.0]]).is_nan());
+        assert!(split_rhat(&[]).is_nan());
+        // identical constant chains: exactly 1
+        let c = vec![3.25; 64];
+        assert_eq!(split_rhat(&[&c, &c, &c]), 1.0);
+        // constant chains at different values: infinitely bad
+        let d = vec![4.25; 64];
+        assert_eq!(split_rhat(&[&c, &d]), f64::INFINITY);
+        // within-chain drift is caught by the split halves even when the
+        // chains agree with each other
+        let drift: Vec<f64> = (0..1000).map(|i| i as f64 * 0.01).collect();
+        let r = split_rhat(&[&drift, &drift]);
+        assert!(r > 1.5, "split halves missed within-chain drift: {r}");
+        // single chain is legal (two halves)
+        let mut rng = Pcg64::seeded(53);
+        let one: Vec<f64> = (0..500).map(|_| rng.normal()).collect();
+        let r = split_rhat(&[&one]);
+        assert!((0.98..1.05).contains(&r), "single-chain split-Rhat {r}");
+        // NaN draws (an unresolvable watched parameter) poison both
+        // statistics instead of laundering into a clean rank-Rhat
+        let bad = vec![f64::NAN; 64];
+        assert!(split_rhat(&[&bad, &bad]).is_nan());
+        assert!(rank_normalized_rhat(&[&bad, &bad]).is_nan());
+        let mut partly = one.clone();
+        partly[7] = f64::NAN;
+        assert!(rank_normalized_rhat(&[&partly, &one]).is_nan());
     }
 
     #[test]

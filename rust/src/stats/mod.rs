@@ -8,6 +8,9 @@ pub mod normality;
 pub mod propgen;
 pub mod risk;
 
-pub use diagnostics::{autocorrelation, ess, RunningMoments};
+pub use diagnostics::{
+    autocorrelation, ess, ess_lazy, rank_normalized_rhat, split_rhat, RunningMoments,
+    StreamingEss,
+};
 pub use normality::{jarque_bera, NormalityReport};
 pub use risk::{log_loss, predictive_risk, zero_one_error};

@@ -68,6 +68,7 @@ fn subsampled_bias_is_small() {
             eps: 0.01,
             proposal: Proposal::Drift(0.08),
             exact,
+            threads: 1,
         };
         let mut ev = InterpreterEval;
         let mut m = RunningMoments::new();

@@ -39,7 +39,9 @@ fn assert_bitwise(label: &str, got: &[f64], want: &[f64]) {
 }
 
 /// Whole-population l_i through the interpreter oracle, the sequential
-/// batched evaluator, and pool-sharded evaluators at 1/2/4 threads.
+/// batched evaluator, and pool-sharded evaluators at 1/2/4 threads —
+/// with the work-stealing dispatcher both enabled (the default) and
+/// disabled, which must be indistinguishable in results.
 fn li_across_thread_counts(trace: &mut Trace, v: NodeId, new_v: &Value, label: &str) {
     let p = trace.cached_partition(v).expect("no border partition");
     let roots = p.locals.clone();
@@ -49,20 +51,30 @@ fn li_across_thread_counts(trace: &mut Trace, v: NodeId, new_v: &Value, label: &
     let got = seq.eval_sections(trace, &p, &roots, new_v).unwrap();
     assert_bitwise(&format!("{label}/sequential"), &got, &want);
     for threads in [1usize, 2, 4] {
-        let mut par = parallel_eval(threads);
-        let got = par.eval_sections(trace, &p, &roots, new_v).unwrap();
-        assert_bitwise(&format!("{label}/threads{threads}"), &got, &want);
-        assert_eq!(par.fallback_sections, 0, "{label}/threads{threads}");
-        if threads == 1 {
-            // threads = 1 must be the sequential path, exactly
-            assert_eq!(par.sharded_sections(), 0, "{label}: 1-thread pool dispatched");
-        } else {
-            assert_eq!(
-                par.sharded_sections(),
-                par.batched_sections,
-                "{label}/threads{threads}: forced dispatch must shard every batched section"
-            );
-            assert!(par.sharded_sections() > 0, "{label}: pool never engaged");
+        for steal in [true, false] {
+            let mut par = parallel_eval(threads).with_work_stealing(steal);
+            let got = par.eval_sections(trace, &p, &roots, new_v).unwrap();
+            let tag = format!("{label}/threads{threads}/steal={steal}");
+            assert_bitwise(&tag, &got, &want);
+            assert_eq!(par.fallback_sections, 0, "{tag}");
+            if threads == 1 {
+                // threads = 1 must be the sequential path, exactly
+                assert_eq!(par.sharded_sections(), 0, "{tag}: 1-thread pool dispatched");
+            } else {
+                assert_eq!(
+                    par.sharded_sections(),
+                    par.batched_sections,
+                    "{tag}: forced dispatch must shard every batched section"
+                );
+                assert!(par.sharded_sections() > 0, "{tag}: pool never engaged");
+            }
+            if !steal {
+                assert_eq!(
+                    par.stolen_sections(),
+                    0,
+                    "{tag}: disabled stealing still stole"
+                );
+            }
         }
     }
 }
@@ -156,10 +168,12 @@ fn lockstep_200_transitions_threads_4() {
     let mut interp = InterpreterEval;
     let mut seq = PlannedEval::new();
     let mut par = parallel_eval(4);
+    let mut par_nosteal = parallel_eval(4).with_work_stealing(false);
     let runs = [
         run_lr_chain(&mut interp, 200),
         run_lr_chain(&mut seq, 200),
         run_lr_chain(&mut par, 200),
+        run_lr_chain(&mut par_nosteal, 200),
     ];
     for (r, run) in runs.iter().enumerate().skip(1) {
         for (i, (a, b)) in runs[0].iter().zip(run).enumerate() {
@@ -171,6 +185,97 @@ fn lockstep_200_transitions_threads_4() {
         "no transition was ever accepted"
     );
     assert!(par.sharded_sections() > 0, "pool never engaged over 200 transitions");
+    assert_eq!(par_nosteal.stolen_sections(), 0);
+}
+
+// ---------------------------------------------------------------------
+// work-stealing dispatch
+// ---------------------------------------------------------------------
+
+/// With every pool worker parked on a blocking task, the only runnable
+/// thread is the dispatcher itself: the whole batch must be drained by
+/// stolen shards, and the results must still match the oracle bitwise.
+/// (Before work-stealing this scenario would simply deadlock until the
+/// workers were released.)
+#[test]
+fn stealing_drains_the_queue_when_workers_are_busy() {
+    use std::sync::mpsc::channel;
+    let data = synth2d::generate(500, 91);
+    let mut rng = Pcg64::seeded(92);
+    let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+    let p = trace.cached_partition(w).expect("no border partition");
+    let roots = p.locals.clone();
+    let cur = trace.fresh_value(w);
+    let new_w = Proposal::Drift(0.2).propose(&cur, &mut rng).unwrap();
+    let mut interp = InterpreterEval;
+    let want = interp.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+
+    let pool = WorkerPool::new(2);
+    // park both workers on tasks that block until released
+    let (release_tx, release_rx) = channel::<()>();
+    let release_rx = std::sync::Arc::new(std::sync::Mutex::new(release_rx));
+    let (parked_tx, parked_rx) = channel::<()>();
+    for _ in 0..2 {
+        let parked_tx = parked_tx.clone();
+        let release_rx = release_rx.clone();
+        pool.submit(Box::new(move || {
+            let _ = parked_tx.send(());
+            let _ = release_rx.lock().unwrap().recv();
+        }));
+    }
+    // wait until both workers are actually inside the blocking tasks
+    parked_rx.recv().unwrap();
+    parked_rx.recv().unwrap();
+
+    let mut par = PlannedEval::with_pool(pool.clone()).with_min_parallel(1);
+    let got = par.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+    assert_bitwise("busy-pool steal", &got, &want);
+    // nobody else could have run the shards
+    assert_eq!(
+        par.stolen_sections(),
+        par.sharded_sections(),
+        "a parked worker somehow replayed a shard"
+    );
+    assert!(par.stolen_sections() > 0, "dispatcher never stole");
+    // the stats snapshot hook reports the same tier traffic
+    let st = par.stats();
+    assert_eq!(st.stolen, par.stolen_sections());
+    assert_eq!(st.sharded, par.sharded_sections());
+    assert_eq!(st.batched, par.batched_sections);
+    assert_eq!(st.planned, par.planned_sections);
+    assert_eq!(st.fallback, 0);
+    // release the workers so Drop can join them
+    drop(release_tx);
+    drop(par);
+    drop(pool);
+}
+
+/// Stealing disabled must also stay correct (the pre-steal behavior),
+/// and both modes must agree on a sampled mini-batch, not just whole
+/// populations.
+#[test]
+fn steal_and_nosteal_agree_on_sampled_minibatches() {
+    let data = synth2d::generate(400, 93);
+    let mut rng = Pcg64::seeded(94);
+    let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+    let p = trace.cached_partition(w).expect("no border partition");
+    let cur = trace.fresh_value(w);
+    let new_w = Proposal::Drift(0.15).propose(&cur, &mut rng).unwrap();
+    let idx = rng.sample_without_replacement(p.n(), 120);
+    let roots: Vec<_> = idx.iter().map(|&i| p.locals[i]).collect();
+    let mut interp = InterpreterEval;
+    let want = interp.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+    for threads in [2usize, 4] {
+        for steal in [true, false] {
+            let mut par = parallel_eval(threads).with_work_stealing(steal);
+            let got = par.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+            assert_bitwise(
+                &format!("minibatch threads{threads} steal={steal}"),
+                &got,
+                &want,
+            );
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
