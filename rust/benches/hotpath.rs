@@ -80,6 +80,12 @@ struct SweepRow {
     interp_sps: f64,
     planned_sps: f64,
     batched_sps: f64,
+    /// Store-backed gather + lane-panel replay (same batches as
+    /// `batched_sps`, which pays a fresh `pack_into` per call).
+    store_sps: f64,
+    /// Fraction of store-path sections served without re-reading the
+    /// trace: `1 - refreshed / gathered`.
+    store_hit: f64,
     /// Thread sweep at chunk `PAR_M`: sections/sec with 1/2/4 worker
     /// threads.  The 1-thread column is the sequential batched path at
     /// the same chunk size, so the ratios isolate pure thread scaling.
@@ -105,20 +111,36 @@ fn scorer_sweep(ns: &[usize], d: usize, m: usize) -> Vec<SweepRow> {
         let mut planned = PlannedEval::scalar();
         let planned_sps =
             sections_per_sec(&mut planned, &mut trace, &p, &new_w, m, target, reps);
-        let mut batched = PlannedEval::new();
+        // fresh pack per call: the store's fallback and comparison base
+        let mut batched = PlannedEval::new().with_colstore(false);
         let batched_sps =
             sections_per_sec(&mut batched, &mut trace, &p, &new_w, m, target, reps);
+        // store-backed gather + lane-panel replay
+        let mut store = PlannedEval::new().with_colstore(true);
+        let store_sps = sections_per_sec(&mut store, &mut trace, &p, &new_w, m, target, reps);
+        let store_hit = if store.gathered_sections > 0 {
+            1.0 - store.store_refreshed as f64 / store.gathered_sections as f64
+        } else {
+            0.0
+        };
         println!(
             "scorer sweep N={n:<7} interp {interp_sps:>12.0} sections/s   planned {planned_sps:>12.0} sections/s   batched {batched_sps:>12.0} sections/s   batched/planned {:.2}x",
             batched_sps / planned_sps
         );
-        // thread sweep: same kernel, chunk PAR_M, 1/2/4 workers
+        println!(
+            "store  sweep N={n:<7} store  {store_sps:>12.0} sections/s   store/batched {:.2}x   hit rate {:.3}",
+            store_sps / batched_sps,
+            store_hit
+        );
+        // thread sweep: same packed kernel, chunk PAR_M, 1/2/4 workers
+        // (store off so the columns keep measuring pure thread scaling
+        // of the pack+replay path, comparable with earlier artifacts)
         let mut par_sps = [0.0f64; 3];
         for (i, &t) in PAR_THREADS.iter().enumerate() {
             let mut ev = if t == 1 {
-                PlannedEval::new()
+                PlannedEval::new().with_colstore(false)
             } else {
-                PlannedEval::with_pool(WorkerPool::new(t))
+                PlannedEval::with_pool(WorkerPool::new(t)).with_colstore(false)
             };
             par_sps[i] =
                 sections_per_sec(&mut ev, &mut trace, &p, &new_w, PAR_M, target, reps);
@@ -134,6 +156,8 @@ fn scorer_sweep(ns: &[usize], d: usize, m: usize) -> Vec<SweepRow> {
             interp_sps,
             planned_sps,
             batched_sps,
+            store_sps,
+            store_hit,
             par_sps,
         });
     }
@@ -227,6 +251,36 @@ fn self_checks(rows: &[SweepRow]) -> Vec<(&'static str, Check)> {
             ),
         },
     ));
+    // the store path (gather + lane panels) must never lose to fresh
+    // per-transition packing...
+    checks.push((
+        "store_not_below_batched",
+        first_fail(
+            rows,
+            |r| r.store_sps > 0.85 * r.batched_sps,
+            |r| {
+                format!(
+                    "store-backed replay regressed below fresh pack at N={}: {:.0} vs {:.0} sections/s",
+                    r.n, r.store_sps, r.batched_sps
+                )
+            },
+        ),
+    ));
+    // ... and must win decisively once the trace-read cost of packing
+    // dominates (the whole point of the persistent store)
+    checks.push((
+        "store_gather_1p3x_at_1e5",
+        match rows.iter().find(|r| r.n >= 100_000) {
+            None => Check::Skip("no N=1e5 row (quick sweep)".into()),
+            Some(r) => from_bool(
+                r.store_sps >= 1.3 * r.batched_sps,
+                format!(
+                    "store-backed replay must be >= 1.3x fresh pack at N={}: {:.0} vs {:.0} sections/s",
+                    r.n, r.store_sps, r.batched_sps
+                ),
+            ),
+        },
+    ));
     // the dispatch cutoff + shard sizing must keep 4 threads from ever
     // *losing* to 1; meaningless without real parallelism
     checks.push((
@@ -265,15 +319,18 @@ fn emit_json(rows: &[SweepRow], micro: &[(String, f64)], checks: &[(&'static str
     for (i, r) in rows.iter().enumerate() {
         let _ = writeln!(
             out,
-            "    {{\"n\": {}, \"d\": {}, \"m\": {}, \"interpreter_sections_per_sec\": {:.1}, \"planned_sections_per_sec\": {:.1}, \"batched_sections_per_sec\": {:.1}, \"speedup\": {:.3}, \"batched_over_planned\": {:.3}, \"parallel_m\": {}, \"parallel_sections_per_sec\": {{\"t1\": {:.1}, \"t2\": {:.1}, \"t4\": {:.1}}}, \"parallel_t4_over_t1\": {:.3}}}{}",
+            "    {{\"n\": {}, \"d\": {}, \"m\": {}, \"interpreter_sections_per_sec\": {:.1}, \"planned_sections_per_sec\": {:.1}, \"batched_sections_per_sec\": {:.1}, \"store_sections_per_sec\": {:.1}, \"speedup\": {:.3}, \"batched_over_planned\": {:.3}, \"store_over_batched\": {:.3}, \"store_hit_rate\": {:.4}, \"parallel_m\": {}, \"parallel_sections_per_sec\": {{\"t1\": {:.1}, \"t2\": {:.1}, \"t4\": {:.1}}}, \"parallel_t4_over_t1\": {:.3}}}{}",
             r.n,
             r.d,
             r.m,
             r.interp_sps,
             r.planned_sps,
             r.batched_sps,
+            r.store_sps,
             r.planned_sps / r.interp_sps,
             r.batched_sps / r.planned_sps,
+            r.store_sps / r.batched_sps,
+            r.store_hit,
             PAR_M,
             r.par_sps[0],
             r.par_sps[1],
@@ -346,12 +403,19 @@ fn main() {
     });
     micro.push(("planned_eval_sections_m100".into(), t));
 
-    let mut batched = PlannedEval::new();
+    let mut batched = PlannedEval::new().with_colstore(false);
     let t = bench("batched eval_sections (m=100, D=50)", if quick { 100 } else { 500 }, || {
         let ls = batched.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
         std::hint::black_box(ls.len());
     });
     micro.push(("batched_eval_sections_m100".into(), t));
+
+    let mut store = PlannedEval::new().with_colstore(true);
+    let t = bench("store eval_sections (m=100, D=50)", if quick { 100 } else { 500 }, || {
+        let ls = store.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+        std::hint::black_box(ls.len());
+    });
+    micro.push(("store_eval_sections_m100".into(), t));
 
     let t = bench(&format!("sparse sampler: 100 draws of {n0}"), 2000, || {
         let mut s = SparseSampler::new(n0);
@@ -379,6 +443,16 @@ fn main() {
         },
     );
     micro.push(("subsampled_transition_batched".into(), t));
+
+    let t = bench(
+        &format!("subsampled transition, store (N={n0})"),
+        if quick { 50 } else { 200 },
+        || {
+            let s = subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, &mut store).unwrap();
+            std::hint::black_box(s.sections_evaluated);
+        },
+    );
+    micro.push(("subsampled_transition_store".into(), t));
 
     let t = bench(
         &format!("subsampled transition, planned (N={n0})"),

@@ -28,8 +28,11 @@ SWEEP_SCALAR_KEYS = {
     "interpreter_sections_per_sec": float,
     "planned_sections_per_sec": float,
     "batched_sections_per_sec": float,
+    "store_sections_per_sec": float,
     "speedup": float,
     "batched_over_planned": float,
+    "store_over_batched": float,
+    "store_hit_rate": float,
     "parallel_m": int,
     "parallel_t4_over_t1": float,
 }
@@ -44,8 +47,10 @@ MICRO_KEYS = {
     "interpreter_eval_sections_m100",
     "planned_eval_sections_m100",
     "batched_eval_sections_m100",
+    "store_eval_sections_m100",
     "sparse_sampler_100_draws",
     "subsampled_transition_batched",
+    "subsampled_transition_store",
     "subsampled_transition_planned",
     "subsampled_transition_interpreter",
     "exact_full_scan_transition",
@@ -58,6 +63,8 @@ SELF_CHECK_KEYS = {
     "planned_not_below_interpreter",
     "batched_not_below_planned",
     "batched_wins_at_1e5",
+    "store_not_below_batched",
+    "store_gather_1p3x_at_1e5",
     "t4_not_below_t1",
     "t4_speedup_1p5x_at_1e5",
 }
@@ -80,7 +87,14 @@ def check_sweep_row(i, row):
             err(f"scorer_sweep[{i}]: missing column {key!r}")
             continue
         v = row[key]
-        if kind is int and not (isinstance(v, int) and not isinstance(v, bool)):
+        if key == "store_hit_rate":
+            # a legitimate 0.0 (store fell back, or every gathered
+            # section was refreshed) must not fail the schema gate —
+            # perf regressions are the self-checks' job, not this one's
+            if not (isinstance(v, (int, float)) and not isinstance(v, bool)
+                    and math.isfinite(v) and 0.0 <= v <= 1.0):
+                err(f"scorer_sweep[{i}].store_hit_rate: expected a fraction in [0, 1], got {v!r}")
+        elif kind is int and not (isinstance(v, int) and not isinstance(v, bool)):
             err(f"scorer_sweep[{i}].{key}: expected integer, got {v!r}")
         elif not positive_finite(v):
             err(f"scorer_sweep[{i}].{key}: expected positive finite number, got {v!r}")

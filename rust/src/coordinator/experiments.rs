@@ -587,6 +587,11 @@ pub fn fig9_sv_monitored(
     let t0 = Instant::now();
     let blocks: Vec<Value> = (1..=cfg.len as i64).map(Value::Int).collect();
     for _ in 0..cfg.sweeps {
+        // a fired monitor gate asks chains to wind down at the next
+        // sweep boundary (best-effort; see ChainSink::cancelled)
+        if buf.as_ref().is_some_and(|b| b.cancelled()) {
+            break;
+        }
         // particle gibbs over a few random series' state chains
         for _ in 0..cfg.h_per_param {
             let s = rng.below(cfg.series);
@@ -607,7 +612,9 @@ pub fn fig9_sv_monitored(
         phi_samples.push(phi_v);
         sig_samples.push(sig_v);
         if let Some(b) = buf.as_mut() {
-            b.push(vec![phi_v, sig_v]);
+            // draws + the evaluator's cumulative tier counters, so the
+            // monitor can stream per-interval EvalStats diffs
+            b.push_with_stats(vec![phi_v, sig_v], ev.stats());
         }
     }
     drop(buf); // flush the tail before the result is reported
@@ -637,7 +644,7 @@ pub fn fig9_repeated(
     subsampled: bool,
     trials: usize,
 ) -> Result<Vec<Fig9Result>, String> {
-    fig9_repeated_monitored(cfg, subsampled, trials, 0).map(|(rs, _)| rs)
+    fig9_repeated_monitored(cfg, subsampled, trials, 0, None).map(|(rs, _)| rs)
 }
 
 /// [`fig9_repeated`] with streaming convergence diagnostics: when
@@ -648,11 +655,18 @@ pub fn fig9_repeated(
 /// deterministic in the seed — the monitor folds chains by index over
 /// fixed prefixes — and trial results are bitwise identical to the
 /// unmonitored run's.
+/// `monitor_gate`: when `Some(r)` and monitoring is on, the run stops
+/// early — via the gated multichain driver's shared stop flag, observed
+/// at each trial's sweep boundary — once a snapshot reports every
+/// watched parameter's rank-normalized R̂ finite and below `r`.  The
+/// final [`ConvergenceMonitor::finish`] snapshot is still folded and
+/// emitted over everything the chains recorded before stopping.
 pub fn fig9_repeated_monitored(
     cfg: &Fig9Config,
     subsampled: bool,
     trials: usize,
     monitor_every: usize,
+    monitor_gate: Option<f64>,
 ) -> Result<(Vec<Fig9Result>, Vec<DiagSnapshot>), String> {
     let base = cfg.clone();
     let chain = move |c: usize, sink: Option<ChainSink>| -> Fig9Result {
@@ -673,17 +687,24 @@ pub fn fig9_repeated_monitored(
     let params = vec!["phi".to_string(), "sigma".to_string()];
     let mut mon = ConvergenceMonitor::new(trials, &params, monitor_every);
     let mut snaps = Vec::new();
-    let rs = crate::coordinator::multichain::run_chains_monitored(
+    let rs = crate::coordinator::multichain::run_chains_gated(
         crate::runtime::pool::WorkerPool::global(),
         trials,
         cfg.seed,
         move |c, _rng, sink| chain(c, Some(sink)),
         |ev| {
             mon.absorb(ev);
-            snaps.extend(mon.ready_snapshots());
+            let mut keep_going = true;
+            for s in mon.ready_snapshots() {
+                if monitor_gate.is_some_and(|r| s.gate_passed(r)) {
+                    keep_going = false;
+                }
+                snaps.push(s);
+            }
+            keep_going
         },
     )?;
-    // end-of-run snapshot when the sweep count isn't a boundary multiple
+    // end-of-run snapshot when the run didn't end exactly on a boundary
     snaps.extend(mon.finish());
     Ok((rs, snaps))
 }
@@ -983,7 +1004,7 @@ mod tests {
             h_per_param: 1,
             ..Default::default()
         };
-        let (rs, snaps) = fig9_repeated_monitored(&cfg, true, 2, 5).unwrap();
+        let (rs, snaps) = fig9_repeated_monitored(&cfg, true, 2, 5, None).unwrap();
         assert_eq!(rs.len(), 2);
         // boundaries at 5 and 10 sweeps, plus the end-of-run snapshot
         assert_eq!(
@@ -1004,6 +1025,44 @@ mod tests {
             assert_eq!(bits(&a.phi_samples), bits(&b.phi_samples));
             assert_eq!(bits(&a.sig_samples), bits(&b.sig_samples));
         }
+    }
+
+    /// An absurdly loose gate fires on the first snapshot; the chains
+    /// poll the stop flag at sweep boundaries and must come home well
+    /// short of their nominal length (the margin is huge — the gate
+    /// fires within the first flush of a 600-sweep run).
+    #[test]
+    fn fig9_monitor_gate_stops_early() {
+        let cfg = Fig9Config {
+            series: 3,
+            len: 3,
+            sweeps: 600,
+            particles: 4,
+            h_per_param: 1,
+            ..Default::default()
+        };
+        let (rs, snaps) = fig9_repeated_monitored(&cfg, true, 2, 5, Some(1e6)).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert!(
+            snaps.iter().any(|s| s.gate_passed(1e6)),
+            "no snapshot ever passed a gate at 1e6"
+        );
+        let lens: Vec<usize> = rs.iter().map(|r| r.phi_samples.len()).collect();
+        // on a 1-worker pool the trials run sequentially and the first
+        // one finishes before the gate can fire (the monitor needs
+        // draws from every chain), so require only that *some* trial
+        // was cut short and none ran long
+        assert!(
+            lens.iter().any(|&n| n < cfg.sweeps),
+            "gate never shortened a trial: {lens:?}"
+        );
+        assert!(lens.iter().all(|&n| n <= cfg.sweeps), "a trial overran: {lens:?}");
+        // monitored fig9 trials stream evaluator stats: some snapshot
+        // must carry nonzero per-interval planned-section traffic
+        assert!(
+            snaps.iter().any(|s| s.eval.planned > 0),
+            "no snapshot carried evaluator stats"
+        );
     }
 
     #[test]

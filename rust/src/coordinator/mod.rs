@@ -14,6 +14,7 @@ pub use chain::{build_bayes_lr, build_joint_dpm, build_sv, timed};
 pub use fused::FusedEval;
 pub use monitor::{monitor_csv, ChainEvent, ConvergenceMonitor, DiagSnapshot, ParamDiag};
 pub use multichain::{
-    chain_rng, run_chains, run_chains_global, run_chains_monitored, BufferedSink, ChainSink,
+    chain_rng, run_chains, run_chains_gated, run_chains_global, run_chains_monitored,
+    BufferedSink, ChainSink,
 };
 pub use report::{histogram, results_dir, Csv, Table};

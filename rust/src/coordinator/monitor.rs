@@ -29,6 +29,7 @@
 //! themselves (the sink is write-only).
 
 use crate::coordinator::report::Csv;
+use crate::infer::planned::EvalStats;
 use crate::stats::{ess_lazy, rank_normalized_rhat, split_rhat};
 use std::fmt::Write as _;
 
@@ -40,6 +41,12 @@ use std::fmt::Write as _;
 pub struct ChainEvent {
     pub chain: usize,
     pub draws: Vec<Vec<f64>>,
+    /// The chain evaluator's *cumulative* tier counters as of the last
+    /// draw in this batch (`None` when the chain doesn't stream stats).
+    /// Batch boundaries are deterministic in the seed (fixed buffer
+    /// caps), so the monitor can attribute counters to per-chain draw
+    /// counts and keep snapshot contents scheduling-independent.
+    pub stats: Option<EvalStats>,
 }
 
 /// One parameter's diagnostics within a snapshot.
@@ -64,11 +71,18 @@ pub struct DiagSnapshot {
     pub draws_per_chain: usize,
     pub chains: usize,
     pub params: Vec<ParamDiag>,
+    /// Pooled evaluator-tier traffic since the previous snapshot
+    /// (chains' streamed counters summed at this snapshot's horizon,
+    /// then diffed against the last emitted snapshot's totals).  All
+    /// zeros when no chain streams stats.
+    pub eval: EvalStats,
 }
 
 impl DiagSnapshot {
     /// One console line per snapshot, e.g.
-    /// `[monitor] n=200/chain  phi: R-hat=1.012 rank=1.009 ESS=312.4  sigma: ...`.
+    /// `[monitor] n=200/chain  phi: R-hat=1.012 rank=1.009 ESS=312.4  sigma: ...`,
+    /// with an evaluator-traffic tail (`eval: +planned=... +gathered=...`)
+    /// when the chains stream tier counters.
     pub fn render(&self) -> String {
         let mut out = format!("[monitor] n={}/chain", self.draws_per_chain);
         for p in &self.params {
@@ -78,7 +92,26 @@ impl DiagSnapshot {
                 p.name, p.rhat, p.rank_rhat, p.ess
             );
         }
+        if self.eval != EvalStats::default() {
+            let e = &self.eval;
+            let _ = write!(
+                out,
+                "  eval: +planned={} +batched={} +gathered={} +fallback={} +sharded={} +stolen={}",
+                e.planned, e.batched, e.gathered, e.fallback, e.sharded, e.stolen
+            );
+        }
         out
+    }
+
+    /// The `--monitor-gate` predicate: every watched parameter's
+    /// rank-normalized R̂ is finite and strictly below `target`.  NaN
+    /// (no usable draws) never reads as converged.
+    pub fn gate_passed(&self, target: f64) -> bool {
+        !self.params.is_empty()
+            && self
+                .params
+                .iter()
+                .all(|p| p.rank_rhat.is_finite() && p.rank_rhat < target)
     }
 
     /// Worst (largest) R̂ across parameters, taking the rank-normalized
@@ -112,10 +145,22 @@ pub fn monitor_csv(groups: &[(&str, &[DiagSnapshot])]) -> Csv {
         "rhat",
         "rank_rhat",
         "ess",
+        "planned",
+        "batched",
+        "gathered",
+        "fallback",
+        "sharded",
+        "stolen",
     ]);
     for (label, snaps) in groups {
         for s in *snaps {
-            for p in &s.params {
+            for (pi, p) in s.params.iter().enumerate() {
+                // the eval counters are snapshot-scoped, not
+                // per-parameter: emit them on the snapshot's first row
+                // only (zeros on the rest) so summing a counter column
+                // over the file never multiplies interval traffic by
+                // the number of watched parameters
+                let ev = |v: usize| if pi == 0 { v.to_string() } else { "0".to_string() };
                 csv.row(&[
                     label.to_string(),
                     s.draws_per_chain.to_string(),
@@ -125,6 +170,12 @@ pub fn monitor_csv(groups: &[(&str, &[DiagSnapshot])]) -> Csv {
                     p.rhat.to_string(),
                     p.rank_rhat.to_string(),
                     p.ess.to_string(),
+                    ev(s.eval.planned),
+                    ev(s.eval.batched),
+                    ev(s.eval.gathered),
+                    ev(s.eval.fallback),
+                    ev(s.eval.sharded),
+                    ev(s.eval.stolen),
                 ]);
             }
         }
@@ -139,6 +190,13 @@ pub struct ConvergenceMonitor {
     /// `draws[chain][param]` — all draws recorded so far, keyed by chain
     /// index so fold order never depends on event arrival order.
     draws: Vec<Vec<Vec<f64>>>,
+    /// Per-chain `(cumulative draw count, cumulative counters)` points,
+    /// in recording order (mpsc preserves per-sender order).  Keyed by
+    /// chain + draw count, so the totals attributed to a snapshot
+    /// horizon are scheduling-independent, like the draws themselves.
+    stats_points: Vec<Vec<(usize, EvalStats)>>,
+    /// Totals attributed to the last emitted snapshot (diff base).
+    last_stats: EvalStats,
     /// Next per-chain draw count at which a snapshot fires.
     next_boundary: usize,
     /// Horizon of the last snapshot handed out (boundary or final), so
@@ -156,6 +214,8 @@ impl ConvergenceMonitor {
             every,
             params: params.to_vec(),
             draws: vec![vec![Vec::new(); params.len()]; chains],
+            stats_points: vec![Vec::new(); chains],
+            last_stats: EvalStats::default(),
             next_boundary: every,
             last_emitted: 0,
         }
@@ -182,6 +242,10 @@ impl ConvergenceMonitor {
             for (p, &x) in row.iter().enumerate() {
                 slot[p].push(x);
             }
+        }
+        if let Some(st) = ev.stats {
+            let at = slot[0].len();
+            self.stats_points[ev.chain].push((at, st));
         }
     }
 
@@ -222,10 +286,23 @@ impl ConvergenceMonitor {
         Some(self.snapshot_at(n))
     }
 
+    /// Summed per-chain counters at horizon `n`: for each chain, the
+    /// last streamed point whose draw count is <= n — a pure function
+    /// of (chain streams, n), like the draw fold.
+    fn stats_at(&self, n: usize) -> EvalStats {
+        let mut tot = EvalStats::default();
+        for pts in &self.stats_points {
+            if let Some((_, st)) = pts.iter().rev().find(|(at, _)| *at <= n) {
+                tot = tot.add(st);
+            }
+        }
+        tot
+    }
+
     /// Fold-order-normalized reduction: chains enter in index order,
     /// truncated to exactly the first `n` draws each, so the result is a
     /// pure function of (chain contents, n).
-    fn snapshot_at(&self, n: usize) -> DiagSnapshot {
+    fn snapshot_at(&mut self, n: usize) -> DiagSnapshot {
         let params = self
             .params
             .iter()
@@ -244,10 +321,14 @@ impl ConvergenceMonitor {
                 }
             })
             .collect();
+        let totals = self.stats_at(n);
+        let eval = totals.diff(&self.last_stats);
+        self.last_stats = totals;
         DiagSnapshot {
             draws_per_chain: n,
             chains: self.draws.len(),
             params,
+            eval,
         }
     }
 }
@@ -261,6 +342,7 @@ mod tests {
         ChainEvent {
             chain,
             draws: rows.iter().map(|r| r.to_vec()).collect(),
+            stats: None,
         }
     }
 
@@ -320,6 +402,7 @@ mod tests {
         let ev = |c: usize, lo: usize, hi: usize| ChainEvent {
             chain: c,
             draws: chains[c][lo..hi].iter().map(|&x| vec![x]).collect(),
+            stats: None,
         };
         // in-order delivery
         let mut a = ConvergenceMonitor::new(3, &names, 10);
@@ -362,8 +445,8 @@ mod tests {
         let healthy: Vec<Vec<f64>> = (0..200).map(|_| vec![rng.normal()]).collect();
         let stuck: Vec<Vec<f64>> =
             (0..200).map(|_| vec![6.0 + 0.01 * rng.normal()]).collect();
-        mon.absorb(ChainEvent { chain: 0, draws: healthy });
-        mon.absorb(ChainEvent { chain: 1, draws: stuck });
+        mon.absorb(ChainEvent { chain: 0, draws: healthy, stats: None });
+        mon.absorb(ChainEvent { chain: 1, draws: stuck, stats: None });
         let snaps = mon.ready_snapshots();
         assert_eq!(snaps.len(), 1);
         let s = &snaps[0];
@@ -373,6 +456,68 @@ mod tests {
         assert!(line.contains("x: R-hat="), "{line}");
     }
 
+    /// Streamed evaluator counters are attributed to per-chain draw
+    /// counts and diffed between snapshots — a chain whose only stats
+    /// point lies past the horizon contributes nothing yet, so the
+    /// fold is a pure function of (streams, horizon) like the draws.
+    #[test]
+    fn stats_points_fold_into_interval_diffs() {
+        let names = vec!["x".to_string()];
+        let mut mon = ConvergenceMonitor::new(2, &names, 4);
+        let st = |planned: usize| EvalStats {
+            planned,
+            ..EvalStats::default()
+        };
+        mon.absorb(ChainEvent {
+            chain: 0,
+            draws: vec![vec![0.1]; 4],
+            stats: Some(st(40)),
+        });
+        mon.absorb(ChainEvent {
+            chain: 0,
+            draws: vec![vec![0.2]; 4],
+            stats: Some(st(100)),
+        });
+        assert!(mon.ready_snapshots().is_empty());
+        mon.absorb(ChainEvent {
+            chain: 1,
+            draws: vec![vec![0.3]; 8],
+            stats: Some(st(70)),
+        });
+        let snaps = mon.ready_snapshots();
+        assert_eq!(snaps.len(), 2);
+        // boundary 4: chain 0's point at 4 counts; chain 1's only
+        // point (at 8) is past the horizon
+        assert_eq!(snaps[0].eval.planned, 40);
+        // boundary 8: totals 100 + 70, minus the 40 already attributed
+        assert_eq!(snaps[1].eval.planned, 130);
+        let line = snaps[1].render();
+        assert!(line.contains("eval: +planned=130"), "{line}");
+    }
+
+    /// The gate predicate: every rank-R̂ finite and strictly below the
+    /// target; NaN or an empty parameter set never passes.
+    #[test]
+    fn gate_passed_requires_every_rank_rhat_finite_below_target() {
+        let p = |rank: f64| ParamDiag {
+            name: "p".into(),
+            mean: 0.0,
+            rhat: 1.0,
+            rank_rhat: rank,
+            ess: 10.0,
+        };
+        let snap = |params: Vec<ParamDiag>| DiagSnapshot {
+            draws_per_chain: 8,
+            chains: 2,
+            params,
+            eval: EvalStats::default(),
+        };
+        assert!(snap(vec![p(1.004), p(1.009)]).gate_passed(1.01));
+        assert!(!snap(vec![p(1.004), p(1.02)]).gate_passed(1.01));
+        assert!(!snap(vec![p(f64::NAN)]).gate_passed(1.01));
+        assert!(!snap(Vec::new()).gate_passed(1.01));
+    }
+
     #[test]
     fn monitor_csv_has_a_row_per_param() {
         let names = vec!["a".to_string(), "b".to_string()];
@@ -380,7 +525,7 @@ mod tests {
         let mut rng = Pcg64::seeded(10);
         let rows: Vec<Vec<f64>> =
             (0..16).map(|_| vec![rng.normal(), rng.normal()]).collect();
-        mon.absorb(ChainEvent { chain: 0, draws: rows });
+        mon.absorb(ChainEvent { chain: 0, draws: rows, stats: None });
         let snaps = mon.ready_snapshots();
         assert_eq!(snaps.len(), 2);
         let csv = monitor_csv(&[("smoke", snaps.as_slice())]);

@@ -27,8 +27,10 @@
 //! `tests/monitor.rs`.
 
 use crate::coordinator::monitor::ChainEvent;
+use crate::infer::planned::EvalStats;
 use crate::math::Pcg64;
 use crate::runtime::pool::WorkerPool;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
@@ -109,6 +111,7 @@ enum MonitorMsg {
 pub struct ChainSink {
     chain: usize,
     tx: Sender<MonitorMsg>,
+    stop: Arc<AtomicBool>,
 }
 
 impl ChainSink {
@@ -117,16 +120,35 @@ impl ChainSink {
         self.chain
     }
 
+    /// Whether the driver has asked chains to wind down early (a
+    /// `--monitor-gate` fired; see [`run_chains_gated`]).  Chains check
+    /// this at a convenient boundary — a sweep, a recorded sample — and
+    /// return.  The stop is best-effort: *when* each chain notices is
+    /// scheduling-dependent, so a gated run trades tail-length
+    /// determinism for wall clock; the snapshot stream up to the gate
+    /// remains deterministic in the seed.
+    pub fn cancelled(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
     /// Stream a batch of recorded draws (`rows[s][p]` = watched
     /// parameter `p` at recorded sample `s`).  Empty batches are
     /// dropped.
     pub fn send(&self, rows: Vec<Vec<f64>>) {
+        self.send_with_stats(rows, None);
+    }
+
+    /// [`send`](Self::send) carrying the chain evaluator's cumulative
+    /// tier counters as of the batch's last draw — the monitor streams
+    /// their per-interval diffs into its snapshots.
+    pub fn send_with_stats(&self, rows: Vec<Vec<f64>>, stats: Option<EvalStats>) {
         if rows.is_empty() {
             return;
         }
         let _ = self.tx.send(MonitorMsg::Event(ChainEvent {
             chain: self.chain,
             draws: rows,
+            stats,
         }));
     }
 
@@ -138,6 +160,7 @@ impl ChainSink {
             sink: self,
             cap: cap.max(1),
             rows: Vec::new(),
+            stats: None,
         }
     }
 }
@@ -150,6 +173,9 @@ pub struct BufferedSink {
     sink: ChainSink,
     cap: usize,
     rows: Vec<Vec<f64>>,
+    /// Evaluator counters as of the most recent pushed row (flushed
+    /// alongside the rows; `None` when the chain doesn't stream stats).
+    stats: Option<EvalStats>,
 }
 
 impl BufferedSink {
@@ -161,9 +187,24 @@ impl BufferedSink {
         }
     }
 
+    /// [`push`](Self::push) carrying the chain evaluator's cumulative
+    /// counters as of this row (the last pushed snapshot rides along
+    /// with the flush).
+    pub fn push_with_stats(&mut self, row: Vec<f64>, stats: EvalStats) {
+        self.stats = Some(stats);
+        self.push(row);
+    }
+
+    /// Whether the driver has asked chains to wind down early (see
+    /// [`ChainSink::cancelled`]).
+    pub fn cancelled(&self) -> bool {
+        self.sink.cancelled()
+    }
+
     /// Send everything buffered so far (also runs on drop).
     pub fn flush(&mut self) {
-        self.sink.send(std::mem::take(&mut self.rows));
+        self.sink
+            .send_with_stats(std::mem::take(&mut self.rows), self.stats.take());
     }
 }
 
@@ -196,20 +237,51 @@ where
     F: Fn(usize, Pcg64, ChainSink) -> T + Send + Sync + 'static,
     E: FnMut(ChainEvent),
 {
+    run_chains_gated(pool, chains, seed, f, move |ev| {
+        on_event(ev);
+        true
+    })
+}
+
+/// [`run_chains_monitored`] with an early-stop gate: `on_event` returns
+/// `false` to ask every chain to wind down (e.g. once a convergence
+/// snapshot crosses the `--monitor-gate` target).  The driver raises
+/// the shared stop flag — observable through [`ChainSink::cancelled`] —
+/// and keeps folding events until every chain has actually finished, so
+/// the final [`ConvergenceMonitor::finish`] snapshot still sees every
+/// recorded draw.  Chains that never check the flag simply run to
+/// completion; the gate can only shorten runs, never corrupt them.
+///
+/// [`ConvergenceMonitor::finish`]: crate::coordinator::monitor::ConvergenceMonitor::finish
+pub fn run_chains_gated<T, F, E>(
+    pool: &Arc<WorkerPool>,
+    chains: usize,
+    seed: u64,
+    f: F,
+    mut on_event: E,
+) -> Result<Vec<T>, String>
+where
+    T: Send + 'static,
+    F: Fn(usize, Pcg64, ChainSink) -> T + Send + Sync + 'static,
+    E: FnMut(ChainEvent) -> bool,
+{
     if chains == 0 {
         return Ok(Vec::new());
     }
     let f = Arc::new(f);
+    let stop = Arc::new(AtomicBool::new(false));
     let (rtx, rrx) = channel::<(usize, T)>();
     let (etx, erx) = channel::<MonitorMsg>();
     for c in 0..chains {
         let f = f.clone();
         let rtx = rtx.clone();
         let etx = etx.clone();
+        let stop = stop.clone();
         pool.submit(Box::new(move || {
             let sink = ChainSink {
                 chain: c,
                 tx: etx.clone(),
+                stop,
             };
             let out = f(c, chain_rng(seed, c), sink);
             // result first, then the Done marker: by the time the driver
@@ -223,7 +295,11 @@ where
     let mut done = 0usize;
     while done < chains {
         match erx.recv() {
-            Ok(MonitorMsg::Event(ev)) => on_event(ev),
+            Ok(MonitorMsg::Event(ev)) => {
+                if !on_event(ev) {
+                    stop.store(true, Ordering::Relaxed);
+                }
+            }
             Ok(MonitorMsg::Done) => done += 1,
             // all event senders dropped before every chain reported: a
             // chain panicked (its catch_unwind dropped the senders)
@@ -233,7 +309,9 @@ where
     // per-sender FIFO means no events can trail a chain's own Done, but
     // a clone held by a still-unwinding closure costs nothing to drain
     while let Ok(MonitorMsg::Event(ev)) = erx.try_recv() {
-        on_event(ev);
+        if !on_event(ev) {
+            stop.store(true, Ordering::Relaxed);
+        }
     }
     let mut slots: Vec<Option<T>> = (0..chains).map(|_| None).collect();
     for _ in 0..chains {
@@ -354,6 +432,41 @@ mod tests {
         )
         .unwrap();
         assert_eq!(batches, vec![4, 4, 2], "tail rows lost or re-batched");
+    }
+
+    /// A `false` from the gated driver's callback must raise the stop
+    /// flag, and chains polling `ChainSink::cancelled` must wind down
+    /// well before their nominal length.
+    #[test]
+    fn gate_stops_chains_early() {
+        let pool = WorkerPool::new(2);
+        let mut events = 0usize;
+        let results = run_chains_gated(
+            &pool,
+            2,
+            11,
+            |_c, mut rng, sink| {
+                let mut n = 0usize;
+                for _ in 0..100_000 {
+                    if sink.cancelled() {
+                        break;
+                    }
+                    sink.send(vec![vec![rng.normal()]]);
+                    n += 1;
+                }
+                n
+            },
+            |_ev| {
+                events += 1;
+                events < 10 // gate fires on the 10th event
+            },
+        )
+        .unwrap();
+        assert!(events >= 10, "gate never evaluated: {events} events");
+        assert!(
+            results.iter().all(|&n| n < 100_000),
+            "gate never stopped a chain: {results:?}"
+        );
     }
 
     #[test]

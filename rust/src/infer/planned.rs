@@ -1,14 +1,21 @@
 //! The planned local-section evaluator: the default hot path for
 //! subsampled MH.
 //!
-//! `PlannedEval` scores mini-batches in three tiers, cheapest first:
+//! `PlannedEval` scores mini-batches in tiers, cheapest first:
 //!
 //! 1. **batched** (default) — the sampled roots are grouped by
 //!    [`ShapeKey`](crate::trace::batch::ShapeKey) through the trace's
-//!    cached [`BatchPlanSet`](crate::trace::batch::BatchPlanSet); each
-//!    group replays *one* op list column-wise over all of its sampled
-//!    sections through an f64 [`RegFile`] — no `Value` enum dispatch,
-//!    no per-section plan lookup.
+//!    cached [`BatchPlanSet`](crate::trace::batch::BatchPlanSet).
+//!    1a. **store** (default, `SUBPPL_COLSTORE=0` to disable) — each
+//!    sampled group is served from the persistent column store
+//!    (`trace/colstore.rs`): an O(|mini-batch|) index gather feeding
+//!    the lane-blocked panel kernel, with per-member rows refreshed
+//!    lazily on `value_version` changes — no per-transition trace
+//!    reads in steady state.
+//!    1b. **fresh pack** (the store's fallback and oracle) — the group
+//!    is packed from the trace ([`PackedBatch`]) and replayed
+//!    column-wise through an f64 [`RegFile`] — no `Value` enum
+//!    dispatch, no per-section plan lookup.
 //! 2. **scalar** — sections outside any batched group (non-f64 shapes,
 //!    shape mismatches) replay their cached
 //!    [`SectionPlan`](crate::trace::plan::SectionPlan) individually
@@ -36,23 +43,35 @@
 use crate::infer::subsampled_mh::{InterpreterEval, LocalEvaluator, SubsampledConfig};
 use crate::ppl::value::Value;
 use crate::runtime::pool::{resolve_threads, ShardScorer, WorkerPool};
-use crate::trace::batch::{PackedBatch, RegFile};
+use crate::trace::batch::{BatchGroup, PackedBatch, RegFile};
+use crate::trace::colstore::{
+    colstore_enabled, ensure_group_members, ColumnStoreSet, LaneScratch, PanelBatch,
+};
 use crate::trace::node::NodeId;
 use crate::trace::partition::Partition;
 use crate::trace::pet::Trace;
 use crate::trace::plan::{candidate_globals, ScorerArena};
+use std::cell::RefCell;
 use std::collections::HashSet;
+use std::rc::Rc;
 use std::sync::Arc;
 
 /// Point-in-time counters of one evaluator's scoring traffic, grouped
 /// by tier — the monitor/reporting snapshot hook.  Cheap to copy;
-/// subtract two snapshots to get per-interval rates.
+/// subtract two snapshots ([`EvalStats::diff`]) to get per-interval
+/// rates.  Every counter is monotonically non-decreasing over an
+/// evaluator's lifetime — nothing resets them, not even a partition or
+/// structural rebuild (pinned by `stats_stay_monotonic_across_rebuilds`
+/// below), so interval diffs can never go negative.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct EvalStats {
     /// Sections scored through cached plans (scalar or batched tiers).
     pub planned: usize,
     /// Subset of `planned` replayed through a grouped column program.
     pub batched: usize,
+    /// Subset of `batched` served by the persistent column store
+    /// (index gather + lane-panel replay, no per-transition pack).
+    pub gathered: usize,
     /// Sections that fell back to the interpreter walk.
     pub fallback: usize,
     /// Sections replayed through worker-pool shards.
@@ -60,6 +79,41 @@ pub struct EvalStats {
     /// Sections the dispatching thread replayed inline by work-stealing
     /// queued shards while waiting on the pool.
     pub stolen: usize,
+    /// Times a column-store set was (re)built for this evaluator's
+    /// traffic (1 on first use per structure; +1 per structural change
+    /// that the store had to follow).
+    pub store_rebuilds: usize,
+}
+
+impl EvalStats {
+    /// Field-wise sum (pooling several evaluators' snapshots).
+    pub fn add(&self, o: &EvalStats) -> EvalStats {
+        EvalStats {
+            planned: self.planned + o.planned,
+            batched: self.batched + o.batched,
+            gathered: self.gathered + o.gathered,
+            fallback: self.fallback + o.fallback,
+            sharded: self.sharded + o.sharded,
+            stolen: self.stolen + o.stolen,
+            store_rebuilds: self.store_rebuilds + o.store_rebuilds,
+        }
+    }
+
+    /// Field-wise interval difference against an earlier snapshot.
+    /// Counters are monotonic, so this is ordinary subtraction in
+    /// correct use; saturating keeps a miswired pair of snapshots from
+    /// wrapping into garbage instead of reading as zero traffic.
+    pub fn diff(&self, prev: &EvalStats) -> EvalStats {
+        EvalStats {
+            planned: self.planned.saturating_sub(prev.planned),
+            batched: self.batched.saturating_sub(prev.batched),
+            gathered: self.gathered.saturating_sub(prev.gathered),
+            fallback: self.fallback.saturating_sub(prev.fallback),
+            sharded: self.sharded.saturating_sub(prev.sharded),
+            stolen: self.stolen.saturating_sub(prev.stolen),
+            store_rebuilds: self.store_rebuilds.saturating_sub(prev.store_rebuilds),
+        }
+    }
 }
 
 /// Arena-backed batch scorer over cached section plans.
@@ -70,6 +124,12 @@ pub struct PlannedEval {
     /// program (false = score every section individually; the
     /// differential harness runs both modes against the oracle).
     batched: bool,
+    /// Serve batched groups from the persistent column store (an
+    /// O(|mini-batch|) gather + lane-panel replay) with fresh
+    /// `pack_into` as the fallback.  Defaults to the `SUBPPL_COLSTORE`
+    /// kill switch (unset = on); results are bitwise identical either
+    /// way — the differential suite runs under both settings.
+    colstore: bool,
     /// Shard large packed batches across the worker pool (`None` =
     /// sequential replay; results are bitwise identical either way, so
     /// this is purely a wall-clock knob).
@@ -88,6 +148,15 @@ pub struct PlannedEval {
     /// Subset of `planned_sections` that went through a grouped
     /// column replay.
     pub batched_sections: usize,
+    /// Subset of `batched_sections` served from the column store
+    /// (gather + panel replay; no per-transition pack).
+    pub gathered_sections: usize,
+    /// Store member rows re-read from the trace (the store "miss"
+    /// count: first touches and post-commit refreshes).  The hit rate
+    /// is `1 - store_refreshed / gathered_sections`.
+    pub store_refreshed: usize,
+    /// Column-store sets built while this evaluator was driving.
+    pub store_rebuilds: usize,
     pub fallback_sections: usize,
     /// Per-call scratch: for each group, the sampled (member, output
     /// position) pairs; reused so steady state allocates nothing.
@@ -98,6 +167,11 @@ pub struct PlannedEval {
     /// sharded path matches the sequential path's cleared-not-freed
     /// buffer discipline.
     packed_spare: Option<PackedBatch>,
+    /// Reusable panel batch (the store path's analogue of
+    /// `packed_spare`).
+    panel_spare: Option<PanelBatch>,
+    /// Lane-panel scratch for sequential store-path replays.
+    lanes: LaneScratch,
 }
 
 impl Default for PlannedEval {
@@ -114,6 +188,7 @@ impl PlannedEval {
             arena: ScorerArena::new(),
             regs: RegFile::new(),
             batched: true,
+            colstore: colstore_enabled(),
             shard: None,
             fallback: InterpreterEval,
             neg: HashSet::new(),
@@ -121,11 +196,24 @@ impl PlannedEval {
             neg_version: 0,
             planned_sections: 0,
             batched_sections: 0,
+            gathered_sections: 0,
+            store_refreshed: 0,
+            store_rebuilds: 0,
             fallback_sections: 0,
             sel: Vec::new(),
             batch_out: Vec::new(),
             packed_spare: None,
+            panel_spare: None,
+            lanes: LaneScratch::default(),
         }
+    }
+
+    /// Force the column-store path on or off regardless of the
+    /// `SUBPPL_COLSTORE` environment default (the differential harness
+    /// pins both settings explicitly).
+    pub fn with_colstore(mut self, on: bool) -> PlannedEval {
+        self.colstore = on;
+        self
     }
 
     /// Score every section individually through its own plan (PR 1
@@ -210,10 +298,55 @@ impl PlannedEval {
         EvalStats {
             planned: self.planned_sections,
             batched: self.batched_sections,
+            gathered: self.gathered_sections,
             fallback: self.fallback_sections,
             sharded: self.sharded_sections(),
             stolen: self.stolen_sections(),
+            store_rebuilds: self.store_rebuilds,
         }
+    }
+
+    /// Score one group selection through the column store into
+    /// `self.batch_out`: ensure the sampled rows are fresh (lazy
+    /// `value_version` refresh), resolve the candidate side, and run
+    /// the lane-panel kernel — sequentially or sharded across the pool.
+    /// `Err` sends the caller to the fresh-pack fallback.
+    fn eval_group_store(
+        &mut self,
+        trace: &mut Trace,
+        store: &Rc<RefCell<ColumnStoreSet>>,
+        gi: usize,
+        group: &BatchGroup,
+        sel: &[(u32, u32)],
+    ) -> Result<(), String> {
+        let refreshed = ensure_group_members(trace, store, gi, group, sel)?;
+        self.store_refreshed += refreshed;
+        let panels = store.borrow().groups[gi].panels_arc();
+        let mut pb = self.panel_spare.take().unwrap_or_default();
+        if let Err(e) = pb.build_into(&panels, group, sel, &self.arena.globals) {
+            pb.release_panels();
+            self.panel_spare = Some(pb);
+            return Err(e);
+        }
+        match self.shard.as_mut() {
+            Some(sh) if sh.should_dispatch(sel.len()) => {
+                let spare = sh.replay_panel(pb, &mut self.batch_out)?;
+                // release the parked handle so the next row refresh can
+                // Arc::make_mut the store in place instead of copying
+                self.panel_spare = spare.map(|mut b| {
+                    b.release_panels();
+                    b
+                });
+            }
+            _ => {
+                self.batch_out.clear();
+                self.batch_out.resize(sel.len(), 0.0);
+                pb.replay_range(0, sel.len(), &mut self.lanes, &mut self.batch_out);
+                pb.release_panels();
+                self.panel_spare = Some(pb);
+            }
+        }
+        Ok(())
     }
 
     /// Scalar or interpreter scoring of one root into `out[pos]`.
@@ -273,6 +406,17 @@ impl LocalEvaluator for PlannedEval {
         let mut rest: Vec<(usize, NodeId)> = Vec::new();
         if self.batched {
             let set = trace.cached_batch_plans(p);
+            // the store mirrors the batch set group-for-group; a fresh
+            // build means the structure moved (or this is first use)
+            let store = if self.colstore && !set.groups.is_empty() {
+                let (rc, built) = trace.cached_colstore(p, &set);
+                if built {
+                    self.store_rebuilds += 1;
+                }
+                Some(rc)
+            } else {
+                None
+            };
             if self.sel.len() < set.groups.len() {
                 self.sel.resize_with(set.groups.len(), Vec::new);
             }
@@ -289,53 +433,70 @@ impl LocalEvaluator for PlannedEval {
                 if self.sel[gi].is_empty() {
                     continue;
                 }
-                // lazy §3.5 refresh of everything the sampled slot
-                // tables read
-                for k in 0..self.sel[gi].len() {
-                    let (mi, _) = self.sel[gi][k];
-                    for &t in group.touch_of(mi as usize) {
-                        trace.ensure_fresh(t);
-                    }
+                let sel = std::mem::take(&mut self.sel[gi]);
+                // tier 1a: gather from the persistent store (lazy
+                // per-member value_version refresh inside) and run the
+                // lane-panel kernel — bitwise identical to the packed
+                // kernel per section
+                let mut scored = match &store {
+                    Some(rc) => self.eval_group_store(trace, rc, gi, group, &sel).is_ok(),
+                    None => false,
+                };
+                if scored {
+                    self.gathered_sections += sel.len();
                 }
-                let sel = &self.sel[gi];
-                // parallel rung: pack once (into the reclaimed spare
-                // batch), shard the kernel across the pool; otherwise
-                // the sequential pack+replay.  Both run the same
-                // kernel, so results are bitwise identical.
-                let replayed = match self.shard.as_mut() {
-                    Some(sh) if sh.should_dispatch(sel.len()) => {
-                        let mut pb = self.packed_spare.take().unwrap_or_default();
-                        match pb.pack_into(trace, group, sel, &self.arena.globals) {
-                            Ok(()) => sh.replay(pb, &mut self.batch_out).map(|spare| {
-                                self.packed_spare = spare;
-                            }),
-                            Err(e) => {
-                                self.packed_spare = Some(pb);
-                                Err(e)
+                // tier 1b (and the store's fallback/oracle): fresh
+                // pack + replay.  Parallel rung: pack once (into the
+                // reclaimed spare batch), shard the kernel across the
+                // pool; otherwise the sequential pack+replay.  All of
+                // these run the same per-section scalar op sequence,
+                // so results are bitwise identical.
+                if !scored {
+                    // lazy §3.5 refresh of everything the sampled slot
+                    // tables read
+                    for &(mi, _) in &sel {
+                        for &t in group.touch_of(mi as usize) {
+                            trace.ensure_fresh(t);
+                        }
+                    }
+                    let replayed = match self.shard.as_mut() {
+                        Some(sh) if sh.should_dispatch(sel.len()) => {
+                            let mut pb = self.packed_spare.take().unwrap_or_default();
+                            match pb.pack_into(trace, group, &sel, &self.arena.globals) {
+                                Ok(()) => sh.replay(pb, &mut self.batch_out).map(|spare| {
+                                    self.packed_spare = spare;
+                                }),
+                                Err(e) => {
+                                    self.packed_spare = Some(pb);
+                                    Err(e)
+                                }
                             }
                         }
+                        _ => self.regs.replay(
+                            trace,
+                            group,
+                            &sel,
+                            &self.arena.globals,
+                            &mut self.batch_out,
+                        ),
+                    };
+                    scored = replayed.is_ok();
+                }
+                if scored {
+                    for (&(_, pos), &l) in sel.iter().zip(&self.batch_out) {
+                        out[pos as usize] = l;
                     }
-                    _ => self
-                        .regs
-                        .replay(trace, group, sel, &self.arena.globals, &mut self.batch_out),
-                };
-                match replayed {
-                    Ok(()) => {
-                        for (&(_, pos), &l) in sel.iter().zip(&self.batch_out) {
-                            out[pos as usize] = l;
-                        }
-                        self.planned_sections += sel.len();
-                        self.batched_sections += sel.len();
-                    }
+                    self.planned_sections += sel.len();
+                    self.batched_sections += sel.len();
+                } else {
                     // replay refused (a binding changed type): re-score
                     // this group's sample on the scalar path, which
                     // reproduces the oracle exactly
-                    Err(_) => {
-                        for &(_, pos) in sel {
-                            rest.push((pos as usize, roots[pos as usize]));
-                        }
+                    for &(_, pos) in &sel {
+                        rest.push((pos as usize, roots[pos as usize]));
                     }
                 }
+                self.sel[gi] = sel;
             }
         } else {
             rest.extend(roots.iter().copied().enumerate());
@@ -352,6 +513,10 @@ impl LocalEvaluator for PlannedEval {
             (true, false) => "planned-batched",
             (false, _) => "planned",
         }
+    }
+
+    fn stats(&self) -> EvalStats {
+        PlannedEval::stats(self)
     }
 }
 
@@ -551,6 +716,86 @@ mod tests {
         let got = planned.eval_sections(&mut trace, &p2, &roots, &new_v).unwrap();
         assert_bitwise(&got, &want);
         let _ = mk;
+    }
+
+    /// The store tier serves repeat batches by pure gather (no
+    /// refreshes) and stays bitwise identical to the fresh-pack path.
+    #[test]
+    fn store_tier_gathers_and_matches_pack_bitwise() {
+        let data = synth2d::generate(250, 31);
+        let mut rng = Pcg64::seeded(32);
+        let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+        let p = trace.cached_partition(w).unwrap();
+        let roots = p.locals.clone();
+        let cur = trace.fresh_value(w);
+        let new_w = Proposal::Drift(0.2).propose(&cur, &mut rng).unwrap();
+        let mut packed = PlannedEval::new().with_colstore(false);
+        let want = packed.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+        assert_eq!(packed.gathered_sections, 0, "kill switch must disable the store");
+        let mut store = PlannedEval::new().with_colstore(true);
+        let got = store.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+        assert_bitwise(&got, &want);
+        assert_eq!(store.gathered_sections, roots.len());
+        assert_eq!(store.batched_sections, roots.len());
+        assert_eq!(store.store_rebuilds, 1);
+        assert_eq!(store.store_refreshed, roots.len(), "first batch fills the rows");
+        // second batch (no commit in between): pure gather, zero misses
+        let new_w2 = Proposal::Drift(0.2).propose(&cur, &mut rng).unwrap();
+        let mut interp = InterpreterEval;
+        let want = interp.eval_sections(&mut trace, &p, &roots, &new_w2).unwrap();
+        let got = store.eval_sections(&mut trace, &p, &roots, &new_w2).unwrap();
+        assert_bitwise(&got, &want);
+        assert_eq!(store.store_refreshed, roots.len(), "steady state must not re-read");
+        assert_eq!(store.store_rebuilds, 1, "unchanged structure must not rebuild");
+    }
+
+    /// Satellite audit: every `EvalStats` counter is monotonic across
+    /// an evaluator's lifetime — including across structural rebuilds
+    /// (new observation => partitions/plans/batch sets/store all
+    /// rebuilt, neg cache reset) — so monitor per-interval diffs can
+    /// never go negative.
+    #[test]
+    fn stats_stay_monotonic_across_rebuilds() {
+        let data = synth2d::generate(200, 33);
+        let mut rng = Pcg64::seeded(34);
+        let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+        let cfg = SubsampledConfig {
+            m: 40,
+            eps: 0.01,
+            proposal: Proposal::Drift(0.1),
+            exact: false,
+            threads: 1,
+        };
+        let mut ev = PlannedEval::new();
+        let monotone = |a: &EvalStats, b: &EvalStats| {
+            b.planned >= a.planned
+                && b.batched >= a.batched
+                && b.gathered >= a.gathered
+                && b.fallback >= a.fallback
+                && b.sharded >= a.sharded
+                && b.stolen >= a.stolen
+                && b.store_rebuilds >= a.store_rebuilds
+        };
+        let mut prev = ev.stats();
+        assert_eq!(prev, EvalStats::default());
+        for step in 0..30 {
+            subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, &mut ev).unwrap();
+            if step == 14 {
+                // structural change mid-run: every structure-keyed
+                // cache (and the store) rebuilds on next use
+                trace
+                    .run_program("[observe (f (vector 0.2 -0.1 1.0)) true]", &mut rng)
+                    .unwrap();
+            }
+            let cur = ev.stats();
+            assert!(monotone(&prev, &cur), "counters regressed at step {step}");
+            // diff of consecutive snapshots is exact (no saturation hit)
+            let d = cur.diff(&prev);
+            assert_eq!(prev.add(&d), cur);
+            prev = cur;
+        }
+        assert!(prev.gathered > 0, "store tier never engaged");
+        assert!(prev.store_rebuilds >= 2, "rebuild after the structural change");
     }
 
     /// End-to-end: the planned evaluator drives subsampled transitions

@@ -13,6 +13,7 @@
 //! dispatches mini-batches to the AOT Pallas kernels.
 
 use crate::infer::mh::{mh_transition, Proposal, TransitionStats};
+use crate::infer::planned::EvalStats;
 use crate::infer::seqtest::{SequentialTest, TestState};
 use crate::math::Pcg64;
 use crate::ppl::value::Value;
@@ -78,6 +79,13 @@ pub trait LocalEvaluator {
 
     fn name(&self) -> &'static str {
         "interpreter"
+    }
+
+    /// Snapshot of the evaluator's tier counters, for streaming
+    /// per-interval diffs into the convergence monitor.  All-zero for
+    /// evaluators that don't track traffic.
+    fn stats(&self) -> EvalStats {
+        EvalStats::default()
     }
 }
 

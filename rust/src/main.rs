@@ -3,9 +3,9 @@
 //!
 //! ```text
 //! subppl run <program.vnt> [--infer "<program>"] [--seed N] [--watch a,b]
-//!            [--threads T] [--chains R] [--monitor-every K]
+//!            [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]
 //! subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused]
-//!            [--threads T] [--chains R] [--monitor-every K]
+//!            [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]
 //! subppl artifacts                 # list the AOT artifact registry
 //! ```
 //!
@@ -15,8 +15,12 @@
 //! replicas concurrently on the same pool (per-chain PCG streams).
 //! `--monitor-every K` streams convergence diagnostics while the chains
 //! run: every K recorded draws (per chain) a `[monitor]` line reports
-//! split-R-hat, rank-normalized R-hat, and total ESS for each watched
-//! parameter.  Snapshot contents are deterministic in the seed.
+//! split-R-hat, rank-normalized R-hat, total ESS, and per-interval
+//! evaluator-tier traffic for each watched parameter.  Snapshot
+//! contents are deterministic in the seed.  `--monitor-gate R` stops a
+//! monitored run early once every watched parameter's rank-normalized
+//! R-hat is finite and below R (chains wind down at their next sample
+//! boundary; the final snapshot is still emitted).
 
 use std::io::Read;
 use std::sync::Arc;
@@ -60,7 +64,7 @@ fn run(args: &[String]) -> Result<(), String> {
         Some("artifacts") => cmd_artifacts(),
         _ => {
             eprintln!(
-                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--threads T] [--chains R] [--monitor-every K]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused] [--threads T] [--chains R] [--monitor-every K]\n  subppl artifacts"
+                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]\n  subppl artifacts"
             );
             Err("missing or unknown subcommand".into())
         }
@@ -106,7 +110,13 @@ fn run_one_chain(
         let mut sums: Vec<f64> = vec![0.0; names.len()];
         // 32 rows per channel send; BufferedSink flushes the tail on drop
         let mut buf = sink.map(|s| s.clone().buffered(32));
+        let mut recorded = 0usize;
         for s in 0..samples {
+            // a fired --monitor-gate asks chains to wind down at the
+            // next sample boundary (best-effort early stop)
+            if buf.as_ref().is_some_and(|b| b.cancelled()) {
+                break;
+            }
             let stats = run_command(&mut trace, rng, &cmd, ev.as_mut())?;
             if s == 0 {
                 per_iter = Some((stats.transitions, stats.acceptance_rate()));
@@ -121,12 +131,15 @@ fn run_one_chain(
                     None => row.push(f64::NAN),
                 }
             }
+            recorded += 1;
             if let Some(b) = buf.as_mut() {
-                b.push(row);
+                // draws + cumulative tier counters: the monitor streams
+                // per-interval EvalStats diffs into its [monitor] lines
+                b.push_with_stats(row, ev.stats());
             }
         }
         for (i, s) in sums.iter().enumerate() {
-            means[i] = s / samples as f64;
+            means[i] = s / recorded.max(1) as f64;
         }
     }
     Ok(ChainReport {
@@ -168,6 +181,10 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         .unwrap_or("0")
         .parse()
         .map_err(|_| "bad --monitor-every")?;
+    let monitor_gate: Option<f64> = match opt(args, "--monitor-gate") {
+        Some(s) => Some(s.parse().map_err(|_| "bad --monitor-gate")?),
+        None => None,
+    };
     if monitor_every > 0 && names.is_empty() {
         return Err("--monitor-every needs --watch to name the monitored parameters".into());
     }
@@ -176,6 +193,9 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     }
     if monitor_every > 0 && chains < 2 {
         return Err("--monitor-every compares chains: use --chains 2 or more".into());
+    }
+    if monitor_gate.is_some() && monitor_every == 0 {
+        return Err("--monitor-gate needs --monitor-every to produce snapshots to gate on".into());
     }
 
     if chains > 1 {
@@ -198,18 +218,34 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         let results = if monitor_every > 0 {
             // live convergence lines as every chain crosses each
             // monitor_every-sample boundary; contents deterministic in
-            // the seed (fold-order normalized by chain index)
+            // the seed (fold-order normalized by chain index).  With a
+            // gate, the driver raises the shared stop flag once every
+            // watched parameter's rank-R-hat is below the target.
             let mut mon = ConvergenceMonitor::new(chains, &names, monitor_every);
-            let results = multichain::run_chains_monitored(
+            let mut gated_at: Option<usize> = None;
+            let results = multichain::run_chains_gated(
                 &pool,
                 chains,
                 seed,
                 move |c, rng, sink| chain(c, rng, Some(sink)),
                 |ev| {
                     mon.absorb(ev);
+                    let mut keep_going = true;
                     for snap in mon.ready_snapshots() {
                         println!("{}", snap.render());
+                        let fired = gated_at.is_none()
+                            && monitor_gate.is_some_and(|r| snap.gate_passed(r));
+                        if fired {
+                            gated_at = Some(snap.draws_per_chain);
+                            keep_going = false;
+                            println!(
+                                "[monitor] gate: every watched rank R-hat below target \
+                                 at n={}/chain — stopping early",
+                                snap.draws_per_chain
+                            );
+                        }
                     }
+                    keep_going
                 },
             )?;
             // end-of-run snapshot (deduped against the last boundary)
@@ -447,9 +483,19 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
                 Some(s) => s.parse().map_err(|_| "bad --monitor-every")?,
                 None => 0,
             };
+            let monitor_gate: Option<f64> = match opt(args, "--monitor-gate") {
+                Some(s) => Some(s.parse().map_err(|_| "bad --monitor-gate")?),
+                None => None,
+            };
             if monitor_every > 0 && chains < 2 {
                 return Err(
                     "--monitor-every on fig9 compares repeated trials: use --chains 2 or more"
+                        .into(),
+                );
+            }
+            if monitor_gate.is_some() && monitor_every == 0 {
+                return Err(
+                    "--monitor-gate needs --monitor-every to produce snapshots to gate on"
                         .into(),
                 );
             }
@@ -460,8 +506,13 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
                 let mut t = Table::new(&["method", "trial", "seconds", "phi ESS/s", "sig ESS/s"]);
                 let mut all_snaps = Vec::new();
                 for (label, sub) in [("exact-mh", false), ("subsampled", true)] {
-                    let (rs, snaps) =
-                        exp::fig9_repeated_monitored(&cfg, sub, chains, monitor_every)?;
+                    let (rs, snaps) = exp::fig9_repeated_monitored(
+                        &cfg,
+                        sub,
+                        chains,
+                        monitor_every,
+                        monitor_gate,
+                    )?;
                     for (i, r) in rs.iter().enumerate() {
                         t.row(&[
                             label.to_string(),
@@ -473,6 +524,11 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
                     }
                     for s in &snaps {
                         println!("{label} {}", s.render());
+                    }
+                    if let Some(r) = monitor_gate {
+                        if snaps.iter().any(|s| s.gate_passed(r)) {
+                            println!("{label}: monitor gate rank R-hat < {r} reached — trials stopped early");
+                        }
                     }
                     all_snaps.push((label, snaps));
                 }

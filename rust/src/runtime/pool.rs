@@ -34,6 +34,7 @@
 //! lockstep runs against the sequential evaluator.
 
 use crate::trace::batch::PackedBatch;
+use crate::trace::colstore::{LaneScratch, PanelBatch};
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -59,10 +60,40 @@ pub fn in_pool_worker() -> bool {
 /// A generic closure job (multi-chain driver).
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
-/// One shard of a packed batch: replay `lo..hi` and send the result
-/// back tagged with the shard index.
+/// The two shardable batch kinds: a fresh-packed batch (the fallback /
+/// oracle path) or a store-backed panel batch whose shards gather
+/// their own lane panels from the shared column store.  Cloning bumps
+/// the inner `Arc` only.
+#[derive(Clone)]
+enum ShardBatch {
+    Packed(Arc<PackedBatch>),
+    Panel(Arc<PanelBatch>),
+}
+
+impl ShardBatch {
+    /// Replay `lo..hi` into `out` through the matching kernel — both
+    /// kernels are pure per-section arithmetic, so the shard split is
+    /// invisible to results either way.
+    fn replay_range(&self, lo: usize, hi: usize, scratch: &mut ShardScratch, out: &mut [f64]) {
+        match self {
+            ShardBatch::Packed(b) => b.replay_range(lo, hi, &mut scratch.sregs, out),
+            ShardBatch::Panel(b) => b.replay_range(lo, hi, &mut scratch.lanes, out),
+        }
+    }
+}
+
+/// Per-thread replay scratch covering both kernels (workers and the
+/// stealing dispatcher each own one; cleared, not freed, between jobs).
+#[derive(Default)]
+struct ShardScratch {
+    sregs: Vec<f64>,
+    lanes: LaneScratch,
+}
+
+/// One shard of a batch: replay `lo..hi` and send the result back
+/// tagged with the shard index.
 struct ShardJob {
-    batch: Arc<PackedBatch>,
+    batch: ShardBatch,
     lo: usize,
     hi: usize,
     shard: usize,
@@ -196,7 +227,7 @@ impl Drop for WorkerPool {
 /// survives, the unsent `Sender` drops, and the owning dispatcher's
 /// `recv` errors into the scalar-path fallback instead of hanging on a
 /// pool that silently lost capacity.
-fn run_shard_job(s: ShardJob, sregs: &mut Vec<f64>) {
+fn run_shard_job(s: ShardJob, scratch: &mut ShardScratch) {
     let ShardJob {
         batch,
         lo,
@@ -206,7 +237,7 @@ fn run_shard_job(s: ShardJob, sregs: &mut Vec<f64>) {
     } = s;
     let result = catch_unwind(AssertUnwindSafe(|| {
         let mut out = vec![0.0f64; hi - lo];
-        batch.replay_range(lo, hi, sregs, &mut out);
+        batch.replay_range(lo, hi, scratch, &mut out);
         out
     }));
     // drop our Arc before reporting, so once the dispatcher holds every
@@ -221,12 +252,12 @@ fn run_shard_job(s: ShardJob, sregs: &mut Vec<f64>) {
 
 fn worker_loop(shared: &Shared) {
     IN_POOL_WORKER.with(|c| c.set(true));
-    // per-worker scratch: the worker-private half of a RegFile (the
-    // packed batch supplies the immutable half)
-    let mut sregs: Vec<f64> = Vec::new();
+    // per-worker scratch: the worker-private half of a RegFile / lane
+    // panel (the shared batch supplies the immutable half)
+    let mut scratch = ShardScratch::default();
     while let Some(job) = shared.pop() {
         match job {
-            Job::Shard(s) => run_shard_job(s, &mut sregs),
+            Job::Shard(s) => run_shard_job(s, &mut scratch),
             // a panicking task's owner observes the failure through its
             // own channel disconnecting
             Job::Task(f) => {
@@ -290,8 +321,8 @@ pub struct ShardScorer {
     /// queued shards — its own, or (when several dispatchers share the
     /// pool) another dispatcher's (perf reporting).
     pub stolen_sections: usize,
-    /// Inline scratch for the non-dispatched case.
-    sregs: Vec<f64>,
+    /// Inline scratch for the non-dispatched and stolen-shard cases.
+    scratch: ShardScratch,
 }
 
 impl ShardScorer {
@@ -302,7 +333,7 @@ impl ShardScorer {
             steal: true,
             sharded_sections: 0,
             stolen_sections: 0,
-            sregs: Vec::new(),
+            scratch: ShardScratch::default(),
         }
     }
 
@@ -334,14 +365,46 @@ impl ShardScorer {
         let w = batch.width();
         out.clear();
         out.resize(w, 0.0);
-        let threads = self.pool.threads();
         if !self.should_dispatch(w) {
-            batch.replay_range(0, w, &mut self.sregs, out);
+            batch.replay_range(0, w, &mut self.scratch.sregs, out);
             return Ok(Some(batch));
         }
-        let shards = threads.min(w);
+        let arc = Arc::new(batch);
+        self.dispatch(ShardBatch::Packed(arc.clone()), w, out)?;
+        self.sharded_sections += w;
+        // workers drop their Arc before sending, so after the last
+        // result this is normally the only reference left
+        Ok(Arc::try_unwrap(arc).ok())
+    }
+
+    /// [`replay`](Self::replay) for a store-backed [`PanelBatch`]: the
+    /// same dispatch, reduce, and work-stealing machinery, with shards
+    /// gathering their own lane panels from the shared column store —
+    /// no single-threaded pack stage at all on this rung.
+    pub fn replay_panel(
+        &mut self,
+        batch: PanelBatch,
+        out: &mut Vec<f64>,
+    ) -> Result<Option<PanelBatch>, String> {
+        let w = batch.width();
+        out.clear();
+        out.resize(w, 0.0);
+        if !self.should_dispatch(w) {
+            batch.replay_range(0, w, &mut self.scratch.lanes, out);
+            return Ok(Some(batch));
+        }
+        let arc = Arc::new(batch);
+        self.dispatch(ShardBatch::Panel(arc.clone()), w, out)?;
+        self.sharded_sections += w;
+        Ok(Arc::try_unwrap(arc).ok())
+    }
+
+    /// Shard `batch` over the pool, work-steal while waiting, and
+    /// reduce the per-shard results into `out` in deterministic shard
+    /// order — the common engine behind both batch kinds.
+    fn dispatch(&mut self, batch: ShardBatch, w: usize, out: &mut [f64]) -> Result<(), String> {
+        let shards = self.pool.threads().min(w);
         let chunk = w.div_ceil(shards);
-        let batch = Arc::new(batch);
         let (tx, rx) = channel();
         let mut sent = 0usize;
         let mut lo = 0usize;
@@ -358,6 +421,7 @@ impl ShardScorer {
             lo = hi;
         }
         drop(tx);
+        drop(batch);
         let mut received = 0usize;
         while received < sent {
             // drain whatever is already done without blocking (stop as
@@ -390,7 +454,7 @@ impl ShardScorer {
             if self.steal {
                 if let Some(job) = self.pool.shared.steal_shard() {
                     let sections = job.hi - job.lo;
-                    run_shard_job(job, &mut self.sregs);
+                    run_shard_job(job, &mut self.scratch);
                     self.stolen_sections += sections;
                     continue;
                 }
@@ -409,10 +473,7 @@ impl ShardScorer {
                 Err(_) => return Err("worker pool: shard worker failed".into()),
             }
         }
-        self.sharded_sections += w;
-        // workers drop their Arc before sending, so after the last
-        // result this is normally the only reference left
-        Ok(Arc::try_unwrap(batch).ok())
+        Ok(())
     }
 }
 
@@ -473,7 +534,7 @@ mod tests {
         shared.push(Job::Task(Box::new(|| {})));
         let (tx, rx) = channel();
         shared.push(Job::Shard(ShardJob {
-            batch: Arc::new(PackedBatch::default()),
+            batch: ShardBatch::Packed(Arc::new(PackedBatch::default())),
             lo: 0,
             hi: 0,
             shard: 0,
@@ -481,7 +542,7 @@ mod tests {
         }));
         let job = shared.steal_shard().expect("shard not stolen past the task");
         assert_eq!(job.shard, 0);
-        run_shard_job(job, &mut Vec::new());
+        run_shard_job(job, &mut ShardScratch::default());
         let (shard, out) = rx.recv().unwrap();
         assert_eq!((shard, out.len()), (0, 0));
         // the task is still queued, the shard is gone

@@ -1006,6 +1006,11 @@ impl PackedBatch {
     /// re-score the selection per section (the scalar path reproduces
     /// the interpreter oracle exactly, including its error/`-inf`
     /// behavior).
+    ///
+    /// KEEP IN SYNC with the column store's member reads
+    /// (`colstore.rs::GroupPanels::refresh_member`) and operand
+    /// resolution (`gscal_resolve`/`vec_operand`): the store path must
+    /// stay this function's bitwise twin, rule for rule.
     pub fn pack_into(
         &mut self,
         trace: &Trace,
@@ -1346,7 +1351,12 @@ impl PackedBatch {
 /// matching `SpFamily::logpdf`'s coercions bit-for-bit (values and args
 /// were coerced identically — `as_f64`, NaN for out-of-class — at pack
 /// time).
-fn packed_fam_logpdf(fam: SpFamily, val: f64, arg: impl Fn(usize) -> f64, n_args: usize) -> f64 {
+pub(crate) fn packed_fam_logpdf(
+    fam: SpFamily,
+    val: f64,
+    arg: impl Fn(usize) -> f64,
+    n_args: usize,
+) -> f64 {
     use crate::dist;
     match fam {
         SpFamily::Bernoulli => {

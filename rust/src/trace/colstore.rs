@@ -1,0 +1,978 @@
+//! Persistent column store + lane-blocked panel replay: the
+//! O(|mini-batch|) gather stage of the subsampled-MH hot path.
+//!
+//! # Why
+//!
+//! PR 3's pack/replay split made the *replay* kernel pure arithmetic,
+//! but every transition still paid a fresh [`PackedBatch::pack_into`]:
+//! one full trace read — binding values, vector panels, absorber values
+//! and committed args — per sampled section, per mini-batch, forever.
+//! Those reads are redundant in steady state: slot tables only say
+//! *where* to read, and the committed values at those places change
+//! only when something is actually committed.  This module caches the
+//! reads.  A [`ColumnStoreSet`] (cached on `Trace` per principal,
+//! aligned group-for-group with the cached
+//! [`BatchPlanSet`](crate::trace::batch::BatchPlanSet)) holds
+//! *full-width* committed-side columns for every member of every
+//! [`BatchGroup`]; a transition then turns into an O(|mini-batch|)
+//! index gather from those columns plus an O(#globals) candidate
+//! resolve — no trace walk at all for members whose rows are fresh.
+//!
+//! # Invalidation: `structure_version` × `value_version`
+//!
+//! Two keys, two granularities:
+//!
+//! * **layout** (group membership, column offsets, op lists) is
+//!   structural: the whole set is stamped with
+//!   `Trace::structure_version` and rebuilt wholesale after any
+//!   structural change, exactly like the partition/plan/batch caches.
+//! * **rows** (the committed values themselves) carry a per-member
+//!   stamp against `Trace::value_version`, which bumps on every
+//!   committed-value write (`Trace::set_value`: `commit_global`,
+//!   journal commit/rollback, pgibbs state writes).  A stale member is
+//!   re-read — after freshening its touch list, exactly like the pack
+//!   path — *lazily, on the next gather that samples it*.  An accepted
+//!   transition therefore costs O(|mini-batch|) refresh work amortized
+//!   over the batches that actually revisit those members, never an
+//!   O(N) eager sweep.
+//!
+//! Candidate-side data (proposed globals, resolved op constants) is
+//! proposal-dependent and never cached here: [`PanelBatch::build_into`]
+//! re-resolves it per mini-batch in O(#ops + #globals).
+//!
+//! # Lane-blocked replay
+//!
+//! The gather stage writes *lane-major panels*: blocks of
+//! [`LANES`] = 8 sections, with lane index innermost
+//! (`panel[k * LANES + l]` = element `k` of the block's `l`-th
+//! section).  The panel kernel ([`PanelBatch::replay_range`]) then runs
+//! every `Map`/`Dot`/absorber op as a fixed-width lane loop.  Each lane
+//! executes the *identical scalar op sequence* the packed kernel (and
+//! the interpreter) runs for that section — in particular each lane
+//! owns its own sequential dot reduction in element order — so results
+//! are bitwise identical per section *by construction*, while the
+//! fixed-width independent lanes are exactly the shape LLVM's
+//! autovectorizer wants (no FMA contraction: Rust never fuses
+//! `mul`+`add` without explicit intrinsics).  Tail blocks pad their
+//! spare lanes with the block's last active member: the padded lanes
+//! compute real (discarded) values, keeping every block on the same
+//! fixed-width kernel.
+//!
+//! Shard boundaries need not align to lane blocks: each shard lane-
+//! blocks its own contiguous range, and per-section independence makes
+//! any split bitwise identical to the full-range replay — the same
+//! argument the packed kernel makes, so `ShardScorer` can run panel
+//! shards with workers gathering their own panels from the shared
+//! read-only store (`Arc<GroupPanels>`), removing the single-threaded
+//! pack stage from the parallel rung entirely.
+//!
+//! Fresh [`PackedBatch`] packing remains the fallback and the
+//! differential oracle: `SUBPPL_COLSTORE=0` disables the store path
+//! everywhere, and `tests/differential.rs` pins store-vs-fresh-pack
+//! bitwise identity on all three paper workloads.
+
+use crate::ppl::prim::Prim;
+use crate::ppl::sp::SpFamily;
+use crate::ppl::value::Value;
+use crate::trace::batch::{
+    packed_fam_logpdf, BatchGroup, BatchPlanSet, ColOp, ColS, ColV, SBind, VBind,
+};
+use crate::trace::pet::Trace;
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+/// Lane width of the panel kernel (f64x8 = one AVX-512 register or two
+/// AVX2 registers; a power of two so block math stays shift/mask).
+pub const LANES: usize = 8;
+
+/// Whether the store path is enabled (the `SUBPPL_COLSTORE` kill
+/// switch: `0` forces per-transition `pack_into` everywhere).
+pub fn colstore_enabled() -> bool {
+    match std::env::var("SUBPPL_COLSTORE") {
+        Ok(v) => v != "0",
+        Err(_) => true,
+    }
+}
+
+// ---------------------------------------------------------------------
+// The store: full-width committed-side panels per batch group
+// ---------------------------------------------------------------------
+
+/// Full-width committed-side columns for one [`BatchGroup`]: every
+/// member's scalar bindings, vector bindings, absorber values, and
+/// committed absorber args, resolved to flat `f64`.  Plain data —
+/// `Send + Sync` — so the parallel rung can share it with workers
+/// behind an `Arc` while shards gather their own panels.
+#[derive(Clone, Debug, Default)]
+pub struct GroupPanels {
+    /// Member count (the group width).
+    w: usize,
+    n_sbind: usize,
+    /// Scalar binding columns, column-major (`b * w + m`).
+    sbind: Vec<f64>,
+    /// Vector binding columns, member-major within each column: column
+    /// `b` holds member `m`'s vector at `vcols[b].0 + m * vcols[b].1`.
+    vbind: Vec<f64>,
+    /// `(offset, arity)` per vector-binding column.
+    vcols: Vec<(u32, u32)>,
+    /// Absorber values, column-major (`bi * w + m`); Bernoulli values
+    /// encoded 1.0/0.0 exactly as the pack path does.
+    ab_vals: Vec<f64>,
+    /// Committed absorber args, per-absorber arg-major blocks
+    /// (`ab_cols[bi].0 + ai * w + m`).
+    ab_cargs: Vec<f64>,
+    /// `(offset, n_args)` per absorber.
+    ab_cols: Vec<(u32, u32)>,
+}
+
+impl GroupPanels {
+    fn new(group: &BatchGroup) -> GroupPanels {
+        let w = group.len();
+        let n_sbind = group.cols.n_sbind as usize;
+        let mut vcols = Vec::with_capacity(group.cols.varities.len());
+        let mut voff = 0u32;
+        for &ar in &group.cols.varities {
+            vcols.push((voff, ar));
+            voff += ar * w as u32;
+        }
+        let mut ab_cols = Vec::with_capacity(group.cols.absorbers.len());
+        let mut aoff = 0u32;
+        for ab in &group.cols.absorbers {
+            ab_cols.push((aoff, ab.cand.len() as u32));
+            aoff += ab.cand.len() as u32 * w as u32;
+        }
+        GroupPanels {
+            w,
+            n_sbind,
+            sbind: vec![0.0; n_sbind * w],
+            vbind: vec![0.0; voff as usize],
+            vcols,
+            ab_vals: vec![0.0; group.cols.absorbers.len() * w],
+            ab_cargs: vec![0.0; aoff as usize],
+            ab_cols,
+        }
+    }
+
+    /// Re-read every committed-side entry of member `m` from the trace
+    /// — the same reads, type checks, and coercions
+    /// `PackedBatch::pack_into` performs, so a successful refresh is
+    /// bitwise-equivalent to a fresh pack of that member.  The caller
+    /// must have freshened the member's touch list first.  `Err` means
+    /// the member no longer fits its group's shape (a runtime type
+    /// change); the caller falls back exactly like a pack failure.
+    ///
+    /// KEEP IN SYNC with `pack_into`'s member reads (`trace/batch.rs`):
+    /// any new binding kind or coercion rule added there must be
+    /// mirrored here, or the store silently stops being the pack path's
+    /// bitwise twin — the differential suite (store rung, both
+    /// `SUBPPL_COLSTORE` settings in CI) is the enforcement.
+    fn refresh_member(
+        &mut self,
+        trace: &Trace,
+        group: &BatchGroup,
+        m: usize,
+    ) -> Result<(), String> {
+        let w = self.w;
+        let nsb = self.n_sbind;
+        for b in 0..nsb {
+            self.sbind[b * w + m] = match &group.sbinds[m * nsb + b] {
+                SBind::Const(x) => *x,
+                SBind::Node(id) => match trace.value(*id) {
+                    Value::Real(x) => *x,
+                    v => {
+                        return Err(format!(
+                            "colstore: scalar binding is {} not real",
+                            v.type_name()
+                        ))
+                    }
+                },
+                SBind::NodeNum(id) => {
+                    let v = trace.value(*id);
+                    v.as_f64().ok_or_else(|| {
+                        format!("colstore: numeric binding is {} not coercible", v.type_name())
+                    })?
+                }
+            };
+        }
+        let nvb = group.cols.n_vbind as usize;
+        for (b, &(off, ar)) in self.vcols.iter().enumerate() {
+            let ar = ar as usize;
+            let dst = off as usize + m * ar;
+            match &group.vbinds[m * nvb + b] {
+                // const arities were verified against the template at
+                // group build and cannot change
+                VBind::Const(v) => self.vbind[dst..dst + ar].copy_from_slice(v.as_slice()),
+                VBind::Node(id) => match trace.value(*id) {
+                    Value::Vector(v) if v.len() == ar => {
+                        self.vbind[dst..dst + ar].copy_from_slice(v.as_slice())
+                    }
+                    Value::Vector(v) => {
+                        return Err(format!(
+                            "colstore: vector binding length {} != {ar}",
+                            v.len()
+                        ))
+                    }
+                    v => {
+                        return Err(format!(
+                            "colstore: vector binding is {} not vector",
+                            v.type_name()
+                        ))
+                    }
+                },
+            }
+        }
+        let nab = group.cols.absorbers.len();
+        for (bi, ab) in group.cols.absorbers.iter().enumerate() {
+            let node = trace.node(group.absorbers[m * nab + bi]);
+            let (coff, n_args) = self.ab_cols[bi];
+            if node.args.len() != n_args as usize {
+                return Err("colstore: absorber arity changed".into());
+            }
+            self.ab_vals[bi * w + m] = match ab.fam {
+                SpFamily::Bernoulli => match node.value.as_bool() {
+                    Some(b) => b as u8 as f64,
+                    None => return Err("colstore: bernoulli value is not a bool".into()),
+                },
+                _ => node.value.as_f64().ok_or_else(|| {
+                    format!(
+                        "colstore: absorber value is not numeric ({})",
+                        node.value.type_name()
+                    )
+                })?,
+            };
+            // committed side: the same as_f64-or-NaN coercion
+            // SpFamily::logpdf (and pack_into) apply
+            for (ai, arg) in node.args.iter().enumerate() {
+                self.ab_cargs[coff as usize + ai * w + m] =
+                    trace.arg_value(arg).as_f64().unwrap_or(f64::NAN);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One group's store: the shared panels plus per-member freshness
+/// stamps against `Trace::value_version` (0 = never filled;
+/// `value_version` starts at 1).
+#[derive(Debug)]
+pub struct GroupStore {
+    stamp: Vec<u64>,
+    panels: Arc<GroupPanels>,
+}
+
+impl GroupStore {
+    fn new(group: &BatchGroup) -> GroupStore {
+        GroupStore {
+            stamp: vec![0; group.len()],
+            panels: Arc::new(GroupPanels::new(group)),
+        }
+    }
+
+    /// Shared read-only handle on the panels (cloned per dispatch; the
+    /// buffers themselves are never copied).
+    pub fn panels_arc(&self) -> Arc<GroupPanels> {
+        self.panels.clone()
+    }
+}
+
+/// All group stores of one partition, aligned index-for-index with the
+/// cached `BatchPlanSet::groups`, stamped with the structure version
+/// the set was built at.
+#[derive(Debug)]
+pub struct ColumnStoreSet {
+    pub groups: Vec<GroupStore>,
+    /// `Trace::structure_version` at build time (cache validation —
+    /// stale sets are rebuilt wholesale, never patched, exactly like
+    /// the batch-plan sets whose layout they mirror).
+    pub built_at: u64,
+}
+
+impl ColumnStoreSet {
+    pub fn new(set: &BatchPlanSet) -> ColumnStoreSet {
+        ColumnStoreSet {
+            groups: set.groups.iter().map(GroupStore::new).collect(),
+            built_at: set.built_at,
+        }
+    }
+}
+
+/// Bring the selected members of group `gi` up to date in the store:
+/// members whose stamp is stale are freshened (their touch lists, lazy
+/// §3.5 — the same freshening the pack path performs) and re-read into
+/// the panels.  Returns the number of members refreshed (the store
+/// "miss" count; 0 in gather-only steady state).  On `Err` the
+/// selection must be scored through the fresh-pack fallback.
+///
+/// `sel` holds `(member index, caller tag)` pairs exactly as
+/// `pack_into` takes them; only the member index is read here.
+pub fn ensure_group_members(
+    trace: &mut Trace,
+    store: &Rc<RefCell<ColumnStoreSet>>,
+    gi: usize,
+    group: &BatchGroup,
+    sel: &[(u32, u32)],
+) -> Result<usize, String> {
+    let vv = trace.value_version;
+    // phase 1: stale scan (shared borrow only)
+    let stale: Vec<u32> = {
+        let set = store.borrow();
+        let gs = &set.groups[gi];
+        sel.iter()
+            .map(|&(m, _)| m)
+            .filter(|&m| gs.stamp[m as usize] != vv)
+            .collect()
+    };
+    if stale.is_empty() {
+        return Ok(0);
+    }
+    // phase 2: freshen everything the stale rows read (&mut Trace, no
+    // store borrow held)
+    for &m in &stale {
+        for &t in group.touch_of(m as usize) {
+            trace.ensure_fresh(t);
+        }
+    }
+    // phase 3: re-read the stale rows (&Trace + mutable store)
+    let mut set = store.borrow_mut();
+    let gs = &mut set.groups[gi];
+    // workers drop their Arc before reporting results, so in steady
+    // state this is the sole reference and make_mut mutates in place
+    let panels = Arc::make_mut(&mut gs.panels);
+    for &m in &stale {
+        panels.refresh_member(trace, group, m as usize)?;
+        gs.stamp[m as usize] = vv;
+    }
+    Ok(stale.len())
+}
+
+// ---------------------------------------------------------------------
+// The panel batch: candidate resolution + lane-blocked replay
+// ---------------------------------------------------------------------
+
+/// Scalar operand of a panel op (the gathered analogue of the packed
+/// kernel's operands: globals are resolved to batch-shared constants at
+/// build time).
+#[derive(Clone, Copy, Debug)]
+enum GScal {
+    /// f64 lane register written by an earlier op.
+    Slot(u32),
+    /// Per-section scalar binding column (gathered from the store).
+    Bind(u32),
+    /// Batch-shared constant (resolved candidate global).
+    Const(f64),
+}
+
+/// Vector operand of a panel dot.
+#[derive(Clone, Copy, Debug)]
+enum GVec {
+    /// Store vector-binding column, gathered into a lane-major panel.
+    Bind(u32),
+    /// Batch-shared vector (resolved candidate global), broadcast
+    /// across lanes.
+    Shared(u32),
+}
+
+#[derive(Clone, Debug)]
+enum GOp {
+    /// `s[out][l] = prim(args...)`; args at `(offset, len)` in the pool.
+    Map { prim: Prim, out: u32, args: (u32, u32) },
+    Dot { sigmoid: bool, out: u32, a: GVec, b: GVec },
+    CopyS { out: u32, from: GScal },
+}
+
+#[derive(Clone, Debug)]
+struct GAbsorb {
+    fam: SpFamily,
+    /// Candidate-side args at `(offset, len)` in the operand pool; the
+    /// committed side reads the store's `ab_cargs` panel.
+    args: (u32, u32),
+}
+
+/// A gathered mini-batch over the shared store: the candidate-resolved
+/// op list plus the member selection.  No full-width data is copied at
+/// build time — `replay_range` gathers lane panels per block straight
+/// from the `Arc`'d store, so shards gather their own panels and the
+/// single-threaded stage is O(#ops + #globals + |sel|).  Plain data +
+/// `Arc` throughout: `Send + Sync` for the worker pool.
+#[derive(Debug, Default)]
+pub struct PanelBatch {
+    panels: Option<Arc<GroupPanels>>,
+    /// Member index per output position.
+    sel: Vec<u32>,
+    n_sregs: u32,
+    ops: Vec<GOp>,
+    /// Shared operand pool for `Map` args and absorber candidate args.
+    args: Vec<GScal>,
+    absorbers: Vec<GAbsorb>,
+    /// Batch-shared vectors (resolved vector globals), `(offset, len)`.
+    shared: Vec<f64>,
+    scols: Vec<(u32, u32)>,
+    /// Build-time scratch: vector-register -> resolved source.
+    vsrc: Vec<Option<GVec>>,
+}
+
+/// Resolve a scalar operand against the batch's candidate globals
+/// (mirrors the packed kernel's resolution bit-for-bit).
+fn gscal_resolve(a: ColS, globals: &[Value]) -> Result<GScal, String> {
+    Ok(match a {
+        ColS::Slot(r) => GScal::Slot(r),
+        ColS::Bind(b) => GScal::Bind(b),
+        ColS::Global(k) => match globals.get(k as usize) {
+            Some(Value::Real(x)) => GScal::Const(*x),
+            v => {
+                return Err(format!(
+                    "panel build: global {k} is not a real ({})",
+                    v.map_or("missing", |v| v.type_name())
+                ))
+            }
+        },
+        ColS::GlobalNum(k) => match globals.get(k as usize).and_then(|v| v.as_f64()) {
+            Some(x) => GScal::Const(x),
+            None => return Err(format!("panel build: global {k} is not numeric")),
+        },
+    })
+}
+
+impl PanelBatch {
+    /// Number of selected sections (the batch width).
+    pub fn width(&self) -> usize {
+        self.sel.len()
+    }
+
+    /// Drop the shared store handle.  Callers park reclaimed batches
+    /// between mini-batches; a parked handle would keep the store's
+    /// `Arc` refcount above one and force `Arc::make_mut` to deep-copy
+    /// the full-width panels on the next row refresh.
+    pub fn release_panels(&mut self) {
+        self.panels = None;
+    }
+
+    /// Build this batch over `panels` for the selected members of
+    /// `group` under the candidate `globals`: resolve the column
+    /// program's global reads to constants and record the selection.
+    /// Buffers are cleared, not freed, so steady state allocates
+    /// nothing.  On `Err` the caller falls back to the fresh-pack path.
+    pub fn build_into(
+        &mut self,
+        panels: &Arc<GroupPanels>,
+        group: &BatchGroup,
+        sel: &[(u32, u32)],
+        globals: &[Value],
+    ) -> Result<(), String> {
+        let cols = &group.cols;
+        self.panels = Some(panels.clone());
+        self.sel.clear();
+        self.sel.extend(sel.iter().map(|&(m, _)| m));
+        self.n_sregs = cols.n_sregs;
+        self.ops.clear();
+        self.args.clear();
+        self.absorbers.clear();
+        self.shared.clear();
+        self.scols.clear();
+        self.vsrc.clear();
+        self.vsrc.resize(cols.n_vregs as usize, None);
+        for op in &cols.ops {
+            match op {
+                ColOp::Map { prim, out, args } => {
+                    let off = self.args.len() as u32;
+                    for &a in args {
+                        let g = gscal_resolve(a, globals)?;
+                        self.args.push(g);
+                    }
+                    self.ops.push(GOp::Map {
+                        prim: *prim,
+                        out: *out,
+                        args: (off, args.len() as u32),
+                    });
+                }
+                ColOp::Dot { sigmoid, out, a, b } => {
+                    let ga = self.vec_operand(*a, globals)?;
+                    let gb = self.vec_operand(*b, globals)?;
+                    let (la, lb) = (self.gvec_len(ga), self.gvec_len(gb));
+                    if la != lb {
+                        return Err(format!("panel build: dot length mismatch {la} vs {lb}"));
+                    }
+                    self.ops.push(GOp::Dot {
+                        sigmoid: *sigmoid,
+                        out: *out,
+                        a: ga,
+                        b: gb,
+                    });
+                }
+                ColOp::CopyS { out, from } => {
+                    let f = gscal_resolve(*from, globals)?;
+                    self.ops.push(GOp::CopyS { out: *out, from: f });
+                }
+                ColOp::CopyV { out, from } => {
+                    let v = self.vec_operand(*from, globals)?;
+                    self.vsrc[*out as usize] = Some(v);
+                }
+            }
+        }
+        for ab in &cols.absorbers {
+            let off = self.args.len() as u32;
+            for &a in &ab.cand {
+                let g = gscal_resolve(a, globals)?;
+                self.args.push(g);
+            }
+            self.absorbers.push(GAbsorb {
+                fam: ab.fam,
+                args: (off, ab.cand.len() as u32),
+            });
+        }
+        Ok(())
+    }
+
+    fn vec_operand(&mut self, a: ColV, globals: &[Value]) -> Result<GVec, String> {
+        Ok(match a {
+            ColV::Bind(b) => GVec::Bind(b),
+            ColV::Slot(r) => self.vsrc[r as usize]
+                .ok_or("panel build: uninitialized vector register")?,
+            ColV::Global(k) => match globals.get(k as usize) {
+                Some(Value::Vector(v)) => {
+                    let off = self.shared.len() as u32;
+                    self.shared.extend_from_slice(v.as_slice());
+                    self.scols.push((off, v.len() as u32));
+                    GVec::Shared((self.scols.len() - 1) as u32)
+                }
+                v => {
+                    return Err(format!(
+                        "panel build: global {k} is not a vector ({})",
+                        v.map_or("missing", |v| v.type_name())
+                    ))
+                }
+            },
+        })
+    }
+
+    fn gvec_len(&self, a: GVec) -> usize {
+        match a {
+            GVec::Bind(b) => {
+                self.panels.as_ref().expect("panel batch built").vcols[b as usize].1 as usize
+            }
+            GVec::Shared(s) => self.scols[s as usize].1 as usize,
+        }
+    }
+
+    #[inline]
+    fn gscal(&self, a: GScal, sregs: &[f64], sb: &[f64], l: usize) -> f64 {
+        match a {
+            GScal::Slot(r) => sregs[r as usize * LANES + l],
+            GScal::Bind(b) => sb[b as usize * LANES + l],
+            GScal::Const(c) => c,
+        }
+    }
+
+    /// Replay sections `lo..hi` of the selection into `out` (length
+    /// `hi - lo`), gathering lane panels from the shared store block by
+    /// block.  Pure arithmetic over the store's committed columns and
+    /// this batch's resolved candidates: infallible, `Trace`-free, and
+    /// per-section independent, so any sharding of the range is bitwise
+    /// identical to the full-range replay — the panel analogue of
+    /// [`PackedBatch::replay_range`], and bitwise identical to it
+    /// section for section (each lane runs the same scalar op
+    /// sequence).
+    pub fn replay_range(&self, lo: usize, hi: usize, scr: &mut LaneScratch, out: &mut [f64]) {
+        debug_assert!(lo <= hi && hi <= self.sel.len());
+        debug_assert_eq!(out.len(), hi - lo);
+        if hi == lo {
+            return;
+        }
+        let panels = self.panels.as_ref().expect("replay of an unbuilt panel batch");
+        scr.size_for(self, panels);
+        let w = panels.w;
+        let nab = panels.ab_cols.len();
+        let mut base = lo;
+        while base < hi {
+            let nl = (hi - base).min(LANES);
+            // lane -> member map; tail lanes duplicate the block's last
+            // active member so every block runs the fixed-width kernel
+            // (the padded lanes' results are discarded below)
+            let mut mem = [0usize; LANES];
+            for (l, slot) in mem.iter_mut().enumerate() {
+                *slot = self.sel[base + l.min(nl - 1)] as usize;
+            }
+            // --- gather the block's lane-major panels from the store ---
+            for b in 0..panels.n_sbind {
+                let col = &panels.sbind[b * w..(b + 1) * w];
+                for l in 0..LANES {
+                    scr.sb[b * LANES + l] = col[mem[l]];
+                }
+            }
+            for (b, &(off, ar)) in panels.vcols.iter().enumerate() {
+                let ar = ar as usize;
+                let doff = scr.vboff[b] as usize;
+                for (l, &m) in mem.iter().enumerate() {
+                    let src = &panels.vbind[off as usize + m * ar..off as usize + (m + 1) * ar];
+                    for (k, &x) in src.iter().enumerate() {
+                        scr.vb[doff + k * LANES + l] = x;
+                    }
+                }
+            }
+            for bi in 0..nab {
+                let col = &panels.ab_vals[bi * w..(bi + 1) * w];
+                for l in 0..LANES {
+                    scr.ab_vals[bi * LANES + l] = col[mem[l]];
+                }
+                let (coff, na) = panels.ab_cols[bi];
+                let doff = scr.ab_off[bi] as usize;
+                for ai in 0..na as usize {
+                    let col =
+                        &panels.ab_cargs[coff as usize + ai * w..coff as usize + (ai + 1) * w];
+                    for l in 0..LANES {
+                        scr.ab_cargs[doff + ai * LANES + l] = col[mem[l]];
+                    }
+                }
+            }
+            // --- ops: fixed-width lane loops over the panels ---
+            for op in &self.ops {
+                match op {
+                    GOp::Map { prim, out: o, args } => {
+                        use Prim::*;
+                        let argv = &self.args[args.0 as usize..(args.0 + args.1) as usize];
+                        for l in 0..LANES {
+                            let a0 = self.gscal(argv[0], &scr.sregs, &scr.sb, l);
+                            let r = match prim {
+                                // identical fold order to Prim::apply
+                                Add | Mul | Min | Max => {
+                                    let mut acc = a0;
+                                    for &a in &argv[1..] {
+                                        let x = self.gscal(a, &scr.sregs, &scr.sb, l);
+                                        acc = match prim {
+                                            Add => acc + x,
+                                            Mul => acc * x,
+                                            Min => acc.min(x),
+                                            Max => acc.max(x),
+                                            _ => unreachable!(),
+                                        };
+                                    }
+                                    acc
+                                }
+                                Sub => {
+                                    if argv.len() == 1 {
+                                        -a0
+                                    } else {
+                                        a0 - self.gscal(argv[1], &scr.sregs, &scr.sb, l)
+                                    }
+                                }
+                                Div => a0 / self.gscal(argv[1], &scr.sregs, &scr.sb, l),
+                                Pow => a0.powf(self.gscal(argv[1], &scr.sregs, &scr.sb, l)),
+                                Neg => -a0,
+                                Exp => a0.exp(),
+                                Log => a0.ln(),
+                                Sqrt => a0.sqrt(),
+                                Abs => a0.abs(),
+                                Sigmoid => 1.0 / (1.0 + (-a0).exp()),
+                                // lower_cols admits only the scalar whitelist
+                                _ => unreachable!("non-columnar prim in panel batch"),
+                            };
+                            scr.sregs[*o as usize * LANES + l] = r;
+                        }
+                    }
+                    GOp::Dot { sigmoid, out: o, a, b } => {
+                        // each lane owns its own sequential reduction in
+                        // element order — the same accumulation order as
+                        // the scalar kernel and Prim::apply, lane by lane
+                        let mut acc = [0.0f64; LANES];
+                        match (*a, *b) {
+                            (GVec::Bind(ba), GVec::Bind(bb)) => {
+                                let ar = panels.vcols[ba as usize].1 as usize;
+                                let xa = &scr.vb[scr.vboff[ba as usize] as usize..];
+                                let xb = &scr.vb[scr.vboff[bb as usize] as usize..];
+                                for k in 0..ar {
+                                    for l in 0..LANES {
+                                        acc[l] += xa[k * LANES + l] * xb[k * LANES + l];
+                                    }
+                                }
+                            }
+                            (GVec::Bind(ba), GVec::Shared(s)) => {
+                                let (off, len) = self.scols[s as usize];
+                                let y = &self.shared[off as usize..(off + len) as usize];
+                                let x = &scr.vb[scr.vboff[ba as usize] as usize..];
+                                for (k, &yk) in y.iter().enumerate() {
+                                    for l in 0..LANES {
+                                        acc[l] += x[k * LANES + l] * yk;
+                                    }
+                                }
+                            }
+                            (GVec::Shared(s), GVec::Bind(bb)) => {
+                                let (off, len) = self.scols[s as usize];
+                                let x = &self.shared[off as usize..(off + len) as usize];
+                                let y = &scr.vb[scr.vboff[bb as usize] as usize..];
+                                for (k, &xk) in x.iter().enumerate() {
+                                    for l in 0..LANES {
+                                        acc[l] += xk * y[k * LANES + l];
+                                    }
+                                }
+                            }
+                            (GVec::Shared(sa), GVec::Shared(sb2)) => {
+                                // batch-shared on both sides: one scalar
+                                // reduction (same op sequence every lane
+                                // would run), broadcast to the block
+                                let (oa, la) = self.scols[sa as usize];
+                                let (ob, lb) = self.scols[sb2 as usize];
+                                let x = &self.shared[oa as usize..(oa + la) as usize];
+                                let y = &self.shared[ob as usize..(ob + lb) as usize];
+                                let mut d = 0.0f64;
+                                for (xk, yk) in x.iter().zip(y.iter()) {
+                                    d += xk * yk;
+                                }
+                                acc = [d; LANES];
+                            }
+                        }
+                        for (l, &d) in acc.iter().enumerate() {
+                            scr.sregs[*o as usize * LANES + l] =
+                                if *sigmoid { 1.0 / (1.0 + (-d).exp()) } else { d };
+                        }
+                    }
+                    GOp::CopyS { out: o, from } => {
+                        for l in 0..LANES {
+                            let x = self.gscal(*from, &scr.sregs, &scr.sb, l);
+                            scr.sregs[*o as usize * LANES + l] = x;
+                        }
+                    }
+                }
+            }
+            // --- absorbers: l[j] += cand - committed, in absorber order ---
+            let mut acc = [0.0f64; LANES];
+            for (bi, ab) in self.absorbers.iter().enumerate() {
+                let argv = &self.args[ab.args.0 as usize..(ab.args.0 + ab.args.1) as usize];
+                let n_args = argv.len();
+                let coff = scr.ab_off[bi] as usize;
+                for l in 0..LANES {
+                    let val = scr.ab_vals[bi * LANES + l];
+                    let cand = packed_fam_logpdf(
+                        ab.fam,
+                        val,
+                        |i| self.gscal(argv[i], &scr.sregs, &scr.sb, l),
+                        n_args,
+                    );
+                    let committed = packed_fam_logpdf(
+                        ab.fam,
+                        val,
+                        |i| scr.ab_cargs[coff + i * LANES + l],
+                        n_args,
+                    );
+                    acc[l] += cand - committed;
+                }
+            }
+            for (l, &v) in acc.iter().take(nl).enumerate() {
+                out[base - lo + l] = v;
+            }
+            base += nl;
+        }
+    }
+}
+
+/// Reusable per-thread replay scratch: the lane registers plus the
+/// block's gathered panels.  Cleared (resized), not freed, between
+/// batches — one per sequential evaluator, one per pool worker.
+#[derive(Debug, Default)]
+pub struct LaneScratch {
+    sregs: Vec<f64>,
+    sb: Vec<f64>,
+    vb: Vec<f64>,
+    vboff: Vec<u32>,
+    ab_vals: Vec<f64>,
+    ab_cargs: Vec<f64>,
+    ab_off: Vec<u32>,
+}
+
+impl LaneScratch {
+    fn size_for(&mut self, batch: &PanelBatch, panels: &GroupPanels) {
+        self.sregs.clear();
+        self.sregs.resize(batch.n_sregs as usize * LANES, 0.0);
+        self.sb.clear();
+        self.sb.resize(panels.n_sbind * LANES, 0.0);
+        self.vboff.clear();
+        let mut tot = 0u32;
+        for &(_, ar) in &panels.vcols {
+            self.vboff.push(tot);
+            tot += ar * LANES as u32;
+        }
+        self.vb.clear();
+        self.vb.resize(tot as usize, 0.0);
+        self.ab_vals.clear();
+        self.ab_vals.resize(panels.ab_cols.len() * LANES, 0.0);
+        self.ab_off.clear();
+        let mut atot = 0u32;
+        for &(_, na) in &panels.ab_cols {
+            self.ab_off.push(atot);
+            atot += na * LANES as u32;
+        }
+        self.ab_cargs.clear();
+        self.ab_cargs.resize(atot as usize, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::subsampled_mh::{InterpreterEval, LocalEvaluator};
+    use crate::math::Pcg64;
+    use crate::trace::batch::PackedBatch;
+    use crate::trace::partition::commit_global;
+    use crate::trace::plan::candidate_globals;
+
+    fn lr_trace(n: usize, seed: u64) -> Trace {
+        let mut src = String::from(
+            "[assume w (scope_include 'w 0 (multivariate_normal (vector 0 0 0) 0.1))]\n\
+             [assume f (lambda (x) (bernoulli (linear_logistic w x)))]\n",
+        );
+        let mut rng = Pcg64::seeded(seed ^ 0xc01);
+        for _ in 0..n {
+            let (a, b) = (rng.normal(), rng.normal());
+            let lab = if rng.bernoulli(0.5) { "true" } else { "false" };
+            src.push_str(&format!("[observe (f (vector {a} {b} 1.0)) {lab}]\n"));
+        }
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(seed);
+        t.run_program(&src, &mut rng).unwrap();
+        t
+    }
+
+    /// Gather + panel replay must be bitwise identical to a fresh pack
+    /// of the same selection — including scattered subsets whose blocks
+    /// straddle the lane width.
+    #[test]
+    fn panel_replay_matches_fresh_pack_bitwise() {
+        let mut t = lr_trace(29, 5);
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let set = t.cached_batch_plans(&p);
+        let g = &set.groups[0];
+        let new_w = Value::vector(vec![0.2, -0.15, 0.4]);
+        let mut globals = Vec::new();
+        candidate_globals(&t, &p, &new_w, &mut globals).unwrap();
+        let (store, built) = t.cached_colstore(&p, &set);
+        assert!(built, "first lookup must build the store");
+        for sel in [
+            (0..g.len() as u32).map(|m| (m, m)).collect::<Vec<_>>(),
+            vec![(3, 0), (27, 1), (0, 2), (11, 3), (8, 4), (19, 5), (4, 6), (22, 7), (1, 8)],
+        ] {
+            ensure_group_members(&mut t, &store, 0, g, &sel).unwrap();
+            let panels = store.borrow().groups[0].panels_arc();
+            let mut pb = PanelBatch::default();
+            pb.build_into(&panels, g, &sel, &globals).unwrap();
+            let mut scr = LaneScratch::default();
+            let mut got = vec![0.0; sel.len()];
+            pb.replay_range(0, sel.len(), &mut scr, &mut got);
+            let packed = PackedBatch::pack(&t, g, &sel, &globals).unwrap();
+            let mut sregs = Vec::new();
+            let mut want = vec![0.0; sel.len()];
+            packed.replay_range(0, sel.len(), &mut sregs, &mut want);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "l[{i}]: panel {a} vs packed {b}");
+            }
+        }
+    }
+
+    /// Any split of the replay range — including splits that do not
+    /// align with lane blocks — must reproduce the full-range replay
+    /// bit for bit (the sharding argument).
+    #[test]
+    fn panel_range_splits_are_bitwise_identical() {
+        let mut t = lr_trace(37, 6);
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let set = t.cached_batch_plans(&p);
+        let g = &set.groups[0];
+        let new_w = Value::vector(vec![-0.1, 0.3, 0.05]);
+        let mut globals = Vec::new();
+        candidate_globals(&t, &p, &new_w, &mut globals).unwrap();
+        let (store, _) = t.cached_colstore(&p, &set);
+        let sel: Vec<(u32, u32)> = (0..g.len() as u32).map(|m| (m, m)).collect();
+        ensure_group_members(&mut t, &store, 0, g, &sel).unwrap();
+        let panels = store.borrow().groups[0].panels_arc();
+        let mut pb = PanelBatch::default();
+        pb.build_into(&panels, g, &sel, &globals).unwrap();
+        let n = pb.width();
+        let mut scr = LaneScratch::default();
+        let mut full = vec![0.0; n];
+        pb.replay_range(0, n, &mut scr, &mut full);
+        for &shards in &[2usize, 3, 5, 7, 13] {
+            let chunk = n.div_ceil(shards);
+            let mut pieced = vec![0.0; n];
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + chunk).min(n);
+                pb.replay_range(lo, hi, &mut scr, &mut pieced[lo..hi]);
+                lo = hi;
+            }
+            for (i, (a, b)) in pieced.iter().zip(&full).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "shards={shards}: l[{i}] diverged");
+            }
+        }
+    }
+
+    /// The accept-refresh contract: after `commit_global` (which bumps
+    /// `value_version`), sampled rows must be re-read — a store serving
+    /// its stale committed args would diverge from the oracle.
+    #[test]
+    fn value_version_refresh_after_accepted_move() {
+        let mut t = lr_trace(16, 7);
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let set = t.cached_batch_plans(&p);
+        let g = &set.groups[0];
+        let sel: Vec<(u32, u32)> = (0..g.len() as u32).map(|m| (m, m)).collect();
+        let (store, _) = t.cached_colstore(&p, &set);
+        let w1 = Value::vector(vec![0.25, -0.3, 0.1]);
+        let mut globals = Vec::new();
+        candidate_globals(&t, &p, &w1, &mut globals).unwrap();
+        let first = ensure_group_members(&mut t, &store, 0, g, &sel).unwrap();
+        assert_eq!(first, sel.len(), "initial fill must refresh every member");
+        // steady state: no commit, no refresh
+        assert_eq!(ensure_group_members(&mut t, &store, 0, g, &sel).unwrap(), 0);
+        // accept the move: committed linlog values (the absorbers'
+        // committed args) change under the new w
+        commit_global(&mut t, &p, w1);
+        assert_eq!(
+            ensure_group_members(&mut t, &store, 0, g, &sel).unwrap(),
+            sel.len(),
+            "post-commit gather must refresh every sampled member"
+        );
+        // and the refreshed store scores the next proposal like the oracle
+        let w2 = Value::vector(vec![0.3, -0.2, 0.15]);
+        candidate_globals(&t, &p, &w2, &mut globals).unwrap();
+        let panels = store.borrow().groups[0].panels_arc();
+        let mut pb = PanelBatch::default();
+        pb.build_into(&panels, g, &sel, &globals).unwrap();
+        let mut scr = LaneScratch::default();
+        let mut got = vec![0.0; sel.len()];
+        pb.replay_range(0, sel.len(), &mut scr, &mut got);
+        let roots = g.roots.clone();
+        let mut interp = InterpreterEval;
+        let p2 = t.cached_partition(w).unwrap();
+        let want = interp.eval_sections(&mut t, &p2, &roots, &w2).unwrap();
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "l[{i}]: store {a} vs interpreter {b}");
+        }
+    }
+
+    /// The store cache obeys the structural discipline: reused while
+    /// the structure is unchanged, rebuilt wholesale after a structural
+    /// change.
+    #[test]
+    fn store_set_cached_until_structure_changes() {
+        let mut t = lr_trace(10, 8);
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let set = t.cached_batch_plans(&p);
+        let (a, built_a) = t.cached_colstore(&p, &set);
+        assert!(built_a);
+        let (b, built_b) = t.cached_colstore(&p, &set);
+        assert!(!built_b, "unchanged structure must reuse the store");
+        assert!(Rc::ptr_eq(&a, &b));
+        let mut rng = Pcg64::seeded(9);
+        t.run_program("[observe (f (vector 0.1 0.2 1.0)) true]", &mut rng)
+            .unwrap();
+        let p2 = t.cached_partition(w).unwrap();
+        let set2 = t.cached_batch_plans(&p2);
+        let (c, built_c) = t.cached_colstore(&p2, &set2);
+        assert!(built_c, "stale store must rebuild");
+        assert!(!Rc::ptr_eq(&a, &c));
+        assert_eq!(c.borrow().built_at, t.structure_version);
+    }
+}

@@ -2,6 +2,7 @@
 //! evaluation, scaffolds, detach/regenerate, partitioning, staleness.
 
 pub mod batch;
+pub mod colstore;
 pub mod eval;
 pub mod node;
 pub mod partition;
@@ -11,6 +12,7 @@ pub mod regen;
 pub mod scaffold;
 
 pub use batch::{BatchGroup, BatchPlanSet, PackedBatch, RegFile, ShapeKey};
+pub use colstore::{ColumnStoreSet, LaneScratch, PanelBatch};
 pub use eval::Evaluator;
 pub use node::{ArgRef, EvalResult, Node, NodeId, NodeKind};
 pub use pet::Trace;

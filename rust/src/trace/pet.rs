@@ -69,6 +69,10 @@ impl Scope {
     }
 }
 
+/// Shared handle on a cached column store (rows mutate between
+/// structural rebuilds, hence the inner `RefCell`).
+pub type ColStoreHandle = Rc<RefCell<crate::trace::colstore::ColumnStoreSet>>;
+
 /// Record of an executed top-level directive.
 #[derive(Debug)]
 pub struct DirectiveRecord {
@@ -102,6 +106,17 @@ pub struct Trace {
     /// `cached_partition`/`cached_section_plan` from inside
     /// detach/regen/rollback.
     pub structure_version: u64,
+    /// Bumped on every *committed-value* write (`set_value`): accepted
+    /// subsampled proposals (`commit_global`), journaled transitions
+    /// (detach/regen/rollback all write through `set_value`),
+    /// particle-gibbs state commits, and observation rewrites.  The
+    /// persistent column store (`trace/colstore.rs`) stamps each cached
+    /// member row with this and lazily re-reads rows whose stamp is
+    /// stale.  Lazy freshening (`freshen`) deliberately does NOT bump
+    /// it: a freshen under unchanged committed inputs recomputes
+    /// bit-identical values, so store rows stay valid across epoch
+    /// bumps until some committed input actually moves.
+    pub value_version: u64,
     pub(crate) records: Vec<DirectiveRecord>,
     pub(crate) observations: Vec<NodeId>,
     /// Border-partition cache (Defs. 6-8), keyed by principal node and
@@ -123,6 +138,14 @@ pub struct Trace {
     /// across structural changes, so a stale set is rebuilt wholesale,
     /// never patched.
     batch_cache: RefCell<HashMap<NodeId, Rc<crate::trace::batch::BatchPlanSet>>>,
+    /// Persistent column-store cache (trace/colstore.rs), keyed by
+    /// principal and aligned group-for-group with the cached
+    /// `BatchPlanSet`.  The set's *layout* (group membership, column
+    /// offsets) is structure-keyed like the other caches; its *rows*
+    /// carry per-member `value_version` stamps and refresh lazily, so
+    /// it lives behind its own `RefCell` (rows mutate between
+    /// structural rebuilds).
+    colstore_cache: RefCell<HashMap<NodeId, ColStoreHandle>>,
     /// Process-unique id of this trace (evaluators that carry per-trace
     /// caches validate against it — `structure_version` alone is not
     /// unique across traces).
@@ -150,11 +173,13 @@ impl Trace {
             epoch: 0,
             epochs: Vec::new(),
             structure_version: 0,
+            value_version: 1,
             records: Vec::new(),
             observations: Vec::new(),
             partition_cache: RefCell::new(HashMap::new()),
             plan_cache: RefCell::new(HashMap::new()),
             batch_cache: RefCell::new(HashMap::new()),
+            colstore_cache: RefCell::new(HashMap::new()),
             instance_id: TRACE_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
         }
     }
@@ -218,6 +243,29 @@ impl Trace {
         let s = Rc::new(crate::trace::batch::build_batch_plans(self, p));
         self.batch_cache.borrow_mut().insert(p.v, s.clone());
         s
+    }
+
+    /// Cached persistent column store for partition `p`, aligned
+    /// group-for-group with `set` (the *current* cached batch-plan set —
+    /// callers obtain it from [`cached_batch_plans`](Self::cached_batch_plans)
+    /// first, which guarantees `set.built_at == structure_version`).
+    /// Returns `(store, freshly_built)`; a fresh build allocates the
+    /// full-width panels with every member row stale, so rows fill
+    /// lazily as members are sampled (see `trace/colstore.rs`).
+    pub fn cached_colstore(
+        &self,
+        p: &crate::trace::partition::Partition,
+        set: &crate::trace::batch::BatchPlanSet,
+    ) -> (ColStoreHandle, bool) {
+        debug_assert_eq!(set.built_at, self.structure_version);
+        if let Some(s) = self.colstore_cache.borrow().get(&p.v) {
+            if s.borrow().built_at == self.structure_version {
+                return (s.clone(), false);
+            }
+        }
+        let s = Rc::new(RefCell::new(crate::trace::colstore::ColumnStoreSet::new(set)));
+        self.colstore_cache.borrow_mut().insert(p.v, s.clone());
+        (s, true)
     }
 
     // ---------------- arena ----------------
@@ -367,10 +415,16 @@ impl Trace {
         }
     }
 
-    /// Set a node's value directly and stamp it fresh.
+    /// Set a node's value directly and stamp it fresh.  This is the
+    /// committed-value write path (commits, rollbacks, observation
+    /// rewrites), so it bumps `value_version` — the column store's
+    /// per-member staleness key.  Lazy recomputation (`freshen`) writes
+    /// values directly instead: it cannot change a value unless some
+    /// committed input already moved through here.
     pub fn set_value(&mut self, id: NodeId, v: Value) {
         self.nodes[id.idx()].value = v;
         self.epochs[id.idx()] = self.epoch;
+        self.value_version += 1;
     }
 
     /// Re-stamp a node as fresh under the current epoch without cloning

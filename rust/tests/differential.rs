@@ -1,7 +1,11 @@
 //! Differential harness: InterpreterEval (the oracle) vs PlannedEval
-//! in scalar mode vs PlannedEval in shape-grouped batched mode, on all
-//! three paper workloads (logistic regression, JointDPM, stochastic
-//! volatility).
+//! in scalar mode vs PlannedEval in shape-grouped batched mode (fresh
+//! pack) vs PlannedEval on the persistent column store (gather +
+//! lane-panel replay), on all three paper workloads (logistic
+//! regression, JointDPM, stochastic volatility).  CI runs this suite
+//! twice — SUBPPL_COLSTORE=0 and =1 — so the *default* evaluator is
+//! exercised on both sides of the kill switch; the store and fresh-pack
+//! rungs below pin both paths explicitly regardless of the env.
 //!
 //! Two layers of evidence:
 //! * **l_i identity** — whole-population section scores must be
@@ -43,14 +47,16 @@ fn assert_bitwise(label: &str, got: &[f64], want: &[f64]) {
     }
 }
 
-/// Score a whole population through the three paths and demand bitwise
-/// identity; returns the batched evaluator's counters for inspection.
-fn li_three_ways(
+/// Score a whole population through every path and demand bitwise
+/// identity; returns `(planned, batched, fallback, gathered)` counters
+/// for inspection (`planned`/`batched`/`fallback` from the fresh-pack
+/// evaluator, `gathered` from the store evaluator).
+fn li_all_ways(
     trace: &mut Trace,
     v: NodeId,
     new_v: &Value,
     label: &str,
-) -> (usize, usize, usize) {
+) -> (usize, usize, usize, usize) {
     let p = trace.cached_partition(v).expect("no border partition");
     let roots = p.locals.clone();
     let mut interp = InterpreterEval;
@@ -58,13 +64,18 @@ fn li_three_ways(
     let mut scalar = PlannedEval::scalar();
     let got = scalar.eval_sections(trace, &p, &roots, new_v).unwrap();
     assert_bitwise(&format!("{label}/scalar"), &got, &want);
-    let mut batched = PlannedEval::new();
+    let mut batched = PlannedEval::new().with_colstore(false);
     let got = batched.eval_sections(trace, &p, &roots, new_v).unwrap();
     assert_bitwise(&format!("{label}/batched"), &got, &want);
+    assert_eq!(batched.gathered_sections, 0, "{label}: kill switch leaked");
+    let mut store = PlannedEval::new().with_colstore(true);
+    let got = store.eval_sections(trace, &p, &roots, new_v).unwrap();
+    assert_bitwise(&format!("{label}/store"), &got, &want);
     (
         batched.planned_sections,
         batched.batched_sections,
         batched.fallback_sections,
+        store.gathered_sections,
     )
 }
 
@@ -76,10 +87,11 @@ fn li_bitwise_logistic_regression() {
     let cur = trace.fresh_value(w);
     for step in 0..4 {
         let new_w = Proposal::Drift(0.2).propose(&cur, &mut rng).unwrap();
-        let (planned, batched, fallback) =
-            li_three_ways(&mut trace, w, &new_w, &format!("lr step {step}"));
+        let (planned, batched, fallback, gathered) =
+            li_all_ways(&mut trace, w, &new_w, &format!("lr step {step}"));
         assert_eq!(planned, 500);
         assert_eq!(batched, 500, "LR sections must all batch");
+        assert_eq!(gathered, 500, "LR sections must all gather from the store");
         assert_eq!(fallback, 0);
     }
 }
@@ -96,9 +108,10 @@ fn li_bitwise_joint_dpm() {
         }
         let cur = trace.fresh_value(wk);
         let new_w = Proposal::Drift(0.3).propose(&cur, &mut rng).unwrap();
-        let (_, batched, fallback) =
-            li_three_ways(&mut trace, wk, &new_w, &format!("dpm w{checked}"));
+        let (_, batched, fallback, gathered) =
+            li_all_ways(&mut trace, wk, &new_w, &format!("dpm w{checked}"));
         assert!(batched > 0, "DPM weight sections must batch");
+        assert_eq!(gathered, batched, "DPM weight sections must gather");
         assert_eq!(fallback, 0);
         checked += 1;
     }
@@ -118,8 +131,9 @@ fn li_bitwise_stochastic_volatility() {
     for (v, sigma, label) in [(phi, 0.05, "sv/phi"), (sig2, 0.01, "sv/sig2")] {
         let cur = trace.fresh_value(v);
         let new_v = Proposal::Drift(sigma).propose(&cur, &mut rng).unwrap();
-        let (planned, batched, fallback) = li_three_ways(&mut trace, v, &new_v, label);
+        let (planned, batched, fallback, gathered) = li_all_ways(&mut trace, v, &new_v, label);
         assert_eq!(planned, batched, "{label}: all sections must batch");
+        assert_eq!(gathered, batched, "{label}: all sections must gather");
         assert_eq!(fallback, 0);
     }
 }
@@ -147,10 +161,11 @@ fn li_bitwise_int_widened_shape() {
     let cur = trace.fresh_value(w);
     for step in 0..3 {
         let new_w = Proposal::Drift(0.2).propose(&cur, &mut rng).unwrap();
-        let (planned, batched, fallback) =
-            li_three_ways(&mut trace, w, &new_w, &format!("int-widened step {step}"));
+        let (planned, batched, fallback, gathered) =
+            li_all_ways(&mut trace, w, &new_w, &format!("int-widened step {step}"));
         assert_eq!(planned, 80);
         assert_eq!(batched, 80, "int-widened sections must batch");
+        assert_eq!(gathered, 80, "int-widened sections must gather");
         assert_eq!(fallback, 0);
     }
 }
@@ -271,41 +286,99 @@ fn assert_lockstep(label: &str, runs: &[Vec<StepRecord>]) {
 fn lockstep_200_transitions_logistic_regression() {
     let mut interp = InterpreterEval;
     let mut scalar = PlannedEval::scalar();
-    let mut batched = PlannedEval::new();
+    let mut batched = PlannedEval::new().with_colstore(false);
+    let mut store = PlannedEval::new().with_colstore(true);
     let runs = vec![
         run_lr_chain(&mut interp, 200),
         run_lr_chain(&mut scalar, 200),
         run_lr_chain(&mut batched, 200),
+        run_lr_chain(&mut store, 200),
     ];
     assert_lockstep("lr", &runs);
     assert!(batched.batched_sections > 0, "batched path never engaged");
     assert_eq!(batched.fallback_sections, 0);
+    assert!(store.gathered_sections > 0, "store path never engaged");
+    assert!(
+        store.store_refreshed > 0,
+        "accepted transitions must refresh store rows"
+    );
+    assert_eq!(store.fallback_sections, 0);
 }
 
 #[test]
 fn lockstep_200_transitions_stochastic_volatility() {
     let mut interp = InterpreterEval;
     let mut scalar = PlannedEval::scalar();
-    let mut batched = PlannedEval::new();
+    let mut batched = PlannedEval::new().with_colstore(false);
+    let mut store = PlannedEval::new().with_colstore(true);
     let runs = vec![
         run_sv_chain(&mut interp, 200),
         run_sv_chain(&mut scalar, 200),
         run_sv_chain(&mut batched, 200),
+        run_sv_chain(&mut store, 200),
     ];
     assert_lockstep("sv", &runs);
     assert!(batched.batched_sections > 0, "batched path never engaged");
+    assert!(store.gathered_sections > 0, "store path never engaged");
 }
 
 #[test]
 fn lockstep_dpm_with_structure_churn() {
     let mut interp = InterpreterEval;
     let mut scalar = PlannedEval::scalar();
-    let mut batched = PlannedEval::new();
+    let mut batched = PlannedEval::new().with_colstore(false);
+    let mut store = PlannedEval::new().with_colstore(true);
     let runs = vec![
         run_dpm_chain(&mut interp, 50),
         run_dpm_chain(&mut scalar, 50),
         run_dpm_chain(&mut batched, 50),
+        run_dpm_chain(&mut store, 50),
     ];
     assert_lockstep("dpm", &runs);
     assert!(batched.batched_sections > 0, "batched path never engaged");
+    assert!(store.gathered_sections > 0, "store path never engaged");
+    assert!(
+        store.store_rebuilds > 1,
+        "gibbs churn must force store rebuilds"
+    );
+}
+
+// ---------------------------------------------------------------------
+// accept-refresh regression: committed-side staleness
+// ---------------------------------------------------------------------
+
+/// After an accepted global move (`commit_global` bumps
+/// `value_version`), the store's cached committed absorber args are
+/// stale: scoring the next proposal against them would compute the
+/// acceptance ratio against the *old* committed state and silently bias
+/// the chain.  The store must re-read sampled rows and keep matching
+/// the oracle bit for bit.
+#[test]
+fn store_refreshes_committed_args_after_accepted_move() {
+    use subppl::trace::partition::commit_global;
+    let data = synth2d::generate(300, 97);
+    let mut rng = Pcg64::seeded(98);
+    let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+    let p = trace.cached_partition(w).expect("no border partition");
+    let roots = p.locals.clone();
+    let cur = trace.fresh_value(w);
+    let w1 = Proposal::Drift(0.2).propose(&cur, &mut rng).unwrap();
+    let mut store = PlannedEval::new().with_colstore(true);
+    // fills the store's rows under the current committed state
+    store.eval_sections(&mut trace, &p, &roots, &w1).unwrap();
+    assert_eq!(store.gathered_sections, roots.len());
+    assert_eq!(store.store_refreshed, roots.len());
+    // accept: write the global section, bump epoch + value_version
+    commit_global(&mut trace, &p, w1.clone());
+    let w2 = Proposal::Drift(0.2).propose(&w1, &mut rng).unwrap();
+    let mut interp = InterpreterEval;
+    let want = interp.eval_sections(&mut trace, &p, &roots, &w2).unwrap();
+    let got = store.eval_sections(&mut trace, &p, &roots, &w2).unwrap();
+    assert_bitwise("accept-refresh", &got, &want);
+    assert_eq!(
+        store.store_refreshed,
+        2 * roots.len(),
+        "post-commit batch must refresh every sampled row"
+    );
+    assert_eq!(store.store_rebuilds, 1, "a value-only commit must not rebuild");
 }

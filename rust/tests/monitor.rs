@@ -132,6 +132,7 @@ fn monitored_run_is_deterministic_and_does_not_perturb_chains() {
         mon.absorb(ChainEvent {
             chain: c,
             draws: draws.iter().map(|&x| vec![x]).collect(),
+            stats: None,
         });
     }
     let mut seq_snaps = mon.ready_snapshots();

@@ -41,7 +41,9 @@ fn assert_bitwise(label: &str, got: &[f64], want: &[f64]) {
 /// Whole-population l_i through the interpreter oracle, the sequential
 /// batched evaluator, and pool-sharded evaluators at 1/2/4 threads —
 /// with the work-stealing dispatcher both enabled (the default) and
-/// disabled, which must be indistinguishable in results.
+/// disabled, and the column store both on (panel shards gathering from
+/// the shared store) and off (fresh pack), all of which must be
+/// indistinguishable in results.
 fn li_across_thread_counts(trace: &mut Trace, v: NodeId, new_v: &Value, label: &str) {
     let p = trace.cached_partition(v).expect("no border partition");
     let roots = p.locals.clone();
@@ -52,28 +54,40 @@ fn li_across_thread_counts(trace: &mut Trace, v: NodeId, new_v: &Value, label: &
     assert_bitwise(&format!("{label}/sequential"), &got, &want);
     for threads in [1usize, 2, 4] {
         for steal in [true, false] {
-            let mut par = parallel_eval(threads).with_work_stealing(steal);
-            let got = par.eval_sections(trace, &p, &roots, new_v).unwrap();
-            let tag = format!("{label}/threads{threads}/steal={steal}");
-            assert_bitwise(&tag, &got, &want);
-            assert_eq!(par.fallback_sections, 0, "{tag}");
-            if threads == 1 {
-                // threads = 1 must be the sequential path, exactly
-                assert_eq!(par.sharded_sections(), 0, "{tag}: 1-thread pool dispatched");
-            } else {
-                assert_eq!(
-                    par.sharded_sections(),
-                    par.batched_sections,
-                    "{tag}: forced dispatch must shard every batched section"
-                );
-                assert!(par.sharded_sections() > 0, "{tag}: pool never engaged");
-            }
-            if !steal {
-                assert_eq!(
-                    par.stolen_sections(),
-                    0,
-                    "{tag}: disabled stealing still stole"
-                );
+            for colstore in [true, false] {
+                let mut par = parallel_eval(threads)
+                    .with_work_stealing(steal)
+                    .with_colstore(colstore);
+                let got = par.eval_sections(trace, &p, &roots, new_v).unwrap();
+                let tag = format!("{label}/threads{threads}/steal={steal}/store={colstore}");
+                assert_bitwise(&tag, &got, &want);
+                assert_eq!(par.fallback_sections, 0, "{tag}");
+                if colstore {
+                    assert_eq!(
+                        par.gathered_sections, par.batched_sections,
+                        "{tag}: store path fell back"
+                    );
+                } else {
+                    assert_eq!(par.gathered_sections, 0, "{tag}: kill switch leaked");
+                }
+                if threads == 1 {
+                    // threads = 1 must be the sequential path, exactly
+                    assert_eq!(par.sharded_sections(), 0, "{tag}: 1-thread pool dispatched");
+                } else {
+                    assert_eq!(
+                        par.sharded_sections(),
+                        par.batched_sections,
+                        "{tag}: forced dispatch must shard every batched section"
+                    );
+                    assert!(par.sharded_sections() > 0, "{tag}: pool never engaged");
+                }
+                if !steal {
+                    assert_eq!(
+                        par.stolen_sections(),
+                        0,
+                        "{tag}: disabled stealing still stole"
+                    );
+                }
             }
         }
     }
@@ -167,13 +181,15 @@ fn run_lr_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
 fn lockstep_200_transitions_threads_4() {
     let mut interp = InterpreterEval;
     let mut seq = PlannedEval::new();
-    let mut par = parallel_eval(4);
+    let mut par = parallel_eval(4).with_colstore(false);
     let mut par_nosteal = parallel_eval(4).with_work_stealing(false);
+    let mut par_store = parallel_eval(4).with_colstore(true);
     let runs = [
         run_lr_chain(&mut interp, 200),
         run_lr_chain(&mut seq, 200),
         run_lr_chain(&mut par, 200),
         run_lr_chain(&mut par_nosteal, 200),
+        run_lr_chain(&mut par_store, 200),
     ];
     for (r, run) in runs.iter().enumerate().skip(1) {
         for (i, (a, b)) in runs[0].iter().zip(run).enumerate() {
@@ -186,6 +202,14 @@ fn lockstep_200_transitions_threads_4() {
     );
     assert!(par.sharded_sections() > 0, "pool never engaged over 200 transitions");
     assert_eq!(par_nosteal.stolen_sections(), 0);
+    assert!(
+        par_store.gathered_sections > 0,
+        "store-parallel rung never gathered"
+    );
+    assert_eq!(
+        par_store.gathered_sections, par_store.batched_sections,
+        "store-parallel rung fell back to packing"
+    );
 }
 
 // ---------------------------------------------------------------------

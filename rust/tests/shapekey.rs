@@ -188,3 +188,91 @@ fn batch_plans_rebuild_after_mem_rekey() {
     }
     assert_eq!(batched.batched_sections, roots2.len());
 }
+
+/// Regression (column-store invalidation on mem re-key): the same
+/// child-edge rewiring that invalidates batch-plan sets must rebuild
+/// the persistent column store — its rows cache *absorber node ids'*
+/// values and committed args, which dangle across a re-key.  A stale
+/// store surviving the `structure_version` bump would diverge from the
+/// oracle below.
+#[test]
+fn colstore_rebuilds_after_mem_rekey() {
+    let n = 12;
+    let mut rng = Pcg64::seeded(29);
+    let mut src = String::from(
+        "[assume crp (make_crp 2.0)]\n\
+         [assume z (mem (lambda (i) (scope_include 'z i (crp))))]\n\
+         [assume muk (mem (lambda (k) (scope_include 'muk k (normal 0 3))))]\n\
+         [assume x (lambda (i) (normal (muk (z i)) 0.8))]\n",
+    );
+    for i in 0..n {
+        src.push_str(&format!("[observe (x {i}) {}]\n", (i % 5) as f64 - 2.0));
+    }
+    let mut trace = Trace::new();
+    trace.run_program(&src, &mut rng).unwrap();
+    let find = |trace: &Trace| {
+        trace
+            .scope_nodes("muk")
+            .into_iter()
+            .find_map(|mk| trace.cached_partition(mk).map(|p| (mk, p)))
+    };
+
+    // before the re-key: fill the store and check it against the oracle
+    let (_, p) = find(&trace).expect("no cluster with >= 2 points");
+    let set_before = trace.cached_batch_plans(&p);
+    let (store_before, built) = trace.cached_colstore(&p, &set_before);
+    assert!(built, "first lookup must build the store");
+    let built_at_before = store_before.borrow().built_at;
+    let roots = p.locals.clone();
+    let new_v = Value::Real(0.4);
+    let mut interp = InterpreterEval;
+    let want = interp.eval_sections(&mut trace, &p, &roots, &new_v).unwrap();
+    let mut store_ev = PlannedEval::new().with_colstore(true);
+    let got = store_ev.eval_sections(&mut trace, &p, &roots, &new_v).unwrap();
+    for (a, b) in got.iter().zip(&want) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert_eq!(store_ev.gathered_sections, roots.len());
+
+    // churn cluster assignments until a committed re-key changes the
+    // structure (rejected candidates restore the version)
+    let v0 = trace.structure_version;
+    let zs = trace.scope_nodes("z");
+    let mut changed = false;
+    for step in 0..2000 {
+        let z = zs[step % zs.len()];
+        gibbs_transition(&mut trace, &mut rng, z).unwrap();
+        if trace.structure_version != v0 {
+            changed = true;
+            break;
+        }
+    }
+    assert!(changed, "gibbs churn never re-keyed a mem application");
+
+    // after: the store must be rebuilt against the new structure, and
+    // the store-backed scores must still match the oracle bit for bit
+    let (_, p2) = find(&trace).expect("all clusters died");
+    let set_after = trace.cached_batch_plans(&p2);
+    let (store_after, _) = trace.cached_colstore(&p2, &set_after);
+    assert_eq!(store_after.borrow().built_at, trace.structure_version);
+    assert_ne!(
+        store_after.borrow().built_at,
+        built_at_before,
+        "stale column store survived a structural change"
+    );
+    let roots2 = p2.locals.clone();
+    let want = interp
+        .eval_sections(&mut trace, &p2, &roots2, &new_v)
+        .unwrap();
+    let mut store_ev = PlannedEval::new().with_colstore(true);
+    let got = store_ev
+        .eval_sections(&mut trace, &p2, &roots2, &new_v)
+        .unwrap();
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "post-rekey l[{i}]: store {a} vs interpreter {b}"
+        );
+    }
+    assert_eq!(store_ev.gathered_sections, roots2.len());
+}
