@@ -12,6 +12,7 @@ use std::time::Instant;
 use subppl::coordinator::chain::build_bayes_lr;
 use subppl::data::mnist_like;
 use subppl::infer::subsampled_mh::SparseSampler;
+use subppl::infer::planned::EvalStats;
 use subppl::infer::{
     gibbs_transition, mh_transition, subsampled_mh_transition, InterpreterEval, LocalEvaluator,
     PlannedEval, Proposal, SubsampledConfig,
@@ -94,7 +95,11 @@ struct SweepRow {
 
 const PAR_THREADS: [usize; 3] = [1, 2, 4];
 
-fn scorer_sweep(ns: &[usize], d: usize, m: usize) -> Vec<SweepRow> {
+/// The sweep additionally folds every evaluator's recovery counters
+/// into `recovery`: a healthy bench run (no faults injected) must end
+/// with all of them zero — pinned by the `recovery_counters_zero`
+/// self-check and validated structurally by `scripts/check_bench.py`.
+fn scorer_sweep(ns: &[usize], d: usize, m: usize, recovery: &mut EvalStats) -> Vec<SweepRow> {
     let mut rows = Vec::new();
     for &n in ns {
         let data = mnist_like::sized(n, d, 0);
@@ -144,7 +149,12 @@ fn scorer_sweep(ns: &[usize], d: usize, m: usize) -> Vec<SweepRow> {
             };
             par_sps[i] =
                 sections_per_sec(&mut ev, &mut trace, &p, &new_w, PAR_M, target, reps);
+            *recovery = recovery.add(&ev.stats());
         }
+        *recovery = recovery
+            .add(&planned.stats())
+            .add(&batched.stats())
+            .add(&store.stats());
         println!(
             "thread sweep N={n:<7} (m={PAR_M})  t1 {:>12.0}   t2 {:>12.0}   t4 {:>12.0} sections/s   t4/t1 {:.2}x",
             par_sps[0], par_sps[1], par_sps[2], par_sps[2] / par_sps[0]
@@ -314,7 +324,12 @@ fn self_checks(rows: &[SweepRow]) -> Vec<(&'static str, Check)> {
     checks
 }
 
-fn emit_json(rows: &[SweepRow], micro: &[(String, f64)], checks: &[(&'static str, Check)]) {
+fn emit_json(
+    rows: &[SweepRow],
+    micro: &[(String, f64)],
+    checks: &[(&'static str, Check)],
+    recovery: &EvalStats,
+) {
     let mut out = String::from("{\n  \"bench\": \"hotpath\",\n  \"workload\": \"bayes_lr\",\n  \"scorer_sweep\": [\n");
     for (i, r) in rows.iter().enumerate() {
         let _ = writeln!(
@@ -348,7 +363,18 @@ fn emit_json(rows: &[SweepRow], micro: &[(String, f64)], checks: &[(&'static str
             if i + 1 == micro.len() { "" } else { "," }
         );
     }
-    out.push_str("  },\n  \"self_checks\": {\n");
+    // EvalStats recovery counters, aggregated over every evaluator the
+    // bench ran: all zero on a healthy (fault-free) run, and required
+    // present by scripts/check_bench.py so the fields cannot silently
+    // drop out of the trajectory artifact
+    let _ = writeln!(
+        out,
+        "  }},\n  \"recovery_counters\": {{\n    \"fallback_panics\": {},\n    \"requeued_shards\": {},\n    \"store_quarantined\": {},\n    \"chains_restarted\": {}\n  }},\n  \"self_checks\": {{",
+        recovery.fallback_panics,
+        recovery.requeued_shards,
+        recovery.store_quarantined,
+        recovery.chains_restarted
+    );
     for (i, (name, check)) in checks.iter().enumerate() {
         let _ = writeln!(
             out,
@@ -534,12 +560,32 @@ fn main() {
     } else {
         vec![1_000, 10_000, 100_000]
     };
-    let rows = scorer_sweep(&ns, 50, 100);
-    let checks = self_checks(&rows);
+    let mut recovery = EvalStats::default();
+    let rows = scorer_sweep(&ns, 50, 100, &mut recovery);
+    // the micro-section evaluators ran transitions too: their recovery
+    // counters belong in the same healthy-run-is-zero budget
+    recovery = recovery
+        .add(&planned.stats())
+        .add(&batched.stats())
+        .add(&store.stats());
+    let mut checks = self_checks(&rows);
+    checks.push((
+        "recovery_counters_zero",
+        from_bool(
+            !recovery.any_recovery(),
+            format!(
+                "recovery fired during a fault-free bench: panics={} requeued={} quarantined={} restarts={}",
+                recovery.fallback_panics,
+                recovery.requeued_shards,
+                recovery.store_quarantined,
+                recovery.chains_restarted
+            ),
+        ),
+    ));
     // write the artifact (self-check outcomes included) before
     // asserting, so a regression failure still leaves the numbers
     // behind for triage
-    emit_json(&rows, &micro, &checks);
+    emit_json(&rows, &micro, &checks, &recovery);
     let mut failed = false;
     for (name, check) in &checks {
         match check {

@@ -67,6 +67,18 @@ SELF_CHECK_KEYS = {
     "store_gather_1p3x_at_1e5",
     "t4_not_below_t1",
     "t4_speedup_1p5x_at_1e5",
+    "recovery_counters_zero",
+}
+
+# EvalStats recovery counters, aggregated over the whole bench run:
+# required present (so the fields cannot silently drop out of the
+# artifact) and non-negative integers; zero on a healthy run is the
+# recovery_counters_zero self-check's job, not the schema gate's
+RECOVERY_KEYS = {
+    "fallback_panics",
+    "requeued_shards",
+    "store_quarantined",
+    "chains_restarted",
 }
 
 errors = []
@@ -174,6 +186,20 @@ def main(argv):
         for key, v in micro.items():
             if not positive_finite(v):
                 err(f"micro_us.{key}: expected positive finite number, got {v!r}")
+
+    recovery = doc.get("recovery_counters")
+    if not isinstance(recovery, dict):
+        err("recovery_counters: missing (bench predates the fault-tolerant runtime?)")
+    else:
+        for key in sorted(RECOVERY_KEYS - set(recovery)):
+            err(f"recovery_counters: missing {key!r}")
+        extra = set(recovery) - RECOVERY_KEYS
+        if extra:
+            err(f"recovery_counters: unexpected keys {sorted(extra)}")
+        for key in sorted(RECOVERY_KEYS & set(recovery)):
+            v = recovery[key]
+            if not (isinstance(v, int) and not isinstance(v, bool) and v >= 0):
+                err(f"recovery_counters.{key}: expected non-negative integer, got {v!r}")
 
     checks = doc.get("self_checks")
     if not isinstance(checks, dict):

@@ -1,0 +1,498 @@
+//! Chain checkpoint/resume: periodic atomic snapshots of a chain's
+//! mutable state, so a killed run — process crash, OOM, gate kill —
+//! resumes from the last checkpoint and reproduces the uninterrupted
+//! run bit-for-bit.
+//!
+//! # What a checkpoint is
+//!
+//! Given a fixed trace structure, a chain's entire mutable state is
+//! (a) the committed value of every unobserved stochastic node and
+//! (b) the position of its PCG stream.  Everything else is derived:
+//! observed values are pinned by the program, deterministic nodes are
+//! functions of the stochastic ones (recomputed lazily after an epoch
+//! bump), and plan/store caches rebuild on demand.  So a
+//! [`ChainCheckpoint`] records `(seed, chain, draw, rng state,
+//! stochastic values by node id)` and nothing else.
+//!
+//! Resume rebuilds the trace from program source with the chain's
+//! *original* stream `chain_rng(seed, chain)` — replaying the program
+//! allocates the same node ids regardless of what the prior samples
+//! were — then overwrites the stochastic values via
+//! [`Trace::restore_stoch_state`] (same SP unincorporate/incorporate
+//! discipline as `observe`) and swaps in the checkpointed RNG
+//! position.  From draw `k+1` on, the resumed chain performs the
+//! exact instruction stream of the uninterrupted one.
+//!
+//! **Restriction**: structure must be fixed between checkpoint and
+//! resume — programs whose transitions re-key mem applications (e.g.
+//! the DPM's cluster assignments) change node ids and are rejected at
+//! restore with an explicit error.  Exchangeable aux state is
+//! restored through the incorporate discipline, which is exact for
+//! counting auxes (CRP); floating-point sufficient statistics are
+//! restored only up to summation order.  The models the lockstep
+//! tests pin (LR, SV) use stateless families, where resume is exact.
+//!
+//! # File format
+//!
+//! One text file per chain, `chain<k>.ckpt`, written
+//! temp-then-rename so a crash mid-write can never corrupt the
+//! previous checkpoint:
+//!
+//! ```text
+//! subppl-checkpoint v1
+//! seed 42
+//! chain 0
+//! draw 300
+//! rng <state:32-hex> <inc:32-hex>
+//! values <count>
+//! <node-id> R <f64-bits:16-hex>
+//! <node-id> V <len> <16-hex> <16-hex> ...
+//! <node-id> B 0|1
+//! <node-id> I <i64>
+//! checksum <fnv1a:16-hex>
+//! ```
+//!
+//! Reals are serialized as raw bit patterns (never decimal), so a
+//! load is bitwise lossless; the trailing FNV-1a checksum over every
+//! preceding byte rejects truncated or hand-edited files.
+
+use crate::math::Pcg64;
+use crate::ppl::value::Value;
+use crate::trace::pet::Trace;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// FNV-1a over a byte string (same constants as the column store's row
+/// hash; duplicated to keep the two modules dependency-free).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// One chain's resumable state: see the module docs for what is (and
+/// deliberately is not) in here.
+#[derive(Clone, Debug)]
+pub struct ChainCheckpoint {
+    pub seed: u64,
+    pub chain: usize,
+    /// Draws completed when the snapshot was taken: resume continues
+    /// at draw `draw + 1`.
+    pub draw: usize,
+    /// PCG stream position `(state, inc)` as of the end of draw
+    /// `draw`.
+    pub rng: (u128, u128),
+    /// `(node id, committed value)` for every unobserved stochastic
+    /// node, in node-id order ([`Trace::stoch_state`]).
+    pub values: Vec<(u32, Value)>,
+}
+
+impl ChainCheckpoint {
+    /// Snapshot a running chain after it completed `draw` draws.
+    pub fn capture(
+        seed: u64,
+        chain: usize,
+        draw: usize,
+        trace: &Trace,
+        rng: &Pcg64,
+    ) -> ChainCheckpoint {
+        ChainCheckpoint {
+            seed,
+            chain,
+            draw,
+            rng: rng.state_parts(),
+            values: trace.stoch_state(),
+        }
+    }
+
+    /// Restore onto a freshly rebuilt trace (same program, same
+    /// `chain_rng(seed, chain)` stream): overwrite the stochastic
+    /// values and return the checkpointed RNG, positioned exactly
+    /// where the uninterrupted chain's was at the end of draw
+    /// [`draw`](Self::draw).
+    pub fn restore(&self, trace: &mut Trace) -> Result<Pcg64, String> {
+        trace.restore_stoch_state(&self.values)?;
+        Ok(Pcg64::from_parts(self.rng.0, self.rng.1))
+    }
+
+    /// Serialize to the checkpoint text format.  Errs on value kinds
+    /// that have no serialization (closures, SP handles — those are
+    /// structural, not chain state, and never appear in
+    /// `stoch_state` of a supported model).
+    pub fn encode(&self) -> Result<String, String> {
+        let mut s = String::new();
+        let _ = writeln!(s, "subppl-checkpoint v1");
+        let _ = writeln!(s, "seed {}", self.seed);
+        let _ = writeln!(s, "chain {}", self.chain);
+        let _ = writeln!(s, "draw {}", self.draw);
+        let _ = writeln!(s, "rng {:032x} {:032x}", self.rng.0, self.rng.1);
+        let _ = writeln!(s, "values {}", self.values.len());
+        for (id, v) in &self.values {
+            match v {
+                Value::Bool(b) => {
+                    let _ = writeln!(s, "{id} B {}", *b as u8);
+                }
+                Value::Int(i) => {
+                    let _ = writeln!(s, "{id} I {i}");
+                }
+                Value::Real(x) => {
+                    let _ = writeln!(s, "{id} R {:016x}", x.to_bits());
+                }
+                Value::Vector(xs) => {
+                    let _ = write!(s, "{id} V {}", xs.len());
+                    for x in xs.iter() {
+                        let _ = write!(s, " {:016x}", x.to_bits());
+                    }
+                    let _ = writeln!(s);
+                }
+                other => {
+                    return Err(format!(
+                        "checkpoint: node {id} holds a {} value, which has no \
+                         serialization (unsupported model state)",
+                        other.type_name()
+                    ));
+                }
+            }
+        }
+        let _ = writeln!(s, "checksum {:016x}", fnv1a(s.as_bytes()));
+        Ok(s)
+    }
+
+    /// Parse and validate (header, field syntax, count, checksum).
+    pub fn decode(text: &str) -> Result<ChainCheckpoint, String> {
+        let bad = |what: &str| format!("checkpoint: malformed file ({what})");
+        // split off and verify the checksum line first
+        let body_end = text
+            .rfind("checksum ")
+            .ok_or_else(|| bad("missing checksum"))?;
+        let want = text[body_end..]
+            .trim_start_matches("checksum ")
+            .trim();
+        let want = u64::from_str_radix(want, 16).map_err(|_| bad("unparsable checksum"))?;
+        let got = fnv1a(text[..body_end].as_bytes());
+        if got != want {
+            return Err(format!(
+                "checkpoint: checksum mismatch (file says {want:016x}, contents hash to \
+                 {got:016x}) — truncated or corrupted file"
+            ));
+        }
+        let mut lines = text[..body_end].lines();
+        if lines.next() != Some("subppl-checkpoint v1") {
+            return Err(bad("unknown header"));
+        }
+        let mut field = |name: &str| -> Result<String, String> {
+            let line = lines.next().ok_or_else(|| bad("truncated header"))?;
+            line.strip_prefix(name)
+                .and_then(|r| r.strip_prefix(' '))
+                .map(str::to_string)
+                .ok_or_else(|| bad(&format!("expected `{name}` line")))
+        };
+        let seed: u64 = field("seed")?.parse().map_err(|_| bad("seed"))?;
+        let chain: usize = field("chain")?.parse().map_err(|_| bad("chain"))?;
+        let draw: usize = field("draw")?.parse().map_err(|_| bad("draw"))?;
+        let rng_line = field("rng")?;
+        let mut rp = rng_line.split_whitespace();
+        let state = u128::from_str_radix(rp.next().ok_or_else(|| bad("rng"))?, 16)
+            .map_err(|_| bad("rng state"))?;
+        let inc = u128::from_str_radix(rp.next().ok_or_else(|| bad("rng"))?, 16)
+            .map_err(|_| bad("rng inc"))?;
+        let count: usize = field("values")?.parse().map_err(|_| bad("values count"))?;
+        let mut values = Vec::with_capacity(count);
+        for _ in 0..count {
+            let line = lines.next().ok_or_else(|| bad("truncated values"))?;
+            let mut parts = line.split_whitespace();
+            let id: u32 = parts
+                .next()
+                .and_then(|t| t.parse().ok())
+                .ok_or_else(|| bad("value node id"))?;
+            let kind = parts.next().ok_or_else(|| bad("value kind"))?;
+            let v = match kind {
+                "B" => match parts.next() {
+                    Some("0") => Value::Bool(false),
+                    Some("1") => Value::Bool(true),
+                    _ => return Err(bad("bool payload")),
+                },
+                "I" => Value::Int(
+                    parts
+                        .next()
+                        .and_then(|t| t.parse().ok())
+                        .ok_or_else(|| bad("int payload"))?,
+                ),
+                "R" => Value::Real(f64::from_bits(
+                    parts
+                        .next()
+                        .and_then(|t| u64::from_str_radix(t, 16).ok())
+                        .ok_or_else(|| bad("real payload"))?,
+                )),
+                "V" => {
+                    let len: usize = parts
+                        .next()
+                        .and_then(|t| t.parse().ok())
+                        .ok_or_else(|| bad("vector length"))?;
+                    let mut xs = Vec::with_capacity(len);
+                    for _ in 0..len {
+                        xs.push(f64::from_bits(
+                            parts
+                                .next()
+                                .and_then(|t| u64::from_str_radix(t, 16).ok())
+                                .ok_or_else(|| bad("vector payload"))?,
+                        ));
+                    }
+                    Value::Vector(Rc::new(xs))
+                }
+                _ => return Err(bad("unknown value kind")),
+            };
+            values.push((id, v));
+        }
+        Ok(ChainCheckpoint {
+            seed,
+            chain,
+            draw,
+            rng: (state, inc),
+            values,
+        })
+    }
+
+    /// The canonical on-disk location of chain `chain`'s checkpoint.
+    pub fn path(dir: &Path, chain: usize) -> PathBuf {
+        dir.join(format!("chain{chain}.ckpt"))
+    }
+
+    /// Atomically persist under `dir`: write `chain<k>.ckpt.tmp`, then
+    /// rename over the final name.  A crash at any point leaves either
+    /// the previous checkpoint or the new one, never a torn file.
+    pub fn save(&self, dir: &Path) -> Result<(), String> {
+        let text = self.encode()?;
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("checkpoint: create_dir {}: {e}", dir.display()))?;
+        let fin = Self::path(dir, self.chain);
+        let tmp = fin.with_extension("ckpt.tmp");
+        std::fs::write(&tmp, &text)
+            .map_err(|e| format!("checkpoint: write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &fin)
+            .map_err(|e| format!("checkpoint: rename {}: {e}", fin.display()))?;
+        Ok(())
+    }
+
+    /// Load chain `chain`'s checkpoint from `dir`.  `Ok(None)` when no
+    /// checkpoint exists (a resume before the first cadence boundary
+    /// starts from scratch); `Err` on unreadable or corrupt files —
+    /// never silently start over on a file that *should* have parsed.
+    pub fn load(dir: &Path, chain: usize) -> Result<Option<ChainCheckpoint>, String> {
+        let p = Self::path(dir, chain);
+        let text = match std::fs::read_to_string(&p) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(format!("checkpoint: read {}: {e}", p.display())),
+        };
+        let ck = Self::decode(&text)?;
+        if ck.chain != chain {
+            return Err(format!(
+                "checkpoint: {} records chain {}, expected {chain}",
+                p.display(),
+                ck.chain
+            ));
+        }
+        Ok(Some(ck))
+    }
+}
+
+/// Per-chain checkpoint handle handed to a supervised chain closure
+/// (see `run_chains_supervised`): tells the chain when a checkpoint is
+/// due, persists snapshots, and carries the checkpoint to resume from
+/// (set by `--resume` or by a supervisor restart).
+pub struct CheckpointCtl {
+    every: usize,
+    dir: Option<PathBuf>,
+    seed: u64,
+    chain: usize,
+    resume: Option<ChainCheckpoint>,
+}
+
+impl CheckpointCtl {
+    /// A handle that never checkpoints and never resumes — the
+    /// unsupervised default, so one chain-closure shape serves both
+    /// drivers.
+    pub fn disabled() -> CheckpointCtl {
+        CheckpointCtl {
+            every: 0,
+            dir: None,
+            seed: 0,
+            chain: 0,
+            resume: None,
+        }
+    }
+
+    /// Build chain `chain`'s handle.  `every == 0` or `dir == None`
+    /// disables persistence; `resume` loads the chain's checkpoint
+    /// from `dir` (absent file = fresh start, corrupt file = `Err`).
+    pub fn new(
+        every: usize,
+        dir: Option<&Path>,
+        seed: u64,
+        chain: usize,
+        resume: bool,
+    ) -> Result<CheckpointCtl, String> {
+        let loaded = match (resume, dir) {
+            (true, Some(d)) => {
+                let ck = ChainCheckpoint::load(d, chain)?;
+                if let Some(ck) = &ck {
+                    if ck.seed != seed {
+                        return Err(format!(
+                            "checkpoint: chain {chain} was checkpointed under seed {}, \
+                             resumed under seed {seed}",
+                            ck.seed
+                        ));
+                    }
+                }
+                ck
+            }
+            _ => None,
+        };
+        Ok(CheckpointCtl {
+            every,
+            dir: dir.map(Path::to_path_buf),
+            seed,
+            chain,
+            resume: loaded,
+        })
+    }
+
+    /// The checkpoint to resume from, if any.  The chain closure calls
+    /// this once after rebuilding its trace, restores, and continues
+    /// from `draw + 1`.
+    pub fn take_resume(&mut self) -> Option<ChainCheckpoint> {
+        self.resume.take()
+    }
+
+    /// Whether a checkpoint is due after completing `draw` draws.
+    pub fn due(&self, draw: usize) -> bool {
+        self.every > 0 && self.dir.is_some() && draw > 0 && draw % self.every == 0
+    }
+
+    /// Capture and persist a snapshot after `draw` completed draws.
+    /// No-op when persistence is disabled.
+    pub fn save(&self, draw: usize, trace: &Trace, rng: &Pcg64) -> Result<(), String> {
+        let Some(dir) = &self.dir else {
+            return Ok(());
+        };
+        ChainCheckpoint::capture(self.seed, self.chain, draw, trace, rng).save(dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ChainCheckpoint {
+        ChainCheckpoint {
+            seed: 42,
+            chain: 3,
+            draw: 700,
+            rng: (0x0123_4567_89ab_cdef_0011_2233_4455_6677, 0xdead_beef | 1),
+            values: vec![
+                (2, Value::Real(-0.0)),
+                (5, Value::Vector(Rc::new(vec![1.5, f64::NAN, -2.25e-308]))),
+                (9, Value::Bool(true)),
+                (11, Value::Int(-42)),
+            ],
+        }
+    }
+
+    /// encode→decode is the identity, bit-for-bit — including -0.0,
+    /// NaN, and subnormals, which a decimal round trip would mangle.
+    #[test]
+    fn encode_decode_roundtrips_bitwise() {
+        let ck = sample();
+        let text = ck.encode().unwrap();
+        let back = ChainCheckpoint::decode(&text).unwrap();
+        assert_eq!(back.seed, ck.seed);
+        assert_eq!(back.chain, ck.chain);
+        assert_eq!(back.draw, ck.draw);
+        assert_eq!(back.rng, ck.rng);
+        assert_eq!(back.values.len(), ck.values.len());
+        for ((ia, va), (ib, vb)) in ck.values.iter().zip(&back.values) {
+            assert_eq!(ia, ib);
+            match (va, vb) {
+                (Value::Real(a), Value::Real(b)) => assert_eq!(a.to_bits(), b.to_bits()),
+                (Value::Vector(a), Value::Vector(b)) => {
+                    assert_eq!(a.len(), b.len());
+                    for (x, y) in a.iter().zip(b.iter()) {
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    }
+                }
+                (Value::Bool(a), Value::Bool(b)) => assert_eq!(a, b),
+                (Value::Int(a), Value::Int(b)) => assert_eq!(a, b),
+                (a, b) => panic!("kind mismatch: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    /// Any single-byte corruption must be rejected by the checksum (or
+    /// fail to parse outright) — never silently load.
+    #[test]
+    fn corruption_is_rejected() {
+        let text = sample().encode().unwrap();
+        // flip one hex digit inside a value payload
+        let pos = text.find("R ").unwrap() + 3;
+        let mut bytes = text.clone().into_bytes();
+        bytes[pos] = if bytes[pos] == b'0' { b'1' } else { b'0' };
+        let corrupted = String::from_utf8(bytes).unwrap();
+        assert!(ChainCheckpoint::decode(&corrupted).is_err());
+        // truncation drops the checksum line entirely
+        let truncated = &text[..text.len() / 2];
+        assert!(ChainCheckpoint::decode(truncated).is_err());
+    }
+
+    /// save → load round-trips through the filesystem, and the rename
+    /// leaves no temp file behind.
+    #[test]
+    fn save_load_roundtrips_atomically() {
+        let dir = std::env::temp_dir().join(format!("subppl-ckpt-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ck = sample();
+        ck.save(&dir).unwrap();
+        assert!(
+            !dir.join("chain3.ckpt.tmp").exists(),
+            "temp file must be renamed away"
+        );
+        let back = ChainCheckpoint::load(&dir, 3).unwrap().expect("saved file loads");
+        assert_eq!(back.draw, ck.draw);
+        assert_eq!(back.rng, ck.rng);
+        // a missing chain is Ok(None), not an error
+        assert!(ChainCheckpoint::load(&dir, 4).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The ctl cadence: due at exact multiples of `every` only, and
+    /// never when persistence is off.
+    #[test]
+    fn ctl_cadence_and_disable() {
+        let dir = std::env::temp_dir();
+        let ctl = CheckpointCtl::new(50, Some(&dir), 1, 0, false).unwrap();
+        assert!(!ctl.due(0));
+        assert!(!ctl.due(49));
+        assert!(ctl.due(50));
+        assert!(ctl.due(100));
+        let mut off = CheckpointCtl::disabled();
+        assert!(!off.due(50));
+        assert!(off.take_resume().is_none());
+    }
+
+    /// `take_resume` on a mutable disabled handle (the unsupervised
+    /// path) — and a seed mismatch on resume is an explicit error.
+    #[test]
+    fn resume_rejects_seed_mismatch() {
+        let dir = std::env::temp_dir().join(format!("subppl-ckpt-seed-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ck = sample();
+        ck.save(&dir).unwrap();
+        assert!(CheckpointCtl::new(10, Some(&dir), 42, 3, true).unwrap().resume.is_some());
+        assert!(CheckpointCtl::new(10, Some(&dir), 43, 3, true).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

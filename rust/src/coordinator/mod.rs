@@ -4,6 +4,7 @@
 //! every figure and table in the paper's evaluation.
 
 pub mod chain;
+pub mod checkpoint;
 pub mod experiments;
 pub mod fused;
 pub mod monitor;
@@ -11,10 +12,11 @@ pub mod multichain;
 pub mod report;
 
 pub use chain::{build_bayes_lr, build_joint_dpm, build_sv, timed};
+pub use checkpoint::{ChainCheckpoint, CheckpointCtl};
 pub use fused::FusedEval;
 pub use monitor::{monitor_csv, ChainEvent, ConvergenceMonitor, DiagSnapshot, ParamDiag};
 pub use multichain::{
     chain_rng, run_chains, run_chains_gated, run_chains_global, run_chains_monitored,
-    BufferedSink, ChainSink,
+    run_chains_supervised, BufferedSink, ChainSink, SupervisorConfig,
 };
 pub use report::{histogram, results_dir, Csv, Table};

@@ -99,6 +99,15 @@ impl DiagSnapshot {
                 "  eval: +planned={} +batched={} +gathered={} +fallback={} +sharded={} +stolen={}",
                 e.planned, e.batched, e.gathered, e.fallback, e.sharded, e.stolen
             );
+            // recovery counters only when a recovery path actually
+            // fired — the healthy-run line stays unchanged
+            if e.any_recovery() {
+                let _ = write!(
+                    out,
+                    " +panics={} +requeued={} +quarantined={} +restarts={}",
+                    e.fallback_panics, e.requeued_shards, e.store_quarantined, e.chains_restarted
+                );
+            }
         }
         out
     }
@@ -151,6 +160,10 @@ pub fn monitor_csv(groups: &[(&str, &[DiagSnapshot])]) -> Csv {
         "fallback",
         "sharded",
         "stolen",
+        "fallback_panics",
+        "requeued_shards",
+        "store_quarantined",
+        "chains_restarted",
     ]);
     for (label, snaps) in groups {
         for s in *snaps {
@@ -176,6 +189,10 @@ pub fn monitor_csv(groups: &[(&str, &[DiagSnapshot])]) -> Csv {
                     ev(s.eval.fallback),
                     ev(s.eval.sharded),
                     ev(s.eval.stolen),
+                    ev(s.eval.fallback_panics),
+                    ev(s.eval.requeued_shards),
+                    ev(s.eval.store_quarantined),
+                    ev(s.eval.chains_restarted),
                 ]);
             }
         }
@@ -493,6 +510,37 @@ mod tests {
         assert_eq!(snaps[1].eval.planned, 130);
         let line = snaps[1].render();
         assert!(line.contains("eval: +planned=130"), "{line}");
+    }
+
+    /// The recovery counters appear in the rendered line only when a
+    /// recovery path actually fired — healthy runs keep the original
+    /// six-counter tail.
+    #[test]
+    fn render_shows_recovery_tail_only_when_recovery_fired() {
+        let snap = |eval: EvalStats| DiagSnapshot {
+            draws_per_chain: 8,
+            chains: 2,
+            params: Vec::new(),
+            eval,
+        };
+        let healthy = snap(EvalStats {
+            planned: 10,
+            ..EvalStats::default()
+        });
+        let line = healthy.render();
+        assert!(line.contains("eval: +planned=10"), "{line}");
+        assert!(!line.contains("+panics="), "{line}");
+        let hurt = snap(EvalStats {
+            planned: 10,
+            fallback_panics: 1,
+            chains_restarted: 2,
+            ..EvalStats::default()
+        });
+        let line = hurt.render();
+        assert!(
+            line.contains("+panics=1 +requeued=0 +quarantined=0 +restarts=2"),
+            "{line}"
+        );
     }
 
     /// The gate predicate: every rank-R̂ finite and strictly below the

@@ -26,10 +26,12 @@
 //! point of view, so monitoring cannot perturb chain results — pinned by
 //! `tests/monitor.rs`.
 
+use crate::coordinator::checkpoint::CheckpointCtl;
 use crate::coordinator::monitor::ChainEvent;
 use crate::infer::planned::EvalStats;
 use crate::math::Pcg64;
 use crate::runtime::pool::WorkerPool;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
@@ -112,6 +114,11 @@ pub struct ChainSink {
     chain: usize,
     tx: Sender<MonitorMsg>,
     stop: Arc<AtomicBool>,
+    /// Supervisor restarts of this chain so far: folded into the
+    /// `chains_restarted` field of every stats snapshot this sink
+    /// forwards, so the recovery shows up in `[monitor]` lines.
+    /// Always 0 under the unsupervised drivers.
+    restarts: usize,
 }
 
 impl ChainSink {
@@ -145,6 +152,10 @@ impl ChainSink {
         if rows.is_empty() {
             return;
         }
+        let stats = stats.map(|mut s| {
+            s.chains_restarted += self.restarts;
+            s
+        });
         let _ = self.tx.send(MonitorMsg::Event(ChainEvent {
             chain: self.chain,
             draws: rows,
@@ -282,6 +293,7 @@ where
                 chain: c,
                 tx: etx.clone(),
                 stop,
+                restarts: 0,
             };
             let out = f(c, chain_rng(seed, c), sink);
             // result first, then the Done marker: by the time the driver
@@ -321,6 +333,180 @@ where
         }
     }
     Ok(slots.into_iter().map(|s| s.expect("chain reported")).collect())
+}
+
+/// Knobs for [`run_chains_supervised`].
+#[derive(Clone, Debug)]
+pub struct SupervisorConfig {
+    /// Checkpoint cadence in draws (`0` = never checkpoint).
+    pub every: usize,
+    /// Checkpoint directory (`None` = no persistence; crashes then
+    /// restart the chain from scratch).
+    pub dir: Option<std::path::PathBuf>,
+    /// Start every chain from its on-disk checkpoint (`--resume`).
+    pub resume: bool,
+    /// Restarts the supervisor grants each chain before declaring it
+    /// permanently failed.
+    pub max_restarts: usize,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            every: 0,
+            dir: None,
+            resume: false,
+            max_restarts: 2,
+        }
+    }
+}
+
+/// [`run_chains_gated`] under a per-chain supervisor: each chain
+/// closure additionally receives a
+/// [`CheckpointCtl`](crate::coordinator::checkpoint::CheckpointCtl)
+/// through which it checkpoints every `sup.every` draws and learns
+/// where to resume from.  A chain that *panics* is restarted from its
+/// last on-disk checkpoint (up to `sup.max_restarts` times, then the
+/// whole run errors); because a checkpoint pins the exact trace state
+/// and RNG position, the restarted chain reproduces the uninterrupted
+/// run's remaining draws bit-for-bit — pinned by `tests/checkpoint.rs`.
+///
+/// Restart bookkeeping: the chain's [`ChainSink`] folds its restart
+/// count into the `chains_restarted` field of every stats snapshot it
+/// forwards, and the supervisor emits one draw-less marker event per
+/// restart, so `[monitor]` lines surface the recovery even when the
+/// chain streams no further stats.  Event delivery across a restart is
+/// at-least-once — draws between the last checkpoint and the crash are
+/// re-streamed after the restart, so monitor *draw counts* can inflate
+/// slightly; chain *results* stay exactly-once and bitwise
+/// deterministic.
+pub fn run_chains_supervised<T, F, E>(
+    pool: &Arc<WorkerPool>,
+    chains: usize,
+    seed: u64,
+    sup: SupervisorConfig,
+    f: F,
+    mut on_event: E,
+) -> Result<Vec<T>, String>
+where
+    T: Send + 'static,
+    F: Fn(usize, Pcg64, ChainSink, &mut CheckpointCtl) -> T + Send + Sync + 'static,
+    E: FnMut(ChainEvent) -> bool,
+{
+    if chains == 0 {
+        return Ok(Vec::new());
+    }
+    let f = Arc::new(f);
+    let stop = Arc::new(AtomicBool::new(false));
+    let (rtx, rrx) = channel::<(usize, Option<T>)>();
+    let (etx, erx) = channel::<MonitorMsg>();
+    for c in 0..chains {
+        let f = f.clone();
+        let rtx = rtx.clone();
+        let etx = etx.clone();
+        let stop = stop.clone();
+        let sup = sup.clone();
+        pool.submit(Box::new(move || {
+            let mut restarts = 0usize;
+            let out = loop {
+                // resume from disk on an explicit --resume, and always
+                // after a crash (the dead attempt's checkpoints are the
+                // whole point)
+                let want_resume = sup.resume || restarts > 0;
+                let mut ctl = match CheckpointCtl::new(
+                    sup.every,
+                    sup.dir.as_deref(),
+                    seed,
+                    c,
+                    want_resume,
+                ) {
+                    Ok(ctl) => ctl,
+                    Err(e) => {
+                        eprintln!("[supervisor] chain {c}: {e}");
+                        break None;
+                    }
+                };
+                let sink = ChainSink {
+                    chain: c,
+                    tx: etx.clone(),
+                    stop: stop.clone(),
+                    restarts,
+                };
+                // the chain owns everything it touches (trace, caches,
+                // evaluator are rebuilt per attempt), so resuming after
+                // an unwind observes no broken invariants
+                match catch_unwind(AssertUnwindSafe(|| f(c, chain_rng(seed, c), sink, &mut ctl))) {
+                    Ok(out) => break Some(out),
+                    Err(_) => {
+                        restarts += 1;
+                        if restarts > sup.max_restarts {
+                            eprintln!(
+                                "[supervisor] chain {c}: giving up after {} restart(s)",
+                                sup.max_restarts
+                            );
+                            break None;
+                        }
+                        eprintln!(
+                            "[supervisor] chain {c} died; restarting from its last \
+                             checkpoint (attempt {restarts}/{})",
+                            sup.max_restarts
+                        );
+                        // draw-less marker so the monitor sees the
+                        // restart even if no stats-bearing rows follow
+                        let _ = etx.send(MonitorMsg::Event(ChainEvent {
+                            chain: c,
+                            draws: Vec::new(),
+                            stats: Some(EvalStats {
+                                chains_restarted: restarts,
+                                ..EvalStats::default()
+                            }),
+                        }));
+                    }
+                }
+            };
+            let _ = rtx.send((c, out));
+            let _ = etx.send(MonitorMsg::Done);
+        }));
+    }
+    drop(rtx);
+    drop(etx);
+    let mut done = 0usize;
+    while done < chains {
+        match erx.recv() {
+            Ok(MonitorMsg::Event(ev)) => {
+                if !on_event(ev) {
+                    stop.store(true, Ordering::Relaxed);
+                }
+            }
+            Ok(MonitorMsg::Done) => done += 1,
+            Err(_) => return Err("multichain: a supervisor task died".into()),
+        }
+    }
+    while let Ok(MonitorMsg::Event(ev)) = erx.try_recv() {
+        if !on_event(ev) {
+            stop.store(true, Ordering::Relaxed);
+        }
+    }
+    let mut slots: Vec<Option<Option<T>>> = (0..chains).map(|_| None).collect();
+    for _ in 0..chains {
+        match rrx.recv() {
+            Ok((c, out)) => slots[c] = Some(out),
+            Err(_) => return Err("multichain: a supervisor task died".into()),
+        }
+    }
+    let mut out = Vec::with_capacity(chains);
+    for (c, slot) in slots.into_iter().enumerate() {
+        match slot.expect("supervisor reported") {
+            Some(t) => out.push(t),
+            None => {
+                return Err(format!(
+                    "multichain: chain {c} failed permanently (exhausted {} restarts)",
+                    sup.max_restarts
+                ))
+            }
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

@@ -83,6 +83,22 @@ pub struct EvalStats {
     /// traffic (1 on first use per structure; +1 per structural change
     /// that the store had to follow).
     pub store_rebuilds: usize,
+    /// Shards lost to a worker panic and re-run inline by the pool's
+    /// watchdog (recovery counter: results are unchanged, but the
+    /// recovery path fired this many times).
+    pub fallback_panics: usize,
+    /// Shards that missed the result deadline and were re-run inline
+    /// by the watchdog (recovery counter).
+    pub requeued_shards: usize,
+    /// Column-store groups quarantined after a refresh error, failed
+    /// panel self-check, or NaN-score oracle mismatch (recovery
+    /// counter: the group is scored through fresh packing from then
+    /// on).
+    pub store_quarantined: usize,
+    /// Chains restarted from a checkpoint by the supervisor (recovery
+    /// counter).  Always 0 at the evaluator level — the supervised
+    /// multi-chain driver injects it when folding chain events.
+    pub chains_restarted: usize,
 }
 
 impl EvalStats {
@@ -96,6 +112,10 @@ impl EvalStats {
             sharded: self.sharded + o.sharded,
             stolen: self.stolen + o.stolen,
             store_rebuilds: self.store_rebuilds + o.store_rebuilds,
+            fallback_panics: self.fallback_panics + o.fallback_panics,
+            requeued_shards: self.requeued_shards + o.requeued_shards,
+            store_quarantined: self.store_quarantined + o.store_quarantined,
+            chains_restarted: self.chains_restarted + o.chains_restarted,
         }
     }
 
@@ -112,8 +132,40 @@ impl EvalStats {
             sharded: self.sharded.saturating_sub(prev.sharded),
             stolen: self.stolen.saturating_sub(prev.stolen),
             store_rebuilds: self.store_rebuilds.saturating_sub(prev.store_rebuilds),
+            fallback_panics: self.fallback_panics.saturating_sub(prev.fallback_panics),
+            requeued_shards: self.requeued_shards.saturating_sub(prev.requeued_shards),
+            store_quarantined: self.store_quarantined.saturating_sub(prev.store_quarantined),
+            chains_restarted: self.chains_restarted.saturating_sub(prev.chains_restarted),
         }
     }
+
+    /// Whether any recovery path fired in this (interval) snapshot —
+    /// the monitor prints the recovery counters only when there is
+    /// something to report.
+    pub fn any_recovery(&self) -> bool {
+        self.fallback_panics > 0
+            || self.requeued_shards > 0
+            || self.store_quarantined > 0
+            || self.chains_restarted > 0
+    }
+}
+
+/// Why the store tier refused to score a group — drives the caller's
+/// quarantine-vs-plain-fallback decision.  Every variant falls back to
+/// fresh packing (bitwise identical by construction); only
+/// `Integrity` additionally condemns the group's store.
+enum StoreErr {
+    /// The group was quarantined earlier: route to fresh pack, no
+    /// counter bump (the quarantine was already counted once).
+    Quarantined,
+    /// Candidate-side refusal (e.g. a proposal changed a binding's
+    /// type): benign, the store may serve this group again next batch.
+    Candidate(#[allow(dead_code)] String),
+    /// Store-side integrity failure (row refresh error, panel
+    /// self-check mismatch, NaN-score oracle disagreement): the panel
+    /// data cannot be trusted — quarantine the group until the next
+    /// structural rebuild replaces it.
+    Integrity(String),
 }
 
 /// Arena-backed batch scorer over cached section plans.
@@ -157,6 +209,12 @@ pub struct PlannedEval {
     pub store_refreshed: usize,
     /// Column-store sets built while this evaluator was driving.
     pub store_rebuilds: usize,
+    /// Store groups this evaluator condemned after an integrity
+    /// failure (row refresh error, panel self-check mismatch, or a
+    /// NaN score the fresh-pack oracle disagrees with).  A
+    /// quarantined group is scored through fresh packing until the
+    /// next structural rebuild replaces its store.
+    pub store_quarantined: usize,
     pub fallback_sections: usize,
     /// Per-call scratch: for each group, the sampled (member, output
     /// position) pairs; reused so steady state allocates nothing.
@@ -199,6 +257,7 @@ impl PlannedEval {
             gathered_sections: 0,
             store_refreshed: 0,
             store_rebuilds: 0,
+            store_quarantined: 0,
             fallback_sections: 0,
             sel: Vec::new(),
             batch_out: Vec::new(),
@@ -303,6 +362,12 @@ impl PlannedEval {
             sharded: self.sharded_sections(),
             stolen: self.stolen_sections(),
             store_rebuilds: self.store_rebuilds,
+            fallback_panics: self.shard.as_ref().map_or(0, |s| s.fallback_panics),
+            requeued_shards: self.shard.as_ref().map_or(0, |s| s.requeued_shards),
+            store_quarantined: self.store_quarantined,
+            // evaluators never restart chains; the supervised driver
+            // injects this field when folding chain events
+            chains_restarted: 0,
         }
     }
 
@@ -310,7 +375,10 @@ impl PlannedEval {
     /// `self.batch_out`: ensure the sampled rows are fresh (lazy
     /// `value_version` refresh), resolve the candidate side, and run
     /// the lane-panel kernel — sequentially or sharded across the pool.
-    /// `Err` sends the caller to the fresh-pack fallback.
+    /// `Err` sends the caller to the fresh-pack fallback; an
+    /// [`StoreErr::Integrity`] error additionally condemns the group's
+    /// store (quarantine) because its panel data can no longer be
+    /// trusted.
     fn eval_group_store(
         &mut self,
         trace: &mut Trace,
@@ -318,19 +386,27 @@ impl PlannedEval {
         gi: usize,
         group: &BatchGroup,
         sel: &[(u32, u32)],
-    ) -> Result<(), String> {
-        let refreshed = ensure_group_members(trace, store, gi, group, sel)?;
+    ) -> Result<(), StoreErr> {
+        if store.borrow().groups[gi].quarantined {
+            return Err(StoreErr::Quarantined);
+        }
+        let refreshed =
+            ensure_group_members(trace, store, gi, group, sel).map_err(StoreErr::Integrity)?;
         self.store_refreshed += refreshed;
         let panels = store.borrow().groups[gi].panels_arc();
         let mut pb = self.panel_spare.take().unwrap_or_default();
         if let Err(e) = pb.build_into(&panels, group, sel, &self.arena.globals) {
             pb.release_panels();
             self.panel_spare = Some(pb);
-            return Err(e);
+            // candidate-side refusal (e.g. a proposal changed a
+            // binding's type) — the panel data itself is fine
+            return Err(StoreErr::Candidate(e));
         }
         match self.shard.as_mut() {
             Some(sh) if sh.should_dispatch(sel.len()) => {
-                let spare = sh.replay_panel(pb, &mut self.batch_out)?;
+                let spare = sh
+                    .replay_panel(pb, &mut self.batch_out)
+                    .map_err(StoreErr::Candidate)?;
                 // release the parked handle so the next row refresh can
                 // Arc::make_mut the store in place instead of copying
                 self.panel_spare = spare.map(|mut b| {
@@ -346,7 +422,52 @@ impl PlannedEval {
                 self.panel_spare = Some(pb);
             }
         }
+        if crate::runtime::faults::nan_score_now() {
+            if let Some(x) = self.batch_out.first_mut() {
+                *x = f64::NAN;
+            }
+        }
+        if self.batch_out.iter().any(|x| x.is_nan()) {
+            self.nan_cross_check(trace, group, sel)?;
+        }
         Ok(())
+    }
+
+    /// A NaN coming out of the store tier is either a genuine NaN score
+    /// (the scalar path would produce the same one) or silent panel
+    /// corruption.  Re-score the selection through the fresh-pack
+    /// oracle and compare bitwise: agreement passes the NaN through,
+    /// disagreement condemns the panels.
+    fn nan_cross_check(
+        &mut self,
+        trace: &mut Trace,
+        group: &BatchGroup,
+        sel: &[(u32, u32)],
+    ) -> Result<(), StoreErr> {
+        // the oracle reads the trace directly: freshen everything the
+        // sampled slot tables touch (idempotent per epoch, so this is
+        // cheap when the store refresh already did it)
+        for &(mi, _) in sel {
+            for &t in group.touch_of(mi as usize) {
+                trace.ensure_fresh(t);
+            }
+        }
+        let mut oracle = vec![0.0f64; sel.len()];
+        self.regs
+            .replay(trace, group, sel, &self.arena.globals, &mut oracle)
+            .map_err(StoreErr::Candidate)?;
+        let agree = self
+            .batch_out
+            .iter()
+            .zip(&oracle)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        if agree {
+            Ok(())
+        } else {
+            Err(StoreErr::Integrity(
+                "NaN score disagrees with the fresh-pack oracle".to_string(),
+            ))
+        }
     }
 
     /// Scalar or interpreter scoring of one root into `out[pos]`.
@@ -439,7 +560,28 @@ impl LocalEvaluator for PlannedEval {
                 // lane-panel kernel — bitwise identical to the packed
                 // kernel per section
                 let mut scored = match &store {
-                    Some(rc) => self.eval_group_store(trace, rc, gi, group, &sel).is_ok(),
+                    Some(rc) => match self.eval_group_store(trace, rc, gi, group, &sel) {
+                        Ok(()) => true,
+                        Err(StoreErr::Integrity(msg)) => {
+                            // condemn the store for this group: fresh
+                            // packing takes over (bitwise identical)
+                            // until a structural rebuild replaces the
+                            // panels.  Logged once — the quarantined
+                            // flag short-circuits every later batch.
+                            let mut cs = rc.borrow_mut();
+                            let g = &mut cs.groups[gi];
+                            if !g.quarantined {
+                                g.quarantined = true;
+                                self.store_quarantined += 1;
+                                eprintln!(
+                                    "[store] group {gi} quarantined: {msg} \
+                                     (fresh-pack fallback; results unchanged)"
+                                );
+                            }
+                            false
+                        }
+                        Err(_) => false,
+                    },
                     None => false,
                 };
                 if scored {
@@ -749,6 +891,57 @@ mod tests {
         assert_eq!(store.store_rebuilds, 1, "unchanged structure must not rebuild");
     }
 
+    /// A quarantined store group keeps scoring bitwise identically —
+    /// the evaluator routes it to fresh packing instead of its panels
+    /// — and a structural rebuild lifts the quarantine.
+    #[test]
+    fn quarantined_group_scores_bitwise_via_fresh_pack() {
+        let data = synth2d::generate(200, 41);
+        let mut rng = Pcg64::seeded(42);
+        let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+        let p = trace.cached_partition(w).unwrap();
+        let roots = p.locals.clone();
+        let cur = trace.fresh_value(w);
+        let new_w = Proposal::Drift(0.2).propose(&cur, &mut rng).unwrap();
+        let mut ev = PlannedEval::new().with_colstore(true);
+        let first = ev.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+        assert_eq!(ev.gathered_sections, roots.len(), "store tier must engage first");
+        // condemn every group, as an integrity failure would
+        {
+            let set = trace.cached_batch_plans(&p);
+            let (store, built) = trace.cached_colstore(&p, &set);
+            assert!(!built, "the first eval built the store");
+            for g in &mut store.borrow_mut().groups {
+                g.quarantined = true;
+            }
+        }
+        let again = ev.eval_sections(&mut trace, &p, &roots, &new_w).unwrap();
+        assert_bitwise(&again, &first);
+        assert_eq!(
+            ev.gathered_sections,
+            roots.len(),
+            "quarantined groups must not be served from panels"
+        );
+        assert_eq!(ev.batched_sections, 2 * roots.len(), "fresh pack took over");
+        // a structural rebuild replaces the condemned store wholesale
+        trace
+            .run_program("[observe (f (vector 0.3 -0.2 1.0)) true]", &mut rng)
+            .unwrap();
+        let p2 = trace.cached_partition(w).unwrap();
+        let roots2 = p2.locals.clone();
+        let mut interp = InterpreterEval;
+        let want = interp.eval_sections(&mut trace, &p2, &roots2, &new_w).unwrap();
+        let before = ev.gathered_sections;
+        let got = ev.eval_sections(&mut trace, &p2, &roots2, &new_w).unwrap();
+        assert_bitwise(&got, &want);
+        assert_eq!(
+            ev.gathered_sections,
+            before + roots2.len(),
+            "rebuild must lift the quarantine"
+        );
+        assert_eq!(ev.store_rebuilds, 2);
+    }
+
     /// Satellite audit: every `EvalStats` counter is monotonic across
     /// an evaluator's lifetime — including across structural rebuilds
     /// (new observation => partitions/plans/batch sets/store all
@@ -775,6 +968,10 @@ mod tests {
                 && b.sharded >= a.sharded
                 && b.stolen >= a.stolen
                 && b.store_rebuilds >= a.store_rebuilds
+                && b.fallback_panics >= a.fallback_panics
+                && b.requeued_shards >= a.requeued_shards
+                && b.store_quarantined >= a.store_quarantined
+                && b.chains_restarted >= a.chains_restarted
         };
         let mut prev = ev.stats();
         assert_eq!(prev, EvalStats::default());

@@ -4,6 +4,7 @@
 //! ```text
 //! subppl run <program.vnt> [--infer "<program>"] [--seed N] [--watch a,b]
 //!            [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]
+//!            [--checkpoint-every K --checkpoint-dir D] [--resume]
 //! subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused]
 //!            [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]
 //! subppl artifacts                 # list the AOT artifact registry
@@ -21,14 +22,25 @@
 //! monitored run early once every watched parameter's rank-normalized
 //! R-hat is finite and below R (chains wind down at their next sample
 //! boundary; the final snapshot is still emitted).
+//!
+//! `--checkpoint-every K --checkpoint-dir D` snapshots each chain's
+//! state (stochastic values + RNG position) to `D/chain<c>.ckpt` every
+//! K draws, atomically (write-temp-then-rename).  `--resume` restarts
+//! from those checkpoints; because a checkpoint pins the exact trace
+//! state and RNG position, the resumed run's remaining draws are
+//! bitwise identical to the uninterrupted run's.  With `--chains R > 1`
+//! the checkpointed run is also *supervised*: a chain that panics is
+//! restarted from its last checkpoint instead of failing the run.
 
 use std::io::Read;
 use std::sync::Arc;
+use subppl::coordinator::checkpoint::CheckpointCtl;
 use subppl::coordinator::experiments as exp;
 use subppl::coordinator::monitor::{monitor_csv, ConvergenceMonitor, DiagSnapshot};
-use subppl::coordinator::multichain::ChainSink;
+use subppl::coordinator::multichain::{ChainSink, SupervisorConfig};
 use subppl::coordinator::report::{results_dir, Table};
 use subppl::coordinator::{multichain, FusedEval};
+use subppl::infer::planned::EvalStats;
 use subppl::infer::{parse_infer, run_command, LocalEvaluator, PlannedEval};
 use subppl::math::Pcg64;
 use subppl::runtime::pool::{resolve_threads, WorkerPool};
@@ -64,7 +76,7 @@ fn run(args: &[String]) -> Result<(), String> {
         Some("artifacts") => cmd_artifacts(),
         _ => {
             eprintln!(
-                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]\n  subppl artifacts"
+                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R] [--checkpoint-every K --checkpoint-dir D] [--resume]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]\n  subppl artifacts"
             );
             Err("missing or unknown subcommand".into())
         }
@@ -79,6 +91,9 @@ struct ChainReport {
     final_lj: f64,
     /// First-iteration inference stats: (transitions, acceptance rate).
     per_iter: Option<(usize, f64)>,
+    /// The evaluator's cumulative tier/recovery counters at the end of
+    /// the run (all-zero when no inference ran).
+    eval: EvalStats,
 }
 
 /// One chain's worth of `subppl run`: build the trace, optionally run
@@ -93,6 +108,7 @@ fn run_one_chain(
     samples: usize,
     pool: Option<Arc<WorkerPool>>,
     sink: Option<&ChainSink>,
+    ctl: &mut CheckpointCtl,
     rng: &mut Pcg64,
 ) -> Result<ChainReport, String> {
     let mut trace = Trace::new();
@@ -101,6 +117,7 @@ fn run_one_chain(
     let initial_lj = trace.log_joint();
     let mut means = vec![0.0; names.len()];
     let mut per_iter = None;
+    let mut eval = EvalStats::default();
     if let Some(prog) = infer_prog {
         let cmd = parse_infer(prog)?;
         let mut ev: Box<dyn LocalEvaluator> = match pool {
@@ -111,14 +128,24 @@ fn run_one_chain(
         // 32 rows per channel send; BufferedSink flushes the tail on drop
         let mut buf = sink.map(|s| s.clone().buffered(32));
         let mut recorded = 0usize;
-        for s in 0..samples {
+        // resume: overwrite the freshly built trace's stochastic state
+        // and RNG position from the checkpoint, then continue at the
+        // next draw — bitwise identical to never having stopped.
+        // (posterior means are over post-resume draws only.)
+        let mut start = 0usize;
+        if let Some(ck) = ctl.take_resume() {
+            *rng = ck.restore(&mut trace)?;
+            start = ck.draw.min(samples);
+            eprintln!("[checkpoint] resumed at draw {start}/{samples}");
+        }
+        for s in start..samples {
             // a fired --monitor-gate asks chains to wind down at the
             // next sample boundary (best-effort early stop)
             if buf.as_ref().is_some_and(|b| b.cancelled()) {
                 break;
             }
             let stats = run_command(&mut trace, rng, &cmd, ev.as_mut())?;
-            if s == 0 {
+            if s == start {
                 per_iter = Some((stats.transitions, stats.acceptance_rate()));
             }
             let mut row = Vec::with_capacity(names.len());
@@ -137,10 +164,16 @@ fn run_one_chain(
                 // per-interval EvalStats diffs into its [monitor] lines
                 b.push_with_stats(row, ev.stats());
             }
+            // snapshot AFTER the draw is recorded, so `draw` always
+            // means "draws fully completed and streamed"
+            if ctl.due(s + 1) {
+                ctl.save(s + 1, &trace, rng)?;
+            }
         }
         for (i, s) in sums.iter().enumerate() {
             means[i] = s / recorded.max(1) as f64;
         }
+        eval = ev.stats();
     }
     Ok(ChainReport {
         live,
@@ -148,6 +181,7 @@ fn run_one_chain(
         means,
         final_lj: trace.log_joint(),
         per_iter,
+        eval,
     })
 }
 
@@ -197,6 +231,21 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     if monitor_gate.is_some() && monitor_every == 0 {
         return Err("--monitor-gate needs --monitor-every to produce snapshots to gate on".into());
     }
+    let ck_every: usize = opt(args, "--checkpoint-every")
+        .unwrap_or("0")
+        .parse()
+        .map_err(|_| "bad --checkpoint-every")?;
+    let ck_dir = opt(args, "--checkpoint-dir").map(std::path::PathBuf::from);
+    let resume = flag(args, "--resume");
+    if ck_every > 0 && ck_dir.is_none() {
+        return Err("--checkpoint-every needs --checkpoint-dir to write into".into());
+    }
+    if resume && ck_dir.is_none() {
+        return Err("--resume needs --checkpoint-dir to read from".into());
+    }
+    if (ck_every > 0 || resume) && infer_prog.is_none() {
+        return Err("checkpointing needs --infer (no transitions, nothing to checkpoint)".into());
+    }
 
     if chains > 1 {
         // concurrent replicas: one Trace per pool worker, per-chain PCG
@@ -204,18 +253,65 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         let pool = WorkerPool::global().clone();
         let src = src.clone();
         let names_c = names.clone();
-        let chain = move |_c: usize, mut rng: Pcg64, sink: Option<ChainSink>| {
-            run_one_chain(
-                &src,
-                infer_prog.as_deref(),
-                &names_c,
-                samples,
-                None,
-                sink.as_ref(),
-                &mut rng,
-            )
-        };
-        let results = if monitor_every > 0 {
+        let chain =
+            move |_c: usize, mut rng: Pcg64, sink: Option<ChainSink>, ctl: &mut CheckpointCtl| {
+                run_one_chain(
+                    &src,
+                    infer_prog.as_deref(),
+                    &names_c,
+                    samples,
+                    None,
+                    sink.as_ref(),
+                    ctl,
+                    &mut rng,
+                )
+            };
+        let results = if ck_every > 0 || resume {
+            // checkpointed multi-chain runs are supervised: a chain
+            // that panics restarts from its last checkpoint; monitor
+            // lines (when requested) surface `+restarts=` counters
+            let sup = SupervisorConfig {
+                every: ck_every,
+                dir: ck_dir.clone(),
+                resume,
+                max_restarts: 2,
+            };
+            let use_sink = monitor_every > 0;
+            let mut mon = use_sink.then(|| ConvergenceMonitor::new(chains, &names, monitor_every));
+            let mut gated_at: Option<usize> = None;
+            let results = multichain::run_chains_supervised(
+                &pool,
+                chains,
+                seed,
+                sup,
+                move |c, rng, sink, ctl| chain(c, rng, use_sink.then_some(sink), ctl),
+                |ev| {
+                    let mut keep_going = true;
+                    if let Some(m) = mon.as_mut() {
+                        m.absorb(ev);
+                        for snap in m.ready_snapshots() {
+                            println!("{}", snap.render());
+                            let fired = gated_at.is_none()
+                                && monitor_gate.is_some_and(|r| snap.gate_passed(r));
+                            if fired {
+                                gated_at = Some(snap.draws_per_chain);
+                                keep_going = false;
+                                println!(
+                                    "[monitor] gate: every watched rank R-hat below target \
+                                     at n={}/chain — stopping early",
+                                    snap.draws_per_chain
+                                );
+                            }
+                        }
+                    }
+                    keep_going
+                },
+            )?;
+            if let Some(fin) = mon.as_mut().and_then(|m| m.finish()) {
+                println!("{}", fin.render());
+            }
+            results
+        } else if monitor_every > 0 {
             // live convergence lines as every chain crosses each
             // monitor_every-sample boundary; contents deterministic in
             // the seed (fold-order normalized by chain index).  With a
@@ -227,7 +323,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 &pool,
                 chains,
                 seed,
-                move |c, rng, sink| chain(c, rng, Some(sink)),
+                move |c, rng, sink| chain(c, rng, Some(sink), &mut CheckpointCtl::disabled()),
                 |ev| {
                     mon.absorb(ev);
                     let mut keep_going = true;
@@ -254,7 +350,9 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             }
             results
         } else {
-            multichain::run_chains(&pool, chains, seed, move |c, rng| chain(c, rng, None))?
+            multichain::run_chains(&pool, chains, seed, move |c, rng| {
+                chain(c, rng, None, &mut CheckpointCtl::disabled())
+            })?
         };
         let mut t = Table::new(&["chain", "live nodes", "final log joint"]);
         let mut pooled = vec![0.0; names.len()];
@@ -281,6 +379,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
 
     let pool = pool_for(args);
     let mut rng = Pcg64::seeded(seed);
+    let mut ctl = CheckpointCtl::new(ck_every, ck_dir.as_deref(), seed, 0, resume)?;
     let rep = run_one_chain(
         &src,
         infer_prog.as_deref(),
@@ -288,12 +387,22 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         samples,
         pool,
         None,
+        &mut ctl,
         &mut rng,
     )?;
     println!("trace: {} live nodes", rep.live);
     println!("log joint: {:.4}", rep.initial_lj);
     if let Some((transitions, acceptance)) = rep.per_iter {
-        println!("per-iteration: {transitions} transitions, acceptance {acceptance:.3}");
+        print!("per-iteration: {transitions} transitions, acceptance {acceptance:.3}");
+        if rep.eval.any_recovery() {
+            // satellite: surface recovery counters on the stats line so
+            // an absorbed fault is visible even without --monitor-every
+            print!(
+                ", recovered: {} worker panic(s), {} requeued shard(s), {} quarantined store group(s)",
+                rep.eval.fallback_panics, rep.eval.requeued_shards, rep.eval.store_quarantined
+            );
+        }
+        println!();
     }
     if infer_prog.is_some() {
         for (i, n) in names.iter().enumerate() {

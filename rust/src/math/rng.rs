@@ -30,6 +30,19 @@ impl Pcg64 {
         Self::new(seed, 0)
     }
 
+    /// Snapshot the raw generator state for checkpointing.  Together
+    /// with [`Pcg64::from_parts`] this round-trips the stream position
+    /// exactly: a restored generator produces the identical output
+    /// sequence from the next call on.
+    pub fn state_parts(&self) -> (u128, u128) {
+        (self.state, self.inc)
+    }
+
+    /// Reconstruct a generator from a [`Pcg64::state_parts`] snapshot.
+    pub fn from_parts(state: u128, inc: u128) -> Self {
+        Pcg64 { state, inc }
+    }
+
     /// Next raw 64 bits (DXSM output function).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

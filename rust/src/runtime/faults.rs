@@ -1,0 +1,233 @@
+//! Deterministic fault injection: the chaos source every recovery path
+//! is tested against.
+//!
+//! Gated twice.  At compile time the `fault-inject` cargo feature must
+//! be on — without it every `*_now()` hook below is a literal `false`
+//! the optimizer deletes, so production builds carry zero overhead and
+//! zero risk.  At run time a [`FaultPlan`] must be armed, either
+//! programmatically ([`install`], what the differential tests use) or
+//! through the `SUBPPL_FAULTS` environment variable
+//! (`panic@3,stall@1,poison@2,nan@4` — fire the named fault at the
+//! k-th event of its kind).
+//!
+//! Each fault fires **exactly once**, at the k-th event of its kind,
+//! counted by a process-wide atomic — so a plan names one deterministic
+//! point in the event stream regardless of which thread reaches it.
+//! Fire-once is also what makes recovery testable: when the watchdog
+//! re-runs a faulted shard, the re-run cannot re-fault.
+//!
+//! The four faults and where they hook in:
+//!
+//! | fault    | event counted                      | hook site                          |
+//! |----------|------------------------------------|------------------------------------|
+//! | `panic`  | shard-job kernel execution         | `runtime/pool.rs::run_shard_job`   |
+//! | `stall`  | shard job picked up by a worker    | `runtime/pool.rs::worker_loop`     |
+//! | `poison` | column-store member row refresh    | `trace/colstore.rs::refresh_member`|
+//! | `nan`    | store-tier group evaluation        | `infer/planned.rs::eval_group_store`|
+
+#[cfg(feature = "fault-inject")]
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Which event of each kind should fault (1-based; `0` = never).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Panic the shard kernel on the k-th shard job.
+    pub panic_at: u64,
+    /// Wedge the worker on the k-th shard job it picks up (the job is
+    /// held unexecuted and unreported until pool shutdown).
+    pub stall_at: u64,
+    /// Corrupt the k-th column-store row refresh after its integrity
+    /// hash is recorded (so the panel self-check catches it).
+    pub poison_at: u64,
+    /// Overwrite one section score with NaN on the k-th store-tier
+    /// group evaluation (so the NaN cross-check fires).
+    pub nan_at: u64,
+}
+
+impl FaultPlan {
+    /// Parse the `SUBPPL_FAULTS` syntax: a comma-separated list of
+    /// `kind@k` entries, kinds `panic` / `stall` / `poison` / `nan`.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for entry in s.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, at) = entry
+                .split_once('@')
+                .ok_or_else(|| format!("fault entry {entry:?}: expected kind@k"))?;
+            let k: u64 = at
+                .parse()
+                .map_err(|_| format!("fault entry {entry:?}: bad event index {at:?}"))?;
+            match kind.trim() {
+                "panic" => plan.panic_at = k,
+                "stall" => plan.stall_at = k,
+                "poison" => plan.poison_at = k,
+                "nan" => plan.nan_at = k,
+                other => return Err(format!("unknown fault kind {other:?}")),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(feature = "fault-inject")]
+mod armed {
+    use super::*;
+
+    pub static PANIC_AT: AtomicU64 = AtomicU64::new(0);
+    pub static PANIC_SEEN: AtomicU64 = AtomicU64::new(0);
+    pub static STALL_AT: AtomicU64 = AtomicU64::new(0);
+    pub static STALL_SEEN: AtomicU64 = AtomicU64::new(0);
+    pub static POISON_AT: AtomicU64 = AtomicU64::new(0);
+    pub static POISON_SEEN: AtomicU64 = AtomicU64::new(0);
+    pub static NAN_AT: AtomicU64 = AtomicU64::new(0);
+    pub static NAN_SEEN: AtomicU64 = AtomicU64::new(0);
+
+    /// Set once [`install`] has been called, so the lazy `SUBPPL_FAULTS`
+    /// read can never overwrite a programmatic plan.
+    pub static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+    pub fn env_init() {
+        static ONCE: std::sync::Once = std::sync::Once::new();
+        ONCE.call_once(|| {
+            if INSTALLED.load(Ordering::SeqCst) {
+                return;
+            }
+            if let Ok(s) = std::env::var("SUBPPL_FAULTS") {
+                match FaultPlan::parse(&s) {
+                    Ok(plan) => set(plan),
+                    Err(e) => eprintln!("[faults] ignoring SUBPPL_FAULTS: {e}"),
+                }
+            }
+        });
+    }
+
+    pub fn set(plan: FaultPlan) {
+        PANIC_AT.store(plan.panic_at, Ordering::SeqCst);
+        PANIC_SEEN.store(0, Ordering::SeqCst);
+        STALL_AT.store(plan.stall_at, Ordering::SeqCst);
+        STALL_SEEN.store(0, Ordering::SeqCst);
+        POISON_AT.store(plan.poison_at, Ordering::SeqCst);
+        POISON_SEEN.store(0, Ordering::SeqCst);
+        NAN_AT.store(plan.nan_at, Ordering::SeqCst);
+        NAN_SEEN.store(0, Ordering::SeqCst);
+    }
+
+    /// Count one event; true exactly when this is the k-th.
+    pub fn fire(at: &AtomicU64, seen: &AtomicU64) -> bool {
+        // relaxed is enough: the counters are independent monotone
+        // event streams, not synchronization points
+        let k = at.load(Ordering::Relaxed);
+        if k == 0 {
+            return false;
+        }
+        seen.fetch_add(1, Ordering::Relaxed) + 1 == k
+    }
+}
+
+/// Arm a plan programmatically and reset the event counters.  Tests use
+/// this instead of `SUBPPL_FAULTS` because environment variables are
+/// process-global and racy across concurrently running tests.
+#[cfg(feature = "fault-inject")]
+pub fn install(plan: FaultPlan) {
+    armed::INSTALLED.store(true, Ordering::SeqCst);
+    armed::set(plan);
+}
+
+/// Disarm all faults (counters reset).
+#[cfg(feature = "fault-inject")]
+pub fn clear() {
+    install(FaultPlan::default());
+}
+
+macro_rules! hook {
+    ($(#[$doc:meta])* $name:ident, $at:ident, $seen:ident) => {
+        $(#[$doc])*
+        #[inline]
+        pub fn $name() -> bool {
+            #[cfg(feature = "fault-inject")]
+            {
+                armed::env_init();
+                armed::fire(&armed::$at, &armed::$seen)
+            }
+            #[cfg(not(feature = "fault-inject"))]
+            {
+                false
+            }
+        }
+    };
+}
+
+hook!(
+    /// Should the shard kernel panic on this shard job?
+    shard_panic_now,
+    PANIC_AT,
+    PANIC_SEEN
+);
+hook!(
+    /// Should the worker wedge instead of running this shard job?
+    shard_stall_now,
+    STALL_AT,
+    STALL_SEEN
+);
+hook!(
+    /// Should this column-store row refresh be corrupted?
+    poison_store_row_now,
+    POISON_AT,
+    POISON_SEEN
+);
+hook!(
+    /// Should this store-tier group evaluation emit a NaN score?
+    nan_score_now,
+    NAN_AT,
+    NAN_SEEN
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parses_every_kind() {
+        let plan = FaultPlan::parse("panic@3, stall@1,poison@2,nan@4").unwrap();
+        assert_eq!(
+            plan,
+            FaultPlan {
+                panic_at: 3,
+                stall_at: 1,
+                poison_at: 2,
+                nan_at: 4
+            }
+        );
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert!(FaultPlan::parse("explode@1").is_err());
+        assert!(FaultPlan::parse("panic").is_err());
+        assert!(FaultPlan::parse("panic@x").is_err());
+    }
+
+    #[cfg(not(feature = "fault-inject"))]
+    #[test]
+    fn hooks_are_inert_without_the_feature() {
+        for _ in 0..4 {
+            assert!(!shard_panic_now());
+            assert!(!shard_stall_now());
+            assert!(!poison_store_row_now());
+            assert!(!nan_score_now());
+        }
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn hooks_fire_exactly_once_at_k() {
+        // serialized against other fault tests by being the only
+        // in-crate test that arms a plan; the integration suite
+        // (tests/faults.rs) uses its own mutex
+        install(FaultPlan {
+            panic_at: 3,
+            ..FaultPlan::default()
+        });
+        let fired: Vec<bool> = (0..5).map(|_| shard_panic_now()).collect();
+        assert_eq!(fired, vec![false, false, true, false, false]);
+        assert!(!shard_stall_now(), "unarmed kinds must stay silent");
+        clear();
+        assert!(!shard_panic_now());
+    }
+}

@@ -11,6 +11,7 @@
 
 pub mod artifacts;
 pub mod client;
+pub mod faults;
 pub mod pool;
 
 pub use artifacts::{ArtifactInfo, ArtifactRegistry};

@@ -32,15 +32,38 @@
 //! are assembled in deterministic shard order no matter which worker
 //! finishes first.  `tests/parallel.rs` pins this with bitwise
 //! lockstep runs against the sequential evaluator.
+//!
+//! # Fault tolerance (the shard watchdog)
+//!
+//! A dispatched shard can fail two ways: the kernel panics (the
+//! `catch_unwind` in [`run_shard_job`] drops the result `Sender`
+//! unsent, so the channel eventually reads disconnected), or the
+//! worker wedges and the result simply never arrives.  Either way the
+//! dispatcher must not hang and must not silently degrade: the wait
+//! loop keeps a per-shard received-flag table, waits with a deadline
+//! (`SUBPPL_SHARD_TIMEOUT_MS`, default 1000), and on panic or timeout
+//! **re-runs every missing shard inline** — the same pure kernel over
+//! the same disjoint range, so recovery is bitwise invisible.  A late
+//! duplicate from a slow-but-alive worker is ignored by the flag
+//! table; a genuinely wedged worker is replaced
+//! ([`WorkerPool::add_worker`], capped at one replacement per original
+//! worker).  Every recovery is counted
+//! ([`ShardScorer::fallback_panics`] / [`ShardScorer::requeued_shards`],
+//! surfaced through `EvalStats`) and logged once per batch.  The
+//! scalar re-score fallback in `infer/planned.rs` remains only as the
+//! last resort for errors raised *before* dispatch (pack failures).
 
+use crate::runtime::faults;
 use crate::trace::batch::PackedBatch;
 use crate::trace::colstore::{LaneScratch, PanelBatch};
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Sender, TryRecvError};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 thread_local! {
     /// Set inside pool worker threads.  A [`ShardScorer`] running *on*
@@ -111,8 +134,19 @@ struct Shared {
 }
 
 impl Shared {
+    /// Lock the queue, surviving poisoning.  The critical sections in
+    /// this module only touch the `VecDeque` and the closed flag —
+    /// neither runs user code — so a poisoned mutex can only mean a
+    /// panic *between* queue operations on a thread that held the
+    /// guard across them (we never do).  Recovering the inner state is
+    /// strictly better than cascading the panic into every thread that
+    /// shares the pool.
+    fn lock_queue(&self) -> MutexGuard<'_, (VecDeque<Job>, bool)> {
+        self.queue.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     fn push(&self, job: Job) {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.lock_queue();
         q.0.push_back(job);
         drop(q);
         self.available.notify_one();
@@ -120,7 +154,7 @@ impl Shared {
 
     /// Blocks until a job is available; `None` on shutdown.
     fn pop(&self) -> Option<Job> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.lock_queue();
         loop {
             if let Some(job) = q.0.pop_front() {
                 return Some(job);
@@ -128,13 +162,20 @@ impl Shared {
             if q.1 {
                 return None;
             }
-            q = self.available.wait(q).unwrap();
+            q = self
+                .available
+                .wait(q)
+                .unwrap_or_else(|e| e.into_inner());
         }
     }
 
     fn close(&self) {
-        self.queue.lock().unwrap().1 = true;
+        self.lock_queue().1 = true;
         self.available.notify_all();
+    }
+
+    fn closed(&self) -> bool {
+        self.lock_queue().1
     }
 
     /// Pop the first *shard* job still waiting in the queue, skipping
@@ -144,10 +185,12 @@ impl Shared {
     /// self-contained unit it can safely run inline.  Returns `None`
     /// when no shard is queued.
     fn steal_shard(&self) -> Option<ShardJob> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.lock_queue();
         let pos = q.0.iter().position(|j| matches!(j, Job::Shard(_)))?;
         match q.0.remove(pos) {
             Some(Job::Shard(s)) => Some(s),
+            // invariant: position() just found a Job::Shard at `pos`
+            // under the same lock, and remove(pos) returns that element
             _ => unreachable!("position() found a shard at this index"),
         }
     }
@@ -157,8 +200,14 @@ impl Shared {
 /// process-wide [`WorkerPool::global`] instance lives for the process.
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    handles: Vec<JoinHandle<()>>,
+    /// Behind a mutex so the watchdog can append replacement workers
+    /// through the shared (`&self`) handle.
+    handles: Mutex<Vec<JoinHandle<()>>>,
     threads: usize,
+    /// Replacement workers spawned by the watchdog (capped at
+    /// `threads`, so a misconfigured timeout cannot grow the pool
+    /// without bound).
+    replacements: AtomicUsize,
 }
 
 impl WorkerPool {
@@ -177,13 +226,17 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("subppl-worker-{i}"))
                     .spawn(move || worker_loop(&shared))
+                    // invariant: thread spawn at pool construction can
+                    // only fail on resource exhaustion, before any
+                    // inference state exists — nothing to recover
                     .expect("worker spawn failed")
             })
             .collect();
         Arc::new(WorkerPool {
             shared,
-            handles,
+            handles: Mutex::new(handles),
             threads,
+            replacements: AtomicUsize::new(0),
         })
     }
 
@@ -200,6 +253,36 @@ impl WorkerPool {
         self.shared.push(Job::Shard(job));
     }
 
+    /// Spawn one replacement worker onto the shared queue — the
+    /// watchdog's response to a worker that stopped picking up work.
+    /// Capped at one replacement per original worker; returns whether a
+    /// worker was actually added.  A replacement for a *slow* (not
+    /// dead) worker is harmless: both drain the same queue.
+    fn add_worker(&self) -> bool {
+        let n = self.replacements.fetch_add(1, Ordering::SeqCst);
+        if n >= self.threads {
+            self.replacements.fetch_sub(1, Ordering::SeqCst);
+            return false;
+        }
+        let shared = self.shared.clone();
+        match std::thread::Builder::new()
+            .name(format!("subppl-worker-r{n}"))
+            .spawn(move || worker_loop(&shared))
+        {
+            Ok(h) => {
+                self.handles
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .push(h);
+                true
+            }
+            Err(_) => {
+                self.replacements.fetch_sub(1, Ordering::SeqCst);
+                false
+            }
+        }
+    }
+
     /// The process-wide pool, spawned once on first use with
     /// [`auto_threads`] workers.  All auto-parallel evaluators and the
     /// multi-chain driver share it, so the process never oversubscribes
@@ -213,7 +296,11 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         self.shared.close();
-        for h in self.handles.drain(..) {
+        let mut handles = self
+            .handles
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        for h in handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -225,8 +312,9 @@ impl Drop for WorkerPool {
 ///
 /// A panicking kernel must not kill the executing thread: the thread
 /// survives, the unsent `Sender` drops, and the owning dispatcher's
-/// `recv` errors into the scalar-path fallback instead of hanging on a
-/// pool that silently lost capacity.
+/// wait loop reads the disconnect as a lost shard and re-runs the
+/// missing range inline (see the watchdog notes on [`ShardScorer`]) —
+/// never a hang on a pool that silently lost capacity.
 fn run_shard_job(s: ShardJob, scratch: &mut ShardScratch) {
     let ShardJob {
         batch,
@@ -236,6 +324,12 @@ fn run_shard_job(s: ShardJob, scratch: &mut ShardScratch) {
         done,
     } = s;
     let result = catch_unwind(AssertUnwindSafe(|| {
+        // fault injection (no-op unless the `fault-inject` feature is
+        // on and a plan armed the `panic` fault): dies *inside* the
+        // catch_unwind, exactly like a real kernel panic would
+        if faults::shard_panic_now() {
+            panic!("fault-inject: shard kernel panic");
+        }
         let mut out = vec![0.0f64; hi - lo];
         batch.replay_range(lo, hi, scratch, &mut out);
         out
@@ -250,6 +344,18 @@ fn run_shard_job(s: ShardJob, scratch: &mut ShardScratch) {
     }
 }
 
+/// The `stall` fault: hold a shard job hostage — never run it, never
+/// report it — until the pool shuts down, simulating a worker that
+/// wedged mid-shard.  Parking (instead of exiting) keeps the job's
+/// result `Sender` alive so the dispatcher sees a *timeout*, not a
+/// disconnect, and keeps the thread joinable at pool drop.
+fn stall_with_job(shared: &Shared, job: ShardJob) {
+    while !shared.closed() {
+        std::thread::park_timeout(Duration::from_millis(10));
+    }
+    drop(job);
+}
+
 fn worker_loop(shared: &Shared) {
     IN_POOL_WORKER.with(|c| c.set(true));
     // per-worker scratch: the worker-private half of a RegFile / lane
@@ -257,7 +363,13 @@ fn worker_loop(shared: &Shared) {
     let mut scratch = ShardScratch::default();
     while let Some(job) = shared.pop() {
         match job {
-            Job::Shard(s) => run_shard_job(s, &mut scratch),
+            Job::Shard(s) => {
+                if faults::shard_stall_now() {
+                    stall_with_job(shared, s);
+                    return;
+                }
+                run_shard_job(s, &mut scratch)
+            }
             // a panicking task's owner observes the failure through its
             // own channel disconnecting
             Job::Task(f) => {
@@ -321,8 +433,31 @@ pub struct ShardScorer {
     /// queued shards — its own, or (when several dispatchers share the
     /// pool) another dispatcher's (perf reporting).
     pub stolen_sections: usize,
+    /// Shards lost to a worker panic (result sender dropped unsent)
+    /// and re-run inline by the watchdog.  Monotonic; surfaced through
+    /// `EvalStats::fallback_panics`.
+    pub fallback_panics: usize,
+    /// Shards that missed the result deadline
+    /// (`SUBPPL_SHARD_TIMEOUT_MS`) and were re-run inline by the
+    /// watchdog.  Monotonic; surfaced through
+    /// `EvalStats::requeued_shards`.
+    pub requeued_shards: usize,
     /// Inline scratch for the non-dispatched and stolen-shard cases.
     scratch: ShardScratch,
+}
+
+/// Result-wait deadline for one dispatched batch.  Generous by
+/// default — a shard is sub-millisecond work, so 1s only ever fires on
+/// a genuinely wedged worker; a spurious firing on an overloaded
+/// machine is harmless (the inline re-run is bitwise identical, it
+/// just wastes the duplicate work).
+fn shard_timeout() -> Duration {
+    let ms = std::env::var("SUBPPL_SHARD_TIMEOUT_MS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .filter(|&ms| ms >= 1)
+        .unwrap_or(1000);
+    Duration::from_millis(ms)
 }
 
 impl ShardScorer {
@@ -333,6 +468,8 @@ impl ShardScorer {
             steal: true,
             sharded_sections: 0,
             stolen_sections: 0,
+            fallback_panics: 0,
+            requeued_shards: 0,
             scratch: ShardScratch::default(),
         }
     }
@@ -370,7 +507,7 @@ impl ShardScorer {
             return Ok(Some(batch));
         }
         let arc = Arc::new(batch);
-        self.dispatch(ShardBatch::Packed(arc.clone()), w, out)?;
+        self.dispatch(ShardBatch::Packed(arc.clone()), w, out);
         self.sharded_sections += w;
         // workers drop their Arc before sending, so after the last
         // result this is normally the only reference left
@@ -394,7 +531,7 @@ impl ShardScorer {
             return Ok(Some(batch));
         }
         let arc = Arc::new(batch);
-        self.dispatch(ShardBatch::Panel(arc.clone()), w, out)?;
+        self.dispatch(ShardBatch::Panel(arc.clone()), w, out);
         self.sharded_sections += w;
         Ok(Arc::try_unwrap(arc).ok())
     }
@@ -402,7 +539,16 @@ impl ShardScorer {
     /// Shard `batch` over the pool, work-steal while waiting, and
     /// reduce the per-shard results into `out` in deterministic shard
     /// order — the common engine behind both batch kinds.
-    fn dispatch(&mut self, batch: ShardBatch, w: usize, out: &mut [f64]) -> Result<(), String> {
+    ///
+    /// The wait loop is the watchdog: a per-shard flag table tracks
+    /// which ranges have landed, blocking waits carry a deadline, and
+    /// on a lost shard (worker panic → channel disconnect) or a missed
+    /// deadline (wedged worker) every missing range is re-run inline
+    /// through the same pure kernel — so the recovered result is
+    /// bitwise identical to the clean run by construction, and a late
+    /// duplicate from a slow worker is simply ignored.  Infallible
+    /// once the jobs are queued.
+    fn dispatch(&mut self, batch: ShardBatch, w: usize, out: &mut [f64]) {
         let shards = self.pool.threads().min(w);
         let chunk = w.div_ceil(shards);
         let (tx, rx) = channel();
@@ -421,27 +567,58 @@ impl ShardScorer {
             lo = hi;
         }
         drop(tx);
-        drop(batch);
+        // keep one reference so the watchdog can re-run missing shards
+        // inline (dropped before return, preserving the reclaim-by-
+        // try_unwrap discipline in replay/replay_panel)
+        let local = batch;
+        let mut got = vec![false; sent];
         let mut received = 0usize;
+        let deadline = shard_timeout();
+        // land one shard result, ignoring duplicates (a watchdog-
+        // recovered shard's late original is bitwise identical anyway)
+        fn land(
+            out: &mut [f64],
+            chunk: usize,
+            got: &mut [bool],
+            received: &mut usize,
+            shard: usize,
+            ls: &[f64],
+        ) {
+            if got[shard] {
+                return;
+            }
+            let off = shard * chunk;
+            out[off..off + ls.len()].copy_from_slice(ls);
+            got[shard] = true;
+            *received += 1;
+        }
         while received < sent {
             // drain whatever is already done without blocking (stop as
             // soon as everything arrived — after the last result every
             // sender is gone and one more try_recv would read the
             // disconnect as a failure)
+            let mut lost = false;
             while received < sent {
                 match rx.try_recv() {
-                    Ok((shard, ls)) => {
-                        let off = shard * chunk;
-                        out[off..off + ls.len()].copy_from_slice(&ls);
-                        received += 1;
-                    }
+                    Ok((shard, ls)) => land(out, chunk, &mut got, &mut received, shard, &ls),
                     Err(TryRecvError::Empty) => break,
-                    // every sender dropped without sending everything: a
-                    // worker died mid-shard or the kernel panicked
+                    // every sender dropped with results still missing:
+                    // a shard kernel panicked (its catch_unwind dropped
+                    // the sender unsent)
                     Err(TryRecvError::Disconnected) => {
-                        return Err("worker pool: shard worker failed".into());
+                        lost = true;
+                        break;
                     }
                 }
+            }
+            if lost {
+                let missing = self.recover_missing(&local, chunk, w, &mut got, &mut received, out);
+                self.fallback_panics += missing;
+                eprintln!(
+                    "[pool] worker panic: re-ran {missing} lost shard(s) of {sent} inline \
+                     (batch of {w} sections; results unchanged)"
+                );
+                continue;
             }
             if received >= sent {
                 break;
@@ -459,21 +636,66 @@ impl ShardScorer {
                     continue;
                 }
             }
-            // nothing left to steal: the remaining shards are already on
-            // workers — block until one reports
-            match rx.recv() {
-                Ok((shard, ls)) => {
-                    let off = shard * chunk;
-                    out[off..off + ls.len()].copy_from_slice(&ls);
-                    received += 1;
+            // nothing left to steal: the remaining shards are on
+            // workers — block until one reports, with a deadline
+            match rx.recv_timeout(deadline) {
+                Ok((shard, ls)) => land(out, chunk, &mut got, &mut received, shard, &ls),
+                Err(RecvTimeoutError::Timeout) => {
+                    // watchdog: the deadline passed with shards still
+                    // outstanding — re-run them inline and replace the
+                    // (presumed wedged) worker.  If the worker was
+                    // merely slow, its late duplicate is ignored and
+                    // the replacement just drains the shared queue.
+                    let missing =
+                        self.recover_missing(&local, chunk, w, &mut got, &mut received, out);
+                    self.requeued_shards += missing;
+                    let replaced = self.pool.add_worker();
+                    eprintln!(
+                        "[pool] shard deadline ({deadline:?}) passed: re-ran {missing} overdue \
+                         shard(s) of {sent} inline{} (batch of {w} sections; results unchanged)",
+                        if replaced { ", replaced 1 worker" } else { "" }
+                    );
                 }
-                // a worker died mid-shard or panicked before sending:
-                // surface an error so the caller re-scores on the
-                // scalar path
-                Err(_) => return Err("worker pool: shard worker failed".into()),
+                Err(RecvTimeoutError::Disconnected) => {
+                    let missing =
+                        self.recover_missing(&local, chunk, w, &mut got, &mut received, out);
+                    self.fallback_panics += missing;
+                    eprintln!(
+                        "[pool] worker panic: re-ran {missing} lost shard(s) of {sent} inline \
+                         (batch of {w} sections; results unchanged)"
+                    );
+                }
             }
         }
-        Ok(())
+        drop(local);
+    }
+
+    /// Re-run every not-yet-landed shard inline through the same pure
+    /// kernel over the same disjoint range — the recovery primitive
+    /// behind both the panic and the deadline path.  Returns how many
+    /// shards were recovered.
+    fn recover_missing(
+        &mut self,
+        batch: &ShardBatch,
+        chunk: usize,
+        w: usize,
+        got: &mut [bool],
+        received: &mut usize,
+        out: &mut [f64],
+    ) -> usize {
+        let mut recovered = 0usize;
+        for shard in 0..got.len() {
+            if got[shard] {
+                continue;
+            }
+            let lo = shard * chunk;
+            let hi = (lo + chunk).min(w);
+            batch.replay_range(lo, hi, &mut self.scratch, &mut out[lo..hi]);
+            got[shard] = true;
+            *received += 1;
+            recovered += 1;
+        }
+        recovered
     }
 }
 

@@ -70,6 +70,26 @@
 //! differential oracle: `SUBPPL_COLSTORE=0` disables the store path
 //! everywhere, and `tests/differential.rs` pins store-vs-fresh-pack
 //! bitwise identity on all three paper workloads.
+//!
+//! # Integrity and quarantine
+//!
+//! The store is a cache of committed values, and a cache that serves a
+//! corrupt row produces *silently wrong* likelihoods — the worst
+//! failure mode in the system.  Defense in depth:
+//!
+//! * every row refresh records an FNV-1a hash of the row's `f64` bits
+//!   ([`GroupPanels::row_hash`]) and immediately verifies the written
+//!   row against it (`SUBPPL_STORE_VERIFY=0` disables the check,
+//!   `=full` re-verifies *every sampled row on every gather* instead of
+//!   only freshly refreshed ones);
+//! * any refresh/self-check `Err` — or a NaN score that the fresh-pack
+//!   oracle disagrees with (`infer/planned.rs`) — **quarantines** the
+//!   group's store ([`GroupStore::quarantined`]): the group is scored
+//!   through fresh packing from then on (bitwise identical by the
+//!   differential contract, just slower) until the next structural
+//!   rebuild replaces the whole set with a freshly built one.
+//!   Quarantine is counted (`EvalStats::store_quarantined`) and never
+//!   silent.
 
 use crate::ppl::prim::Prim;
 use crate::ppl::sp::SpFamily;
@@ -94,6 +114,43 @@ pub fn colstore_enabled() -> bool {
         Err(_) => true,
     }
 }
+
+/// The `SUBPPL_STORE_VERIFY` knob for the row self-check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum VerifyMode {
+    /// No integrity checking (the escape hatch).
+    Off,
+    /// Verify rows immediately after they are (re)written — catches
+    /// write-path corruption at O(refreshed rows), free in gather-only
+    /// steady state.  The default.
+    Refreshed,
+    /// Re-verify every sampled row on every gather — catches
+    /// corruption between refreshes too, at O(|mini-batch| row reads)
+    /// per gather (roughly doubling gather cost).
+    Full,
+}
+
+fn verify_mode() -> VerifyMode {
+    match std::env::var("SUBPPL_STORE_VERIFY") {
+        Ok(v) if v == "0" => VerifyMode::Off,
+        Ok(v) if v == "full" => VerifyMode::Full,
+        _ => VerifyMode::Refreshed,
+    }
+}
+
+/// FNV-1a over a row's `f64` bit patterns — cheap, dependency-free,
+/// and bit-exact (two rows hash equal iff every f64 is bitwise equal,
+/// up to collisions).
+fn fnv1a_f64(h: u64, x: f64) -> u64 {
+    let mut h = h;
+    for b in x.to_bits().to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 
 // ---------------------------------------------------------------------
 // The store: full-width committed-side panels per batch group
@@ -250,22 +307,82 @@ impl GroupPanels {
         }
         Ok(())
     }
+
+    /// FNV-1a hash of member `m`'s full row — every scalar binding,
+    /// vector binding element, absorber value, and committed absorber
+    /// arg, in a fixed traversal order.  Recorded at refresh time and
+    /// compared by the panel self-check: a mismatch means the panels no
+    /// longer hold what was read from the trace, and the group must be
+    /// quarantined rather than trusted.
+    pub fn row_hash(&self, m: usize) -> u64 {
+        let w = self.w;
+        let mut h = FNV_OFFSET;
+        for b in 0..self.n_sbind {
+            h = fnv1a_f64(h, self.sbind[b * w + m]);
+        }
+        for &(off, ar) in &self.vcols {
+            let ar = ar as usize;
+            let src = off as usize + m * ar;
+            for k in 0..ar {
+                h = fnv1a_f64(h, self.vbind[src + k]);
+            }
+        }
+        for bi in 0..self.ab_cols.len() {
+            h = fnv1a_f64(h, self.ab_vals[bi * w + m]);
+            let (coff, na) = self.ab_cols[bi];
+            for ai in 0..na as usize {
+                h = fnv1a_f64(h, self.ab_cargs[coff as usize + ai * w + m]);
+            }
+        }
+        h
+    }
+
+    /// Flip the low mantissa bit of the first value in member `m`'s row
+    /// — the `poison` fault's simulated memory corruption (a real row
+    /// has at least one column: groups with no bindings and no
+    /// absorbers cannot exist).  Only ever called from the
+    /// fault-injection hook in [`ensure_group_members`].
+    fn poison_row(&mut self, m: usize) {
+        let cell: Option<&mut f64> = if self.n_sbind > 0 {
+            self.sbind.get_mut(m)
+        } else if !self.vcols.is_empty() {
+            let (off, ar) = self.vcols[0];
+            self.vbind.get_mut(off as usize + m * ar as usize)
+        } else {
+            self.ab_vals.get_mut(m)
+        };
+        if let Some(x) = cell {
+            *x = f64::from_bits(x.to_bits() ^ 1);
+        }
+    }
 }
 
 /// One group's store: the shared panels plus per-member freshness
 /// stamps against `Trace::value_version` (0 = never filled;
-/// `value_version` starts at 1).
+/// `value_version` starts at 1) and per-member row-integrity hashes.
 #[derive(Debug)]
 pub struct GroupStore {
     stamp: Vec<u64>,
+    /// [`GroupPanels::row_hash`] recorded at each member's last
+    /// refresh (0 = never refreshed; paired with `stamp` = 0).
+    row_hash: Vec<u64>,
     panels: Arc<GroupPanels>,
+    /// Set when a refresh error, a failed row self-check, or a
+    /// NaN-score oracle mismatch showed the panels cannot be trusted.
+    /// A quarantined group is scored through fresh packing until the
+    /// next structural rebuild replaces the whole store set (a fresh
+    /// `GroupStore` starts un-quarantined).  Never cleared in place:
+    /// partial trust in a corrupt cache is not a state worth modeling.
+    pub quarantined: bool,
 }
 
 impl GroupStore {
     fn new(group: &BatchGroup) -> GroupStore {
         GroupStore {
             stamp: vec![0; group.len()],
+            row_hash: vec![0; group.len()],
             panels: Arc::new(GroupPanels::new(group)),
+            quarantined: false,
         }
     }
 
@@ -314,16 +431,20 @@ pub fn ensure_group_members(
     sel: &[(u32, u32)],
 ) -> Result<usize, String> {
     let vv = trace.value_version;
+    let verify = verify_mode();
     // phase 1: stale scan (shared borrow only)
     let stale: Vec<u32> = {
         let set = store.borrow();
         let gs = &set.groups[gi];
+        if gs.quarantined {
+            return Err("colstore: group is quarantined".into());
+        }
         sel.iter()
             .map(|&(m, _)| m)
             .filter(|&m| gs.stamp[m as usize] != vv)
             .collect()
     };
-    if stale.is_empty() {
+    if stale.is_empty() && verify != VerifyMode::Full {
         return Ok(0);
     }
     // phase 2: freshen everything the stale rows read (&mut Trace, no
@@ -333,7 +454,8 @@ pub fn ensure_group_members(
             trace.ensure_fresh(t);
         }
     }
-    // phase 3: re-read the stale rows (&Trace + mutable store)
+    // phase 3: re-read the stale rows (&Trace + mutable store), record
+    // each row's integrity hash
     let mut set = store.borrow_mut();
     let gs = &mut set.groups[gi];
     // workers drop their Arc before reporting results, so in steady
@@ -341,7 +463,40 @@ pub fn ensure_group_members(
     let panels = Arc::make_mut(&mut gs.panels);
     for &m in &stale {
         panels.refresh_member(trace, group, m as usize)?;
+        gs.row_hash[m as usize] = panels.row_hash(m as usize);
+        // fault injection (inert without the `fault-inject` feature):
+        // corrupt the row *after* its hash was recorded, exactly the
+        // failure the self-check below exists to catch
+        if crate::runtime::faults::poison_store_row_now() {
+            panels.poison_row(m as usize);
+        }
         gs.stamp[m as usize] = vv;
+    }
+    // phase 4: panel self-check.  Default mode re-verifies the rows
+    // just written (O(refreshed rows), free in steady state); `full`
+    // re-verifies every sampled row; `0` skips.  A mismatch means the
+    // panels no longer hold what the trace said — the caller
+    // quarantines the group and re-scores through fresh packing.
+    match verify {
+        VerifyMode::Off => {}
+        VerifyMode::Refreshed => {
+            for &m in &stale {
+                if panels.row_hash(m as usize) != gs.row_hash[m as usize] {
+                    return Err(format!(
+                        "colstore: panel self-check failed for member {m} (row hash mismatch)"
+                    ));
+                }
+            }
+        }
+        VerifyMode::Full => {
+            for &(m, _) in sel {
+                if panels.row_hash(m as usize) != gs.row_hash[m as usize] {
+                    return Err(format!(
+                        "colstore: panel self-check failed for member {m} (row hash mismatch)"
+                    ));
+                }
+            }
+        }
     }
     Ok(stale.len())
 }
@@ -549,6 +704,9 @@ impl PanelBatch {
     fn gvec_len(&self, a: GVec) -> usize {
         match a {
             GVec::Bind(b) => {
+                // invariant: only called from replay_range, which
+                // unwraps `panels` first — build_into sets it before
+                // any replay can be reached
                 self.panels.as_ref().expect("panel batch built").vcols[b as usize].1 as usize
             }
             GVec::Shared(s) => self.scols[s as usize].1 as usize,
@@ -579,6 +737,10 @@ impl PanelBatch {
         if hi == lo {
             return;
         }
+        // invariant: every caller (ShardScorer::replay_panel, the
+        // sequential store tier) replays the same PanelBatch it just
+        // build_into'd — an unbuilt batch here is a caller bug, not a
+        // runtime condition to recover from
         let panels = self.panels.as_ref().expect("replay of an unbuilt panel batch");
         scr.size_for(self, panels);
         let w = panels.w;
@@ -974,5 +1136,61 @@ mod tests {
         assert!(built_c, "stale store must rebuild");
         assert!(!Rc::ptr_eq(&a, &c));
         assert_eq!(c.borrow().built_at, t.structure_version);
+    }
+
+    /// The integrity hash must be bit-exact: flipping a single mantissa
+    /// bit anywhere in a member's row changes the recorded hash.
+    #[test]
+    fn row_hash_detects_a_single_bit_flip() {
+        let mut t = lr_trace(12, 11);
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let set = t.cached_batch_plans(&p);
+        let g = &set.groups[0];
+        let sel: Vec<(u32, u32)> = (0..g.len() as u32).map(|m| (m, m)).collect();
+        let (store, _) = t.cached_colstore(&p, &set);
+        ensure_group_members(&mut t, &store, 0, g, &sel).unwrap();
+        let mut set_ref = store.borrow_mut();
+        let gs = &mut set_ref.groups[0];
+        let panels = Arc::make_mut(&mut gs.panels);
+        for m in 0..g.len() {
+            let before = panels.row_hash(m);
+            assert_eq!(before, gs.row_hash[m], "refresh must record the row hash");
+            panels.poison_row(m);
+            assert_ne!(
+                panels.row_hash(m),
+                before,
+                "member {m}: corrupt row hashed equal"
+            );
+            // restore so later members hash over clean neighbors
+            panels.poison_row(m);
+            assert_eq!(panels.row_hash(m), before, "poison_row must be an involution");
+        }
+    }
+
+    /// A quarantined group must refuse to serve gathers — the caller's
+    /// signal to score through fresh packing instead.
+    #[test]
+    fn quarantined_group_refuses_to_serve() {
+        let mut t = lr_trace(9, 12);
+        let w = t.lookup_node("w").unwrap();
+        let p = t.cached_partition(w).unwrap();
+        let set = t.cached_batch_plans(&p);
+        let g = &set.groups[0];
+        let sel: Vec<(u32, u32)> = (0..g.len() as u32).map(|m| (m, m)).collect();
+        let (store, _) = t.cached_colstore(&p, &set);
+        ensure_group_members(&mut t, &store, 0, g, &sel).unwrap();
+        store.borrow_mut().groups[0].quarantined = true;
+        let err = ensure_group_members(&mut t, &store, 0, g, &sel).unwrap_err();
+        assert!(err.contains("quarantined"), "unexpected error: {err}");
+        // a structural rebuild replaces the set with a fresh, trusted one
+        let mut rng = Pcg64::seeded(13);
+        t.run_program("[observe (f (vector 0.3 0.1 1.0)) false]", &mut rng)
+            .unwrap();
+        let p2 = t.cached_partition(w).unwrap();
+        let set2 = t.cached_batch_plans(&p2);
+        let (store2, rebuilt) = t.cached_colstore(&p2, &set2);
+        assert!(rebuilt);
+        assert!(!store2.borrow().groups[0].quarantined);
     }
 }

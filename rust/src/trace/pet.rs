@@ -745,6 +745,80 @@ impl Trace {
         self.observations.push(target);
         Ok(target)
     }
+
+    // ---------------- checkpoint support ----------------
+
+    /// Snapshot every unobserved stochastic node's committed value, in
+    /// node-id order.  Given a fixed structure this is the chain's
+    /// entire mutable trace state: observed values are pinned by the
+    /// program and deterministic nodes are functions of these.  The
+    /// checkpoint writer (`coordinator/checkpoint.rs`) serializes this
+    /// together with the RNG stream position.
+    pub fn stoch_state(&self) -> Vec<(u32, Value)> {
+        (0..self.nodes.len() as u32)
+            .map(NodeId)
+            .filter(|id| {
+                let n = &self.nodes[id.idx()];
+                n.alive && n.is_stochastic() && !n.observed
+            })
+            .map(|id| (id.0, self.nodes[id.idx()].value.clone()))
+            .collect()
+    }
+
+    /// Restore a [`Trace::stoch_state`] snapshot onto a structurally
+    /// identical trace (the same program replayed from source produces
+    /// the same node ids regardless of what the RNG sampled).
+    /// Exchangeable values move between aux states with the same
+    /// unincorporate/incorporate discipline as `constrain`;
+    /// bitwise-equal values are skipped outright so aux sufficient
+    /// statistics are not perturbed by a remove/re-add round trip
+    /// (floating-point sums are not exactly reversible).  Ends with an
+    /// epoch bump: deterministic nodes refreshen lazily from the
+    /// restored values.
+    pub fn restore_stoch_state(&mut self, state: &[(u32, Value)]) -> Result<(), String> {
+        for &(raw, ref v) in state {
+            let idx = raw as usize;
+            if idx >= self.nodes.len() || !self.nodes[idx].alive {
+                return Err(format!(
+                    "checkpoint: node {raw} does not exist in the rebuilt trace \
+                     (structure changed since the checkpoint was taken?)"
+                ));
+            }
+            let n = &self.nodes[idx];
+            if !n.is_stochastic() || n.observed {
+                return Err(format!(
+                    "checkpoint: node {raw} is not an unobserved stochastic node"
+                ));
+            }
+            if value_bits_eq(&n.value, v) {
+                continue;
+            }
+            let id = NodeId(raw);
+            if let Some(sp) = self.stoch_sp(id) {
+                let old = self.nodes[idx].value.clone();
+                self.sp_mut(sp).unincorporate(&old);
+                self.sp_mut(sp).incorporate(v);
+            }
+            self.set_value(id, v.clone());
+        }
+        self.bump_epoch();
+        Ok(())
+    }
+}
+
+/// Bitwise value equality (f64 compared by bit pattern, so NaN == NaN
+/// and 0.0 != -0.0): the restore path must not churn SP aux state for
+/// values that are already in place.
+fn value_bits_eq(a: &Value, b: &Value) -> bool {
+    match (a, b) {
+        (Value::Bool(x), Value::Bool(y)) => x == y,
+        (Value::Int(x), Value::Int(y)) => x == y,
+        (Value::Real(x), Value::Real(y)) => x.to_bits() == y.to_bits(),
+        (Value::Vector(x), Value::Vector(y)) => {
+            x.len() == y.len() && x.iter().zip(y.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        _ => false,
+    }
 }
 
 /// Reset an SP instance's aux to empty (for log_joint's rebuild).

@@ -1,0 +1,342 @@
+//! Kill-at-draw-k / resume-from-checkpoint lockstep: a chain stopped
+//! mid-run and resumed from its last on-disk checkpoint must reproduce
+//! the uninterrupted run's remaining draws **bit-for-bit** — checked on
+//! logistic regression and stochastic volatility through the manual
+//! `CheckpointCtl` API, and end-to-end under the panic-restarting
+//! supervisor (`run_chains_supervised`).
+//!
+//! A checkpoint pins (committed stochastic values, PCG stream position,
+//! draw counter); resume rebuilds the trace from source with the same
+//! `chain_rng(seed, chain)` stream — identical node ids — and then
+//! overwrites values and RNG from the snapshot, so draw `k + 1` of the
+//! resumed run sees exactly the state draw `k + 1` of the uninterrupted
+//! run saw.
+
+use std::path::{Path, PathBuf};
+use subppl::coordinator::chain::{build_bayes_lr, build_sv};
+use subppl::coordinator::checkpoint::CheckpointCtl;
+use subppl::coordinator::multichain::{chain_rng, run_chains_supervised, SupervisorConfig};
+use subppl::data::{sv_data, synth2d};
+use subppl::infer::{subsampled_mh_transition, PlannedEval, Proposal, SubsampledConfig};
+use subppl::math::Pcg64;
+use subppl::runtime::pool::WorkerPool;
+use subppl::Value;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("subppl-ckpt-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn value_bits(v: &Value) -> Vec<u64> {
+    match v {
+        Value::Real(x) => vec![x.to_bits()],
+        Value::Vector(xs) => xs.iter().map(|x| x.to_bits()).collect(),
+        other => panic!("unexpected principal value {other:?}"),
+    }
+}
+
+/// One supervised-shape chain over `model`: build the trace with the
+/// chain's own stream, resume if `ctl` carries a checkpoint, run
+/// `draws` transitions, checkpoint on `ctl`'s cadence.  Returns
+/// `(start, bits)` where `bits[i]` is the recorded value after draw
+/// `start + i + 1`.
+///
+/// `stop_at = Some(k)` simulates a hard kill after completing draw `k`
+/// of a *fresh* (non-resumed) attempt: return immediately, leaving
+/// whatever the last cadence checkpoint was on disk.  `panic_at`
+/// simulates a crash instead (for the supervisor test) — again only on
+/// a fresh attempt, so the restarted attempt runs through.
+struct ChainSpec {
+    model: Model,
+    draws: usize,
+    stop_at: Option<usize>,
+    panic_at: Option<usize>,
+}
+
+#[derive(Clone, Copy)]
+enum Model {
+    Lr,
+    Sv,
+}
+
+fn run_chain(spec: &ChainSpec, mut rng: Pcg64, ctl: &mut CheckpointCtl) -> (usize, Vec<Vec<u64>>) {
+    let mut trace;
+    let targets: Vec<_>;
+    let cfg;
+    match spec.model {
+        Model::Lr => {
+            let data = synth2d::generate(150, 81);
+            let (t, w) = build_bayes_lr(&data, 0.1, &mut rng);
+            trace = t;
+            targets = vec![w];
+            cfg = SubsampledConfig {
+                m: 30,
+                eps: 0.01,
+                proposal: Proposal::Drift(0.15),
+                exact: false,
+                threads: 1,
+            };
+        }
+        Model::Sv => {
+            let dcfg = sv_data::SvConfig {
+                series: 8,
+                len: 6,
+                ..Default::default()
+            };
+            let series = sv_data::generate(&dcfg, 64);
+            let (t, phi, sig2) = build_sv(&series, &mut rng);
+            trace = t;
+            targets = vec![phi, sig2];
+            cfg = SubsampledConfig {
+                m: 4,
+                eps: 0.01,
+                proposal: Proposal::Drift(0.05),
+                exact: false,
+                threads: 1,
+            };
+        }
+    }
+    let mut ev = PlannedEval::new();
+    let mut start = 0usize;
+    let mut fresh_attempt = true;
+    if let Some(ck) = ctl.take_resume() {
+        rng = ck.restore(&mut trace).unwrap();
+        start = ck.draw;
+        fresh_attempt = false;
+    }
+    let mut bits = Vec::new();
+    for s in start..spec.draws {
+        if fresh_attempt && spec.panic_at == Some(s) {
+            panic!("checkpoint test: simulated chain crash before draw {s}");
+        }
+        for &v in &targets {
+            subsampled_mh_transition(&mut trace, &mut rng, v, &cfg, &mut ev).unwrap();
+        }
+        let mut row = Vec::new();
+        for &v in &targets {
+            row.extend(value_bits(&trace.fresh_value(v)));
+        }
+        bits.push(row);
+        if ctl.due(s + 1) {
+            ctl.save(s + 1, &trace, &rng).unwrap();
+        }
+        if spec.stop_at == Some(s + 1) && fresh_attempt {
+            // simulated kill: completed (and possibly checkpointed)
+            // draw s + 1, then the process "died"
+            return (start, bits);
+        }
+    }
+    (start, bits)
+}
+
+/// Kill a chain after `killed_at` completed draws, resume from its last
+/// cadence checkpoint, and require the resumed tail to match the
+/// uninterrupted `clean` run bitwise.
+fn kill_resume_at(
+    model: Model,
+    dir: &Path,
+    seed: u64,
+    draws: usize,
+    every: usize,
+    killed_at: usize,
+    clean: &[Vec<u64>],
+) {
+    let _ = std::fs::remove_dir_all(dir);
+    let spec = |stop_at| ChainSpec {
+        model,
+        draws,
+        stop_at,
+        panic_at: None,
+    };
+    let mut ctl = CheckpointCtl::new(every, Some(dir), seed, 0, false).unwrap();
+    let (_, partial) = run_chain(&spec(Some(killed_at)), chain_rng(seed, 0), &mut ctl);
+    assert_eq!(partial.len(), killed_at);
+    assert_eq!(
+        &clean[..killed_at],
+        &partial[..],
+        "pre-kill draws must already be identical (killed at {killed_at})"
+    );
+
+    let mut ctl = CheckpointCtl::new(every, Some(dir), seed, 0, true).unwrap();
+    let (start, resumed) = run_chain(&spec(None), chain_rng(seed, 0), &mut ctl);
+    let want_start = killed_at / every * every;
+    assert_eq!(
+        start, want_start,
+        "resume must restart at the last cadence checkpoint before draw {killed_at}"
+    );
+    assert_eq!(resumed.len(), draws - start);
+    assert_eq!(
+        &clean[start..],
+        &resumed[..],
+        "resumed draws diverged from the uninterrupted run (killed at {killed_at})"
+    );
+}
+
+/// Kill a chain mid-interval, resume from its last cadence checkpoint,
+/// and require the resumed tail to match the uninterrupted run bitwise.
+fn kill_and_resume_lockstep(model: Model, dir: &Path, seed: u64) {
+    let draws = 40usize;
+
+    // uninterrupted reference
+    let spec = ChainSpec {
+        model,
+        draws,
+        stop_at: None,
+        panic_at: None,
+    };
+    let (s0, clean) = run_chain(&spec, chain_rng(seed, 0), &mut CheckpointCtl::disabled());
+    assert_eq!(s0, 0);
+    assert_eq!(clean.len(), draws);
+
+    // checkpoints at 10 and 20; killed after draw 23, resumed at 20
+    kill_resume_at(model, dir, seed, draws, 10, 23, &clean);
+}
+
+#[test]
+fn lr_kill_and_resume_is_bitwise_lockstep() {
+    let dir = temp_dir("lr");
+    kill_and_resume_lockstep(Model::Lr, &dir, 17);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sv_kill_and_resume_is_bitwise_lockstep() {
+    let dir = temp_dir("sv");
+    kill_and_resume_lockstep(Model::Sv, &dir, 29);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Nightly kill-and-resume soak (`CKPT_SOAK=1`): kill the LR chain
+/// after *every* possible draw count and resume each time, so no kill
+/// point — on a checkpoint boundary, one off it, before the first
+/// checkpoint — can break lockstep.  Skipped (cheaply, with a notice)
+/// on the PR path.
+#[test]
+fn soak_kill_at_every_draw_and_resume() {
+    if std::env::var("CKPT_SOAK").map(|v| v == "1") != Ok(true) {
+        eprintln!("skipping checkpoint soak (set CKPT_SOAK=1 to run)");
+        return;
+    }
+    let dir = temp_dir("soak");
+    let seed = 41u64;
+    let draws = 30usize;
+    let spec = ChainSpec {
+        model: Model::Lr,
+        draws,
+        stop_at: None,
+        panic_at: None,
+    };
+    let (_, clean) = run_chain(&spec, chain_rng(seed, 0), &mut CheckpointCtl::disabled());
+    for killed_at in 1..draws {
+        kill_resume_at(Model::Lr, &dir, seed, draws, 5, killed_at, &clean);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Resuming with no checkpoint on disk is a fresh start, not an error.
+#[test]
+fn resume_without_a_checkpoint_starts_fresh() {
+    let dir = temp_dir("fresh");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut ctl = CheckpointCtl::new(5, Some(&dir), 3, 0, true).unwrap();
+    assert!(ctl.take_resume().is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// End-to-end supervisor: chain 0 crashes mid-run on its first attempt;
+/// the supervisor restarts it from its last checkpoint and the restarted
+/// tail matches the uninterrupted chain bitwise.  Chain 1 never crashes
+/// and must be untouched.  The restart is surfaced through the event
+/// lane (`chains_restarted` on the marker event's stats).
+#[test]
+fn supervisor_restarts_a_crashed_chain_from_its_checkpoint() {
+    let seed = 23u64;
+    let draws = 20usize;
+    let dir = temp_dir("sup");
+
+    // uninterrupted references, one per chain, inline
+    let clean: Vec<Vec<Vec<u64>>> = (0..2)
+        .map(|c| {
+            let spec = ChainSpec {
+                model: Model::Lr,
+                draws,
+                stop_at: None,
+                panic_at: None,
+            };
+            run_chain(&spec, chain_rng(seed, c), &mut CheckpointCtl::disabled()).1
+        })
+        .collect();
+
+    let pool = WorkerPool::new(2);
+    let sup = SupervisorConfig {
+        every: 5,
+        dir: Some(dir.clone()),
+        resume: false,
+        max_restarts: 2,
+    };
+    let mut restarts_seen = 0usize;
+    let results = run_chains_supervised(
+        &pool,
+        2,
+        seed,
+        sup,
+        move |c, rng, _sink, ctl| {
+            let spec = ChainSpec {
+                model: Model::Lr,
+                draws,
+                stop_at: None,
+                // chain 0's first attempt dies before draw 13; its last
+                // checkpoint is draw 10
+                panic_at: (c == 0).then_some(13),
+            };
+            run_chain(&spec, rng, ctl)
+        },
+        |ev| {
+            if let Some(st) = &ev.stats {
+                restarts_seen = restarts_seen.max(st.chains_restarted);
+            }
+            true
+        },
+    )
+    .unwrap();
+
+    assert!(restarts_seen >= 1, "restart never surfaced on the event lane");
+    let (start0, bits0) = &results[0];
+    assert_eq!(*start0, 10, "chain 0 must have resumed at its draw-10 checkpoint");
+    assert_eq!(
+        &clean[0][*start0..],
+        &bits0[..],
+        "restarted chain 0 diverged from its uninterrupted run"
+    );
+    let (start1, bits1) = &results[1];
+    assert_eq!(*start1, 0);
+    assert_eq!(&clean[1][..], &bits1[..], "chain 1 was perturbed by chain 0's crash");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A chain that crashes every attempt exhausts its restart budget and
+/// fails the whole run with a permanent-failure error (never a hang,
+/// never a silent success).
+#[test]
+fn supervisor_gives_up_after_max_restarts() {
+    let pool = WorkerPool::new(2);
+    let dir = temp_dir("giveup");
+    let sup = SupervisorConfig {
+        every: 0,
+        dir: Some(dir.clone()),
+        resume: false,
+        max_restarts: 1,
+    };
+    let r = run_chains_supervised(
+        &pool,
+        1,
+        5,
+        sup,
+        |_c, _rng, _sink, _ctl| -> usize { panic!("always dies") },
+        |_| true,
+    );
+    let err = r.unwrap_err();
+    assert!(err.contains("failed permanently"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

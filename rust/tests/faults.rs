@@ -1,0 +1,197 @@
+//! Differential fault-path tests (satellite of the fault-tolerant
+//! runtime): every injected fault must be absorbed — the chain's
+//! results stay **bitwise identical** to the clean run — and the
+//! matching recovery counter must record that the recovery actually
+//! happened (so a silently-dead injection hook cannot pass).
+//!
+//! Compiled only with `--features fault-inject`; without the feature
+//! the hooks are literal `false` and there is nothing to test here
+//! (pinned by `runtime/faults.rs::hooks_are_inert_without_the_feature`).
+//!
+//! Faults are armed through process-global atomics, so every test in
+//! this file serializes on one mutex and disarms before releasing it.
+
+#![cfg(feature = "fault-inject")]
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use subppl::coordinator::chain::build_bayes_lr;
+use subppl::data::synth2d;
+use subppl::infer::{subsampled_mh_transition, PlannedEval, Proposal, SubsampledConfig};
+use subppl::math::Pcg64;
+use subppl::runtime::faults::{self, FaultPlan};
+use subppl::runtime::pool::WorkerPool;
+use subppl::Value;
+
+/// One guard per armed plan: the fault counters are process-wide, so
+/// concurrently running tests in this binary must not overlap.
+fn fault_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+type StepRecord = (bool, usize, Vec<u64>);
+
+fn value_bits(v: &Value) -> Vec<u64> {
+    match v {
+        Value::Real(x) => vec![x.to_bits()],
+        Value::Vector(xs) => xs.iter().map(|x| x.to_bits()).collect(),
+        other => panic!("unexpected principal value {other:?}"),
+    }
+}
+
+/// A fixed LR chain (fixed data, fixed seeds) through `ev`: the
+/// fault-free and faulted runs replay exactly this and must agree on
+/// every step record bit-for-bit.
+fn run_lr_chain(ev: &mut PlannedEval, steps: usize) -> Vec<StepRecord> {
+    let data = synth2d::generate(400, 71);
+    let mut rng = Pcg64::seeded(72);
+    let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+    let cfg = SubsampledConfig {
+        m: 40,
+        eps: 0.01,
+        proposal: Proposal::Drift(0.1),
+        exact: false,
+        threads: 1, // inert: the evaluator is passed in explicitly
+    };
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let s = subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, ev).unwrap();
+        out.push((
+            s.accepted,
+            s.sections_evaluated,
+            value_bits(&trace.fresh_value(w)),
+        ));
+    }
+    out
+}
+
+/// Forced-dispatch parallel evaluator (cutoff 1: every mini-batch
+/// shards, so the shard-level faults actually have events to hit).
+fn parallel_eval() -> PlannedEval {
+    PlannedEval::with_pool(WorkerPool::new(2)).with_min_parallel(1)
+}
+
+/// With the feature compiled in but no plan armed, the hooks must be
+/// pure overhead: results match the sequential evaluator bitwise and
+/// every recovery counter stays zero.
+#[test]
+fn unarmed_hooks_change_nothing() {
+    let _g = fault_lock();
+    faults::clear();
+    let want = run_lr_chain(&mut PlannedEval::new(), 10);
+    let mut ev = parallel_eval();
+    let got = run_lr_chain(&mut ev, 10);
+    assert_eq!(got, want, "unarmed faulted build diverged");
+    let st = ev.stats();
+    assert_eq!(st.fallback_panics, 0);
+    assert_eq!(st.requeued_shards, 0);
+    assert_eq!(st.store_quarantined, 0);
+    assert!(!st.any_recovery());
+}
+
+/// A worker panic mid-shard: the watchdog re-runs the lost range
+/// inline; results identical, `fallback_panics` records the save.
+/// Swept over several injection points so recovery is exercised early,
+/// mid-run, and after the caches are warm.
+#[test]
+fn injected_shard_panic_is_absorbed_bitwise() {
+    let _g = fault_lock();
+    faults::clear();
+    let clean = run_lr_chain(&mut parallel_eval(), 25);
+    for k in [1u64, 3, 9] {
+        faults::install(FaultPlan {
+            panic_at: k,
+            ..FaultPlan::default()
+        });
+        let mut ev = parallel_eval();
+        let got = run_lr_chain(&mut ev, 25);
+        faults::clear();
+        assert_eq!(got, clean, "a recovered shard panic (panic@{k}) changed results");
+        assert!(
+            ev.stats().fallback_panics >= 1,
+            "panic@{k} injected but never recovered: {:?}",
+            ev.stats()
+        );
+    }
+}
+
+/// A wedged worker (job held hostage, never run, never reported): the
+/// shard deadline expires, the dispatcher re-runs the shard inline and
+/// spawns a replacement worker; results identical, `requeued_shards`
+/// records it.  Stealing is off so a worker (not the dispatcher) is
+/// guaranteed to pick the job up.  Costs one `SUBPPL_SHARD_TIMEOUT_MS`
+/// (default 1s) wait — keep the chain short.
+#[test]
+fn injected_worker_stall_is_absorbed_bitwise() {
+    let _g = fault_lock();
+    faults::clear();
+    let mk = || parallel_eval().with_work_stealing(false);
+    let clean = run_lr_chain(&mut mk(), 8);
+    faults::install(FaultPlan {
+        stall_at: 1,
+        ..FaultPlan::default()
+    });
+    let mut ev = mk();
+    let got = run_lr_chain(&mut ev, 8);
+    faults::clear();
+    assert_eq!(got, clean, "a requeued shard changed results");
+    assert!(
+        ev.stats().requeued_shards >= 1,
+        "stall injected but never requeued: {:?}",
+        ev.stats()
+    );
+}
+
+/// A corrupted column-store row (poisoned right after its integrity
+/// hash was recorded): the self-check catches the mismatch, the group
+/// is quarantined and scored through fresh packing from then on;
+/// results identical, `store_quarantined` records it.
+#[test]
+fn injected_store_poison_quarantines_and_stays_bitwise() {
+    let _g = fault_lock();
+    faults::clear();
+    let clean = run_lr_chain(&mut PlannedEval::new().with_colstore(true), 25);
+    for k in [1u64, 5, 17] {
+        faults::install(FaultPlan {
+            poison_at: k,
+            ..FaultPlan::default()
+        });
+        let mut ev = PlannedEval::new().with_colstore(true);
+        let got = run_lr_chain(&mut ev, 25);
+        faults::clear();
+        assert_eq!(got, clean, "a quarantined store group (poison@{k}) changed results");
+        assert!(
+            ev.stats().store_quarantined >= 1,
+            "poison@{k} injected but nothing quarantined: {:?}",
+            ev.stats()
+        );
+    }
+}
+
+/// A NaN section score out of the store tier: the NaN cross-check
+/// re-scores through the fresh-pack oracle, disagrees, quarantines the
+/// group and re-scores it; results identical, `store_quarantined`
+/// records it.
+#[test]
+fn injected_nan_score_is_caught_by_the_oracle_cross_check() {
+    let _g = fault_lock();
+    faults::clear();
+    let clean = run_lr_chain(&mut PlannedEval::new().with_colstore(true), 25);
+    for k in [1u64, 2, 6] {
+        faults::install(FaultPlan {
+            nan_at: k,
+            ..FaultPlan::default()
+        });
+        let mut ev = PlannedEval::new().with_colstore(true);
+        let got = run_lr_chain(&mut ev, 25);
+        faults::clear();
+        assert_eq!(got, clean, "an injected NaN score (nan@{k}) leaked into results");
+        assert!(
+            ev.stats().store_quarantined >= 1,
+            "nan@{k} injected but nothing quarantined: {:?}",
+            ev.stats()
+        );
+    }
+}
