@@ -160,6 +160,7 @@ fn ablate_batch() {
             proposal: Proposal::Drift(0.05),
             exact: false,
             threads: 1,
+            target_risk: None,
         };
         let mut ev = InterpreterEval;
         let iters = 40;

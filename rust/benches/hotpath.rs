@@ -95,6 +95,9 @@ struct SweepRow {
 
 const PAR_THREADS: [usize; 3] = [1, 2, 4];
 
+/// Per-transition risk bound for the risk-adaptive transition bench.
+const TARGET_RISK: f64 = 0.05;
+
 /// The sweep additionally folds every evaluator's recovery counters
 /// into `recovery`: a healthy bench run (no faults injected) must end
 /// with all of them zero — pinned by the `recovery_counters_zero`
@@ -329,6 +332,7 @@ fn emit_json(
     micro: &[(String, f64)],
     checks: &[(&'static str, Check)],
     recovery: &EvalStats,
+    realized_risk: f64,
 ) {
     let mut out = String::from("{\n  \"bench\": \"hotpath\",\n  \"workload\": \"bayes_lr\",\n  \"scorer_sweep\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -367,9 +371,16 @@ fn emit_json(
     // bench ran: all zero on a healthy (fault-free) run, and required
     // present by scripts/check_bench.py so the fields cannot silently
     // drop out of the trajectory artifact
+    // risk-adaptive transition bench: the configured bound and the mean
+    // realized per-transition risk; check_bench.py enforces
+    // target_risk in (0,1) and realized_risk in [0,1]
     let _ = writeln!(
         out,
-        "  }},\n  \"recovery_counters\": {{\n    \"fallback_panics\": {},\n    \"requeued_shards\": {},\n    \"store_quarantined\": {},\n    \"chains_restarted\": {}\n  }},\n  \"self_checks\": {{",
+        "  }},\n  \"risk_adaptive\": {{\n    \"target_risk\": {TARGET_RISK},\n    \"realized_risk\": {realized_risk:.6e}\n  }},"
+    );
+    let _ = writeln!(
+        out,
+        "  \"recovery_counters\": {{\n    \"fallback_panics\": {},\n    \"requeued_shards\": {},\n    \"store_quarantined\": {},\n    \"chains_restarted\": {}\n  }},\n  \"self_checks\": {{",
         recovery.fallback_panics,
         recovery.requeued_shards,
         recovery.store_quarantined,
@@ -459,6 +470,7 @@ fn main() {
         proposal: Proposal::Drift(0.05),
         exact: false,
         threads: 1,
+        target_risk: None,
     };
     let t = bench(
         &format!("subsampled transition, batched (N={n0})"),
@@ -479,6 +491,27 @@ fn main() {
         },
     );
     micro.push(("subsampled_transition_store".into(), t));
+
+    // risk-adaptive control: same transition, but the controller
+    // retunes each mini-batch toward TARGET_RISK instead of a fixed m;
+    // the mean realized per-transition risk lands in the JSON artifact
+    // (schema-checked by scripts/check_bench.py) and is asserted to
+    // stay under the bound by the `realized_risk_below_target` canary.
+    let risk_cfg = SubsampledConfig {
+        target_risk: Some(TARGET_RISK),
+        ..cfg.clone()
+    };
+    let mut risk_ev = PlannedEval::new().with_colstore(true);
+    let t = bench(
+        &format!("subsampled transition, risk-adaptive (N={n0})"),
+        if quick { 50 } else { 200 },
+        || {
+            let s =
+                subsampled_mh_transition(&mut trace, &mut rng, w, &risk_cfg, &mut risk_ev).unwrap();
+            std::hint::black_box(s.sections_evaluated);
+        },
+    );
+    micro.push(("subsampled_transition_risk_adaptive".into(), t));
 
     let t = bench(
         &format!("subsampled transition, planned (N={n0})"),
@@ -567,8 +600,19 @@ fn main() {
     recovery = recovery
         .add(&planned.stats())
         .add(&batched.stats())
-        .add(&store.stats());
+        .add(&store.stats())
+        .add(&risk_ev.stats());
+    let realized_risk = risk_ev.stats().realized_risk().unwrap_or(0.0);
     let mut checks = self_checks(&rows);
+    checks.push((
+        "realized_risk_below_target",
+        from_bool(
+            (0.0..=TARGET_RISK).contains(&realized_risk),
+            format!(
+                "risk-adaptive transitions realized mean risk {realized_risk:.3e} outside [0, {TARGET_RISK}]"
+            ),
+        ),
+    ));
     checks.push((
         "recovery_counters_zero",
         from_bool(
@@ -585,7 +629,7 @@ fn main() {
     // write the artifact (self-check outcomes included) before
     // asserting, so a regression failure still leaves the numbers
     // behind for triage
-    emit_json(&rows, &micro, &checks, &recovery);
+    emit_json(&rows, &micro, &checks, &recovery, realized_risk);
     let mut failed = false;
     for (name, check) in &checks {
         match check {

@@ -9,9 +9,14 @@ weeks later.
 
 Usage:
     python3 scripts/check_bench.py ../BENCH_hotpath.json [--full]
+    python3 scripts/check_bench.py --selftest
 
 --full additionally requires the N=1e5 sweep row (the nightly bench;
 the PR smoke pass runs --quick, which stops at N=1e4).
+
+--selftest validates the validator: it writes synthetic pass/fail
+artifacts (well-formed, and broken in each risk-schema way) to a
+temp dir and asserts this script accepts/rejects each one.
 
 Exit status 0 on success, 1 with a readable report on any violation.
 Stdlib only.
@@ -51,6 +56,7 @@ MICRO_KEYS = {
     "sparse_sampler_100_draws",
     "subsampled_transition_batched",
     "subsampled_transition_store",
+    "subsampled_transition_risk_adaptive",
     "subsampled_transition_planned",
     "subsampled_transition_interpreter",
     "exact_full_scan_transition",
@@ -68,7 +74,14 @@ SELF_CHECK_KEYS = {
     "t4_not_below_t1",
     "t4_speedup_1p5x_at_1e5",
     "recovery_counters_zero",
+    "realized_risk_below_target",
 }
+
+# risk-adaptive transition bench: the configured per-transition bound
+# and the mean realized risk.  The schema gate only enforces ranges —
+# target_risk in (0, 1), realized_risk in [0, 1]; the bound itself is
+# the realized_risk_below_target self-check's job.
+RISK_KEYS = {"target_risk", "realized_risk"}
 
 # EvalStats recovery counters, aggregated over the whole bench run:
 # required present (so the fields cannot silently drop out of the
@@ -143,23 +156,9 @@ def check_self_checks(checks):
         err(f"self_checks: unexpected keys {sorted(extra)}")
 
 
-def main(argv):
-    args = [a for a in argv[1:] if not a.startswith("--")]
-    full = "--full" in argv[1:]
-    if len(args) != 1:
-        print(__doc__, file=sys.stderr)
-        return 1
-    path = args[0]
-    try:
-        with open(path) as f:
-            doc = json.load(f)
-    except FileNotFoundError:
-        print(f"check_bench: {path} not found (did the bench run?)", file=sys.stderr)
-        return 1
-    except json.JSONDecodeError as e:
-        print(f"check_bench: {path} is not valid JSON: {e}", file=sys.stderr)
-        return 1
-
+def validate(doc, full):
+    """Run every schema check on a parsed artifact; returns the error list."""
+    errors.clear()
     if doc.get("bench") != "hotpath":
         err(f"bench: expected 'hotpath', got {doc.get('bench')!r}")
     if doc.get("workload") != "bayes_lr":
@@ -187,6 +186,28 @@ def main(argv):
             if not positive_finite(v):
                 err(f"micro_us.{key}: expected positive finite number, got {v!r}")
 
+    risk = doc.get("risk_adaptive")
+    if not isinstance(risk, dict):
+        err("risk_adaptive: missing (bench predates risk-adaptive control?)")
+    else:
+        for key in sorted(RISK_KEYS - set(risk)):
+            err(f"risk_adaptive: missing {key!r}")
+        extra = set(risk) - RISK_KEYS
+        if extra:
+            err(f"risk_adaptive: unexpected keys {sorted(extra)}")
+        tr = risk.get("target_risk")
+        if "target_risk" in risk and not (
+            isinstance(tr, (int, float)) and not isinstance(tr, bool)
+            and math.isfinite(tr) and 0.0 < tr < 1.0
+        ):
+            err(f"risk_adaptive.target_risk: expected a number in (0, 1), got {tr!r}")
+        rr = risk.get("realized_risk")
+        if "realized_risk" in risk and not (
+            isinstance(rr, (int, float)) and not isinstance(rr, bool)
+            and math.isfinite(rr) and 0.0 <= rr <= 1.0
+        ):
+            err(f"risk_adaptive.realized_risk: expected a number in [0, 1], got {rr!r}")
+
     recovery = doc.get("recovery_counters")
     if not isinstance(recovery, dict):
         err("recovery_counters: missing (bench predates the fault-tolerant runtime?)")
@@ -207,15 +228,124 @@ def main(argv):
     else:
         check_self_checks(checks)
 
-    if errors:
-        print(f"check_bench: {path} FAILED {len(errors)} check(s):", file=sys.stderr)
-        for e in errors:
+    return list(errors)
+
+
+def check_file(path, full):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        print(f"check_bench: {path} not found (did the bench run?)", file=sys.stderr)
+        return 1
+    except json.JSONDecodeError as e:
+        print(f"check_bench: {path} is not valid JSON: {e}", file=sys.stderr)
+        return 1
+
+    problems = validate(doc, full)
+    if problems:
+        print(f"check_bench: {path} FAILED {len(problems)} check(s):", file=sys.stderr)
+        for e in problems:
             print(f"  - {e}", file=sys.stderr)
         return 1
-    n_rows = len(sweep)
-    print(f"check_bench: {path} ok ({n_rows} sweep rows, N = {sorted(ns)}, "
+    sweep = doc.get("scorer_sweep") or []
+    ns = {row.get("n") for row in sweep}
+    print(f"check_bench: {path} ok ({len(sweep)} sweep rows, N = {sorted(ns)}, "
           f"{len(doc.get('micro_us', {}))} micro metrics, self-checks clean)")
     return 0
+
+
+def synthetic_doc():
+    """A minimal artifact that passes every schema check."""
+    def row(n):
+        return {
+            "n": n, "d": 50, "m": 100,
+            "interpreter_sections_per_sec": 1e5,
+            "planned_sections_per_sec": 3e5,
+            "batched_sections_per_sec": 6e5,
+            "store_sections_per_sec": 9e5,
+            "speedup": 3.0, "batched_over_planned": 2.0,
+            "store_over_batched": 1.5, "store_hit_rate": 0.97,
+            "parallel_m": 1024,
+            "parallel_sections_per_sec": {"t1": 6e5, "t2": 1e6, "t4": 1.8e6},
+            "parallel_t4_over_t1": 3.0,
+        }
+    return {
+        "bench": "hotpath",
+        "workload": "bayes_lr",
+        "scorer_sweep": [row(1_000), row(10_000)],
+        "micro_us": {k: 1.0 for k in MICRO_KEYS},
+        "risk_adaptive": {"target_risk": 0.05, "realized_risk": 1.3e-4},
+        "recovery_counters": {k: 0 for k in RECOVERY_KEYS},
+        "self_checks": {k: True for k in SELF_CHECK_KEYS},
+    }
+
+
+def selftest():
+    """Round-trip synthetic pass/fail artifacts through check_file."""
+    import copy
+    import os
+    import tempfile
+
+    def drop_risk(d):
+        del d["risk_adaptive"]
+
+    def mutate(path, value):
+        def apply(d):
+            node = d
+            for k in path[:-1]:
+                node = node[k]
+            node[path[-1]] = value
+        return apply
+
+    # (name, mutation, expect_ok)
+    cases = [
+        ("valid", lambda d: None, True),
+        ("risk_block_missing", drop_risk, False),
+        ("target_risk_zero", mutate(["risk_adaptive", "target_risk"], 0.0), False),
+        ("target_risk_one", mutate(["risk_adaptive", "target_risk"], 1.0), False),
+        ("target_risk_string", mutate(["risk_adaptive", "target_risk"], "0.05"), False),
+        ("realized_risk_negative", mutate(["risk_adaptive", "realized_risk"], -1e-9), False),
+        ("realized_risk_above_one", mutate(["risk_adaptive", "realized_risk"], 1.5), False),
+        ("realized_risk_zero_ok", mutate(["risk_adaptive", "realized_risk"], 0.0), True),
+        ("realized_risk_missing",
+         lambda d: d["risk_adaptive"].pop("realized_risk"), False),
+        ("risk_extra_key", mutate(["risk_adaptive", "surprise"], 1), False),
+        ("risk_check_failed",
+         mutate(["self_checks", "realized_risk_below_target"], False), False),
+        ("risk_micro_missing",
+         lambda d: d["micro_us"].pop("subsampled_transition_risk_adaptive"), False),
+    ]
+    failures = []
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, break_it, expect_ok in cases:
+            doc = copy.deepcopy(synthetic_doc())
+            break_it(doc)
+            path = os.path.join(tmp, f"{name}.json")
+            with open(path, "w") as f:
+                json.dump(doc, f)
+            ok = check_file(path, full=False) == 0
+            verdict = "ok" if ok == expect_ok else "WRONG"
+            print(f"selftest {name}: expected {'pass' if expect_ok else 'fail'}, "
+                  f"got {'pass' if ok else 'fail'} — {verdict}")
+            if ok != expect_ok:
+                failures.append(name)
+    if failures:
+        print(f"check_bench --selftest FAILED: {failures}", file=sys.stderr)
+        return 1
+    print(f"check_bench --selftest ok ({len(cases)} synthetic artifacts)")
+    return 0
+
+
+def main(argv):
+    if "--selftest" in argv[1:]:
+        return selftest()
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    full = "--full" in argv[1:]
+    if len(args) != 1:
+        print(__doc__, file=sys.stderr)
+        return 1
+    return check_file(args[0], full)
 
 
 if __name__ == "__main__":

@@ -84,6 +84,7 @@ pub fn fig5_sublinear(cfg: &Fig5Config, evaluator: &mut dyn LocalEvaluator) -> V
             proposal: Proposal::Drift(cfg.sigma),
             exact: true,
             threads: 0,
+            target_risk: None,
         };
         for _ in 0..5 {
             subsampled_mh_transition(&mut trace, &mut rng, w, &warm, evaluator).unwrap();
@@ -186,6 +187,9 @@ pub struct Fig4Config {
     pub seed: u64,
     /// record risk every k transitions
     pub record_every: usize,
+    /// when set, add a risk-adaptive curve: the controller retunes the
+    /// mini-batch per transition toward this per-transition risk bound
+    pub target_risk: Option<f64>,
 }
 
 impl Default for Fig4Config {
@@ -200,6 +204,7 @@ impl Default for Fig4Config {
             sigma: 0.05,
             seed: 11,
             record_every: 10,
+            target_risk: None,
         }
     }
 }
@@ -230,6 +235,7 @@ pub fn fig4_reference(
         proposal: Proposal::Drift(cfg.sigma),
         exact: true,
         threads: 0,
+        target_risk: None,
     };
     let mut acc = PredictiveAccumulator::new(test.n());
     for i in 0..(cfg.steps * 2) {
@@ -261,6 +267,7 @@ pub fn fig4_curve(
     label: &str,
     exact: bool,
     eps: f64,
+    target_risk: Option<f64>,
     reference: &[f64],
     test: &Dataset,
     evaluator: &mut dyn LocalEvaluator,
@@ -274,6 +281,7 @@ pub fn fig4_curve(
         proposal: Proposal::Drift(cfg.sigma),
         exact,
         threads: 0,
+        target_risk,
     };
     let mut acc = PredictiveAccumulator::new(test.n());
     let mut points = Vec::new();
@@ -333,7 +341,7 @@ pub fn fig4_risk(cfg: &Fig4Config, evaluator: &mut dyn LocalEvaluator) -> Vec<Ri
     let reference = fig4_reference(cfg, &test, evaluator);
     let mut curves = Vec::new();
     curves.push(fig4_curve(
-        cfg, "exact-mh", true, cfg.eps, &reference, &test, evaluator,
+        cfg, "exact-mh", true, cfg.eps, None, &reference, &test, evaluator,
     ));
     for &eps in &[0.01, 0.1, 0.5] {
         curves.push(fig4_curve(
@@ -341,6 +349,21 @@ pub fn fig4_risk(cfg: &Fig4Config, evaluator: &mut dyn LocalEvaluator) -> Vec<Ri
             &format!("subsampled-eps{eps}"),
             false,
             eps,
+            None,
+            &reference,
+            &test,
+            evaluator,
+        ));
+    }
+    // risk-adaptive variant: the controller retunes the mini-batch each
+    // transition so the realized per-transition risk stays under the bound
+    if let Some(tr) = cfg.target_risk {
+        curves.push(fig4_curve(
+            cfg,
+            &format!("subsampled-risk{tr}"),
+            false,
+            tr,
+            Some(tr),
             &reference,
             &test,
             evaluator,
@@ -400,6 +423,7 @@ pub fn fig6_dpm(cfg: &Fig6Config, subsampled: bool) -> Vec<Fig6Point> {
         proposal: Proposal::Drift(cfg.sigma),
         exact: !subsampled,
         threads: 0,
+        target_risk: None,
     };
     let mut ev = PlannedEval::for_config(&kcfg);
     let alpha = trace.lookup_node("alpha").unwrap();
@@ -524,6 +548,9 @@ pub struct Fig9Config {
     pub seed: u64,
     /// latent-state sweeps per parameter sweep (paper: 10x)
     pub h_per_param: usize,
+    /// when set, the subsampled parameter moves run under risk-adaptive
+    /// mini-batch control instead of a fixed m/eps schedule
+    pub target_risk: Option<f64>,
 }
 
 impl Default for Fig9Config {
@@ -537,6 +564,7 @@ impl Default for Fig9Config {
             eps: 1e-3,
             seed: 17,
             h_per_param: 2,
+            target_risk: None,
         }
     }
 }
@@ -578,6 +606,7 @@ pub fn fig9_sv_monitored(
         proposal: Proposal::Drift(0.02),
         exact: !subsampled,
         threads: 0,
+        target_risk: if subsampled { cfg.target_risk } else { None },
     };
     let mut ev = PlannedEval::for_config(&kcfg);
     let mut phi_samples = Vec::with_capacity(cfg.sweeps);
@@ -620,10 +649,12 @@ pub fn fig9_sv_monitored(
     drop(buf); // flush the tail before the result is reported
     let seconds = t0.elapsed().as_secs_f64();
     Fig9Result {
-        label: if subsampled {
-            format!("subsampled-eps{}", cfg.eps)
-        } else {
+        label: if !subsampled {
             "exact-mh".into()
+        } else if let Some(tr) = cfg.target_risk {
+            format!("subsampled-risk{tr}")
+        } else {
+            format!("subsampled-eps{}", cfg.eps)
         },
         phi_ess_per_sec: ess(&phi_samples) / seconds,
         sig_ess_per_sec: ess(&sig_samples) / seconds,
@@ -741,6 +772,7 @@ pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
                 proposal: Proposal::Drift(0.1),
                 exact: true,
                 threads: 0,
+                target_risk: None,
             };
             let iters = 10;
             let t0 = Instant::now();
@@ -777,6 +809,7 @@ pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
                 proposal: Proposal::Drift(0.02),
                 exact: true,
                 threads: 0,
+                target_risk: None,
             };
             let iters = 10;
             let t0 = Instant::now();
@@ -815,6 +848,7 @@ pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
                 proposal: Proposal::Drift(0.1),
                 exact: true,
                 threads: 0,
+                target_risk: None,
             };
             let iters = 5;
             let t0 = Instant::now();

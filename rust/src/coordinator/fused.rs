@@ -705,6 +705,7 @@ mod tests {
             proposal: crate::infer::Proposal::Drift(0.1),
             exact: false,
             threads: 1,
+            target_risk: None,
         };
         let mut fused = FusedEval::open_default().unwrap().always_fused();
         let mut accepted = 0;

@@ -108,6 +108,14 @@ impl DiagSnapshot {
                     e.fallback_panics, e.requeued_shards, e.store_quarantined, e.chains_restarted
                 );
             }
+            // risk/eviction tail only when the interval reported any —
+            // fixed-eps runs without churn keep the original line
+            if let Some(r) = e.realized_risk() {
+                let _ = write!(out, " risk={r:.2e}");
+            }
+            if e.store_evicted > 0 {
+                let _ = write!(out, " +evicted={}", e.store_evicted);
+            }
         }
         out
     }
@@ -164,6 +172,9 @@ pub fn monitor_csv(groups: &[(&str, &[DiagSnapshot])]) -> Csv {
         "requeued_shards",
         "store_quarantined",
         "chains_restarted",
+        "store_evicted",
+        "risk_transitions",
+        "realized_risk",
     ]);
     for (label, snaps) in groups {
         for s in *snaps {
@@ -193,6 +204,14 @@ pub fn monitor_csv(groups: &[(&str, &[DiagSnapshot])]) -> Csv {
                     ev(s.eval.requeued_shards),
                     ev(s.eval.store_quarantined),
                     ev(s.eval.chains_restarted),
+                    ev(s.eval.store_evicted),
+                    ev(s.eval.risk_transitions),
+                    // mean, not a count: blank (not 0) on non-first rows
+                    if pi == 0 {
+                        s.eval.realized_risk().map_or(String::new(), |r| r.to_string())
+                    } else {
+                        String::new()
+                    },
                 ]);
             }
         }

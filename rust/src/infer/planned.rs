@@ -99,6 +99,19 @@ pub struct EvalStats {
     /// counter).  Always 0 at the evaluator level — the supervised
     /// multi-chain driver injects it when folding chain events.
     pub chains_restarted: usize,
+    /// Column-store panels evicted because their principal's group
+    /// layout was abandoned by a structural rebuild (DPM cluster
+    /// churn); bounds the store's footprint on many-short-lived-cluster
+    /// runs.
+    pub store_evicted: usize,
+    /// Subsampled transitions whose realized risk was recorded (the
+    /// denominator for [`EvalStats::realized_risk`]).
+    pub risk_transitions: usize,
+    /// Sum of per-transition realized risk in micro-units (risk × 1e6,
+    /// rounded; integer so the struct stays `Copy + Eq` and interval
+    /// diffs stay exact).  `realized_risk()` turns the pair back into a
+    /// mean probability.
+    pub risk_micro: usize,
 }
 
 impl EvalStats {
@@ -116,6 +129,9 @@ impl EvalStats {
             requeued_shards: self.requeued_shards + o.requeued_shards,
             store_quarantined: self.store_quarantined + o.store_quarantined,
             chains_restarted: self.chains_restarted + o.chains_restarted,
+            store_evicted: self.store_evicted + o.store_evicted,
+            risk_transitions: self.risk_transitions + o.risk_transitions,
+            risk_micro: self.risk_micro + o.risk_micro,
         }
     }
 
@@ -136,7 +152,21 @@ impl EvalStats {
             requeued_shards: self.requeued_shards.saturating_sub(prev.requeued_shards),
             store_quarantined: self.store_quarantined.saturating_sub(prev.store_quarantined),
             chains_restarted: self.chains_restarted.saturating_sub(prev.chains_restarted),
+            store_evicted: self.store_evicted.saturating_sub(prev.store_evicted),
+            risk_transitions: self.risk_transitions.saturating_sub(prev.risk_transitions),
+            risk_micro: self.risk_micro.saturating_sub(prev.risk_micro),
         }
+    }
+
+    /// Mean realized risk over the transitions this snapshot covers
+    /// (per-transition p-values at the sequential test's stopping
+    /// point), or `None` when no subsampled transition reported one.
+    /// On an interval diff this is the interval's mean realized risk.
+    pub fn realized_risk(&self) -> Option<f64> {
+        if self.risk_transitions == 0 {
+            return None;
+        }
+        Some(self.risk_micro as f64 / 1e6 / self.risk_transitions as f64)
     }
 
     /// Whether any recovery path fired in this (interval) snapshot —
@@ -215,6 +245,13 @@ pub struct PlannedEval {
     /// quarantined group is scored through fresh packing until the
     /// next structural rebuild replaces its store.
     pub store_quarantined: usize,
+    /// Column-store panels evicted under this evaluator's traffic
+    /// (sampled as a delta around the trace's store-cache sweep).
+    pub store_evicted: usize,
+    /// Transitions that reported a realized risk / their summed risk in
+    /// micro-units (see [`EvalStats::risk_micro`]).
+    risk_transitions: usize,
+    risk_micro: usize,
     pub fallback_sections: usize,
     /// Per-call scratch: for each group, the sampled (member, output
     /// position) pairs; reused so steady state allocates nothing.
@@ -258,6 +295,9 @@ impl PlannedEval {
             store_refreshed: 0,
             store_rebuilds: 0,
             store_quarantined: 0,
+            store_evicted: 0,
+            risk_transitions: 0,
+            risk_micro: 0,
             fallback_sections: 0,
             sel: Vec::new(),
             batch_out: Vec::new(),
@@ -368,6 +408,9 @@ impl PlannedEval {
             // evaluators never restart chains; the supervised driver
             // injects this field when folding chain events
             chains_restarted: 0,
+            store_evicted: self.store_evicted,
+            risk_transitions: self.risk_transitions,
+            risk_micro: self.risk_micro,
         }
     }
 
@@ -530,10 +573,15 @@ impl LocalEvaluator for PlannedEval {
             // the store mirrors the batch set group-for-group; a fresh
             // build means the structure moved (or this is first use)
             let store = if self.colstore && !set.groups.is_empty() {
+                let evicted_before = trace.store_evictions();
                 let (rc, built) = trace.cached_colstore(p, &set);
                 if built {
                     self.store_rebuilds += 1;
                 }
+                // a fresh build sweeps stores whose principals were
+                // abandoned by the structural rebuild; attribute those
+                // evictions to the traffic that triggered the sweep
+                self.store_evicted += (trace.store_evictions() - evicted_before) as usize;
                 Some(rc)
             } else {
                 None
@@ -659,6 +707,13 @@ impl LocalEvaluator for PlannedEval {
 
     fn stats(&self) -> EvalStats {
         PlannedEval::stats(self)
+    }
+
+    fn note_risk(&mut self, realized: f64) {
+        self.risk_transitions += 1;
+        self.risk_micro = self
+            .risk_micro
+            .saturating_add((realized.clamp(0.0, 1.0) * 1e6).round() as usize);
     }
 }
 
@@ -958,6 +1013,7 @@ mod tests {
             proposal: Proposal::Drift(0.1),
             exact: false,
             threads: 1,
+            target_risk: None,
         };
         let mut ev = PlannedEval::new();
         let monotone = |a: &EvalStats, b: &EvalStats| {
@@ -972,6 +1028,9 @@ mod tests {
                 && b.requeued_shards >= a.requeued_shards
                 && b.store_quarantined >= a.store_quarantined
                 && b.chains_restarted >= a.chains_restarted
+                && b.store_evicted >= a.store_evicted
+                && b.risk_transitions >= a.risk_transitions
+                && b.risk_micro >= a.risk_micro
         };
         let mut prev = ev.stats();
         assert_eq!(prev, EvalStats::default());
@@ -995,6 +1054,87 @@ mod tests {
         assert!(prev.store_rebuilds >= 2, "rebuild after the structural change");
     }
 
+    /// Satellite: on DPM-style runs with many short-lived clusters the
+    /// column-store cache must not accumulate panels for abandoned
+    /// principals — structural rebuilds sweep them (counted in
+    /// `store_evictions`), keeping the footprint bounded by the live
+    /// cluster count.
+    #[test]
+    fn store_cache_stays_bounded_under_cluster_churn() {
+        let n = 16;
+        let mut rng = Pcg64::seeded(51);
+        let mut src = String::from(
+            "[assume crp (make_crp 1.5)]\n\
+             [assume z (mem (lambda (i) (crp)))]\n\
+             [assume muk (mem (lambda (k) (scope_include 'muk k (normal 0 3))))]\n\
+             [assume x (lambda (i) (normal (muk (z i)) 0.8))]\n",
+        );
+        for i in 0..n {
+            src.push_str(&format!("[observe (x {i}) {}]\n", (i % 5) as f64 - 2.0));
+        }
+        let mut trace = Trace::new();
+        trace.run_program(&src, &mut rng).unwrap();
+        let zs: Vec<NodeId> = (0..n)
+            .map(|i| {
+                let e = crate::ppl::parser::parse_expr(&format!("(z {i})")).unwrap();
+                let mut ev = crate::trace::Evaluator::new(&mut trace, &mut rng);
+                let env = ev.trace.global_env.clone();
+                ev.eval(&e, &env).unwrap().node().unwrap()
+            })
+            .collect();
+        let cfg = SubsampledConfig {
+            m: 4,
+            eps: 0.05,
+            proposal: Proposal::Drift(0.3),
+            exact: false,
+            threads: 1,
+            target_risk: None,
+        };
+        let mut ev = PlannedEval::new().with_colstore(true);
+        let sample_live = |trace: &mut Trace, rng: &mut Pcg64, ev: &mut PlannedEval| {
+            for mk in trace.scope_nodes("muk") {
+                if trace.cached_partition(mk).is_some() {
+                    subsampled_mh_transition(trace, rng, mk, &cfg, ev).unwrap();
+                }
+            }
+        };
+        // alternate: build stores for every live cluster, then churn
+        // assignments until the structure actually moves
+        let (mut churns, mut step) = (0, 0);
+        while churns < 5 && step < 20_000 {
+            sample_live(&mut trace, &mut rng, &mut ev);
+            let v0 = trace.structure_version;
+            while trace.structure_version == v0 && step < 20_000 {
+                let z = zs[step % n];
+                gibbs_transition(&mut trace, &mut rng, z).unwrap();
+                step += 1;
+            }
+            if trace.structure_version == v0 {
+                break;
+            }
+            churns += 1;
+        }
+        assert!(churns >= 5, "gibbs churn never re-keyed enough: {churns}");
+        // one more pass so the last structural change gets its sweep
+        sample_live(&mut trace, &mut rng, &mut ev);
+        assert!(
+            trace.store_evictions() > 0,
+            "cluster churn never evicted an abandoned store"
+        );
+        assert_eq!(
+            ev.store_evicted as u64,
+            trace.store_evictions(),
+            "the driving evaluator must observe every eviction delta"
+        );
+        let live = trace.scope_nodes("muk").len();
+        assert!(
+            trace.colstore_cache_len() <= live,
+            "store cache holds {} entries for {} live clusters",
+            trace.colstore_cache_len(),
+            live
+        );
+    }
+
     /// End-to-end: the planned evaluator drives subsampled transitions
     /// to the same posterior region as the interpreter (LR separator).
     #[test]
@@ -1008,6 +1148,7 @@ mod tests {
             proposal: Proposal::Drift(0.08),
             exact: false,
             threads: 1,
+            target_risk: None,
         };
         let mut ev = PlannedEval::new();
         let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());

@@ -68,6 +68,24 @@ pub enum InfCmd {
     },
 }
 
+impl InfCmd {
+    /// Turn on risk-adaptive mini-batch control for every
+    /// `subsampled_mh` command in this program (the CLI's
+    /// `--target-risk` applies one bound program-wide; commands other
+    /// than `subsampled_mh` are unaffected).
+    pub fn set_target_risk(&mut self, target: f64) {
+        match self {
+            InfCmd::SubsampledMh { cfg, .. } => cfg.target_risk = Some(target),
+            InfCmd::Cycle { cmds, .. } => {
+                for c in cmds {
+                    c.set_target_risk(target);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
 /// Aggregate statistics of an inference run.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct InferStats {
@@ -288,6 +306,7 @@ fn convert(expr: &Rc<Expr>) -> Result<InfCmd, String> {
                     proposal,
                     exact: false,
                     threads: 0,
+                    target_risk: None,
                 },
                 steps,
             })

@@ -49,6 +49,35 @@ impl SequentialTest {
         self.moments.mean()
     }
 
+    /// The threshold the stream is being tested against.
+    pub fn mu0(&self) -> f64 {
+        self.mu0
+    }
+
+    /// Sample standard deviation of the l_i consumed so far.
+    pub fn std(&self) -> f64 {
+        self.moments.std()
+    }
+
+    /// Risk actually incurred by the decision at the current state: the
+    /// p-value of the t-test (probability that the sign of
+    /// `mean - mu0` is wrong).  Zero once the population is exhausted
+    /// (the comparison is exact) or when every l_i seen was identical.
+    pub fn realized_risk(&self) -> f64 {
+        let n = self.moments.n();
+        if n >= self.n_total || n < 2 {
+            return 0.0;
+        }
+        let s_l = self.moments.std();
+        if s_l == 0.0 {
+            return 0.0;
+        }
+        let fpc = (1.0 - (n as f64 - 1.0) / (self.n_total as f64 - 1.0)).max(0.0);
+        let s = s_l / (n as f64).sqrt() * fpc.sqrt();
+        let t = (self.moments.mean() - self.mu0).abs() / s;
+        student_t_sf(t, (n - 1) as f64)
+    }
+
     /// Feed one mini-batch of l_i values; returns the updated state.
     pub fn update(&mut self, batch: &[f64]) -> TestState {
         for &l in batch {

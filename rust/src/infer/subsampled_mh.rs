@@ -15,7 +15,7 @@
 use crate::infer::mh::{mh_transition, Proposal, TransitionStats};
 use crate::infer::planned::EvalStats;
 use crate::infer::seqtest::{SequentialTest, TestState};
-use crate::math::Pcg64;
+use crate::math::{inv_normal_cdf, Pcg64};
 use crate::ppl::value::Value;
 use crate::trace::node::{NodeId, NodeKind};
 use crate::trace::partition::{
@@ -44,6 +44,13 @@ pub struct SubsampledConfig {
     /// path is bitwise identical to the sequential one, so traces and
     /// acceptance decisions do not depend on it.
     pub threads: usize,
+    /// Risk-adaptive mini-batch control (`--target-risk`).  When set,
+    /// the value replaces `eps` as the sequential test's stopping
+    /// threshold and a [`RiskController`] sizes each round's mini-batch
+    /// toward that per-transition error bound (`m` becomes the probe /
+    /// floor size).  When `None`, rounds are a fixed `m` sections and
+    /// `eps` is used, exactly as before.
+    pub target_risk: Option<f64>,
 }
 
 impl SubsampledConfig {
@@ -54,6 +61,7 @@ impl SubsampledConfig {
             proposal: Proposal::Drift(0.1),
             exact: false,
             threads: 0,
+            target_risk: None,
         }
     }
 }
@@ -87,6 +95,13 @@ pub trait LocalEvaluator {
     fn stats(&self) -> EvalStats {
         EvalStats::default()
     }
+
+    /// Realized risk of the transition decision that just completed:
+    /// the sequential test's p-value at its stopping point, or `0.0`
+    /// for exact decisions (exhaustion or `exact` mode).  Evaluators
+    /// that track stats accumulate it into [`EvalStats`]; the default
+    /// is a no-op.
+    fn note_risk(&mut self, _realized: f64) {}
 }
 
 /// The general interpreter-walk evaluator.
@@ -180,6 +195,66 @@ impl SparseSampler {
     }
 }
 
+/// Adaptive mini-batch sizing toward a per-transition risk bound.
+///
+/// The fixed-`m` loop draws the same batch size every round regardless
+/// of how decisive the stream looks, so easy decisions overshoot (the
+/// last round wastes reads past the stopping point) and hard ones
+/// crawl through many tiny rounds.  Given a target risk `delta`, this
+/// controller probes with `m0` sections, then sizes each following
+/// round by solving the test's stopping condition for `n` under a
+/// normal approximation: the fpc-corrected standard error at which
+/// `|mean - mu0|` sits exactly at the `1 - delta` critical value,
+///
+/// ```text
+///   n* = base / (1 + base / N),   base = (z_{1-delta} * s / d)^2
+/// ```
+///
+/// with `d = |mean - mu0|` and `s` the running std.  The next batch is
+/// `n* - consumed`, clamped to `[m0, remaining]` — so it degrades to
+/// the fixed-`m` behavior when the estimates are uninformative and to
+/// exhaustion (an exact, zero-risk decision) when no sample size can
+/// reach the bound.
+pub struct RiskController {
+    target: f64,
+    n_total: usize,
+    m0: usize,
+}
+
+impl RiskController {
+    pub fn new(target: f64, n_total: usize, m0: usize) -> Self {
+        assert!(
+            target > 0.0 && target < 1.0,
+            "target risk must lie in (0, 1), got {target}"
+        );
+        RiskController {
+            target,
+            n_total,
+            // the probe must give the t-test a variance estimate
+            m0: m0.max(2),
+        }
+    }
+
+    /// Size of the next mini-batch, given the running test state.
+    pub fn next_take(&self, test: &SequentialTest, remaining: usize) -> usize {
+        let consumed = test.n();
+        if consumed < 2 || test.std() == 0.0 {
+            return self.m0.min(remaining);
+        }
+        let d = (test.mean() - test.mu0()).abs();
+        let need = if d == 0.0 || !d.is_finite() {
+            // dead-even stream (or infinite mu0): only exhaustion decides
+            self.n_total
+        } else {
+            let z = inv_normal_cdf(1.0 - self.target);
+            let base = (z * test.std() / d).powi(2);
+            // finite population correction: solve n = base * (1 - n/N)
+            (base / (1.0 + base / self.n_total as f64)).ceil() as usize
+        };
+        need.saturating_sub(consumed).max(self.m0).min(remaining)
+    }
+}
+
 /// One subsampled MH transition for `v` (Alg. 3).  Falls back to exact
 /// scaffold MH when the variable has no border partition.
 pub fn subsampled_mh_transition(
@@ -243,9 +318,14 @@ pub fn subsampled_mh_transition(
             stats.sections_evaluated += end - idx;
             idx = end;
         }
+        evaluator.note_risk(0.0);
         sum / n_total as f64 > mu0
     } else {
-        let mut test = SequentialTest::new(mu0, n_total, cfg.eps);
+        let eps = cfg.target_risk.unwrap_or(cfg.eps);
+        let ctrl = cfg
+            .target_risk
+            .map(|tr| RiskController::new(tr, n_total, cfg.m.max(1)));
+        let mut test = SequentialTest::new(mu0, n_total, eps);
         let mut sampler = SparseSampler::new(n_total);
         let mut decided = None;
         // one reused mini-batch buffer: the whole batch goes to the
@@ -253,7 +333,10 @@ pub fn subsampled_mh_transition(
         // and replays one op list per group)
         let mut roots: Vec<NodeId> = Vec::with_capacity(cfg.m.max(1));
         while decided.is_none() {
-            let take = cfg.m.min(sampler.remaining());
+            let take = match &ctrl {
+                Some(c) => c.next_take(&test, sampler.remaining()),
+                None => cfg.m.min(sampler.remaining()),
+            };
             roots.clear();
             roots.extend((0..take).map(|_| p.locals[sampler.next(rng)]));
             let ls = evaluator.eval_sections(trace, p, &roots, &new_v)?;
@@ -262,6 +345,7 @@ pub fn subsampled_mh_transition(
                 decided = Some(acc);
             }
         }
+        evaluator.note_risk(test.realized_risk());
         decided.unwrap()
     };
 
@@ -366,6 +450,7 @@ mod tests {
             proposal: Proposal::Drift(0.5),
             exact: false,
             threads: 1,
+            target_risk: None,
         };
         let mut ev = InterpreterEval;
         let mut total = 0usize;
@@ -393,6 +478,7 @@ mod tests {
             proposal: Proposal::Drift(0.12),
             exact: true,
             threads: 1,
+            target_risk: None,
         };
         let mut ev = InterpreterEval;
         let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());
@@ -424,6 +510,7 @@ mod tests {
             proposal: Proposal::Drift(0.12),
             exact: false,
             threads: 1,
+            target_risk: None,
         };
         let mut ev = InterpreterEval;
         let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());
@@ -458,6 +545,7 @@ mod tests {
             proposal: Proposal::Drift(50.0),
             exact: false,
             threads: 1,
+            target_risk: None,
         };
         let mut ev = InterpreterEval;
         for _ in 0..50 {
@@ -482,5 +570,95 @@ mod tests {
         // single dependent: no border; must not panic
         let s = subsampled_mh_transition(&mut t, &mut rng, v, &cfg, &mut ev).unwrap();
         assert_eq!(s.sections_evaluated, 0);
+    }
+
+    #[test]
+    fn risk_controller_probes_then_adapts() {
+        let n_total = 10_000;
+        let ctrl = RiskController::new(0.01, n_total, 50);
+        // fresh test: probe round of m0
+        let test = SequentialTest::new(0.0, n_total, 0.01);
+        assert_eq!(ctrl.next_take(&test, n_total), 50);
+
+        // decisive stream (mean far from mu0 in units of std): the
+        // predicted requirement is below what's consumed, so the
+        // controller returns the m0 floor
+        let mut easy = SequentialTest::new(0.0, n_total, 1e-12);
+        let vals: Vec<f64> = (0..60).map(|i| 5.0 + 0.01 * (i % 7) as f64).collect();
+        easy.update(&vals);
+        assert_eq!(ctrl.next_take(&easy, n_total - easy.n()), 50);
+
+        // borderline stream: requirement far exceeds consumption, next
+        // round must be larger than the floor (but capped by remaining)
+        let mut hard = SequentialTest::new(0.0, n_total, 1e-12);
+        let vals: Vec<f64> = (0..60)
+            .map(|i| 0.001 + if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        hard.update(&vals);
+        let take = ctrl.next_take(&hard, n_total - hard.n());
+        assert!(take > 50, "borderline round was only {take}");
+        assert!(take <= n_total - hard.n());
+
+        // dead-even stream: only exhaustion decides
+        let mut even = SequentialTest::new(1.0, n_total, 1e-12);
+        even.update(&[0.0, 2.0, 0.0, 2.0]);
+        assert_eq!(ctrl.next_take(&even, n_total - even.n()), n_total - even.n());
+    }
+
+    /// Captures each transition's realized risk via the trait hook.
+    struct RiskCapture {
+        inner: InterpreterEval,
+        risks: Vec<f64>,
+    }
+
+    impl LocalEvaluator for RiskCapture {
+        fn eval_sections(
+            &mut self,
+            trace: &mut Trace,
+            p: &Partition,
+            roots: &[NodeId],
+            new_v: &Value,
+        ) -> Result<Vec<f64>, String> {
+            self.inner.eval_sections(trace, p, roots, new_v)
+        }
+        fn note_risk(&mut self, realized: f64) {
+            self.risks.push(realized);
+        }
+    }
+
+    #[test]
+    fn realized_risk_stays_below_target_on_lr() {
+        // the fig4 bench model: adaptive control must keep every
+        // transition's realized risk at or below the requested bound
+        let src = lr_program(2000, 1);
+        let mut t = Trace::new();
+        let mut rng = Pcg64::seeded(21);
+        t.run_program(&src, &mut rng).unwrap();
+        let v = t.lookup_node("w").unwrap();
+        let target = 0.05;
+        let cfg = SubsampledConfig {
+            m: 50,
+            eps: 0.01, // ignored: target_risk takes over as threshold
+            proposal: Proposal::Drift(0.12),
+            exact: false,
+            threads: 1,
+            target_risk: Some(target),
+        };
+        let mut ev = RiskCapture {
+            inner: InterpreterEval,
+            risks: Vec::new(),
+        };
+        for _ in 0..40 {
+            subsampled_mh_transition(&mut t, &mut rng, v, &cfg, &mut ev).unwrap();
+        }
+        assert_eq!(ev.risks.len(), 40, "one realized risk per transition");
+        for &r in &ev.risks {
+            assert!((0.0..=target).contains(&r), "realized risk {r} > {target}");
+        }
+        // sanity: the chain actually subsampled (not all exhaustion)
+        assert!(
+            ev.risks.iter().any(|&r| r > 0.0),
+            "every transition exhausted; adaptive sizing never engaged"
+        );
     }
 }

@@ -3,10 +3,12 @@
 //!
 //! ```text
 //! subppl run <program.vnt> [--infer "<program>"] [--seed N] [--watch a,b]
-//!            [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]
+//!            [--target-risk R] [--threads T] [--chains R]
+//!            [--monitor-every K] [--monitor-gate R]
 //!            [--checkpoint-every K --checkpoint-dir D] [--resume]
 //! subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused]
-//!            [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]
+//!            [--target-risk R] [--threads T] [--chains R]
+//!            [--monitor-every K] [--monitor-gate R]
 //! subppl artifacts                 # list the AOT artifact registry
 //! ```
 //!
@@ -22,6 +24,14 @@
 //! monitored run early once every watched parameter's rank-normalized
 //! R-hat is finite and below R (chains wind down at their next sample
 //! boundary; the final snapshot is still emitted).
+//!
+//! `--target-risk R` (R in (0,1)) switches every `subsampled_mh`
+//! command to risk-adaptive mini-batch control: instead of a fixed
+//! mini-batch size `m`, the controller retunes each transition's batch
+//! toward the largest size whose sequential test can still decide with
+//! per-transition error below R, and the run reports the mean realized
+//! risk.  On `experiment fig4`/`fig9` the same flag adds a
+//! `subsampled-risk{R}` curve/run next to the fixed-eps ones.
 //!
 //! `--checkpoint-every K --checkpoint-dir D` snapshots each chain's
 //! state (stochastic values + RNG position) to `D/chain<c>.ckpt` every
@@ -76,7 +86,7 @@ fn run(args: &[String]) -> Result<(), String> {
         Some("artifacts") => cmd_artifacts(),
         _ => {
             eprintln!(
-                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R] [--checkpoint-every K --checkpoint-dir D] [--resume]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]\n  subppl artifacts"
+                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--target-risk R] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R] [--checkpoint-every K --checkpoint-dir D] [--resume]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused] [--target-risk R] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]\n  subppl artifacts"
             );
             Err("missing or unknown subcommand".into())
         }
@@ -104,6 +114,7 @@ struct ChainReport {
 fn run_one_chain(
     src: &str,
     infer_prog: Option<&str>,
+    target_risk: Option<f64>,
     names: &[String],
     samples: usize,
     pool: Option<Arc<WorkerPool>>,
@@ -119,7 +130,12 @@ fn run_one_chain(
     let mut per_iter = None;
     let mut eval = EvalStats::default();
     if let Some(prog) = infer_prog {
-        let cmd = parse_infer(prog)?;
+        let mut cmd = parse_infer(prog)?;
+        if let Some(tr) = target_risk {
+            // one program-wide risk bound; only subsampled_mh commands
+            // in the inference program are affected
+            cmd.set_target_risk(tr);
+        }
         let mut ev: Box<dyn LocalEvaluator> = match pool {
             Some(p) => Box::new(PlannedEval::with_pool(p)),
             None => Box::new(PlannedEval::new()),
@@ -211,6 +227,19 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         .map(|p| p.split(',').map(|s| s.to_string()).collect())
         .unwrap_or_default();
     let infer_prog = opt(args, "--infer").map(|s| s.to_string());
+    let target_risk: Option<f64> = match opt(args, "--target-risk") {
+        Some(s) => {
+            let v: f64 = s.parse().map_err(|_| "bad --target-risk")?;
+            if !(v > 0.0 && v < 1.0) {
+                return Err("--target-risk must be in (0, 1)".into());
+            }
+            Some(v)
+        }
+        None => None,
+    };
+    if target_risk.is_some() && infer_prog.is_none() {
+        return Err("--target-risk needs --infer (it tunes subsampled_mh mini-batches)".into());
+    }
     let monitor_every: usize = opt(args, "--monitor-every")
         .unwrap_or("0")
         .parse()
@@ -258,6 +287,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 run_one_chain(
                     &src,
                     infer_prog.as_deref(),
+                    target_risk,
                     &names_c,
                     samples,
                     None,
@@ -383,6 +413,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let rep = run_one_chain(
         &src,
         infer_prog.as_deref(),
+        target_risk,
         &names,
         samples,
         pool,
@@ -401,6 +432,11 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 ", recovered: {} worker panic(s), {} requeued shard(s), {} quarantined store group(s)",
                 rep.eval.fallback_panics, rep.eval.requeued_shards, rep.eval.store_quarantined
             );
+        }
+        if let Some(r) = rep.eval.realized_risk() {
+            // mean realized per-transition risk over all sequential-test
+            // decisions; --target-risk guarantees r <= the bound
+            print!(", realized risk {r:.2e}");
         }
         println!();
     }
@@ -457,6 +493,17 @@ fn evaluator_for(args: &[String]) -> Box<dyn LocalEvaluator> {
 fn cmd_experiment(args: &[String]) -> Result<(), String> {
     let which = args.get(1).ok_or("experiment: missing name")?;
     let fast = flag(args, "--fast");
+    // fig4/fig9 only: adds a risk-adaptive mini-batch curve/run
+    let target_risk: Option<f64> = match opt(args, "--target-risk") {
+        Some(s) => {
+            let v: f64 = s.parse().map_err(|_| "bad --target-risk")?;
+            if !(v > 0.0 && v < 1.0) {
+                return Err("--target-risk must be in (0, 1)".into());
+            }
+            Some(v)
+        }
+        None => None,
+    };
     let mut evaluator = evaluator_for(args);
     let outdir = results_dir();
     match which.as_str() {
@@ -511,7 +558,7 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
             println!("wrote {}", outdir.join("fig5_sublinear.csv").display());
         }
         "fig4" => {
-            let cfg = if fast {
+            let mut cfg = if fast {
                 exp::Fig4Config {
                     n_train: 2000,
                     n_test: 500,
@@ -522,6 +569,7 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
             } else {
                 exp::Fig4Config::default()
             };
+            cfg.target_risk = target_risk;
             let curves = exp::fig4_risk(&cfg, evaluator.as_mut());
             let mut t = Table::new(&[
                 "method",
@@ -576,7 +624,7 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
             t.print();
         }
         "fig9" => {
-            let cfg = if fast {
+            let mut cfg = if fast {
                 exp::Fig9Config {
                     series: 30,
                     sweeps: 60,
@@ -585,6 +633,7 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
             } else {
                 exp::Fig9Config::default()
             };
+            cfg.target_risk = target_risk;
             let chains: usize = opt(args, "--chains")
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(1);

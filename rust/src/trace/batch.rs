@@ -74,6 +74,9 @@
 use crate::ppl::prim::Prim;
 use crate::ppl::sp::SpFamily;
 use crate::ppl::value::Value;
+use crate::trace::memread::{
+    prim_always_coerces, BatchOp, ColumnProgram, MemberReader, MemberSink, ScalOperand, VecOperand,
+};
 use crate::trace::node::NodeId;
 use crate::trace::partition::Partition;
 use crate::trace::pet::Trace;
@@ -512,17 +515,6 @@ fn scalar_prim_arity_ok(prim: Prim, n: usize) -> bool {
     }
 }
 
-/// Whitelist prims whose `Prim::apply` coerces *every* argument through
-/// `as_f64` and always produces `Value::Real` — int operands at these
-/// positions replay bitwise-identically from an f64 column.  `Add`,
-/// `Mul`, unary `Sub`/`Neg`, and binary `Sub` are excluded: they
-/// preserve int-ness when all arguments are ints, so they coerce only
-/// when a guaranteed-`Real` sibling rules that branch out.
-fn prim_always_coerces(prim: Prim) -> bool {
-    use Prim::*;
-    matches!(prim, Min | Max | Div | Pow | Exp | Log | Sqrt | Abs | Sigmoid)
-}
-
 /// Lower a template plan to the shared f64 column program, or `None`
 /// when the shape is not (provably) f64-clean — the group then scores
 /// per section through the scalar `ScorerArena` path.
@@ -883,45 +875,45 @@ pub fn build_batch_plans(trace: &Trace, p: &Partition) -> BatchPlanSet {
 // The packed batch: pack (trace reads) + replay (pure f64 kernel)
 // ---------------------------------------------------------------------
 
-/// Scalar operand of a packed op: global reads are resolved to
-/// batch-shared constants at pack time.
-#[derive(Clone, Copy, Debug)]
-enum PScal {
-    /// f64 register written by an earlier packed op.
-    Slot(u32),
-    /// Per-section scalar binding column.
-    Bind(u32),
-    /// Batch-shared constant (resolved global or folded value).
-    Const(f64),
-}
-
-/// Vector operand of a packed dot: a per-section binding column or a
-/// batch-shared (global) vector.
-#[derive(Clone, Copy, Debug)]
-enum PVec {
-    Bind(u32),
-    Shared(u32),
-}
-
-/// One packed op.  `CopyV` is resolved away at pack time (vector values
-/// are immutable, so vector registers are just aliases), leaving only
-/// scalar work for the kernel.
-#[derive(Clone, Debug)]
-enum POp {
-    /// `s[out][j] = prim(args...)`; args at `(offset, len)` in the pool.
-    Map { prim: Prim, out: u32, args: (u32, u32) },
-    Dot { sigmoid: bool, out: u32, a: PVec, b: PVec },
-    CopyS { out: u32, from: PScal },
-}
-
 #[derive(Clone, Debug)]
 struct PAbsorb {
     fam: SpFamily,
-    /// Candidate-side args at `(offset, len)` in the operand pool.
+    /// Candidate-side args at `(offset, len)` in the program's pool.
     args: (u32, u32),
     /// Offset of the committed-arg block in `ab_cargs` (`len * w`
     /// floats, arg-major).
     cargs: u32,
+}
+
+/// Sel-order destination for the shared member reader: member `m`'s row
+/// lands in column `j` of a `w = |sel|`-wide batch.  Buffers are
+/// pre-sized, so placement is pure positioned writes.
+struct PackSink<'a> {
+    j: usize,
+    w: usize,
+    sbind: &'a mut [f64],
+    vbind: &'a mut [f64],
+    vcols: &'a [(u32, u32)],
+    ab_vals: &'a mut [f64],
+    ab_cargs: &'a mut [f64],
+    absorbers: &'a [PAbsorb],
+}
+
+impl MemberSink for PackSink<'_> {
+    fn scalar(&mut self, b: usize, x: f64) {
+        self.sbind[b * self.w + self.j] = x;
+    }
+    fn vector(&mut self, b: usize, ar: usize, xs: &[f64]) {
+        let off = self.vcols[b].0 as usize + self.j * ar;
+        self.vbind[off..off + ar].copy_from_slice(xs);
+    }
+    fn absorb_val(&mut self, bi: usize, x: f64) {
+        self.ab_vals[bi * self.w + self.j] = x;
+    }
+    fn absorb_carg(&mut self, bi: usize, ai: usize, x: f64) {
+        let coff = self.absorbers[bi].cargs as usize;
+        self.ab_cargs[coff + ai * self.w + self.j] = x;
+    }
 }
 
 /// A fully packed mini-batch: every trace/global read resolved into
@@ -933,10 +925,9 @@ struct PAbsorb {
 #[derive(Default, Debug)]
 pub struct PackedBatch {
     w: usize,
-    n_sregs: u32,
-    ops: Vec<POp>,
-    /// Shared operand pool for `Map` args and absorber candidate args.
-    args: Vec<PScal>,
+    /// The candidate-resolved column program (ops, operand pool, shared
+    /// vectors) — built by the shared resolution core in `memread`.
+    prog: ColumnProgram,
     absorbers: Vec<PAbsorb>,
     /// Scalar binding columns, column-major (`b * w + j`).
     sbind: Vec<f64>,
@@ -944,37 +935,11 @@ pub struct PackedBatch {
     /// arity `vcols[b].1` starting at `vcols[b].0`.
     vbind: Vec<f64>,
     vcols: Vec<(u32, u32)>,
-    /// Batch-shared vectors (resolved vector globals), `(offset, len)`.
-    shared: Vec<f64>,
-    scols: Vec<(u32, u32)>,
     /// Absorber values, column-major (`bi * w + j`); Bernoulli values
     /// encoded 1.0/0.0.
     ab_vals: Vec<f64>,
     /// Committed absorber args, per-absorber arg-major blocks.
     ab_cargs: Vec<f64>,
-    /// Pack-time scratch: vector-register -> resolved source.
-    vsrc: Vec<Option<PVec>>,
-}
-
-/// Resolve a scalar operand against the batch's candidate globals.
-fn pscal(a: ColS, globals: &[Value]) -> Result<PScal, String> {
-    Ok(match a {
-        ColS::Slot(r) => PScal::Slot(r),
-        ColS::Bind(b) => PScal::Bind(b),
-        ColS::Global(k) => match globals.get(k as usize) {
-            Some(Value::Real(x)) => PScal::Const(*x),
-            v => {
-                return Err(format!(
-                    "batch pack: global {k} is not a real ({})",
-                    v.map_or("missing", |v| v.type_name())
-                ))
-            }
-        },
-        ColS::GlobalNum(k) => match globals.get(k as usize).and_then(|v| v.as_f64()) {
-            Some(x) => PScal::Const(x),
-            None => return Err(format!("batch pack: global {k} is not numeric")),
-        },
-    })
 }
 
 impl PackedBatch {
@@ -1007,10 +972,10 @@ impl PackedBatch {
     /// the interpreter oracle exactly, including its error/`-inf`
     /// behavior).
     ///
-    /// KEEP IN SYNC with the column store's member reads
-    /// (`colstore.rs::GroupPanels::refresh_member`) and operand
-    /// resolution (`gscal_resolve`/`vec_operand`): the store path must
-    /// stay this function's bitwise twin, rule for rule.
+    /// Member reads and operand resolution both go through the shared
+    /// core in `trace/memread` — the column store's row refresh calls
+    /// the *same* [`MemberReader`], so the pack/store bitwise-twin
+    /// contract holds by construction, not by mirrored edits.
     pub fn pack_into(
         &mut self,
         trace: &Trace,
@@ -1021,222 +986,76 @@ impl PackedBatch {
         let cols = &group.cols;
         let w = sel.len();
         self.w = w;
-        self.n_sregs = cols.n_sregs;
-        self.ops.clear();
-        self.args.clear();
         self.absorbers.clear();
         self.sbind.clear();
         self.vbind.clear();
         self.vcols.clear();
-        self.shared.clear();
-        self.scols.clear();
         self.ab_vals.clear();
         self.ab_cargs.clear();
-        self.vsrc.clear();
-        self.vsrc.resize(cols.n_vregs as usize, None);
         if w == 0 {
+            // nothing to replay; the program is left unresolved on
+            // purpose (the old path skipped op resolution too)
+            self.prog = ColumnProgram::default();
             return Ok(());
         }
 
-        // --- per-section scalar binding columns ---
-        let nsb = cols.n_sbind as usize;
-        self.sbind.resize(nsb * w, 0.0);
-        for b in 0..nsb {
-            for (j, &(m, _)) in sel.iter().enumerate() {
-                self.sbind[b * w + j] = match &group.sbinds[m as usize * nsb + b] {
-                    SBind::Const(x) => *x,
-                    SBind::Node(id) => match trace.value(*id) {
-                        Value::Real(x) => *x,
-                        v => {
-                            return Err(format!(
-                                "batch pack: scalar binding is {} not real",
-                                v.type_name()
-                            ))
-                        }
-                    },
-                    SBind::NodeNum(id) => {
-                        let v = trace.value(*id);
-                        v.as_f64().ok_or_else(|| {
-                            format!(
-                                "batch pack: numeric binding is {} not coercible",
-                                v.type_name()
-                            )
-                        })?
-                    }
-                };
-            }
-        }
+        // --- candidate side: the shared op/operand resolution ---
+        self.prog.resolve("batch pack", cols, globals)?;
 
-        // --- per-section vector binding columns (flattened copies) ---
-        let nvb = cols.n_vbind as usize;
-        for b in 0..nvb {
-            let ar = cols.varities[b] as usize;
-            let off = self.vbind.len() as u32;
-            self.vcols.push((off, ar as u32));
-            for &(m, _) in sel {
-                match &group.vbinds[m as usize * nvb + b] {
-                    // const arities were verified against the template
-                    // at group build and cannot change
-                    VBind::Const(v) => self.vbind.extend_from_slice(v.as_slice()),
-                    VBind::Node(id) => match trace.value(*id) {
-                        Value::Vector(v) if v.len() == ar => {
-                            self.vbind.extend_from_slice(v.as_slice())
-                        }
-                        Value::Vector(v) => {
-                            return Err(format!(
-                                "batch pack: vector binding length {} != {ar}",
-                                v.len()
-                            ))
-                        }
-                        v => {
-                            return Err(format!(
-                                "batch pack: vector binding is {} not vector",
-                                v.type_name()
-                            ))
-                        }
-                    },
-                }
-            }
+        // --- pre-size the committed-side panels (sel-width columns) ---
+        self.sbind.resize(cols.n_sbind as usize * w, 0.0);
+        let mut voff = 0u32;
+        for &ar in &cols.varities {
+            self.vcols.push((voff, ar));
+            voff += ar * w as u32;
         }
-
-        // --- ops: resolve globals and alias vector registers away ---
-        for op in &cols.ops {
-            match op {
-                ColOp::Map { prim, out, args } => {
-                    let off = self.args.len() as u32;
-                    for &a in args {
-                        let p = pscal(a, globals)?;
-                        self.args.push(p);
-                    }
-                    self.ops.push(POp::Map {
-                        prim: *prim,
-                        out: *out,
-                        args: (off, args.len() as u32),
-                    });
-                }
-                ColOp::Dot { sigmoid, out, a, b } => {
-                    let pa = self.vec_operand(*a, globals)?;
-                    let pb = self.vec_operand(*b, globals)?;
-                    let (la, lb) = (self.pvec_len(pa), self.pvec_len(pb));
-                    if la != lb {
-                        return Err(format!(
-                            "batch pack: dot length mismatch {la} vs {lb}"
-                        ));
-                    }
-                    self.ops.push(POp::Dot {
-                        sigmoid: *sigmoid,
-                        out: *out,
-                        a: pa,
-                        b: pb,
-                    });
-                }
-                ColOp::CopyS { out, from } => {
-                    let f = pscal(*from, globals)?;
-                    self.ops.push(POp::CopyS { out: *out, from: f });
-                }
-                ColOp::CopyV { out, from } => {
-                    let v = self.vec_operand(*from, globals)?;
-                    self.vsrc[*out as usize] = Some(v);
-                }
-            }
+        self.vbind.resize(voff as usize, 0.0);
+        self.ab_vals.resize(cols.absorbers.len() * w, 0.0);
+        let mut coff = 0u32;
+        for &(fam, args) in &self.prog.absorbers {
+            self.absorbers.push(PAbsorb { fam, args, cargs: coff });
+            coff += args.1 * w as u32;
         }
+        self.ab_cargs.resize(coff as usize, 0.0);
 
-        // --- absorbers: values + committed args, prefetched ---
-        let nab = cols.absorbers.len();
-        self.ab_vals.resize(nab * w, 0.0);
-        for (bi, ab) in cols.absorbers.iter().enumerate() {
-            let off = self.args.len() as u32;
-            for &a in &ab.cand {
-                let p = pscal(a, globals)?;
-                self.args.push(p);
-            }
-            let n_args = ab.cand.len();
-            let coff = self.ab_cargs.len() as u32;
-            self.ab_cargs.resize(coff as usize + n_args * w, 0.0);
-            for (j, &(m, _)) in sel.iter().enumerate() {
-                let node = trace.node(group.absorbers[m as usize * nab + bi]);
-                if node.args.len() != n_args {
-                    return Err("batch pack: absorber arity changed".into());
-                }
-                self.ab_vals[bi * w + j] = match ab.fam {
-                    SpFamily::Bernoulli => match node.value.as_bool() {
-                        Some(b) => b as u8 as f64,
-                        None => {
-                            return Err("batch pack: bernoulli value is not a bool".into())
-                        }
-                    },
-                    _ => node.value.as_f64().ok_or_else(|| {
-                        format!(
-                            "batch pack: absorber value is not numeric ({})",
-                            node.value.type_name()
-                        )
-                    })?,
-                };
-                // committed side: the same as_f64-or-NaN coercion
-                // SpFamily::logpdf applies
-                for (ai, arg) in node.args.iter().enumerate() {
-                    self.ab_cargs[coff as usize + ai * w + j] =
-                        trace.arg_value(arg).as_f64().unwrap_or(f64::NAN);
-                }
-            }
-            self.absorbers.push(PAbsorb {
-                fam: ab.fam,
-                args: (off, n_args as u32),
-                cargs: coff,
-            });
+        // --- committed side: every member through the shared reader ---
+        let reader = MemberReader::new(trace, "batch pack");
+        for (j, &(m, _)) in sel.iter().enumerate() {
+            let mut sink = PackSink {
+                j,
+                w,
+                sbind: &mut self.sbind,
+                vbind: &mut self.vbind,
+                vcols: &self.vcols,
+                ab_vals: &mut self.ab_vals,
+                ab_cargs: &mut self.ab_cargs,
+                absorbers: &self.absorbers,
+            };
+            reader.read_member(group, m as usize, &mut sink)?;
         }
         Ok(())
     }
 
-    fn vec_operand(&mut self, a: ColV, globals: &[Value]) -> Result<PVec, String> {
-        Ok(match a {
-            ColV::Bind(b) => PVec::Bind(b),
-            ColV::Slot(r) => self.vsrc[r as usize]
-                .ok_or("batch pack: uninitialized vector register")?,
-            ColV::Global(k) => match globals.get(k as usize) {
-                Some(Value::Vector(v)) => {
-                    let off = self.shared.len() as u32;
-                    self.shared.extend_from_slice(v.as_slice());
-                    self.scols.push((off, v.len() as u32));
-                    PVec::Shared((self.scols.len() - 1) as u32)
-                }
-                v => {
-                    return Err(format!(
-                        "batch pack: global {k} is not a vector ({})",
-                        v.map_or("missing", |v| v.type_name())
-                    ))
-                }
-            },
-        })
-    }
-
-    fn pvec_len(&self, a: PVec) -> usize {
+    #[inline]
+    fn scal(&self, a: ScalOperand, sregs: &[f64], ws: usize, jj: usize, j: usize) -> f64 {
         match a {
-            PVec::Bind(b) => self.vcols[b as usize].1 as usize,
-            PVec::Shared(s) => self.scols[s as usize].1 as usize,
+            ScalOperand::Slot(r) => sregs[r as usize * ws + jj],
+            ScalOperand::Bind(b) => self.sbind[b as usize * self.w + j],
+            ScalOperand::Const(c) => c,
         }
     }
 
     #[inline]
-    fn scal(&self, a: PScal, sregs: &[f64], ws: usize, jj: usize, j: usize) -> f64 {
+    fn vec_at(&self, a: VecOperand, j: usize) -> &[f64] {
         match a {
-            PScal::Slot(r) => sregs[r as usize * ws + jj],
-            PScal::Bind(b) => self.sbind[b as usize * self.w + j],
-            PScal::Const(c) => c,
-        }
-    }
-
-    #[inline]
-    fn vec_at(&self, a: PVec, j: usize) -> &[f64] {
-        match a {
-            PVec::Bind(b) => {
+            VecOperand::Bind(b) => {
                 let (off, ar) = self.vcols[b as usize];
                 let (off, ar) = (off as usize, ar as usize);
                 &self.vbind[off + j * ar..off + (j + 1) * ar]
             }
-            PVec::Shared(s) => {
-                let (off, len) = self.scols[s as usize];
-                &self.shared[off as usize..(off + len) as usize]
+            VecOperand::Shared(s) => {
+                let (off, len) = self.prog.scols[s as usize];
+                &self.prog.shared[off as usize..(off + len) as usize]
             }
         }
     }
@@ -1258,12 +1077,12 @@ impl PackedBatch {
             return;
         }
         sregs.clear();
-        sregs.resize(self.n_sregs as usize * ws, 0.0);
-        for op in &self.ops {
+        sregs.resize(self.prog.n_sregs as usize * ws, 0.0);
+        for op in &self.prog.ops {
             match op {
-                POp::Map { prim, out: o, args } => {
+                BatchOp::Map { prim, out: o, args } => {
                     use Prim::*;
-                    let argv = &self.args[args.0 as usize..(args.0 + args.1) as usize];
+                    let argv = &self.prog.args[args.0 as usize..(args.0 + args.1) as usize];
                     for j in lo..hi {
                         let jj = j - lo;
                         let a0 = self.scal(argv[0], sregs, ws, jj, j);
@@ -1304,7 +1123,7 @@ impl PackedBatch {
                         sregs[*o as usize * ws + jj] = r;
                     }
                 }
-                POp::Dot { sigmoid, out: o, a, b } => {
+                BatchOp::Dot { sigmoid, out: o, a, b } => {
                     for j in lo..hi {
                         let av = self.vec_at(*a, j);
                         let bv = self.vec_at(*b, j);
@@ -1318,7 +1137,7 @@ impl PackedBatch {
                             if *sigmoid { 1.0 / (1.0 + (-d).exp()) } else { d };
                     }
                 }
-                POp::CopyS { out: o, from } => {
+                BatchOp::CopyS { out: o, from } => {
                     for j in lo..hi {
                         let jj = j - lo;
                         let x = self.scal(*from, sregs, ws, jj, j);
@@ -1331,7 +1150,7 @@ impl PackedBatch {
         // --- absorbers: l[j] += cand - committed, in absorber order ---
         let sr: &[f64] = sregs;
         for (bi, ab) in self.absorbers.iter().enumerate() {
-            let argv = &self.args[ab.args.0 as usize..(ab.args.0 + ab.args.1) as usize];
+            let argv = &self.prog.args[ab.args.0 as usize..(ab.args.0 + ab.args.1) as usize];
             let n_args = argv.len();
             let coff = ab.cargs as usize;
             for j in lo..hi {

@@ -40,6 +40,16 @@
 //! proposal-dependent and never cached here: [`PanelBatch::build_into`]
 //! re-resolves it per mini-batch in O(#ops + #globals).
 //!
+//! # One reader, two layouts
+//!
+//! Row refreshes and candidate resolution both run through the shared
+//! core in `trace/memread`: the *same* `MemberReader` and
+//! `ColumnProgram` that `PackedBatch::pack_into` uses, parameterized
+//! only by destination layout (full-width member slot here, sel-ordered
+//! column there).  The store is therefore the pack path's bitwise twin
+//! *by construction* — there is no second copy of the read, check, or
+//! coercion rules to drift.
+//!
 //! # Lane-blocked replay
 //!
 //! The gather stage writes *lane-major panels*: blocks of
@@ -92,10 +102,10 @@
 //!   silent.
 
 use crate::ppl::prim::Prim;
-use crate::ppl::sp::SpFamily;
 use crate::ppl::value::Value;
-use crate::trace::batch::{
-    packed_fam_logpdf, BatchGroup, BatchPlanSet, ColOp, ColS, ColV, SBind, VBind,
+use crate::trace::batch::{packed_fam_logpdf, BatchGroup, BatchPlanSet};
+use crate::trace::memread::{
+    BatchOp, ColumnProgram, MemberReader, MemberSink, ScalOperand, VecOperand,
 };
 use crate::trace::pet::Trace;
 use std::cell::RefCell;
@@ -183,6 +193,37 @@ pub struct GroupPanels {
     ab_cols: Vec<(u32, u32)>,
 }
 
+/// Full-width destination for the shared member reader: member `m`'s
+/// row lands at slot `m` of each group-width panel — the only way this
+/// path differs from `PackedBatch`'s sel-ordered [`MemberSink`].
+struct StoreSink<'a> {
+    m: usize,
+    w: usize,
+    sbind: &'a mut [f64],
+    vbind: &'a mut [f64],
+    vcols: &'a [(u32, u32)],
+    ab_vals: &'a mut [f64],
+    ab_cargs: &'a mut [f64],
+    ab_cols: &'a [(u32, u32)],
+}
+
+impl MemberSink for StoreSink<'_> {
+    fn scalar(&mut self, b: usize, x: f64) {
+        self.sbind[b * self.w + self.m] = x;
+    }
+    fn vector(&mut self, b: usize, ar: usize, xs: &[f64]) {
+        let dst = self.vcols[b].0 as usize + self.m * ar;
+        self.vbind[dst..dst + ar].copy_from_slice(xs);
+    }
+    fn absorb_val(&mut self, bi: usize, x: f64) {
+        self.ab_vals[bi * self.w + self.m] = x;
+    }
+    fn absorb_carg(&mut self, bi: usize, ai: usize, x: f64) {
+        let coff = self.ab_cols[bi].0 as usize;
+        self.ab_cargs[coff + ai * self.w + self.m] = x;
+    }
+}
+
 impl GroupPanels {
     fn new(group: &BatchGroup) -> GroupPanels {
         let w = group.len();
@@ -212,100 +253,31 @@ impl GroupPanels {
     }
 
     /// Re-read every committed-side entry of member `m` from the trace
-    /// — the same reads, type checks, and coercions
-    /// `PackedBatch::pack_into` performs, so a successful refresh is
-    /// bitwise-equivalent to a fresh pack of that member.  The caller
-    /// must have freshened the member's touch list first.  `Err` means
-    /// the member no longer fits its group's shape (a runtime type
-    /// change); the caller falls back exactly like a pack failure.
-    ///
-    /// KEEP IN SYNC with `pack_into`'s member reads (`trace/batch.rs`):
-    /// any new binding kind or coercion rule added there must be
-    /// mirrored here, or the store silently stops being the pack path's
-    /// bitwise twin — the differential suite (store rung, both
-    /// `SUBPPL_COLSTORE` settings in CI) is the enforcement.
+    /// through the *same* [`MemberReader`] `PackedBatch::pack_into`
+    /// uses — the refresh is bitwise-equivalent to a fresh pack of that
+    /// member by construction (one read/check/coercion implementation,
+    /// two destination layouts).  The caller must have freshened the
+    /// member's touch list first.  `Err` means the member no longer
+    /// fits its group's shape (a runtime type change); the caller falls
+    /// back exactly like a pack failure.
     fn refresh_member(
         &mut self,
         trace: &Trace,
         group: &BatchGroup,
         m: usize,
     ) -> Result<(), String> {
-        let w = self.w;
-        let nsb = self.n_sbind;
-        for b in 0..nsb {
-            self.sbind[b * w + m] = match &group.sbinds[m * nsb + b] {
-                SBind::Const(x) => *x,
-                SBind::Node(id) => match trace.value(*id) {
-                    Value::Real(x) => *x,
-                    v => {
-                        return Err(format!(
-                            "colstore: scalar binding is {} not real",
-                            v.type_name()
-                        ))
-                    }
-                },
-                SBind::NodeNum(id) => {
-                    let v = trace.value(*id);
-                    v.as_f64().ok_or_else(|| {
-                        format!("colstore: numeric binding is {} not coercible", v.type_name())
-                    })?
-                }
-            };
-        }
-        let nvb = group.cols.n_vbind as usize;
-        for (b, &(off, ar)) in self.vcols.iter().enumerate() {
-            let ar = ar as usize;
-            let dst = off as usize + m * ar;
-            match &group.vbinds[m * nvb + b] {
-                // const arities were verified against the template at
-                // group build and cannot change
-                VBind::Const(v) => self.vbind[dst..dst + ar].copy_from_slice(v.as_slice()),
-                VBind::Node(id) => match trace.value(*id) {
-                    Value::Vector(v) if v.len() == ar => {
-                        self.vbind[dst..dst + ar].copy_from_slice(v.as_slice())
-                    }
-                    Value::Vector(v) => {
-                        return Err(format!(
-                            "colstore: vector binding length {} != {ar}",
-                            v.len()
-                        ))
-                    }
-                    v => {
-                        return Err(format!(
-                            "colstore: vector binding is {} not vector",
-                            v.type_name()
-                        ))
-                    }
-                },
-            }
-        }
-        let nab = group.cols.absorbers.len();
-        for (bi, ab) in group.cols.absorbers.iter().enumerate() {
-            let node = trace.node(group.absorbers[m * nab + bi]);
-            let (coff, n_args) = self.ab_cols[bi];
-            if node.args.len() != n_args as usize {
-                return Err("colstore: absorber arity changed".into());
-            }
-            self.ab_vals[bi * w + m] = match ab.fam {
-                SpFamily::Bernoulli => match node.value.as_bool() {
-                    Some(b) => b as u8 as f64,
-                    None => return Err("colstore: bernoulli value is not a bool".into()),
-                },
-                _ => node.value.as_f64().ok_or_else(|| {
-                    format!(
-                        "colstore: absorber value is not numeric ({})",
-                        node.value.type_name()
-                    )
-                })?,
-            };
-            // committed side: the same as_f64-or-NaN coercion
-            // SpFamily::logpdf (and pack_into) apply
-            for (ai, arg) in node.args.iter().enumerate() {
-                self.ab_cargs[coff as usize + ai * w + m] =
-                    trace.arg_value(arg).as_f64().unwrap_or(f64::NAN);
-            }
-        }
-        Ok(())
+        let reader = MemberReader::new(trace, "colstore");
+        let mut sink = StoreSink {
+            m,
+            w: self.w,
+            sbind: &mut self.sbind,
+            vbind: &mut self.vbind,
+            vcols: &self.vcols,
+            ab_vals: &mut self.ab_vals,
+            ab_cargs: &mut self.ab_cargs,
+            ab_cols: &self.ab_cols,
+        };
+        reader.read_member(group, m, &mut sink)
     }
 
     /// FNV-1a hash of member `m`'s full row — every scalar binding,
@@ -505,88 +477,23 @@ pub fn ensure_group_members(
 // The panel batch: candidate resolution + lane-blocked replay
 // ---------------------------------------------------------------------
 
-/// Scalar operand of a panel op (the gathered analogue of the packed
-/// kernel's operands: globals are resolved to batch-shared constants at
-/// build time).
-#[derive(Clone, Copy, Debug)]
-enum GScal {
-    /// f64 lane register written by an earlier op.
-    Slot(u32),
-    /// Per-section scalar binding column (gathered from the store).
-    Bind(u32),
-    /// Batch-shared constant (resolved candidate global).
-    Const(f64),
-}
-
-/// Vector operand of a panel dot.
-#[derive(Clone, Copy, Debug)]
-enum GVec {
-    /// Store vector-binding column, gathered into a lane-major panel.
-    Bind(u32),
-    /// Batch-shared vector (resolved candidate global), broadcast
-    /// across lanes.
-    Shared(u32),
-}
-
-#[derive(Clone, Debug)]
-enum GOp {
-    /// `s[out][l] = prim(args...)`; args at `(offset, len)` in the pool.
-    Map { prim: Prim, out: u32, args: (u32, u32) },
-    Dot { sigmoid: bool, out: u32, a: GVec, b: GVec },
-    CopyS { out: u32, from: GScal },
-}
-
-#[derive(Clone, Debug)]
-struct GAbsorb {
-    fam: SpFamily,
-    /// Candidate-side args at `(offset, len)` in the operand pool; the
-    /// committed side reads the store's `ab_cargs` panel.
-    args: (u32, u32),
-}
-
 /// A gathered mini-batch over the shared store: the candidate-resolved
-/// op list plus the member selection.  No full-width data is copied at
-/// build time — `replay_range` gathers lane panels per block straight
-/// from the `Arc`'d store, so shards gather their own panels and the
-/// single-threaded stage is O(#ops + #globals + |sel|).  Plain data +
-/// `Arc` throughout: `Send + Sync` for the worker pool.
+/// column program plus the member selection.  No full-width data is
+/// copied at build time — `replay_range` gathers lane panels per block
+/// straight from the `Arc`'d store, so shards gather their own panels
+/// and the single-threaded stage is O(#ops + #globals + |sel|).  Plain
+/// data + `Arc` throughout: `Send + Sync` for the worker pool.
+///
+/// The program is the *same* [`ColumnProgram`] resolution the packed
+/// kernel runs ("panel build" only tags its error diagnostics), so the
+/// candidate side cannot drift from the pack path either.
 #[derive(Debug, Default)]
 pub struct PanelBatch {
     panels: Option<Arc<GroupPanels>>,
     /// Member index per output position.
     sel: Vec<u32>,
-    n_sregs: u32,
-    ops: Vec<GOp>,
-    /// Shared operand pool for `Map` args and absorber candidate args.
-    args: Vec<GScal>,
-    absorbers: Vec<GAbsorb>,
-    /// Batch-shared vectors (resolved vector globals), `(offset, len)`.
-    shared: Vec<f64>,
-    scols: Vec<(u32, u32)>,
-    /// Build-time scratch: vector-register -> resolved source.
-    vsrc: Vec<Option<GVec>>,
-}
-
-/// Resolve a scalar operand against the batch's candidate globals
-/// (mirrors the packed kernel's resolution bit-for-bit).
-fn gscal_resolve(a: ColS, globals: &[Value]) -> Result<GScal, String> {
-    Ok(match a {
-        ColS::Slot(r) => GScal::Slot(r),
-        ColS::Bind(b) => GScal::Bind(b),
-        ColS::Global(k) => match globals.get(k as usize) {
-            Some(Value::Real(x)) => GScal::Const(*x),
-            v => {
-                return Err(format!(
-                    "panel build: global {k} is not a real ({})",
-                    v.map_or("missing", |v| v.type_name())
-                ))
-            }
-        },
-        ColS::GlobalNum(k) => match globals.get(k as usize).and_then(|v| v.as_f64()) {
-            Some(x) => GScal::Const(x),
-            None => return Err(format!("panel build: global {k} is not numeric")),
-        },
-    })
+    /// The candidate-resolved column program (shared resolution core).
+    prog: ColumnProgram,
 }
 
 impl PanelBatch {
@@ -615,110 +522,18 @@ impl PanelBatch {
         sel: &[(u32, u32)],
         globals: &[Value],
     ) -> Result<(), String> {
-        let cols = &group.cols;
         self.panels = Some(panels.clone());
         self.sel.clear();
         self.sel.extend(sel.iter().map(|&(m, _)| m));
-        self.n_sregs = cols.n_sregs;
-        self.ops.clear();
-        self.args.clear();
-        self.absorbers.clear();
-        self.shared.clear();
-        self.scols.clear();
-        self.vsrc.clear();
-        self.vsrc.resize(cols.n_vregs as usize, None);
-        for op in &cols.ops {
-            match op {
-                ColOp::Map { prim, out, args } => {
-                    let off = self.args.len() as u32;
-                    for &a in args {
-                        let g = gscal_resolve(a, globals)?;
-                        self.args.push(g);
-                    }
-                    self.ops.push(GOp::Map {
-                        prim: *prim,
-                        out: *out,
-                        args: (off, args.len() as u32),
-                    });
-                }
-                ColOp::Dot { sigmoid, out, a, b } => {
-                    let ga = self.vec_operand(*a, globals)?;
-                    let gb = self.vec_operand(*b, globals)?;
-                    let (la, lb) = (self.gvec_len(ga), self.gvec_len(gb));
-                    if la != lb {
-                        return Err(format!("panel build: dot length mismatch {la} vs {lb}"));
-                    }
-                    self.ops.push(GOp::Dot {
-                        sigmoid: *sigmoid,
-                        out: *out,
-                        a: ga,
-                        b: gb,
-                    });
-                }
-                ColOp::CopyS { out, from } => {
-                    let f = gscal_resolve(*from, globals)?;
-                    self.ops.push(GOp::CopyS { out: *out, from: f });
-                }
-                ColOp::CopyV { out, from } => {
-                    let v = self.vec_operand(*from, globals)?;
-                    self.vsrc[*out as usize] = Some(v);
-                }
-            }
-        }
-        for ab in &cols.absorbers {
-            let off = self.args.len() as u32;
-            for &a in &ab.cand {
-                let g = gscal_resolve(a, globals)?;
-                self.args.push(g);
-            }
-            self.absorbers.push(GAbsorb {
-                fam: ab.fam,
-                args: (off, ab.cand.len() as u32),
-            });
-        }
-        Ok(())
-    }
-
-    fn vec_operand(&mut self, a: ColV, globals: &[Value]) -> Result<GVec, String> {
-        Ok(match a {
-            ColV::Bind(b) => GVec::Bind(b),
-            ColV::Slot(r) => self.vsrc[r as usize]
-                .ok_or("panel build: uninitialized vector register")?,
-            ColV::Global(k) => match globals.get(k as usize) {
-                Some(Value::Vector(v)) => {
-                    let off = self.shared.len() as u32;
-                    self.shared.extend_from_slice(v.as_slice());
-                    self.scols.push((off, v.len() as u32));
-                    GVec::Shared((self.scols.len() - 1) as u32)
-                }
-                v => {
-                    return Err(format!(
-                        "panel build: global {k} is not a vector ({})",
-                        v.map_or("missing", |v| v.type_name())
-                    ))
-                }
-            },
-        })
-    }
-
-    fn gvec_len(&self, a: GVec) -> usize {
-        match a {
-            GVec::Bind(b) => {
-                // invariant: only called from replay_range, which
-                // unwraps `panels` first — build_into sets it before
-                // any replay can be reached
-                self.panels.as_ref().expect("panel batch built").vcols[b as usize].1 as usize
-            }
-            GVec::Shared(s) => self.scols[s as usize].1 as usize,
-        }
+        self.prog.resolve("panel build", &group.cols, globals)
     }
 
     #[inline]
-    fn gscal(&self, a: GScal, sregs: &[f64], sb: &[f64], l: usize) -> f64 {
+    fn gscal(&self, a: ScalOperand, sregs: &[f64], sb: &[f64], l: usize) -> f64 {
         match a {
-            GScal::Slot(r) => sregs[r as usize * LANES + l],
-            GScal::Bind(b) => sb[b as usize * LANES + l],
-            GScal::Const(c) => c,
+            ScalOperand::Slot(r) => sregs[r as usize * LANES + l],
+            ScalOperand::Bind(b) => sb[b as usize * LANES + l],
+            ScalOperand::Const(c) => c,
         }
     }
 
@@ -788,11 +603,11 @@ impl PanelBatch {
                 }
             }
             // --- ops: fixed-width lane loops over the panels ---
-            for op in &self.ops {
+            for op in &self.prog.ops {
                 match op {
-                    GOp::Map { prim, out: o, args } => {
+                    BatchOp::Map { prim, out: o, args } => {
                         use Prim::*;
-                        let argv = &self.args[args.0 as usize..(args.0 + args.1) as usize];
+                        let argv = &self.prog.args[args.0 as usize..(args.0 + args.1) as usize];
                         for l in 0..LANES {
                             let a0 = self.gscal(argv[0], &scr.sregs, &scr.sb, l);
                             let r = match prim {
@@ -832,13 +647,13 @@ impl PanelBatch {
                             scr.sregs[*o as usize * LANES + l] = r;
                         }
                     }
-                    GOp::Dot { sigmoid, out: o, a, b } => {
+                    BatchOp::Dot { sigmoid, out: o, a, b } => {
                         // each lane owns its own sequential reduction in
                         // element order — the same accumulation order as
                         // the scalar kernel and Prim::apply, lane by lane
                         let mut acc = [0.0f64; LANES];
                         match (*a, *b) {
-                            (GVec::Bind(ba), GVec::Bind(bb)) => {
+                            (VecOperand::Bind(ba), VecOperand::Bind(bb)) => {
                                 let ar = panels.vcols[ba as usize].1 as usize;
                                 let xa = &scr.vb[scr.vboff[ba as usize] as usize..];
                                 let xb = &scr.vb[scr.vboff[bb as usize] as usize..];
@@ -848,9 +663,9 @@ impl PanelBatch {
                                     }
                                 }
                             }
-                            (GVec::Bind(ba), GVec::Shared(s)) => {
-                                let (off, len) = self.scols[s as usize];
-                                let y = &self.shared[off as usize..(off + len) as usize];
+                            (VecOperand::Bind(ba), VecOperand::Shared(s)) => {
+                                let (off, len) = self.prog.scols[s as usize];
+                                let y = &self.prog.shared[off as usize..(off + len) as usize];
                                 let x = &scr.vb[scr.vboff[ba as usize] as usize..];
                                 for (k, &yk) in y.iter().enumerate() {
                                     for l in 0..LANES {
@@ -858,9 +673,9 @@ impl PanelBatch {
                                     }
                                 }
                             }
-                            (GVec::Shared(s), GVec::Bind(bb)) => {
-                                let (off, len) = self.scols[s as usize];
-                                let x = &self.shared[off as usize..(off + len) as usize];
+                            (VecOperand::Shared(s), VecOperand::Bind(bb)) => {
+                                let (off, len) = self.prog.scols[s as usize];
+                                let x = &self.prog.shared[off as usize..(off + len) as usize];
                                 let y = &scr.vb[scr.vboff[bb as usize] as usize..];
                                 for (k, &xk) in x.iter().enumerate() {
                                     for l in 0..LANES {
@@ -868,14 +683,14 @@ impl PanelBatch {
                                     }
                                 }
                             }
-                            (GVec::Shared(sa), GVec::Shared(sb2)) => {
+                            (VecOperand::Shared(sa), VecOperand::Shared(sb2)) => {
                                 // batch-shared on both sides: one scalar
                                 // reduction (same op sequence every lane
                                 // would run), broadcast to the block
-                                let (oa, la) = self.scols[sa as usize];
-                                let (ob, lb) = self.scols[sb2 as usize];
-                                let x = &self.shared[oa as usize..(oa + la) as usize];
-                                let y = &self.shared[ob as usize..(ob + lb) as usize];
+                                let (oa, la) = self.prog.scols[sa as usize];
+                                let (ob, lb) = self.prog.scols[sb2 as usize];
+                                let x = &self.prog.shared[oa as usize..(oa + la) as usize];
+                                let y = &self.prog.shared[ob as usize..(ob + lb) as usize];
                                 let mut d = 0.0f64;
                                 for (xk, yk) in x.iter().zip(y.iter()) {
                                     d += xk * yk;
@@ -888,7 +703,7 @@ impl PanelBatch {
                                 if *sigmoid { 1.0 / (1.0 + (-d).exp()) } else { d };
                         }
                     }
-                    GOp::CopyS { out: o, from } => {
+                    BatchOp::CopyS { out: o, from } => {
                         for l in 0..LANES {
                             let x = self.gscal(*from, &scr.sregs, &scr.sb, l);
                             scr.sregs[*o as usize * LANES + l] = x;
@@ -898,20 +713,20 @@ impl PanelBatch {
             }
             // --- absorbers: l[j] += cand - committed, in absorber order ---
             let mut acc = [0.0f64; LANES];
-            for (bi, ab) in self.absorbers.iter().enumerate() {
-                let argv = &self.args[ab.args.0 as usize..(ab.args.0 + ab.args.1) as usize];
+            for (bi, &(fam, args)) in self.prog.absorbers.iter().enumerate() {
+                let argv = &self.prog.args[args.0 as usize..(args.0 + args.1) as usize];
                 let n_args = argv.len();
                 let coff = scr.ab_off[bi] as usize;
                 for l in 0..LANES {
                     let val = scr.ab_vals[bi * LANES + l];
                     let cand = packed_fam_logpdf(
-                        ab.fam,
+                        fam,
                         val,
                         |i| self.gscal(argv[i], &scr.sregs, &scr.sb, l),
                         n_args,
                     );
                     let committed = packed_fam_logpdf(
-                        ab.fam,
+                        fam,
                         val,
                         |i| scr.ab_cargs[coff + i * LANES + l],
                         n_args,
@@ -944,7 +759,7 @@ pub struct LaneScratch {
 impl LaneScratch {
     fn size_for(&mut self, batch: &PanelBatch, panels: &GroupPanels) {
         self.sregs.clear();
-        self.sregs.resize(batch.n_sregs as usize * LANES, 0.0);
+        self.sregs.resize(batch.prog.n_sregs as usize * LANES, 0.0);
         self.sb.clear();
         self.sb.resize(panels.n_sbind * LANES, 0.0);
         self.vboff.clear();

@@ -1,0 +1,587 @@
+//! The shared member-read / operand-resolution core of the batch and
+//! store scorers.
+//!
+//! # Why one reader
+//!
+//! The packed batch (`batch.rs::PackedBatch::pack_into`) and the column
+//! store (`colstore.rs::ensure_group_members`) both materialize the same
+//! committed-side trace reads — scalar bindings, vector bindings,
+//! absorber values, committed absorber args — into flat `f64` buffers,
+//! and both must apply *exactly* the same type checks, refusal rules,
+//! and Int/Bool→f64 coercions, or the store silently stops being the
+//! pack path's bitwise twin.  Until this module existed the two copies
+//! were held identical by KEEP-IN-SYNC comments and the differential
+//! suite; now there is exactly one copy:
+//!
+//! * [`MemberReader`] owns every committed-side member read: the
+//!   `SBind`/`VBind` read paths with their strict-`Real` vs coercing
+//!   (`as_f64`) rules, the Bernoulli bool→1.0/0.0 encoding, the
+//!   absorber-arity refusal, and the `as_f64`-or-NaN committed-arg
+//!   coercion that mirrors `SpFamily::logpdf`.  Callers differ only in
+//!   *where* a value lands, which they express as a [`MemberSink`]
+//!   (pack: sel-ordered column `j` of a `|sel|`-wide batch; store:
+//!   member slot `m` of a full-width panel).
+//! * [`ColumnProgram`] owns candidate-side operand resolution: globals
+//!   to batch-shared constants ([`resolve_scalar`]) or shared vectors,
+//!   vector-register aliasing, and the dot-length refusal.  Both replay
+//!   kernels execute the same [`BatchOp`] list over their own layouts.
+//! * [`prim_always_coerces`] is the Int/Bool→f64 coercion whitelist the
+//!   lowering consults (see `batch.rs::lower_cols` for the sibling
+//!   rule): the set of prims whose `Prim::apply` coerces every operand
+//!   through `as_f64` unconditionally, making a coercing binding safe.
+//!
+//! Because a failed read anywhere routes the *whole batch* to the
+//! scalar per-section fallback (which reproduces the interpreter oracle
+//! exactly), the reader only has to agree with itself — error *texts*
+//! carry a per-caller prefix for diagnostics, but error *conditions*
+//! are single-sourced here.
+
+use crate::ppl::prim::Prim;
+use crate::ppl::sp::SpFamily;
+use crate::ppl::value::Value;
+use crate::trace::batch::{BatchGroup, ColOp, ColS, ColShape, ColV, SBind, VBind};
+use crate::trace::node::ArgRef;
+use crate::trace::pet::Trace;
+
+/// Prims whose `Prim::apply` coerces *every* operand through `as_f64`
+/// regardless of sibling types, so an Int/Bool operand can be admitted
+/// through a coercing binding without consulting the other args.
+/// (`Add`/`Mul`/`Sub` are **not** here: their all-int branch preserves
+/// ints, so they coerce only with a guaranteed-`Real` sibling — the
+/// float fold; see `lower_cols`.)
+pub fn prim_always_coerces(prim: Prim) -> bool {
+    use Prim::*;
+    matches!(prim, Min | Max | Div | Pow | Exp | Log | Sqrt | Abs | Sigmoid)
+}
+
+// ---------------------------------------------------------------------
+// Candidate-side operand resolution (shared by pack and panel builds)
+// ---------------------------------------------------------------------
+
+/// Scalar operand of a resolved batch op: global reads are folded to
+/// batch-shared constants at resolve time.
+#[derive(Clone, Copy, Debug)]
+pub enum ScalOperand {
+    /// f64 register written by an earlier op (packed kernel: `r * ws`
+    /// stride; panel kernel: `r * LANES` stride).
+    Slot(u32),
+    /// Per-section scalar binding column.
+    Bind(u32),
+    /// Batch-shared constant (resolved global or folded value).
+    Const(f64),
+}
+
+/// Vector operand of a resolved dot: a per-section binding column or a
+/// batch-shared (resolved global) vector.
+#[derive(Clone, Copy, Debug)]
+pub enum VecOperand {
+    Bind(u32),
+    Shared(u32),
+}
+
+/// One resolved batch op.  `CopyV` is resolved away (vector values are
+/// immutable, so vector registers are just aliases), leaving only
+/// scalar work for the kernels.
+#[derive(Clone, Debug)]
+pub enum BatchOp {
+    /// `s[out] = prim(args...)`; args at `(offset, len)` in the pool.
+    Map { prim: Prim, out: u32, args: (u32, u32) },
+    Dot { sigmoid: bool, out: u32, a: VecOperand, b: VecOperand },
+    CopyS { out: u32, from: ScalOperand },
+}
+
+/// Resolve a scalar operand against the batch's candidate globals.
+/// `prefix` tags the caller ("batch pack" / "panel build") in error
+/// diagnostics; the conditions are identical for every caller.
+pub fn resolve_scalar(prefix: &str, a: ColS, globals: &[Value]) -> Result<ScalOperand, String> {
+    Ok(match a {
+        ColS::Slot(r) => ScalOperand::Slot(r),
+        ColS::Bind(b) => ScalOperand::Bind(b),
+        ColS::Global(k) => match globals.get(k as usize) {
+            Some(Value::Real(x)) => ScalOperand::Const(*x),
+            v => {
+                return Err(format!(
+                    "{prefix}: global {k} is not a real ({})",
+                    v.map_or("missing", |v| v.type_name())
+                ))
+            }
+        },
+        ColS::GlobalNum(k) => match globals.get(k as usize).and_then(|v| v.as_f64()) {
+            Some(x) => ScalOperand::Const(x),
+            None => return Err(format!("{prefix}: global {k} is not numeric")),
+        },
+    })
+}
+
+/// The candidate-resolved column program both kernels replay: the
+/// [`BatchOp`] list, its operand pool, the resolved absorber candidate
+/// args, and the batch-shared vectors.  Rebuilt per mini-batch (the
+/// candidate side is proposal-dependent and never cached); buffers are
+/// cleared, not freed, so steady state allocates nothing.
+#[derive(Debug, Default)]
+pub struct ColumnProgram {
+    pub n_sregs: u32,
+    pub ops: Vec<BatchOp>,
+    /// Shared operand pool for `Map` args and absorber candidate args.
+    pub args: Vec<ScalOperand>,
+    /// Per-absorber `(family, candidate args (offset, len) in `args`)`.
+    pub absorbers: Vec<(SpFamily, (u32, u32))>,
+    /// Batch-shared vectors (resolved vector globals), `(offset, len)`
+    /// in `scols`.
+    pub shared: Vec<f64>,
+    pub scols: Vec<(u32, u32)>,
+    /// Resolve-time scratch: vector-register -> resolved source.
+    vsrc: Vec<Option<VecOperand>>,
+}
+
+impl ColumnProgram {
+    /// Resolve `cols` against the candidate `globals`: fold global
+    /// reads to constants/shared vectors, alias vector registers away,
+    /// and refuse dot-length mismatches.  On `Err` the caller falls
+    /// back exactly like a pack failure.
+    pub fn resolve(
+        &mut self,
+        prefix: &'static str,
+        cols: &ColShape,
+        globals: &[Value],
+    ) -> Result<(), String> {
+        self.n_sregs = cols.n_sregs;
+        self.ops.clear();
+        self.args.clear();
+        self.absorbers.clear();
+        self.shared.clear();
+        self.scols.clear();
+        self.vsrc.clear();
+        self.vsrc.resize(cols.n_vregs as usize, None);
+        for op in &cols.ops {
+            match op {
+                ColOp::Map { prim, out, args } => {
+                    let off = self.args.len() as u32;
+                    for &a in args {
+                        let p = resolve_scalar(prefix, a, globals)?;
+                        self.args.push(p);
+                    }
+                    self.ops.push(BatchOp::Map {
+                        prim: *prim,
+                        out: *out,
+                        args: (off, args.len() as u32),
+                    });
+                }
+                ColOp::Dot { sigmoid, out, a, b } => {
+                    let ra = self.vec_operand(prefix, *a, globals)?;
+                    let rb = self.vec_operand(prefix, *b, globals)?;
+                    let (la, lb) = (self.vec_len(cols, ra), self.vec_len(cols, rb));
+                    if la != lb {
+                        return Err(format!("{prefix}: dot length mismatch {la} vs {lb}"));
+                    }
+                    self.ops.push(BatchOp::Dot {
+                        sigmoid: *sigmoid,
+                        out: *out,
+                        a: ra,
+                        b: rb,
+                    });
+                }
+                ColOp::CopyS { out, from } => {
+                    let f = resolve_scalar(prefix, *from, globals)?;
+                    self.ops.push(BatchOp::CopyS { out: *out, from: f });
+                }
+                ColOp::CopyV { out, from } => {
+                    let v = self.vec_operand(prefix, *from, globals)?;
+                    self.vsrc[*out as usize] = Some(v);
+                }
+            }
+        }
+        for ab in &cols.absorbers {
+            let off = self.args.len() as u32;
+            for &a in &ab.cand {
+                let p = resolve_scalar(prefix, a, globals)?;
+                self.args.push(p);
+            }
+            self.absorbers.push((ab.fam, (off, ab.cand.len() as u32)));
+        }
+        Ok(())
+    }
+
+    fn vec_operand(
+        &mut self,
+        prefix: &str,
+        a: ColV,
+        globals: &[Value],
+    ) -> Result<VecOperand, String> {
+        Ok(match a {
+            ColV::Bind(b) => VecOperand::Bind(b),
+            ColV::Slot(r) => self.vsrc[r as usize]
+                .ok_or_else(|| format!("{prefix}: uninitialized vector register"))?,
+            ColV::Global(k) => match globals.get(k as usize) {
+                Some(Value::Vector(v)) => {
+                    let off = self.shared.len() as u32;
+                    self.shared.extend_from_slice(v.as_slice());
+                    self.scols.push((off, v.len() as u32));
+                    VecOperand::Shared((self.scols.len() - 1) as u32)
+                }
+                v => {
+                    return Err(format!(
+                        "{prefix}: global {k} is not a vector ({})",
+                        v.map_or("missing", |v| v.type_name())
+                    ))
+                }
+            },
+        })
+    }
+
+    /// Element count of a resolved vector operand (binding columns carry
+    /// the template arity; shared vectors their resolved length).
+    fn vec_len(&self, cols: &ColShape, a: VecOperand) -> usize {
+        match a {
+            VecOperand::Bind(b) => cols.varities[b as usize] as usize,
+            VecOperand::Shared(s) => self.scols[s as usize].1 as usize,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Committed-side member reads (shared by pack and store refresh)
+// ---------------------------------------------------------------------
+
+/// Destination of one member's committed-side row.  The reader performs
+/// every read, check, and coercion; the sink only places the resulting
+/// `f64`s — which is the *only* thing the pack path (sel-ordered column
+/// `j`, width `|sel|`) and the store path (member slot `m`, full group
+/// width) legitimately disagree on.
+pub trait MemberSink {
+    /// Scalar binding column `b`.
+    fn scalar(&mut self, b: usize, x: f64);
+    /// Vector binding column `b`, `ar` elements.
+    fn vector(&mut self, b: usize, ar: usize, xs: &[f64]);
+    /// Absorber `bi`'s (coerced) value.
+    fn absorb_val(&mut self, bi: usize, x: f64);
+    /// Absorber `bi`'s committed arg `ai`.
+    fn absorb_carg(&mut self, bi: usize, ai: usize, x: f64);
+}
+
+/// The single owner of every committed-side member read: both
+/// `PackedBatch::pack_into` and the column store's row refresh read
+/// members through one of these, so the pack/store bitwise-twin
+/// contract holds by construction.  `prefix` tags error diagnostics
+/// with the calling tier ("batch pack" / "colstore"); conditions are
+/// identical for every caller, and any `Err` routes the batch to the
+/// scalar per-section fallback.
+pub struct MemberReader<'a> {
+    trace: &'a Trace,
+    prefix: &'static str,
+}
+
+impl<'a> MemberReader<'a> {
+    pub fn new(trace: &'a Trace, prefix: &'static str) -> MemberReader<'a> {
+        MemberReader { trace, prefix }
+    }
+
+    /// Read one scalar binding: constants pass through (pre-narrowed at
+    /// group build), `Node` reads strictly as `Value::Real` (a runtime
+    /// type change must refuse, not coerce), `NodeNum` coerces through
+    /// `as_f64` — exactly the coercion `Prim::apply`'s float fold and
+    /// `SpFamily::logpdf` apply at the positions the lowering admits it.
+    pub fn scalar_bind(&self, b: &SBind) -> Result<f64, String> {
+        Ok(match b {
+            SBind::Const(x) => *x,
+            SBind::Node(id) => match self.trace.value(*id) {
+                Value::Real(x) => *x,
+                v => {
+                    return Err(format!(
+                        "{}: scalar binding is {} not real",
+                        self.prefix,
+                        v.type_name()
+                    ))
+                }
+            },
+            SBind::NodeNum(id) => {
+                let v = self.trace.value(*id);
+                v.as_f64().ok_or_else(|| {
+                    format!(
+                        "{}: numeric binding is {} not coercible",
+                        self.prefix,
+                        v.type_name()
+                    )
+                })?
+            }
+        })
+    }
+
+    /// Read one vector binding at the template arity `ar`.  Constants'
+    /// arities were verified against the template at group build and
+    /// cannot change; `Node` reads enforce the arity per read, because
+    /// `ShapeKey` does not hash trace-read arities.
+    pub fn vector_bind<'v>(&self, vb: &'v VBind, ar: usize) -> Result<&'v [f64], String>
+    where
+        'a: 'v,
+    {
+        Ok(match vb {
+            VBind::Const(v) => v.as_slice(),
+            VBind::Node(id) => match self.trace.value(*id) {
+                Value::Vector(v) if v.len() == ar => v.as_slice(),
+                Value::Vector(v) => {
+                    return Err(format!(
+                        "{}: vector binding length {} != {ar}",
+                        self.prefix,
+                        v.len()
+                    ))
+                }
+                v => {
+                    return Err(format!(
+                        "{}: vector binding is {} not vector",
+                        self.prefix,
+                        v.type_name()
+                    ))
+                }
+            },
+        })
+    }
+
+    /// Coerce an absorber's observed value for packed-logpdf replay:
+    /// Bernoulli bools encode 1.0/0.0 (and refuse non-bools), every
+    /// other scalar family coerces through `as_f64` (and refuses
+    /// non-numerics) — matching `SpFamily::logpdf` bit-for-bit.
+    pub fn absorber_value(&self, fam: SpFamily, value: &Value) -> Result<f64, String> {
+        Ok(match fam {
+            SpFamily::Bernoulli => match value.as_bool() {
+                Some(b) => b as u8 as f64,
+                None => return Err(format!("{}: bernoulli value is not a bool", self.prefix)),
+            },
+            _ => value.as_f64().ok_or_else(|| {
+                format!(
+                    "{}: absorber value is not numeric ({})",
+                    self.prefix,
+                    value.type_name()
+                )
+            })?,
+        })
+    }
+
+    /// Committed-side absorber arg: the same `as_f64`-or-NaN coercion
+    /// `SpFamily::logpdf` applies.
+    pub fn committed_arg(&self, arg: &ArgRef) -> f64 {
+        self.trace.arg_value(arg).as_f64().unwrap_or(f64::NAN)
+    }
+
+    /// Read every committed-side entry of member `m` of `group` into
+    /// `sink`: scalar bindings, vector bindings, then per absorber its
+    /// (coerced) value followed by its committed args.  The caller must
+    /// have freshened the member's touch list first.  `Err` means the
+    /// member no longer fits its group's shape (a runtime type or arity
+    /// change) and the batch must be re-scored per section.
+    pub fn read_member(
+        &self,
+        group: &BatchGroup,
+        m: usize,
+        sink: &mut impl MemberSink,
+    ) -> Result<(), String> {
+        let cols = &group.cols;
+        let nsb = cols.n_sbind as usize;
+        for b in 0..nsb {
+            let x = self.scalar_bind(&group.sbinds[m * nsb + b])?;
+            sink.scalar(b, x);
+        }
+        let nvb = cols.n_vbind as usize;
+        for b in 0..nvb {
+            let ar = cols.varities[b] as usize;
+            let xs = self.vector_bind(&group.vbinds[m * nvb + b], ar)?;
+            sink.vector(b, ar, xs);
+        }
+        let nab = cols.absorbers.len();
+        for (bi, ab) in cols.absorbers.iter().enumerate() {
+            let node = self.trace.node(group.absorbers[m * nab + bi]);
+            if node.args.len() != ab.cand.len() {
+                return Err(format!("{}: absorber arity changed", self.prefix));
+            }
+            sink.absorb_val(bi, self.absorber_value(ab.fam, &node.value)?);
+            for (ai, arg) in node.args.iter().enumerate() {
+                sink.absorb_carg(bi, ai, self.committed_arg(arg));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::node::{Node, NodeId, NodeKind};
+    use std::rc::Rc;
+
+    /// A value-bearing node for binding reads (kind is irrelevant to the
+    /// reader — it only looks at `Trace::value`).
+    fn const_node(trace: &mut Trace, v: Value) -> NodeId {
+        trace.alloc(Node::new(NodeKind::Det(Prim::Add), v, vec![]))
+    }
+
+    /// Sink that records calls in order — enough to pin both the values
+    /// and the traversal the twins rely on.
+    #[derive(Default)]
+    struct Rec {
+        scalars: Vec<(usize, f64)>,
+        vectors: Vec<(usize, Vec<f64>)>,
+        ab_vals: Vec<(usize, f64)>,
+        ab_cargs: Vec<(usize, usize, f64)>,
+    }
+
+    impl MemberSink for Rec {
+        fn scalar(&mut self, b: usize, x: f64) {
+            self.scalars.push((b, x));
+        }
+        fn vector(&mut self, b: usize, _ar: usize, xs: &[f64]) {
+            self.vectors.push((b, xs.to_vec()));
+        }
+        fn absorb_val(&mut self, bi: usize, x: f64) {
+            self.ab_vals.push((bi, x));
+        }
+        fn absorb_carg(&mut self, bi: usize, ai: usize, x: f64) {
+            self.ab_cargs.push((bi, ai, x));
+        }
+    }
+
+    fn reader(trace: &Trace) -> MemberReader<'_> {
+        MemberReader::new(trace, "test")
+    }
+
+    /// Property sweep of the scalar coercion classes: strict bindings
+    /// admit only `Real`; coercing bindings admit exactly the values
+    /// `as_f64` admits (Real, Int, Bool) and refuse the rest — the
+    /// whitelist the lowering relies on when it emits `NodeNum`.
+    #[test]
+    fn scalar_coercion_classes_match_as_f64() {
+        let mut trace = Trace::new();
+        let cases: Vec<Value> = vec![
+            Value::Real(2.5),
+            Value::Real(-0.0),
+            Value::Int(-3),
+            Value::Int(7),
+            Value::Bool(true),
+            Value::Bool(false),
+            Value::Vector(Rc::new(vec![1.0, 2.0])),
+        ];
+        for v in cases {
+            let id = const_node(&mut trace, v.clone());
+            let r = reader(&trace);
+            // strict: Real passes bit-for-bit, everything else refuses
+            let strict = r.scalar_bind(&SBind::Node(id));
+            match &v {
+                Value::Real(x) => assert_eq!(strict.unwrap().to_bits(), x.to_bits()),
+                _ => assert!(strict.unwrap_err().contains("not real"), "{v:?}"),
+            }
+            // coercing: agrees with Value::as_f64 exactly
+            let num = r.scalar_bind(&SBind::NodeNum(id));
+            match v.as_f64() {
+                Some(x) => assert_eq!(num.unwrap().to_bits(), x.to_bits()),
+                None => assert!(num.unwrap_err().contains("not coercible"), "{v:?}"),
+            }
+        }
+    }
+
+    /// Int and Bool coerce to exactly the `f64` the interpreter's
+    /// `as_f64` produces — the widening the batch contract allows —
+    /// and `Const` bindings pass through untouched.
+    #[test]
+    fn int_and_bool_widen_bitwise() {
+        let mut trace = Trace::new();
+        let i = const_node(&mut trace, Value::Int(41));
+        let b = const_node(&mut trace, Value::Bool(true));
+        let r = reader(&trace);
+        assert_eq!(r.scalar_bind(&SBind::NodeNum(i)).unwrap().to_bits(), 41.0f64.to_bits());
+        assert_eq!(r.scalar_bind(&SBind::NodeNum(b)).unwrap().to_bits(), 1.0f64.to_bits());
+        assert_eq!(r.scalar_bind(&SBind::Const(-2.5)).unwrap().to_bits(), (-2.5f64).to_bits());
+    }
+
+    /// The all-int refusal lives in the *lowering* (`lower_cols` emits a
+    /// strict binding unless a coercion is provable), and the reader
+    /// enforces it: an Int behind a strict binding refuses rather than
+    /// silently widening — the interpreter's int-preserving
+    /// `Add`/`Mul`/`Sub` branch could diverge from a float register.
+    #[test]
+    fn all_int_positions_refuse_through_strict_bindings() {
+        let mut trace = Trace::new();
+        let i = const_node(&mut trace, Value::Int(5));
+        let r = reader(&trace);
+        let err = r.scalar_bind(&SBind::Node(i)).unwrap_err();
+        assert!(err.contains("scalar binding is int not real"), "{err}");
+        // ... and the whitelist that decides which prims may coerce
+        // unconditionally stays exactly the always-float set:
+        use Prim::*;
+        for p in [Min, Max, Div, Pow, Exp, Log, Sqrt, Abs, Sigmoid] {
+            assert!(prim_always_coerces(p));
+        }
+        for p in [Add, Mul, Sub] {
+            assert!(!prim_always_coerces(p));
+        }
+    }
+
+    /// Vector bindings enforce the template arity per read and refuse
+    /// non-vectors; matching arities pass through bit-for-bit.
+    #[test]
+    fn vector_bindings_enforce_template_arity() {
+        let mut trace = Trace::new();
+        let v = const_node(&mut trace, Value::Vector(Rc::new(vec![1.5, -2.5, 3.5])));
+        let s = const_node(&mut trace, Value::Real(1.0));
+        let r = reader(&trace);
+        let ok = r.vector_bind(&VBind::Node(v), 3).unwrap();
+        assert_eq!(ok, &[1.5, -2.5, 3.5]);
+        let err = r.vector_bind(&VBind::Node(v), 2).unwrap_err();
+        assert!(err.contains("length 3 != 2"), "{err}");
+        let err = r.vector_bind(&VBind::Node(s), 3).unwrap_err();
+        assert!(err.contains("not vector"), "{err}");
+    }
+
+    /// Absorber value coercion: Bernoulli encodes bools as 1.0/0.0 and
+    /// refuses non-bools; scalar families coerce Int through `as_f64`
+    /// and refuse non-numerics — matching `SpFamily::logpdf`.
+    #[test]
+    fn absorber_value_coercions_match_logpdf() {
+        let trace = Trace::new();
+        let r = reader(&trace);
+        assert_eq!(
+            r.absorber_value(SpFamily::Bernoulli, &Value::Bool(true)).unwrap(),
+            1.0
+        );
+        assert_eq!(
+            r.absorber_value(SpFamily::Bernoulli, &Value::Bool(false)).unwrap(),
+            0.0
+        );
+        assert!(r
+            .absorber_value(SpFamily::Bernoulli, &Value::Real(1.0))
+            .unwrap_err()
+            .contains("not a bool"));
+        assert_eq!(
+            r.absorber_value(SpFamily::Normal, &Value::Int(3)).unwrap().to_bits(),
+            3.0f64.to_bits()
+        );
+        assert!(r
+            .absorber_value(SpFamily::Normal, &Value::Vector(Rc::new(vec![])))
+            .unwrap_err()
+            .contains("not numeric"));
+    }
+
+    /// `resolve_scalar` folds globals by the same strict/coercing split
+    /// as the bindings: `Global` wants `Real`, `GlobalNum` anything
+    /// `as_f64` admits.
+    #[test]
+    fn global_resolution_splits_strict_and_coercing() {
+        let globals = vec![Value::Real(2.0), Value::Int(3), Value::Bool(true)];
+        match resolve_scalar("test", ColS::Global(0), &globals).unwrap() {
+            ScalOperand::Const(x) => assert_eq!(x, 2.0),
+            other => panic!("{other:?}"),
+        }
+        assert!(resolve_scalar("test", ColS::Global(1), &globals)
+            .unwrap_err()
+            .contains("not a real"));
+        match resolve_scalar("test", ColS::GlobalNum(1), &globals).unwrap() {
+            ScalOperand::Const(x) => assert_eq!(x, 3.0),
+            other => panic!("{other:?}"),
+        }
+        match resolve_scalar("test", ColS::GlobalNum(2), &globals).unwrap() {
+            ScalOperand::Const(x) => assert_eq!(x, 1.0),
+            other => panic!("{other:?}"),
+        }
+        assert!(resolve_scalar("test", ColS::Global(9), &globals)
+            .unwrap_err()
+            .contains("missing"));
+    }
+}

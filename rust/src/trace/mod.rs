@@ -4,6 +4,7 @@
 pub mod batch;
 pub mod colstore;
 pub mod eval;
+pub mod memread;
 pub mod node;
 pub mod partition;
 pub mod pet;
@@ -13,6 +14,7 @@ pub mod scaffold;
 
 pub use batch::{BatchGroup, BatchPlanSet, PackedBatch, RegFile, ShapeKey};
 pub use colstore::{ColumnStoreSet, LaneScratch, PanelBatch};
+pub use memread::{MemberReader, MemberSink};
 pub use eval::Evaluator;
 pub use node::{ArgRef, EvalResult, Node, NodeId, NodeKind};
 pub use pet::Trace;

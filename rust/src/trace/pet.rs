@@ -8,7 +8,7 @@ use crate::ppl::env::{Binding, Env, EnvRef};
 use crate::ppl::sp::SpState;
 use crate::ppl::value::{Closure, KeyVec, MemId, SpId, Value};
 use crate::trace::node::{ArgRef, EvalResult, Node, NodeId, NodeKind};
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 
@@ -146,6 +146,14 @@ pub struct Trace {
     /// it lives behind its own `RefCell` (rows mutate between
     /// structural rebuilds).
     colstore_cache: RefCell<HashMap<NodeId, ColStoreHandle>>,
+    /// Running count of column stores evicted from `colstore_cache`
+    /// because a structural rebuild left them behind (their principal
+    /// stopped being sampled — DPM cluster churn creates and abandons
+    /// such principals constantly, and without the sweep their
+    /// full-width panels would accumulate for the life of the trace).
+    /// Evaluators sample deltas of this around
+    /// [`cached_colstore`](Self::cached_colstore) for their stats.
+    store_evicted: Cell<u64>,
     /// Process-unique id of this trace (evaluators that carry per-trace
     /// caches validate against it — `structure_version` alone is not
     /// unique across traces).
@@ -180,6 +188,7 @@ impl Trace {
             plan_cache: RefCell::new(HashMap::new()),
             batch_cache: RefCell::new(HashMap::new()),
             colstore_cache: RefCell::new(HashMap::new()),
+            store_evicted: Cell::new(0),
             instance_id: TRACE_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
         }
     }
@@ -252,6 +261,15 @@ impl Trace {
     /// Returns `(store, freshly_built)`; a fresh build allocates the
     /// full-width panels with every member row stale, so rows fill
     /// lazily as members are sampled (see `trace/colstore.rs`).
+    ///
+    /// A fresh build also sweeps the cache: stores whose layout
+    /// predates the current structure *and* whose principal is not the
+    /// one being rebuilt are evicted (counted in
+    /// [`store_evictions`](Self::store_evictions)).  Such stores belong
+    /// to principals abandoned by the structural change — on DPM runs
+    /// with many short-lived clusters they would otherwise pin dead
+    /// full-width panels for the life of the trace.  Stores still
+    /// current (other principals rebuilt since the change) are kept.
     pub fn cached_colstore(
         &self,
         p: &crate::trace::partition::Partition,
@@ -263,9 +281,31 @@ impl Trace {
                 return (s.clone(), false);
             }
         }
+        let mut cache = self.colstore_cache.borrow_mut();
+        let before = cache.len();
+        // the rebuilding principal's own stale entry is a replacement,
+        // not an abandonment — exclude it from the eviction count
+        cache.retain(|&k, s| k == p.v || s.borrow().built_at == self.structure_version);
+        let swept = before - cache.len();
+        if swept > 0 {
+            self.store_evicted.set(self.store_evicted.get() + swept as u64);
+        }
         let s = Rc::new(RefCell::new(crate::trace::colstore::ColumnStoreSet::new(set)));
-        self.colstore_cache.borrow_mut().insert(p.v, s.clone());
+        cache.insert(p.v, s.clone());
         (s, true)
+    }
+
+    /// Stores evicted from the column-store cache so far (see
+    /// [`cached_colstore`](Self::cached_colstore)).
+    pub fn store_evictions(&self) -> u64 {
+        self.store_evicted.get()
+    }
+
+    /// Column stores currently cached (footprint observability: on
+    /// cluster-churn workloads this must stay bounded by the number of
+    /// live principals, not grow with churn — `tests` pin this).
+    pub fn colstore_cache_len(&self) -> usize {
+        self.colstore_cache.borrow().len()
     }
 
     // ---------------- arena ----------------

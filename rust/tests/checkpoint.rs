@@ -76,6 +76,7 @@ fn run_chain(spec: &ChainSpec, mut rng: Pcg64, ctl: &mut CheckpointCtl) -> (usiz
                 proposal: Proposal::Drift(0.15),
                 exact: false,
                 threads: 1,
+                target_risk: None,
             };
         }
         Model::Sv => {
@@ -94,6 +95,7 @@ fn run_chain(spec: &ChainSpec, mut rng: Pcg64, ctl: &mut CheckpointCtl) -> (usiz
                 proposal: Proposal::Drift(0.05),
                 exact: false,
                 threads: 1,
+                target_risk: None,
             };
         }
     }

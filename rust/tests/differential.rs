@@ -186,6 +186,37 @@ fn run_lr_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         proposal: Proposal::Drift(0.1),
         exact: false,
         threads: 1,
+        target_risk: None,
+    };
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let s = subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, ev).unwrap();
+        out.push((
+            s.accepted,
+            s.sections_evaluated,
+            value_bits(&trace.fresh_value(w)),
+        ));
+    }
+    out
+}
+
+/// LR lockstep under risk-adaptive mini-batch control: the
+/// `RiskController` sizes each batch from the sequential test's running
+/// statistics, which are functions of the scored `l_i` — so if any rung
+/// drifted by one bit, the controller would pick different batch sizes
+/// and the `sections_evaluated` comparison would fail within a few
+/// transitions, on top of the usual accept/value divergence.
+fn run_lr_chain_risk(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
+    let data = synth2d::generate(600, 51);
+    let mut rng = Pcg64::seeded(52);
+    let (mut trace, w) = build_bayes_lr(&data, 0.1, &mut rng);
+    let cfg = SubsampledConfig {
+        m: 50,
+        eps: 0.01,
+        proposal: Proposal::Drift(0.1),
+        exact: false,
+        threads: 1,
+        target_risk: Some(0.05),
     };
     let mut out = Vec::with_capacity(steps);
     for _ in 0..steps {
@@ -214,6 +245,7 @@ fn run_sv_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         proposal: Proposal::Drift(0.03),
         exact: false,
         threads: 1,
+        target_risk: None,
     };
     let mut out = Vec::with_capacity(steps);
     for i in 0..steps {
@@ -242,6 +274,7 @@ fn run_dpm_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         proposal: Proposal::Drift(0.25),
         exact: false,
         threads: 1,
+        target_risk: None,
     };
     let mut out = Vec::with_capacity(steps);
     for i in 0..steps {
@@ -303,6 +336,37 @@ fn lockstep_200_transitions_logistic_regression() {
         "accepted transitions must refresh store rows"
     );
     assert_eq!(store.fallback_sections, 0);
+}
+
+#[test]
+fn lockstep_risk_adaptive_controller_logistic_regression() {
+    let mut interp = InterpreterEval;
+    let mut scalar = PlannedEval::scalar();
+    let mut batched = PlannedEval::new().with_colstore(false);
+    let mut store = PlannedEval::new().with_colstore(true);
+    let runs = vec![
+        run_lr_chain_risk(&mut interp, 100),
+        run_lr_chain_risk(&mut scalar, 100),
+        run_lr_chain_risk(&mut batched, 100),
+        run_lr_chain_risk(&mut store, 100),
+    ];
+    assert_lockstep("lr-risk", &runs);
+    // the controller must actually adapt: at least one transition's
+    // batch sizing should depart from the fixed-m schedule's multiples
+    assert!(
+        runs[0].iter().any(|(_, n, _)| n % 50 != 0),
+        "risk controller never departed from the fixed-m schedule"
+    );
+    assert!(store.gathered_sections > 0, "store path never engaged");
+    // realized risk is accumulated identically on the evaluators that
+    // track it, and respects the configured bound
+    let r = store.stats().realized_risk().expect("no risk recorded");
+    assert!((0.0..=0.05).contains(&r), "realized risk {r} out of bounds");
+    assert_eq!(
+        store.stats().realized_risk(),
+        batched.stats().realized_risk(),
+        "risk accumulation must be evaluator-independent"
+    );
 }
 
 #[test]

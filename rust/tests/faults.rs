@@ -54,6 +54,7 @@ fn run_lr_chain(ev: &mut PlannedEval, steps: usize) -> Vec<StepRecord> {
         proposal: Proposal::Drift(0.1),
         exact: false,
         threads: 1, // inert: the evaluator is passed in explicitly
+        target_risk: None,
     };
     let mut out = Vec::with_capacity(steps);
     for _ in 0..steps {

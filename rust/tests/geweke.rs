@@ -149,6 +149,7 @@ fn geweke_subsampled_mh_logistic_regression() {
         // z-scores cannot depend on the thread count (the parallel
         // path is bitwise identical)
         threads: 0,
+        target_risk: None,
     };
     // the default dispatch cutoff (256) would never engage on m=8
     // mini-batches — force dispatch so "parallel coverage" is real

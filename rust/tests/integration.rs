@@ -25,6 +25,7 @@ fn bayes_lr_end_to_end_subsampled() {
         proposal: Proposal::Drift(0.08),
         exact: false,
         threads: 1,
+        target_risk: None,
     };
     let mut ev = InterpreterEval;
     let mut w_mean = vec![RunningMoments::new(), RunningMoments::new(), RunningMoments::new()];
@@ -69,6 +70,7 @@ fn subsampled_bias_is_small() {
             proposal: Proposal::Drift(0.08),
             exact,
             threads: 1,
+            target_risk: None,
         };
         let mut ev = InterpreterEval;
         let mut m = RunningMoments::new();
@@ -115,6 +117,7 @@ fn joint_dpm_end_to_end() {
             proposal: Proposal::Drift(0.25),
             exact: false,
             threads: 1,
+            target_risk: None,
         };
         subsampled_mh_transition(&mut trace, &mut rng, wk, &cfg, &mut ev).unwrap();
     }
@@ -142,6 +145,7 @@ fn sv_end_to_end_posterior_sane() {
         m: 100,
         eps: 1e-3,
         seed: 21,
+        target_risk: None,
     };
     let r = fig9_sv(&cfg, true);
     let burn = r.phi_samples.len() / 3;

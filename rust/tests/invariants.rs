@@ -265,6 +265,7 @@ fn prop_subsampled_respects_support() {
             proposal: Proposal::Drift(sigma),
             exact: false,
             threads: 1,
+            target_risk: None,
         };
         let mut ev = InterpreterEval;
         for _ in 0..60 {

@@ -36,6 +36,7 @@ fn lr_chain(c: usize, mut rng: Pcg64, sink: Option<&ChainSink>) -> Vec<f64> {
         proposal: Proposal::Drift(0.15),
         exact: false,
         threads: 1,
+        target_risk: None,
     };
     let mut ev = PlannedEval::new();
     let mut draws = Vec::with_capacity(STEPS);

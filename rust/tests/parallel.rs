@@ -164,6 +164,7 @@ fn run_lr_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         proposal: Proposal::Drift(0.1),
         exact: false,
         threads: 1, // inert: the evaluator is passed in explicitly
+        target_risk: None,
     };
     let mut out = Vec::with_capacity(steps);
     for _ in 0..steps {
@@ -323,6 +324,7 @@ fn run_dpm_churn_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRec
         proposal: Proposal::Drift(0.25),
         exact: false,
         threads: 1, // inert: the evaluator is passed in explicitly
+        target_risk: None,
     };
     let mut out = Vec::with_capacity(steps);
     for i in 0..steps {
@@ -372,6 +374,7 @@ fn multichain_matches_inline_runs() {
             proposal: Proposal::Drift(0.15),
             exact: false,
             threads: 1,
+            target_risk: None,
         };
         let mut ev = PlannedEval::new();
         let mut bits = Vec::new();
