@@ -161,6 +161,7 @@ fn ablate_batch() {
             exact: false,
             threads: 1,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         let mut ev = InterpreterEval;
         let iters = 40;

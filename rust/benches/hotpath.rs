@@ -471,6 +471,7 @@ fn main() {
         exact: false,
         threads: 1,
         target_risk: None,
+        shard_timeout_ms: 0,
     };
     let t = bench(
         &format!("subsampled transition, batched (N={n0})"),

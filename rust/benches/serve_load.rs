@@ -1,0 +1,418 @@
+//! Load smoke for the `subppl serve` daemon (robustness tentpole):
+//! many short-lived sessions hammered over real TCP connections,
+//! a deterministic backpressure probe, and a drain-under-load finale.
+//!
+//! Run: `cargo bench --bench serve_load` (`-- --quick` for the CI smoke
+//! pass).  Emits `BENCH_serve.json` at the repository root —
+//! create/step latency percentiles, rejected-request counts, and the
+//! drain report — schema-validated by `scripts/check_bench.py`.
+
+use std::fmt::Write as _;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+use subppl::serve::{serve_with, Json, ServeCfg};
+
+/// Registry bound: small enough that the backpressure probe can fill
+/// it deterministically, large enough that the load phase never trips
+/// it (8 worker connections hold at most 8 live sessions).
+const MAX_SESSIONS: usize = 32;
+const CLIENT_THREADS: usize = 8;
+/// Long-running sessions left stepping when the drain lands.
+const DRAIN_SESSIONS: usize = 4;
+
+// ---------------------------------------------------------------------
+// Minimal blocking JSON-RPC client (no subscriptions → no event lines)
+// ---------------------------------------------------------------------
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let s = TcpStream::connect(addr).expect("connect");
+        s.set_nodelay(true).ok();
+        Client {
+            reader: BufReader::new(s.try_clone().unwrap()),
+            writer: s,
+        }
+    }
+
+    fn rpc(&mut self, line: &str) -> Json {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp).expect("read frame");
+        assert!(n > 0, "server closed the connection mid-request");
+        Json::parse(resp.trim()).expect("valid frame")
+    }
+}
+
+const MODEL: &str = r#"
+    [assume mu (scope_include 'mu 0 (normal 0 1))]
+    [observe (normal mu 0.5) 1.2]
+    [observe (normal mu 0.5) 0.8]
+"#;
+
+fn create_line(id: u64, seed: u64) -> String {
+    Json::Obj(vec![
+        ("id".into(), Json::Num(id as f64)),
+        ("method".into(), Json::Str("create".into())),
+        (
+            "params".into(),
+            Json::Obj(vec![
+                ("program".into(), Json::Str(MODEL.into())),
+                ("infer".into(), Json::Str("(mh mu one drift 0.5 1)".into())),
+                ("watch".into(), Json::Arr(vec![Json::Str("mu".into())])),
+                ("seed".into(), Json::Num(seed as f64)),
+            ]),
+        ),
+    ])
+    .encode()
+}
+
+fn ok_u64(frame: &Json, key: &str) -> Option<u64> {
+    frame.get("ok").and_then(|o| o.get(key)).and_then(Json::as_u64)
+}
+
+fn err_code<'a>(frame: &'a Json) -> Option<&'a str> {
+    frame
+        .get("error")
+        .and_then(|e| e.get("code"))
+        .and_then(Json::as_str)
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Latencies (ms) one worker connection collected.
+#[derive(Default)]
+struct WorkerLat {
+    create_ms: Vec<f64>,
+    step_ms: Vec<f64>,
+    draws: usize,
+    steps: usize,
+}
+
+/// One worker: `sessions` full lifecycles (create → 3 steps → cancel)
+/// over a single connection.
+fn worker(addr: String, worker_id: usize, sessions: usize, draws_per_step: usize) -> WorkerLat {
+    let mut c = Client::connect(&addr);
+    let mut lat = WorkerLat::default();
+    for i in 0..sessions {
+        let t0 = Instant::now();
+        let resp = c.rpc(&create_line(1, (worker_id * 10_000 + i) as u64));
+        lat.create_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        let sid = ok_u64(&resp, "session").expect("create admitted");
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let resp = c.rpc(&format!(
+                r#"{{"id":2,"method":"step","params":{{"session":{sid},"n":{draws_per_step}}}}}"#
+            ));
+            lat.step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            let done = ok_u64(&resp, "done").expect("step served");
+            assert_eq!(done as usize, draws_per_step);
+            lat.draws += done as usize;
+            lat.steps += 1;
+        }
+        c.rpc(&format!(
+            r#"{{"id":3,"method":"cancel","params":{{"session":{sid}}}}}"#
+        ));
+    }
+    lat
+}
+
+/// Self-check outcome, serialized like the other bench artifacts.
+enum Check {
+    Pass,
+    Fail(String),
+}
+
+impl Check {
+    fn json(&self) -> &'static str {
+        match self {
+            Check::Pass => "true",
+            Check::Fail(_) => "false",
+        }
+    }
+}
+
+fn from_bool(ok: bool, why: String) -> Check {
+    if ok {
+        Check::Pass
+    } else {
+        Check::Fail(why)
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sessions_total: usize = if quick { 40 } else { 200 };
+    let draws_per_step: usize = 20;
+    println!(
+        "subppl serve load smoke{}: {sessions_total} sessions x 3 steps x {draws_per_step} draws, {CLIENT_THREADS} connections\n",
+        if quick { " (quick)" } else { "" }
+    );
+
+    let ckpt_dir = std::env::temp_dir().join(format!("subppl-serve-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let (addr_tx, addr_rx) = channel();
+    let ckpt = ckpt_dir.clone();
+    let server = std::thread::spawn(move || {
+        serve_with(
+            ServeCfg {
+                addr: "127.0.0.1:0".into(),
+                max_sessions: MAX_SESSIONS,
+                drain_timeout: Duration::from_secs(10),
+                checkpoint_dir: Some(ckpt),
+                use_pool: false,
+                ..ServeCfg::default()
+            },
+            move |addr| {
+                let _ = addr_tx.send(addr);
+            },
+        )
+        .expect("serve_with")
+    });
+    let addr = addr_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("server never bound");
+    println!("serving on {addr}");
+
+    // ---- phase 1: steady-state load over CLIENT_THREADS connections ----
+    let t_load = Instant::now();
+    let per_worker = sessions_total / CLIENT_THREADS;
+    let workers: Vec<_> = (0..CLIENT_THREADS)
+        .map(|w| {
+            let addr = addr.clone();
+            std::thread::spawn(move || worker(addr, w, per_worker, draws_per_step))
+        })
+        .collect();
+    let mut create_ms = Vec::new();
+    let mut step_ms = Vec::new();
+    let mut draws_total = 0usize;
+    let mut steps_total = 0usize;
+    for w in workers {
+        let lat = w.join().expect("worker thread");
+        create_ms.extend(lat.create_ms);
+        step_ms.extend(lat.step_ms);
+        draws_total += lat.draws;
+        steps_total += lat.steps;
+    }
+    let load_secs = t_load.elapsed().as_secs_f64();
+    create_ms.sort_by(|a, b| a.total_cmp(b));
+    step_ms.sort_by(|a, b| a.total_cmp(b));
+    let created = create_ms.len();
+    println!(
+        "load: {created} sessions, {steps_total} steps, {draws_total} draws in {load_secs:.2}s ({:.0} draws/s)",
+        draws_total as f64 / load_secs
+    );
+    println!(
+        "create latency ms: p50 {:.3}  p90 {:.3}  p99 {:.3}",
+        percentile(&create_ms, 50.0),
+        percentile(&create_ms, 90.0),
+        percentile(&create_ms, 99.0)
+    );
+    println!(
+        "step   latency ms: p50 {:.3}  p90 {:.3}  p99 {:.3}",
+        percentile(&step_ms, 50.0),
+        percentile(&step_ms, 90.0),
+        percentile(&step_ms, 99.0)
+    );
+
+    // ---- phase 2: deterministic backpressure probe ----
+    // fill the registry to the brim; the next create MUST bounce with
+    // Overloaded + retry_after_ms instead of queueing
+    let mut c = Client::connect(&addr);
+    let mut held = Vec::new();
+    let mut rejected = 0usize;
+    let mut retry_after = None;
+    for i in 0..(MAX_SESSIONS + 3) {
+        let resp = c.rpc(&create_line(1, 90_000 + i as u64));
+        match ok_u64(&resp, "session") {
+            Some(sid) => held.push(sid),
+            None => {
+                assert_eq!(err_code(&resp), Some("Overloaded"), "{resp:?}");
+                retry_after = resp
+                    .get("error")
+                    .and_then(|e| e.get("retry_after_ms"))
+                    .and_then(Json::as_u64);
+                rejected += 1;
+            }
+        }
+    }
+    println!(
+        "backpressure: {} admitted, {rejected} rejected (retry_after_ms {:?})",
+        held.len(),
+        retry_after
+    );
+    for sid in &held {
+        c.rpc(&format!(
+            r#"{{"id":4,"method":"cancel","params":{{"session":{sid}}}}}"#
+        ));
+    }
+
+    // ---- phase 3: drain under load ----
+    // a few long-running sessions mid-step when the shutdown lands; the
+    // registry needs a beat to reap the cancelled probes first
+    let mut drain_ids = Vec::new();
+    for i in 0..DRAIN_SESSIONS {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let resp = c.rpc(&create_line(1, 95_000 + i as u64));
+            if let Some(sid) = ok_u64(&resp, "session") {
+                drain_ids.push(sid);
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "registry never freed a slot for the drain phase: {resp:?}"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+    let steppers: Vec<_> = drain_ids
+        .iter()
+        .map(|&sid| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr);
+                // far more draws than can complete: still mid-step at drain
+                c.rpc(&format!(
+                    r#"{{"id":5,"method":"step","params":{{"session":{sid},"n":50000000}}}}"#
+                ))
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(150));
+    let t_drain = Instant::now();
+    let down = c.rpc(r#"{"id":6,"method":"shutdown"}"#);
+    let drain_ms = t_drain.elapsed().as_secs_f64() * 1e3;
+    let drained = ok_u64(&down, "drained").expect("shutdown frame") as usize;
+    let forced = ok_u64(&down, "forced").unwrap_or(0) as usize;
+    let checkpointed = ok_u64(&down, "checkpointed").unwrap_or(0) as usize;
+    println!(
+        "drain: {drained} drained, {forced} forced, {checkpointed} checkpointed in {drain_ms:.1} ms"
+    );
+    let mut cancelled_cleanly = 0usize;
+    for s in steppers {
+        let resp = s.join().expect("drain stepper");
+        if resp
+            .get("ok")
+            .and_then(|o| o.get("stopped"))
+            .and_then(Json::as_str)
+            == Some("cancelled")
+        {
+            cancelled_cleanly += 1;
+        }
+    }
+    server.join().expect("server thread");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+
+    // ---- self-checks + artifact ----
+    let checks: Vec<(&'static str, Check)> = vec![
+        (
+            "all_sessions_admitted",
+            from_bool(
+                created == per_worker * CLIENT_THREADS,
+                format!("{created} of {} creates admitted", per_worker * CLIENT_THREADS),
+            ),
+        ),
+        (
+            "overload_rejects_not_queues",
+            from_bool(
+                rejected >= 1 && retry_after.is_some(),
+                format!("{rejected} rejections, retry_after {retry_after:?}"),
+            ),
+        ),
+        (
+            "drain_joins_every_session",
+            from_bool(
+                drained == DRAIN_SESSIONS && forced == 0,
+                format!("drained {drained}/{DRAIN_SESSIONS}, forced {forced}"),
+            ),
+        ),
+        (
+            "drain_checkpoints_in_flight_sessions",
+            from_bool(
+                checkpointed >= DRAIN_SESSIONS,
+                format!("{checkpointed} checkpoints for {DRAIN_SESSIONS} in-flight sessions"),
+            ),
+        ),
+        (
+            "in_flight_steps_cancel_at_draw_boundary",
+            from_bool(
+                cancelled_cleanly == DRAIN_SESSIONS,
+                format!("{cancelled_cleanly}/{DRAIN_SESSIONS} steps reported a clean cancel"),
+            ),
+        ),
+        (
+            "drain_within_timeout",
+            from_bool(
+                drain_ms < 10_000.0,
+                format!("drain took {drain_ms:.0} ms against a 10s budget"),
+            ),
+        ),
+    ];
+
+    let mut out = String::from("{\n  \"bench\": \"serve\",\n  \"workload\": \"mh_mu_sessions\",\n");
+    let _ = writeln!(
+        out,
+        "  \"load\": {{\n    \"sessions\": {created},\n    \"steps\": {steps_total},\n    \"draws\": {draws_total},\n    \"client_threads\": {CLIENT_THREADS},\n    \"draws_per_sec\": {:.1},\n    \"create_ms\": {{\"p50\": {:.4}, \"p90\": {:.4}, \"p99\": {:.4}}},\n    \"step_ms\": {{\"p50\": {:.4}, \"p90\": {:.4}, \"p99\": {:.4}}}\n  }},",
+        draws_total as f64 / load_secs,
+        percentile(&create_ms, 50.0),
+        percentile(&create_ms, 90.0),
+        percentile(&create_ms, 99.0),
+        percentile(&step_ms, 50.0),
+        percentile(&step_ms, 90.0),
+        percentile(&step_ms, 99.0)
+    );
+    let _ = writeln!(
+        out,
+        "  \"backpressure\": {{\n    \"max_sessions\": {MAX_SESSIONS},\n    \"rejected_overloaded\": {rejected},\n    \"retry_after_ms\": {}\n  }},",
+        retry_after.unwrap_or(0)
+    );
+    let _ = writeln!(
+        out,
+        "  \"drain\": {{\n    \"in_flight_sessions\": {DRAIN_SESSIONS},\n    \"drained\": {drained},\n    \"forced\": {forced},\n    \"checkpointed\": {checkpointed},\n    \"drain_ms\": {drain_ms:.1}\n  }},"
+    );
+    out.push_str("  \"self_checks\": {\n");
+    for (i, (name, check)) in checks.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "    \"{name}\": {}{}",
+            check.json(),
+            if i + 1 == checks.len() { "" } else { "," }
+        );
+    }
+    out.push_str("  }\n}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_serve.json"))
+        .unwrap_or_else(|| "BENCH_serve.json".into());
+    match std::fs::write(&path, &out) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+
+    let mut failed = false;
+    for (name, check) in &checks {
+        match check {
+            Check::Pass => println!("self-check {name}: ok"),
+            Check::Fail(msg) => {
+                eprintln!("self-check {name} FAILED: {msg}");
+                failed = true;
+            }
+        }
+    }
+    assert!(!failed, "serve load self-checks failed (see above)");
+}

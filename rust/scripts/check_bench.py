@@ -1,21 +1,26 @@
 #!/usr/bin/env python3
-"""Validate BENCH_hotpath.json against its expected schema.
+"""Validate bench artifacts (BENCH_hotpath.json, BENCH_serve.json)
+against their expected schemas.
 
-The perf-trajectory artifact is uploaded from every bench run; this
-gate makes sure it is actually well-formed before it lands — a bench
-refactor that drops a column (or emits NaN/absent self-checks) would
-otherwise silently produce an artifact that breaks trajectory tooling
-weeks later.
+The perf-trajectory artifacts are uploaded from every bench run; this
+gate makes sure they are actually well-formed before they land — a
+bench refactor that drops a column (or emits NaN/absent self-checks)
+would otherwise silently produce an artifact that breaks trajectory
+tooling weeks later.  The artifact's own `bench` field selects the
+schema: "hotpath" (scorer sweeps + micro benches) or "serve" (the
+daemon load smoke: latency percentiles, backpressure, drain report).
 
 Usage:
     python3 scripts/check_bench.py ../BENCH_hotpath.json [--full]
+    python3 scripts/check_bench.py ../BENCH_serve.json
     python3 scripts/check_bench.py --selftest
 
 --full additionally requires the N=1e5 sweep row (the nightly bench;
-the PR smoke pass runs --quick, which stops at N=1e4).
+the PR smoke pass runs --quick, which stops at N=1e4).  It is a no-op
+for serve artifacts.
 
 --selftest validates the validator: it writes synthetic pass/fail
-artifacts (well-formed, and broken in each risk-schema way) to a
+artifacts (well-formed, and broken in each schema-specific way) to a
 temp dir and asserts this script accepts/rejects each one.
 
 Exit status 0 on success, 1 with a readable report on any violation.
@@ -94,6 +99,21 @@ RECOVERY_KEYS = {
     "chains_restarted",
 }
 
+# ---- BENCH_serve.json (the daemon load smoke) ----
+
+SERVE_LOAD_INT_KEYS = {"sessions", "steps", "draws", "client_threads"}
+SERVE_PCTL_KEYS = ("p50", "p90", "p99")
+SERVE_BACKPRESSURE_KEYS = {"max_sessions", "rejected_overloaded", "retry_after_ms"}
+SERVE_DRAIN_KEYS = {"in_flight_sessions", "drained", "forced", "checkpointed", "drain_ms"}
+SERVE_SELF_CHECK_KEYS = {
+    "all_sessions_admitted",
+    "overload_rejects_not_queues",
+    "drain_joins_every_session",
+    "drain_checkpoints_in_flight_sessions",
+    "in_flight_steps_cancel_at_draw_boundary",
+    "drain_within_timeout",
+}
+
 errors = []
 
 
@@ -140,8 +160,8 @@ def check_sweep_row(i, row):
         err(f"scorer_sweep[{i}].parallel_sections_per_sec: unexpected keys {sorted(extra)}")
 
 
-def check_self_checks(checks):
-    for name in sorted(SELF_CHECK_KEYS):
+def check_self_checks(checks, keys):
+    for name in sorted(keys):
         if name not in checks:
             err(f"self_checks: missing {name!r}")
             continue
@@ -151,16 +171,99 @@ def check_self_checks(checks):
         if isinstance(v, str) and v.startswith("skipped"):
             continue  # core-count / quick-sweep gated checks may skip
         err(f"self_checks.{name}: expected true or 'skipped: ...', got {v!r}")
-    extra = set(checks) - SELF_CHECK_KEYS
+    extra = set(checks) - keys
     if extra:
         err(f"self_checks: unexpected keys {sorted(extra)}")
 
 
+def nonneg_int(v):
+    return isinstance(v, int) and not isinstance(v, bool) and v >= 0
+
+
+def check_percentiles(where, obj):
+    """p50/p90/p99 present, positive finite, and monotone."""
+    if not isinstance(obj, dict):
+        err(f"{where}: missing percentile object")
+        return
+    for k in SERVE_PCTL_KEYS:
+        if k not in obj:
+            err(f"{where}: missing {k!r}")
+        elif not positive_finite(obj[k]):
+            err(f"{where}.{k}: expected positive finite number, got {obj[k]!r}")
+    extra = set(obj) - set(SERVE_PCTL_KEYS)
+    if extra:
+        err(f"{where}: unexpected keys {sorted(extra)}")
+    if all(positive_finite(obj.get(k)) for k in SERVE_PCTL_KEYS):
+        if not (obj["p50"] <= obj["p90"] <= obj["p99"]):
+            err(f"{where}: percentiles not monotone "
+                f"(p50 {obj['p50']}, p90 {obj['p90']}, p99 {obj['p99']})")
+
+
+def validate_serve(doc):
+    """Schema checks for the serve load-smoke artifact."""
+    if doc.get("workload") != "mh_mu_sessions":
+        err(f"workload: expected 'mh_mu_sessions', got {doc.get('workload')!r}")
+
+    load = doc.get("load")
+    if not isinstance(load, dict):
+        err("load: missing")
+    else:
+        for key in sorted(SERVE_LOAD_INT_KEYS):
+            if key not in load:
+                err(f"load: missing {key!r}")
+            elif not (nonneg_int(load[key]) and load[key] > 0):
+                err(f"load.{key}: expected positive integer, got {load[key]!r}")
+        if not positive_finite(load.get("draws_per_sec")):
+            err(f"load.draws_per_sec: expected positive finite number, "
+                f"got {load.get('draws_per_sec')!r}")
+        check_percentiles("load.create_ms", load.get("create_ms"))
+        check_percentiles("load.step_ms", load.get("step_ms"))
+
+    bp = doc.get("backpressure")
+    if not isinstance(bp, dict):
+        err("backpressure: missing")
+    else:
+        for key in sorted(SERVE_BACKPRESSURE_KEYS - set(bp)):
+            err(f"backpressure: missing {key!r}")
+        extra = set(bp) - SERVE_BACKPRESSURE_KEYS
+        if extra:
+            err(f"backpressure: unexpected keys {sorted(extra)}")
+        for key in sorted(SERVE_BACKPRESSURE_KEYS & set(bp)):
+            if not nonneg_int(bp[key]):
+                err(f"backpressure.{key}: expected non-negative integer, got {bp[key]!r}")
+
+    drain = doc.get("drain")
+    if not isinstance(drain, dict):
+        err("drain: missing")
+    else:
+        for key in sorted(SERVE_DRAIN_KEYS - set(drain)):
+            err(f"drain: missing {key!r}")
+        extra = set(drain) - SERVE_DRAIN_KEYS
+        if extra:
+            err(f"drain: unexpected keys {sorted(extra)}")
+        for key in sorted((SERVE_DRAIN_KEYS - {"drain_ms"}) & set(drain)):
+            if not nonneg_int(drain[key]):
+                err(f"drain.{key}: expected non-negative integer, got {drain[key]!r}")
+        if "drain_ms" in drain and not positive_finite(drain["drain_ms"]):
+            err(f"drain.drain_ms: expected positive finite number, got {drain['drain_ms']!r}")
+
+    checks = doc.get("self_checks")
+    if not isinstance(checks, dict):
+        err("self_checks: missing")
+    else:
+        check_self_checks(checks, SERVE_SELF_CHECK_KEYS)
+
+
 def validate(doc, full):
-    """Run every schema check on a parsed artifact; returns the error list."""
+    """Run every schema check on a parsed artifact; returns the error list.
+    The artifact's `bench` field picks the schema."""
     errors.clear()
-    if doc.get("bench") != "hotpath":
-        err(f"bench: expected 'hotpath', got {doc.get('bench')!r}")
+    bench = doc.get("bench")
+    if bench == "serve":
+        validate_serve(doc)
+        return list(errors)
+    if bench != "hotpath":
+        err(f"bench: expected 'hotpath' or 'serve', got {bench!r}")
     if doc.get("workload") != "bayes_lr":
         err(f"workload: expected 'bayes_lr', got {doc.get('workload')!r}")
 
@@ -226,7 +329,7 @@ def validate(doc, full):
     if not isinstance(checks, dict):
         err("self_checks: missing (bench predates the self-describing artifact?)")
     else:
-        check_self_checks(checks)
+        check_self_checks(checks, SELF_CHECK_KEYS)
 
     return list(errors)
 
@@ -248,6 +351,15 @@ def check_file(path, full):
         for e in problems:
             print(f"  - {e}", file=sys.stderr)
         return 1
+    if doc.get("bench") == "serve":
+        load = doc.get("load", {})
+        drain = doc.get("drain", {})
+        print(f"check_bench: {path} ok ({load.get('sessions')} sessions, "
+              f"{load.get('draws')} draws, "
+              f"{doc.get('backpressure', {}).get('rejected_overloaded')} rejected, "
+              f"drain {drain.get('drained')}+{drain.get('forced')} forced, "
+              f"self-checks clean)")
+        return 0
     sweep = doc.get("scorer_sweep") or []
     ns = {row.get("n") for row in sweep}
     print(f"check_bench: {path} ok ({len(sweep)} sweep rows, N = {sorted(ns)}, "
@@ -278,6 +390,28 @@ def synthetic_doc():
         "risk_adaptive": {"target_risk": 0.05, "realized_risk": 1.3e-4},
         "recovery_counters": {k: 0 for k in RECOVERY_KEYS},
         "self_checks": {k: True for k in SELF_CHECK_KEYS},
+    }
+
+
+def synthetic_serve_doc():
+    """A minimal serve artifact that passes every schema check."""
+    return {
+        "bench": "serve",
+        "workload": "mh_mu_sessions",
+        "load": {
+            "sessions": 200, "steps": 600, "draws": 12_000,
+            "client_threads": 8, "draws_per_sec": 85_000.0,
+            "create_ms": {"p50": 0.4, "p90": 0.9, "p99": 2.1},
+            "step_ms": {"p50": 0.3, "p90": 0.7, "p99": 1.8},
+        },
+        "backpressure": {
+            "max_sessions": 32, "rejected_overloaded": 3, "retry_after_ms": 100,
+        },
+        "drain": {
+            "in_flight_sessions": 4, "drained": 4, "forced": 0,
+            "checkpointed": 4, "drain_ms": 41.5,
+        },
+        "self_checks": {k: True for k in SERVE_SELF_CHECK_KEYS},
     }
 
 
@@ -316,24 +450,48 @@ def selftest():
         ("risk_micro_missing",
          lambda d: d["micro_us"].pop("subsampled_transition_risk_adaptive"), False),
     ]
+    # (name, mutation, expect_ok) against the serve artifact
+    serve_cases = [
+        ("serve_valid", lambda d: None, True),
+        ("serve_unknown_bench", mutate(["bench"], "daemon"), False),
+        ("serve_load_missing", lambda d: d.pop("load"), False),
+        ("serve_percentiles_inverted",
+         mutate(["load", "step_ms", "p99"], 0.01), False),
+        ("serve_percentile_missing",
+         lambda d: d["load"]["create_ms"].pop("p90"), False),
+        ("serve_draws_per_sec_nan",
+         mutate(["load", "draws_per_sec"], float("nan")), False),
+        ("serve_backpressure_missing", lambda d: d.pop("backpressure"), False),
+        ("serve_rejected_negative",
+         mutate(["backpressure", "rejected_overloaded"], -1), False),
+        ("serve_drain_missing", lambda d: d.pop("drain"), False),
+        ("serve_drained_string", mutate(["drain", "drained"], "4"), False),
+        ("serve_forced_drain_check_failed",
+         mutate(["self_checks", "drain_joins_every_session"], False), False),
+        ("serve_check_missing",
+         lambda d: d["self_checks"].pop("overload_rejects_not_queues"), False),
+        ("serve_zero_rejections_ok",
+         mutate(["backpressure", "rejected_overloaded"], 0), True),
+    ]
     failures = []
     with tempfile.TemporaryDirectory() as tmp:
-        for name, break_it, expect_ok in cases:
-            doc = copy.deepcopy(synthetic_doc())
-            break_it(doc)
-            path = os.path.join(tmp, f"{name}.json")
-            with open(path, "w") as f:
-                json.dump(doc, f)
-            ok = check_file(path, full=False) == 0
-            verdict = "ok" if ok == expect_ok else "WRONG"
-            print(f"selftest {name}: expected {'pass' if expect_ok else 'fail'}, "
-                  f"got {'pass' if ok else 'fail'} — {verdict}")
-            if ok != expect_ok:
-                failures.append(name)
+        for base, suite in ((synthetic_doc, cases), (synthetic_serve_doc, serve_cases)):
+            for name, break_it, expect_ok in suite:
+                doc = copy.deepcopy(base())
+                break_it(doc)
+                path = os.path.join(tmp, f"{name}.json")
+                with open(path, "w") as f:
+                    json.dump(doc, f)
+                ok = check_file(path, full=False) == 0
+                verdict = "ok" if ok == expect_ok else "WRONG"
+                print(f"selftest {name}: expected {'pass' if expect_ok else 'fail'}, "
+                      f"got {'pass' if ok else 'fail'} — {verdict}")
+                if ok != expect_ok:
+                    failures.append(name)
     if failures:
         print(f"check_bench --selftest FAILED: {failures}", file=sys.stderr)
         return 1
-    print(f"check_bench --selftest ok ({len(cases)} synthetic artifacts)")
+    print(f"check_bench --selftest ok ({len(cases) + len(serve_cases)} synthetic artifacts)")
     return 0
 
 

@@ -85,6 +85,7 @@ pub fn fig5_sublinear(cfg: &Fig5Config, evaluator: &mut dyn LocalEvaluator) -> V
             exact: true,
             threads: 0,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         for _ in 0..5 {
             subsampled_mh_transition(&mut trace, &mut rng, w, &warm, evaluator).unwrap();
@@ -236,6 +237,7 @@ pub fn fig4_reference(
         exact: true,
         threads: 0,
         target_risk: None,
+        shard_timeout_ms: 0,
     };
     let mut acc = PredictiveAccumulator::new(test.n());
     for i in 0..(cfg.steps * 2) {
@@ -282,6 +284,7 @@ pub fn fig4_curve(
         exact,
         threads: 0,
         target_risk,
+        shard_timeout_ms: 0,
     };
     let mut acc = PredictiveAccumulator::new(test.n());
     let mut points = Vec::new();
@@ -424,6 +427,7 @@ pub fn fig6_dpm(cfg: &Fig6Config, subsampled: bool) -> Vec<Fig6Point> {
         exact: !subsampled,
         threads: 0,
         target_risk: None,
+        shard_timeout_ms: 0,
     };
     let mut ev = PlannedEval::for_config(&kcfg);
     let alpha = trace.lookup_node("alpha").unwrap();
@@ -607,6 +611,7 @@ pub fn fig9_sv_monitored(
         exact: !subsampled,
         threads: 0,
         target_risk: if subsampled { cfg.target_risk } else { None },
+        shard_timeout_ms: 0,
     };
     let mut ev = PlannedEval::for_config(&kcfg);
     let mut phi_samples = Vec::with_capacity(cfg.sweeps);
@@ -773,6 +778,7 @@ pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
                 exact: true,
                 threads: 0,
                 target_risk: None,
+                shard_timeout_ms: 0,
             };
             let iters = 10;
             let t0 = Instant::now();
@@ -810,6 +816,7 @@ pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
                 exact: true,
                 threads: 0,
                 target_risk: None,
+                shard_timeout_ms: 0,
             };
             let iters = 10;
             let t0 = Instant::now();
@@ -849,6 +856,7 @@ pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
                 exact: true,
                 threads: 0,
                 target_risk: None,
+                shard_timeout_ms: 0,
             };
             let iters = 5;
             let t0 = Instant::now();

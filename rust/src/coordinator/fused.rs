@@ -706,6 +706,7 @@ mod tests {
             exact: false,
             threads: 1,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         let mut fused = FusedEval::open_default().unwrap().always_fused();
         let mut accepted = 0;

@@ -16,7 +16,8 @@ pub use checkpoint::{ChainCheckpoint, CheckpointCtl};
 pub use fused::FusedEval;
 pub use monitor::{monitor_csv, ChainEvent, ConvergenceMonitor, DiagSnapshot, ParamDiag};
 pub use multichain::{
-    chain_rng, run_chains, run_chains_gated, run_chains_global, run_chains_monitored,
-    run_chains_supervised, BufferedSink, ChainSink, SupervisorConfig,
+    chain_lane, chain_rng, run_chains, run_chains_gated, run_chains_global,
+    run_chains_monitored, run_chains_supervised, BufferedSink, ChainLane, ChainSink,
+    SupervisorConfig,
 };
 pub use report::{histogram, results_dir, Csv, Table};

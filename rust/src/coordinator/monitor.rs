@@ -131,6 +131,17 @@ impl DiagSnapshot {
                 .all(|p| p.rank_rhat.is_finite() && p.rank_rhat < target)
     }
 
+    /// Sections this snapshot's interval actually scored, whichever
+    /// evaluator tier did the scoring (batched/gathered/fallback are
+    /// tier splits of `planned`; sharded/stolen are placement splits) —
+    /// the per-interval term of the draws-to-gate accounting.  Summing
+    /// it over the snapshots up to a gate gives total compute-to-
+    /// convergence, the number that makes fixed-eps and `--target-risk`
+    /// runs comparable.
+    pub fn sections_scored(&self) -> usize {
+        self.eval.planned + self.eval.fallback
+    }
+
     /// Worst (largest) R̂ across parameters, taking the rank-normalized
     /// variant into account — the single number to gate on.  NaN
     /// poisons the result (a parameter that produced no usable draws
@@ -175,9 +186,12 @@ pub fn monitor_csv(groups: &[(&str, &[DiagSnapshot])]) -> Csv {
         "store_evicted",
         "risk_transitions",
         "realized_risk",
+        "cum_sections",
     ]);
     for (label, snaps) in groups {
+        let mut cum_sections = 0usize;
         for s in *snaps {
+            cum_sections += s.sections_scored();
             for (pi, p) in s.params.iter().enumerate() {
                 // the eval counters are snapshot-scoped, not
                 // per-parameter: emit them on the snapshot's first row
@@ -212,6 +226,11 @@ pub fn monitor_csv(groups: &[(&str, &[DiagSnapshot])]) -> Csv {
                     } else {
                         String::new()
                     },
+                    // running total of sections scored by this run up
+                    // to (and including) this snapshot — the
+                    // compute-to-convergence axis for draws-to-gate
+                    // comparisons (first-row only, like the counters)
+                    ev(cum_sections),
                 ]);
             }
         }

@@ -33,7 +33,7 @@ use crate::math::Pcg64;
 use crate::runtime::pool::WorkerPool;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
 /// RNG stream offset for chain replicas, keeping them disjoint from the
@@ -173,6 +173,52 @@ impl ChainSink {
             rows: Vec::new(),
             stats: None,
         }
+    }
+
+    /// Set the restart count folded into every subsequent stats
+    /// snapshot (the serve session supervisor bumps this after each
+    /// `catch_unwind` recovery, mirroring what
+    /// [`run_chains_supervised`] does when it rebuilds a sink).
+    pub fn set_restarts(&mut self, restarts: usize) {
+        self.restarts = restarts;
+    }
+}
+
+/// A standalone event lane for one chain outside the multichain
+/// drivers — the serve daemon gives each session its own.  The returned
+/// [`ChainSink`] is the write end (identical plumbing to
+/// [`run_chains_monitored`]'s, including the shared stop flag) and the
+/// [`ChainLane`] is the read end the owner drains at draw boundaries.
+pub fn chain_lane(chain: usize, stop: Arc<AtomicBool>) -> (ChainSink, ChainLane) {
+    let (tx, rx) = channel::<MonitorMsg>();
+    (
+        ChainSink {
+            chain,
+            tx,
+            stop,
+            restarts: 0,
+        },
+        ChainLane { rx },
+    )
+}
+
+/// Read end of a [`chain_lane`].
+pub struct ChainLane {
+    rx: Receiver<MonitorMsg>,
+}
+
+impl ChainLane {
+    /// Every event flushed so far (non-blocking).  `Done` markers are
+    /// skipped — a standalone lane lives exactly as long as its
+    /// session, so there is no multi-chain completion protocol here.
+    pub fn drain(&self) -> Vec<ChainEvent> {
+        let mut out = Vec::new();
+        while let Ok(msg) = self.rx.try_recv() {
+            if let MonitorMsg::Event(ev) = msg {
+                out.push(ev);
+            }
+        }
+        out
     }
 }
 

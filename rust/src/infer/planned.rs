@@ -354,9 +354,22 @@ impl PlannedEval {
     pub fn for_config(cfg: &SubsampledConfig) -> PlannedEval {
         if resolve_threads(cfg.threads) > 1 {
             PlannedEval::with_pool(WorkerPool::global().clone())
+                .with_shard_timeout(cfg.shard_timeout_ms)
         } else {
             PlannedEval::new()
         }
+    }
+
+    /// Override the shard-watchdog result deadline for this evaluator
+    /// (`0` keeps the process default — `SUBPPL_SHARD_TIMEOUT_MS`, else
+    /// 1000ms).  No-op for sequential evaluators.
+    pub fn with_shard_timeout(mut self, ms: u64) -> PlannedEval {
+        if ms > 0 {
+            if let Some(s) = self.shard.as_mut() {
+                s.timeout = std::time::Duration::from_millis(ms);
+            }
+        }
+        self
     }
 
     /// Lower the parallel-dispatch cutoff (tests force the sharded path
@@ -1014,6 +1027,7 @@ mod tests {
             exact: false,
             threads: 1,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         let mut ev = PlannedEval::new();
         let monotone = |a: &EvalStats, b: &EvalStats| {
@@ -1089,6 +1103,7 @@ mod tests {
             exact: false,
             threads: 1,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         let mut ev = PlannedEval::new().with_colstore(true);
         let sample_live = |trace: &mut Trace, rng: &mut Pcg64, ev: &mut PlannedEval| {
@@ -1149,6 +1164,7 @@ mod tests {
             exact: false,
             threads: 1,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         let mut ev = PlannedEval::new();
         let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());

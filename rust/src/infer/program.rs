@@ -84,6 +84,21 @@ impl InfCmd {
             _ => {}
         }
     }
+
+    /// Set the shard-watchdog deadline for every `subsampled_mh`
+    /// command in this program (the CLI's `--shard-timeout-ms` / a
+    /// serve session's per-session value; `0` = process default).
+    pub fn set_shard_timeout_ms(&mut self, ms: u64) {
+        match self {
+            InfCmd::SubsampledMh { cfg, .. } => cfg.shard_timeout_ms = ms,
+            InfCmd::Cycle { cmds, .. } => {
+                for c in cmds {
+                    c.set_shard_timeout_ms(ms);
+                }
+            }
+            _ => {}
+        }
+    }
 }
 
 /// Aggregate statistics of an inference run.
@@ -307,6 +322,7 @@ fn convert(expr: &Rc<Expr>) -> Result<InfCmd, String> {
                     exact: false,
                     threads: 0,
                     target_risk: None,
+                    shard_timeout_ms: 0,
                 },
                 steps,
             })

@@ -51,6 +51,14 @@ pub struct SubsampledConfig {
     /// floor size).  When `None`, rounds are a fixed `m` sections and
     /// `eps` is used, exactly as before.
     pub target_risk: Option<f64>,
+    /// Shard-watchdog result deadline in milliseconds for this config's
+    /// parallel evaluator (`0` = the process default: the
+    /// `SUBPPL_SHARD_TIMEOUT_MS` env var, else 1000ms).  Per-config so
+    /// concurrent serve sessions can each pick their own deadline —
+    /// env-only knobs don't compose across sessions in one process.
+    /// Purely a recovery-latency knob: the watchdog's inline re-run is
+    /// bitwise identical to the shard it replaces.
+    pub shard_timeout_ms: u64,
 }
 
 impl SubsampledConfig {
@@ -62,6 +70,7 @@ impl SubsampledConfig {
             exact: false,
             threads: 0,
             target_risk: None,
+            shard_timeout_ms: 0,
         }
     }
 }
@@ -333,6 +342,14 @@ pub fn subsampled_mh_transition(
         // and replays one op list per group)
         let mut roots: Vec<NodeId> = Vec::with_capacity(cfg.m.max(1));
         while decided.is_none() {
+            // deterministic mid-transition cancellation point: the
+            // `cancel@k` fault flips every registered stop flag between
+            // mini-batch rounds; the caller observes it at its next
+            // sweep/draw boundary, after this transition commits or
+            // rejects atomically (tests/serve.rs pins "never torn")
+            if crate::runtime::faults::cancel_mid_transition_now() {
+                crate::runtime::faults::trip_cancel_flags();
+            }
             let take = match &ctrl {
                 Some(c) => c.next_take(&test, sampler.remaining()),
                 None => cfg.m.min(sampler.remaining()),
@@ -451,6 +468,7 @@ mod tests {
             exact: false,
             threads: 1,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         let mut ev = InterpreterEval;
         let mut total = 0usize;
@@ -479,6 +497,7 @@ mod tests {
             exact: true,
             threads: 1,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         let mut ev = InterpreterEval;
         let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());
@@ -511,6 +530,7 @@ mod tests {
             exact: false,
             threads: 1,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         let mut ev = InterpreterEval;
         let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());
@@ -546,6 +566,7 @@ mod tests {
             exact: false,
             threads: 1,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         let mut ev = InterpreterEval;
         for _ in 0..50 {
@@ -643,6 +664,7 @@ mod tests {
             exact: false,
             threads: 1,
             target_risk: Some(target),
+            shard_timeout_ms: 0,
         };
         let mut ev = RiskCapture {
             inner: InterpreterEval,

@@ -24,6 +24,7 @@ pub mod infer;
 pub mod math;
 pub mod ppl;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod trace;
 

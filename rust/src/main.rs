@@ -9,6 +9,10 @@
 //! subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused]
 //!            [--target-risk R] [--threads T] [--chains R]
 //!            [--monitor-every K] [--monitor-gate R]
+//! subppl serve [--addr HOST:PORT] [--max-sessions N]
+//!            [--session-deadline-ms MS] [--drain-timeout-ms MS]
+//!            [--seed N] [--queue-cap N] [--checkpoint-dir D]
+//!            [--shard-timeout-ms MS] [--threads T]
 //! subppl artifacts                 # list the AOT artifact registry
 //! ```
 //!
@@ -84,12 +88,62 @@ fn run(args: &[String]) -> Result<(), String> {
         Some("run") => cmd_run(args),
         Some("experiment") => cmd_experiment(args),
         Some("artifacts") => cmd_artifacts(),
+        Some("serve") => cmd_serve(args),
         _ => {
             eprintln!(
-                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--target-risk R] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R] [--checkpoint-every K --checkpoint-dir D] [--resume]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused] [--target-risk R] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]\n  subppl artifacts"
+                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--target-risk R] [--shard-timeout-ms MS] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R] [--checkpoint-every K --checkpoint-dir D] [--resume]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused] [--target-risk R] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]\n  subppl serve [--addr HOST:PORT] [--max-sessions N] [--session-deadline-ms MS] [--drain-timeout-ms MS] [--seed N] [--queue-cap N] [--checkpoint-dir D] [--shard-timeout-ms MS] [--threads T]\n  subppl artifacts"
             );
             Err("missing or unknown subcommand".into())
         }
+    }
+}
+
+/// `subppl serve`: the inference-as-a-service daemon (see
+/// `serve/server.rs` for the robustness ladder: admission control,
+/// bounded queues, deadlines, panic isolation, graceful drain).
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    let parse_u64 = |name: &str, default: u64| -> Result<u64, String> {
+        match opt(args, name) {
+            Some(s) => s.parse().map_err(|_| format!("bad {name}")),
+            None => Ok(default),
+        }
+    };
+    let session_deadline_ms = parse_u64("--session-deadline-ms", 0)?;
+    let cfg = subppl::serve::ServeCfg {
+        addr: opt(args, "--addr").unwrap_or("127.0.0.1:7777").to_string(),
+        max_sessions: parse_u64("--max-sessions", 64)? as usize,
+        session_deadline: (session_deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(session_deadline_ms)),
+        drain_timeout: std::time::Duration::from_millis(parse_u64("--drain-timeout-ms", 5000)?),
+        seed: parse_u64("--seed", 0)?,
+        queue_cap: parse_u64("--queue-cap", 4)? as usize,
+        checkpoint_dir: opt(args, "--checkpoint-dir").map(std::path::PathBuf::from),
+        shard_timeout_ms: parse_u64("--shard-timeout-ms", 0)?,
+        // sessions shard intra-draw scoring across the shared pool
+        // unless --threads resolves to a single worker
+        use_pool: pool_for(args).is_some(),
+    };
+    subppl::serve::serve(cfg)
+}
+
+/// Draws-to-gate accounting line: with a gate, reports where it fired
+/// and the total sections the run scored getting there — the
+/// compute-to-convergence number that makes fixed-eps and
+/// `--target-risk` runs comparable (ROADMAP "Draws-to-gate
+/// accounting").  Without a gate it still reports total sections.
+fn print_gate_summary(gate: Option<f64>, gated_at: Option<usize>, cum_sections: usize) {
+    match (gate, gated_at) {
+        (Some(r), Some(n)) => println!(
+            "[monitor] draws-to-gate: {n}/chain (rank R-hat < {r}), \
+             sections scored: {cum_sections}"
+        ),
+        (Some(r), None) => println!(
+            "[monitor] gate rank R-hat < {r} not reached; sections scored: {cum_sections}"
+        ),
+        (None, _) if cum_sections > 0 => {
+            println!("[monitor] sections scored: {cum_sections}")
+        }
+        _ => {}
     }
 }
 
@@ -115,6 +169,7 @@ fn run_one_chain(
     src: &str,
     infer_prog: Option<&str>,
     target_risk: Option<f64>,
+    shard_timeout_ms: u64,
     names: &[String],
     samples: usize,
     pool: Option<Arc<WorkerPool>>,
@@ -136,8 +191,13 @@ fn run_one_chain(
             // in the inference program are affected
             cmd.set_target_risk(tr);
         }
+        if shard_timeout_ms > 0 {
+            cmd.set_shard_timeout_ms(shard_timeout_ms);
+        }
         let mut ev: Box<dyn LocalEvaluator> = match pool {
-            Some(p) => Box::new(PlannedEval::with_pool(p)),
+            Some(p) => {
+                Box::new(PlannedEval::with_pool(p).with_shard_timeout(shard_timeout_ms))
+            }
             None => Box::new(PlannedEval::new()),
         };
         let mut sums: Vec<f64> = vec![0.0; names.len()];
@@ -240,6 +300,12 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     if target_risk.is_some() && infer_prog.is_none() {
         return Err("--target-risk needs --infer (it tunes subsampled_mh mini-batches)".into());
     }
+    // per-run shard-watchdog deadline (satellite: the env var is
+    // process-global and doesn't compose across concurrent sessions)
+    let shard_timeout_ms: u64 = opt(args, "--shard-timeout-ms")
+        .unwrap_or("0")
+        .parse()
+        .map_err(|_| "bad --shard-timeout-ms")?;
     let monitor_every: usize = opt(args, "--monitor-every")
         .unwrap_or("0")
         .parse()
@@ -288,6 +354,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                     &src,
                     infer_prog.as_deref(),
                     target_risk,
+                    shard_timeout_ms,
                     &names_c,
                     samples,
                     None,
@@ -309,6 +376,9 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             let use_sink = monitor_every > 0;
             let mut mon = use_sink.then(|| ConvergenceMonitor::new(chains, &names, monitor_every));
             let mut gated_at: Option<usize> = None;
+            // draws-to-gate accounting: total sections scored across
+            // all snapshots (compute-to-convergence when a gate fires)
+            let mut cum_sections = 0usize;
             let results = multichain::run_chains_supervised(
                 &pool,
                 chains,
@@ -321,6 +391,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                         m.absorb(ev);
                         for snap in m.ready_snapshots() {
                             println!("{}", snap.render());
+                            cum_sections += snap.sections_scored();
                             let fired = gated_at.is_none()
                                 && monitor_gate.is_some_and(|r| snap.gate_passed(r));
                             if fired {
@@ -339,7 +410,9 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             )?;
             if let Some(fin) = mon.as_mut().and_then(|m| m.finish()) {
                 println!("{}", fin.render());
+                cum_sections += fin.sections_scored();
             }
+            print_gate_summary(monitor_gate, gated_at, cum_sections);
             results
         } else if monitor_every > 0 {
             // live convergence lines as every chain crosses each
@@ -349,6 +422,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             // watched parameter's rank-R-hat is below the target.
             let mut mon = ConvergenceMonitor::new(chains, &names, monitor_every);
             let mut gated_at: Option<usize> = None;
+            let mut cum_sections = 0usize;
             let results = multichain::run_chains_gated(
                 &pool,
                 chains,
@@ -359,6 +433,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                     let mut keep_going = true;
                     for snap in mon.ready_snapshots() {
                         println!("{}", snap.render());
+                        cum_sections += snap.sections_scored();
                         let fired = gated_at.is_none()
                             && monitor_gate.is_some_and(|r| snap.gate_passed(r));
                         if fired {
@@ -377,7 +452,9 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             // end-of-run snapshot (deduped against the last boundary)
             if let Some(fin) = mon.finish() {
                 println!("{}", fin.render());
+                cum_sections += fin.sections_scored();
             }
+            print_gate_summary(monitor_gate, gated_at, cum_sections);
             results
         } else {
             multichain::run_chains(&pool, chains, seed, move |c, rng| {
@@ -414,6 +491,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         &src,
         infer_prog.as_deref(),
         target_risk,
+        shard_timeout_ms,
         &names,
         samples,
         pool,
@@ -683,10 +761,40 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
                     for s in &snaps {
                         println!("{label} {}", s.render());
                     }
-                    if let Some(r) = monitor_gate {
-                        if snaps.iter().any(|s| s.gate_passed(r)) {
-                            println!("{label}: monitor gate rank R-hat < {r} reached — trials stopped early");
+                    // draws-to-gate accounting per method: where the
+                    // gate fired and the sections consumed up to it /
+                    // in total, so fixed-eps and --target-risk methods
+                    // compare on compute-to-convergence (the same
+                    // running total lands in fig9_monitor.csv's
+                    // cum_sections column)
+                    let total_sections: usize =
+                        snaps.iter().map(|s| s.sections_scored()).sum();
+                    match monitor_gate {
+                        Some(r) => {
+                            let mut to_gate = 0usize;
+                            let mut gate_draws = None;
+                            for s in &snaps {
+                                to_gate += s.sections_scored();
+                                if s.gate_passed(r) {
+                                    gate_draws = Some(s.draws_per_chain);
+                                    break;
+                                }
+                            }
+                            match gate_draws {
+                                Some(n) => println!(
+                                    "{label}: draws-to-gate {n}/trial (rank R-hat < {r}), \
+                                     sections-to-gate {to_gate}, total sections {total_sections}"
+                                ),
+                                None => println!(
+                                    "{label}: gate rank R-hat < {r} not reached, \
+                                     total sections {total_sections}"
+                                ),
+                            }
                         }
+                        None if total_sections > 0 => {
+                            println!("{label}: total sections {total_sections}")
+                        }
+                        None => {}
                     }
                     all_snaps.push((label, snaps));
                 }

@@ -16,14 +16,18 @@
 //! Fire-once is also what makes recovery testable: when the watchdog
 //! re-runs a faulted shard, the re-run cannot re-fault.
 //!
-//! The four faults and where they hook in:
+//! The faults and where they hook in:
 //!
-//! | fault    | event counted                      | hook site                          |
-//! |----------|------------------------------------|------------------------------------|
-//! | `panic`  | shard-job kernel execution         | `runtime/pool.rs::run_shard_job`   |
-//! | `stall`  | shard job picked up by a worker    | `runtime/pool.rs::worker_loop`     |
-//! | `poison` | column-store member row refresh    | `trace/colstore.rs::refresh_member`|
-//! | `nan`    | store-tier group evaluation        | `infer/planned.rs::eval_group_store`|
+//! | fault        | event counted                      | hook site                          |
+//! |--------------|------------------------------------|------------------------------------|
+//! | `panic`      | shard-job kernel execution         | `runtime/pool.rs::run_shard_job`   |
+//! | `stall`      | shard job picked up by a worker    | `runtime/pool.rs::worker_loop`     |
+//! | `poison`     | column-store member row refresh    | `trace/colstore.rs::refresh_member`|
+//! | `nan`        | store-tier group evaluation        | `infer/planned.rs::eval_group_store`|
+//! | `spanic`     | serve-session draw                 | `serve/session.rs::Session::step`  |
+//! | `cancel`     | subsampled-MH mini-batch round     | `infer/subsampled_mh.rs` (trips all registered cancel flags) |
+//! | `slowloris`  | streamed serve event write         | `serve/server.rs` (wedges the subscriber writer) |
+//! | `disconnect` | streamed serve event write         | `serve/server.rs` (drops the client connection) |
 
 #[cfg(feature = "fault-inject")]
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -42,11 +46,25 @@ pub struct FaultPlan {
     /// Overwrite one section score with NaN on the k-th store-tier
     /// group evaluation (so the NaN cross-check fires).
     pub nan_at: u64,
+    /// Panic a serve session's model step on its k-th draw (exercises
+    /// the session supervisor's catch_unwind + checkpoint replay).
+    pub spanic_at: u64,
+    /// Trip every registered cancel flag ([`register_cancel_flag`]) at
+    /// the k-th subsampled-MH mini-batch round — a deterministic
+    /// mid-transition cancellation for torn-trace tests.
+    pub cancel_at: u64,
+    /// Wedge the serve subscriber writer on the k-th streamed event
+    /// write (a client that stops reading — slowloris).
+    pub slowloris_at: u64,
+    /// Drop the serve client connection on the k-th streamed event
+    /// write (mid-stream disconnect).
+    pub disconnect_at: u64,
 }
 
 impl FaultPlan {
     /// Parse the `SUBPPL_FAULTS` syntax: a comma-separated list of
-    /// `kind@k` entries, kinds `panic` / `stall` / `poison` / `nan`.
+    /// `kind@k` entries, kinds `panic` / `stall` / `poison` / `nan` /
+    /// `spanic` / `cancel` / `slowloris` / `disconnect`.
     pub fn parse(s: &str) -> Result<FaultPlan, String> {
         let mut plan = FaultPlan::default();
         for entry in s.split(',').map(str::trim).filter(|e| !e.is_empty()) {
@@ -61,6 +79,10 @@ impl FaultPlan {
                 "stall" => plan.stall_at = k,
                 "poison" => plan.poison_at = k,
                 "nan" => plan.nan_at = k,
+                "spanic" => plan.spanic_at = k,
+                "cancel" => plan.cancel_at = k,
+                "slowloris" => plan.slowloris_at = k,
+                "disconnect" => plan.disconnect_at = k,
                 other => return Err(format!("unknown fault kind {other:?}")),
             }
         }
@@ -80,6 +102,14 @@ mod armed {
     pub static POISON_SEEN: AtomicU64 = AtomicU64::new(0);
     pub static NAN_AT: AtomicU64 = AtomicU64::new(0);
     pub static NAN_SEEN: AtomicU64 = AtomicU64::new(0);
+    pub static SPANIC_AT: AtomicU64 = AtomicU64::new(0);
+    pub static SPANIC_SEEN: AtomicU64 = AtomicU64::new(0);
+    pub static CANCEL_AT: AtomicU64 = AtomicU64::new(0);
+    pub static CANCEL_SEEN: AtomicU64 = AtomicU64::new(0);
+    pub static SLOWLORIS_AT: AtomicU64 = AtomicU64::new(0);
+    pub static SLOWLORIS_SEEN: AtomicU64 = AtomicU64::new(0);
+    pub static DISCONNECT_AT: AtomicU64 = AtomicU64::new(0);
+    pub static DISCONNECT_SEEN: AtomicU64 = AtomicU64::new(0);
 
     /// Set once [`install`] has been called, so the lazy `SUBPPL_FAULTS`
     /// read can never overwrite a programmatic plan.
@@ -109,6 +139,14 @@ mod armed {
         POISON_SEEN.store(0, Ordering::SeqCst);
         NAN_AT.store(plan.nan_at, Ordering::SeqCst);
         NAN_SEEN.store(0, Ordering::SeqCst);
+        SPANIC_AT.store(plan.spanic_at, Ordering::SeqCst);
+        SPANIC_SEEN.store(0, Ordering::SeqCst);
+        CANCEL_AT.store(plan.cancel_at, Ordering::SeqCst);
+        CANCEL_SEEN.store(0, Ordering::SeqCst);
+        SLOWLORIS_AT.store(plan.slowloris_at, Ordering::SeqCst);
+        SLOWLORIS_SEEN.store(0, Ordering::SeqCst);
+        DISCONNECT_AT.store(plan.disconnect_at, Ordering::SeqCst);
+        DISCONNECT_SEEN.store(0, Ordering::SeqCst);
     }
 
     /// Count one event; true exactly when this is the k-th.
@@ -180,6 +218,74 @@ hook!(
     NAN_AT,
     NAN_SEEN
 );
+hook!(
+    /// Should this serve-session draw panic?
+    session_panic_now,
+    SPANIC_AT,
+    SPANIC_SEEN
+);
+hook!(
+    /// Should this mini-batch round trip every registered cancel flag?
+    cancel_mid_transition_now,
+    CANCEL_AT,
+    CANCEL_SEEN
+);
+hook!(
+    /// Should this streamed event write wedge (client stopped reading)?
+    slowloris_write_now,
+    SLOWLORIS_AT,
+    SLOWLORIS_SEEN
+);
+hook!(
+    /// Should this streamed event write drop the connection?
+    disconnect_write_now,
+    DISCONNECT_AT,
+    DISCONNECT_SEEN
+);
+
+/// Registry of cancel flags the `cancel@k` fault trips.  Sessions (and
+/// the cancellation-correctness test) register their stop flag here;
+/// when the armed hook fires mid-transition it flips every live flag,
+/// giving a deterministic mid-transition cancellation point.  Weak
+/// references, so a finished session's flag just drops out.
+#[cfg(feature = "fault-inject")]
+mod cancel_registry {
+    use std::sync::atomic::AtomicBool;
+    use std::sync::{Arc, Mutex, Weak};
+
+    static FLAGS: Mutex<Vec<Weak<AtomicBool>>> = Mutex::new(Vec::new());
+
+    pub fn register(flag: &Arc<AtomicBool>) {
+        FLAGS.lock().unwrap().push(Arc::downgrade(flag));
+    }
+
+    pub fn trip_all() {
+        let mut flags = FLAGS.lock().unwrap();
+        flags.retain(|w| match w.upgrade() {
+            Some(f) => {
+                f.store(true, std::sync::atomic::Ordering::SeqCst);
+                true
+            }
+            None => false,
+        });
+    }
+}
+
+/// Register a stop flag with the `cancel@k` fault (no-op without the
+/// `fault-inject` feature).
+pub fn register_cancel_flag(flag: &std::sync::Arc<std::sync::atomic::AtomicBool>) {
+    #[cfg(feature = "fault-inject")]
+    cancel_registry::register(flag);
+    #[cfg(not(feature = "fault-inject"))]
+    let _ = flag;
+}
+
+/// Trip every registered cancel flag — called by the `cancel@k` hook
+/// site when the fault fires (no-op without the feature).
+pub fn trip_cancel_flags() {
+    #[cfg(feature = "fault-inject")]
+    cancel_registry::trip_all();
+}
 
 #[cfg(test)]
 mod tests {
@@ -187,14 +293,20 @@ mod tests {
 
     #[test]
     fn plan_parses_every_kind() {
-        let plan = FaultPlan::parse("panic@3, stall@1,poison@2,nan@4").unwrap();
+        let plan =
+            FaultPlan::parse("panic@3, stall@1,poison@2,nan@4,spanic@5,cancel@6,slowloris@7,disconnect@8")
+                .unwrap();
         assert_eq!(
             plan,
             FaultPlan {
                 panic_at: 3,
                 stall_at: 1,
                 poison_at: 2,
-                nan_at: 4
+                nan_at: 4,
+                spanic_at: 5,
+                cancel_at: 6,
+                slowloris_at: 7,
+                disconnect_at: 8
             }
         );
         assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
@@ -211,6 +323,10 @@ mod tests {
             assert!(!shard_stall_now());
             assert!(!poison_store_row_now());
             assert!(!nan_score_now());
+            assert!(!session_panic_now());
+            assert!(!cancel_mid_transition_now());
+            assert!(!slowloris_write_now());
+            assert!(!disconnect_write_now());
         }
     }
 

@@ -442,6 +442,12 @@ pub struct ShardScorer {
     /// watchdog.  Monotonic; surfaced through
     /// `EvalStats::requeued_shards`.
     pub requeued_shards: usize,
+    /// Watchdog result deadline for this scorer's dispatches.
+    /// Initialized from the process default ([`shard_timeout`]) and
+    /// overridable per instance (`SubsampledConfig::shard_timeout_ms`,
+    /// `--shard-timeout-ms`) so concurrent serve sessions can pick
+    /// their own recovery latency without fighting over one env var.
+    pub timeout: Duration,
     /// Inline scratch for the non-dispatched and stolen-shard cases.
     scratch: ShardScratch,
 }
@@ -470,6 +476,7 @@ impl ShardScorer {
             stolen_sections: 0,
             fallback_panics: 0,
             requeued_shards: 0,
+            timeout: shard_timeout(),
             scratch: ShardScratch::default(),
         }
     }
@@ -573,7 +580,7 @@ impl ShardScorer {
         let local = batch;
         let mut got = vec![false; sent];
         let mut received = 0usize;
-        let deadline = shard_timeout();
+        let deadline = self.timeout;
         // land one shard result, ignoring duplicates (a watchdog-
         // recovered shard's late original is bitwise identical anyway)
         fn land(

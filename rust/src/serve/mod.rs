@@ -1,0 +1,24 @@
+//! Inference as a service: the `subppl serve` daemon.
+//!
+//! Zero-dependency TCP + newline-delimited JSON-RPC.  Three layers:
+//!
+//! - [`protocol`] — typed request/response/error frames over a
+//!   hand-rolled JSON value tree.
+//! - [`session`] — one inference session: a `Trace` + per-session PCG
+//!   stream (`session_rng(seed, id)`), stepped at draw granularity,
+//!   with deadlines/cancellation observed at draw boundaries, per-draw
+//!   in-memory checkpoints, and panic-restart recovery.
+//! - [`server`] — session registry with admission control, bounded
+//!   per-session command queues, request dispatch, subscriber
+//!   streaming, and graceful drain.
+//!
+//! See the README "Serving inference" section for the wire protocol
+//! and semantics.
+
+pub mod protocol;
+pub mod server;
+pub mod session;
+
+pub use protocol::{CreateParams, ErrCode, Fault, Json, Method, Request};
+pub use server::{serve, serve_with, DrainReport, ServeCfg, Server, SessionCmd};
+pub use session::{session_rng, Session, SessionCfg, StepReport, StopReason, SESSION_STREAM_BASE};

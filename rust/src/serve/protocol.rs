@@ -1,0 +1,657 @@
+//! Newline-delimited JSON-RPC frames for `subppl serve`.
+//!
+//! One request per line, one response per line, plus unsolicited
+//! `event` lines on subscribed connections.  The JSON is hand-rolled
+//! (parser + encoder below) to keep the repo's no-dependency
+//! discipline — the value model is the minimal six-kind tree, numbers
+//! are f64, and object key order is preserved so frames are
+//! deterministic.
+//!
+//! Frames:
+//!
+//! ```text
+//! → {"id":1,"method":"create","params":{"program":"...","infer":"...","watch":["mu"]}}
+//! ← {"id":1,"ok":{"session":1}}
+//! → {"id":2,"method":"step","params":{"session":1,"n":100,"deadline_ms":500}}
+//! ← {"id":2,"ok":{"requested":100,"done":100,"total":100,"restarts":0,"sections":12345}}
+//! ← {"id":7,"error":{"code":"Overloaded","message":"...","retry_after_ms":100}}
+//! ← {"event":"monitor","session":1,"line":"[monitor] n=200/chain ..."}
+//! ```
+//!
+//! Error codes are a closed set ([`ErrCode`]) so clients can switch on
+//! them: `Overloaded` / `Draining` carry `retry_after_ms`, the rest are
+//! terminal for the request (`BadRequest`, `NotFound`, `Deadline`) or
+//! the session (`Expired`, `Failed`, `Internal`).  A step that makes
+//! partial progress before a deadline/cancel lands is NOT an error: it
+//! replies with an ok frame whose `stopped` field names the reason
+//! (`"deadline"` / `"cancelled"` / `"expired"`); the error codes cover
+//! the zero-progress terminal cases — `Deadline` when the request's
+//! deadline lapsed (queue wait included) before any draw, `Expired` for
+//! every step after a session's lifetime deadline was first observed.
+
+use std::fmt::Write as _;
+
+/// The minimal JSON value tree.  Objects are ordered key/value pairs —
+/// frames stay byte-deterministic and duplicate keys are a parse error
+/// nobody tripped yet.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup (`None` for non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Non-negative whole number (the id/count fields).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= (1u64 << 53) as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Encode to a single-line JSON string.
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    let _ = write!(out, "{n}");
+                } else {
+                    // JSON has no Inf/NaN; null round-trips as "absent"
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_json_str(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_str(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse one JSON document (trailing garbage is an error — frames
+    /// are one value per line).
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let bytes = s.as_bytes();
+        let mut p = Parser { bytes, pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != bytes.len() {
+            return Err(format!("trailing data at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+}
+
+fn write_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "expected {:?} at byte {}, found {:?}",
+                b as char,
+                self.pos,
+                self.peek().map(|c| c as char)
+            ))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            other => Err(format!(
+                "unexpected {:?} at byte {}",
+                other.map(|c| c as char),
+                self.pos
+            )),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if matches!(b, b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|e| e.to_string())?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number {text:?} at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{0008}'),
+                        Some(b'f') => out.push('\u{000c}'),
+                        Some(b'u') => {
+                            if self.pos + 4 >= self.bytes.len() {
+                                return Err("truncated \\u escape".into());
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
+                                    .map_err(|e| e.to_string())?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| format!("bad \\u escape {hex:?}"))?;
+                            // surrogate pairs are not reassembled —
+                            // frames never carry astral-plane text, and
+                            // a lone surrogate maps to the replacement
+                            // char rather than failing the request
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            self.pos += 4;
+                        }
+                        other => {
+                            return Err(format!("bad escape {:?}", other.map(|c| c as char)))
+                        }
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar (the input is &str, so
+                    // slicing at char boundaries is safe)
+                    let rest = &self.bytes[self.pos..];
+                    let s = std::str::from_utf8(rest).map_err(|e| e.to_string())?;
+                    let c = s.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => {
+                    return Err(format!(
+                        "expected ',' or ']' at byte {}, found {:?}",
+                        self.pos,
+                        other.map(|c| c as char)
+                    ))
+                }
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields: Vec<(String, Json)> = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            if fields.iter().any(|(k, _)| *k == key) {
+                return Err(format!("duplicate key {key:?}"));
+            }
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                other => {
+                    return Err(format!(
+                        "expected ',' or '}}' at byte {}, found {:?}",
+                        self.pos,
+                        other.map(|c| c as char)
+                    ))
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// typed frames
+// ---------------------------------------------------------------------
+
+/// Closed set of error codes.  `Overloaded`/`Draining` are retryable
+/// and carry `retry_after_ms`; the rest are terminal for the request or
+/// the session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Admission control refused (registry or step queue full).
+    Overloaded,
+    /// The server is draining; no new sessions or steps.
+    Draining,
+    /// No such session (never created, cancelled, or reaped).
+    NotFound,
+    /// The session outlived its lifetime deadline; every step after
+    /// the one that first observed expiry fails with this code.
+    Expired,
+    /// The per-request deadline lapsed (time queued behind other steps
+    /// counts) before any draw completed.  Partial progress replies
+    /// with an ok frame carrying `stopped:"deadline"` instead.
+    Deadline,
+    /// Malformed frame or parameters.
+    BadRequest,
+    /// The session's model errored or exhausted its restart budget.
+    Failed,
+    /// Server-side invariant violation (session thread gone, etc).
+    Internal,
+}
+
+impl ErrCode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrCode::Overloaded => "Overloaded",
+            ErrCode::Draining => "Draining",
+            ErrCode::NotFound => "NotFound",
+            ErrCode::Expired => "Expired",
+            ErrCode::Deadline => "Deadline",
+            ErrCode::BadRequest => "BadRequest",
+            ErrCode::Failed => "Failed",
+            ErrCode::Internal => "Internal",
+        }
+    }
+}
+
+/// A typed request error (becomes one `error` frame).
+#[derive(Clone, Debug)]
+pub struct Fault {
+    pub code: ErrCode,
+    pub message: String,
+    /// Backpressure hint, only on `Overloaded`/`Draining`.
+    pub retry_after_ms: Option<u64>,
+}
+
+impl Fault {
+    pub fn new(code: ErrCode, message: impl Into<String>) -> Fault {
+        Fault {
+            code,
+            message: message.into(),
+            retry_after_ms: None,
+        }
+    }
+
+    pub fn overloaded(message: impl Into<String>, retry_after_ms: u64) -> Fault {
+        Fault {
+            code: ErrCode::Overloaded,
+            message: message.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+}
+
+/// Session parameters of a `create` request (everything but `program`
+/// optional).
+#[derive(Clone, Debug, Default)]
+pub struct CreateParams {
+    pub program: String,
+    pub infer: Option<String>,
+    pub watch: Vec<String>,
+    /// Per-session seed override (default: the server's seed; the
+    /// session id always picks the PCG stream, so two sessions with the
+    /// same seed still draw independently).
+    pub seed: Option<u64>,
+    pub target_risk: Option<f64>,
+    /// Per-session shard-watchdog deadline (0 = server/process default).
+    pub shard_timeout_ms: u64,
+    /// Per-session lifetime deadline override in ms (0 = server
+    /// default; capped by the server's `--session-deadline-ms`).
+    pub deadline_ms: u64,
+    /// Cross-draw convergence snapshot cadence (0 = no monitor).
+    pub monitor_every: usize,
+}
+
+/// One parsed request frame.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub method: Method,
+}
+
+#[derive(Clone, Debug)]
+pub enum Method {
+    Ping,
+    Create(CreateParams),
+    Step {
+        session: u64,
+        n: usize,
+        /// Per-request deadline (0 = none): the step stops at the first
+        /// draw boundary past the deadline and reports what it did.
+        deadline_ms: u64,
+    },
+    Snapshot {
+        session: u64,
+    },
+    Subscribe {
+        session: u64,
+    },
+    Cancel {
+        session: u64,
+    },
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line.  Errors name the offending field — they
+    /// become `BadRequest` frames with `id` 0 when the id itself is
+    /// unreadable.
+    pub fn parse(line: &str) -> Result<Request, Fault> {
+        let bad = |msg: String| Fault::new(ErrCode::BadRequest, msg);
+        let v = Json::parse(line).map_err(|e| bad(format!("bad JSON: {e}")))?;
+        let id = v
+            .get("id")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| bad("missing numeric \"id\"".into()))?;
+        let method = v
+            .get("method")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing \"method\"".into()))?;
+        let p = v.get("params");
+        let session = || -> Result<u64, Fault> {
+            p.and_then(|p| p.get("session"))
+                .and_then(Json::as_u64)
+                .ok_or_else(|| bad("missing \"params.session\"".into()))
+        };
+        let u64_field = |name: &str, default: u64| -> u64 {
+            p.and_then(|p| p.get(name))
+                .and_then(Json::as_u64)
+                .unwrap_or(default)
+        };
+        let method = match method {
+            "ping" => Method::Ping,
+            "create" => {
+                let program = p
+                    .and_then(|p| p.get("program"))
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("create: missing \"params.program\"".into()))?
+                    .to_string();
+                let watch = p
+                    .and_then(|p| p.get("watch"))
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|v| v.as_str().map(str::to_string))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                Method::Create(CreateParams {
+                    program,
+                    infer: p
+                        .and_then(|p| p.get("infer"))
+                        .and_then(Json::as_str)
+                        .map(str::to_string),
+                    watch,
+                    seed: p.and_then(|p| p.get("seed")).and_then(Json::as_u64),
+                    target_risk: p.and_then(|p| p.get("target_risk")).and_then(Json::as_f64),
+                    shard_timeout_ms: u64_field("shard_timeout_ms", 0),
+                    deadline_ms: u64_field("deadline_ms", 0),
+                    monitor_every: u64_field("monitor_every", 0) as usize,
+                })
+            }
+            "step" => Method::Step {
+                session: session()?,
+                n: u64_field("n", 1) as usize,
+                deadline_ms: u64_field("deadline_ms", 0),
+            },
+            "snapshot" => Method::Snapshot { session: session()? },
+            "subscribe" => Method::Subscribe { session: session()? },
+            "cancel" => Method::Cancel { session: session()? },
+            "shutdown" => Method::Shutdown,
+            other => return Err(bad(format!("unknown method {other:?}"))),
+        };
+        Ok(Request { id, method })
+    }
+}
+
+/// Encode a success frame.
+pub fn ok_frame(id: u64, body: Json) -> String {
+    Json::Obj(vec![
+        ("id".into(), Json::Num(id as f64)),
+        ("ok".into(), body),
+    ])
+    .encode()
+}
+
+/// Encode an error frame.
+pub fn err_frame(id: u64, f: &Fault) -> String {
+    let mut err = vec![
+        ("code".into(), Json::Str(f.code.name().into())),
+        ("message".into(), Json::Str(f.message.clone())),
+    ];
+    if let Some(ms) = f.retry_after_ms {
+        err.push(("retry_after_ms".into(), Json::Num(ms as f64)));
+    }
+    Json::Obj(vec![
+        ("id".into(), Json::Num(id as f64)),
+        ("error".into(), Json::Obj(err)),
+    ])
+    .encode()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_values() {
+        for src in [
+            "null",
+            "true",
+            "[1,2.5,-3]",
+            r#"{"a":[{"b":"c\n\"d\""}],"e":null}"#,
+            r#""\u0041\t""#,
+        ] {
+            let v = Json::parse(src).unwrap();
+            let enc = v.encode();
+            assert_eq!(Json::parse(&enc).unwrap(), v, "src={src}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for src in ["", "{", "[1,]", "{\"a\":1,\"a\":2}", "1 2", "\"\\x\""] {
+            assert!(Json::parse(src).is_err(), "src={src:?}");
+        }
+    }
+
+    #[test]
+    fn parses_request_frames() {
+        let r = Request::parse(
+            r#"{"id":3,"method":"step","params":{"session":7,"n":50,"deadline_ms":100}}"#,
+        )
+        .unwrap();
+        assert_eq!(r.id, 3);
+        match r.method {
+            Method::Step {
+                session,
+                n,
+                deadline_ms,
+            } => {
+                assert_eq!((session, n, deadline_ms), (7, 50, 100));
+            }
+            m => panic!("{m:?}"),
+        }
+        let r = Request::parse(
+            r#"{"id":1,"method":"create","params":{"program":"[assume x (normal 0 1)]","watch":["x"],"monitor_every":10}}"#,
+        )
+        .unwrap();
+        match r.method {
+            Method::Create(c) => {
+                assert_eq!(c.watch, vec!["x"]);
+                assert_eq!(c.monitor_every, 10);
+                assert!(c.infer.is_none());
+            }
+            m => panic!("{m:?}"),
+        }
+        assert!(Request::parse(r#"{"id":1,"method":"warp"}"#).is_err());
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse(r#"{"method":"ping"}"#).is_err(), "id required");
+    }
+
+    #[test]
+    fn frames_are_single_lines() {
+        let ok = ok_frame(5, Json::Obj(vec![("session".into(), Json::Num(1.0))]));
+        assert_eq!(ok, r#"{"id":5,"ok":{"session":1}}"#);
+        let err = err_frame(9, &Fault::overloaded("registry full", 250));
+        assert_eq!(
+            err,
+            r#"{"id":9,"error":{"code":"Overloaded","message":"registry full","retry_after_ms":250}}"#
+        );
+        assert!(!ok.contains('\n') && !err.contains('\n'));
+    }
+}

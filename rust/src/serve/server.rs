@@ -1,0 +1,826 @@
+//! The serve daemon: accept loop, session registry, dispatch, drain.
+//!
+//! Threading model: `Trace` is `Rc`-based (deliberately single-
+//! threaded), so every session lives on its **own dedicated thread**
+//! that builds and owns the `Session`; the registry holds only `Send`
+//! handles (command sender + stop flag + join handle).  Intra-draw
+//! parallelism still goes through the shared global `WorkerPool` —
+//! its FIFO queue interleaves shards from concurrent sessions fairly,
+//! and shard results are bitwise independent of placement, so sessions
+//! cannot perturb each other's draws.
+//!
+//! Robustness ladder, outermost first:
+//! - **admission control**: at most `max_sessions` live sessions; a
+//!   `create` past the limit gets `Overloaded` + `retry_after_ms`
+//!   instead of queueing.  Finished/expired sessions are reaped first,
+//!   so the limit counts *live* sessions.
+//! - **backpressure**: each session's command queue is a bounded
+//!   `sync_channel`; a `step` against a busy session gets `Overloaded`
+//!   rather than queueing unboundedly.
+//! - **deadlines**: per-request (`deadline_ms` on `step`) and
+//!   per-session (`--session-deadline-ms`), both observed at draw
+//!   boundaries inside the session.
+//! - **panic isolation**: a panicking draw is caught inside the
+//!   session (checkpoint restart, `restarts` surfaced in every step
+//!   report); a session that exhausts its budget turns `Failed`
+//!   without touching its neighbors.
+//! - **graceful drain**: `shutdown` stops admission, raises every stop
+//!   flag, closes every command queue, and joins session threads
+//!   within `drain_timeout`; each session writes a final checkpoint on
+//!   the way out when a checkpoint dir is configured.
+
+use crate::serve::protocol::{
+    err_frame, ok_frame, CreateParams, ErrCode, Fault, Json, Method, Request,
+};
+use crate::serve::session::{Session, SessionCfg, StepReport};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Retry hint handed out with `Overloaded`/`Draining` frames.
+const RETRY_AFTER_MS: u64 = 100;
+
+/// Subscriber stream buffer: events queued for one client before the
+/// session declares it wedged and drops it.
+const SUBSCRIBER_BUFFER: usize = 64;
+
+/// Server knobs (the `subppl serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    pub addr: String,
+    pub max_sessions: usize,
+    /// Default + cap for per-session lifetime deadlines (None =
+    /// unbounded sessions allowed).
+    pub session_deadline: Option<Duration>,
+    pub drain_timeout: Duration,
+    /// Base seed: a session draws from `(seed, session id)`.
+    pub seed: u64,
+    /// Bound on each session's queued-but-unserved commands.
+    pub queue_cap: usize,
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Default shard-watchdog deadline for sessions that don't set one.
+    pub shard_timeout_ms: u64,
+    /// Let sessions shard scoring across the shared pool.
+    pub use_pool: bool,
+}
+
+impl Default for ServeCfg {
+    fn default() -> ServeCfg {
+        ServeCfg {
+            addr: "127.0.0.1:7777".into(),
+            max_sessions: 64,
+            session_deadline: None,
+            drain_timeout: Duration::from_millis(5000),
+            seed: 0,
+            queue_cap: 4,
+            checkpoint_dir: None,
+            shard_timeout_ms: 0,
+            use_pool: true,
+        }
+    }
+}
+
+/// Commands a session thread serves, in arrival order.
+pub enum SessionCmd {
+    Step {
+        n: usize,
+        /// Absolute per-request deadline, stamped at request arrival so
+        /// time spent waiting in the session's queue counts against it.
+        deadline_at: Option<Instant>,
+        reply: Sender<Result<StepReport, Fault>>,
+    },
+    Snapshot {
+        reply: Sender<Json>,
+    },
+    Subscribe {
+        tx: SyncSender<String>,
+    },
+}
+
+struct SessionHandle {
+    tx: SyncSender<SessionCmd>,
+    stop: Arc<AtomicBool>,
+    thread: JoinHandle<()>,
+    /// Lifetime deadline for the reaper (the session enforces its own
+    /// copy at draw boundaries).
+    expires_at: Option<Instant>,
+}
+
+/// The session registry plus in-flight `create` reservations, guarded
+/// by one mutex so the admission check and the insert are atomic:
+/// concurrent creates each reserve a slot under the lock before
+/// spawning, and can never overshoot `max_sessions` together.
+#[derive(Default)]
+struct Registry {
+    map: HashMap<u64, SessionHandle>,
+    /// Slots held by `create` calls between the admission check and
+    /// the insert (or release, on a failed build).
+    reserved: usize,
+}
+
+/// What a drain actually did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DrainReport {
+    /// Sessions whose thread exited within the drain timeout.
+    pub drained: usize,
+    /// Sessions still running when the timeout fired (their threads
+    /// are left detached; the process is about to exit anyway).
+    pub forced: usize,
+    /// Final checkpoints written during the drain.
+    pub checkpointed: usize,
+}
+
+/// The registry + dispatch core, TCP-independent so tests can drive it
+/// directly.
+pub struct Server {
+    pub cfg: ServeCfg,
+    sessions: Mutex<Registry>,
+    next_id: AtomicU64,
+    draining: AtomicBool,
+    /// Set by the `shutdown` RPC; the accept loop polls it.
+    shutdown_requested: AtomicBool,
+    /// Checkpoints written by session threads on their way out.
+    checkpoints_written: AtomicU64,
+}
+
+impl Server {
+    pub fn new(cfg: ServeCfg) -> Arc<Server> {
+        Arc::new(Server {
+            cfg,
+            sessions: Mutex::new(Registry::default()),
+            next_id: AtomicU64::new(1),
+            draining: AtomicBool::new(false),
+            shutdown_requested: AtomicBool::new(false),
+            checkpoints_written: AtomicU64::new(0),
+        })
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown_requested.load(Ordering::SeqCst)
+    }
+
+    /// Live session count (after reaping finished threads).
+    pub fn live_sessions(&self) -> usize {
+        let mut reg = self.sessions.lock().unwrap();
+        Self::reap(&mut reg.map);
+        reg.map.len()
+    }
+
+    /// Drop registry entries whose thread already exited (failed
+    /// models, expired sessions that wound down) and raise the stop
+    /// flag on expired-but-idle sessions so they exit too.  Called with
+    /// the registry lock held.
+    fn reap(reg: &mut HashMap<u64, SessionHandle>) {
+        let now = Instant::now();
+        reg.retain(|_, h| {
+            if h.thread.is_finished() {
+                return false;
+            }
+            if h.expires_at.is_some_and(|t| now >= t) {
+                // idle-expired: the session only notices expiry while
+                // stepping, so kick it via the stop flag and close its
+                // queue by dropping the handle
+                h.stop.store(true, Ordering::SeqCst);
+                return false;
+            }
+            true
+        });
+    }
+
+    /// Admit one session: reserve a registry slot under the lock (so
+    /// concurrent creates cannot overshoot `max_sessions` together),
+    /// spawn its thread, wait for the build result (a parse error must
+    /// come back on the create response, not a later step), then
+    /// register — re-checking for a drain that raced in meanwhile.
+    pub fn create(self: &Arc<Self>, p: CreateParams) -> Result<u64, Fault> {
+        if self.draining() {
+            return Err(Fault {
+                code: ErrCode::Draining,
+                message: "server is draining".into(),
+                retry_after_ms: Some(RETRY_AFTER_MS),
+            });
+        }
+        {
+            let mut reg = self.sessions.lock().unwrap();
+            Self::reap(&mut reg.map);
+            if reg.map.len() + reg.reserved >= self.cfg.max_sessions {
+                return Err(Fault::overloaded(
+                    format!(
+                        "session registry full ({} live)",
+                        reg.map.len() + reg.reserved
+                    ),
+                    RETRY_AFTER_MS,
+                ));
+            }
+            reg.reserved += 1;
+        }
+        let res = self.spawn_session(p);
+        let mut reg = self.sessions.lock().unwrap();
+        reg.reserved -= 1;
+        // a failed spawn/build releases the reservation and reports
+        let (id, handle) = res?;
+        if self.draining() {
+            // a drain raced in while this session was being built: it
+            // already emptied the registry, so don't register behind it
+            // — stop the newborn (dropping its handle closes the queue;
+            // the idle thread winds down on its own) and refuse
+            handle.stop.store(true, Ordering::SeqCst);
+            return Err(Fault {
+                code: ErrCode::Draining,
+                message: "server is draining".into(),
+                retry_after_ms: Some(RETRY_AFTER_MS),
+            });
+        }
+        reg.map.insert(id, handle);
+        Ok(id)
+    }
+
+    /// Spawn one session thread and wait for its birth report (the
+    /// caller holds a reserved registry slot).
+    fn spawn_session(self: &Arc<Self>, p: CreateParams) -> Result<(u64, SessionHandle), Fault> {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        // per-session deadline: the requested one, capped by the
+        // server default; no request → the server default
+        let deadline = match (p.deadline_ms, self.cfg.session_deadline) {
+            (0, d) => d,
+            (ms, None) => Some(Duration::from_millis(ms)),
+            (ms, Some(cap)) => Some(Duration::from_millis(ms).min(cap)),
+        };
+        let scfg = SessionCfg {
+            id,
+            seed: p.seed.unwrap_or(self.cfg.seed),
+            program: p.program,
+            infer: p.infer,
+            watch: p.watch,
+            target_risk: p.target_risk,
+            shard_timeout_ms: if p.shard_timeout_ms > 0 {
+                p.shard_timeout_ms
+            } else {
+                self.cfg.shard_timeout_ms
+            },
+            deadline,
+            max_restarts: 2,
+            use_pool: self.cfg.use_pool,
+            min_parallel: 0,
+            monitor_every: p.monitor_every,
+            checkpoint_dir: self.cfg.checkpoint_dir.clone(),
+        };
+        let (tx, rx) = sync_channel::<SessionCmd>(self.cfg.queue_cap.max(1));
+        let (born_tx, born_rx) = sync_channel::<Result<Arc<AtomicBool>, String>>(1);
+        let server = Arc::downgrade(self);
+        let thread = std::thread::Builder::new()
+            .name(format!("subppl-session-{id}"))
+            .spawn(move || session_thread(scfg, rx, born_tx, server))
+            .map_err(|e| Fault::new(ErrCode::Internal, format!("spawn: {e}")))?;
+        let stop = match born_rx.recv() {
+            Ok(Ok(stop)) => stop,
+            Ok(Err(e)) => {
+                let _ = thread.join();
+                return Err(Fault::new(ErrCode::BadRequest, e));
+            }
+            Err(_) => {
+                let _ = thread.join();
+                return Err(Fault::new(ErrCode::Internal, "session thread died".into()));
+            }
+        };
+        let expires_at = deadline.map(|d| Instant::now() + d);
+        Ok((
+            id,
+            SessionHandle {
+                tx,
+                stop,
+                thread,
+                expires_at,
+            },
+        ))
+    }
+
+    /// Enqueue one command on a session's bounded queue.
+    fn send(&self, session: u64, cmd: SessionCmd) -> Result<(), Fault> {
+        let reg = self.sessions.lock().unwrap();
+        let h = reg
+            .map
+            .get(&session)
+            .ok_or_else(|| Fault::new(ErrCode::NotFound, format!("no session {session}")))?;
+        match h.tx.try_send(cmd) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => Err(Fault::overloaded(
+                format!("session {session} step queue full"),
+                RETRY_AFTER_MS,
+            )),
+            Err(TrySendError::Disconnected(_)) => Err(Fault::new(
+                ErrCode::Failed,
+                format!("session {session} wound down"),
+            )),
+        }
+    }
+
+    pub fn step(&self, session: u64, n: usize, deadline_ms: u64) -> Result<StepReport, Fault> {
+        if self.draining() {
+            return Err(Fault {
+                code: ErrCode::Draining,
+                message: "server is draining".into(),
+                retry_after_ms: Some(RETRY_AFTER_MS),
+            });
+        }
+        let (reply, done) = std::sync::mpsc::channel();
+        let deadline_at =
+            (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms));
+        self.send(
+            session,
+            SessionCmd::Step {
+                n,
+                deadline_at,
+                reply,
+            },
+        )?;
+        done.recv()
+            .map_err(|_| Fault::new(ErrCode::Internal, "session dropped the reply".into()))?
+    }
+
+    pub fn snapshot(&self, session: u64) -> Result<Json, Fault> {
+        let (reply, done) = std::sync::mpsc::channel();
+        self.send(session, SessionCmd::Snapshot { reply })?;
+        done.recv()
+            .map_err(|_| Fault::new(ErrCode::Internal, "session dropped the reply".into()))
+    }
+
+    /// Attach a bounded event-line sender to a session's stream.
+    pub fn subscribe(&self, session: u64, tx: SyncSender<String>) -> Result<(), Fault> {
+        self.send(session, SessionCmd::Subscribe { tx })
+    }
+
+    /// Cancel = raise the stop flag (an in-flight step stops at its
+    /// next draw boundary) and retire the session: its queue closes,
+    /// its thread exits (writing a final checkpoint if configured).
+    pub fn cancel(&self, session: u64) -> Result<(), Fault> {
+        let mut reg = self.sessions.lock().unwrap();
+        let h = reg
+            .map
+            .remove(&session)
+            .ok_or_else(|| Fault::new(ErrCode::NotFound, format!("no session {session}")))?;
+        h.stop.store(true, Ordering::SeqCst);
+        // dropping h.tx closes the queue; the thread winds down on its
+        // own — drain (or process exit) picks up the join
+        Ok(())
+    }
+
+    /// Graceful drain: stop admitting, cancel everything in flight,
+    /// join session threads within the drain budget.
+    pub fn drain(&self) -> DrainReport {
+        self.draining.store(true, Ordering::SeqCst);
+        self.shutdown_requested.store(true, Ordering::SeqCst);
+        let handles: Vec<(u64, SessionHandle)> =
+            self.sessions.lock().unwrap().map.drain().collect();
+        for (_, h) in &handles {
+            h.stop.store(true, Ordering::SeqCst);
+        }
+        let before = self.checkpoints_written.load(Ordering::SeqCst);
+        let deadline = Instant::now() + self.cfg.drain_timeout;
+        let mut rep = DrainReport::default();
+        for (_, h) in handles {
+            // dropping the sender closes the queue → the session loop
+            // exits after its current (cancelled) command
+            let SessionHandle { tx, thread, .. } = h;
+            drop(tx);
+            let mut finished = thread.is_finished();
+            while !finished && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(2));
+                finished = thread.is_finished();
+            }
+            if finished {
+                let _ = thread.join();
+                rep.drained += 1;
+            } else {
+                rep.forced += 1;
+            }
+        }
+        rep.checkpointed =
+            (self.checkpoints_written.load(Ordering::SeqCst) - before) as usize;
+        rep
+    }
+
+    /// Dispatch one parsed request to a response frame.  `Subscribe`
+    /// is handled by the connection layer (it needs the socket) — this
+    /// returns its error frames only.
+    pub fn handle(self: &Arc<Self>, req: Request) -> String {
+        let id = req.id;
+        let res: Result<Json, Fault> = match req.method {
+            Method::Ping => Ok(Json::Obj(vec![("pong".into(), Json::Bool(true))])),
+            Method::Create(p) => self.create(p).map(|sid| {
+                Json::Obj(vec![("session".into(), Json::Num(sid as f64))])
+            }),
+            Method::Step {
+                session,
+                n,
+                deadline_ms,
+            } => self.step(session, n, deadline_ms).map(step_json),
+            Method::Snapshot { session } => self.snapshot(session),
+            Method::Cancel { session } => self.cancel(session).map(|()| {
+                Json::Obj(vec![("cancelled".into(), Json::Num(session as f64))])
+            }),
+            Method::Shutdown => {
+                let rep = self.drain();
+                Ok(Json::Obj(vec![
+                    ("drained".into(), Json::Num(rep.drained as f64)),
+                    ("forced".into(), Json::Num(rep.forced as f64)),
+                    ("checkpointed".into(), Json::Num(rep.checkpointed as f64)),
+                ]))
+            }
+            Method::Subscribe { .. } => Err(Fault::new(
+                ErrCode::Internal,
+                "subscribe must be handled by the connection layer".into(),
+            )),
+        };
+        match res {
+            Ok(body) => ok_frame(id, body),
+            Err(f) => err_frame(id, &f),
+        }
+    }
+}
+
+fn step_json(r: StepReport) -> Json {
+    let mut fields = vec![
+        ("requested".into(), Json::Num(r.requested as f64)),
+        ("done".into(), Json::Num(r.done as f64)),
+        ("total".into(), Json::Num(r.total as f64)),
+        ("restarts".into(), Json::Num(r.restarts as f64)),
+        (
+            "sections".into(),
+            Json::Num((r.eval.planned + r.eval.fallback) as f64),
+        ),
+    ];
+    if let Some(s) = r.stopped {
+        fields.push(("stopped".into(), Json::Str(s.name().into())));
+    }
+    Json::Obj(fields)
+}
+
+/// The session thread body: build, report birth, serve commands until
+/// the queue closes, checkpoint on the way out.
+fn session_thread(
+    cfg: SessionCfg,
+    rx: Receiver<SessionCmd>,
+    born: SyncSender<Result<Arc<AtomicBool>, String>>,
+    server: std::sync::Weak<Server>,
+) {
+    let mut sess = match Session::new(cfg) {
+        Ok(s) => {
+            let _ = born.send(Ok(s.stop_flag()));
+            s
+        }
+        Err(e) => {
+            let _ = born.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            SessionCmd::Step {
+                n,
+                deadline_at,
+                reply,
+            } => {
+                let _ = reply.send(step_reply(&mut sess, n, deadline_at));
+            }
+            SessionCmd::Snapshot { reply } => {
+                let _ = reply.send(sess.snapshot_json());
+            }
+            SessionCmd::Subscribe { tx } => sess.subscribe(tx),
+        }
+    }
+    // queue closed: cancel/drain/reap — write the final checkpoint
+    if let Ok(true) = sess.checkpoint_to_disk() {
+        if let Some(srv) = server.upgrade() {
+            srv.checkpoints_written.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Serve-layer step semantics, emitting the documented terminal codes:
+/// a step against an already-expired session fails with `Expired`
+/// (expiry is permanent), and a request whose deadline lapsed while it
+/// waited in the queue fails with `Deadline` before any draw runs.
+/// Partial progress stays an ok report with the `stopped` field set
+/// (the first step to *observe* expiry reports `stopped:"expired"`).
+fn step_reply(
+    sess: &mut Session,
+    n: usize,
+    deadline_at: Option<Instant>,
+) -> Result<StepReport, Fault> {
+    if sess.expired() {
+        return Err(Fault::new(
+            ErrCode::Expired,
+            format!("session {} outlived its deadline", sess.cfg.id),
+        ));
+    }
+    let deadline = match deadline_at {
+        Some(at) => match at.checked_duration_since(Instant::now()) {
+            Some(left) if left > Duration::ZERO => Some(left),
+            _ => {
+                return Err(Fault::new(
+                    ErrCode::Deadline,
+                    "request deadline lapsed before any draw".to_string(),
+                ))
+            }
+        },
+        None => None,
+    };
+    sess.step(n, deadline)
+        .map_err(|e| Fault::new(ErrCode::Failed, e))
+}
+
+// ---------------------------------------------------------------------
+// TCP layer
+// ---------------------------------------------------------------------
+
+/// Run the daemon until a `shutdown` request drains it.  Returns the
+/// bound address via `on_ready` (port 0 in `cfg.addr` picks a free
+/// port — the bench harness uses this).
+pub fn serve_with(cfg: ServeCfg, on_ready: impl FnOnce(String)) -> Result<DrainReport, String> {
+    let listener = TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| e.to_string())?;
+    let local = listener.local_addr().map_err(|e| e.to_string())?;
+    let server = Server::new(cfg);
+    on_ready(local.to_string());
+    loop {
+        if server.shutdown_requested() {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let server = server.clone();
+                let _ = std::thread::Builder::new()
+                    .name("subppl-conn".into())
+                    .spawn(move || handle_connection(server, stream));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                // transient accept failures (ECONNABORTED, EMFILE under
+                // fd pressure, ...) must not kill the daemon and strand
+                // its sessions undrained: log, back off, keep serving
+                eprintln!("[serve] accept error (continuing): {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    // the shutdown RPC already drained the registry; drain() again is
+    // idempotent (empty registry) and covers the no-RPC exit path
+    Ok(server.drain())
+}
+
+/// `subppl serve` entry point: prints the bound address, serves until
+/// drained.
+pub fn serve(cfg: ServeCfg) -> Result<(), String> {
+    let rep = serve_with(cfg, |addr| {
+        println!("[serve] listening on {addr}");
+    })?;
+    println!(
+        "[serve] drained: {} sessions ({} forced, {} checkpointed)",
+        rep.drained + rep.forced,
+        rep.forced,
+        rep.checkpointed
+    );
+    Ok(())
+}
+
+/// One client connection: newline-delimited request frames in,
+/// response frames out, plus an event-writer thread per `subscribe`.
+fn handle_connection(server: Arc<Server>, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    // writes go through a mutex so response frames and streamed event
+    // lines never interleave mid-line
+    let out = Arc::new(Mutex::new(stream));
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // EOF
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // read_line may have appended a partial frame before the
+                // timeout fired: keep `line` accumulating — the next
+                // successful read completes it (slow-writer safety)
+                if server.shutdown_requested() {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        }
+        let text = line.trim();
+        if !text.is_empty() {
+            let frame = match Request::parse(text) {
+                Ok(req) => match req.method {
+                    Method::Subscribe { session } => {
+                        subscribe_frame(&server, &out, req.id, session)
+                    }
+                    _ => server.handle(req),
+                },
+                Err(f) => err_frame(0, &f),
+            };
+            if write_line(&out, &frame).is_err() {
+                return;
+            }
+        }
+        // only a fully-read line is consumed
+        line.clear();
+    }
+}
+
+fn write_line(out: &Arc<Mutex<TcpStream>>, line: &str) -> std::io::Result<()> {
+    let mut s = out.lock().unwrap();
+    s.write_all(line.as_bytes())?;
+    s.write_all(b"\n")?;
+    s.flush()
+}
+
+/// Wire a subscription: a bounded channel into the session, a writer
+/// thread pumping event lines onto this connection.  The serve-scoped
+/// faults hook here: `slowloris@k` wedges the writer (the channel
+/// fills, the session drops the subscriber), `disconnect@k` drops the
+/// connection mid-stream.
+fn subscribe_frame(
+    server: &Arc<Server>,
+    out: &Arc<Mutex<TcpStream>>,
+    id: u64,
+    session: u64,
+) -> String {
+    let (tx, rx) = sync_channel::<String>(SUBSCRIBER_BUFFER);
+    if let Err(f) = server.subscribe(session, tx) {
+        return err_frame(id, &f);
+    }
+    let out = out.clone();
+    let _ = std::thread::Builder::new()
+        .name("subppl-sub-writer".into())
+        .spawn(move || {
+            while let Ok(line) = rx.recv() {
+                if crate::runtime::faults::slowloris_write_now() {
+                    // a client that stopped reading: stop draining the
+                    // channel; the session's try_send fills it and
+                    // drops this subscriber, then recv() errors out.
+                    // bounded nap so the thread can't outlive the test
+                    for _ in 0..200 {
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                    return;
+                }
+                if crate::runtime::faults::disconnect_write_now() {
+                    if let Ok(s) = out.lock() {
+                        let _ = s.shutdown(std::net::Shutdown::Both);
+                    }
+                    return;
+                }
+                if write_line(&out, &line).is_err() {
+                    return;
+                }
+            }
+        });
+    ok_frame(
+        id,
+        Json::Obj(vec![("subscribed".into(), Json::Num(session as f64))]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::session::StopReason;
+
+    const MODEL: &str = r#"
+        [assume mu (scope_include 'mu 0 (normal 0 1))]
+        [observe (normal mu 0.5) 1.2]
+    "#;
+
+    fn params() -> CreateParams {
+        CreateParams {
+            program: MODEL.into(),
+            infer: Some("(mh mu one drift 0.5 1)".into()),
+            watch: vec!["mu".into()],
+            ..CreateParams::default()
+        }
+    }
+
+    fn tiny_server(max_sessions: usize) -> Arc<Server> {
+        Server::new(ServeCfg {
+            max_sessions,
+            use_pool: false,
+            ..ServeCfg::default()
+        })
+    }
+
+    #[test]
+    fn create_step_snapshot_cancel_lifecycle() {
+        let srv = tiny_server(4);
+        let id = srv.create(params()).unwrap();
+        let rep = srv.step(id, 10, 0).unwrap();
+        assert_eq!(rep.done, 10);
+        assert_eq!(rep.total, 10);
+        let snap = srv.snapshot(id).unwrap();
+        assert_eq!(snap.get("draws").and_then(Json::as_u64), Some(10));
+        srv.cancel(id).unwrap();
+        // retired: further RPCs are NotFound
+        assert_eq!(
+            srv.step(id, 1, 0).unwrap_err().code,
+            ErrCode::NotFound
+        );
+    }
+
+    #[test]
+    fn admission_control_rejects_over_limit() {
+        let srv = tiny_server(2);
+        let a = srv.create(params()).unwrap();
+        let _b = srv.create(params()).unwrap();
+        let err = srv.create(params()).unwrap_err();
+        assert_eq!(err.code, ErrCode::Overloaded);
+        assert!(err.retry_after_ms.is_some());
+        // cancelling frees a slot
+        srv.cancel(a).unwrap();
+        // the cancelled session's thread needs a beat to exit; create
+        // reaps finished threads, so retry briefly
+        let mut ok = false;
+        for _ in 0..100 {
+            if srv.create(params()).is_ok() {
+                ok = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(ok, "slot never freed after cancel");
+    }
+
+    #[test]
+    fn expired_sessions_fail_with_the_expired_code() {
+        let srv = tiny_server(4);
+        let mut p = params();
+        p.deadline_ms = 1;
+        let id = srv.create(p).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        // the first step observes expiry at a draw boundary and
+        // reports it on an ok frame (partial-progress convention)
+        let rep = srv.step(id, 5, 0).unwrap();
+        assert_eq!(rep.done, 0);
+        assert_eq!(rep.stopped, Some(StopReason::Expired));
+        // expiry is permanent: further steps get the documented code
+        assert_eq!(srv.step(id, 1, 0).unwrap_err().code, ErrCode::Expired);
+    }
+
+    #[test]
+    fn bad_programs_fail_the_create_not_the_server() {
+        let srv = tiny_server(4);
+        let err = srv
+            .create(CreateParams {
+                program: "[assume x (this_is_not_a_distribution)]".into(),
+                ..CreateParams::default()
+            })
+            .unwrap_err();
+        assert_eq!(err.code, ErrCode::BadRequest);
+        // the server still admits good sessions
+        assert!(srv.create(params()).is_ok());
+    }
+
+    #[test]
+    fn drain_joins_all_sessions() {
+        let srv = tiny_server(8);
+        for _ in 0..4 {
+            srv.create(params()).unwrap();
+        }
+        let rep = srv.drain();
+        assert_eq!(rep.drained, 4);
+        assert_eq!(rep.forced, 0);
+        // post-drain: no admission
+        assert_eq!(
+            srv.create(params()).unwrap_err().code,
+            ErrCode::Draining
+        );
+    }
+
+    #[test]
+    fn dispatch_encodes_frames() {
+        let srv = tiny_server(4);
+        let resp = srv.handle(Request::parse(r#"{"id":1,"method":"ping"}"#).unwrap());
+        assert_eq!(resp, r#"{"id":1,"ok":{"pong":true}}"#);
+        let resp =
+            srv.handle(Request::parse(r#"{"id":2,"method":"step","params":{"session":99}}"#).unwrap());
+        assert!(resp.contains("\"NotFound\""), "{resp}");
+    }
+}

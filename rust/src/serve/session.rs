@@ -1,0 +1,621 @@
+//! One inference session: a `Trace` + PCG stream owned by a single
+//! thread, stepped on demand, streaming draws and `[monitor]` snapshots
+//! over the existing `ChainSink`/`ChainEvent` lane.
+//!
+//! Determinism contract: a session's draw sequence is a pure function
+//! of `(seed, session id)` — the RNG stream is
+//! `Pcg64::new(seed, SESSION_STREAM_BASE + id)`, mirroring the
+//! per-chain streams of `coordinator/multichain.rs`, and the evaluator
+//! tiers are bitwise identical sequential vs sharded.  Concurrent
+//! sessions therefore cannot perturb each other's draws no matter how
+//! the shared `WorkerPool` interleaves their shards — the isolation
+//! property `tests/serve.rs` pins under injected faults.
+//!
+//! Robustness contract: deadlines (per-step and per-session) and
+//! cancellation are observed at *draw boundaries* — a transition either
+//! commits or rejects atomically (`subsampled_mh_transition` mutates
+//! the trace only in its final commit), so a stopped session's trace is
+//! always pre- or post-transition, never torn.  A panicking draw is
+//! caught, the trace is rebuilt from source, and the session resumes
+//! from its last per-draw in-memory [`ChainCheckpoint`] — bitwise
+//! identical to the draw sequence that would have happened without the
+//! panic, up to `max_restarts` per session.
+
+use crate::coordinator::checkpoint::ChainCheckpoint;
+use crate::coordinator::monitor::{ConvergenceMonitor, DiagSnapshot};
+use crate::coordinator::multichain::{chain_lane, ChainLane, ChainSink};
+use crate::infer::planned::{EvalStats, PlannedEval};
+use crate::infer::program::{parse_infer, run_command, InfCmd};
+use crate::math::Pcg64;
+use crate::runtime::faults;
+use crate::runtime::pool::{resolve_threads, WorkerPool};
+use crate::serve::protocol::Json;
+use crate::trace::Trace;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Serve sessions draw from their own PCG stream family, disjoint from
+/// the multichain `CHAIN_STREAM_BASE` ("ch") family — a session and a
+/// CLI chain with the same index never share a stream.
+pub const SESSION_STREAM_BASE: u64 = 0x7365_0000; // "se"
+
+/// The session's RNG: deterministic in `(seed, session id)` only.
+pub fn session_rng(seed: u64, id: u64) -> Pcg64 {
+    Pcg64::new(seed, SESSION_STREAM_BASE + id)
+}
+
+/// Everything a session needs to build itself inside its own thread.
+#[derive(Clone, Debug)]
+pub struct SessionCfg {
+    pub id: u64,
+    pub seed: u64,
+    /// Model program source (`[assume ...]` / `[observe ...]` forms).
+    pub program: String,
+    /// Inference program (`(cycle ...)` surface syntax); `None` = the
+    /// session only holds the prior trace (snapshot-only sessions).
+    pub infer: Option<String>,
+    /// Watched parameter names: one row per draw on the event lane.
+    pub watch: Vec<String>,
+    pub target_risk: Option<f64>,
+    /// Per-session shard-watchdog deadline (0 = process default).
+    pub shard_timeout_ms: u64,
+    /// Session lifetime budget from creation (None = unbounded).
+    pub deadline: Option<Duration>,
+    /// Panic restarts granted before the session is declared Failed.
+    pub max_restarts: usize,
+    /// Shard intra-draw scoring across the shared pool (false = the
+    /// sequential evaluator; results are bitwise identical either way).
+    pub use_pool: bool,
+    /// Parallel-dispatch cutoff override (0 = default 256; tests force
+    /// the sharded path on small models with 1).
+    pub min_parallel: usize,
+    /// Convergence snapshot cadence in draws (0 = no monitor).
+    pub monitor_every: usize,
+    /// Where drain writes the session's final checkpoint (None = the
+    /// session's state dies with it).
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for SessionCfg {
+    fn default() -> SessionCfg {
+        SessionCfg {
+            id: 0,
+            seed: 0,
+            program: String::new(),
+            infer: None,
+            watch: Vec::new(),
+            target_risk: None,
+            shard_timeout_ms: 0,
+            deadline: None,
+            max_restarts: 2,
+            use_pool: false,
+            min_parallel: 0,
+            monitor_every: 0,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+/// Why a step returned before completing its requested draws.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// The per-request deadline fired at a draw boundary.
+    Deadline,
+    /// The session's stop flag was raised (cancel RPC, drain, or the
+    /// `cancel@k` fault) and observed at a draw boundary.
+    Cancelled,
+    /// The session outlived its lifetime deadline; it will accept no
+    /// further steps.
+    Expired,
+}
+
+impl StopReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            StopReason::Deadline => "deadline",
+            StopReason::Cancelled => "cancelled",
+            StopReason::Expired => "expired",
+        }
+    }
+}
+
+/// What one `step(n)` actually did.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    pub requested: usize,
+    pub done: usize,
+    /// Completed draws over the session's lifetime.
+    pub total: usize,
+    pub stopped: Option<StopReason>,
+    pub restarts: usize,
+    /// Cumulative evaluator counters (survives evaluator rebuilds
+    /// after a panic restart).
+    pub eval: EvalStats,
+}
+
+/// A session that can be driven directly (tests) or by the server's
+/// per-session thread.  Owns non-`Send` state (`Trace` is `Rc`-based),
+/// so it must be built and driven on one thread.
+pub struct Session {
+    pub cfg: SessionCfg,
+    trace: Trace,
+    rng: Pcg64,
+    cmd: Option<InfCmd>,
+    ev: PlannedEval,
+    sink: ChainSink,
+    lane: ChainLane,
+    stop: Arc<AtomicBool>,
+    mon: Option<ConvergenceMonitor>,
+    /// Completed draws (checkpoint granularity: every draw).
+    draws: usize,
+    restarts: usize,
+    /// Terminal model error (restart budget exhausted or a
+    /// non-panic evaluation error).
+    failed: Option<String>,
+    expired: bool,
+    created: Instant,
+    last_ck: Option<ChainCheckpoint>,
+    last_snap: Option<DiagSnapshot>,
+    last_row: Vec<f64>,
+    /// Counters accumulated by evaluator incarnations that a panic
+    /// restart already tore down.
+    eval_base: EvalStats,
+    /// Subscribed streams: bounded senders of encoded event lines.  A
+    /// full or closed channel drops the subscriber (slowloris
+    /// protection) — the session never blocks on a slow client.
+    subs: Vec<SyncSender<String>>,
+}
+
+impl Session {
+    /// Build the session: run the model program under the session RNG,
+    /// parse the inference program, capture the draw-0 checkpoint.
+    pub fn new(cfg: SessionCfg) -> Result<Session, String> {
+        let stop = Arc::new(AtomicBool::new(false));
+        // the cancel@k fault needs to find this session's flag
+        faults::register_cancel_flag(&stop);
+        let mut rng = session_rng(cfg.seed, cfg.id);
+        let mut trace = Trace::new();
+        trace.run_program(&cfg.program, &mut rng)?;
+        let mut cmd = match &cfg.infer {
+            Some(src) => Some(parse_infer(src)?),
+            None => None,
+        };
+        if let Some(c) = cmd.as_mut() {
+            if let Some(tr) = cfg.target_risk {
+                c.set_target_risk(tr);
+            }
+            if cfg.shard_timeout_ms > 0 {
+                c.set_shard_timeout_ms(cfg.shard_timeout_ms);
+            }
+        }
+        let ev = Self::fresh_eval(&cfg);
+        // lane chain index 0: the per-session monitor folds exactly one
+        // chain (the session id lives in the checkpoint and the frames)
+        let (sink, lane) = chain_lane(0, stop.clone());
+        let mon = (cfg.monitor_every > 0 && !cfg.watch.is_empty())
+            .then(|| ConvergenceMonitor::new(1, &cfg.watch, cfg.monitor_every));
+        let last_ck = Some(ChainCheckpoint::capture(
+            cfg.seed,
+            cfg.id as usize,
+            0,
+            &trace,
+            &rng,
+        ));
+        Ok(Session {
+            trace,
+            rng,
+            cmd,
+            ev,
+            sink,
+            lane,
+            stop,
+            mon,
+            draws: 0,
+            restarts: 0,
+            failed: None,
+            expired: false,
+            created: Instant::now(),
+            last_ck,
+            last_snap: None,
+            last_row: vec![f64::NAN; cfg.watch.len()],
+            eval_base: EvalStats::default(),
+            subs: Vec::new(),
+            cfg,
+        })
+    }
+
+    fn fresh_eval(cfg: &SessionCfg) -> PlannedEval {
+        let mut ev = if cfg.use_pool && resolve_threads(0) > 1 {
+            PlannedEval::with_pool(WorkerPool::global().clone())
+                .with_shard_timeout(cfg.shard_timeout_ms)
+        } else {
+            PlannedEval::new()
+        };
+        if cfg.min_parallel > 0 {
+            ev = ev.with_min_parallel(cfg.min_parallel);
+        }
+        ev
+    }
+
+    /// The shared stop flag (the server's cancel/drain handle).
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    pub fn total_draws(&self) -> usize {
+        self.draws
+    }
+
+    pub fn restarts(&self) -> usize {
+        self.restarts
+    }
+
+    pub fn failed(&self) -> Option<&str> {
+        self.failed.as_deref()
+    }
+
+    /// Whether a step already observed the session's lifetime deadline
+    /// (expiry is permanent; the server maps further steps to the
+    /// `Expired` error code).
+    pub fn expired(&self) -> bool {
+        self.expired
+    }
+
+    /// Cumulative evaluator counters across restarts.
+    pub fn eval_stats(&self) -> EvalStats {
+        self.eval_base.add(&self.ev.stats())
+    }
+
+    fn past_session_deadline(&self) -> bool {
+        self.cfg
+            .deadline
+            .is_some_and(|d| self.created.elapsed() >= d)
+    }
+
+    /// Run up to `n` draws, stopping early at a draw boundary on
+    /// cancellation, per-request deadline, or session expiry.  `Err` is
+    /// terminal: the model itself failed (bad program, restart budget
+    /// exhausted) and the session accepts no further steps.
+    pub fn step(&mut self, n: usize, deadline: Option<Duration>) -> Result<StepReport, String> {
+        if let Some(e) = &self.failed {
+            return Err(e.clone());
+        }
+        let t0 = Instant::now();
+        let mut done = 0usize;
+        let mut stopped = None;
+        while done < n {
+            // permanent expiry outranks the stop flag: expiry raises
+            // that same shared flag below, so checking cancelled()
+            // first would turn every post-expiry step into Cancelled
+            if self.expired || self.past_session_deadline() {
+                // expiry is permanent: raise the stop flag so any
+                // in-flight transition machinery also winds down
+                self.expired = true;
+                self.stop.store(true, Ordering::SeqCst);
+                stopped = Some(StopReason::Expired);
+                break;
+            }
+            if self.sink.cancelled() {
+                stopped = Some(StopReason::Cancelled);
+                break;
+            }
+            if deadline.is_some_and(|d| t0.elapsed() >= d) {
+                stopped = Some(StopReason::Deadline);
+                break;
+            }
+            match self.one_draw() {
+                Ok(()) => done += 1,
+                Err(DrawErr::Panic(msg)) => {
+                    self.restarts += 1;
+                    if self.restarts > self.cfg.max_restarts {
+                        let e = format!(
+                            "session {}: draw panicked ({msg}) and restart budget ({}) \
+                             is exhausted",
+                            self.cfg.id, self.cfg.max_restarts
+                        );
+                        self.failed = Some(e.clone());
+                        self.pump_events();
+                        return Err(e);
+                    }
+                    self.sink.set_restarts(self.restarts);
+                    if let Err(e) = self.rebuild() {
+                        self.failed = Some(e.clone());
+                        self.pump_events();
+                        return Err(e);
+                    }
+                    // the draw that panicked has not been counted: the
+                    // rebuilt state re-runs it from the checkpointed
+                    // RNG position, so the sequence stays bitwise
+                    // identical to an uninjected run
+                }
+                Err(DrawErr::Model(e)) => {
+                    self.failed = Some(e.clone());
+                    self.pump_events();
+                    return Err(e);
+                }
+            }
+        }
+        self.pump_events();
+        Ok(StepReport {
+            requested: n,
+            done,
+            total: self.draws,
+            stopped,
+            restarts: self.restarts,
+            eval: self.eval_stats(),
+        })
+    }
+
+    /// One committed draw: run the inference program once, record the
+    /// watched row on the event lane, checkpoint.
+    fn one_draw(&mut self) -> Result<(), DrawErr> {
+        let trace = &mut self.trace;
+        let rng = &mut self.rng;
+        let ev = &mut self.ev;
+        let cmd = self.cmd.as_ref();
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            if faults::session_panic_now() {
+                panic!("injected: session fault");
+            }
+            match cmd {
+                Some(c) => run_command(trace, rng, c, ev).map(|_| ()),
+                None => Ok(()),
+            }
+        }));
+        match res {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(DrawErr::Model(e)),
+            Err(p) => {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic".into());
+                return Err(DrawErr::Panic(msg));
+            }
+        }
+        self.draws += 1;
+        let mut row = Vec::with_capacity(self.cfg.watch.len());
+        for n in &self.cfg.watch {
+            row.push(
+                self.trace
+                    .lookup_value(n)
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(f64::NAN),
+            );
+        }
+        self.last_row = row.clone();
+        if !row.is_empty() {
+            self.sink
+                .send_with_stats(vec![row], Some(self.eval_base.add(&self.ev.stats())));
+        }
+        // per-draw in-memory checkpoint: the panic-restart granularity
+        self.last_ck = Some(ChainCheckpoint::capture(
+            self.cfg.seed,
+            self.cfg.id as usize,
+            self.draws,
+            &self.trace,
+            &self.rng,
+        ));
+        Ok(())
+    }
+
+    /// Post-panic recovery: fold the dead evaluator's counters into the
+    /// base, rebuild trace + evaluator from scratch, restore committed
+    /// values + RNG position from the last per-draw checkpoint.
+    fn rebuild(&mut self) -> Result<(), String> {
+        self.eval_base = self.eval_base.add(&self.ev.stats());
+        self.ev = Self::fresh_eval(&self.cfg);
+        let mut rng = session_rng(self.cfg.seed, self.cfg.id);
+        let mut trace = Trace::new();
+        trace
+            .run_program(&self.cfg.program, &mut rng)
+            .map_err(|e| format!("session {}: rebuild failed: {e}", self.cfg.id))?;
+        let ck = self
+            .last_ck
+            .as_ref()
+            .ok_or_else(|| format!("session {}: no checkpoint to restore", self.cfg.id))?;
+        let rng = ck
+            .restore(&mut trace)
+            .map_err(|e| format!("session {}: restore failed: {e}", self.cfg.id))?;
+        self.trace = trace;
+        self.rng = rng;
+        Ok(())
+    }
+
+    /// Drain the event lane: fold draws into the convergence monitor
+    /// and broadcast draw batches + ready `[monitor]` snapshots to
+    /// subscribers.  Runs at step boundaries — the lane is written and
+    /// read by this same thread, so nothing accumulates unbounded.
+    fn pump_events(&mut self) {
+        for ev in self.lane.drain() {
+            self.broadcast(&draws_event(self.cfg.id, &ev.draws));
+            if let Some(m) = self.mon.as_mut() {
+                m.absorb(ev);
+                for snap in m.ready_snapshots() {
+                    self.broadcast(&monitor_event(self.cfg.id, &snap));
+                    self.last_snap = Some(snap);
+                }
+            }
+        }
+    }
+
+    /// Attach a subscriber stream.  The sender must be bounded; the
+    /// session drops subscribers whose channel is full or closed.
+    pub fn subscribe(&mut self, tx: SyncSender<String>) {
+        self.subs.push(tx);
+    }
+
+    fn broadcast(&mut self, line: &str) {
+        self.subs.retain(|tx| match tx.try_send(line.to_string()) {
+            Ok(()) => true,
+            // Full = wedged/slow client: drop it rather than buffer
+            // unboundedly or block the session (slowloris defense)
+            Err(TrySendError::Full(_)) => false,
+            Err(TrySendError::Disconnected(_)) => false,
+        });
+    }
+
+    /// Current state as a JSON body (the `snapshot` RPC).
+    pub fn snapshot_json(&self) -> Json {
+        let values = Json::Obj(
+            self.cfg
+                .watch
+                .iter()
+                .zip(&self.last_row)
+                .map(|(n, v)| (n.clone(), Json::Num(*v)))
+                .collect(),
+        );
+        let e = self.eval_stats();
+        Json::Obj(vec![
+            ("session".into(), Json::Num(self.cfg.id as f64)),
+            ("draws".into(), Json::Num(self.draws as f64)),
+            ("restarts".into(), Json::Num(self.restarts as f64)),
+            (
+                "failed".into(),
+                match &self.failed {
+                    Some(m) => Json::Str(m.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("values".into(), values),
+            (
+                "sections".into(),
+                Json::Num((e.planned + e.fallback) as f64),
+            ),
+            (
+                "monitor".into(),
+                match &self.last_snap {
+                    Some(s) => Json::Str(s.render()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Write the last per-draw checkpoint to the session's checkpoint
+    /// dir (drain path).  `Ok(false)` when the session has no dir.
+    pub fn checkpoint_to_disk(&self) -> Result<bool, String> {
+        let (dir, ck) = match (&self.cfg.checkpoint_dir, &self.last_ck) {
+            (Some(d), Some(c)) => (d, c),
+            _ => return Ok(false),
+        };
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        ck.save(dir)?;
+        Ok(true)
+    }
+}
+
+enum DrawErr {
+    /// Caught panic: recoverable via checkpoint restart.
+    Panic(String),
+    /// Model-level error: terminal.
+    Model(String),
+}
+
+fn draws_event(id: u64, draws: &[Vec<f64>]) -> String {
+    Json::Obj(vec![
+        ("event".into(), Json::Str("draws".into())),
+        ("session".into(), Json::Num(id as f64)),
+        (
+            "draws".into(),
+            Json::Arr(
+                draws
+                    .iter()
+                    .map(|row| Json::Arr(row.iter().map(|v| Json::Num(*v)).collect()))
+                    .collect(),
+            ),
+        ),
+    ])
+    .encode()
+}
+
+fn monitor_event(id: u64, snap: &DiagSnapshot) -> String {
+    Json::Obj(vec![
+        ("event".into(), Json::Str("monitor".into())),
+        ("session".into(), Json::Num(id as f64)),
+        ("draws".into(), Json::Num(snap.draws_per_chain as f64)),
+        ("max_rhat".into(), Json::Num(snap.max_rhat())),
+        ("sections".into(), Json::Num(snap.sections_scored() as f64)),
+        ("line".into(), Json::Str(snap.render())),
+    ])
+    .encode()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MODEL: &str = r#"
+        [assume mu (scope_include 'mu 0 (normal 0 1))]
+        [observe (normal mu 0.5) 1.2]
+        [observe (normal mu 0.5) 0.8]
+    "#;
+
+    fn cfg(id: u64) -> SessionCfg {
+        SessionCfg {
+            id,
+            seed: 42,
+            program: MODEL.into(),
+            infer: Some("(mh mu one drift 0.5 1)".into()),
+            watch: vec!["mu".into()],
+            ..SessionCfg::default()
+        }
+    }
+
+    #[test]
+    fn draws_are_deterministic_in_seed_and_id() {
+        let run = |id: u64, chunks: &[usize]| -> Vec<f64> {
+            let mut s = Session::new(cfg(id)).unwrap();
+            let mut out = Vec::new();
+            for &n in chunks {
+                s.step(n, None).unwrap();
+                out.push(s.last_row[0]);
+            }
+            assert_eq!(s.total_draws(), chunks.iter().sum::<usize>());
+            out
+        };
+        // same (seed, id): identical regardless of step chunking
+        let a = run(1, &[30]);
+        let b = run(1, &[7, 13, 10]);
+        assert_eq!(a[a.len() - 1].to_bits(), b[b.len() - 1].to_bits());
+        // different id: a different stream entirely
+        let c = run(2, &[30]);
+        assert_ne!(a[a.len() - 1].to_bits(), c[c.len() - 1].to_bits());
+    }
+
+    #[test]
+    fn cancellation_stops_at_a_draw_boundary() {
+        let mut s = Session::new(cfg(3)).unwrap();
+        s.step(5, None).unwrap();
+        s.stop_flag().store(true, Ordering::SeqCst);
+        let rep = s.step(10, None).unwrap();
+        assert_eq!(rep.done, 0);
+        assert_eq!(rep.stopped, Some(StopReason::Cancelled));
+        assert_eq!(rep.total, 5, "no draw committed after the stop");
+    }
+
+    #[test]
+    fn session_deadline_expires_and_is_permanent() {
+        let mut c = cfg(4);
+        c.deadline = Some(Duration::from_millis(0));
+        let mut s = Session::new(c).unwrap();
+        let rep = s.step(10, None).unwrap();
+        assert_eq!(rep.done, 0);
+        assert_eq!(rep.stopped, Some(StopReason::Expired));
+        let rep = s.step(1, None).unwrap();
+        assert_eq!(rep.stopped, Some(StopReason::Expired));
+    }
+
+    #[test]
+    fn snapshot_names_watched_values() {
+        let mut s = Session::new(cfg(5)).unwrap();
+        s.step(3, None).unwrap();
+        let js = s.snapshot_json();
+        assert_eq!(js.get("draws").and_then(Json::as_u64), Some(3));
+        assert!(js.get("values").unwrap().get("mu").is_some());
+    }
+}

@@ -77,6 +77,7 @@ fn run_chain(spec: &ChainSpec, mut rng: Pcg64, ctl: &mut CheckpointCtl) -> (usiz
                 exact: false,
                 threads: 1,
                 target_risk: None,
+                shard_timeout_ms: 0,
             };
         }
         Model::Sv => {
@@ -96,6 +97,7 @@ fn run_chain(spec: &ChainSpec, mut rng: Pcg64, ctl: &mut CheckpointCtl) -> (usiz
                 exact: false,
                 threads: 1,
                 target_risk: None,
+                shard_timeout_ms: 0,
             };
         }
     }

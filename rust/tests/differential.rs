@@ -187,6 +187,7 @@ fn run_lr_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         exact: false,
         threads: 1,
         target_risk: None,
+        shard_timeout_ms: 0,
     };
     let mut out = Vec::with_capacity(steps);
     for _ in 0..steps {
@@ -217,6 +218,7 @@ fn run_lr_chain_risk(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecor
         exact: false,
         threads: 1,
         target_risk: Some(0.05),
+        shard_timeout_ms: 0,
     };
     let mut out = Vec::with_capacity(steps);
     for _ in 0..steps {
@@ -246,6 +248,7 @@ fn run_sv_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         exact: false,
         threads: 1,
         target_risk: None,
+        shard_timeout_ms: 0,
     };
     let mut out = Vec::with_capacity(steps);
     for i in 0..steps {
@@ -275,6 +278,7 @@ fn run_dpm_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         exact: false,
         threads: 1,
         target_risk: None,
+        shard_timeout_ms: 0,
     };
     let mut out = Vec::with_capacity(steps);
     for i in 0..steps {

@@ -55,6 +55,7 @@ fn run_lr_chain(ev: &mut PlannedEval, steps: usize) -> Vec<StepRecord> {
         exact: false,
         threads: 1, // inert: the evaluator is passed in explicitly
         target_risk: None,
+        shard_timeout_ms: 0,
     };
     let mut out = Vec::with_capacity(steps);
     for _ in 0..steps {

@@ -150,6 +150,7 @@ fn geweke_subsampled_mh_logistic_regression() {
         // path is bitwise identical)
         threads: 0,
         target_risk: None,
+        shard_timeout_ms: 0,
     };
     // the default dispatch cutoff (256) would never engage on m=8
     // mini-batches — force dispatch so "parallel coverage" is real

@@ -26,6 +26,7 @@ fn bayes_lr_end_to_end_subsampled() {
         exact: false,
         threads: 1,
         target_risk: None,
+        shard_timeout_ms: 0,
     };
     let mut ev = InterpreterEval;
     let mut w_mean = vec![RunningMoments::new(), RunningMoments::new(), RunningMoments::new()];
@@ -71,6 +72,7 @@ fn subsampled_bias_is_small() {
             exact,
             threads: 1,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         let mut ev = InterpreterEval;
         let mut m = RunningMoments::new();
@@ -118,6 +120,7 @@ fn joint_dpm_end_to_end() {
             exact: false,
             threads: 1,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         subsampled_mh_transition(&mut trace, &mut rng, wk, &cfg, &mut ev).unwrap();
     }

@@ -266,6 +266,7 @@ fn prop_subsampled_respects_support() {
             exact: false,
             threads: 1,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         let mut ev = InterpreterEval;
         for _ in 0..60 {

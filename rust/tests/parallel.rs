@@ -165,6 +165,7 @@ fn run_lr_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         exact: false,
         threads: 1, // inert: the evaluator is passed in explicitly
         target_risk: None,
+        shard_timeout_ms: 0,
     };
     let mut out = Vec::with_capacity(steps);
     for _ in 0..steps {
@@ -325,6 +326,7 @@ fn run_dpm_churn_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRec
         exact: false,
         threads: 1, // inert: the evaluator is passed in explicitly
         target_risk: None,
+        shard_timeout_ms: 0,
     };
     let mut out = Vec::with_capacity(steps);
     for i in 0..steps {
@@ -375,6 +377,7 @@ fn multichain_matches_inline_runs() {
             exact: false,
             threads: 1,
             target_risk: None,
+            shard_timeout_ms: 0,
         };
         let mut ev = PlannedEval::new();
         let mut bits = Vec::new();

@@ -1,0 +1,807 @@
+//! Integration tests for the `subppl serve` daemon (tentpole of the
+//! hardened inference-as-a-service PR): end-to-end TCP lifecycle,
+//! multi-session determinism under concurrent interleaving, and
+//! drain-under-load with final checkpoints.
+//!
+//! The `faulted` module (compiled with `--features fault-inject` only)
+//! pins the isolation claims: with `cancel@k` / `spanic@k` /
+//! `panic@k` / `stall@k` / `slowloris@k` / `disconnect@k` armed inside
+//! one session, that session recovers or errors cleanly while every
+//! draw sequence stays **bitwise identical** to an uninjected run.
+//!
+//! The fault counters and the cancel-flag registry are process-global,
+//! so every test in this binary serializes on one mutex (tripping the
+//! registry would cancel an unrelated test's sessions otherwise).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+use subppl::serve::{
+    serve_with, CreateParams, ErrCode, Json, ServeCfg, Server, Session, SessionCfg, StopReason,
+};
+
+/// One guard for the whole binary: serve faults and the cancel-flag
+/// registry are process-wide state.
+fn serial_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Tiny conjugate-ish model for fast exact-MH sessions.
+const MU_MODEL: &str = r#"
+    [assume mu (scope_include 'mu 0 (normal 0 1))]
+    [observe (normal mu 0.5) 1.2]
+    [observe (normal mu 0.5) 0.8]
+"#;
+const MU_INFER: &str = "(mh mu one drift 0.5 1)";
+
+/// SV-flavored model whose `phi` scope drives the subsampled-MH
+/// kernel (the mini-batch loop is where `cancel@k` hooks).
+const PHI_MODEL: &str = r#"
+    [assume phi (scope_include 'phi 0 (beta 5 1))]
+    [assume h (mem (lambda (t) (scope_include 'h t
+        (if (<= t 0) 0.0 (normal (* phi (h (- t 1))) 0.2)))))]
+    [assume x (lambda (t) (normal 0 (exp (/ (h t) 2))))]
+    [observe (x 1) 0.3] [observe (x 2) -0.1] [observe (x 3) 0.2]
+    [observe (x 4) 0.15] [observe (x 5) -0.2]
+"#;
+const PHI_INFER: &str = "(subsampled_mh phi one 2 0.01 drift 0.05 1)";
+
+fn mu_params(seed: u64) -> CreateParams {
+    CreateParams {
+        program: MU_MODEL.into(),
+        infer: Some(MU_INFER.into()),
+        watch: vec!["mu".into()],
+        seed: Some(seed),
+        ..CreateParams::default()
+    }
+}
+
+fn session_cfg(id: u64, seed: u64, program: &str, infer: &str, watch: &str) -> SessionCfg {
+    SessionCfg {
+        id,
+        seed,
+        program: program.into(),
+        infer: Some(infer.into()),
+        watch: vec![watch.into()],
+        ..SessionCfg::default()
+    }
+}
+
+/// The named watched value of a session, as raw bits (bitwise
+/// comparisons only — approximate equality would hide divergence).
+fn watched_bits(s: &Session, name: &str) -> u64 {
+    s.snapshot_json()
+        .get("values")
+        .and_then(|v| v.get(name))
+        .and_then(Json::as_f64)
+        .expect("watched value present")
+        .to_bits()
+}
+
+// ---------------------------------------------------------------------
+// TCP plumbing
+// ---------------------------------------------------------------------
+
+/// Boot a daemon on a free port; returns (addr, join handle).
+fn start_server(cfg: ServeCfg) -> (String, std::thread::JoinHandle<()>) {
+    let (tx, rx) = channel();
+    let handle = std::thread::spawn(move || {
+        serve_with(cfg, move |addr| {
+            let _ = tx.send(addr);
+        })
+        .expect("serve_with");
+    });
+    let addr = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("server never bound");
+    (addr, handle)
+}
+
+/// A newline-delimited JSON-RPC client.  Response reads skip (and
+/// stash) unsolicited `event` lines so subscribed connections can still
+/// make requests.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    events: Vec<Json>,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        Client {
+            reader: BufReader::new(s.try_clone().unwrap()),
+            writer: s,
+            events: Vec::new(),
+        }
+    }
+
+    /// One raw line, retrying through read timeouts until `deadline`.
+    /// `None` = the server closed the connection.
+    fn read_line(&mut self, deadline: Instant) -> Option<String> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match self.reader.read_line(&mut line) {
+                Ok(0) => return None,
+                Ok(_) => return Some(line),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if Instant::now() >= deadline {
+                        panic!("timed out waiting for a frame");
+                    }
+                }
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Send one request line, return its response frame.
+    fn rpc(&mut self, line: &str) -> Json {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let line = self.read_line(deadline).expect("server closed mid-request");
+            let v = Json::parse(line.trim()).expect("valid frame");
+            if v.get("event").is_some() {
+                self.events.push(v);
+                continue;
+            }
+            return v;
+        }
+    }
+
+    /// Block until an event of `kind` has been seen (counting stashed
+    /// ones).
+    fn wait_for_event(&mut self, kind: &str) -> Json {
+        let seen = |evs: &[Json]| {
+            evs.iter()
+                .find(|e| e.get("event").and_then(Json::as_str) == Some(kind))
+                .cloned()
+        };
+        if let Some(e) = seen(&self.events) {
+            return e;
+        }
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let line = self
+                .read_line(deadline)
+                .expect("server closed while waiting for an event");
+            let v = Json::parse(line.trim()).expect("valid frame");
+            self.events.push(v);
+            if let Some(e) = seen(&self.events) {
+                return e;
+            }
+        }
+    }
+}
+
+fn ok_body(frame: &Json) -> &Json {
+    frame
+        .get("ok")
+        .unwrap_or_else(|| panic!("expected ok frame, got {frame:?}"))
+}
+
+// ---------------------------------------------------------------------
+// Tier: always-on integration tests
+// ---------------------------------------------------------------------
+
+/// Full lifecycle over a real socket: ping → create → step → snapshot
+/// → subscribe (streamed draws arrive) → cancel → shutdown drains.
+#[test]
+fn tcp_lifecycle_end_to_end() {
+    let _g = serial_lock();
+    #[cfg(feature = "fault-inject")]
+    subppl::runtime::faults::clear();
+    let (addr, handle) = start_server(ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        use_pool: false,
+        ..ServeCfg::default()
+    });
+    let mut c = Client::connect(&addr);
+
+    let pong = c.rpc(r#"{"id":1,"method":"ping"}"#);
+    assert_eq!(ok_body(&pong).get("pong"), Some(&Json::Bool(true)));
+
+    let create = Json::Obj(vec![
+        ("id".into(), Json::Num(2.0)),
+        ("method".into(), Json::Str("create".into())),
+        (
+            "params".into(),
+            Json::Obj(vec![
+                ("program".into(), Json::Str(MU_MODEL.into())),
+                ("infer".into(), Json::Str(MU_INFER.into())),
+                ("watch".into(), Json::Arr(vec![Json::Str("mu".into())])),
+                ("seed".into(), Json::Num(7.0)),
+            ]),
+        ),
+    ])
+    .encode();
+    let sid = ok_body(&c.rpc(&create))
+        .get("session")
+        .and_then(Json::as_u64)
+        .expect("session id");
+
+    let step = c.rpc(&format!(
+        r#"{{"id":3,"method":"step","params":{{"session":{sid},"n":10}}}}"#
+    ));
+    assert_eq!(ok_body(&step).get("done").and_then(Json::as_u64), Some(10));
+
+    let snap = c.rpc(&format!(
+        r#"{{"id":4,"method":"snapshot","params":{{"session":{sid}}}}}"#
+    ));
+    assert_eq!(
+        ok_body(&snap).get("draws").and_then(Json::as_u64),
+        Some(10)
+    );
+    assert!(
+        ok_body(&snap)
+            .get("values")
+            .and_then(|v| v.get("mu"))
+            .and_then(Json::as_f64)
+            .is_some_and(f64::is_finite),
+        "snapshot carries the watched value"
+    );
+
+    let sub = c.rpc(&format!(
+        r#"{{"id":5,"method":"subscribe","params":{{"session":{sid}}}}}"#
+    ));
+    assert_eq!(
+        ok_body(&sub).get("subscribed").and_then(Json::as_u64),
+        Some(sid)
+    );
+    let step = c.rpc(&format!(
+        r#"{{"id":6,"method":"step","params":{{"session":{sid},"n":5}}}}"#
+    ));
+    assert_eq!(ok_body(&step).get("done").and_then(Json::as_u64), Some(5));
+    let ev = c.wait_for_event("draws");
+    assert_eq!(ev.get("session").and_then(Json::as_u64), Some(sid));
+    assert!(ev.get("draws").and_then(Json::as_arr).is_some());
+
+    let cancel = c.rpc(&format!(
+        r#"{{"id":7,"method":"cancel","params":{{"session":{sid}}}}}"#
+    ));
+    assert_eq!(
+        ok_body(&cancel).get("cancelled").and_then(Json::as_u64),
+        Some(sid)
+    );
+    // post-cancel the session is gone
+    let gone = c.rpc(&format!(
+        r#"{{"id":8,"method":"step","params":{{"session":{sid}}}}}"#
+    ));
+    assert_eq!(
+        gone.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+        Some("NotFound")
+    );
+
+    let down = c.rpc(r#"{"id":9,"method":"shutdown"}"#);
+    assert!(ok_body(&down).get("drained").is_some());
+    handle.join().expect("server thread");
+}
+
+/// Malformed lines and bad requests produce error frames, never a
+/// dropped connection or a wedged server.
+#[test]
+fn tcp_bad_input_gets_error_frames() {
+    let _g = serial_lock();
+    let (addr, handle) = start_server(ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        use_pool: false,
+        ..ServeCfg::default()
+    });
+    let mut c = Client::connect(&addr);
+    for bad in [
+        "this is not json",
+        r#"{"no":"id"}"#,
+        r#"{"id":1,"method":"frobnicate"}"#,
+        r#"{"id":2,"method":"step","params":{}}"#,
+    ] {
+        let resp = c.rpc(bad);
+        assert_eq!(
+            resp.get("error")
+                .and_then(|e| e.get("code"))
+                .and_then(Json::as_str),
+            Some("BadRequest"),
+            "{bad} → {resp:?}"
+        );
+    }
+    // the connection still serves good requests
+    let pong = c.rpc(r#"{"id":3,"method":"ping"}"#);
+    assert_eq!(ok_body(&pong).get("pong"), Some(&Json::Bool(true)));
+    c.rpc(r#"{"id":4,"method":"shutdown"}"#);
+    handle.join().expect("server thread");
+}
+
+/// The determinism contract under real concurrency: sessions stepped
+/// from racing threads with different chunkings produce draws bitwise
+/// identical to the same `(seed, session id)` stepped inline, alone.
+#[test]
+fn concurrent_sessions_match_inline_sessions_bitwise() {
+    let _g = serial_lock();
+    #[cfg(feature = "fault-inject")]
+    subppl::runtime::faults::clear();
+    let srv = Server::new(ServeCfg {
+        use_pool: false,
+        ..ServeCfg::default()
+    });
+    // three sessions, same seed — the id picks the stream
+    let ids: Vec<u64> = (0..3).map(|_| srv.create(mu_params(42)).unwrap()).collect();
+    let chunkings: [&[usize]; 3] = [&[30], &[7, 13, 10], &[5; 6]];
+    let mut threads = Vec::new();
+    for (i, &id) in ids.iter().enumerate() {
+        let srv = srv.clone();
+        let chunks = chunkings[i];
+        threads.push(std::thread::spawn(move || {
+            for &n in chunks {
+                let rep = srv.step(id, n, 0).unwrap();
+                assert_eq!(rep.done, n);
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    for &id in &ids {
+        let snap = srv.snapshot(id).unwrap();
+        let served = snap
+            .get("values")
+            .and_then(|v| v.get("mu"))
+            .and_then(Json::as_f64)
+            .unwrap()
+            .to_bits();
+        // the inline replica: same (seed, id), stepped alone
+        let mut inline = Session::new(session_cfg(id, 42, MU_MODEL, MU_INFER, "mu")).unwrap();
+        inline.step(30, None).unwrap();
+        assert_eq!(
+            served,
+            watched_bits(&inline, "mu"),
+            "session {id} diverged from its inline replica"
+        );
+    }
+    // distinct ids draw from distinct streams
+    let a = srv.snapshot(ids[0]).unwrap();
+    let b = srv.snapshot(ids[1]).unwrap();
+    assert_ne!(
+        a.get("values").and_then(|v| v.get("mu")),
+        b.get("values").and_then(|v| v.get("mu")),
+        "two sessions with the same seed must not share a stream"
+    );
+    srv.drain();
+}
+
+/// Drain under load: sessions mid-step are cancelled at a draw
+/// boundary, joined within the drain budget, and each writes a final
+/// checkpoint — zero forced, zero torn.
+#[test]
+fn drain_under_load_checkpoints_every_session() {
+    let _g = serial_lock();
+    let dir = std::env::temp_dir().join(format!("subppl-serve-drain-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let srv = Server::new(ServeCfg {
+        use_pool: false,
+        checkpoint_dir: Some(dir.clone()),
+        drain_timeout: Duration::from_secs(10),
+        ..ServeCfg::default()
+    });
+    let ids: Vec<u64> = (0..3).map(|_| srv.create(mu_params(1)).unwrap()).collect();
+    let mut steppers = Vec::new();
+    for &id in &ids {
+        let srv = srv.clone();
+        steppers.push(std::thread::spawn(move || {
+            // far more draws than can finish before the drain lands
+            srv.step(id, 50_000_000, 0)
+        }));
+    }
+    // let the steps get in flight
+    std::thread::sleep(Duration::from_millis(100));
+    let rep = srv.drain();
+    assert_eq!(rep.drained, 3, "{rep:?}");
+    assert_eq!(rep.forced, 0, "{rep:?}");
+    assert_eq!(rep.checkpointed, 3, "{rep:?}");
+    for t in steppers {
+        let step = t.join().unwrap().expect("in-flight step replies cleanly");
+        assert_eq!(
+            step.stopped,
+            Some(StopReason::Cancelled),
+            "the in-flight step must stop at a draw boundary"
+        );
+        assert!(step.done < 50_000_000);
+    }
+    for &id in &ids {
+        let path = dir.join(format!("chain{id}.ckpt"));
+        assert!(path.exists(), "missing final checkpoint {}", path.display());
+    }
+    // post-drain: no admission, no steps
+    assert_eq!(srv.create(mu_params(1)).unwrap_err().code, ErrCode::Draining);
+    assert_eq!(srv.step(ids[0], 1, 0).unwrap_err().code, ErrCode::Draining);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Per-request deadlines stop at a draw boundary and report what ran.
+#[test]
+fn step_deadline_reports_partial_progress() {
+    let _g = serial_lock();
+    let srv = Server::new(ServeCfg {
+        use_pool: false,
+        ..ServeCfg::default()
+    });
+    let id = srv.create(mu_params(9)).unwrap();
+    // deadline 25ms against 50M draws: returns quickly with partial
+    // work (wide enough that queue/dequeue latency can't eat it whole,
+    // which would be a zero-progress Deadline error frame instead)
+    let rep = srv.step(id, 50_000_000, 25).unwrap();
+    assert_eq!(rep.stopped, Some(StopReason::Deadline));
+    assert!(rep.done < 50_000_000);
+    // the session is still healthy
+    let rep = srv.step(id, 5, 0).unwrap();
+    assert_eq!(rep.done, 5);
+    srv.drain();
+}
+
+/// A step whose deadline lapses while it waits in the session's queue
+/// (behind a long-running step) fails with the documented `Deadline`
+/// error code before any draw runs — the deadline is stamped at
+/// request arrival, so queue wait counts against it.
+#[test]
+fn queued_past_deadline_steps_fail_with_the_deadline_code() {
+    let _g = serial_lock();
+    let srv = Server::new(ServeCfg {
+        use_pool: false,
+        ..ServeCfg::default()
+    });
+    let id = srv.create(mu_params(12)).unwrap();
+    // occupy the session long enough that the queued step's 1ms
+    // deadline lapses while it waits its turn
+    let bg = {
+        let srv = srv.clone();
+        std::thread::spawn(move || srv.step(id, 500_000, 0))
+    };
+    std::thread::sleep(Duration::from_millis(20));
+    let err = srv.step(id, 1, 1).unwrap_err();
+    assert_eq!(err.code, ErrCode::Deadline);
+    bg.join().unwrap().expect("long step completes cleanly");
+    srv.drain();
+}
+
+/// A request frame written in two chunks with a pause longer than the
+/// server's 100ms read timeout must still parse as one frame — the
+/// connection loop keeps partial reads accumulated across timeouts.
+#[test]
+fn tcp_split_frame_across_read_timeouts_still_parses() {
+    let _g = serial_lock();
+    let (addr, handle) = start_server(ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        use_pool: false,
+        ..ServeCfg::default()
+    });
+    let mut c = Client::connect(&addr);
+    let (head, tail) = r#"{"id":1,"method":"ping"}"#.split_at(14);
+    c.writer.write_all(head.as_bytes()).unwrap();
+    c.writer.flush().unwrap();
+    // straddle several server-side read timeouts mid-frame
+    std::thread::sleep(Duration::from_millis(350));
+    c.writer.write_all(tail.as_bytes()).unwrap();
+    c.writer.write_all(b"\n").unwrap();
+    c.writer.flush().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let resp = Json::parse(c.read_line(deadline).expect("frame").trim()).unwrap();
+    assert_eq!(
+        ok_body(&resp).get("pong"),
+        Some(&Json::Bool(true)),
+        "split frame must survive the read timeout: {resp:?}"
+    );
+    c.rpc(r#"{"id":2,"method":"shutdown"}"#);
+    handle.join().expect("server thread");
+}
+
+// ---------------------------------------------------------------------
+// Tier: deterministic fault suite (--features fault-inject)
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "fault-inject")]
+mod faulted {
+    use super::*;
+    use subppl::runtime::faults::{self, FaultPlan};
+    use subppl::runtime::pool::resolve_threads;
+
+    /// `cancel@k` trips the session's stop flag in the middle of a
+    /// subsampled-MH transition.  The transition commits or rejects
+    /// atomically, the step stops at the next draw boundary, and the
+    /// committed draws are a bitwise **prefix** of the uninjected run —
+    /// the trace is never torn.
+    #[test]
+    fn cancel_mid_transition_never_tears_the_trace() {
+        let _g = serial_lock();
+        faults::clear();
+        let cfg = || session_cfg(9, 11, PHI_MODEL, PHI_INFER, "phi");
+        let clean: Vec<u64> = {
+            let mut s = Session::new(cfg()).unwrap();
+            (0..40)
+                .map(|_| {
+                    assert_eq!(s.step(1, None).unwrap().done, 1);
+                    watched_bits(&s, "phi")
+                })
+                .collect()
+        };
+        for k in [1u64, 4] {
+            faults::install(FaultPlan {
+                cancel_at: k,
+                ..FaultPlan::default()
+            });
+            let mut s = Session::new(cfg()).unwrap();
+            let mut got = Vec::new();
+            let mut cancelled = false;
+            for _ in 0..40 {
+                let rep = s.step(1, None).unwrap();
+                if rep.stopped == Some(StopReason::Cancelled) {
+                    cancelled = true;
+                    break;
+                }
+                got.push(watched_bits(&s, "phi"));
+            }
+            faults::clear();
+            assert!(cancelled, "cancel@{k} armed but the session never stopped");
+            assert!(got.len() < 40, "cancel@{k} fired too late to observe");
+            assert_eq!(
+                got[..],
+                clean[..got.len()],
+                "cancel@{k}: committed draws diverged from the clean prefix (torn trace)"
+            );
+        }
+    }
+
+    /// `spanic@k` panics one draw inside the session.  The supervisor
+    /// catches it, rebuilds from the per-draw checkpoint, and the full
+    /// draw sequence stays bitwise identical to the uninjected run.
+    #[test]
+    fn session_panic_restarts_bitwise() {
+        let _g = serial_lock();
+        faults::clear();
+        let cfg = || session_cfg(21, 5, MU_MODEL, MU_INFER, "mu");
+        let run = |label: &str| -> (Vec<u64>, usize) {
+            let mut s = Session::new(cfg()).unwrap();
+            let seq = (0..20)
+                .map(|i| {
+                    let rep = s.step(1, None).unwrap_or_else(|e| {
+                        panic!("{label}: draw {i} failed: {e}")
+                    });
+                    assert_eq!(rep.done, 1, "{label}: draw {i} did not complete");
+                    watched_bits(&s, "mu")
+                })
+                .collect();
+            (seq, s.restarts())
+        };
+        let (clean, r0) = run("clean");
+        assert_eq!(r0, 0);
+        faults::install(FaultPlan {
+            spanic_at: 5,
+            ..FaultPlan::default()
+        });
+        let (got, restarts) = run("spanic@5");
+        faults::clear();
+        assert_eq!(got, clean, "the restarted session diverged");
+        assert_eq!(restarts, 1, "the injected panic must be recovered, once");
+    }
+
+    /// A session whose panic budget is exhausted turns Failed without
+    /// poisoning the server: concurrent sessions keep stepping.
+    #[test]
+    fn exhausted_restart_budget_fails_only_that_session() {
+        let _g = serial_lock();
+        faults::clear();
+        let mut cfg = session_cfg(25, 5, MU_MODEL, MU_INFER, "mu");
+        cfg.max_restarts = 0;
+        faults::install(FaultPlan {
+            spanic_at: 3,
+            ..FaultPlan::default()
+        });
+        let mut doomed = Session::new(cfg).unwrap();
+        let err = doomed.step(10, None).unwrap_err();
+        faults::clear();
+        assert!(err.contains("restart budget"), "{err}");
+        assert!(doomed.failed().is_some());
+        // a fresh session in the same process is untouched
+        let mut ok = Session::new(session_cfg(26, 5, MU_MODEL, MU_INFER, "mu")).unwrap();
+        assert_eq!(ok.step(5, None).unwrap().done, 5);
+    }
+
+    /// One pool-sharded session's 12 `phi` draws, as bits + evaluator
+    /// counters.  `min_parallel: 1` forces every mini-batch through
+    /// shard dispatch so the shard faults have events to hit; the short
+    /// shard timeout keeps the stall recovery quick.
+    fn run_sharded() -> (Vec<u64>, subppl::infer::EvalStats) {
+        let mut c = session_cfg(31, 13, PHI_MODEL, PHI_INFER, "phi");
+        c.use_pool = true;
+        c.min_parallel = 1;
+        c.shard_timeout_ms = 500;
+        let mut s = Session::new(c).unwrap();
+        let seq: Vec<u64> = (0..12)
+            .map(|_| {
+                assert_eq!(s.step(1, None).unwrap().done, 1);
+                watched_bits(&s, "phi")
+            })
+            .collect();
+        (seq, s.eval_stats())
+    }
+
+    /// The innocent neighbor: a sequential-evaluator session.
+    fn run_neighbor() -> Vec<u64> {
+        let mut s = Session::new(session_cfg(32, 13, MU_MODEL, MU_INFER, "mu")).unwrap();
+        (0..12)
+            .map(|_| {
+                assert_eq!(s.step(1, None).unwrap().done, 1);
+                watched_bits(&s, "mu")
+            })
+            .collect()
+    }
+
+    /// Shard-level faults (worker panic, worker stall) inside one
+    /// pool-sharded session, while a second session runs concurrently:
+    /// both sessions' draws stay bitwise identical to their uninjected
+    /// runs, and the faulted session's evaluator records the recovery.
+    /// `stall@1` hits the first worker *pickup* — with dozens of
+    /// dispatch rounds racing the stealing dispatcher, a worker wins
+    /// one essentially always.
+    #[test]
+    fn shard_faults_in_one_session_leave_neighbors_bitwise() {
+        let _g = serial_lock();
+        if resolve_threads(0) < 2 {
+            eprintln!("skipping: no worker pool on this host");
+            return;
+        }
+        faults::clear();
+        let (clean_a, _) = run_sharded();
+        let clean_b = run_neighbor();
+        for (label, plan) in [
+            ("panic@3", FaultPlan { panic_at: 3, ..FaultPlan::default() }),
+            ("stall@1", FaultPlan { stall_at: 1, ..FaultPlan::default() }),
+        ] {
+            faults::install(plan);
+            // Session is !Send (Rc-based Trace): each thread builds and
+            // owns its session, exactly like the server's threads
+            let ta = std::thread::spawn(run_sharded);
+            let tb = std::thread::spawn(run_neighbor);
+            let (got_a, stats_a) = ta.join().unwrap();
+            let got_b = tb.join().unwrap();
+            faults::clear();
+            assert_eq!(got_a, clean_a, "{label}: the faulted session diverged");
+            assert_eq!(got_b, clean_b, "{label}: the fault leaked into a neighbor session");
+            assert!(
+                stats_a.any_recovery(),
+                "{label} armed but no recovery recorded: {stats_a:?}"
+            );
+        }
+    }
+
+    /// `slowloris@1` wedges the subscriber's writer thread (a client
+    /// that stops reading).  The bounded stream channel fills, the
+    /// session drops the subscriber, and stepping continues unharmed.
+    #[test]
+    fn slowloris_subscriber_is_dropped_not_served() {
+        let _g = serial_lock();
+        faults::clear();
+        let (addr, handle) = start_server(ServeCfg {
+            addr: "127.0.0.1:0".into(),
+            use_pool: false,
+            ..ServeCfg::default()
+        });
+        let mut ctl = Client::connect(&addr);
+        let sid = ok_body(&ctl.rpc(
+            &Json::Obj(vec![
+                ("id".into(), Json::Num(1.0)),
+                ("method".into(), Json::Str("create".into())),
+                (
+                    "params".into(),
+                    Json::Obj(vec![
+                        ("program".into(), Json::Str(MU_MODEL.into())),
+                        ("infer".into(), Json::Str(MU_INFER.into())),
+                        ("watch".into(), Json::Arr(vec![Json::Str("mu".into())])),
+                        ("seed".into(), Json::Num(3.0)),
+                    ]),
+                ),
+            ])
+            .encode(),
+        ))
+        .get("session")
+        .and_then(Json::as_u64)
+        .unwrap();
+        let mut sub = Client::connect(&addr);
+        sub.rpc(&format!(
+            r#"{{"id":2,"method":"subscribe","params":{{"session":{sid}}}}}"#
+        ));
+        faults::install(FaultPlan {
+            slowloris_at: 1,
+            ..FaultPlan::default()
+        });
+        // 200 draws > the 64-line stream buffer: the wedged subscriber
+        // must be dropped, never blocked on
+        let rep = ctl.rpc(&format!(
+            r#"{{"id":3,"method":"step","params":{{"session":{sid},"n":200}}}}"#
+        ));
+        assert_eq!(ok_body(&rep).get("done").and_then(Json::as_u64), Some(200));
+        let rep = ctl.rpc(&format!(
+            r#"{{"id":4,"method":"step","params":{{"session":{sid},"n":10}}}}"#
+        ));
+        assert_eq!(ok_body(&rep).get("done").and_then(Json::as_u64), Some(10));
+        let snap = ctl.rpc(&format!(
+            r#"{{"id":5,"method":"snapshot","params":{{"session":{sid}}}}}"#
+        ));
+        assert_eq!(
+            ok_body(&snap).get("draws").and_then(Json::as_u64),
+            Some(210),
+            "the session must survive a wedged subscriber"
+        );
+        faults::clear();
+        ctl.rpc(r#"{"id":6,"method":"shutdown"}"#);
+        handle.join().expect("server thread");
+    }
+
+    /// `disconnect@1` drops the subscribed connection mid-stream.  The
+    /// session and the server shrug: new connections keep working.
+    #[test]
+    fn mid_stream_disconnect_leaves_the_session_healthy() {
+        let _g = serial_lock();
+        faults::clear();
+        let (addr, handle) = start_server(ServeCfg {
+            addr: "127.0.0.1:0".into(),
+            use_pool: false,
+            ..ServeCfg::default()
+        });
+        let mut sub = Client::connect(&addr);
+        let sid = ok_body(&sub.rpc(
+            &Json::Obj(vec![
+                ("id".into(), Json::Num(1.0)),
+                ("method".into(), Json::Str("create".into())),
+                (
+                    "params".into(),
+                    Json::Obj(vec![
+                        ("program".into(), Json::Str(MU_MODEL.into())),
+                        ("infer".into(), Json::Str(MU_INFER.into())),
+                        ("watch".into(), Json::Arr(vec![Json::Str("mu".into())])),
+                    ]),
+                ),
+            ])
+            .encode(),
+        ))
+        .get("session")
+        .and_then(Json::as_u64)
+        .unwrap();
+        sub.rpc(&format!(
+            r#"{{"id":2,"method":"subscribe","params":{{"session":{sid}}}}}"#
+        ));
+        faults::install(FaultPlan {
+            disconnect_at: 1,
+            ..FaultPlan::default()
+        });
+        // drive the step from a second connection: the first event line
+        // kills the subscribed connection
+        let mut ctl = Client::connect(&addr);
+        let rep = ctl.rpc(&format!(
+            r#"{{"id":3,"method":"step","params":{{"session":{sid},"n":50}}}}"#
+        ));
+        assert_eq!(ok_body(&rep).get("done").and_then(Json::as_u64), Some(50));
+        faults::clear();
+        // the dropped connection reads EOF...
+        assert!(
+            sub.read_line(Instant::now() + Duration::from_secs(10)).is_none(),
+            "the injected disconnect must close the subscribed connection"
+        );
+        // ...while the session keeps serving
+        let rep = ctl.rpc(&format!(
+            r#"{{"id":4,"method":"step","params":{{"session":{sid},"n":5}}}}"#
+        ));
+        assert_eq!(ok_body(&rep).get("done").and_then(Json::as_u64), Some(5));
+        ctl.rpc(r#"{"id":5,"method":"shutdown"}"#);
+        handle.join().expect("server thread");
+    }
+}
