@@ -162,6 +162,7 @@ fn ablate_batch() {
             threads: 1,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         let mut ev = InterpreterEval;
         let iters = 40;

@@ -472,6 +472,7 @@ fn main() {
         threads: 1,
         target_risk: None,
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let t = bench(
         &format!("subsampled transition, batched (N={n0})"),

@@ -1,0 +1,321 @@
+//! Streaming-ingestion benchmarks (§Streaming): per-append cost of the
+//! O(|append|) trace fast path — `append_directive` plus in-place
+//! extension of the partition / batch-plan / column-store caches — on
+//! the logistic-regression workload at N in {1e3, 1e4, 1e5}.
+//!
+//! Run: `cargo bench --bench streaming` (`-- --quick` for the CI smoke
+//! pass; same N sweep, fewer appends).  Emits `BENCH_streaming.json` at
+//! the repository root (schema-checked by `scripts/check_bench.py`).
+//!
+//! The artifact carries the tentpole's two contracts as self-checks:
+//!
+//! * `append_cost_flat_in_n` — mean per-append cost must be flat across
+//!   the N sweep (an O(N) rebuild hiding on the append path would show
+//!   up as a ~100x ratio; the gate allows 4x for timer jitter).
+//! * `append_then_infer_bitwise` — the same directive + transition
+//!   schedule executed through the append fast path (warm caches,
+//!   extended in place) and through plain `execute` (structural bump,
+//!   wholesale rebuild) must land on bitwise-identical traces.
+
+use std::fmt::Write as _;
+use std::rc::Rc;
+use std::time::Instant;
+use subppl::coordinator::chain::build_bayes_lr;
+use subppl::data::{synth2d, Dataset};
+use subppl::infer::{subsampled_mh_transition, PlannedEval, Proposal, SubsampledConfig};
+use subppl::math::Pcg64;
+use subppl::ppl::ast::{Directive, Expr};
+use subppl::trace::partition::build_partition;
+use subppl::trace::Trace;
+use subppl::Value;
+
+/// The same observation shape `build_bayes_lr` constructs, so appended
+/// rows are indistinguishable from built-in ones.
+fn lr_observe(x: &[f64], y: bool) -> Directive {
+    Directive::Observe(
+        Expr::app(vec![
+            Expr::sym("f"),
+            Expr::constant(Value::Vector(Rc::new(x.to_vec()))),
+        ]),
+        Value::Bool(y),
+    )
+}
+
+fn head(data: &Dataset, n: usize) -> Dataset {
+    let mut h = data.clone();
+    h.x.truncate(n);
+    h.y.truncate(n);
+    h
+}
+
+fn kcfg() -> SubsampledConfig {
+    SubsampledConfig {
+        m: 100,
+        eps: 0.01,
+        proposal: Proposal::Drift(0.05),
+        exact: false,
+        threads: 1,
+        target_risk: None,
+        shard_timeout_ms: 0,
+        store_verify: None,
+    }
+}
+
+struct SweepRow {
+    n: usize,
+    d: usize,
+    /// Mean wall-clock per append: `append_directive` + partition /
+    /// batch-plan / column-store cache extension.
+    append_us: f64,
+    /// One cold `build_partition` at the same N — the O(N) cost the
+    /// fast path avoids.
+    partition_rebuild_us: f64,
+    /// True iff every cache survived the append burst by in-place
+    /// extension: structure version pinned, partition allocation
+    /// pointer stable, column store never freshly rebuilt.
+    extended_in_place: bool,
+}
+
+/// Mean per-append cost at population `n`: build the LR trace, warm the
+/// caches with one subsampled transition plus the explicit cache trio,
+/// then time `appends` single-observation appends, each followed by the
+/// same cache lookups a draw would perform (which extend, not rebuild).
+fn append_sweep_row(data: &Dataset, n: usize, appends: usize) -> SweepRow {
+    let sub = head(data, n);
+    let mut rng = Pcg64::seeded(1);
+    let (mut trace, w) = build_bayes_lr(&sub, 0.1, &mut rng);
+    let d = sub.d();
+
+    // warm: one real transition (values move, store rows fill) plus the
+    // cache trio a serve draw would consult
+    let mut ev = PlannedEval::new().with_colstore(true);
+    let mut trng = Pcg64::seeded(2);
+    let s = subsampled_mh_transition(&mut trace, &mut trng, w, &kcfg(), &mut ev).unwrap();
+    std::hint::black_box(s.sections_evaluated);
+    let p0 = trace.cached_partition(w).unwrap();
+    let set0 = trace.cached_batch_plans(&p0);
+    let (_store0, _) = trace.cached_colstore(&p0, &set0);
+    let p0_ptr = Rc::as_ptr(&p0);
+    let locals0 = p0.locals.len();
+    drop(set0);
+    drop(p0); // refcount back to 1 so the extension path can get_mut
+
+    let sv0 = trace.structure_version;
+    let mut extended = true;
+    let t0 = Instant::now();
+    for k in 0..appends {
+        let (x, y) = (&data.x[n + k], data.y[n + k]);
+        trace.append_directive(&lr_observe(x, y), &mut rng).unwrap();
+        let p = trace.cached_partition(w).unwrap();
+        let set = trace.cached_batch_plans(&p);
+        let (_store, fresh) = trace.cached_colstore(&p, &set);
+        extended &= !fresh && Rc::as_ptr(&p) == p0_ptr;
+    }
+    let append_us = t0.elapsed().as_secs_f64() / appends as f64 * 1e6;
+    extended &= trace.structure_version == sv0;
+
+    // the grown membership must be visible to the extended caches
+    let p = trace.cached_partition(w).unwrap();
+    assert_eq!(p.locals.len(), locals0 + appends, "appends missing from extended partition");
+    assert_eq!(p.appended_at, trace.append_version, "partition not caught up to append_version");
+
+    // the O(N) cost the fast path avoids, for scale
+    let t1 = Instant::now();
+    let pr = build_partition(&trace, w).unwrap();
+    let partition_rebuild_us = t1.elapsed().as_secs_f64() * 1e6;
+    std::hint::black_box(pr.n());
+
+    println!(
+        "append sweep N={n:<7} append {append_us:>10.2} us   partition rebuild {partition_rebuild_us:>12.1} us   rebuild/append {:>8.1}x   extended in place: {extended}",
+        partition_rebuild_us / append_us
+    );
+    SweepRow { n, d, append_us, partition_rebuild_us, extended_in_place: extended }
+}
+
+/// The correctness contract, run at small N: the same full schedule —
+/// build `n0` rows, `t1` transitions, add `k` rows, `t2` transitions —
+/// through the append fast path (caches warm, extended in place) and
+/// through plain `execute` (structural bump, wholesale rebuild) must
+/// produce bitwise-identical traces.  Both mechanisms consume identical
+/// RNG streams (`append_directive` and `execute` share the evaluator),
+/// so any divergence is an extension bug, not noise.
+fn bitwise_check(n0: usize, k: usize, t1: usize, t2: usize) -> Result<(), String> {
+    let data = synth2d::generate(n0 + k, 42);
+    let run = |fast: bool| -> (u64, String) {
+        let mut rng = Pcg64::seeded(7);
+        let (mut trace, w) = build_bayes_lr(&head(&data, n0), 0.1, &mut rng);
+        let mut ev = PlannedEval::new().with_colstore(true);
+        let mut trng = Pcg64::seeded(8);
+        let cfg = kcfg();
+        for _ in 0..t1 {
+            subsampled_mh_transition(&mut trace, &mut trng, w, &cfg, &mut ev).unwrap();
+        }
+        for i in 0..k {
+            let obs = lr_observe(&data.x[n0 + i], data.y[n0 + i]);
+            if fast {
+                trace.append_directive(&obs, &mut rng).unwrap();
+            } else {
+                trace.execute(&obs, &mut rng).unwrap();
+            }
+        }
+        for _ in 0..t2 {
+            subsampled_mh_transition(&mut trace, &mut trng, w, &cfg, &mut ev).unwrap();
+        }
+        (trace.log_joint().to_bits(), format!("{:?}", trace.fresh_value(w)))
+    };
+    let (lj_a, w_a) = run(true);
+    let (lj_b, w_b) = run(false);
+    if lj_a != lj_b {
+        return Err(format!(
+            "log_joint diverged: append path {} vs execute path {}",
+            f64::from_bits(lj_a),
+            f64::from_bits(lj_b)
+        ));
+    }
+    if w_a != w_b {
+        return Err(format!("principal value diverged: {w_a} vs {w_b}"));
+    }
+    Ok(())
+}
+
+enum Check {
+    Pass,
+    Fail(String),
+}
+
+impl Check {
+    fn json(&self) -> String {
+        match self {
+            Check::Pass => "true".into(),
+            Check::Fail(_) => "false".into(),
+        }
+    }
+}
+
+fn from_bool(ok: bool, why: String) -> Check {
+    if ok {
+        Check::Pass
+    } else {
+        Check::Fail(why)
+    }
+}
+
+/// Jitter allowance on the flat-in-N ratio: a per-append cost with an
+/// O(N) component would blow past this by orders of magnitude at the
+/// 100x population spread.
+const FLAT_RATIO: f64 = 4.0;
+
+fn emit_json(
+    rows: &[SweepRow],
+    appends: usize,
+    bitwise: (usize, usize, usize),
+    checks: &[(&'static str, Check)],
+) {
+    let mut out = String::from(
+        "{\n  \"bench\": \"streaming\",\n  \"workload\": \"bayes_lr_append\",\n",
+    );
+    let _ = writeln!(out, "  \"appends_per_n\": {appends},\n  \"append_sweep\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "    {{\"n\": {}, \"d\": {}, \"append_us\": {:.3}, \"partition_rebuild_us\": {:.1}, \"rebuild_over_append\": {:.1}, \"extended_in_place\": {}}}{}",
+            r.n,
+            r.d,
+            r.append_us,
+            r.partition_rebuild_us,
+            r.partition_rebuild_us / r.append_us,
+            r.extended_in_place,
+            if i + 1 == rows.len() { "" } else { "," }
+        );
+    }
+    let (n0, k, t) = bitwise;
+    let _ = writeln!(
+        out,
+        "  ],\n  \"bitwise\": {{\n    \"n0\": {n0},\n    \"appended\": {k},\n    \"transitions\": {t}\n  }},\n  \"self_checks\": {{"
+    );
+    for (i, (name, check)) in checks.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "    \"{name}\": {}{}",
+            check.json(),
+            if i + 1 == checks.len() { "" } else { "," }
+        );
+    }
+    out.push_str("  }\n}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_streaming.json"))
+        .unwrap_or_else(|| "BENCH_streaming.json".into());
+    match std::fs::write(&path, &out) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!("subppl streaming-append benchmarks{}\n", if quick { " (quick)" } else { "" });
+
+    // the flat-in-N contract needs the full sweep even in quick mode;
+    // quick only trims the append burst per population
+    let ns: [usize; 3] = [1_000, 10_000, 100_000];
+    let appends = if quick { 16 } else { 64 };
+    let data = synth2d::generate(ns[ns.len() - 1] + appends, 0);
+    let rows: Vec<SweepRow> = ns.iter().map(|&n| append_sweep_row(&data, n, appends)).collect();
+
+    let (n0, k, t1, t2) = (300, 8, 3, 3);
+    let bitwise = bitwise_check(n0, k, t1, t2);
+
+    let lo = &rows[0];
+    let hi = &rows[rows.len() - 1];
+    let ratio = hi.append_us / lo.append_us;
+    let checks: Vec<(&'static str, Check)> = vec![
+        (
+            "append_cost_flat_in_n",
+            from_bool(
+                ratio < FLAT_RATIO,
+                format!(
+                    "per-append cost grew {ratio:.1}x from N={} ({:.2} us) to N={} ({:.2} us); bound {FLAT_RATIO}x",
+                    lo.n, lo.append_us, hi.n, hi.append_us
+                ),
+            ),
+        ),
+        (
+            "append_beats_rebuild_at_1e5",
+            from_bool(
+                hi.append_us < hi.partition_rebuild_us,
+                format!(
+                    "per-append cost {:.2} us not below a full partition rebuild {:.1} us at N={}",
+                    hi.append_us, hi.partition_rebuild_us, hi.n
+                ),
+            ),
+        ),
+        (
+            "caches_extended_not_rebuilt",
+            from_bool(
+                rows.iter().all(|r| r.extended_in_place),
+                "an append burst fell off the extension path (structural bump, partition realloc, or fresh column store)".into(),
+            ),
+        ),
+        (
+            "append_then_infer_bitwise",
+            match &bitwise {
+                Ok(()) => Check::Pass,
+                Err(e) => Check::Fail(e.clone()),
+            },
+        ),
+    ];
+
+    emit_json(&rows, appends, (n0, k, t1 + t2), &checks);
+    let mut failed = false;
+    for (name, check) in &checks {
+        match check {
+            Check::Pass => println!("self-check {name}: ok"),
+            Check::Fail(msg) => {
+                eprintln!("self-check {name} FAILED: {msg}");
+                failed = true;
+            }
+        }
+    }
+    assert!(!failed, "streaming self-checks failed (see above)");
+}

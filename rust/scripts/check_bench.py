@@ -1,23 +1,27 @@
 #!/usr/bin/env python3
-"""Validate bench artifacts (BENCH_hotpath.json, BENCH_serve.json)
-against their expected schemas.
+"""Validate bench artifacts (BENCH_hotpath.json, BENCH_serve.json,
+BENCH_streaming.json) against their expected schemas.
 
 The perf-trajectory artifacts are uploaded from every bench run; this
 gate makes sure they are actually well-formed before they land — a
 bench refactor that drops a column (or emits NaN/absent self-checks)
 would otherwise silently produce an artifact that breaks trajectory
 tooling weeks later.  The artifact's own `bench` field selects the
-schema: "hotpath" (scorer sweeps + micro benches) or "serve" (the
-daemon load smoke: latency percentiles, backpressure, drain report).
+schema: "hotpath" (scorer sweeps + micro benches), "serve" (the
+daemon load smoke: latency percentiles, backpressure, drain report),
+or "streaming" (the append fast path: per-append cost sweep with the
+flat-in-N and bitwise self-checks).
 
 Usage:
     python3 scripts/check_bench.py ../BENCH_hotpath.json [--full]
     python3 scripts/check_bench.py ../BENCH_serve.json
+    python3 scripts/check_bench.py ../BENCH_streaming.json
     python3 scripts/check_bench.py --selftest
 
 --full additionally requires the N=1e5 sweep row (the nightly bench;
 the PR smoke pass runs --quick, which stops at N=1e4).  It is a no-op
-for serve artifacts.
+for serve and streaming artifacts (streaming always runs the full N
+sweep — the flat-in-N contract is meaningless without it).
 
 --selftest validates the validator: it writes synthetic pass/fail
 artifacts (well-formed, and broken in each schema-specific way) to a
@@ -112,6 +116,28 @@ SERVE_SELF_CHECK_KEYS = {
     "drain_checkpoints_in_flight_sessions",
     "in_flight_steps_cancel_at_draw_boundary",
     "drain_within_timeout",
+}
+
+# ---- BENCH_streaming.json (the append fast-path bench) ----
+
+# per-population append-cost columns; `extended_in_place` is checked
+# separately (it must be a bool — whether it is *true* is the
+# caches_extended_not_rebuilt self-check's job, not the schema gate's)
+STREAMING_ROW_KEYS = {
+    "n": int,
+    "d": int,
+    "append_us": float,
+    "partition_rebuild_us": float,
+    "rebuild_over_append": float,
+}
+# the flat-in-N contract spans the full sweep even in --quick runs
+STREAMING_NS = {1_000, 10_000, 100_000}
+STREAMING_BITWISE_KEYS = {"n0", "appended", "transitions"}
+STREAMING_SELF_CHECK_KEYS = {
+    "append_cost_flat_in_n",
+    "append_beats_rebuild_at_1e5",
+    "caches_extended_not_rebuilt",
+    "append_then_infer_bitwise",
 }
 
 errors = []
@@ -254,6 +280,59 @@ def validate_serve(doc):
         check_self_checks(checks, SERVE_SELF_CHECK_KEYS)
 
 
+def validate_streaming(doc):
+    """Schema checks for the streaming append-cost artifact."""
+    if doc.get("workload") != "bayes_lr_append":
+        err(f"workload: expected 'bayes_lr_append', got {doc.get('workload')!r}")
+
+    appends = doc.get("appends_per_n")
+    if not (nonneg_int(appends) and appends > 0):
+        err(f"appends_per_n: expected positive integer, got {appends!r}")
+
+    sweep = doc.get("append_sweep")
+    if not isinstance(sweep, list) or not sweep:
+        err("append_sweep: missing or empty")
+        sweep = []
+    for i, row in enumerate(sweep):
+        for key, kind in STREAMING_ROW_KEYS.items():
+            if key not in row:
+                err(f"append_sweep[{i}]: missing column {key!r}")
+            elif kind is int and not nonneg_int(row[key]):
+                err(f"append_sweep[{i}].{key}: expected non-negative integer, got {row[key]!r}")
+            elif not positive_finite(row[key]):
+                err(f"append_sweep[{i}].{key}: expected positive finite number, got {row[key]!r}")
+        if not isinstance(row.get("extended_in_place"), bool):
+            err(f"append_sweep[{i}].extended_in_place: expected a boolean, "
+                f"got {row.get('extended_in_place')!r}")
+        extra = set(row) - set(STREAMING_ROW_KEYS) - {"extended_in_place"}
+        if extra:
+            err(f"append_sweep[{i}]: unexpected keys {sorted(extra)}")
+    ns = {row.get("n") for row in sweep}
+    missing = STREAMING_NS - ns
+    if missing:
+        err(f"append_sweep: missing rows for N in {sorted(missing)} (have {sorted(ns)}) "
+            f"— the flat-in-N contract needs the full sweep")
+
+    bitwise = doc.get("bitwise")
+    if not isinstance(bitwise, dict):
+        err("bitwise: missing (bench skipped the append-vs-execute contract?)")
+    else:
+        for key in sorted(STREAMING_BITWISE_KEYS - set(bitwise)):
+            err(f"bitwise: missing {key!r}")
+        extra = set(bitwise) - STREAMING_BITWISE_KEYS
+        if extra:
+            err(f"bitwise: unexpected keys {sorted(extra)}")
+        for key in sorted(STREAMING_BITWISE_KEYS & set(bitwise)):
+            if not (nonneg_int(bitwise[key]) and bitwise[key] > 0):
+                err(f"bitwise.{key}: expected positive integer, got {bitwise[key]!r}")
+
+    checks = doc.get("self_checks")
+    if not isinstance(checks, dict):
+        err("self_checks: missing")
+    else:
+        check_self_checks(checks, STREAMING_SELF_CHECK_KEYS)
+
+
 def validate(doc, full):
     """Run every schema check on a parsed artifact; returns the error list.
     The artifact's `bench` field picks the schema."""
@@ -262,8 +341,11 @@ def validate(doc, full):
     if bench == "serve":
         validate_serve(doc)
         return list(errors)
+    if bench == "streaming":
+        validate_streaming(doc)
+        return list(errors)
     if bench != "hotpath":
-        err(f"bench: expected 'hotpath' or 'serve', got {bench!r}")
+        err(f"bench: expected 'hotpath', 'serve' or 'streaming', got {bench!r}")
     if doc.get("workload") != "bayes_lr":
         err(f"workload: expected 'bayes_lr', got {doc.get('workload')!r}")
 
@@ -360,6 +442,12 @@ def check_file(path, full):
               f"drain {drain.get('drained')}+{drain.get('forced')} forced, "
               f"self-checks clean)")
         return 0
+    if doc.get("bench") == "streaming":
+        sweep = doc.get("append_sweep") or []
+        ns = sorted(row.get("n") for row in sweep)
+        print(f"check_bench: {path} ok ({len(sweep)} append-sweep rows, N = {ns}, "
+              f"{doc.get('appends_per_n')} appends/N, self-checks clean)")
+        return 0
     sweep = doc.get("scorer_sweep") or []
     ns = {row.get("n") for row in sweep}
     print(f"check_bench: {path} ok ({len(sweep)} sweep rows, N = {sorted(ns)}, "
@@ -412,6 +500,25 @@ def synthetic_serve_doc():
             "checkpointed": 4, "drain_ms": 41.5,
         },
         "self_checks": {k: True for k in SERVE_SELF_CHECK_KEYS},
+    }
+
+
+def synthetic_streaming_doc():
+    """A minimal streaming artifact that passes every schema check."""
+    def row(n):
+        return {
+            "n": n, "d": 2, "append_us": 4.2,
+            "partition_rebuild_us": 1800.0 * (n / 1000),
+            "rebuild_over_append": 430.0 * (n / 1000),
+            "extended_in_place": True,
+        }
+    return {
+        "bench": "streaming",
+        "workload": "bayes_lr_append",
+        "appends_per_n": 64,
+        "append_sweep": [row(n) for n in sorted(STREAMING_NS)],
+        "bitwise": {"n0": 300, "appended": 8, "transitions": 6},
+        "self_checks": {k: True for k in STREAMING_SELF_CHECK_KEYS},
     }
 
 
@@ -473,9 +580,36 @@ def selftest():
         ("serve_zero_rejections_ok",
          mutate(["backpressure", "rejected_overloaded"], 0), True),
     ]
+    # (name, mutation, expect_ok) against the streaming artifact
+    streaming_cases = [
+        ("streaming_valid", lambda d: None, True),
+        ("streaming_wrong_workload", mutate(["workload"], "bayes_lr"), False),
+        ("streaming_appends_zero", mutate(["appends_per_n"], 0), False),
+        ("streaming_sweep_missing", lambda d: d.pop("append_sweep"), False),
+        ("streaming_sweep_missing_1e5",
+         lambda d: d["append_sweep"].pop(), False),
+        ("streaming_append_us_missing",
+         lambda d: d["append_sweep"][0].pop("append_us"), False),
+        ("streaming_append_us_nan",
+         mutate(["append_sweep", 0, "append_us"], float("nan")), False),
+        ("streaming_extended_not_bool",
+         mutate(["append_sweep", 0, "extended_in_place"], "yes"), False),
+        ("streaming_extended_false_ok",
+         mutate(["append_sweep", 0, "extended_in_place"], False), True),
+        ("streaming_row_extra_key",
+         mutate(["append_sweep", 0, "surprise"], 1), False),
+        ("streaming_bitwise_missing", lambda d: d.pop("bitwise"), False),
+        ("streaming_bitwise_zero_transitions",
+         mutate(["bitwise", "transitions"], 0), False),
+        ("streaming_flat_check_failed",
+         mutate(["self_checks", "append_cost_flat_in_n"], False), False),
+        ("streaming_bitwise_check_missing",
+         lambda d: d["self_checks"].pop("append_then_infer_bitwise"), False),
+    ]
     failures = []
     with tempfile.TemporaryDirectory() as tmp:
-        for base, suite in ((synthetic_doc, cases), (synthetic_serve_doc, serve_cases)):
+        for base, suite in ((synthetic_doc, cases), (synthetic_serve_doc, serve_cases),
+                            (synthetic_streaming_doc, streaming_cases)):
             for name, break_it, expect_ok in suite:
                 doc = copy.deepcopy(base())
                 break_it(doc)
@@ -491,7 +625,8 @@ def selftest():
     if failures:
         print(f"check_bench --selftest FAILED: {failures}", file=sys.stderr)
         return 1
-    print(f"check_bench --selftest ok ({len(cases) + len(serve_cases)} synthetic artifacts)")
+    print(f"check_bench --selftest ok "
+          f"({len(cases) + len(serve_cases) + len(streaming_cases)} synthetic artifacts)")
     return 0
 
 

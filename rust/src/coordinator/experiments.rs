@@ -20,6 +20,7 @@ use crate::infer::{
     LocalEvaluator, PlannedEval, Proposal, SubsampledConfig,
 };
 use crate::math::Pcg64;
+use crate::ppl::ast::{Directive, Expr};
 use crate::ppl::value::Value;
 use crate::stats::risk::PredictiveAccumulator;
 use crate::stats::{ess, jarque_bera, predictive_risk, zero_one_error};
@@ -86,6 +87,7 @@ pub fn fig5_sublinear(cfg: &Fig5Config, evaluator: &mut dyn LocalEvaluator) -> V
             threads: 0,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         for _ in 0..5 {
             subsampled_mh_transition(&mut trace, &mut rng, w, &warm, evaluator).unwrap();
@@ -238,6 +240,7 @@ pub fn fig4_reference(
         threads: 0,
         target_risk: None,
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let mut acc = PredictiveAccumulator::new(test.n());
     for i in 0..(cfg.steps * 2) {
@@ -285,6 +288,7 @@ pub fn fig4_curve(
         threads: 0,
         target_risk,
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let mut acc = PredictiveAccumulator::new(test.n());
     let mut points = Vec::new();
@@ -428,6 +432,7 @@ pub fn fig6_dpm(cfg: &Fig6Config, subsampled: bool) -> Vec<Fig6Point> {
         threads: 0,
         target_risk: None,
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let mut ev = PlannedEval::for_config(&kcfg);
     let alpha = trace.lookup_node("alpha").unwrap();
@@ -612,6 +617,7 @@ pub fn fig9_sv_monitored(
         threads: 0,
         target_risk: if subsampled { cfg.target_risk } else { None },
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let mut ev = PlannedEval::for_config(&kcfg);
     let mut phi_samples = Vec::with_capacity(cfg.sweeps);
@@ -746,6 +752,207 @@ pub fn fig9_repeated_monitored(
 }
 
 // ---------------------------------------------------------------------
+// Fig. 9 (streaming) — windowed SV over a live tick stream
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Fig9StreamingConfig {
+    pub series: usize,
+    /// Ticks (time points per series) live at any moment.
+    pub window: usize,
+    /// Streaming steps: each appends one tick across all series and
+    /// retires the oldest.
+    pub ticks: usize,
+    /// Parameter sweeps between consecutive ticks.
+    pub sweeps_per_tick: usize,
+    pub particles: usize,
+    pub m: usize,
+    pub eps: f64,
+    pub seed: u64,
+    pub target_risk: Option<f64>,
+}
+
+impl Default for Fig9StreamingConfig {
+    fn default() -> Self {
+        Fig9StreamingConfig {
+            series: 50,
+            window: 8,
+            ticks: 6,
+            sweeps_per_tick: 20,
+            particles: 10,
+            m: 100,
+            eps: 1e-3,
+            seed: 17,
+            target_risk: None,
+        }
+    }
+}
+
+/// One streaming step's accounting.
+#[derive(Clone, Debug)]
+pub struct Fig9StreamingRow {
+    pub tick: usize,
+    /// Observations appended / retired this tick (= `series` each).
+    pub appended: usize,
+    pub retired: usize,
+    pub append_seconds: f64,
+    pub retire_seconds: f64,
+    pub sweep_seconds: f64,
+    /// Posterior means over this tick's sweeps.
+    pub phi_mean: f64,
+    pub sig_mean: f64,
+    /// Live observations after the tick (stays at `series * window`).
+    pub live_obs: usize,
+}
+
+/// The windowed SV trace for the streaming experiment: same model as
+/// [`build_sv`], but observations land **tick-major** (time outer,
+/// series inner) so [`Trace::retire_observations`] retires whole ticks
+/// — the k oldest observe records are exactly the oldest tick across
+/// every series.
+fn build_sv_streaming(
+    series: &[sv_data::SvSeries],
+    window: usize,
+    rng: &mut Pcg64,
+) -> (Trace, NodeId, NodeId) {
+    let mut trace = Trace::new();
+    let header = "[assume sig2 (scope_include 'sig2 0 (inv_gamma 5 0.05))]\n\
+         [assume sig (sqrt sig2)]\n\
+         [assume phi (scope_include 'phi 0 (beta 5 1))]"
+        .to_string();
+    trace.run_program(&header, rng).unwrap();
+    for s in 0..series.len() {
+        let prog = format!(
+            "[assume h{s} (mem (lambda (t) (scope_include 'h{s} t \
+               (if (<= t 0) 0.0 (normal (* phi (h{s} (- t 1))) sig)))))]\n\
+             [assume x{s} (lambda (t) (normal 0 (exp (/ (h{s} t) 2))))]"
+        );
+        trace.run_program(&prog, rng).unwrap();
+    }
+    for t in 0..window {
+        for (s, sv) in series.iter().enumerate() {
+            trace.execute(&sv_observe(s, t, sv.x[t]), rng).unwrap();
+        }
+    }
+    let phi = trace.lookup_node("phi").unwrap();
+    let sig2 = trace.lookup_node("sig2").unwrap();
+    (trace, phi, sig2)
+}
+
+/// The observe directive for series `s` at (0-based) time `t` — the
+/// same construction for the initial build and every streamed append,
+/// so append-vs-fresh comparisons execute identical directives.
+fn sv_observe(s: usize, t: usize, xv: f64) -> Directive {
+    Directive::Observe(
+        Expr::app(vec![
+            Expr::sym(&format!("x{s}")),
+            Expr::constant(Value::Int((t + 1) as i64)),
+        ]),
+        Value::Real(xv),
+    )
+}
+
+/// Streaming SV: "ticks in, posterior out" over a sliding window.
+/// Every tick appends one new observation per series through the
+/// O(|append|) fast path ([`Trace::append_directive`]: plans, batch
+/// groups and column-store panels for existing data stay cached), then
+/// retires the oldest tick in one batched structural change
+/// ([`Trace::retire_observations`]), then sweeps the parameters.
+/// Latent volatility states of retired ticks stay alive — successor
+/// states reference them through the mem route — so the state chains
+/// keep their full history while the observation window slides.
+pub fn fig9_streaming(cfg: &Fig9StreamingConfig) -> Vec<Fig9StreamingRow> {
+    let data_cfg = sv_data::SvConfig {
+        series: cfg.series,
+        len: cfg.window + cfg.ticks,
+        ..Default::default()
+    };
+    let series = sv_data::generate(&data_cfg, cfg.seed);
+    let mut rng = Pcg64::new(cfg.seed, 4);
+    let (mut trace, phi, sig2) = build_sv_streaming(&series, cfg.window, &mut rng);
+    let kcfg = SubsampledConfig {
+        m: cfg.m,
+        eps: cfg.eps,
+        proposal: Proposal::Drift(0.02),
+        exact: false,
+        threads: 0,
+        target_risk: cfg.target_risk,
+        shard_timeout_ms: 0,
+        store_verify: None,
+    };
+    let mut ev = PlannedEval::for_config(&kcfg);
+    let mut rows = Vec::with_capacity(cfg.ticks);
+    for tick in 0..cfg.ticks {
+        let t_new = cfg.window + tick;
+        let t0 = Instant::now();
+        for (s, sv) in series.iter().enumerate() {
+            trace
+                .append_directive(&sv_observe(s, t_new, sv.x[t_new]), &mut rng)
+                .unwrap();
+        }
+        let append_seconds = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let retired = trace.retire_observations(cfg.series).unwrap();
+        let retire_seconds = t0.elapsed().as_secs_f64();
+        let blocks: Vec<Value> = (1..=(t_new + 1) as i64).map(Value::Int).collect();
+        let mut phi_sum = 0.0;
+        let mut sig_sum = 0.0;
+        let t0 = Instant::now();
+        for _ in 0..cfg.sweeps_per_tick {
+            let s = rng.below(cfg.series);
+            pgibbs_transition(&mut trace, &mut rng, &format!("h{s}"), &blocks, cfg.particles)
+                .unwrap();
+            subsampled_mh_transition(&mut trace, &mut rng, sig2, &kcfg, &mut ev).unwrap();
+            subsampled_mh_transition(&mut trace, &mut rng, phi, &kcfg, &mut ev).unwrap();
+            phi_sum += trace.fresh_value(phi).as_f64().unwrap();
+            sig_sum += trace.fresh_value(sig2).as_f64().unwrap().sqrt();
+        }
+        let sweep_seconds = t0.elapsed().as_secs_f64();
+        rows.push(Fig9StreamingRow {
+            tick,
+            appended: cfg.series,
+            retired,
+            append_seconds,
+            retire_seconds,
+            sweep_seconds,
+            phi_mean: phi_sum / cfg.sweeps_per_tick.max(1) as f64,
+            sig_mean: sig_sum / cfg.sweeps_per_tick.max(1) as f64,
+            live_obs: trace.observations().len(),
+        });
+    }
+    rows
+}
+
+/// CSV of the streaming rows (`fig9_streaming.csv`).
+pub fn fig9_streaming_csv(rows: &[Fig9StreamingRow]) -> Csv {
+    let mut csv = Csv::new(&[
+        "tick",
+        "appended",
+        "retired",
+        "append_seconds",
+        "retire_seconds",
+        "sweep_seconds",
+        "phi_mean",
+        "sig_mean",
+        "live_obs",
+    ]);
+    for r in rows {
+        csv.row(&[
+            r.tick.to_string(),
+            r.appended.to_string(),
+            r.retired.to_string(),
+            format!("{:.6}", r.append_seconds),
+            format!("{:.6}", r.retire_seconds),
+            format!("{:.6}", r.sweep_seconds),
+            format!("{:.5}", r.phi_mean),
+            format!("{:.5}", r.sig_mean),
+            r.live_obs.to_string(),
+        ]);
+    }
+    csv
+}
+
+// ---------------------------------------------------------------------
 // Table 1 — scaling overview
 // ---------------------------------------------------------------------
 
@@ -779,6 +986,7 @@ pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
                 threads: 0,
                 target_risk: None,
                 shard_timeout_ms: 0,
+                store_verify: None,
             };
             let iters = 10;
             let t0 = Instant::now();
@@ -817,6 +1025,7 @@ pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
                 threads: 0,
                 target_risk: None,
                 shard_timeout_ms: 0,
+                store_verify: None,
             };
             let iters = 10;
             let t0 = Instant::now();
@@ -857,6 +1066,7 @@ pub fn table1_scaling(seed: u64) -> Vec<Table1Row> {
                 threads: 0,
                 target_risk: None,
                 shard_timeout_ms: 0,
+                store_verify: None,
             };
             let iters = 5;
             let t0 = Instant::now();
@@ -1105,6 +1315,33 @@ mod tests {
             snaps.iter().any(|s| s.eval.planned > 0),
             "no snapshot carried evaluator stats"
         );
+    }
+
+    #[test]
+    fn fig9_streaming_window_stays_fixed() {
+        let cfg = Fig9StreamingConfig {
+            series: 4,
+            window: 3,
+            ticks: 3,
+            sweeps_per_tick: 2,
+            particles: 5,
+            ..Default::default()
+        };
+        let rows = fig9_streaming(&cfg);
+        assert_eq!(rows.len(), cfg.ticks);
+        for r in &rows {
+            assert_eq!(r.appended, cfg.series);
+            assert_eq!(r.retired, cfg.series, "retirement must keep pace");
+            assert_eq!(
+                r.live_obs,
+                cfg.series * cfg.window,
+                "the observation window must stay fixed at tick {}",
+                r.tick
+            );
+            assert!(r.phi_mean.is_finite() && r.sig_mean.is_finite());
+        }
+        let csv = fig9_streaming_csv(&rows);
+        assert_eq!(csv.contents().lines().count(), cfg.ticks + 1);
     }
 
     #[test]

@@ -707,6 +707,7 @@ mod tests {
             threads: 1,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         let mut fused = FusedEval::open_default().unwrap().always_fused();
         let mut accepted = 0;

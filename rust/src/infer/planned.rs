@@ -45,7 +45,7 @@ use crate::ppl::value::Value;
 use crate::runtime::pool::{resolve_threads, ShardScorer, WorkerPool};
 use crate::trace::batch::{BatchGroup, PackedBatch, RegFile};
 use crate::trace::colstore::{
-    colstore_enabled, ensure_group_members, ColumnStoreSet, LaneScratch, PanelBatch,
+    colstore_enabled, ensure_group_members, ColumnStoreSet, LaneScratch, PanelBatch, VerifyMode,
 };
 use crate::trace::node::NodeId;
 use crate::trace::partition::Partition;
@@ -216,6 +216,10 @@ pub struct PlannedEval {
     /// sequential replay; results are bitwise identical either way, so
     /// this is purely a wall-clock knob).
     shard: Option<ShardScorer>,
+    /// Column-store row self-check override (`SubsampledConfig::
+    /// store_verify` / `--store-verify`); `None` = the
+    /// `SUBPPL_STORE_VERIFY` env fallback, resolved per gather.
+    store_verify: Option<VerifyMode>,
     fallback: InterpreterEval,
     /// Roots whose lowering failed on trace `neg_trace` at structure
     /// version `neg_version` (skip retrying until the trace structure —
@@ -285,6 +289,7 @@ impl PlannedEval {
             batched: true,
             colstore: colstore_enabled(),
             shard: None,
+            store_verify: None,
             fallback: InterpreterEval,
             neg: HashSet::new(),
             neg_trace: 0,
@@ -355,9 +360,19 @@ impl PlannedEval {
         if resolve_threads(cfg.threads) > 1 {
             PlannedEval::with_pool(WorkerPool::global().clone())
                 .with_shard_timeout(cfg.shard_timeout_ms)
+                .with_store_verify(cfg.store_verify)
         } else {
-            PlannedEval::new()
+            PlannedEval::new().with_store_verify(cfg.store_verify)
         }
+    }
+
+    /// Override the column-store row self-check mode for this evaluator
+    /// (`None` keeps the `SUBPPL_STORE_VERIFY` env fallback).  Purely an
+    /// integrity-vs-throughput knob: scoring results are bitwise
+    /// identical under every mode.
+    pub fn with_store_verify(mut self, v: Option<VerifyMode>) -> PlannedEval {
+        self.store_verify = v;
+        self
     }
 
     /// Override the shard-watchdog result deadline for this evaluator
@@ -446,8 +461,8 @@ impl PlannedEval {
         if store.borrow().groups[gi].quarantined {
             return Err(StoreErr::Quarantined);
         }
-        let refreshed =
-            ensure_group_members(trace, store, gi, group, sel).map_err(StoreErr::Integrity)?;
+        let refreshed = ensure_group_members(trace, store, gi, group, sel, self.store_verify)
+            .map_err(StoreErr::Integrity)?;
         self.store_refreshed += refreshed;
         let panels = store.borrow().groups[gi].panels_arc();
         let mut pb = self.panel_spare.take().unwrap_or_default();
@@ -1028,6 +1043,7 @@ mod tests {
             threads: 1,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         let mut ev = PlannedEval::new();
         let monotone = |a: &EvalStats, b: &EvalStats| {
@@ -1104,6 +1120,7 @@ mod tests {
             threads: 1,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         let mut ev = PlannedEval::new().with_colstore(true);
         let sample_live = |trace: &mut Trace, rng: &mut Pcg64, ev: &mut PlannedEval| {
@@ -1165,6 +1182,7 @@ mod tests {
             threads: 1,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         let mut ev = PlannedEval::new();
         let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());

@@ -99,6 +99,22 @@ impl InfCmd {
             _ => {}
         }
     }
+
+    /// Set the column-store row self-check mode for every
+    /// `subsampled_mh` command in this program (the CLI's
+    /// `--store-verify` / a serve session's per-session value; unset
+    /// commands fall back to `SUBPPL_STORE_VERIFY`).
+    pub fn set_store_verify(&mut self, v: crate::trace::colstore::VerifyMode) {
+        match self {
+            InfCmd::SubsampledMh { cfg, .. } => cfg.store_verify = Some(v),
+            InfCmd::Cycle { cmds, .. } => {
+                for c in cmds {
+                    c.set_store_verify(v);
+                }
+            }
+            _ => {}
+        }
+    }
 }
 
 /// Aggregate statistics of an inference run.
@@ -323,6 +339,7 @@ fn convert(expr: &Rc<Expr>) -> Result<InfCmd, String> {
                     threads: 0,
                     target_risk: None,
                     shard_timeout_ms: 0,
+                    store_verify: None,
                 },
                 steps,
             })

@@ -59,6 +59,13 @@ pub struct SubsampledConfig {
     /// Purely a recovery-latency knob: the watchdog's inline re-run is
     /// bitwise identical to the shard it replaces.
     pub shard_timeout_ms: u64,
+    /// Column-store row self-check mode (`--store-verify`).  `None`
+    /// falls back to the `SUBPPL_STORE_VERIFY` env var — per-config so
+    /// concurrent serve sessions can each pick their own mode, the
+    /// same promotion the shard watchdog deadline got.  Purely an
+    /// integrity-vs-throughput knob: verification never changes
+    /// scores, only whether corrupt panels are caught.
+    pub store_verify: Option<crate::trace::colstore::VerifyMode>,
 }
 
 impl SubsampledConfig {
@@ -71,6 +78,7 @@ impl SubsampledConfig {
             threads: 0,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         }
     }
 }
@@ -469,6 +477,7 @@ mod tests {
             threads: 1,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         let mut ev = InterpreterEval;
         let mut total = 0usize;
@@ -498,6 +507,7 @@ mod tests {
             threads: 1,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         let mut ev = InterpreterEval;
         let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());
@@ -531,6 +541,7 @@ mod tests {
             threads: 1,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         let mut ev = InterpreterEval;
         let (mut m0, mut m1) = (RunningMoments::new(), RunningMoments::new());
@@ -567,6 +578,7 @@ mod tests {
             threads: 1,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         let mut ev = InterpreterEval;
         for _ in 0..50 {
@@ -665,6 +677,7 @@ mod tests {
             threads: 1,
             target_risk: Some(target),
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         let mut ev = RiskCapture {
             inner: InterpreterEval,

@@ -5,14 +5,16 @@
 //! subppl run <program.vnt> [--infer "<program>"] [--seed N] [--watch a,b]
 //!            [--target-risk R] [--threads T] [--chains R]
 //!            [--monitor-every K] [--monitor-gate R]
+//!            [--store-verify off|refreshed|full]
 //!            [--checkpoint-every K --checkpoint-dir D] [--resume]
-//! subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused]
+//! subppl experiment <table1|fig4|fig5|fig6|fig9|fig9_streaming>
+//!            [--fast] [--fused]
 //!            [--target-risk R] [--threads T] [--chains R]
 //!            [--monitor-every K] [--monitor-gate R]
 //! subppl serve [--addr HOST:PORT] [--max-sessions N]
 //!            [--session-deadline-ms MS] [--drain-timeout-ms MS]
 //!            [--seed N] [--queue-cap N] [--checkpoint-dir D]
-//!            [--shard-timeout-ms MS] [--threads T]
+//!            [--shard-timeout-ms MS] [--store-verify MODE] [--threads T]
 //! subppl artifacts                 # list the AOT artifact registry
 //! ```
 //!
@@ -36,6 +38,12 @@
 //! per-transition error below R, and the run reports the mean realized
 //! risk.  On `experiment fig4`/`fig9` the same flag adds a
 //! `subsampled-risk{R}` curve/run next to the fixed-eps ones.
+//!
+//! `--store-verify off|refreshed|full` sets the column-store row
+//! self-check mode for the run/daemon (default: the
+//! `SUBPPL_STORE_VERIFY` env var, else `refreshed`).  Purely an
+//! integrity-vs-throughput knob — results are bitwise identical under
+//! every mode.
 //!
 //! `--checkpoint-every K --checkpoint-dir D` snapshots each chain's
 //! state (stochastic values + RNG position) to `D/chain<c>.ckpt` every
@@ -83,6 +91,17 @@ fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .map(|s| s.as_str())
 }
 
+/// Parse a `--store-verify off|refreshed|full` flag into a
+/// [`VerifyMode`] (absent flag = `None`: env fallback).
+fn store_verify_opt(args: &[String]) -> Result<Option<subppl::trace::colstore::VerifyMode>, String> {
+    match opt(args, "--store-verify") {
+        Some(s) => subppl::trace::colstore::VerifyMode::parse(s)
+            .map(Some)
+            .ok_or_else(|| format!("bad --store-verify {s:?} (off|refreshed|full)")),
+        None => Ok(None),
+    }
+}
+
 fn run(args: &[String]) -> Result<(), String> {
     match args.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(args),
@@ -91,7 +110,7 @@ fn run(args: &[String]) -> Result<(), String> {
         Some("serve") => cmd_serve(args),
         _ => {
             eprintln!(
-                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--target-risk R] [--shard-timeout-ms MS] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R] [--checkpoint-every K --checkpoint-dir D] [--resume]\n  subppl experiment <table1|fig4|fig5|fig6|fig9> [--fast] [--fused] [--target-risk R] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]\n  subppl serve [--addr HOST:PORT] [--max-sessions N] [--session-deadline-ms MS] [--drain-timeout-ms MS] [--seed N] [--queue-cap N] [--checkpoint-dir D] [--shard-timeout-ms MS] [--threads T]\n  subppl artifacts"
+                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--target-risk R] [--shard-timeout-ms MS] [--store-verify off|refreshed|full] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R] [--checkpoint-every K --checkpoint-dir D] [--resume]\n  subppl experiment <table1|fig4|fig5|fig6|fig9|fig9_streaming> [--fast] [--fused] [--target-risk R] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]\n  subppl serve [--addr HOST:PORT] [--max-sessions N] [--session-deadline-ms MS] [--drain-timeout-ms MS] [--seed N] [--queue-cap N] [--checkpoint-dir D] [--shard-timeout-ms MS] [--store-verify MODE] [--threads T]\n  subppl artifacts"
             );
             Err("missing or unknown subcommand".into())
         }
@@ -119,6 +138,7 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         queue_cap: parse_u64("--queue-cap", 4)? as usize,
         checkpoint_dir: opt(args, "--checkpoint-dir").map(std::path::PathBuf::from),
         shard_timeout_ms: parse_u64("--shard-timeout-ms", 0)?,
+        store_verify: store_verify_opt(args)?,
         // sessions shard intra-draw scoring across the shared pool
         // unless --threads resolves to a single worker
         use_pool: pool_for(args).is_some(),
@@ -170,6 +190,7 @@ fn run_one_chain(
     infer_prog: Option<&str>,
     target_risk: Option<f64>,
     shard_timeout_ms: u64,
+    store_verify: Option<subppl::trace::colstore::VerifyMode>,
     names: &[String],
     samples: usize,
     pool: Option<Arc<WorkerPool>>,
@@ -194,11 +215,16 @@ fn run_one_chain(
         if shard_timeout_ms > 0 {
             cmd.set_shard_timeout_ms(shard_timeout_ms);
         }
+        if let Some(v) = store_verify {
+            cmd.set_store_verify(v);
+        }
         let mut ev: Box<dyn LocalEvaluator> = match pool {
-            Some(p) => {
-                Box::new(PlannedEval::with_pool(p).with_shard_timeout(shard_timeout_ms))
-            }
-            None => Box::new(PlannedEval::new()),
+            Some(p) => Box::new(
+                PlannedEval::with_pool(p)
+                    .with_shard_timeout(shard_timeout_ms)
+                    .with_store_verify(store_verify),
+            ),
+            None => Box::new(PlannedEval::new().with_store_verify(store_verify)),
         };
         let mut sums: Vec<f64> = vec![0.0; names.len()];
         // 32 rows per channel send; BufferedSink flushes the tail on drop
@@ -306,6 +332,8 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         .unwrap_or("0")
         .parse()
         .map_err(|_| "bad --shard-timeout-ms")?;
+    // per-run column-store verify mode (same promotion rationale)
+    let store_verify = store_verify_opt(args)?;
     let monitor_every: usize = opt(args, "--monitor-every")
         .unwrap_or("0")
         .parse()
@@ -355,6 +383,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                     infer_prog.as_deref(),
                     target_risk,
                     shard_timeout_ms,
+                    store_verify,
                     &names_c,
                     samples,
                     None,
@@ -492,6 +521,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         infer_prog.as_deref(),
         target_risk,
         shard_timeout_ms,
+        store_verify,
         &names,
         samples,
         pool,
@@ -700,6 +730,46 @@ fn cmd_experiment(args: &[String]) -> Result<(), String> {
                 }
             }
             t.print();
+        }
+        "fig9_streaming" => {
+            let mut cfg = if fast {
+                exp::Fig9StreamingConfig {
+                    series: 10,
+                    window: 4,
+                    ticks: 3,
+                    sweeps_per_tick: 10,
+                    ..Default::default()
+                }
+            } else {
+                exp::Fig9StreamingConfig::default()
+            };
+            cfg.target_risk = target_risk;
+            let rows = exp::fig9_streaming(&cfg);
+            let mut t = Table::new(&[
+                "tick",
+                "append(s)",
+                "retire(s)",
+                "sweeps(s)",
+                "phi mean",
+                "sig mean",
+                "live obs",
+            ]);
+            for r in &rows {
+                t.row(&[
+                    r.tick.to_string(),
+                    format!("{:.5}", r.append_seconds),
+                    format!("{:.5}", r.retire_seconds),
+                    format!("{:.3}", r.sweep_seconds),
+                    format!("{:.4}", r.phi_mean),
+                    format!("{:.4}", r.sig_mean),
+                    r.live_obs.to_string(),
+                ]);
+            }
+            t.print();
+            exp::fig9_streaming_csv(&rows)
+                .write_to(&outdir.join("fig9_streaming.csv"))
+                .map_err(|e| e.to_string())?;
+            println!("wrote {}", outdir.join("fig9_streaming.csv").display());
         }
         "fig9" => {
             let mut cfg = if fast {

@@ -449,6 +449,9 @@ pub struct CreateParams {
     pub target_risk: Option<f64>,
     /// Per-session shard-watchdog deadline (0 = server/process default).
     pub shard_timeout_ms: u64,
+    /// Per-session column-store verify mode override ("off" /
+    /// "refreshed" / "full"; `None` = server/env default).
+    pub store_verify: Option<crate::trace::colstore::VerifyMode>,
     /// Per-session lifetime deadline override in ms (0 = server
     /// default; capped by the server's `--session-deadline-ms`).
     pub deadline_ms: u64,
@@ -473,6 +476,14 @@ pub enum Method {
         /// Per-request deadline (0 = none): the step stops at the first
         /// draw boundary past the deadline and reports what it did.
         deadline_ms: u64,
+    },
+    /// Append new observations to a live session's model at the next
+    /// draw boundary ("ticks in, posterior out").  `program` is one or
+    /// more `[observe ...]` (or `[assume ...]`) directives in the same
+    /// surface syntax as `create`'s program.
+    Append {
+        session: u64,
+        program: String,
     },
     Snapshot {
         session: u64,
@@ -539,6 +550,15 @@ impl Request {
                     seed: p.and_then(|p| p.get("seed")).and_then(Json::as_u64),
                     target_risk: p.and_then(|p| p.get("target_risk")).and_then(Json::as_f64),
                     shard_timeout_ms: u64_field("shard_timeout_ms", 0),
+                    store_verify: match p.and_then(|p| p.get("store_verify")).and_then(Json::as_str)
+                    {
+                        Some(s) => Some(
+                            crate::trace::colstore::VerifyMode::parse(s).ok_or_else(|| {
+                                bad(format!("create: bad \"params.store_verify\" {s:?}"))
+                            })?,
+                        ),
+                        None => None,
+                    },
                     deadline_ms: u64_field("deadline_ms", 0),
                     monitor_every: u64_field("monitor_every", 0) as usize,
                 })
@@ -547,6 +567,14 @@ impl Request {
                 session: session()?,
                 n: u64_field("n", 1) as usize,
                 deadline_ms: u64_field("deadline_ms", 0),
+            },
+            "append" => Method::Append {
+                session: session()?,
+                program: p
+                    .and_then(|p| p.get("program"))
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("append: missing \"params.program\"".into()))?
+                    .to_string(),
             },
             "snapshot" => Method::Snapshot { session: session()? },
             "subscribe" => Method::Subscribe { session: session()? },
@@ -638,6 +666,28 @@ mod tests {
             }
             m => panic!("{m:?}"),
         }
+        let r = Request::parse(
+            r#"{"id":4,"method":"append","params":{"session":2,"program":"[observe (f 1) 0.5]"}}"#,
+        )
+        .unwrap();
+        match r.method {
+            Method::Append { session, program } => {
+                assert_eq!(session, 2);
+                assert_eq!(program, "[observe (f 1) 0.5]");
+            }
+            m => panic!("{m:?}"),
+        }
+        assert!(
+            Request::parse(r#"{"id":4,"method":"append","params":{"session":2}}"#).is_err(),
+            "append requires a program"
+        );
+        assert!(
+            Request::parse(
+                r#"{"id":1,"method":"create","params":{"program":"x","store_verify":"sometimes"}}"#
+            )
+            .is_err(),
+            "unknown store_verify mode is a BadRequest"
+        );
         assert!(Request::parse(r#"{"id":1,"method":"warp"}"#).is_err());
         assert!(Request::parse("not json").is_err());
         assert!(Request::parse(r#"{"method":"ping"}"#).is_err(), "id required");

@@ -65,6 +65,9 @@ pub struct ServeCfg {
     pub checkpoint_dir: Option<std::path::PathBuf>,
     /// Default shard-watchdog deadline for sessions that don't set one.
     pub shard_timeout_ms: u64,
+    /// Default column-store verify mode for sessions that don't set one
+    /// (`None` = the `SUBPPL_STORE_VERIFY` env default).
+    pub store_verify: Option<crate::trace::colstore::VerifyMode>,
     /// Let sessions shard scoring across the shared pool.
     pub use_pool: bool,
 }
@@ -80,6 +83,7 @@ impl Default for ServeCfg {
             queue_cap: 4,
             checkpoint_dir: None,
             shard_timeout_ms: 0,
+            store_verify: None,
             use_pool: true,
         }
     }
@@ -93,6 +97,13 @@ pub enum SessionCmd {
         /// time spent waiting in the session's queue counts against it.
         deadline_at: Option<Instant>,
         reply: Sender<Result<StepReport, Fault>>,
+    },
+    /// Append directives to the live model.  Served by the session
+    /// thread between steps, so the append always lands at a draw
+    /// boundary.
+    Append {
+        program: String,
+        reply: Sender<Result<usize, Fault>>,
     },
     Snapshot {
         reply: Sender<Json>,
@@ -267,6 +278,7 @@ impl Server {
             } else {
                 self.cfg.shard_timeout_ms
             },
+            store_verify: p.store_verify.or(self.cfg.store_verify),
             deadline,
             max_restarts: 2,
             use_pool: self.cfg.use_pool,
@@ -343,6 +355,24 @@ impl Server {
                 reply,
             },
         )?;
+        done.recv()
+            .map_err(|_| Fault::new(ErrCode::Internal, "session dropped the reply".into()))?
+    }
+
+    /// Append directives to a live session ("ticks in, posterior
+    /// out").  Queued like a step, so it lands at a draw boundary in
+    /// arrival order relative to surrounding steps.  Returns the number
+    /// of directives appended.
+    pub fn append(&self, session: u64, program: String) -> Result<usize, Fault> {
+        if self.draining() {
+            return Err(Fault {
+                code: ErrCode::Draining,
+                message: "server is draining".into(),
+                retry_after_ms: Some(RETRY_AFTER_MS),
+            });
+        }
+        let (reply, done) = std::sync::mpsc::channel();
+        self.send(session, SessionCmd::Append { program, reply })?;
         done.recv()
             .map_err(|_| Fault::new(ErrCode::Internal, "session dropped the reply".into()))?
     }
@@ -424,6 +454,14 @@ impl Server {
                 n,
                 deadline_ms,
             } => self.step(session, n, deadline_ms).map(step_json),
+            Method::Append { session, program } => {
+                self.append(session, program).map(|n| {
+                    Json::Obj(vec![
+                        ("session".into(), Json::Num(session as f64)),
+                        ("appended".into(), Json::Num(n as f64)),
+                    ])
+                })
+            }
             Method::Snapshot { session } => self.snapshot(session),
             Method::Cancel { session } => self.cancel(session).map(|()| {
                 Json::Obj(vec![("cancelled".into(), Json::Num(session as f64))])
@@ -491,6 +529,18 @@ fn session_thread(
                 reply,
             } => {
                 let _ = reply.send(step_reply(&mut sess, n, deadline_at));
+            }
+            SessionCmd::Append { program, reply } => {
+                let res = sess.append(&program).map_err(|e| {
+                    // a parse error leaves the session live (BadRequest);
+                    // a mid-batch execute failure marked it Failed
+                    if sess.failed().is_some() {
+                        Fault::new(ErrCode::Failed, e)
+                    } else {
+                        Fault::new(ErrCode::BadRequest, e)
+                    }
+                });
+                let _ = reply.send(res);
             }
             SessionCmd::Snapshot { reply } => {
                 let _ = reply.send(sess.snapshot_json());
@@ -811,6 +861,30 @@ mod tests {
         assert_eq!(
             srv.create(params()).unwrap_err().code,
             ErrCode::Draining
+        );
+    }
+
+    #[test]
+    fn append_lifecycle_between_steps() {
+        let srv = tiny_server(4);
+        let id = srv.create(params()).unwrap();
+        srv.step(id, 5, 0).unwrap();
+        assert_eq!(
+            srv.append(id, "[observe (normal mu 0.5) 0.9]".into()).unwrap(),
+            1
+        );
+        let rep = srv.step(id, 5, 0).unwrap();
+        assert_eq!(rep.total, 10, "appends are not draws");
+        // a parse error is BadRequest and leaves the session stepping
+        let err = srv.append(id, "[observe (normal mu".into()).unwrap_err();
+        assert_eq!(err.code, ErrCode::BadRequest);
+        assert_eq!(srv.step(id, 1, 0).unwrap().done, 1);
+        // unknown session is NotFound, same as step
+        assert_eq!(
+            srv.append(99, "[observe (normal mu 0.5) 0.9]".into())
+                .unwrap_err()
+                .code,
+            ErrCode::NotFound
         );
     }
 

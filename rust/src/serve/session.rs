@@ -62,6 +62,9 @@ pub struct SessionCfg {
     pub target_risk: Option<f64>,
     /// Per-session shard-watchdog deadline (0 = process default).
     pub shard_timeout_ms: u64,
+    /// Per-session column-store verify mode (`None` = the
+    /// `SUBPPL_STORE_VERIFY` env default).
+    pub store_verify: Option<crate::trace::colstore::VerifyMode>,
     /// Session lifetime budget from creation (None = unbounded).
     pub deadline: Option<Duration>,
     /// Panic restarts granted before the session is declared Failed.
@@ -89,6 +92,7 @@ impl Default for SessionCfg {
             watch: Vec::new(),
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
             deadline: None,
             max_restarts: 2,
             use_pool: false,
@@ -163,6 +167,11 @@ pub struct Session {
     /// Counters accumulated by evaluator incarnations that a panic
     /// restart already tore down.
     eval_base: EvalStats,
+    /// Journal of appended program sources (the `append` RPC), in
+    /// arrival order: a panic rebuild replays these after
+    /// `cfg.program` so the rebuilt trace allocates the same node ids
+    /// as the live one before the checkpoint restore overwrites state.
+    appended: Vec<String>,
     /// Subscribed streams: bounded senders of encoded event lines.  A
     /// full or closed channel drops the subscriber (slowloris
     /// protection) — the session never blocks on a slow client.
@@ -189,6 +198,9 @@ impl Session {
             }
             if cfg.shard_timeout_ms > 0 {
                 c.set_shard_timeout_ms(cfg.shard_timeout_ms);
+            }
+            if let Some(v) = cfg.store_verify {
+                c.set_store_verify(v);
             }
         }
         let ev = Self::fresh_eval(&cfg);
@@ -222,6 +234,7 @@ impl Session {
             last_snap: None,
             last_row: vec![f64::NAN; cfg.watch.len()],
             eval_base: EvalStats::default(),
+            appended: Vec::new(),
             subs: Vec::new(),
             cfg,
         })
@@ -234,6 +247,7 @@ impl Session {
         } else {
             PlannedEval::new()
         };
+        ev = ev.with_store_verify(cfg.store_verify);
         if cfg.min_parallel > 0 {
             ev = ev.with_min_parallel(cfg.min_parallel);
         }
@@ -349,6 +363,46 @@ impl Session {
         })
     }
 
+    /// Append new directives (typically `[observe ...]` ticks) to the
+    /// live model.  The server routes this through the session thread,
+    /// so it always lands at a draw boundary: the trace is never
+    /// mid-transition.  Appends take the O(|append|) fast path — plans,
+    /// batch groups, and column-store panels for the existing data stay
+    /// cached (`append_version` bumps, `structure_version` does not).
+    ///
+    /// Parse errors are non-terminal (nothing was mutated; the client
+    /// just gets a `BadRequest`).  A directive that parses but fails to
+    /// *execute* may leave earlier directives of the same batch applied,
+    /// so that error is terminal: the session is marked Failed rather
+    /// than serve a half-applied model.  On success the appended source
+    /// is journaled (panic rebuilds replay it after `cfg.program`) and a
+    /// fresh checkpoint is captured so a restart resumes post-append.
+    ///
+    /// Returns the number of directives appended.
+    pub fn append(&mut self, src: &str) -> Result<usize, String> {
+        if let Some(e) = &self.failed {
+            return Err(e.clone());
+        }
+        let prog = crate::ppl::parser::parse_program(src)?;
+        let n = prog.len();
+        for d in &prog {
+            if let Err(e) = self.trace.append_directive(d, &mut self.rng) {
+                let e = format!("session {}: append failed mid-batch: {e}", self.cfg.id);
+                self.failed = Some(e.clone());
+                return Err(e);
+            }
+        }
+        self.appended.push(src.to_string());
+        self.last_ck = Some(ChainCheckpoint::capture(
+            self.cfg.seed,
+            self.cfg.id as usize,
+            self.draws,
+            &self.trace,
+            &self.rng,
+        ));
+        Ok(n)
+    }
+
     /// One committed draw: run the inference program once, record the
     /// watched row on the event lane, checkpoint.
     fn one_draw(&mut self) -> Result<(), DrawErr> {
@@ -414,6 +468,15 @@ impl Session {
         trace
             .run_program(&self.cfg.program, &mut rng)
             .map_err(|e| format!("session {}: rebuild failed: {e}", self.cfg.id))?;
+        // replay journaled appends so the rebuilt trace has the same
+        // node ids as the live one had at the last checkpoint (the
+        // values drawn here are scratch — restore overwrites them, and
+        // the RNG is swapped to the checkpointed position)
+        for src in &self.appended {
+            trace
+                .append_program(src, &mut rng)
+                .map_err(|e| format!("session {}: append replay failed: {e}", self.cfg.id))?;
+        }
         let ck = self
             .last_ck
             .as_ref()
@@ -608,6 +671,42 @@ mod tests {
         assert_eq!(rep.stopped, Some(StopReason::Expired));
         let rep = s.step(1, None).unwrap();
         assert_eq!(rep.stopped, Some(StopReason::Expired));
+    }
+
+    #[test]
+    fn appends_land_between_steps_deterministically() {
+        // same (seed, id) and same append schedule → bitwise identical
+        // draws regardless of how the steps around the append are
+        // chunked; the appended observation visibly shifts the
+        // posterior relative to a no-append run
+        let run = |pre: &[usize], post: &[usize], append: bool| -> f64 {
+            let mut s = Session::new(cfg(6)).unwrap();
+            for &n in pre {
+                s.step(n, None).unwrap();
+            }
+            if append {
+                assert_eq!(s.append("[observe (normal mu 0.5) -3.0]").unwrap(), 1);
+            }
+            for &n in post {
+                s.step(n, None).unwrap();
+            }
+            s.last_row[0]
+        };
+        let a = run(&[10], &[10], true);
+        let b = run(&[3, 7], &[4, 6], true);
+        assert_eq!(a.to_bits(), b.to_bits());
+        let c = run(&[10], &[10], false);
+        assert_ne!(a.to_bits(), c.to_bits(), "append must change the chain");
+    }
+
+    #[test]
+    fn append_parse_error_is_not_terminal() {
+        let mut s = Session::new(cfg(7)).unwrap();
+        s.step(2, None).unwrap();
+        assert!(s.append("[observe (normal mu").is_err());
+        assert!(s.failed().is_none(), "parse errors leave the session live");
+        s.step(2, None).unwrap();
+        assert_eq!(s.total_draws(), 4);
     }
 
     #[test]

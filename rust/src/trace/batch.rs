@@ -800,6 +800,14 @@ pub struct BatchPlanSet {
     pub of_root: HashMap<NodeId, (u32, u32)>,
     /// `Trace::structure_version` at build time (cache validation).
     pub built_at: u64,
+    /// `Trace::append_version` as of the last build/extension: when
+    /// `built_at` is current but this lags, the partition grew by
+    /// appends and the set extends in place ([`extend_batch_plans`]).
+    pub appended_at: u64,
+    /// Partition locals processed so far (batched *or* deliberately
+    /// left scalar) — `of_root.len()` undercounts because unlowerable
+    /// roots are skipped, so extension starts at `locals[covers..]`.
+    pub covers: usize,
 }
 
 impl BatchPlanSet {
@@ -868,7 +876,65 @@ pub fn build_batch_plans(trace: &Trace, p: &Partition) -> BatchPlanSet {
         groups,
         of_root,
         built_at: trace.structure_version,
+        appended_at: trace.append_version,
+        covers: p.locals.len(),
     }
+}
+
+/// Extend a cached set in place over a partition grown by appends:
+/// process only `p.locals[set.covers..]`, replicating the build loop
+/// per new root.  A new root either joins an existing shape group
+/// (membership indices of existing members never move — groups are
+/// append-only), founds a new group at the end of `groups` (the
+/// column store extends index-aligned), or stays scalar.  O(|append|)
+/// section lowerings, independent of N.
+pub fn extend_batch_plans(trace: &Trace, p: &Partition, set: &mut BatchPlanSet) {
+    debug_assert_eq!(set.built_at, trace.structure_version);
+    for &root in &p.locals[set.covers..] {
+        set.covers += 1;
+        let Ok(plan) = trace.cached_section_plan(p, root) else {
+            continue;
+        };
+        let key = ShapeKey::of(&plan);
+        // groups are few (one per shape); a linear scan matches the
+        // build map's first-group-per-key semantics without storing it
+        let gi = match set.groups.iter().position(|g| g.key == key) {
+            Some(gi) => gi as u32,
+            None => {
+                let Some(cols) = lower_cols(trace, p, &plan) else {
+                    continue;
+                };
+                set.groups.push(BatchGroup {
+                    key,
+                    template: plan.clone(),
+                    cols,
+                    roots: Vec::new(),
+                    sbinds: Vec::new(),
+                    vbinds: Vec::new(),
+                    absorbers: Vec::new(),
+                    touch: Vec::new(),
+                    touch_off: vec![0],
+                });
+                (set.groups.len() - 1) as u32
+            }
+        };
+        let g = &mut set.groups[gi as usize];
+        if !Rc::ptr_eq(&plan, &g.template) && !same_shape(&g.template, &plan) {
+            continue;
+        }
+        let Some((sb, vb)) = extract_binds(trace, &g.cols, &plan) else {
+            continue;
+        };
+        let mi = g.roots.len() as u32;
+        g.roots.push(root);
+        g.sbinds.extend(sb);
+        g.vbinds.extend(vb);
+        g.absorbers.extend(plan.absorbers.iter().map(|a| a.node));
+        g.touch.extend_from_slice(&plan.touch);
+        g.touch_off.push(g.touch.len() as u32);
+        set.of_root.insert(root, (gi, mi));
+    }
+    set.appended_at = trace.append_version;
 }
 
 // ---------------------------------------------------------------------

@@ -125,9 +125,11 @@ pub fn colstore_enabled() -> bool {
     }
 }
 
-/// The `SUBPPL_STORE_VERIFY` knob for the row self-check.
+/// The row self-check mode (the `SUBPPL_STORE_VERIFY` knob, promoted to
+/// [`SubsampledConfig`](crate::infer::subsampled_mh::SubsampledConfig)
+/// / `--store-verify` with the env var kept as fallback).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum VerifyMode {
+pub enum VerifyMode {
     /// No integrity checking (the escape hatch).
     Off,
     /// Verify rows immediately after they are (re)written — catches
@@ -140,11 +142,25 @@ enum VerifyMode {
     Full,
 }
 
-fn verify_mode() -> VerifyMode {
+impl VerifyMode {
+    /// Parse the shared surface syntax (`0` / `refreshed` / `full`) —
+    /// one grammar for the env var, the CLI flag and the serve config.
+    pub fn parse(s: &str) -> Option<VerifyMode> {
+        match s {
+            "0" | "off" => Some(VerifyMode::Off),
+            "refreshed" | "1" => Some(VerifyMode::Refreshed),
+            "full" => Some(VerifyMode::Full),
+            _ => None,
+        }
+    }
+}
+
+/// The `SUBPPL_STORE_VERIFY` environment fallback, used when no mode
+/// was configured explicitly.
+pub fn verify_mode() -> VerifyMode {
     match std::env::var("SUBPPL_STORE_VERIFY") {
-        Ok(v) if v == "0" => VerifyMode::Off,
-        Ok(v) if v == "full" => VerifyMode::Full,
-        _ => VerifyMode::Refreshed,
+        Ok(v) => VerifyMode::parse(&v).unwrap_or(VerifyMode::Refreshed),
+        Err(_) => VerifyMode::Refreshed,
     }
 }
 
@@ -175,19 +191,26 @@ const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 pub struct GroupPanels {
     /// Member count (the group width).
     w: usize,
+    /// Capacity stride: every column is laid out with stride `cap`
+    /// (`cap >= w`), so append-mode growth within the headroom just
+    /// raises `w` — no relayout, no copy, and therefore no O(N) spike
+    /// hiding inside an O(|append|) operation.  Allocated with ~25%
+    /// headroom (min 32 rows) at build time; growth past `cap` replaces
+    /// the whole group store (rows born stale, refilled lazily).
+    cap: usize,
     n_sbind: usize,
-    /// Scalar binding columns, column-major (`b * w + m`).
+    /// Scalar binding columns, column-major (`b * cap + m`).
     sbind: Vec<f64>,
     /// Vector binding columns, member-major within each column: column
     /// `b` holds member `m`'s vector at `vcols[b].0 + m * vcols[b].1`.
     vbind: Vec<f64>,
     /// `(offset, arity)` per vector-binding column.
     vcols: Vec<(u32, u32)>,
-    /// Absorber values, column-major (`bi * w + m`); Bernoulli values
+    /// Absorber values, column-major (`bi * cap + m`); Bernoulli values
     /// encoded 1.0/0.0 exactly as the pack path does.
     ab_vals: Vec<f64>,
     /// Committed absorber args, per-absorber arg-major blocks
-    /// (`ab_cols[bi].0 + ai * w + m`).
+    /// (`ab_cols[bi].0 + ai * cap + m`).
     ab_cargs: Vec<f64>,
     /// `(offset, n_args)` per absorber.
     ab_cols: Vec<(u32, u32)>,
@@ -198,7 +221,8 @@ pub struct GroupPanels {
 /// path differs from `PackedBatch`'s sel-ordered [`MemberSink`].
 struct StoreSink<'a> {
     m: usize,
-    w: usize,
+    /// Column stride = the panels' capacity, not the member count.
+    cap: usize,
     sbind: &'a mut [f64],
     vbind: &'a mut [f64],
     vcols: &'a [(u32, u32)],
@@ -209,47 +233,65 @@ struct StoreSink<'a> {
 
 impl MemberSink for StoreSink<'_> {
     fn scalar(&mut self, b: usize, x: f64) {
-        self.sbind[b * self.w + self.m] = x;
+        self.sbind[b * self.cap + self.m] = x;
     }
     fn vector(&mut self, b: usize, ar: usize, xs: &[f64]) {
         let dst = self.vcols[b].0 as usize + self.m * ar;
         self.vbind[dst..dst + ar].copy_from_slice(xs);
     }
     fn absorb_val(&mut self, bi: usize, x: f64) {
-        self.ab_vals[bi * self.w + self.m] = x;
+        self.ab_vals[bi * self.cap + self.m] = x;
     }
     fn absorb_carg(&mut self, bi: usize, ai: usize, x: f64) {
         let coff = self.ab_cols[bi].0 as usize;
-        self.ab_cargs[coff + ai * self.w + self.m] = x;
+        self.ab_cargs[coff + ai * self.cap + self.m] = x;
     }
 }
 
 impl GroupPanels {
     fn new(group: &BatchGroup) -> GroupPanels {
         let w = group.len();
+        // ~25% headroom (min 32 rows) so streaming appends grow in
+        // place; overflow replaces the store (rows refill lazily)
+        let cap = w + (w >> 2).max(32);
         let n_sbind = group.cols.n_sbind as usize;
         let mut vcols = Vec::with_capacity(group.cols.varities.len());
         let mut voff = 0u32;
         for &ar in &group.cols.varities {
             vcols.push((voff, ar));
-            voff += ar * w as u32;
+            voff += ar * cap as u32;
         }
         let mut ab_cols = Vec::with_capacity(group.cols.absorbers.len());
         let mut aoff = 0u32;
         for ab in &group.cols.absorbers {
             ab_cols.push((aoff, ab.cand.len() as u32));
-            aoff += ab.cand.len() as u32 * w as u32;
+            aoff += ab.cand.len() as u32 * cap as u32;
         }
         GroupPanels {
             w,
+            cap,
             n_sbind,
-            sbind: vec![0.0; n_sbind * w],
+            sbind: vec![0.0; n_sbind * cap],
             vbind: vec![0.0; voff as usize],
             vcols,
-            ab_vals: vec![0.0; group.cols.absorbers.len() * w],
+            ab_vals: vec![0.0; group.cols.absorbers.len() * cap],
             ab_cargs: vec![0.0; aoff as usize],
             ab_cols,
         }
+    }
+
+    /// Adopt append-mode growth of the group within the allocated
+    /// headroom: new member rows occupy the pre-allocated tail of every
+    /// column (zero-filled, and born stale — their stamps are 0), so
+    /// the raise is O(1).  `Err` when the headroom is exhausted; the
+    /// caller replaces the whole group store.
+    fn extend(&mut self, new_w: usize) -> Result<(), ()> {
+        debug_assert!(new_w >= self.w, "panels never shrink in place");
+        if new_w > self.cap {
+            return Err(());
+        }
+        self.w = new_w;
+        Ok(())
     }
 
     /// Re-read every committed-side entry of member `m` from the trace
@@ -269,7 +311,7 @@ impl GroupPanels {
         let reader = MemberReader::new(trace, "colstore");
         let mut sink = StoreSink {
             m,
-            w: self.w,
+            cap: self.cap,
             sbind: &mut self.sbind,
             vbind: &mut self.vbind,
             vcols: &self.vcols,
@@ -287,10 +329,10 @@ impl GroupPanels {
     /// longer hold what was read from the trace, and the group must be
     /// quarantined rather than trusted.
     pub fn row_hash(&self, m: usize) -> u64 {
-        let w = self.w;
+        let cap = self.cap;
         let mut h = FNV_OFFSET;
         for b in 0..self.n_sbind {
-            h = fnv1a_f64(h, self.sbind[b * w + m]);
+            h = fnv1a_f64(h, self.sbind[b * cap + m]);
         }
         for &(off, ar) in &self.vcols {
             let ar = ar as usize;
@@ -300,10 +342,10 @@ impl GroupPanels {
             }
         }
         for bi in 0..self.ab_cols.len() {
-            h = fnv1a_f64(h, self.ab_vals[bi * w + m]);
+            h = fnv1a_f64(h, self.ab_vals[bi * cap + m]);
             let (coff, na) = self.ab_cols[bi];
             for ai in 0..na as usize {
-                h = fnv1a_f64(h, self.ab_cargs[coff as usize + ai * w + m]);
+                h = fnv1a_f64(h, self.ab_cargs[coff as usize + ai * cap + m]);
             }
         }
         h
@@ -358,6 +400,26 @@ impl GroupStore {
         }
     }
 
+    /// Adopt append-mode growth of this group's membership: extend the
+    /// panels within their headroom (new rows born stale, stamp 0) or,
+    /// when the headroom is exhausted, replace the panels wholesale
+    /// with a fresh allocation — *all* rows born stale then, refilled
+    /// lazily as they are sampled, so the replacement amortizes across
+    /// gathers instead of spiking one append.  Quarantine survives
+    /// either way: appends are not the structural rebuild the
+    /// quarantine contract waits for.
+    fn extend(&mut self, group: &BatchGroup) {
+        let new_w = group.len();
+        debug_assert!(new_w >= self.stamp.len(), "groups never shrink under appends");
+        if Arc::make_mut(&mut self.panels).extend(new_w).is_err() {
+            self.panels = Arc::new(GroupPanels::new(group));
+            self.stamp.clear();
+            self.row_hash.clear();
+        }
+        self.stamp.resize(new_w, 0);
+        self.row_hash.resize(new_w, 0);
+    }
+
     /// Shared read-only handle on the panels (cloned per dispatch; the
     /// buffers themselves are never copied).
     pub fn panels_arc(&self) -> Arc<GroupPanels> {
@@ -375,6 +437,10 @@ pub struct ColumnStoreSet {
     /// stale sets are rebuilt wholesale, never patched, exactly like
     /// the batch-plan sets whose layout they mirror).
     pub built_at: u64,
+    /// `Trace::append_version` as of the last build/extension: when
+    /// `built_at` is current but this lags, the aligned batch-plan set
+    /// grew by appends and [`extend`](Self::extend) adopts the growth.
+    pub appended_at: u64,
 }
 
 impl ColumnStoreSet {
@@ -382,7 +448,26 @@ impl ColumnStoreSet {
         ColumnStoreSet {
             groups: set.groups.iter().map(GroupStore::new).collect(),
             built_at: set.built_at,
+            appended_at: set.appended_at,
         }
+    }
+
+    /// Adopt append-mode growth of the aligned batch-plan set: grown
+    /// groups extend in place (new rows born stale), groups founded by
+    /// the extension join at the end — batch-set extension only ever
+    /// appends groups, so index alignment is preserved by construction.
+    /// O(|append| + #groups), independent of N.
+    pub fn extend(&mut self, set: &BatchPlanSet) {
+        debug_assert_eq!(self.built_at, set.built_at);
+        for (gs, group) in self.groups.iter_mut().zip(&set.groups) {
+            if gs.stamp.len() != group.len() {
+                gs.extend(group);
+            }
+        }
+        for group in &set.groups[self.groups.len()..] {
+            self.groups.push(GroupStore::new(group));
+        }
+        self.appended_at = set.appended_at;
     }
 }
 
@@ -395,15 +480,18 @@ impl ColumnStoreSet {
 ///
 /// `sel` holds `(member index, caller tag)` pairs exactly as
 /// `pack_into` takes them; only the member index is read here.
+/// `verify` overrides the row self-check mode; `None` falls back to
+/// the `SUBPPL_STORE_VERIFY` env var.
 pub fn ensure_group_members(
     trace: &mut Trace,
     store: &Rc<RefCell<ColumnStoreSet>>,
     gi: usize,
     group: &BatchGroup,
     sel: &[(u32, u32)],
+    verify: Option<VerifyMode>,
 ) -> Result<usize, String> {
     let vv = trace.value_version;
-    let verify = verify_mode();
+    let verify = verify.unwrap_or_else(verify_mode);
     // phase 1: stale scan (shared borrow only)
     let stale: Vec<u32> = {
         let set = store.borrow();
@@ -558,7 +646,9 @@ impl PanelBatch {
         // runtime condition to recover from
         let panels = self.panels.as_ref().expect("replay of an unbuilt panel batch");
         scr.size_for(self, panels);
-        let w = panels.w;
+        // column stride is the panels' capacity (>= member count); the
+        // gather below only ever indexes live members
+        let w = panels.cap;
         let nab = panels.ab_cols.len();
         let mut base = lo;
         while base < hi {
@@ -828,7 +918,7 @@ mod tests {
             (0..g.len() as u32).map(|m| (m, m)).collect::<Vec<_>>(),
             vec![(3, 0), (27, 1), (0, 2), (11, 3), (8, 4), (19, 5), (4, 6), (22, 7), (1, 8)],
         ] {
-            ensure_group_members(&mut t, &store, 0, g, &sel).unwrap();
+            ensure_group_members(&mut t, &store, 0, g, &sel, None).unwrap();
             let panels = store.borrow().groups[0].panels_arc();
             let mut pb = PanelBatch::default();
             pb.build_into(&panels, g, &sel, &globals).unwrap();
@@ -860,7 +950,7 @@ mod tests {
         candidate_globals(&t, &p, &new_w, &mut globals).unwrap();
         let (store, _) = t.cached_colstore(&p, &set);
         let sel: Vec<(u32, u32)> = (0..g.len() as u32).map(|m| (m, m)).collect();
-        ensure_group_members(&mut t, &store, 0, g, &sel).unwrap();
+        ensure_group_members(&mut t, &store, 0, g, &sel, None).unwrap();
         let panels = store.borrow().groups[0].panels_arc();
         let mut pb = PanelBatch::default();
         pb.build_into(&panels, g, &sel, &globals).unwrap();
@@ -898,15 +988,15 @@ mod tests {
         let w1 = Value::vector(vec![0.25, -0.3, 0.1]);
         let mut globals = Vec::new();
         candidate_globals(&t, &p, &w1, &mut globals).unwrap();
-        let first = ensure_group_members(&mut t, &store, 0, g, &sel).unwrap();
+        let first = ensure_group_members(&mut t, &store, 0, g, &sel, None).unwrap();
         assert_eq!(first, sel.len(), "initial fill must refresh every member");
         // steady state: no commit, no refresh
-        assert_eq!(ensure_group_members(&mut t, &store, 0, g, &sel).unwrap(), 0);
+        assert_eq!(ensure_group_members(&mut t, &store, 0, g, &sel, None).unwrap(), 0);
         // accept the move: committed linlog values (the absorbers'
         // committed args) change under the new w
         commit_global(&mut t, &p, w1);
         assert_eq!(
-            ensure_group_members(&mut t, &store, 0, g, &sel).unwrap(),
+            ensure_group_members(&mut t, &store, 0, g, &sel, None).unwrap(),
             sel.len(),
             "post-commit gather must refresh every sampled member"
         );
@@ -964,7 +1054,7 @@ mod tests {
         let g = &set.groups[0];
         let sel: Vec<(u32, u32)> = (0..g.len() as u32).map(|m| (m, m)).collect();
         let (store, _) = t.cached_colstore(&p, &set);
-        ensure_group_members(&mut t, &store, 0, g, &sel).unwrap();
+        ensure_group_members(&mut t, &store, 0, g, &sel, None).unwrap();
         let mut set_ref = store.borrow_mut();
         let gs = &mut set_ref.groups[0];
         let panels = Arc::make_mut(&mut gs.panels);
@@ -994,9 +1084,9 @@ mod tests {
         let g = &set.groups[0];
         let sel: Vec<(u32, u32)> = (0..g.len() as u32).map(|m| (m, m)).collect();
         let (store, _) = t.cached_colstore(&p, &set);
-        ensure_group_members(&mut t, &store, 0, g, &sel).unwrap();
+        ensure_group_members(&mut t, &store, 0, g, &sel, None).unwrap();
         store.borrow_mut().groups[0].quarantined = true;
-        let err = ensure_group_members(&mut t, &store, 0, g, &sel).unwrap_err();
+        let err = ensure_group_members(&mut t, &store, 0, g, &sel, None).unwrap_err();
         assert!(err.contains("quarantined"), "unexpected error: {err}");
         // a structural rebuild replaces the set with a fresh, trusted one
         let mut rng = Pcg64::seeded(13);

@@ -27,6 +27,11 @@ pub struct Partition {
     pub locals: Vec<NodeId>,
     /// structure_version at build time (for cache revalidation).
     pub built_at: u64,
+    /// append_version as of the last build/extension: when `built_at`
+    /// is current but this lags, the trace grew by append-mode
+    /// directives and the partition extends in place
+    /// ([`extend_partition`]).
+    pub appended_at: u64,
 }
 
 impl Partition {
@@ -65,7 +70,42 @@ pub fn build_partition(trace: &Trace, v: NodeId) -> Option<Partition> {
         global_drg,
         locals,
         built_at: trace.structure_version,
+        appended_at: trace.append_version,
     })
+}
+
+/// Extend a cached partition in place after append-only growth
+/// (`built_at` current, `appended_at` behind): verify the pre-border
+/// path is still a single link (O(|global path|), guards against an
+/// append that grew the global section itself), then adopt the
+/// border's new children.  Appends only ever *push* onto children
+/// lists — any removal bumps `structure_version` and disqualifies the
+/// partition before this runs — so the cached locals are necessarily a
+/// prefix of the current list and only the suffix is cloned:
+/// O(|append|), independent of N.  Returns false when the partition
+/// cannot be extended (caller falls back to a full rebuild).
+pub fn extend_partition(trace: &Trace, p: &mut Partition) -> bool {
+    debug_assert_eq!(p.built_at, trace.structure_version);
+    for (i, &n) in p.global_drg.iter().enumerate() {
+        if n == p.border {
+            break;
+        }
+        let kids = &trace.node(n).children;
+        if kids.len() != 1 || kids[0] != p.global_drg[i + 1] {
+            return false;
+        }
+    }
+    let cur = &trace.node(p.border).children;
+    if cur.len() < p.locals.len() {
+        return false;
+    }
+    debug_assert!(
+        p.locals.iter().zip(cur.iter()).all(|(a, b)| a == b),
+        "append-only growth must preserve the locals prefix"
+    );
+    p.locals.extend_from_slice(&cur[p.locals.len()..]);
+    p.appended_at = trace.append_version;
+    true
 }
 
 /// Discover the local section rooted at border child `root`.

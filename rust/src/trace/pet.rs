@@ -117,6 +117,20 @@ pub struct Trace {
     /// bit-identical values, so store rows stay valid across epoch
     /// bumps until some committed input actually moves.
     pub value_version: u64,
+    /// Bumped on *append-only* growth (node allocs and child-edge
+    /// additions made under [`append_directive`](Self::append_directive)).
+    /// Structure-keyed caches treat the two versions asymmetrically: a
+    /// `structure_version` mismatch invalidates wholesale (re-keys,
+    /// branch swaps, retirement), while an `append_version` mismatch
+    /// with a matching `structure_version` means the trace only *grew*
+    /// at the ends of existing children lists — cached partitions,
+    /// batch-plan sets and column stores extend in place in
+    /// O(|append|) instead of rebuilding in O(N).
+    pub append_version: u64,
+    /// True while a directive executes in append mode (growth bumps
+    /// `append_version`; any shrinking mutation still bumps
+    /// `structure_version`, degrading the append to a full rebuild).
+    appending: bool,
     pub(crate) records: Vec<DirectiveRecord>,
     pub(crate) observations: Vec<NodeId>,
     /// Border-partition cache (Defs. 6-8), keyed by principal node and
@@ -182,6 +196,8 @@ impl Trace {
             epochs: Vec::new(),
             structure_version: 0,
             value_version: 1,
+            append_version: 1,
+            appending: false,
             records: Vec::new(),
             observations: Vec::new(),
             partition_cache: RefCell::new(HashMap::new()),
@@ -195,14 +211,28 @@ impl Trace {
 
     /// Cached global/local partition for a principal node (None if the
     /// variable has no border).  Rebuilt when the trace structure has
-    /// changed since the cached copy was built.
+    /// changed since the cached copy was built; *extended in place*
+    /// (O(|append|)) when the only changes since were append-mode
+    /// growth — appends push new border children at the end of the
+    /// children list, so the cached locals are a prefix of the current
+    /// list and only the suffix needs adopting.
     pub fn cached_partition(
         &self,
         v: NodeId,
     ) -> Option<Rc<crate::trace::partition::Partition>> {
-        if let Some(p) = self.partition_cache.borrow().get(&v) {
+        if let Some(p) = self.partition_cache.borrow_mut().get_mut(&v) {
             if p.built_at == self.structure_version {
-                return Some(p.clone());
+                if p.appended_at == self.append_version {
+                    return Some(p.clone());
+                }
+                // grown by appends: extend in place when we hold the
+                // only reference (draw boundaries do); otherwise fall
+                // through to a full rebuild
+                if let Some(pm) = Rc::get_mut(p) {
+                    if crate::trace::partition::extend_partition(self, pm) {
+                        return Some(p.clone());
+                    }
+                }
             }
         }
         let p = Rc::new(crate::trace::partition::build_partition(self, v)?);
@@ -239,14 +269,27 @@ impl Trace {
     /// not patched — whenever the trace structure has changed since, the
     /// same discipline as `cached_partition`/`cached_section_plan`
     /// (value-only changes keep sets valid: slot tables store where to
-    /// read values, never values).
+    /// read values, never values).  Append-mode growth is the one
+    /// sanctioned patch: new border children join existing shape groups
+    /// (or found new ones at the end) without touching any existing
+    /// member's indices — see `trace/batch.rs::extend_batch_plans`.
+    ///
+    /// `p` must be current (obtained from
+    /// [`cached_partition`](Self::cached_partition) this draw), so its
+    /// locals already cover the appended suffix.
     pub fn cached_batch_plans(
         &self,
         p: &crate::trace::partition::Partition,
     ) -> Rc<crate::trace::batch::BatchPlanSet> {
-        if let Some(s) = self.batch_cache.borrow().get(&p.v) {
+        if let Some(s) = self.batch_cache.borrow_mut().get_mut(&p.v) {
             if s.built_at == self.structure_version {
-                return s.clone();
+                if s.appended_at == self.append_version {
+                    return s.clone();
+                }
+                if let Some(sm) = Rc::get_mut(s) {
+                    crate::trace::batch::extend_batch_plans(self, p, sm);
+                    return s.clone();
+                }
             }
         }
         let s = Rc::new(crate::trace::batch::build_batch_plans(self, p));
@@ -276,8 +319,17 @@ impl Trace {
         set: &crate::trace::batch::BatchPlanSet,
     ) -> (ColStoreHandle, bool) {
         debug_assert_eq!(set.built_at, self.structure_version);
+        debug_assert_eq!(set.appended_at, self.append_version);
         if let Some(s) = self.colstore_cache.borrow().get(&p.v) {
-            if s.borrow().built_at == self.structure_version {
+            let mut sb = s.borrow_mut();
+            if sb.built_at == self.structure_version {
+                if sb.appended_at != self.append_version {
+                    // grown by appends: extend panels in place — new
+                    // member rows are born stale and fill on first
+                    // gather, existing rows keep their stamps
+                    sb.extend(set);
+                }
+                drop(sb);
                 return (s.clone(), false);
             }
         }
@@ -344,8 +396,23 @@ impl Trace {
         for p in parents {
             self.nodes[p.idx()].children.push(id);
         }
-        self.structure_version += 1;
+        self.bump_structural();
         id
+    }
+
+    /// Record a growing structural change: appends land on
+    /// `append_version` (caches extend in place), everything else on
+    /// `structure_version` (caches rebuild wholesale).  Shrinking
+    /// changes (`free_slot`, edge removal) never come through here —
+    /// they bump `structure_version` unconditionally, which makes a
+    /// mid-append re-key or purge auto-degrade to a full rebuild.
+    #[inline]
+    fn bump_structural(&mut self) {
+        if self.appending {
+            self.append_version += 1;
+        } else {
+            self.structure_version += 1;
+        }
     }
 
     /// Free a node slot.  Caller is responsible for having removed child
@@ -368,13 +435,25 @@ impl Trace {
     /// partition/plan caches would serve stale children lists.
     pub(crate) fn add_child_edge(&mut self, parent: NodeId, child: NodeId) {
         self.nodes[parent.idx()].children.push(child);
-        self.structure_version += 1;
+        self.bump_structural();
     }
 
     pub(crate) fn remove_child_edge(&mut self, parent: NodeId, child: NodeId) {
         let ch = &mut self.nodes[parent.idx()].children;
         if let Some(pos) = ch.iter().rposition(|&c| c == child) {
             ch.swap_remove(pos);
+        }
+        self.structure_version += 1;
+    }
+
+    /// Order-preserving edge removal for observation retirement:
+    /// surviving children keep arrival order, so a rebuilt partition
+    /// lists border children oldest-first and subsequent appends keep
+    /// extending caches in place.
+    pub(crate) fn remove_child_edge_ordered(&mut self, parent: NodeId, child: NodeId) {
+        let ch = &mut self.nodes[parent.idx()].children;
+        if let Some(pos) = ch.iter().position(|&c| c == child) {
+            ch.remove(pos);
         }
         self.structure_version += 1;
     }
@@ -704,6 +783,142 @@ impl Trace {
         let prog = crate::ppl::parser::parse_program(src)?;
         for d in &prog {
             self.execute(d, rng)?;
+        }
+        Ok(())
+    }
+
+    // ---------------- streaming appends / retirement ----------------
+
+    /// Execute one directive in *append mode*: node allocations and
+    /// child-edge additions bump `append_version` instead of
+    /// `structure_version`, so structure-keyed caches extend in place
+    /// (O(|append|)) instead of rebuilding (O(N)) on next use.  The
+    /// trace produced is identical to executing the directive through
+    /// [`execute`](Self::execute) — only the version bookkeeping (and
+    /// therefore cache reuse) differs, which is what the
+    /// append-vs-fresh-build differential tests pin bitwise.
+    ///
+    /// Shrinking mutations reached from inside the directive (a mem
+    /// re-key releasing its last route, a branch swap) still bump
+    /// `structure_version`, auto-degrading that append to a full
+    /// rebuild; correctness is unaffected.
+    pub fn append_directive(&mut self, d: &Directive, rng: &mut Pcg64) -> Result<EvalResult, String> {
+        self.appending = true;
+        let r = crate::trace::eval::execute_directive(self, d, rng);
+        self.appending = false;
+        r
+    }
+
+    /// Parse and execute a whole program in append mode (see
+    /// [`append_directive`](Self::append_directive)).
+    pub fn append_program(&mut self, src: &str, rng: &mut Pcg64) -> Result<(), String> {
+        let prog = crate::ppl::parser::parse_program(src)?;
+        for d in &prog {
+            self.append_directive(d, rng)?;
+        }
+        Ok(())
+    }
+
+    /// Retire the `k` oldest observations — the append machinery run in
+    /// reverse, for windowed/decaying streaming workloads.  Each
+    /// retired observe directive's owned nodes are disconnected with
+    /// the same discipline as a structural transition (SP
+    /// unincorporation, mem-route release, scope deregistration) and
+    /// freed; edges into retained parents are removed
+    /// order-preservingly so surviving border children keep arrival
+    /// order.  Latent state shared with retained structure (memoized
+    /// SV states referenced by successor states) stays allocated —
+    /// only nodes owned exclusively by the retired directives go.
+    ///
+    /// Retirement is a *batched structural* change: it bumps
+    /// `structure_version`, so every structure-keyed cache rebuilds
+    /// wholesale on next use.  Windowed workloads retire in batches
+    /// and amortize that rebuild; appends stay O(|append|).
+    ///
+    /// Returns the number of observations actually retired (fewer than
+    /// `k` when the trace holds fewer observe records).
+    pub fn retire_observations(&mut self, k: usize) -> Result<usize, String> {
+        let mut retired = 0;
+        let mut i = 0;
+        while retired < k && i < self.records.len() {
+            if matches!(self.records[i].directive, Directive::Observe(..)) {
+                let rec = self.records.remove(i);
+                self.retire_record(&rec)?;
+                retired += 1;
+            } else {
+                i += 1;
+            }
+        }
+        if retired > 0 {
+            self.structure_version += 1;
+        }
+        Ok(retired)
+    }
+
+    fn retire_record(&mut self, rec: &DirectiveRecord) -> Result<(), String> {
+        let target = self.principal_node(&rec.result);
+        if let Some(t) = target {
+            self.observations.retain(|&o| o != t);
+        }
+        self.retire_owned(&rec.owned)?;
+        // a target owned by a surviving mem entry outlives the record:
+        // it reverts to an unobserved latent pinned at the observed
+        // value (still incorporated, the unobserved-exchangeable norm)
+        if let Some(t) = target {
+            if self.nodes[t.idx()].alive {
+                self.nodes[t.idx()].observed = false;
+            }
+        }
+        Ok(())
+    }
+
+    /// Free an owned subtree immediately, reverse creation order
+    /// (children before parents, mirroring rollback's NodeCreated
+    /// discipline — no retained node still points at a slot when it is
+    /// freed).
+    fn retire_owned(&mut self, owned: &[NodeId]) -> Result<(), String> {
+        for &id in owned.iter().rev() {
+            if !self.nodes[id.idx()].alive {
+                continue; // already freed via a purged mem entry
+            }
+            match self.nodes[id.idx()].kind.clone() {
+                NodeKind::If { owned: inner, .. } => {
+                    self.retire_owned(&inner)?;
+                }
+                NodeKind::MemApp { mem, key, .. } => {
+                    let entry = self
+                        .mems[mem.0 as usize]
+                        .cache
+                        .get_mut(&key)
+                        .ok_or("retire: mem route missing from cache")?;
+                    entry.refcount -= 1;
+                    if entry.refcount == 0 {
+                        let entry = self.mems[mem.0 as usize].cache.remove(&key).unwrap();
+                        self.retire_owned(&entry.owned)?;
+                    }
+                }
+                NodeKind::StochFam(_)
+                | NodeKind::StochDyn { .. }
+                | NodeKind::StochInst { .. } => {
+                    if let Some(sp) = self.stoch_sp(id) {
+                        let value = self.nodes[id.idx()].value.clone();
+                        self.sp_mut(sp).unincorporate(&value);
+                    }
+                }
+                _ => {}
+            }
+            for p in self.nodes[id.idx()].dyn_parents() {
+                if self.nodes[p.idx()].alive {
+                    self.remove_child_edge_ordered(p, id);
+                }
+            }
+            self.deregister_scope(id);
+            if !self.nodes[id.idx()].children.is_empty() {
+                return Err(format!(
+                    "retire: node {id:?} still referenced by retained structure"
+                ));
+            }
+            self.free_slot(id);
         }
         Ok(())
     }

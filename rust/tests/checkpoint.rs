@@ -78,6 +78,7 @@ fn run_chain(spec: &ChainSpec, mut rng: Pcg64, ctl: &mut CheckpointCtl) -> (usiz
                 threads: 1,
                 target_risk: None,
                 shard_timeout_ms: 0,
+                store_verify: None,
             };
         }
         Model::Sv => {
@@ -98,6 +99,7 @@ fn run_chain(spec: &ChainSpec, mut rng: Pcg64, ctl: &mut CheckpointCtl) -> (usiz
                 threads: 1,
                 target_risk: None,
                 shard_timeout_ms: 0,
+                store_verify: None,
             };
         }
     }

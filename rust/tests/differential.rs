@@ -188,6 +188,7 @@ fn run_lr_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         threads: 1,
         target_risk: None,
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let mut out = Vec::with_capacity(steps);
     for _ in 0..steps {
@@ -219,6 +220,7 @@ fn run_lr_chain_risk(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecor
         threads: 1,
         target_risk: Some(0.05),
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let mut out = Vec::with_capacity(steps);
     for _ in 0..steps {
@@ -249,6 +251,7 @@ fn run_sv_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         threads: 1,
         target_risk: None,
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let mut out = Vec::with_capacity(steps);
     for i in 0..steps {
@@ -279,6 +282,7 @@ fn run_dpm_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         threads: 1,
         target_risk: None,
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let mut out = Vec::with_capacity(steps);
     for i in 0..steps {

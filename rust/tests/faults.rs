@@ -56,6 +56,7 @@ fn run_lr_chain(ev: &mut PlannedEval, steps: usize) -> Vec<StepRecord> {
         threads: 1, // inert: the evaluator is passed in explicitly
         target_risk: None,
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let mut out = Vec::with_capacity(steps);
     for _ in 0..steps {

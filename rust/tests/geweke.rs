@@ -151,6 +151,7 @@ fn geweke_subsampled_mh_logistic_regression() {
         threads: 0,
         target_risk: None,
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     // the default dispatch cutoff (256) would never engage on m=8
     // mini-batches — force dispatch so "parallel coverage" is real

@@ -27,6 +27,7 @@ fn bayes_lr_end_to_end_subsampled() {
         threads: 1,
         target_risk: None,
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let mut ev = InterpreterEval;
     let mut w_mean = vec![RunningMoments::new(), RunningMoments::new(), RunningMoments::new()];
@@ -73,6 +74,7 @@ fn subsampled_bias_is_small() {
             threads: 1,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         let mut ev = InterpreterEval;
         let mut m = RunningMoments::new();
@@ -121,6 +123,7 @@ fn joint_dpm_end_to_end() {
             threads: 1,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         subsampled_mh_transition(&mut trace, &mut rng, wk, &cfg, &mut ev).unwrap();
     }

@@ -267,6 +267,7 @@ fn prop_subsampled_respects_support() {
             threads: 1,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         let mut ev = InterpreterEval;
         for _ in 0..60 {

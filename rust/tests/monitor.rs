@@ -38,6 +38,7 @@ fn lr_chain(c: usize, mut rng: Pcg64, sink: Option<&ChainSink>) -> Vec<f64> {
         threads: 1,
         target_risk: None,
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let mut ev = PlannedEval::new();
     let mut draws = Vec::with_capacity(STEPS);

@@ -166,6 +166,7 @@ fn run_lr_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRecord> {
         threads: 1, // inert: the evaluator is passed in explicitly
         target_risk: None,
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let mut out = Vec::with_capacity(steps);
     for _ in 0..steps {
@@ -327,6 +328,7 @@ fn run_dpm_churn_chain(ev: &mut dyn LocalEvaluator, steps: usize) -> Vec<StepRec
         threads: 1, // inert: the evaluator is passed in explicitly
         target_risk: None,
         shard_timeout_ms: 0,
+        store_verify: None,
     };
     let mut out = Vec::with_capacity(steps);
     for i in 0..steps {
@@ -378,6 +380,7 @@ fn multichain_matches_inline_runs() {
             threads: 1,
             target_risk: None,
             shard_timeout_ms: 0,
+            store_verify: None,
         };
         let mut ev = PlannedEval::new();
         let mut bits = Vec::new();

@@ -1,0 +1,503 @@
+//! Streaming-ingestion differential suite: the append fast path
+//! (`append_directive` — caches extended in place under
+//! `append_version`) must be *bitwise* indistinguishable from plain
+//! `execute` (structural bump, wholesale cache rebuild) when both run
+//! the same directive + transition schedule with the same RNG streams.
+//! CI runs this suite under `SUBPPL_COLSTORE=0` and `=1` and at
+//! `SUBPPL_THREADS` 1 and 4, so the contract holds on both sides of the
+//! column-store kill switch and under sharded scoring.
+//!
+//! Layers:
+//! * **LR append-vs-inline lockstep** — single appends, bursts, appends
+//!   after accepted moves, and appends under the risk-adaptive
+//!   controller, each checked across every evaluator rung against the
+//!   interpreter oracle running the inline schedule;
+//! * **SV tick ingestion** — appends that *grow the latent state*
+//!   (each new `x{s}` observation forces a fresh `h{s}` chain entry
+//!   through the mem), again bitwise against the inline schedule;
+//! * **windowed retirement** — `retire_observations` keeps a sliding
+//!   window over ticks while inference stays in lockstep across
+//!   evaluators, and degrades the caches structurally (appends must
+//!   not);
+//! * **serve sessions** — appends land at draw boundaries: the same
+//!   total schedule gives bitwise-identical sessions regardless of how
+//!   the `step` RPCs are chunked around the `append`;
+//! * **soak** — `STREAM_SOAK=1` runs hundreds of append/retire ticks
+//!   and pins window size, cache footprint, and finiteness.
+
+use std::rc::Rc;
+use subppl::coordinator::chain::build_bayes_lr;
+use subppl::data::{sv_data, sv_data::SvSeries, synth2d, Dataset};
+use subppl::infer::{
+    subsampled_mh_transition, InterpreterEval, LocalEvaluator, PlannedEval, Proposal,
+    SubsampledConfig,
+};
+use subppl::math::Pcg64;
+use subppl::ppl::ast::{Directive, Expr};
+use subppl::serve::session::{Session, SessionCfg};
+use subppl::Value;
+
+fn value_bits(v: &Value) -> Vec<u64> {
+    match v {
+        Value::Real(x) => vec![x.to_bits()],
+        Value::Vector(xs) => xs.iter().map(|x| x.to_bits()).collect(),
+        other => panic!("unexpected principal value {other:?}"),
+    }
+}
+
+/// The same observation shape `build_bayes_lr` constructs.
+fn lr_observe(x: &[f64], y: bool) -> Directive {
+    Directive::Observe(
+        Expr::app(vec![
+            Expr::sym("f"),
+            Expr::constant(Value::Vector(Rc::new(x.to_vec()))),
+        ]),
+        Value::Bool(y),
+    )
+}
+
+/// The same observation shape `build_sv` constructs.
+fn sv_observe(s: usize, t: usize, xv: f64) -> Directive {
+    Directive::Observe(
+        Expr::app(vec![
+            Expr::sym(&format!("x{s}")),
+            Expr::constant(Value::Int((t + 1) as i64)),
+        ]),
+        Value::Real(xv),
+    )
+}
+
+fn head(data: &Dataset, n: usize) -> Dataset {
+    let mut h = data.clone();
+    h.x.truncate(n);
+    h.y.truncate(n);
+    h
+}
+
+fn lr_cfg(target_risk: Option<f64>) -> SubsampledConfig {
+    SubsampledConfig {
+        m: 50,
+        eps: 0.01,
+        proposal: Proposal::Drift(0.1),
+        exact: false,
+        threads: 1,
+        target_risk,
+        shard_timeout_ms: 0,
+        store_verify: None,
+    }
+}
+
+type StepRecord = (bool, usize, Vec<u64>);
+
+/// One LR schedule: build `n0` rows, then per phase `(t, k)` run `t`
+/// transitions and add `k` observations — through `append_directive`
+/// (`fast`) or plain `execute` (inline oracle).  Both mechanisms share
+/// the evaluator, so they consume identical RNG streams; any divergence
+/// is a cache-extension bug, not noise.
+fn run_lr_schedule(
+    fast: bool,
+    n0: usize,
+    phases: &[(usize, usize)],
+    target_risk: Option<f64>,
+    ev: &mut dyn LocalEvaluator,
+) -> (Vec<StepRecord>, u64) {
+    let total = n0 + phases.iter().map(|p| p.1).sum::<usize>();
+    let data = synth2d::generate(total, 61);
+    let mut rng = Pcg64::seeded(62);
+    let (mut trace, w) = build_bayes_lr(&head(&data, n0), 0.1, &mut rng);
+    let cfg = lr_cfg(target_risk);
+    let mut next = n0;
+    let mut out = Vec::new();
+    for &(t, k) in phases {
+        for _ in 0..t {
+            let s = subsampled_mh_transition(&mut trace, &mut rng, w, &cfg, ev).unwrap();
+            out.push((s.accepted, s.sections_evaluated, value_bits(&trace.fresh_value(w))));
+        }
+        for _ in 0..k {
+            let obs = lr_observe(&data.x[next], data.y[next]);
+            if fast {
+                trace.append_directive(&obs, &mut rng).unwrap();
+            } else {
+                trace.execute(&obs, &mut rng).unwrap();
+            }
+            next += 1;
+        }
+    }
+    assert_eq!(trace.observations().len(), total);
+    (out, trace.log_joint().to_bits())
+}
+
+/// The core contract: the fast path on every evaluator rung must match
+/// the inline schedule on the interpreter oracle, step for step and in
+/// the final trace fingerprint.
+fn assert_lr_append_matches_inline(label: &str, phases: &[(usize, usize)], target_risk: Option<f64>) {
+    let mut interp = InterpreterEval;
+    let (want, lj_want) = run_lr_schedule(false, 200, phases, target_risk, &mut interp);
+    let mut oracle2 = InterpreterEval;
+    let mut scalar = PlannedEval::scalar();
+    let mut batched = PlannedEval::new().with_colstore(false);
+    let mut store = PlannedEval::new().with_colstore(true);
+    let rungs: [(&str, &mut dyn LocalEvaluator); 4] = [
+        ("interp", &mut oracle2),
+        ("scalar", &mut scalar),
+        ("batched", &mut batched),
+        ("store", &mut store),
+    ];
+    for (rung, ev) in rungs {
+        let (got, lj_got) = run_lr_schedule(true, 200, phases, target_risk, ev);
+        assert_eq!(got.len(), want.len(), "{label}/{rung}: step count diverged");
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a, b, "{label}/{rung}: diverged from inline oracle at step {i}");
+        }
+        assert_eq!(lj_got, lj_want, "{label}/{rung}: final log_joint bits diverged");
+    }
+    assert!(
+        want.iter().any(|(acc, _, _)| *acc),
+        "{label}: no transition was ever accepted (frozen chain proves nothing)"
+    );
+}
+
+#[test]
+fn append_single_bitwise_lr() {
+    assert_lr_append_matches_inline("lr-single", &[(6, 1), (6, 0)], None);
+}
+
+#[test]
+fn append_burst_bitwise_lr() {
+    assert_lr_append_matches_inline("lr-burst", &[(4, 32), (8, 0)], None);
+}
+
+#[test]
+fn append_after_accept_bitwise_lr() {
+    // ten transitions before the first append: some accept (pinned by
+    // the frozen-chain assert), so the appended rows land on a trace
+    // whose committed state and store rows have already moved
+    assert_lr_append_matches_inline("lr-after-accept", &[(10, 1), (5, 1), (5, 0)], None);
+}
+
+#[test]
+fn append_under_target_risk_bitwise_lr() {
+    // the risk controller sizes batches from running statistics of the
+    // scored l_i — one stale section in an extended cache desyncs
+    // sections_evaluated within a few transitions
+    assert_lr_append_matches_inline("lr-risk", &[(6, 4), (8, 0)], Some(0.05));
+}
+
+// ---------------------------------------------------------------------
+// SV: appends that grow the latent state
+// ---------------------------------------------------------------------
+
+/// `build_sv` with *tick-major* observations (t outer, s inner), the
+/// streaming layout: the k-oldest observation records span one whole
+/// tick across every series, so `retire_observations(series)` slides
+/// the window by exactly one tick.  Appends per tick use the same
+/// order, keeping both sides of the differential on one directive
+/// sequence.
+fn build_sv_tick_major(
+    series: &[SvSeries],
+    len0: usize,
+    rng: &mut Pcg64,
+) -> (subppl::trace::Trace, subppl::trace::node::NodeId, subppl::trace::node::NodeId) {
+    let mut trace = subppl::trace::Trace::new();
+    trace
+        .run_program(
+            "[assume sig2 (scope_include 'sig2 0 (inv_gamma 5 0.05))]\n\
+             [assume sig (sqrt sig2)]\n\
+             [assume phi (scope_include 'phi 0 (beta 5 1))]",
+            rng,
+        )
+        .unwrap();
+    for s in 0..series.len() {
+        let prog = format!(
+            "[assume h{s} (mem (lambda (t) (scope_include 'h{s} t \
+               (if (<= t 0) 0.0 (normal (* phi (h{s} (- t 1))) sig)))))]\n\
+             [assume x{s} (lambda (t) (normal 0 (exp (/ (h{s} t) 2))))]"
+        );
+        trace.run_program(&prog, rng).unwrap();
+    }
+    for t in 0..len0 {
+        for (s, sv) in series.iter().enumerate() {
+            trace.execute(&sv_observe(s, t, sv.x[t]), rng).unwrap();
+        }
+    }
+    let phi = trace.lookup_node("phi").unwrap();
+    let sig2 = trace.lookup_node("sig2").unwrap();
+    (trace, phi, sig2)
+}
+
+/// One SV schedule: build `len0` ticks per series, then per phase run
+/// `t` phi/sig2 transitions and ingest `ticks` whole ticks (one new
+/// observation per series, which forces a fresh `h{s}` entry through
+/// the mem — appends here allocate latent nodes, not just observed
+/// ones).  With `retire`, each ingested tick retires the oldest one,
+/// holding the observation window at `len0 * series` (the windowed /
+/// decaying variant).
+fn run_sv_schedule(
+    fast: bool,
+    retire: bool,
+    len0: usize,
+    phases: &[(usize, usize)],
+    ev: &mut dyn LocalEvaluator,
+) -> (Vec<StepRecord>, u64) {
+    let n_series = 4usize;
+    let total_ticks: usize = phases.iter().map(|p| p.1).sum();
+    let cfg = sv_data::SvConfig {
+        series: n_series,
+        len: len0 + total_ticks,
+        ..Default::default()
+    };
+    let series = sv_data::generate(&cfg, 63);
+    let mut rng = Pcg64::seeded(64);
+    let (mut trace, phi, sig2) = build_sv_tick_major(&series, len0, &mut rng);
+    let scfg = SubsampledConfig {
+        m: 6,
+        eps: 0.01,
+        proposal: Proposal::Drift(0.03),
+        exact: false,
+        threads: 1,
+        target_risk: None,
+        shard_timeout_ms: 0,
+        store_verify: None,
+    };
+    let mut t_next = len0;
+    let mut out = Vec::new();
+    let mut step = 0usize;
+    for &(t, ticks) in phases {
+        for _ in 0..t {
+            let v = if step % 2 == 0 { phi } else { sig2 };
+            step += 1;
+            let s = subsampled_mh_transition(&mut trace, &mut rng, v, &scfg, ev).unwrap();
+            out.push((s.accepted, s.sections_evaluated, value_bits(&trace.fresh_value(v))));
+        }
+        for _ in 0..ticks {
+            for (s, sv) in series.iter().enumerate() {
+                let obs = sv_observe(s, t_next, sv.x[t_next]);
+                if fast {
+                    trace.append_directive(&obs, &mut rng).unwrap();
+                } else {
+                    trace.execute(&obs, &mut rng).unwrap();
+                }
+            }
+            if retire {
+                // tick-major layout: the k oldest records are exactly
+                // the oldest tick across every series
+                assert_eq!(trace.retire_observations(n_series).unwrap(), n_series);
+            }
+            t_next += 1;
+        }
+        if retire {
+            assert_eq!(
+                trace.observations().len(),
+                len0 * n_series,
+                "window must stay fixed under retirement"
+            );
+        }
+    }
+    (out, trace.log_joint().to_bits())
+}
+
+#[test]
+fn append_ticks_bitwise_sv() {
+    let phases = [(4, 1), (4, 1), (4, 0)];
+    let mut interp = InterpreterEval;
+    let (want, lj_want) = run_sv_schedule(false, false, 4, &phases, &mut interp);
+    let mut scalar = PlannedEval::scalar();
+    let mut batched = PlannedEval::new().with_colstore(false);
+    let mut store = PlannedEval::new().with_colstore(true);
+    let rungs: [(&str, &mut dyn LocalEvaluator); 3] =
+        [("scalar", &mut scalar), ("batched", &mut batched), ("store", &mut store)];
+    for (rung, ev) in rungs {
+        let (got, lj_got) = run_sv_schedule(true, false, 4, &phases, ev);
+        assert_eq!(got, want, "sv/{rung}: diverged from inline oracle");
+        assert_eq!(lj_got, lj_want, "sv/{rung}: final log_joint bits diverged");
+    }
+    assert!(want.iter().any(|(acc, _, _)| *acc), "sv: no transition ever accepted");
+}
+
+/// Windowed retirement lockstep: the retire path has no slow twin (it
+/// *is* the structural mechanism), so the differential axis is the
+/// evaluator — every rung must stay bitwise with the interpreter
+/// oracle across a schedule of append-tick / retire-tick / infer
+/// rounds, while the observation window holds fixed.
+#[test]
+fn windowed_retirement_lockstep_sv() {
+    let phases = [(4, 1), (4, 1), (4, 1), (4, 0)];
+    let mut interp = InterpreterEval;
+    let (want, lj_want) = run_sv_schedule(true, true, 4, &phases, &mut interp);
+    let mut scalar = PlannedEval::scalar();
+    let mut batched = PlannedEval::new().with_colstore(false);
+    let mut store = PlannedEval::new().with_colstore(true);
+    let rungs: [(&str, &mut dyn LocalEvaluator); 3] =
+        [("scalar", &mut scalar), ("batched", &mut batched), ("store", &mut store)];
+    for (rung, ev) in rungs {
+        let (got, lj_got) = run_sv_schedule(true, true, 4, &phases, ev);
+        assert_eq!(got, want, "sv-retire/{rung}: diverged from oracle");
+        assert_eq!(lj_got, lj_want, "sv-retire/{rung}: final log_joint bits diverged");
+    }
+    assert!(want.iter().all(|(_, _, bits)| bits.iter().all(|b| f64::from_bits(*b).is_finite())));
+}
+
+// ---------------------------------------------------------------------
+// cache identity: appends extend, retirement degrades
+// ---------------------------------------------------------------------
+
+#[test]
+fn append_extends_caches_retire_rebuilds_them() {
+    let data = synth2d::generate(140, 71);
+    let mut rng = Pcg64::seeded(72);
+    let (mut trace, w) = build_bayes_lr(&head(&data, 128), 0.1, &mut rng);
+
+    // warm the cache trio
+    let p0 = trace.cached_partition(w).unwrap();
+    let set0 = trace.cached_batch_plans(&p0);
+    let (_store0, fresh0) = trace.cached_colstore(&p0, &set0);
+    assert!(fresh0, "first store build must be fresh");
+    let p0_ptr = Rc::as_ptr(&p0);
+    let locals0 = p0.locals.len();
+    drop(set0);
+    drop(p0);
+
+    let (sv0, av0) = (trace.structure_version, trace.append_version);
+    for k in 0..12 {
+        trace.append_directive(&lr_observe(&data.x[128 + k], data.y[128 + k]), &mut rng).unwrap();
+    }
+    assert_eq!(trace.structure_version, sv0, "appends must not bump structure_version");
+    assert!(trace.append_version > av0, "appends must bump append_version");
+
+    let p = trace.cached_partition(w).unwrap();
+    assert_eq!(Rc::as_ptr(&p), p0_ptr, "partition must extend in place, not rebuild");
+    assert_eq!(p.locals.len(), locals0 + 12, "extended partition must adopt the new sections");
+    assert_eq!(p.appended_at, trace.append_version);
+    let set = trace.cached_batch_plans(&p);
+    assert_eq!(set.appended_at, trace.append_version);
+    let (_store, fresh) = trace.cached_colstore(&p, &set);
+    assert!(!fresh, "append growth must extend the column store, not rebuild it");
+    drop(set);
+    drop(p);
+
+    // retirement is a structural change: wholesale rebuild is the
+    // contract (stale windows must not linger in any cache layer)
+    assert_eq!(trace.retire_observations(4).unwrap(), 4);
+    assert!(trace.structure_version > sv0, "retirement must bump structure_version");
+    let p2 = trace.cached_partition(w).unwrap();
+    assert_ne!(Rc::as_ptr(&p2), p0_ptr, "retirement must force a partition rebuild");
+    assert_eq!(p2.locals.len(), locals0 + 12 - 4);
+    assert_eq!(trace.observations().len(), 128 + 12 - 4);
+}
+
+// ---------------------------------------------------------------------
+// serve sessions: appends land at draw boundaries
+// ---------------------------------------------------------------------
+
+const SESSION_MODEL: &str = r#"
+    [assume mu (scope_include 'mu 0 (normal 0 1))]
+    [observe (normal mu 0.5) 1.2]
+    [observe (normal mu 0.5) 0.8]
+"#;
+
+fn session_cfg(id: u64) -> SessionCfg {
+    SessionCfg {
+        id,
+        seed: 42,
+        program: SESSION_MODEL.into(),
+        infer: Some("(mh mu one drift 0.5 1)".into()),
+        watch: vec!["mu".into()],
+        ..SessionCfg::default()
+    }
+}
+
+fn watched_mu_bits(s: &Session) -> u64 {
+    let snap = s.snapshot_json();
+    let v = snap.get("values").and_then(|v| v.get("mu")).and_then(|v| v.as_f64());
+    v.expect("snapshot missing watched mu").to_bits()
+}
+
+/// The same total schedule — 6 draws, one appended observation, 6 more
+/// draws — must give a bitwise-identical session no matter how the
+/// `step` RPCs are chunked around the `append`, and must differ from
+/// the no-append session (the tick actually conditions the posterior).
+#[test]
+fn session_append_invariant_to_step_chunking() {
+    let run = |before: &[usize], after: &[usize], append: bool| -> u64 {
+        let mut s = Session::new(session_cfg(9)).unwrap();
+        for &n in before {
+            s.step(n, None).unwrap();
+        }
+        if append {
+            assert_eq!(s.append("[observe (normal mu 0.5) -3.0]").unwrap(), 1);
+        }
+        for &n in after {
+            s.step(n, None).unwrap();
+        }
+        assert_eq!(s.total_draws(), before.iter().sum::<usize>() + after.iter().sum::<usize>());
+        assert!(s.failed().is_none());
+        watched_mu_bits(&s)
+    };
+    let a = run(&[6], &[6], true);
+    let b = run(&[2, 4], &[1, 5], true);
+    let c = run(&[1, 1, 4], &[3, 3], true);
+    assert_eq!(a, b, "step chunking changed the appended session's draws");
+    assert_eq!(a, c, "step chunking changed the appended session's draws");
+    let no_append = run(&[6], &[6], false);
+    assert_ne!(a, no_append, "append had no effect on the posterior draws");
+}
+
+// ---------------------------------------------------------------------
+// soak (env-gated; CI nightly sets STREAM_SOAK=1)
+// ---------------------------------------------------------------------
+
+/// Hundreds of append/retire ticks on the windowed SV model: the
+/// observation window, node population, and column-store cache
+/// footprint must all stay bounded, and inference must stay finite.
+#[test]
+fn stream_soak_window_and_caches_stay_bounded() {
+    if std::env::var("STREAM_SOAK").ok().as_deref() != Some("1") {
+        eprintln!("stream_soak: skipped (set STREAM_SOAK=1)");
+        return;
+    }
+    let n_series = 3usize;
+    let window = 4usize;
+    let ticks = 300usize;
+    let cfg = sv_data::SvConfig {
+        series: n_series,
+        len: window + ticks,
+        ..Default::default()
+    };
+    let series = sv_data::generate(&cfg, 81);
+    let mut rng = Pcg64::seeded(82);
+    let (mut trace, phi, sig2) = build_sv_tick_major(&series, window, &mut rng);
+    let scfg = SubsampledConfig {
+        m: 6,
+        eps: 0.01,
+        proposal: Proposal::Drift(0.03),
+        exact: false,
+        threads: 1,
+        target_risk: None,
+        shard_timeout_ms: 0,
+        store_verify: None,
+    };
+    let mut ev = PlannedEval::new().with_colstore(true);
+    for tick in 0..ticks {
+        let t_new = window + tick;
+        for (s, sv) in series.iter().enumerate() {
+            trace.append_directive(&sv_observe(s, t_new, sv.x[t_new]), &mut rng).unwrap();
+        }
+        assert_eq!(trace.retire_observations(n_series).unwrap(), n_series);
+        for step in 0..4 {
+            let v = if step % 2 == 0 { phi } else { sig2 };
+            subsampled_mh_transition(&mut trace, &mut rng, v, &scfg, &mut ev).unwrap();
+        }
+        assert_eq!(
+            trace.observations().len(),
+            window * n_series,
+            "tick {tick}: window drifted"
+        );
+        assert!(
+            trace.colstore_cache_len() <= 2,
+            "tick {tick}: column-store cache grew past the live principals ({})",
+            trace.colstore_cache_len()
+        );
+    }
+    assert!(trace.log_joint().is_finite(), "soak ended on a non-finite joint");
+    assert!(trace.fresh_value(phi).as_f64().is_some());
+}
