@@ -1,11 +1,14 @@
 //! Load smoke for the `subppl serve` daemon (robustness tentpole):
-//! many short-lived sessions hammered over real TCP connections,
-//! a deterministic backpressure probe, and a drain-under-load finale.
+//! many short-lived sessions hammered over real TCP connections, a
+//! mixed-tenancy phase (many small sessions sharing the daemon with a
+//! few huge, heavily-weighted ones — the fair-scheduling shape), a
+//! deterministic backpressure probe, and a drain-under-load finale.
 //!
 //! Run: `cargo bench --bench serve_load` (`-- --quick` for the CI smoke
 //! pass).  Emits `BENCH_serve.json` at the repository root —
-//! create/step latency percentiles, rejected-request counts, and the
-//! drain report — schema-validated by `scripts/check_bench.py`.
+//! create/step latency percentiles per tenant class, rejected-request
+//! counts, and the drain report — schema-validated by
+//! `scripts/check_bench.py`.
 
 use std::fmt::Write as _;
 use std::io::{BufRead, BufReader, Write};
@@ -21,6 +24,13 @@ const MAX_SESSIONS: usize = 32;
 const CLIENT_THREADS: usize = 8;
 /// Long-running sessions left stepping when the drain lands.
 const DRAIN_SESSIONS: usize = 4;
+/// Mixed-tenancy phase: many small interactive sessions...
+const SMALL_SESSIONS: usize = 12;
+const SMALL_CONNS: usize = 4;
+/// ...sharing the daemon with a few huge, heavily-weighted batch ones.
+const HUGE_SESSIONS: usize = 2;
+const SMALL_DRAWS: usize = 20;
+const HUGE_DRAWS: usize = 4000;
 
 // ---------------------------------------------------------------------
 // Minimal blocking JSON-RPC client (no subscriptions → no event lines)
@@ -59,6 +69,10 @@ const MODEL: &str = r#"
 "#;
 
 fn create_line(id: u64, seed: u64) -> String {
+    create_line_weighted(id, seed, 1)
+}
+
+fn create_line_weighted(id: u64, seed: u64, weight: u32) -> String {
     Json::Obj(vec![
         ("id".into(), Json::Num(id as f64)),
         ("method".into(), Json::Str("create".into())),
@@ -69,6 +83,7 @@ fn create_line(id: u64, seed: u64) -> String {
                 ("infer".into(), Json::Str("(mh mu one drift 0.5 1)".into())),
                 ("watch".into(), Json::Arr(vec![Json::Str("mu".into())])),
                 ("seed".into(), Json::Num(seed as f64)),
+                ("weight".into(), Json::Num(weight as f64)),
             ]),
         ),
     ])
@@ -229,7 +244,87 @@ fn main() {
         percentile(&step_ms, 99.0)
     );
 
-    // ---- phase 2: deterministic backpressure probe ----
+    // ---- phase 2: mixed tenancy — small sessions next to huge ones ----
+    // a handful of interactive tenants (20-draw steps) share the
+    // daemon with two heavily-weighted batch tenants (4000-draw
+    // steps).  The self-check: the small class keeps getting served —
+    // its step p99 must stay well under the phase wall-clock, i.e. no
+    // small session ever waits out an entire batch tenant's run.
+    let small_steps_each: usize = if quick { 4 } else { 8 };
+    let huge_steps_each: usize = if quick { 2 } else { 4 };
+    let t_mixed = Instant::now();
+    let huge_threads: Vec<_> = (0..HUGE_SESSIONS)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr);
+                let resp = c.rpc(&create_line_weighted(1, 80_000 + i as u64, 8));
+                let sid = ok_u64(&resp, "session").expect("huge create admitted");
+                let mut ms = Vec::new();
+                for _ in 0..huge_steps_each {
+                    let t0 = Instant::now();
+                    let resp = c.rpc(&format!(
+                        r#"{{"id":2,"method":"step","params":{{"session":{sid},"n":{HUGE_DRAWS}}}}}"#
+                    ));
+                    ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    assert_eq!(ok_u64(&resp, "done"), Some(HUGE_DRAWS as u64));
+                }
+                c.rpc(&format!(
+                    r#"{{"id":3,"method":"cancel","params":{{"session":{sid}}}}}"#
+                ));
+                ms
+            })
+        })
+        .collect();
+    let small_threads: Vec<_> = (0..SMALL_CONNS)
+        .map(|w| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr);
+                let mut ms = Vec::new();
+                for s in 0..SMALL_SESSIONS / SMALL_CONNS {
+                    let resp =
+                        c.rpc(&create_line(1, 85_000 + (w * 100 + s) as u64));
+                    let sid = ok_u64(&resp, "session").expect("small create admitted");
+                    for _ in 0..small_steps_each {
+                        let t0 = Instant::now();
+                        let resp = c.rpc(&format!(
+                            r#"{{"id":2,"method":"step","params":{{"session":{sid},"n":{SMALL_DRAWS}}}}}"#
+                        ));
+                        ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                        assert_eq!(ok_u64(&resp, "done"), Some(SMALL_DRAWS as u64));
+                    }
+                    c.rpc(&format!(
+                        r#"{{"id":3,"method":"cancel","params":{{"session":{sid}}}}}"#
+                    ));
+                }
+                ms
+            })
+        })
+        .collect();
+    let mut huge_ms: Vec<f64> = Vec::new();
+    for t in huge_threads {
+        huge_ms.extend(t.join().expect("huge tenant thread"));
+    }
+    let mut small_ms: Vec<f64> = Vec::new();
+    for t in small_threads {
+        small_ms.extend(t.join().expect("small tenant thread"));
+    }
+    let mixed_phase_ms = t_mixed.elapsed().as_secs_f64() * 1e3;
+    small_ms.sort_by(|a, b| a.total_cmp(b));
+    huge_ms.sort_by(|a, b| a.total_cmp(b));
+    let small_p99 = percentile(&small_ms, 99.0);
+    println!(
+        "mixed: {SMALL_SESSIONS} small x {small_steps_each} steps (p50 {:.3} p99 {:.3} ms), \
+         {HUGE_SESSIONS} huge x {huge_steps_each} steps (p50 {:.3} p99 {:.3} ms), phase {:.0} ms",
+        percentile(&small_ms, 50.0),
+        small_p99,
+        percentile(&huge_ms, 50.0),
+        percentile(&huge_ms, 99.0),
+        mixed_phase_ms
+    );
+
+    // ---- phase 3: deterministic backpressure probe ----
     // fill the registry to the brim; the next create MUST bounce with
     // Overloaded + retry_after_ms instead of queueing
     let mut c = Client::connect(&addr);
@@ -261,7 +356,7 @@ fn main() {
         ));
     }
 
-    // ---- phase 3: drain under load ----
+    // ---- phase 4: drain under load ----
     // a few long-running sessions mid-step when the shutdown lands; the
     // registry needs a beat to reap the cancelled probes first
     let mut drain_ids = Vec::new();
@@ -328,6 +423,19 @@ fn main() {
             ),
         ),
         (
+            "small_sessions_not_starved",
+            from_bool(
+                small_ms.len() == SMALL_SESSIONS * small_steps_each
+                    && small_p99 <= (mixed_phase_ms / 2.0).max(250.0),
+                format!(
+                    "{} of {} small steps served, p99 {small_p99:.1} ms against a {:.0} ms phase",
+                    small_ms.len(),
+                    SMALL_SESSIONS * small_steps_each,
+                    mixed_phase_ms
+                ),
+            ),
+        ),
+        (
             "overload_rejects_not_queues",
             from_bool(
                 rejected >= 1 && retry_after.is_some(),
@@ -375,6 +483,18 @@ fn main() {
         percentile(&step_ms, 50.0),
         percentile(&step_ms, 90.0),
         percentile(&step_ms, 99.0)
+    );
+    let _ = writeln!(
+        out,
+        "  \"mixed\": {{\n    \"small_sessions\": {SMALL_SESSIONS},\n    \"huge_sessions\": {HUGE_SESSIONS},\n    \"small_steps\": {},\n    \"huge_steps\": {},\n    \"small_draws_per_step\": {SMALL_DRAWS},\n    \"huge_draws_per_step\": {HUGE_DRAWS},\n    \"small_step_ms\": {{\"p50\": {:.4}, \"p90\": {:.4}, \"p99\": {:.4}}},\n    \"huge_step_ms\": {{\"p50\": {:.4}, \"p90\": {:.4}, \"p99\": {:.4}}},\n    \"phase_ms\": {mixed_phase_ms:.1}\n  }},",
+        small_ms.len(),
+        huge_ms.len(),
+        percentile(&small_ms, 50.0),
+        percentile(&small_ms, 90.0),
+        percentile(&small_ms, 99.0),
+        percentile(&huge_ms, 50.0),
+        percentile(&huge_ms, 90.0),
+        percentile(&huge_ms, 99.0)
     );
     let _ = writeln!(
         out,

@@ -107,10 +107,17 @@ RECOVERY_KEYS = {
 
 SERVE_LOAD_INT_KEYS = {"sessions", "steps", "draws", "client_threads"}
 SERVE_PCTL_KEYS = ("p50", "p90", "p99")
+# mixed-tenancy phase: per-class counts plus per-class step percentiles
+# (small_step_ms / huge_step_ms) and the phase wall-clock
+SERVE_MIXED_INT_KEYS = {
+    "small_sessions", "huge_sessions", "small_steps", "huge_steps",
+    "small_draws_per_step", "huge_draws_per_step",
+}
 SERVE_BACKPRESSURE_KEYS = {"max_sessions", "rejected_overloaded", "retry_after_ms"}
 SERVE_DRAIN_KEYS = {"in_flight_sessions", "drained", "forced", "checkpointed", "drain_ms"}
 SERVE_SELF_CHECK_KEYS = {
     "all_sessions_admitted",
+    "small_sessions_not_starved",
     "overload_rejects_not_queues",
     "drain_joins_every_session",
     "drain_checkpoints_in_flight_sessions",
@@ -244,6 +251,26 @@ def validate_serve(doc):
                 f"got {load.get('draws_per_sec')!r}")
         check_percentiles("load.create_ms", load.get("create_ms"))
         check_percentiles("load.step_ms", load.get("step_ms"))
+
+    mixed = doc.get("mixed")
+    if not isinstance(mixed, dict):
+        err("mixed: missing (bench predates the mixed-tenancy phase?)")
+    else:
+        for key in sorted(SERVE_MIXED_INT_KEYS):
+            if key not in mixed:
+                err(f"mixed: missing {key!r}")
+            elif not (nonneg_int(mixed[key]) and mixed[key] > 0):
+                err(f"mixed.{key}: expected positive integer, got {mixed[key]!r}")
+        check_percentiles("mixed.small_step_ms", mixed.get("small_step_ms"))
+        check_percentiles("mixed.huge_step_ms", mixed.get("huge_step_ms"))
+        if not positive_finite(mixed.get("phase_ms")):
+            err(f"mixed.phase_ms: expected positive finite number, "
+                f"got {mixed.get('phase_ms')!r}")
+        extra = set(mixed) - SERVE_MIXED_INT_KEYS - {
+            "small_step_ms", "huge_step_ms", "phase_ms",
+        }
+        if extra:
+            err(f"mixed: unexpected keys {sorted(extra)}")
 
     bp = doc.get("backpressure")
     if not isinstance(bp, dict):
@@ -492,6 +519,14 @@ def synthetic_serve_doc():
             "create_ms": {"p50": 0.4, "p90": 0.9, "p99": 2.1},
             "step_ms": {"p50": 0.3, "p90": 0.7, "p99": 1.8},
         },
+        "mixed": {
+            "small_sessions": 12, "huge_sessions": 2,
+            "small_steps": 96, "huge_steps": 8,
+            "small_draws_per_step": 20, "huge_draws_per_step": 4_000,
+            "small_step_ms": {"p50": 0.5, "p90": 1.4, "p99": 6.0},
+            "huge_step_ms": {"p50": 55.0, "p90": 80.0, "p99": 120.0},
+            "phase_ms": 950.0,
+        },
         "backpressure": {
             "max_sessions": 32, "rejected_overloaded": 3, "retry_after_ms": 100,
         },
@@ -571,6 +606,18 @@ def selftest():
         ("serve_backpressure_missing", lambda d: d.pop("backpressure"), False),
         ("serve_rejected_negative",
          mutate(["backpressure", "rejected_overloaded"], -1), False),
+        ("serve_mixed_missing", lambda d: d.pop("mixed"), False),
+        ("serve_mixed_small_sessions_zero",
+         mutate(["mixed", "small_sessions"], 0), False),
+        ("serve_mixed_percentiles_inverted",
+         mutate(["mixed", "small_step_ms", "p99"], 0.0001), False),
+        ("serve_mixed_huge_percentile_missing",
+         lambda d: d["mixed"]["huge_step_ms"].pop("p90"), False),
+        ("serve_mixed_phase_ms_nan",
+         mutate(["mixed", "phase_ms"], float("nan")), False),
+        ("serve_mixed_extra_key", mutate(["mixed", "surprise"], 1), False),
+        ("serve_fairness_check_failed",
+         mutate(["self_checks", "small_sessions_not_starved"], False), False),
         ("serve_drain_missing", lambda d: d.pop("drain"), False),
         ("serve_drained_string", mutate(["drain", "drained"], "4"), False),
         ("serve_forced_drain_check_failed",

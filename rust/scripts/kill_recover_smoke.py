@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""End-to-end kill-and-recover smoke for the serve daemon.
+
+Drives a real `subppl serve` process over TCP, SIGKILLs it mid-session
+(after N acknowledged draws), restarts it with `--recover` over the same
+--state-dir, continues the session for M more draws, and asserts the
+watched values are bitwise identical to an uninterrupted N+M run on a
+fresh journal-free daemon.  This is the one place the durability
+contract is exercised across an actual process boundary — the Rust
+integration tests simulate the crash in-process by dropping the server
+without drain.
+
+Usage: kill_recover_smoke.py /path/to/subppl
+
+Exits 0 on success; nonzero with a diagnostic on any mismatch, daemon
+startup failure, or protocol error.
+"""
+
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+MODEL = (
+    "[assume mu (normal 0 1)]"
+    "[observe (normal mu 1.0) 1.2]"
+    "[observe (normal mu 1.0) 0.8]"
+)
+INFER = "(mh mu one drift 0.5 1)"
+SEED = 42
+N_BEFORE = 10   # draws acknowledged before the SIGKILL
+M_AFTER = 10    # draws after recovery
+
+ADDR_MAIN = ("127.0.0.1", 7791)
+ADDR_CTRL = ("127.0.0.1", 7792)
+
+
+def connect(addr, timeout_s=30.0):
+    """Retry until the daemon accepts, then return a buffered rw file."""
+    deadline = time.monotonic() + timeout_s
+    while True:
+        try:
+            s = socket.create_connection(addr, timeout=5.0)
+            s.settimeout(60.0)
+            return s.makefile("rwb")
+        except OSError:
+            if time.monotonic() > deadline:
+                raise SystemExit(f"daemon at {addr} never came up")
+            time.sleep(0.1)
+
+
+def rpc(f, rid, method, params=None):
+    req = {"id": rid, "method": method}
+    if params is not None:
+        req["params"] = params
+    f.write((json.dumps(req) + "\n").encode())
+    f.flush()
+    line = f.readline()
+    if not line:
+        raise SystemExit(f"daemon hung up mid-call ({method})")
+    reply = json.loads(line)
+    if "error" in reply:
+        raise SystemExit(f"{method} failed: {reply['error']}")
+    return reply.get("result")
+
+
+def create_and_step(f, n):
+    sid = rpc(f, 1, "create", {
+        "program": MODEL, "infer": INFER, "seed": SEED, "watch": ["mu"],
+    })["session"]
+    rpc(f, 2, "step", {"session": sid, "n": n})
+    return sid
+
+
+def spawn(binary, addr, extra):
+    args = [binary, "serve", "--addr", f"{addr[0]}:{addr[1]}",
+            "--journal-every", "1"] + extra
+    return subprocess.Popen(args, stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL)
+
+
+def main():
+    if len(sys.argv) != 2:
+        raise SystemExit(__doc__)
+    binary = sys.argv[1]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        state = os.path.join(tmp, "state")
+
+        # --- phase 1: N draws, acknowledged, then SIGKILL ---------------
+        daemon = spawn(binary, ADDR_MAIN, ["--state-dir", state])
+        f = connect(ADDR_MAIN)
+        sid = create_and_step(f, N_BEFORE)
+        # the step reply above is the acknowledgement: everything it
+        # covers must already be durable, so a hard kill now loses nothing
+        daemon.send_signal(signal.SIGKILL)
+        daemon.wait()
+
+        # --- phase 2: recover, continue M draws, snapshot ---------------
+        daemon = spawn(binary, ADDR_MAIN, ["--state-dir", state, "--recover"])
+        f = connect(ADDR_MAIN)
+        rpc(f, 3, "step", {"session": sid, "n": M_AFTER})
+        snap = rpc(f, 4, "snapshot", {"session": sid})
+        rpc(f, 5, "shutdown")
+        daemon.wait(timeout=60)
+
+        if snap["draws"] != N_BEFORE + M_AFTER:
+            raise SystemExit(
+                f"recovered session has {snap['draws']} draws, "
+                f"want {N_BEFORE + M_AFTER}")
+
+        # --- phase 3: uninterrupted control on a journal-free daemon ----
+        daemon = spawn(binary, ADDR_CTRL, [])
+        f = connect(ADDR_CTRL)
+        csid = create_and_step(f, N_BEFORE + M_AFTER)
+        ctrl = rpc(f, 4, "snapshot", {"session": csid})
+        rpc(f, 5, "shutdown")
+        daemon.wait(timeout=60)
+
+    got, want = snap["values"]["mu"], ctrl["values"]["mu"]
+    if got != want or json.dumps(got) != json.dumps(want):
+        raise SystemExit(
+            f"recovered chain diverged: mu {got!r} != control {want!r}")
+    print(f"kill-recover smoke ok: {N_BEFORE}+kill+{M_AFTER} draws, "
+          f"mu bitwise equal to uninterrupted run ({got})")
+
+
+if __name__ == "__main__":
+    main()

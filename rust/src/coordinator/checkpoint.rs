@@ -64,8 +64,11 @@ use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 /// FNV-1a over a byte string (same constants as the column store's row
-/// hash; duplicated to keep the two modules dependency-free).
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// hash; duplicated to keep the two modules dependency-free).  Shared
+/// with the serve write-ahead journal (`serve/journal.rs`), which
+/// frames its records with the same checksum so a torn tail is
+/// detected the same way a torn checkpoint is.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;

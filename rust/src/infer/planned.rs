@@ -396,6 +396,21 @@ impl PlannedEval {
         self
     }
 
+    /// Tag this evaluator's shard dispatches with a fair-scheduling
+    /// lane: shards queue per `key` on the shared pool and are served
+    /// by weighted deficit round-robin, so one session's huge batches
+    /// cannot starve another's (serve wires each session's id and
+    /// `weight` create-param through here).  Scheduling only reorders
+    /// which lane's shards run next — results stay bitwise identical.
+    /// No-op for sequential evaluators.
+    pub fn with_session(mut self, key: u64, weight: u32) -> PlannedEval {
+        if let Some(s) = self.shard.as_mut() {
+            s.session_key = key;
+            s.session_weight = weight.max(1);
+        }
+        self
+    }
+
     /// Sections that went through pool shards (0 for sequential
     /// evaluators).
     pub fn sharded_sections(&self) -> usize {

@@ -15,6 +15,9 @@
 //!            [--session-deadline-ms MS] [--drain-timeout-ms MS]
 //!            [--seed N] [--queue-cap N] [--checkpoint-dir D]
 //!            [--shard-timeout-ms MS] [--store-verify MODE] [--threads T]
+//!            [--state-dir D] [--recover] [--max-frame-bytes N]
+//!            [--journal-every K] [--max-trace-nodes N]
+//!            [--max-journal-bytes N]
 //! subppl artifacts                 # list the AOT artifact registry
 //! ```
 //!
@@ -110,7 +113,7 @@ fn run(args: &[String]) -> Result<(), String> {
         Some("serve") => cmd_serve(args),
         _ => {
             eprintln!(
-                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--target-risk R] [--shard-timeout-ms MS] [--store-verify off|refreshed|full] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R] [--checkpoint-every K --checkpoint-dir D] [--resume]\n  subppl experiment <table1|fig4|fig5|fig6|fig9|fig9_streaming> [--fast] [--fused] [--target-risk R] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]\n  subppl serve [--addr HOST:PORT] [--max-sessions N] [--session-deadline-ms MS] [--drain-timeout-ms MS] [--seed N] [--queue-cap N] [--checkpoint-dir D] [--shard-timeout-ms MS] [--store-verify MODE] [--threads T]\n  subppl artifacts"
+                "usage:\n  subppl run <program.vnt> [--infer \"(cycle ...)\"] [--seed N] [--samples K] [--watch a,b] [--target-risk R] [--shard-timeout-ms MS] [--store-verify off|refreshed|full] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R] [--checkpoint-every K --checkpoint-dir D] [--resume]\n  subppl experiment <table1|fig4|fig5|fig6|fig9|fig9_streaming> [--fast] [--fused] [--target-risk R] [--threads T] [--chains R] [--monitor-every K] [--monitor-gate R]\n  subppl serve [--addr HOST:PORT] [--max-sessions N] [--session-deadline-ms MS] [--drain-timeout-ms MS] [--seed N] [--queue-cap N] [--checkpoint-dir D] [--shard-timeout-ms MS] [--store-verify MODE] [--threads T] [--state-dir D] [--recover] [--max-frame-bytes N] [--journal-every K] [--max-trace-nodes N] [--max-journal-bytes N]\n  subppl artifacts"
             );
             Err("missing or unknown subcommand".into())
         }
@@ -119,7 +122,10 @@ fn run(args: &[String]) -> Result<(), String> {
 
 /// `subppl serve`: the inference-as-a-service daemon (see
 /// `serve/server.rs` for the robustness ladder: admission control,
-/// bounded queues, deadlines, panic isolation, graceful drain).
+/// bounded queues, deadlines, panic isolation, graceful drain; with
+/// `--state-dir` a per-session write-ahead journal makes acknowledged
+/// work crash-durable, and `--recover` rebuilds sessions bitwise-
+/// identically on restart).
 fn cmd_serve(args: &[String]) -> Result<(), String> {
     let parse_u64 = |name: &str, default: u64| -> Result<u64, String> {
         match opt(args, name) {
@@ -142,7 +148,19 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         // sessions shard intra-draw scoring across the shared pool
         // unless --threads resolves to a single worker
         use_pool: pool_for(args).is_some(),
+        state_dir: opt(args, "--state-dir").map(std::path::PathBuf::from),
+        recover: flag(args, "--recover"),
+        max_frame_bytes: match parse_u64("--max-frame-bytes", 1 << 20)? {
+            0 => return Err("--max-frame-bytes must be > 0".into()),
+            n => n as usize,
+        },
+        journal_every: parse_u64("--journal-every", 0)? as usize,
+        max_trace_nodes: parse_u64("--max-trace-nodes", 0)? as usize,
+        max_journal_bytes: parse_u64("--max-journal-bytes", 0)?,
     };
+    if cfg.recover && cfg.state_dir.is_none() {
+        return Err("--recover requires --state-dir".into());
+    }
     subppl::serve::serve(cfg)
 }
 

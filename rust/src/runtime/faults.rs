@@ -28,6 +28,8 @@
 //! | `cancel`     | subsampled-MH mini-batch round     | `infer/subsampled_mh.rs` (trips all registered cancel flags) |
 //! | `slowloris`  | streamed serve event write         | `serve/server.rs` (wedges the subscriber writer) |
 //! | `disconnect` | streamed serve event write         | `serve/server.rs` (drops the client connection) |
+//! | `torn-write` | session journal record write       | `serve/journal.rs` (writes a prefix of the record, then "dies") |
+//! | `kill-recover` | session journal record write     | `serve/journal.rs` (writes nothing — a SIGKILL just before the write) |
 
 #[cfg(feature = "fault-inject")]
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -59,12 +61,24 @@ pub struct FaultPlan {
     /// Drop the serve client connection on the k-th streamed event
     /// write (mid-stream disconnect).
     pub disconnect_at: u64,
+    /// Tear the k-th journal record write: a prefix of the record's
+    /// bytes lands on disk and the journal handle goes dead, exactly as
+    /// if the process was killed mid-`write(2)`.  Recovery must detect
+    /// the torn tail, drop it at the last valid record boundary, and
+    /// resume from the state before the torn write.
+    pub torn_write_at: u64,
+    /// Kill the journal on the k-th record write *before* any byte
+    /// lands (a SIGKILL between the state change and the journal
+    /// append): the journal stays clean but stale, and the un-acked
+    /// operation must not survive recovery.
+    pub kill_recover_at: u64,
 }
 
 impl FaultPlan {
     /// Parse the `SUBPPL_FAULTS` syntax: a comma-separated list of
     /// `kind@k` entries, kinds `panic` / `stall` / `poison` / `nan` /
-    /// `spanic` / `cancel` / `slowloris` / `disconnect`.
+    /// `spanic` / `cancel` / `slowloris` / `disconnect` / `torn-write`
+    /// / `kill-recover`.
     pub fn parse(s: &str) -> Result<FaultPlan, String> {
         let mut plan = FaultPlan::default();
         for entry in s.split(',').map(str::trim).filter(|e| !e.is_empty()) {
@@ -83,6 +97,8 @@ impl FaultPlan {
                 "cancel" => plan.cancel_at = k,
                 "slowloris" => plan.slowloris_at = k,
                 "disconnect" => plan.disconnect_at = k,
+                "torn-write" => plan.torn_write_at = k,
+                "kill-recover" => plan.kill_recover_at = k,
                 other => return Err(format!("unknown fault kind {other:?}")),
             }
         }
@@ -110,6 +126,10 @@ mod armed {
     pub static SLOWLORIS_SEEN: AtomicU64 = AtomicU64::new(0);
     pub static DISCONNECT_AT: AtomicU64 = AtomicU64::new(0);
     pub static DISCONNECT_SEEN: AtomicU64 = AtomicU64::new(0);
+    pub static TORN_WRITE_AT: AtomicU64 = AtomicU64::new(0);
+    pub static TORN_WRITE_SEEN: AtomicU64 = AtomicU64::new(0);
+    pub static KILL_RECOVER_AT: AtomicU64 = AtomicU64::new(0);
+    pub static KILL_RECOVER_SEEN: AtomicU64 = AtomicU64::new(0);
 
     /// Set once [`install`] has been called, so the lazy `SUBPPL_FAULTS`
     /// read can never overwrite a programmatic plan.
@@ -147,6 +167,10 @@ mod armed {
         SLOWLORIS_SEEN.store(0, Ordering::SeqCst);
         DISCONNECT_AT.store(plan.disconnect_at, Ordering::SeqCst);
         DISCONNECT_SEEN.store(0, Ordering::SeqCst);
+        TORN_WRITE_AT.store(plan.torn_write_at, Ordering::SeqCst);
+        TORN_WRITE_SEEN.store(0, Ordering::SeqCst);
+        KILL_RECOVER_AT.store(plan.kill_recover_at, Ordering::SeqCst);
+        KILL_RECOVER_SEEN.store(0, Ordering::SeqCst);
     }
 
     /// Count one event; true exactly when this is the k-th.
@@ -242,6 +266,20 @@ hook!(
     DISCONNECT_AT,
     DISCONNECT_SEEN
 );
+hook!(
+    /// Should this journal record write land only a torn prefix and
+    /// kill the journal handle?
+    journal_torn_write_now,
+    TORN_WRITE_AT,
+    TORN_WRITE_SEEN
+);
+hook!(
+    /// Should this journal record write land nothing (SIGKILL just
+    /// before the append) and kill the journal handle?
+    journal_kill_now,
+    KILL_RECOVER_AT,
+    KILL_RECOVER_SEEN
+);
 
 /// Registry of cancel flags the `cancel@k` fault trips.  Sessions (and
 /// the cancellation-correctness test) register their stop flag here;
@@ -293,9 +331,11 @@ mod tests {
 
     #[test]
     fn plan_parses_every_kind() {
-        let plan =
-            FaultPlan::parse("panic@3, stall@1,poison@2,nan@4,spanic@5,cancel@6,slowloris@7,disconnect@8")
-                .unwrap();
+        let plan = FaultPlan::parse(
+            "panic@3, stall@1,poison@2,nan@4,spanic@5,cancel@6,slowloris@7,disconnect@8,\
+             torn-write@9,kill-recover@10",
+        )
+        .unwrap();
         assert_eq!(
             plan,
             FaultPlan {
@@ -306,7 +346,9 @@ mod tests {
                 spanic_at: 5,
                 cancel_at: 6,
                 slowloris_at: 7,
-                disconnect_at: 8
+                disconnect_at: 8,
+                torn_write_at: 9,
+                kill_recover_at: 10
             }
         );
         assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
@@ -327,6 +369,8 @@ mod tests {
             assert!(!cancel_mid_transition_now());
             assert!(!slowloris_write_now());
             assert!(!disconnect_write_now());
+            assert!(!journal_torn_write_now());
+            assert!(!journal_kill_now());
         }
     }
 

@@ -13,6 +13,23 @@
 //!   driver (`coordinator::multichain`) to run independent `Trace`s
 //!   with per-chain PCG streams.
 //!
+//! # Fair scheduling (deficit round-robin)
+//!
+//! Shard jobs queue per *session* (the lane key a dispatcher sets via
+//! [`ShardScorer::session_key`]; CLI evaluators all share lane 0), and
+//! workers pop lanes by weighted deficit round-robin: each visit grants
+//! a lane `weight × QUANTUM` sections of credit, a lane serves jobs
+//! while its credit covers their section count, and drained lanes
+//! retire without banking credit.  A huge model's thousand-section
+//! shards can therefore no longer monopolize the queue ahead of a
+//! small session's handful — each session gets throughput proportional
+//! to its weight.  Generic tasks are served before shards (they are
+//! chain *drivers*; parking them behind shard backlogs would deadlock
+//! multichain runs on small pools).  Determinism is untouched:
+//! scheduling only reorders *which session's* shards run next, never
+//! the shard-indexed reduce inside one batch — every dispatcher still
+//! lands its own shards into its own `out[lo..hi]` ranges.
+//!
 //! # Send boundaries
 //!
 //! `Trace`, `Value`, and the plan caches are `Rc`-based and never cross
@@ -128,38 +145,159 @@ enum Job {
     Task(Task),
 }
 
+/// Deficit round-robin scheduling quantum: the credit (in sections) a
+/// lane earns per round-robin visit, per unit of weight.
+const QUANTUM: u64 = 256;
+
+/// Cost clamp per job: one enormous shard cannot demand unbounded
+/// credit (it would stall the round-robin while its lane saved up), and
+/// a zero-section shard still costs something.  The clamp only skews
+/// fairness for shards past 8 quanta — the dispatcher already splits
+/// batches into ~per-thread shards well below that in practice.
+const MAX_SHARD_COST: u64 = 8 * QUANTUM;
+
+fn shard_cost(job: &ShardJob) -> u64 {
+    ((job.hi - job.lo) as u64).clamp(1, MAX_SHARD_COST)
+}
+
+/// One session's shard backlog in the fair-scheduling queue.
+struct SessLane {
+    key: u64,
+    weight: u32,
+    /// DRR credit in sections; topped up by `weight × QUANTUM` per
+    /// round-robin visit, spent by serving jobs, reset (not banked)
+    /// when the lane drains.
+    deficit: u64,
+    jobs: VecDeque<ShardJob>,
+}
+
+#[derive(Default)]
+struct QueueState {
+    /// Generic tasks (chain drivers): always served before shards.
+    tasks: VecDeque<Task>,
+    /// Per-session shard lanes, scheduled by deficit round-robin.
+    /// Lanes exist only while backlogged (drained lanes retire), so
+    /// this stays a short Vec — linear key scans beat a map here.
+    lanes: Vec<SessLane>,
+    /// Round-robin position into `lanes`.
+    cursor: usize,
+    closed: bool,
+}
+
+impl QueueState {
+    /// Pop the next shard by weighted deficit round-robin.  Each visit
+    /// grants the lane `weight × QUANTUM` credit; a lane serves its
+    /// head job when the credit covers its cost, and keeps serving on
+    /// subsequent pops until broke (classic DRR burst), then the cursor
+    /// moves on.  A single lane degenerates to exact FIFO.  Bounded:
+    /// every iteration either returns or grants ≥ QUANTUM to a lane
+    /// whose head costs ≤ MAX_SHARD_COST.
+    fn pop_shard(&mut self) -> Option<ShardJob> {
+        // drop drained lanes so the scan only sees backlogged ones
+        // (their deficit deliberately dies with them — idle sessions
+        // don't bank credit)
+        if self.lanes.iter().any(|l| l.jobs.is_empty()) {
+            let before_cursor = self
+                .lanes
+                .iter()
+                .take(self.cursor)
+                .filter(|l| l.jobs.is_empty())
+                .count();
+            self.lanes.retain(|l| !l.jobs.is_empty());
+            self.cursor = self.cursor.saturating_sub(before_cursor);
+        }
+        if self.lanes.is_empty() {
+            self.cursor = 0;
+            return None;
+        }
+        loop {
+            let i = self.cursor % self.lanes.len();
+            let lane = &mut self.lanes[i];
+            let cost = shard_cost(&lane.jobs[0]);
+            if lane.deficit < cost {
+                lane.deficit += lane.weight as u64 * QUANTUM;
+                self.cursor = (i + 1) % self.lanes.len();
+                continue;
+            }
+            lane.deficit -= cost;
+            // invariant: the drain pass above and the retire branch
+            // below keep every lane non-empty at loop entry
+            let job = lane.jobs.pop_front().expect("lane is backlogged");
+            if lane.jobs.is_empty() {
+                self.lanes.remove(i);
+                self.cursor = if self.lanes.is_empty() {
+                    0
+                } else {
+                    i % self.lanes.len()
+                };
+            } else {
+                // stay here: the lane serves until its credit runs out
+                self.cursor = i;
+            }
+            return Some(job);
+        }
+    }
+
+    fn push_shard(&mut self, job: ShardJob, key: u64, weight: u32) {
+        match self.lanes.iter_mut().find(|l| l.key == key) {
+            Some(lane) => {
+                // latest weight wins — a session's weight is fixed at
+                // create, so this only matters for lane-0 CLI traffic
+                lane.weight = weight.max(1);
+                lane.jobs.push_back(job);
+            }
+            None => self.lanes.push(SessLane {
+                key,
+                weight: weight.max(1),
+                deficit: 0,
+                jobs: VecDeque::from([job]),
+            }),
+        }
+    }
+}
+
 struct Shared {
-    queue: Mutex<(VecDeque<Job>, bool)>,
+    queue: Mutex<QueueState>,
     available: Condvar,
 }
 
 impl Shared {
     /// Lock the queue, surviving poisoning.  The critical sections in
-    /// this module only touch the `VecDeque` and the closed flag —
-    /// neither runs user code — so a poisoned mutex can only mean a
-    /// panic *between* queue operations on a thread that held the
-    /// guard across them (we never do).  Recovering the inner state is
-    /// strictly better than cascading the panic into every thread that
-    /// shares the pool.
-    fn lock_queue(&self) -> MutexGuard<'_, (VecDeque<Job>, bool)> {
+    /// this module only touch the queue state — none runs user code —
+    /// so a poisoned mutex can only mean a panic *between* queue
+    /// operations on a thread that held the guard across them (we never
+    /// do).  Recovering the inner state is strictly better than
+    /// cascading the panic into every thread that shares the pool.
+    fn lock_queue(&self) -> MutexGuard<'_, QueueState> {
         self.queue.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    fn push(&self, job: Job) {
+    fn push_task(&self, task: Task) {
         let mut q = self.lock_queue();
-        q.0.push_back(job);
+        q.tasks.push_back(task);
         drop(q);
         self.available.notify_one();
     }
 
-    /// Blocks until a job is available; `None` on shutdown.
+    fn push_shard(&self, job: ShardJob, key: u64, weight: u32) {
+        let mut q = self.lock_queue();
+        q.push_shard(job, key, weight);
+        drop(q);
+        self.available.notify_one();
+    }
+
+    /// Blocks until a job is available; `None` on shutdown.  Tasks
+    /// first, then the DRR shard schedule.
     fn pop(&self) -> Option<Job> {
         let mut q = self.lock_queue();
         loop {
-            if let Some(job) = q.0.pop_front() {
-                return Some(job);
+            if let Some(t) = q.tasks.pop_front() {
+                return Some(Job::Task(t));
             }
-            if q.1 {
+            if let Some(s) = q.pop_shard() {
+                return Some(Job::Shard(s));
+            }
+            if q.closed {
                 return None;
             }
             q = self
@@ -170,29 +308,22 @@ impl Shared {
     }
 
     fn close(&self) {
-        self.lock_queue().1 = true;
+        self.lock_queue().closed = true;
         self.available.notify_all();
     }
 
     fn closed(&self) -> bool {
-        self.lock_queue().1
+        self.lock_queue().closed
     }
 
-    /// Pop the first *shard* job still waiting in the queue, skipping
-    /// over generic tasks — the work-stealing dispatcher must never
+    /// Pop the next *shard* job by the same DRR schedule workers use,
+    /// skipping generic tasks — the work-stealing dispatcher must never
     /// block itself on an arbitrary long-running chain task, but any
-    /// unclaimed shard (its own or another dispatcher's) is a bounded,
+    /// unclaimed shard (its own or another session's) is a bounded,
     /// self-contained unit it can safely run inline.  Returns `None`
     /// when no shard is queued.
     fn steal_shard(&self) -> Option<ShardJob> {
-        let mut q = self.lock_queue();
-        let pos = q.0.iter().position(|j| matches!(j, Job::Shard(_)))?;
-        match q.0.remove(pos) {
-            Some(Job::Shard(s)) => Some(s),
-            // invariant: position() just found a Job::Shard at `pos`
-            // under the same lock, and remove(pos) returns that element
-            _ => unreachable!("position() found a shard at this index"),
-        }
+        self.lock_queue().pop_shard()
     }
 }
 
@@ -217,7 +348,7 @@ impl WorkerPool {
     pub fn new(threads: usize) -> Arc<WorkerPool> {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new((VecDeque::new(), false)),
+            queue: Mutex::new(QueueState::default()),
             available: Condvar::new(),
         });
         let handles = (0..threads)
@@ -246,11 +377,13 @@ impl WorkerPool {
 
     /// Enqueue a generic task (the multi-chain driver's entry point).
     pub fn submit(&self, task: Task) {
-        self.shared.push(Job::Task(task));
+        self.shared.push_task(task);
     }
 
-    fn submit_shard(&self, job: ShardJob) {
-        self.shared.push(Job::Shard(job));
+    /// Enqueue one shard onto its session's DRR lane (`key` 0 /
+    /// `weight` 1 for non-session dispatchers — the CLI path).
+    fn submit_shard(&self, job: ShardJob, key: u64, weight: u32) {
+        self.shared.push_shard(job, key, weight);
     }
 
     /// Spawn one replacement worker onto the shared queue — the
@@ -448,6 +581,12 @@ pub struct ShardScorer {
     /// `--shard-timeout-ms`) so concurrent serve sessions can pick
     /// their own recovery latency without fighting over one env var.
     pub timeout: Duration,
+    /// Fair-scheduling lane this scorer's shards queue on (a serve
+    /// session id; 0 = the shared CLI lane).
+    pub session_key: u64,
+    /// DRR weight of the lane (≥ 1; only meaningful with a non-zero
+    /// `session_key` — lane 0 traffic all shares one weight).
+    pub session_weight: u32,
     /// Inline scratch for the non-dispatched and stolen-shard cases.
     scratch: ShardScratch,
 }
@@ -477,6 +616,8 @@ impl ShardScorer {
             fallback_panics: 0,
             requeued_shards: 0,
             timeout: shard_timeout(),
+            session_key: 0,
+            session_weight: 1,
             scratch: ShardScratch::default(),
         }
     }
@@ -563,13 +704,17 @@ impl ShardScorer {
         let mut lo = 0usize;
         while lo < w {
             let hi = (lo + chunk).min(w);
-            self.pool.submit_shard(ShardJob {
-                batch: batch.clone(),
-                lo,
-                hi,
-                shard: sent,
-                done: tx.clone(),
-            });
+            self.pool.submit_shard(
+                ShardJob {
+                    batch: batch.clone(),
+                    lo,
+                    hi,
+                    shard: sent,
+                    done: tx.clone(),
+                },
+                self.session_key,
+                self.session_weight,
+            );
             sent += 1;
             lo = hi;
         }
@@ -751,35 +896,105 @@ mod tests {
         assert!(resolve_threads(0) >= 1);
     }
 
+    fn test_shard(shard: usize, sections: usize, done: Sender<(usize, Vec<f64>)>) -> ShardJob {
+        ShardJob {
+            batch: ShardBatch::Packed(Arc::new(PackedBatch::default())),
+            lo: 0,
+            hi: sections,
+            shard,
+            done,
+        }
+    }
+
     #[test]
     fn steal_shard_skips_tasks() {
-        // a queue holding [Task, Shard] must hand the shard to a
+        // a queue holding [task, shard] must hand the shard to a
         // stealer and leave the task in place
         let shared = Shared {
-            queue: Mutex::new((VecDeque::new(), false)),
+            queue: Mutex::new(QueueState::default()),
             available: Condvar::new(),
         };
         assert!(shared.steal_shard().is_none(), "empty queue stole something");
-        shared.push(Job::Task(Box::new(|| {})));
+        shared.push_task(Box::new(|| {}));
         let (tx, rx) = channel();
-        shared.push(Job::Shard(ShardJob {
-            batch: ShardBatch::Packed(Arc::new(PackedBatch::default())),
-            lo: 0,
-            hi: 0,
-            shard: 0,
-            done: tx,
-        }));
+        shared.push_shard(test_shard(0, 0, tx), 7, 1);
         let job = shared.steal_shard().expect("shard not stolen past the task");
         assert_eq!(job.shard, 0);
         run_shard_job(job, &mut ShardScratch::default());
         let (shard, out) = rx.recv().unwrap();
         assert_eq!((shard, out.len()), (0, 0));
-        // the task is still queued, the shard is gone
+        // the task is still queued, the shard lane is drained
         {
-            let mut q = shared.queue.lock().unwrap();
-            assert_eq!(q.0.len(), 1);
-            assert!(matches!(q.0.pop_front(), Some(Job::Task(_))));
+            let mut q = shared.lock_queue();
+            assert_eq!(q.tasks.len(), 1);
+            assert!(q.lanes.is_empty(), "drained lanes retire");
+            let _ = q.tasks.pop_front();
         }
         assert!(shared.steal_shard().is_none());
+    }
+
+    #[test]
+    fn single_lane_degenerates_to_fifo() {
+        let mut q = QueueState::default();
+        let (tx, _rx) = channel();
+        for i in 0..6 {
+            // mixed sizes: FIFO within one lane must hold regardless
+            q.push_shard(test_shard(i, 100 + 700 * (i % 3), tx.clone()), 1, 1);
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop_shard()).map(|j| j.shard).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn drr_shares_throughput_by_weight() {
+        // two backlogged sessions with equal-cost jobs (1 quantum each)
+        // and weights 1:3 → popped throughput settles at 1:3
+        let mut q = QueueState::default();
+        let (tx, _rx) = channel();
+        for i in 0..16 {
+            q.push_shard(test_shard(i, QUANTUM as usize, tx.clone()), 1, 1);
+            q.push_shard(test_shard(i, QUANTUM as usize, tx.clone()), 2, 3);
+        }
+        let mut served = [0usize; 2];
+        for _ in 0..16 {
+            let job = q.pop_shard().expect("both lanes are backlogged");
+            // recover the lane from the job's shard tag parity-free:
+            // lane 1 pushed shards 0..16, lane 2 pushed shards 0..16 —
+            // count by which lane shrank instead
+            drop(job);
+            let l1 = q.lanes.iter().find(|l| l.key == 1).map_or(0, |l| l.jobs.len());
+            let l2 = q.lanes.iter().find(|l| l.key == 2).map_or(0, |l| l.jobs.len());
+            served[0] = 16 - l1;
+            served[1] = 16 - l2;
+        }
+        assert_eq!(
+            served[0] + served[1],
+            16,
+            "16 pops must serve 16 jobs"
+        );
+        assert_eq!(
+            served[1],
+            3 * served[0],
+            "weight-3 session gets 3x the weight-1 session's throughput \
+             (got {served:?})"
+        );
+    }
+
+    #[test]
+    fn tasks_serve_before_shards_and_close_drains() {
+        let shared = Shared {
+            queue: Mutex::new(QueueState::default()),
+            available: Condvar::new(),
+        };
+        let (tx, _rx) = channel();
+        shared.push_shard(test_shard(0, 10, tx), 1, 1);
+        shared.push_task(Box::new(|| {}));
+        shared.close();
+        assert!(
+            matches!(shared.pop(), Some(Job::Task(_))),
+            "tasks are chain drivers: they outrank queued shards"
+        );
+        assert!(matches!(shared.pop(), Some(Job::Shard(_))));
+        assert!(shared.pop().is_none(), "closed + empty = shutdown");
     }
 }

@@ -1,0 +1,590 @@
+//! Per-session write-ahead journal: the serve daemon's durability
+//! layer.
+//!
+//! PR 8/9 sessions kept their state in memory — durable only on
+//! graceful drain — so a daemon crash or SIGKILL silently discarded
+//! every live session's trace, PCG position, and appended
+//! observations, pushing an O(full-history) replay cost onto clients.
+//! The journal closes that hole: everything a session acknowledges is
+//! on disk *before* the acknowledgement, and `serve --recover` rebuilds
+//! every session from its journal so the recovered session's
+//! subsequent draw sequence is **bitwise identical** to the
+//! uninterrupted run — the same contract `tests/checkpoint.rs` pins
+//! for chains, now pinned across process death.
+//!
+//! # What is journaled, and when
+//!
+//! One file per session, `session<id>.journal` under `--state-dir`,
+//! holding three record kinds:
+//!
+//! - `create` — the session's fully-resolved creation parameters
+//!   (seed, program, inference program, watch list, budgets, weight),
+//!   written via temp-then-rename *before* the `create` RPC is
+//!   acknowledged;
+//! - `append` — one atomic record per acknowledged `append` RPC
+//!   carrying **both** the appended source and the fresh post-append
+//!   [`ChainCheckpoint`](crate::coordinator::checkpoint::ChainCheckpoint)
+//!   text, so no cross-record invariant exists: either the whole
+//!   append is durable or none of it;
+//! - `ckpt` — a checkpoint of the session's stochastic state + RNG
+//!   position, written every `--journal-every` draws *and* at the end
+//!   of every completed `step` before its reply, so the last
+//!   acknowledged draw count is always covered by a durable
+//!   checkpoint.
+//!
+//! # Record framing and torn tails
+//!
+//! Appends cannot use temp-then-rename (rewriting the file per draw
+//! would be O(history)), so each record carries its own checksum:
+//!
+//! ```text
+//! rec <kind> <payload-byte-len>\n
+//! <payload bytes>\n
+//! sum <fnv1a:16-hex>\n
+//! ```
+//!
+//! The checksum covers the header line and the payload (the same
+//! FNV-1a the checkpoint format uses).  A crash mid-append leaves a
+//! *torn tail*: a final frame that is truncated or fails its checksum.
+//! [`read_journal`] detects it, reports the state of the valid prefix,
+//! and physically truncates the file at the last valid record boundary
+//! — the torn operation was never acknowledged, so dropping it
+//! restores exactly the last acknowledged state.  A checksum-valid
+//! record with an unparsable payload is *corruption*, not a torn tail,
+//! and is a hard error: never silently start over on a file that
+//! should have parsed.
+//!
+//! # Compaction
+//!
+//! `ckpt` records accrete, so the journal is rewritten (temp, then
+//! rename — the same atomic discipline as `chain<k>.ckpt`) down to
+//! `create` + append sources + the latest checkpoint whenever it
+//! outgrows its session's journal-byte budget; a session whose
+//! *compacted* journal still exceeds the budget is out of budget for
+//! real and gets `BudgetExceeded`.
+
+use crate::coordinator::checkpoint::fnv1a;
+use crate::runtime::faults;
+use crate::serve::protocol::Json;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Record kinds (the `<kind>` token of a frame header).
+pub const KIND_CREATE: &str = "create";
+pub const KIND_APPEND: &str = "append";
+pub const KIND_CKPT: &str = "ckpt";
+
+/// One session's open journal handle.  All writes go through
+/// [`append_record`](Self::append_record); a write failure (real IO
+/// error or an injected `torn-write`/`kill-recover` fault) marks the
+/// handle dead — the caller must treat the session as failed, because
+/// durability can no longer be guaranteed.
+pub struct Journal {
+    path: PathBuf,
+    file: Option<File>,
+    bytes: u64,
+    dead: bool,
+}
+
+impl std::fmt::Debug for Journal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Journal")
+            .field("path", &self.path)
+            .field("bytes", &self.bytes)
+            .field("dead", &self.dead)
+            .finish()
+    }
+}
+
+/// Canonical journal location for session `id` under `dir`.
+pub fn journal_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("session{id}.journal"))
+}
+
+/// Encode one framed record (header + payload + checksum line).
+fn encode_record(kind: &str, payload: &[u8]) -> Vec<u8> {
+    let header = format!("rec {kind} {}\n", payload.len());
+    let mut sum_input = Vec::with_capacity(header.len() + payload.len());
+    sum_input.extend_from_slice(header.as_bytes());
+    sum_input.extend_from_slice(payload);
+    let sum = fnv1a(&sum_input);
+    let mut out = sum_input;
+    out.extend_from_slice(format!("\nsum {sum:016x}\n").as_bytes());
+    out
+}
+
+impl Journal {
+    /// Create session `id`'s journal under `dir` with its `create`
+    /// record already durable: the full file (one record) is written to
+    /// a temp name and renamed into place, so a crash at any point
+    /// leaves either no journal (the create was never acknowledged) or
+    /// a complete one — never a torn create.
+    pub fn create(dir: &Path, id: u64, create_payload: &Json) -> Result<Journal, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("journal: create_dir {}: {e}", dir.display()))?;
+        let path = journal_path(dir, id);
+        let rec = encode_record(KIND_CREATE, create_payload.encode().as_bytes());
+        let tmp = path.with_extension("journal.tmp");
+        std::fs::write(&tmp, &rec).map_err(|e| format!("journal: write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("journal: rename {}: {e}", path.display()))?;
+        let file = OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .map_err(|e| format!("journal: open {}: {e}", path.display()))?;
+        Ok(Journal {
+            path,
+            file: Some(file),
+            bytes: rec.len() as u64,
+            dead: false,
+        })
+    }
+
+    /// Reopen an existing journal for appending (the recovery path:
+    /// [`read_journal`] already truncated any torn tail away).
+    pub fn open_append(path: &Path) -> Result<Journal, String> {
+        let bytes = std::fs::metadata(path)
+            .map_err(|e| format!("journal: stat {}: {e}", path.display()))?
+            .len();
+        let file = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("journal: open {}: {e}", path.display()))?;
+        Ok(Journal {
+            path: path.to_path_buf(),
+            file: Some(file),
+            bytes,
+            dead: false,
+        })
+    }
+
+    /// Current on-disk size in bytes (the journal-byte budget's meter).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Whether a write failure already killed this handle.
+    pub fn dead(&self) -> bool {
+        self.dead
+    }
+
+    /// Append one framed record and flush it.  The record is durable
+    /// when this returns `Ok` — callers acknowledge the corresponding
+    /// operation only after that.  On failure (IO error, or the
+    /// `torn-write@k` / `kill-recover@k` faults simulating process
+    /// death mid-write / just-before-write) the handle goes dead and
+    /// the operation must not be acknowledged.
+    pub fn append_record(&mut self, kind: &str, payload: &[u8]) -> Result<(), String> {
+        if self.dead {
+            return Err("journal: handle is dead after a failed write".into());
+        }
+        let rec = encode_record(kind, payload);
+        if faults::journal_kill_now() {
+            // SIGKILL between the state change and the journal append:
+            // nothing lands; the journal is clean but stale
+            self.dead = true;
+            self.file = None;
+            return Err("journal: injected kill before record write".into());
+        }
+        if faults::journal_torn_write_now() {
+            // death mid-write(2): a prefix of the frame lands, then the
+            // handle dies — recovery must drop this tail
+            let half = &rec[..rec.len() / 2];
+            if let Some(f) = self.file.as_mut() {
+                let _ = f.write_all(half);
+                let _ = f.flush();
+            }
+            self.bytes += (rec.len() / 2) as u64;
+            self.dead = true;
+            self.file = None;
+            return Err("journal: injected torn write".into());
+        }
+        let f = self
+            .file
+            .as_mut()
+            .ok_or_else(|| "journal: no open file".to_string())?;
+        if let Err(e) = f.write_all(&rec).and_then(|()| f.flush()) {
+            self.dead = true;
+            self.file = None;
+            return Err(format!("journal: write {}: {e}", self.path.display()));
+        }
+        self.bytes += rec.len() as u64;
+        Ok(())
+    }
+
+    /// Rewrite the journal down to `create` + append sources + the
+    /// latest checkpoint, atomically (temp, then rename).  State is
+    /// unchanged — a recovery from the compacted journal rebuilds the
+    /// same session — only the accreted per-draw `ckpt` records are
+    /// dropped.
+    pub fn compact(
+        &mut self,
+        create_payload: &Json,
+        appends: &[String],
+        ckpt: Option<&str>,
+    ) -> Result<(), String> {
+        if self.dead {
+            return Err("journal: handle is dead after a failed write".into());
+        }
+        let mut out = encode_record(KIND_CREATE, create_payload.encode().as_bytes());
+        for src in appends {
+            let payload = Json::Obj(vec![
+                ("src".into(), Json::Str(src.clone())),
+                // the checkpoint that rode along with this append is
+                // superseded by the final ckpt record below
+                ("ckpt".into(), Json::Str(String::new())),
+            ]);
+            out.extend_from_slice(&encode_record(KIND_APPEND, payload.encode().as_bytes()));
+        }
+        if let Some(ck) = ckpt {
+            out.extend_from_slice(&encode_record(KIND_CKPT, ck.as_bytes()));
+        }
+        let tmp = self.path.with_extension("journal.tmp");
+        std::fs::write(&tmp, &out).map_err(|e| format!("journal: write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path)
+            .map_err(|e| format!("journal: rename {}: {e}", self.path.display()))?;
+        let file = OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| format!("journal: open {}: {e}", self.path.display()))?;
+        self.file = Some(file);
+        self.bytes = out.len() as u64;
+        Ok(())
+    }
+}
+
+/// Everything a journal pins about its session: the recovery input.
+#[derive(Debug)]
+pub struct JournalState {
+    /// The `create` record's parameter object.
+    pub create: Json,
+    /// Appended program sources, in acknowledgement order.
+    pub appends: Vec<String>,
+    /// The latest checkpoint text (from an `append` or `ckpt` record);
+    /// `None` when no draw/append was ever acknowledged — the draw-0
+    /// program replay is already the correct state.
+    pub ckpt: Option<String>,
+    /// Whether a torn tail was detected (and truncated away).
+    pub torn: bool,
+    /// Size of the valid prefix — the file's size after truncation.
+    pub valid_bytes: u64,
+}
+
+/// Read (and repair) one session journal.  Scans records in order,
+/// verifying each frame's checksum; the first truncated or
+/// checksum-failing frame marks a torn tail, which is dropped by
+/// physically truncating the file at the last valid record boundary.
+/// A checksum-valid record whose payload fails to parse, or a journal
+/// with no `create` record, is corruption — a hard error.
+pub fn read_journal(path: &Path) -> Result<JournalState, String> {
+    let data =
+        std::fs::read(path).map_err(|e| format!("journal: read {}: {e}", path.display()))?;
+    let mut pos = 0usize;
+    let mut valid = 0usize;
+    let mut torn = false;
+    let mut create: Option<Json> = None;
+    let mut appends: Vec<String> = Vec::new();
+    let mut ckpt: Option<String> = None;
+    while pos < data.len() {
+        let Some((kind, payload, end)) = next_record(&data, pos) else {
+            torn = true;
+            break;
+        };
+        match kind.as_str() {
+            KIND_CREATE => {
+                let js = Json::parse(
+                    std::str::from_utf8(payload)
+                        .map_err(|_| corrupt(path, "create payload is not UTF-8"))?,
+                )
+                .map_err(|e| corrupt(path, &format!("create payload: {e}")))?;
+                create = Some(js);
+            }
+            KIND_APPEND => {
+                let js = Json::parse(
+                    std::str::from_utf8(payload)
+                        .map_err(|_| corrupt(path, "append payload is not UTF-8"))?,
+                )
+                .map_err(|e| corrupt(path, &format!("append payload: {e}")))?;
+                let src = js
+                    .get("src")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| corrupt(path, "append payload missing src"))?;
+                appends.push(src.to_string());
+                if let Some(ck) = js.get("ckpt").and_then(Json::as_str) {
+                    if !ck.is_empty() {
+                        ckpt = Some(ck.to_string());
+                    }
+                }
+            }
+            KIND_CKPT => {
+                ckpt = Some(
+                    std::str::from_utf8(payload)
+                        .map_err(|_| corrupt(path, "ckpt payload is not UTF-8"))?
+                        .to_string(),
+                );
+            }
+            other => return Err(corrupt(path, &format!("unknown record kind {other:?}"))),
+        }
+        pos = end;
+        valid = end;
+    }
+    if torn && valid < data.len() {
+        // drop the torn tail at the last valid record boundary — the
+        // torn operation was never acknowledged, so the truncated
+        // journal is exactly the last acknowledged state
+        let f = OpenOptions::new()
+            .write(true)
+            .open(path)
+            .map_err(|e| format!("journal: open {}: {e}", path.display()))?;
+        f.set_len(valid as u64)
+            .map_err(|e| format!("journal: truncate {}: {e}", path.display()))?;
+        eprintln!(
+            "[journal] {}: torn tail ({} byte(s)) dropped at the last valid record",
+            path.display(),
+            data.len() - valid
+        );
+    }
+    let create = create.ok_or_else(|| corrupt(path, "no create record"))?;
+    Ok(JournalState {
+        create,
+        appends,
+        ckpt,
+        torn,
+        valid_bytes: valid as u64,
+    })
+}
+
+fn corrupt(path: &Path, what: &str) -> String {
+    format!("journal: {} is corrupt ({what})", path.display())
+}
+
+/// Parse one frame at `pos`.  `None` = torn (truncated frame, bad
+/// header syntax, or checksum mismatch — everything a death mid-write
+/// can produce); `Some((kind, payload, end))` on a valid frame.
+#[allow(clippy::type_complexity)]
+fn next_record(data: &[u8], pos: usize) -> Option<(String, &[u8], usize)> {
+    let header_end = data[pos..].iter().position(|&b| b == b'\n')? + pos;
+    let header = std::str::from_utf8(&data[pos..header_end]).ok()?;
+    let mut parts = header.split(' ');
+    if parts.next() != Some("rec") {
+        return None;
+    }
+    let kind = parts.next()?.to_string();
+    let len: usize = parts.next()?.parse().ok()?;
+    if parts.next().is_some() {
+        return None;
+    }
+    let payload_start = header_end + 1;
+    let payload_end = payload_start.checked_add(len)?;
+    // payload + '\n' + "sum " + 16 hex + '\n'
+    let sum_line_start = payload_end.checked_add(1)?;
+    let end = sum_line_start.checked_add(4 + 16 + 1)?;
+    if end > data.len() {
+        return None;
+    }
+    if data[payload_end] != b'\n' || data[end - 1] != b'\n' {
+        return None;
+    }
+    let sum_line = std::str::from_utf8(&data[sum_line_start..end - 1]).ok()?;
+    let want = u64::from_str_radix(sum_line.strip_prefix("sum ")?, 16).ok()?;
+    let got = fnv1a(&data[pos..payload_end]);
+    if got != want {
+        return None;
+    }
+    Some((kind, &data[payload_start..payload_end], end))
+}
+
+/// Enumerate the session journals under a state dir as
+/// `(session id, path)` pairs, in ascending id order.  Non-journal
+/// files are ignored (the state dir may share space with temp files).
+pub fn scan_state_dir(dir: &Path) -> Result<Vec<(u64, PathBuf)>, String> {
+    let rd = match std::fs::read_dir(dir) {
+        Ok(rd) => rd,
+        // nothing to recover is not an error
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(format!("journal: read_dir {}: {e}", dir.display())),
+    };
+    let mut out = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("journal: read_dir {}: {e}", dir.display()))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(id) = name
+            .strip_prefix("session")
+            .and_then(|r| r.strip_suffix(".journal"))
+            .and_then(|id| id.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        out.push((id, entry.path()));
+    }
+    out.sort_by_key(|(id, _)| *id);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "subppl-journal-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn params() -> Json {
+        Json::Obj(vec![
+            ("seed".into(), Json::Num(7.0)),
+            ("program".into(), Json::Str("[assume x (normal 0 1)]".into())),
+        ])
+    }
+
+    #[test]
+    fn journal_roundtrips_records() {
+        let dir = tmp_dir("roundtrip");
+        let mut j = Journal::create(&dir, 3, &params()).unwrap();
+        assert!(!j.dead());
+        let append = Json::Obj(vec![
+            ("src".into(), Json::Str("[observe (normal x 1) 0.5]".into())),
+            ("ckpt".into(), Json::Str("ck-after-append\nline2".into())),
+        ]);
+        j.append_record(KIND_APPEND, append.encode().as_bytes())
+            .unwrap();
+        j.append_record(KIND_CKPT, b"ck-draw-10\nline2").unwrap();
+        j.append_record(KIND_CKPT, b"ck-draw-20\nline2").unwrap();
+        let expect_bytes = j.bytes();
+
+        let st = read_journal(&journal_path(&dir, 3)).unwrap();
+        assert!(!st.torn);
+        assert_eq!(st.valid_bytes, expect_bytes);
+        assert_eq!(
+            st.create.get("seed").and_then(Json::as_u64),
+            Some(7),
+            "create params survive"
+        );
+        assert_eq!(st.appends, vec!["[observe (normal x 1) 0.5]".to_string()]);
+        assert_eq!(st.ckpt.as_deref(), Some("ck-draw-20\nline2"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_detected_and_truncated() {
+        let dir = tmp_dir("torn");
+        let mut j = Journal::create(&dir, 1, &params()).unwrap();
+        j.append_record(KIND_CKPT, b"ck-draw-5").unwrap();
+        let good = j.bytes();
+        drop(j);
+        let path = journal_path(&dir, 1);
+        // simulate death mid-write: a prefix of a would-be record
+        let torn = &encode_record(KIND_CKPT, b"ck-draw-6-never-acked")[..17];
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(torn).unwrap();
+        drop(f);
+
+        let st = read_journal(&path).unwrap();
+        assert!(st.torn, "torn tail must be flagged");
+        assert_eq!(st.ckpt.as_deref(), Some("ck-draw-5"));
+        assert_eq!(st.valid_bytes, good);
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            good,
+            "file physically truncated at the last valid record"
+        );
+        // after repair the journal reads clean and is appendable again
+        let st2 = read_journal(&path).unwrap();
+        assert!(!st2.torn);
+        let mut j2 = Journal::open_append(&path).unwrap();
+        j2.append_record(KIND_CKPT, b"ck-draw-6-retry").unwrap();
+        assert_eq!(
+            read_journal(&path).unwrap().ckpt.as_deref(),
+            Some("ck-draw-6-retry")
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_checksum_tail_is_dropped_not_loaded() {
+        let dir = tmp_dir("sum");
+        let mut j = Journal::create(&dir, 2, &params()).unwrap();
+        j.append_record(KIND_CKPT, b"ck-good").unwrap();
+        let good = j.bytes();
+        j.append_record(KIND_CKPT, b"ck-to-corrupt").unwrap();
+        drop(j);
+        let path = journal_path(&dir, 2);
+        // flip one payload byte of the final record: its checksum fails,
+        // so the scan treats it as a torn tail
+        let mut data = std::fs::read(&path).unwrap();
+        let at = good as usize + 20;
+        data[at] ^= 0x01;
+        std::fs::write(&path, &data).unwrap();
+        let st = read_journal(&path).unwrap();
+        assert!(st.torn);
+        assert_eq!(st.ckpt.as_deref(), Some("ck-good"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_preserves_state_and_shrinks() {
+        let dir = tmp_dir("compact");
+        let mut j = Journal::create(&dir, 9, &params()).unwrap();
+        let append = Json::Obj(vec![
+            ("src".into(), Json::Str("[observe (normal x 1) 2]".into())),
+            ("ckpt".into(), Json::Str("ck-append".into())),
+        ]);
+        j.append_record(KIND_APPEND, append.encode().as_bytes())
+            .unwrap();
+        for i in 0..50 {
+            j.append_record(KIND_CKPT, format!("ck-draw-{i}").as_bytes())
+                .unwrap();
+        }
+        let fat = j.bytes();
+        j.compact(
+            &params(),
+            &["[observe (normal x 1) 2]".to_string()],
+            Some("ck-draw-49"),
+        )
+        .unwrap();
+        assert!(j.bytes() < fat, "compaction must shrink the journal");
+        let st = read_journal(&journal_path(&dir, 9)).unwrap();
+        assert!(!st.torn);
+        assert_eq!(st.appends, vec!["[observe (normal x 1) 2]".to_string()]);
+        assert_eq!(st.ckpt.as_deref(), Some("ck-draw-49"));
+        // and the compacted journal is still appendable
+        j.append_record(KIND_CKPT, b"ck-draw-50").unwrap();
+        assert_eq!(
+            read_journal(&journal_path(&dir, 9)).unwrap().ckpt.as_deref(),
+            Some("ck-draw-50")
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_finds_session_journals_in_id_order() {
+        let dir = tmp_dir("scan");
+        for id in [12u64, 3, 7] {
+            Journal::create(&dir, id, &params()).unwrap();
+        }
+        std::fs::write(dir.join("not-a-journal.txt"), b"x").unwrap();
+        std::fs::write(dir.join("sessionX.journal"), b"x").unwrap();
+        let found = scan_state_dir(&dir).unwrap();
+        let ids: Vec<u64> = found.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![3, 7, 12]);
+        // a missing dir is an empty recovery set, not an error
+        assert!(scan_state_dir(&dir.join("nope")).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_create_record_is_corruption() {
+        let dir = tmp_dir("nocreate");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = journal_path(&dir, 4);
+        std::fs::write(&path, encode_record(KIND_CKPT, b"ck")).unwrap();
+        assert!(read_journal(&path).unwrap_err().contains("no create record"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -11,14 +11,22 @@
 //! - [`server`] — session registry with admission control, bounded
 //!   per-session command queues, request dispatch, subscriber
 //!   streaming, and graceful drain.
+//! - [`journal`] — per-session write-ahead journal under `--state-dir`:
+//!   acknowledged creates/appends/checkpoints are durable before the
+//!   reply, and `serve --recover` rebuilds sessions bitwise-identically
+//!   after a crash (torn tails detected and dropped).
 //!
-//! See the README "Serving inference" section for the wire protocol
-//! and semantics.
+//! See the README "Serving inference" and "Crash recovery & durability"
+//! sections for the wire protocol and semantics.
 
+pub mod journal;
 pub mod protocol;
 pub mod server;
 pub mod session;
 
+pub use journal::{journal_path, read_journal, scan_state_dir, Journal, JournalState};
 pub use protocol::{CreateParams, ErrCode, Fault, Json, Method, Request};
 pub use server::{serve, serve_with, DrainReport, ServeCfg, Server, SessionCmd};
-pub use session::{session_rng, Session, SessionCfg, StepReport, StopReason, SESSION_STREAM_BASE};
+pub use session::{
+    session_rng, AppendErr, Session, SessionCfg, StepReport, StopReason, SESSION_STREAM_BASE,
+};

@@ -19,9 +19,10 @@
 //! ```
 //!
 //! Error codes are a closed set ([`ErrCode`]) so clients can switch on
-//! them: `Overloaded` / `Draining` carry `retry_after_ms`, the rest are
-//! terminal for the request (`BadRequest`, `NotFound`, `Deadline`) or
-//! the session (`Expired`, `Failed`, `Internal`).  A step that makes
+//! them: `Overloaded` / `Draining` (and queue-budget `BudgetExceeded`)
+//! carry `retry_after_ms`, the rest are terminal for the request
+//! (`BadRequest`, `NotFound`, `Deadline`) or the session (`Expired`,
+//! `Failed`, trace/journal `BudgetExceeded`, `Internal`).  A step that makes
 //! partial progress before a deadline/cancel lands is NOT an error: it
 //! replies with an ok frame whose `stopped` field names the reason
 //! (`"deadline"` / `"cancelled"` / `"expired"`); the error codes cover
@@ -389,6 +390,11 @@ pub enum ErrCode {
     BadRequest,
     /// The session's model errored or exhausted its restart budget.
     Failed,
+    /// The session hit one of its resource budgets (trace nodes,
+    /// journal bytes, or queued commands).  Queue-budget rejections are
+    /// retryable and carry `retry_after_ms`; trace/journal ceilings are
+    /// permanent for the session but degrade only that session.
+    BudgetExceeded,
     /// Server-side invariant violation (session thread gone, etc).
     Internal,
 }
@@ -403,6 +409,7 @@ impl ErrCode {
             ErrCode::Deadline => "Deadline",
             ErrCode::BadRequest => "BadRequest",
             ErrCode::Failed => "Failed",
+            ErrCode::BudgetExceeded => "BudgetExceeded",
             ErrCode::Internal => "Internal",
         }
     }
@@ -457,6 +464,23 @@ pub struct CreateParams {
     pub deadline_ms: u64,
     /// Cross-draw convergence snapshot cadence (0 = no monitor).
     pub monitor_every: usize,
+    /// Fair-scheduling weight on the shared shard pool (deficit
+    /// round-robin quanta per visit; 0 is normalized to 1).
+    pub weight: u32,
+    /// Trace-size budget: appends that would grow the trace past this
+    /// many live nodes are refused with `BudgetExceeded` (0 = server
+    /// default / uncapped).
+    pub max_trace_nodes: u64,
+    /// Journal-byte budget: once the session's *compacted* write-ahead
+    /// journal exceeds this, the session stops with `"budget"` and
+    /// further steps fail with `BudgetExceeded` (0 = server default /
+    /// uncapped).
+    pub max_journal_bytes: u64,
+    /// Per-session command-queue depth override (0 = server default).
+    /// A full queue on a session with its own cap answers
+    /// `BudgetExceeded` instead of `Overloaded` — the tenant, not the
+    /// server, is over its ceiling.
+    pub queue_cap: u64,
 }
 
 /// One parsed request frame.
@@ -561,6 +585,10 @@ impl Request {
                     },
                     deadline_ms: u64_field("deadline_ms", 0),
                     monitor_every: u64_field("monitor_every", 0) as usize,
+                    weight: u64_field("weight", 1).clamp(1, u32::MAX as u64) as u32,
+                    max_trace_nodes: u64_field("max_trace_nodes", 0),
+                    max_journal_bytes: u64_field("max_journal_bytes", 0),
+                    queue_cap: u64_field("queue_cap", 0),
                 })
             }
             "step" => Method::Step {
@@ -663,7 +691,30 @@ mod tests {
                 assert_eq!(c.watch, vec!["x"]);
                 assert_eq!(c.monitor_every, 10);
                 assert!(c.infer.is_none());
+                assert_eq!(c.weight, 1, "weight defaults to 1");
+                assert_eq!(c.max_trace_nodes, 0);
+                assert_eq!(c.max_journal_bytes, 0);
+                assert_eq!(c.queue_cap, 0);
             }
+            m => panic!("{m:?}"),
+        }
+        let r = Request::parse(
+            r#"{"id":2,"method":"create","params":{"program":"x","weight":8,"max_trace_nodes":5000,"max_journal_bytes":65536,"queue_cap":2}}"#,
+        )
+        .unwrap();
+        match r.method {
+            Method::Create(c) => {
+                assert_eq!(c.weight, 8);
+                assert_eq!(c.max_trace_nodes, 5000);
+                assert_eq!(c.max_journal_bytes, 65536);
+                assert_eq!(c.queue_cap, 2);
+            }
+            m => panic!("{m:?}"),
+        }
+        let r = Request::parse(r#"{"id":2,"method":"create","params":{"program":"x","weight":0}}"#)
+            .unwrap();
+        match r.method {
+            Method::Create(c) => assert_eq!(c.weight, 1, "weight 0 is normalized to 1"),
             m => panic!("{m:?}"),
         }
         let r = Request::parse(
@@ -703,5 +754,7 @@ mod tests {
             r#"{"id":9,"error":{"code":"Overloaded","message":"registry full","retry_after_ms":250}}"#
         );
         assert!(!ok.contains('\n') && !err.contains('\n'));
+        let budget = err_frame(2, &Fault::new(ErrCode::BudgetExceeded, "journal over cap"));
+        assert!(budget.contains(r#""code":"BudgetExceeded""#));
     }
 }

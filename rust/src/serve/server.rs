@@ -28,13 +28,24 @@
 //!   flag, closes every command queue, and joins session threads
 //!   within `drain_timeout`; each session writes a final checkpoint on
 //!   the way out when a checkpoint dir is configured.
+//! - **frame cap**: a request line longer than `--max-frame-bytes`
+//!   gets one `BadRequest` frame and a closed connection, before the
+//!   bytes are buffered without bound.
+//! - **resource budgets**: per-session ceilings from the create params
+//!   (`max_trace_nodes`, `max_journal_bytes`, `queue_cap`) surface as
+//!   `BudgetExceeded` on exactly that session; neighbors are untouched.
+//! - **durability**: with `--state-dir`, every acknowledged create /
+//!   append / step is journaled before the reply, and `--recover`
+//!   rebuilds the registry bitwise-identically on restart (see the
+//!   [`journal`](crate::serve::journal) module).
 
+use crate::serve::journal::{read_journal, scan_state_dir};
 use crate::serve::protocol::{
     err_frame, ok_frame, CreateParams, ErrCode, Fault, Json, Method, Request,
 };
-use crate::serve::session::{Session, SessionCfg, StepReport};
+use crate::serve::session::{cfg_from_journal, AppendErr, Session, SessionCfg, StepReport};
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
@@ -70,6 +81,22 @@ pub struct ServeCfg {
     pub store_verify: Option<crate::trace::colstore::VerifyMode>,
     /// Let sessions shard scoring across the shared pool.
     pub use_pool: bool,
+    /// Per-session write-ahead journal root (None = no durability).
+    pub state_dir: Option<std::path::PathBuf>,
+    /// Rebuild sessions from `state_dir` journals before accepting.
+    pub recover: bool,
+    /// Hard cap on one request frame (bytes, newline included).
+    /// Oversized frames get `BadRequest` and a closed connection.
+    pub max_frame_bytes: usize,
+    /// Mid-step journal checkpoint cadence (0 = the session default,
+    /// [`DEFAULT_JOURNAL_EVERY`](crate::serve::session::DEFAULT_JOURNAL_EVERY)).
+    pub journal_every: usize,
+    /// Server-wide default trace-node budget for sessions that don't
+    /// set `max_trace_nodes` on create (0 = unbounded).
+    pub max_trace_nodes: usize,
+    /// Server-wide default journal-bytes budget for sessions that
+    /// don't set `max_journal_bytes` on create (0 = compact-only).
+    pub max_journal_bytes: u64,
 }
 
 impl Default for ServeCfg {
@@ -85,9 +112,20 @@ impl Default for ServeCfg {
             shard_timeout_ms: 0,
             store_verify: None,
             use_pool: true,
+            state_dir: None,
+            recover: false,
+            max_frame_bytes: 1 << 20,
+            journal_every: 0,
+            max_trace_nodes: 0,
+            max_journal_bytes: 0,
         }
     }
 }
+
+/// How a session comes to life on its thread: `Session::new` for a
+/// fresh create, `Session::recover` for a journal replay.  Boxed so
+/// both paths share one thread body (and one birth-report protocol).
+type SessionBuilder = Box<dyn FnOnce() -> Result<Session, String> + Send>;
 
 /// Commands a session thread serves, in arrival order.
 pub enum SessionCmd {
@@ -120,6 +158,10 @@ struct SessionHandle {
     /// Lifetime deadline for the reaper (the session enforces its own
     /// copy at draw boundaries).
     expires_at: Option<Instant>,
+    /// The session chose its own `queue_cap` on create, so a full
+    /// queue is *its* budget (`BudgetExceeded`), not server pressure
+    /// (`Overloaded`).
+    own_queue: bool,
 }
 
 /// The session registry plus in-flight `create` reservations, guarded
@@ -285,13 +327,47 @@ impl Server {
             min_parallel: 0,
             monitor_every: p.monitor_every,
             checkpoint_dir: self.cfg.checkpoint_dir.clone(),
+            weight: p.weight,
+            state_dir: self.cfg.state_dir.clone(),
+            journal_every: self.cfg.journal_every,
+            max_trace_nodes: if p.max_trace_nodes > 0 {
+                p.max_trace_nodes as usize
+            } else {
+                self.cfg.max_trace_nodes
+            },
+            max_journal_bytes: if p.max_journal_bytes > 0 {
+                p.max_journal_bytes
+            } else {
+                self.cfg.max_journal_bytes
+            },
+            queue_cap: p.queue_cap as usize,
         };
-        let (tx, rx) = sync_channel::<SessionCmd>(self.cfg.queue_cap.max(1));
+        let own_queue = scfg.queue_cap > 0;
+        let depth = if own_queue {
+            scfg.queue_cap
+        } else {
+            self.cfg.queue_cap
+        };
+        self.spawn_thread(id, depth, deadline, own_queue, Box::new(move || Session::new(scfg)))
+    }
+
+    /// Thread mechanics shared by fresh creates and journal recovery:
+    /// bounded command queue, named thread running the builder, birth
+    /// report waited on so build errors come back on *this* call.
+    fn spawn_thread(
+        self: &Arc<Self>,
+        id: u64,
+        queue_depth: usize,
+        deadline: Option<Duration>,
+        own_queue: bool,
+        build: SessionBuilder,
+    ) -> Result<(u64, SessionHandle), Fault> {
+        let (tx, rx) = sync_channel::<SessionCmd>(queue_depth.max(1));
         let (born_tx, born_rx) = sync_channel::<Result<Arc<AtomicBool>, String>>(1);
         let server = Arc::downgrade(self);
         let thread = std::thread::Builder::new()
             .name(format!("subppl-session-{id}"))
-            .spawn(move || session_thread(scfg, rx, born_tx, server))
+            .spawn(move || session_thread(build, rx, born_tx, server))
             .map_err(|e| Fault::new(ErrCode::Internal, format!("spawn: {e}")))?;
         let stop = match born_rx.recv() {
             Ok(Ok(stop)) => stop,
@@ -312,8 +388,66 @@ impl Server {
                 stop,
                 thread,
                 expires_at,
+                own_queue,
             },
         ))
+    }
+
+    /// Rebuild every journaled session from `cfg.state_dir` (the
+    /// `--recover` path), bitwise-identical to the uninterrupted run:
+    /// same `(seed, id)` RNG stream, journaled appends replayed in
+    /// order, the last durable checkpoint restored.  Torn journal
+    /// tails were already truncated by `read_journal`; a journal that
+    /// is corrupt *before* its last valid record fails the whole
+    /// recovery rather than silently dropping a tenant.  Returns the
+    /// number of sessions brought back; `next_id` is bumped past the
+    /// highest recovered id so new creates never collide.
+    pub fn recover_sessions(self: &Arc<Self>) -> Result<usize, String> {
+        let dir = self
+            .cfg
+            .state_dir
+            .clone()
+            .ok_or_else(|| "recovery requires --state-dir".to_string())?;
+        let ids = scan_state_dir(&dir)?;
+        let mut recovered = 0usize;
+        for (id, path) in ids {
+            let state = read_journal(&path)
+                .map_err(|e| format!("session {id} ({}): {e}", path.display()))?;
+            let mut scfg = cfg_from_journal(id, &state.create)?;
+            // server-local policy is not journaled: fill it from this
+            // server's flags.  Recovery grants a fresh lifetime window
+            // (the original create time did not survive the crash).
+            scfg.state_dir = Some(dir.clone());
+            scfg.journal_every = self.cfg.journal_every;
+            scfg.deadline = self.cfg.session_deadline;
+            scfg.max_restarts = 2;
+            scfg.use_pool = self.cfg.use_pool;
+            scfg.checkpoint_dir = self.cfg.checkpoint_dir.clone();
+            if scfg.shard_timeout_ms == 0 {
+                scfg.shard_timeout_ms = self.cfg.shard_timeout_ms;
+            }
+            if scfg.store_verify.is_none() {
+                scfg.store_verify = self.cfg.store_verify;
+            }
+            let own_queue = scfg.queue_cap > 0;
+            let depth = if own_queue {
+                scfg.queue_cap
+            } else {
+                self.cfg.queue_cap
+            };
+            let deadline = scfg.deadline;
+            let appends = state.appends.clone();
+            let ckpt = state.ckpt.clone();
+            let build: SessionBuilder =
+                Box::new(move || Session::recover(scfg, &appends, ckpt.as_deref()));
+            let (sid, handle) = self
+                .spawn_thread(id, depth, deadline, own_queue, build)
+                .map_err(|f| format!("session {id}: {}", f.message))?;
+            self.sessions.lock().unwrap().map.insert(sid, handle);
+            self.next_id.fetch_max(id + 1, Ordering::SeqCst);
+            recovered += 1;
+        }
+        Ok(recovered)
     }
 
     /// Enqueue one command on a session's bounded queue.
@@ -325,6 +459,14 @@ impl Server {
             .ok_or_else(|| Fault::new(ErrCode::NotFound, format!("no session {session}")))?;
         match h.tx.try_send(cmd) {
             Ok(()) => Ok(()),
+            // a full queue the session sized itself (create param
+            // `queue_cap`) is that tenant's own budget; a full
+            // server-default queue is ordinary backpressure
+            Err(TrySendError::Full(_)) if h.own_queue => Err(Fault {
+                code: ErrCode::BudgetExceeded,
+                message: format!("session {session} queued-command budget exhausted"),
+                retry_after_ms: Some(RETRY_AFTER_MS),
+            }),
             Err(TrySendError::Full(_)) => Err(Fault::overloaded(
                 format!("session {session} step queue full"),
                 RETRY_AFTER_MS,
@@ -503,15 +645,15 @@ fn step_json(r: StepReport) -> Json {
     Json::Obj(fields)
 }
 
-/// The session thread body: build, report birth, serve commands until
-/// the queue closes, checkpoint on the way out.
+/// The session thread body: build (fresh or recovered), report birth,
+/// serve commands until the queue closes, checkpoint on the way out.
 fn session_thread(
-    cfg: SessionCfg,
+    build: SessionBuilder,
     rx: Receiver<SessionCmd>,
     born: SyncSender<Result<Arc<AtomicBool>, String>>,
     server: std::sync::Weak<Server>,
 ) {
-    let mut sess = match Session::new(cfg) {
+    let mut sess = match build() {
         Ok(s) => {
             let _ = born.send(Ok(s.stop_flag()));
             s
@@ -531,14 +673,12 @@ fn session_thread(
                 let _ = reply.send(step_reply(&mut sess, n, deadline_at));
             }
             SessionCmd::Append { program, reply } => {
-                let res = sess.append(&program).map_err(|e| {
-                    // a parse error leaves the session live (BadRequest);
-                    // a mid-batch execute failure marked it Failed
-                    if sess.failed().is_some() {
-                        Fault::new(ErrCode::Failed, e)
-                    } else {
-                        Fault::new(ErrCode::BadRequest, e)
-                    }
+                let res = sess.append(&program).map_err(|e| match e {
+                    // parse and budget refusals leave the session live
+                    AppendErr::Parse(m) => Fault::new(ErrCode::BadRequest, m),
+                    AppendErr::Budget(m) => Fault::new(ErrCode::BudgetExceeded, m),
+                    // mid-batch execute / journal-write failure is terminal
+                    AppendErr::Failed(m) => Fault::new(ErrCode::Failed, m),
                 });
                 let _ = reply.send(res);
             }
@@ -552,6 +692,15 @@ fn session_thread(
     if let Ok(true) = sess.checkpoint_to_disk() {
         if let Some(srv) = server.upgrade() {
             srv.checkpoints_written.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+    // a cancel *discards* the session, so its journal must not
+    // resurrect it on the next --recover.  Drain (`draining` set) and
+    // teardown-without-drain (the upgrade fails — the crash path) both
+    // keep the journal: that state is exactly what recovery replays.
+    if let Some(srv) = server.upgrade() {
+        if !srv.draining() {
+            sess.retire_journal();
         }
     }
 }
@@ -571,6 +720,15 @@ fn step_reply(
         return Err(Fault::new(
             ErrCode::Expired,
             format!("session {} outlived its deadline", sess.cfg.id),
+        ));
+    }
+    // like expiry, a journal-bytes budget breach is permanent and the
+    // first step to *observe* it reports `stopped:"budget"` on an ok
+    // frame; every later step gets the typed error
+    if sess.budget_exceeded() {
+        return Err(Fault::new(
+            ErrCode::BudgetExceeded,
+            format!("session {} exceeded its journal-bytes budget", sess.cfg.id),
         ));
     }
     let deadline = match deadline_at {
@@ -603,6 +761,14 @@ pub fn serve_with(cfg: ServeCfg, on_ready: impl FnOnce(String)) -> Result<DrainR
         .map_err(|e| e.to_string())?;
     let local = listener.local_addr().map_err(|e| e.to_string())?;
     let server = Server::new(cfg);
+    if server.cfg.recover {
+        // rebuild journaled sessions before announcing readiness, so a
+        // client that reconnects on `on_ready` already sees them
+        let n = server
+            .recover_sessions()
+            .map_err(|e| format!("recover: {e}"))?;
+        println!("[serve] recovered {n} session(s) from the journal");
+    }
     on_ready(local.to_string());
     loop {
         if server.shutdown_requested() {
@@ -649,36 +815,56 @@ pub fn serve(cfg: ServeCfg) -> Result<(), String> {
 
 /// One client connection: newline-delimited request frames in,
 /// response frames out, plus an event-writer thread per `subscribe`.
+///
+/// Frames are read in raw chunks into a byte accumulator (not
+/// `read_line`) so the `--max-frame-bytes` cap applies to the bytes
+/// *buffered*, not just to completed lines: a client streaming an
+/// endless newline-free frame is cut off at the cap instead of growing
+/// the buffer without bound.  Non-UTF-8 garbage on a line becomes an
+/// ordinary parse error (`BadRequest`, connection stays open);
+/// oversized frames get one `BadRequest` and a closed connection.
 fn handle_connection(server: Arc<Server>, stream: TcpStream) {
+    let max_frame = server.cfg.max_frame_bytes.max(1);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
-    let mut reader = BufReader::new(match stream.try_clone() {
+    let mut reader = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
-    });
+    };
     // writes go through a mutex so response frames and streamed event
     // lines never interleave mid-line
     let out = Arc::new(Mutex::new(stream));
-    let mut line = String::new();
+    let mut pending: Vec<u8> = Vec::new();
+    let mut buf = [0u8; 8192];
     loop {
-        match reader.read_line(&mut line) {
+        let n = match reader.read(&mut buf) {
             Ok(0) => return, // EOF
-            Ok(_) => {}
+            Ok(n) => n,
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                // read_line may have appended a partial frame before the
-                // timeout fired: keep `line` accumulating — the next
-                // successful read completes it (slow-writer safety)
+                // a partial frame keeps accumulating across timeouts —
+                // the next read completes it (slow-writer safety)
                 if server.shutdown_requested() {
                     return;
                 }
                 continue;
             }
             Err(_) => return,
-        }
-        let text = line.trim();
-        if !text.is_empty() {
+        };
+        pending.extend_from_slice(&buf[..n]);
+        // serve every complete line in the accumulator
+        while let Some(pos) = pending.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = pending.drain(..=pos).collect();
+            if line.len() > max_frame {
+                oversized_frame(&out, max_frame);
+                return;
+            }
+            let owned = String::from_utf8_lossy(&line);
+            let text = owned.trim();
+            if text.is_empty() {
+                continue; // zero-length / whitespace lines are keepalives
+            }
             let frame = match Request::parse(text) {
                 Ok(req) => match req.method {
                     Method::Subscribe { session } => {
@@ -692,9 +878,24 @@ fn handle_connection(server: Arc<Server>, stream: TcpStream) {
                 return;
             }
         }
-        // only a fully-read line is consumed
-        line.clear();
+        // no newline yet and already past the cap: this frame can only
+        // get bigger — refuse it now instead of buffering forever
+        if pending.len() > max_frame {
+            oversized_frame(&out, max_frame);
+            return;
+        }
     }
+}
+
+/// One `BadRequest` frame for an over-cap request line; the caller
+/// closes the connection (the frame boundary is lost, so resyncing on
+/// the same stream would mis-parse the tail of the oversized frame).
+fn oversized_frame(out: &Arc<Mutex<TcpStream>>, max_frame: usize) {
+    let f = Fault::new(
+        ErrCode::BadRequest,
+        format!("frame exceeds max_frame_bytes ({max_frame})"),
+    );
+    let _ = write_line(out, &err_frame(0, &f));
 }
 
 fn write_line(out: &Arc<Mutex<TcpStream>>, line: &str) -> std::io::Result<()> {
@@ -886,6 +1087,187 @@ mod tests {
                 .code,
             ErrCode::NotFound
         );
+    }
+
+    fn scratch_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "subppl-server-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn watched_mu(snap: &Json) -> f64 {
+        match snap.get("values").and_then(|v| v.get("mu")) {
+            Some(Json::Num(x)) => *x,
+            other => panic!("no watched mu in snapshot: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn own_queue_full_is_budget_exceeded_not_overloaded() {
+        let srv = tiny_server(4);
+        let mut p = params();
+        p.queue_cap = 1;
+        let id = srv.create(p).unwrap();
+        // occupy the session with a long step, then flood its 1-slot
+        // queue: among the next two sends at least one must bounce off
+        // the full queue (the session is busy for the whole test), and
+        // the bounce carries the session's own budget code
+        let srv2 = srv.clone();
+        let long = std::thread::spawn(move || {
+            let _ = srv2.step(id, 5_000_000, 0);
+        });
+        // let the long step get dequeued before flooding, so the flood
+        // can't race it out of the queue
+        std::thread::sleep(Duration::from_millis(20));
+        let mut saw_budget = None;
+        for _ in 0..50 {
+            let (reply, _done) = std::sync::mpsc::channel();
+            if let Err(f) = srv.send(
+                id,
+                SessionCmd::Step {
+                    n: 1,
+                    deadline_at: None,
+                    reply,
+                },
+            ) {
+                saw_budget = Some(f);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let f = saw_budget.expect("1-slot queue never filled");
+        assert_eq!(f.code, ErrCode::BudgetExceeded);
+        assert!(f.retry_after_ms.is_some(), "queue budget is retryable");
+        // a server-default queue under the same pressure says Overloaded
+        let other = srv.create(params()).unwrap();
+        let srv3 = srv.clone();
+        let long2 = std::thread::spawn(move || {
+            let _ = srv3.step(other, 5_000_000, 0);
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        let mut saw_overload = None;
+        for _ in 0..200 {
+            let (reply, _done) = std::sync::mpsc::channel();
+            if let Err(f) = srv.send(
+                other,
+                SessionCmd::Step {
+                    n: 1,
+                    deadline_at: None,
+                    reply,
+                },
+            ) {
+                saw_overload = Some(f);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(saw_overload.expect("queue never filled").code, ErrCode::Overloaded);
+        // cancel stops the long steps at a draw boundary
+        srv.cancel(id).unwrap();
+        srv.cancel(other).unwrap();
+        long.join().unwrap();
+        long2.join().unwrap();
+        srv.drain();
+    }
+
+    #[test]
+    fn trace_budget_append_maps_to_budget_exceeded() {
+        let srv = tiny_server(4);
+        let mut p = params();
+        p.max_trace_nodes = 1; // any append would exceed it
+        let id = srv.create(p).unwrap();
+        srv.step(id, 3, 0).unwrap();
+        let err = srv
+            .append(id, "[observe (normal mu 0.5) 0.9]".into())
+            .unwrap_err();
+        assert_eq!(err.code, ErrCode::BudgetExceeded);
+        // the refusal mutated nothing: the session still steps
+        assert_eq!(srv.step(id, 2, 0).unwrap().total, 5);
+    }
+
+    #[test]
+    fn cancel_retires_the_journal_but_drain_keeps_it() {
+        let dir = scratch_dir("cancel-retire");
+        let cfg = ServeCfg {
+            max_sessions: 4,
+            use_pool: false,
+            state_dir: Some(dir.clone()),
+            ..ServeCfg::default()
+        };
+        let srv = Server::new(cfg);
+        let kept = srv.create(params()).unwrap();
+        let discarded = srv.create(params()).unwrap();
+        srv.step(kept, 3, 0).unwrap();
+        srv.step(discarded, 3, 0).unwrap();
+        let kept_path = crate::serve::journal::journal_path(&dir, kept);
+        let discarded_path = crate::serve::journal::journal_path(&dir, discarded);
+        assert!(kept_path.exists() && discarded_path.exists());
+        srv.cancel(discarded).unwrap();
+        // the session thread deletes the journal as it winds down
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while discarded_path.exists() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(
+            !discarded_path.exists(),
+            "a cancelled session must not resurrect on --recover"
+        );
+        srv.drain();
+        assert!(
+            kept_path.exists(),
+            "drain keeps the journal — that state is what recovery replays"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_rebuilds_sessions_bitwise_and_bumps_next_id() {
+        let dir = scratch_dir("recover");
+        let cfg = ServeCfg {
+            max_sessions: 4,
+            use_pool: false,
+            state_dir: Some(dir.clone()),
+            ..ServeCfg::default()
+        };
+        let srv = Server::new(cfg.clone());
+        let id = srv.create(params()).unwrap();
+        srv.step(id, 8, 0).unwrap();
+        srv.append(id, "[observe (normal mu 0.5) -3.0]".into())
+            .unwrap();
+        srv.step(id, 4, 0).unwrap();
+        srv.drain();
+        drop(srv);
+        // restart: same state dir, recover before serving
+        let srv2 = Server::new(ServeCfg {
+            recover: true,
+            ..cfg
+        });
+        assert_eq!(srv2.recover_sessions().unwrap(), 1);
+        let rep = srv2.step(id, 8, 0).unwrap();
+        assert_eq!(rep.total, 20, "recovered draw count continues");
+        let recovered_mu = watched_mu(&srv2.snapshot(id).unwrap());
+        // a fresh create must not collide with the recovered id
+        assert_eq!(srv2.create(params()).unwrap(), id + 1);
+        srv2.drain();
+        // control: the same schedule uninterrupted (same seed, id 1)
+        let ctl = tiny_server(4);
+        let c = ctl.create(params()).unwrap();
+        assert_eq!(c, id);
+        ctl.step(c, 8, 0).unwrap();
+        ctl.append(c, "[observe (normal mu 0.5) -3.0]".into())
+            .unwrap();
+        ctl.step(c, 12, 0).unwrap();
+        let control_mu = watched_mu(&ctl.snapshot(c).unwrap());
+        assert_eq!(
+            recovered_mu.to_bits(),
+            control_mu.to_bits(),
+            "recovery must be bitwise-identical to the uninterrupted run"
+        );
+        ctl.drain();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

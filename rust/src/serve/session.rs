@@ -20,6 +20,22 @@
 //! from its last per-draw in-memory [`ChainCheckpoint`] — bitwise
 //! identical to the draw sequence that would have happened without the
 //! panic, up to `max_restarts` per session.
+//!
+//! Durability contract (when `state_dir` is set): every acknowledged
+//! operation is on disk *before* its reply — the create record lands
+//! before the session is born, each append record (source + post-append
+//! checkpoint, one atomic record) lands before the append reply, and a
+//! checkpoint record lands at the end of every completed step before
+//! the step reply (plus every `journal_every` draws mid-step, bounding
+//! replay after a crash mid-step).  [`Session::recover`] rebuilds from
+//! the journal with exactly the panic-`rebuild()` discipline — replay
+//! program + appends for node ids, restore checkpoint for values + RNG
+//! position — so the recovered draw sequence is bitwise identical to
+//! the uninterrupted run.  A journal write failure is terminal
+//! (`Failed`): the op is never acknowledged, so recovery serves the
+//! last *acknowledged* state.  Convergence-monitor state and evaluator
+//! counters are not journaled: after recovery the monitor starts fresh
+//! and counters restart from zero (draw values are unaffected).
 
 use crate::coordinator::checkpoint::ChainCheckpoint;
 use crate::coordinator::monitor::{ConvergenceMonitor, DiagSnapshot};
@@ -29,6 +45,7 @@ use crate::infer::program::{parse_infer, run_command, InfCmd};
 use crate::math::Pcg64;
 use crate::runtime::faults;
 use crate::runtime::pool::{resolve_threads, WorkerPool};
+use crate::serve::journal::{journal_path, Journal, KIND_APPEND, KIND_CKPT};
 use crate::serve::protocol::Json;
 use crate::trace::Trace;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -80,7 +97,37 @@ pub struct SessionCfg {
     /// Where drain writes the session's final checkpoint (None = the
     /// session's state dies with it).
     pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Fair-scheduling weight on the shared shard pool (deficit
+    /// round-robin quanta per visit; normalized to ≥ 1).
+    pub weight: u32,
+    /// Where the write-ahead journal lives (None = no durability; the
+    /// session's state dies with the process).
+    pub state_dir: Option<std::path::PathBuf>,
+    /// Mid-step journal checkpoint cadence in draws (0 = default 64).
+    /// A checkpoint record also always lands at the end of every
+    /// completed step, so this only bounds replay after a crash
+    /// mid-step.
+    pub journal_every: usize,
+    /// Trace-size budget: appends that would grow the trace past this
+    /// many live nodes are refused (0 = uncapped).
+    pub max_trace_nodes: usize,
+    /// Journal-byte budget: when the *compacted* journal still exceeds
+    /// this, the session is over budget (0 = uncapped; the journal is
+    /// still compacted past [`COMPACT_THRESHOLD`] to bound growth).
+    pub max_journal_bytes: u64,
+    /// Per-session command-queue depth (0 = server default).  Lives in
+    /// the server's registry; journaled here only so recovery restores
+    /// the same cap.
+    pub queue_cap: usize,
 }
+
+/// Uncapped sessions still compact their journal past this size — the
+/// per-draw `ckpt` records accrete and compaction is cheap (one
+/// temp-then-rename of create + appends + latest checkpoint).
+pub const COMPACT_THRESHOLD: u64 = 1 << 20;
+
+/// Default mid-step journal checkpoint cadence (`journal_every` 0).
+pub const DEFAULT_JOURNAL_EVERY: usize = 64;
 
 impl Default for SessionCfg {
     fn default() -> SessionCfg {
@@ -99,8 +146,124 @@ impl Default for SessionCfg {
             min_parallel: 0,
             monitor_every: 0,
             checkpoint_dir: None,
+            weight: 1,
+            state_dir: None,
+            journal_every: 0,
+            max_trace_nodes: 0,
+            max_journal_bytes: 0,
+            queue_cap: 0,
         }
     }
+}
+
+/// The `create` journal record's payload: every field of the resolved
+/// session config that recovery must reproduce to rebuild the same
+/// draw stream.  Server-local policy (restart budget, pool usage,
+/// checkpoint dir, deadline) is *not* journaled — recovery applies the
+/// recovering server's settings, and a recovered session gets a fresh
+/// lifetime window.
+pub fn journal_payload(cfg: &SessionCfg) -> Json {
+    let verify = cfg.store_verify.map(|v| match v {
+        crate::trace::colstore::VerifyMode::Off => "off",
+        crate::trace::colstore::VerifyMode::Refreshed => "refreshed",
+        crate::trace::colstore::VerifyMode::Full => "full",
+    });
+    Json::Obj(vec![
+        ("seed".into(), Json::Num(cfg.seed as f64)),
+        ("program".into(), Json::Str(cfg.program.clone())),
+        (
+            "infer".into(),
+            match &cfg.infer {
+                Some(s) => Json::Str(s.clone()),
+                None => Json::Null,
+            },
+        ),
+        (
+            "watch".into(),
+            Json::Arr(cfg.watch.iter().map(|w| Json::Str(w.clone())).collect()),
+        ),
+        (
+            "target_risk".into(),
+            match cfg.target_risk {
+                Some(r) => Json::Num(r),
+                None => Json::Null,
+            },
+        ),
+        (
+            "shard_timeout_ms".into(),
+            Json::Num(cfg.shard_timeout_ms as f64),
+        ),
+        (
+            "store_verify".into(),
+            match verify {
+                Some(v) => Json::Str(v.into()),
+                None => Json::Null,
+            },
+        ),
+        (
+            "monitor_every".into(),
+            Json::Num(cfg.monitor_every as f64),
+        ),
+        ("weight".into(), Json::Num(cfg.weight as f64)),
+        (
+            "max_trace_nodes".into(),
+            Json::Num(cfg.max_trace_nodes as f64),
+        ),
+        (
+            "max_journal_bytes".into(),
+            Json::Num(cfg.max_journal_bytes as f64),
+        ),
+        ("queue_cap".into(), Json::Num(cfg.queue_cap as f64)),
+    ])
+}
+
+/// Invert [`journal_payload`]: a `SessionCfg` for [`Session::recover`].
+/// Server-local fields (deadline, max_restarts, use_pool, min_parallel,
+/// checkpoint_dir, state_dir, journal_every) start at their defaults —
+/// the recovering server fills them in from its own config.
+pub fn cfg_from_journal(id: u64, payload: &Json) -> Result<SessionCfg, String> {
+    let bad = |f: &str| format!("journal: session {id} create record missing {f:?}");
+    let u = |f: &str| payload.get(f).and_then(Json::as_u64).unwrap_or(0);
+    Ok(SessionCfg {
+        id,
+        seed: payload
+            .get("seed")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| bad("seed"))?,
+        program: payload
+            .get("program")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("program"))?
+            .to_string(),
+        infer: payload
+            .get("infer")
+            .and_then(Json::as_str)
+            .map(str::to_string),
+        watch: payload
+            .get("watch")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|v| v.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default(),
+        target_risk: payload.get("target_risk").and_then(Json::as_f64),
+        shard_timeout_ms: u("shard_timeout_ms"),
+        store_verify: match payload.get("store_verify").and_then(Json::as_str) {
+            Some(s) => Some(
+                crate::trace::colstore::VerifyMode::parse(s)
+                    .ok_or_else(|| format!("journal: session {id} bad store_verify {s:?}"))?,
+            ),
+            None => None,
+        },
+        monitor_every: u("monitor_every") as usize,
+        weight: u("weight").clamp(1, u32::MAX as u64) as u32,
+        max_trace_nodes: u("max_trace_nodes") as usize,
+        max_journal_bytes: u("max_journal_bytes"),
+        queue_cap: u("queue_cap") as usize,
+        ..SessionCfg::default()
+    })
 }
 
 /// Why a step returned before completing its requested draws.
@@ -114,6 +277,9 @@ pub enum StopReason {
     /// The session outlived its lifetime deadline; it will accept no
     /// further steps.
     Expired,
+    /// The session hit its journal-byte budget; like expiry, this is
+    /// permanent — further steps fail with `BudgetExceeded`.
+    Budget,
 }
 
 impl StopReason {
@@ -122,6 +288,30 @@ impl StopReason {
             StopReason::Deadline => "deadline",
             StopReason::Cancelled => "cancelled",
             StopReason::Expired => "expired",
+            StopReason::Budget => "budget",
+        }
+    }
+}
+
+/// Why an `append` was refused.  Parse and budget refusals mutate
+/// nothing — the session stays live; `Failed` is terminal.
+#[derive(Clone, Debug)]
+pub enum AppendErr {
+    /// The appended source did not parse (nothing was applied).
+    Parse(String),
+    /// The append would exceed the session's trace-node budget
+    /// (nothing was applied; the session stays live for steps and
+    /// snapshots).
+    Budget(String),
+    /// The session is terminally failed — either it already was, or a
+    /// directive failed mid-batch / the journal write failed.
+    Failed(String),
+}
+
+impl AppendErr {
+    pub fn message(&self) -> &str {
+        match self {
+            AppendErr::Parse(m) | AppendErr::Budget(m) | AppendErr::Failed(m) => m,
         }
     }
 }
@@ -176,6 +366,16 @@ pub struct Session {
     /// full or closed channel drops the subscriber (slowloris
     /// protection) — the session never blocks on a slow client.
     subs: Vec<SyncSender<String>>,
+    /// Write-ahead journal (None = no `state_dir`, no durability).
+    journal: Option<Journal>,
+    /// Draws since the last journaled checkpoint record.
+    since_journal_ckpt: usize,
+    /// Permanent journal-byte budget violation (set when even the
+    /// compacted journal exceeds `max_journal_bytes`).  Mirrors
+    /// `expired`: the first observing step reports `stopped:"budget"`,
+    /// later steps map to the `BudgetExceeded` error code.
+    over_budget: bool,
+    budget_observed: bool,
 }
 
 impl Session {
@@ -216,6 +416,12 @@ impl Session {
             &trace,
             &rng,
         ));
+        // durability: the create record must be on disk before this
+        // constructor returns (the server acknowledges after)
+        let journal = match &cfg.state_dir {
+            Some(dir) => Some(Journal::create(dir, cfg.id, &journal_payload(&cfg))?),
+            None => None,
+        };
         Ok(Session {
             trace,
             rng,
@@ -236,6 +442,122 @@ impl Session {
             eval_base: EvalStats::default(),
             appended: Vec::new(),
             subs: Vec::new(),
+            journal,
+            since_journal_ckpt: 0,
+            over_budget: false,
+            budget_observed: false,
+            cfg,
+        })
+    }
+
+    /// Rebuild a session from its recovered journal state: replay the
+    /// program and every acknowledged append under the session RNG (so
+    /// the trace allocates the same node ids as the dead process's
+    /// did), then restore committed values + RNG position from the last
+    /// journaled checkpoint — exactly the panic-`rebuild()` discipline,
+    /// so subsequent draws are bitwise identical to the uninterrupted
+    /// run.  `ckpt_text` of `None` means no draw or append was ever
+    /// acknowledged: the draw-0 replay state is already correct.
+    ///
+    /// The journal itself is reopened for appending; `cfg.state_dir`
+    /// must be set and [`read_journal`](crate::serve::journal::read_journal)
+    /// must already have truncated any torn tail.
+    pub fn recover(
+        cfg: SessionCfg,
+        appends: &[String],
+        ckpt_text: Option<&str>,
+    ) -> Result<Session, String> {
+        let dir = cfg
+            .state_dir
+            .clone()
+            .ok_or_else(|| format!("session {}: recover needs a state_dir", cfg.id))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        faults::register_cancel_flag(&stop);
+        let mut rng = session_rng(cfg.seed, cfg.id);
+        let mut trace = Trace::new();
+        trace
+            .run_program(&cfg.program, &mut rng)
+            .map_err(|e| format!("session {}: recovery replay failed: {e}", cfg.id))?;
+        for src in appends {
+            trace
+                .append_program(src, &mut rng)
+                .map_err(|e| format!("session {}: recovery append replay failed: {e}", cfg.id))?;
+        }
+        let (draws, last_ck) = match ckpt_text {
+            Some(text) => {
+                let ck = ChainCheckpoint::decode(text)
+                    .map_err(|e| format!("session {}: journaled checkpoint: {e}", cfg.id))?;
+                rng = ck
+                    .restore(&mut trace)
+                    .map_err(|e| format!("session {}: recovery restore failed: {e}", cfg.id))?;
+                (ck.draw, Some(ck))
+            }
+            None => (
+                0,
+                Some(ChainCheckpoint::capture(
+                    cfg.seed,
+                    cfg.id as usize,
+                    0,
+                    &trace,
+                    &rng,
+                )),
+            ),
+        };
+        let mut cmd = match &cfg.infer {
+            Some(src) => Some(parse_infer(src)?),
+            None => None,
+        };
+        if let Some(c) = cmd.as_mut() {
+            if let Some(tr) = cfg.target_risk {
+                c.set_target_risk(tr);
+            }
+            if cfg.shard_timeout_ms > 0 {
+                c.set_shard_timeout_ms(cfg.shard_timeout_ms);
+            }
+            if let Some(v) = cfg.store_verify {
+                c.set_store_verify(v);
+            }
+        }
+        let ev = Self::fresh_eval(&cfg);
+        let (sink, lane) = chain_lane(0, stop.clone());
+        let mon = (cfg.monitor_every > 0 && !cfg.watch.is_empty())
+            .then(|| ConvergenceMonitor::new(1, &cfg.watch, cfg.monitor_every));
+        let mut last_row = vec![f64::NAN; cfg.watch.len()];
+        if draws > 0 {
+            for (i, n) in cfg.watch.iter().enumerate() {
+                last_row[i] = trace
+                    .lookup_value(n)
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(f64::NAN);
+            }
+        }
+        let journal = Journal::open_append(&journal_path(&dir, cfg.id))?;
+        Ok(Session {
+            trace,
+            rng,
+            cmd,
+            ev,
+            sink,
+            lane,
+            stop,
+            mon,
+            draws,
+            restarts: 0,
+            failed: None,
+            expired: false,
+            // recovery grants a fresh lifetime window: wall-clock spent
+            // dead should not count against the tenant
+            created: Instant::now(),
+            last_ck,
+            last_snap: None,
+            last_row,
+            eval_base: EvalStats::default(),
+            appended: appends.to_vec(),
+            subs: Vec::new(),
+            journal: Some(journal),
+            since_journal_ckpt: 0,
+            over_budget: false,
+            budget_observed: false,
             cfg,
         })
     }
@@ -244,6 +566,9 @@ impl Session {
         let mut ev = if cfg.use_pool && resolve_threads(0) > 1 {
             PlannedEval::with_pool(WorkerPool::global().clone())
                 .with_shard_timeout(cfg.shard_timeout_ms)
+                // fair scheduling: this session's shards queue on their
+                // own DRR lane, weighted by the create param
+                .with_session(cfg.id, cfg.weight)
         } else {
             PlannedEval::new()
         };
@@ -278,6 +603,29 @@ impl Session {
         self.expired
     }
 
+    /// Whether a step already observed the session's permanent journal
+    /// budget violation (the server maps further steps to the
+    /// `BudgetExceeded` error code, mirroring expiry).
+    pub fn budget_exceeded(&self) -> bool {
+        self.over_budget && self.budget_observed
+    }
+
+    /// Current journal size (0 without durability).
+    pub fn journal_bytes(&self) -> u64 {
+        self.journal.as_ref().map_or(0, Journal::bytes)
+    }
+
+    /// Delete the session's journal file.  Cancel only: a *discarded*
+    /// session must not resurrect on the next `--recover`.  Drain and
+    /// crash teardown keep the journal — that state is exactly what
+    /// recovery replays.
+    pub fn retire_journal(&mut self) {
+        self.journal = None;
+        if let Some(dir) = &self.cfg.state_dir {
+            let _ = std::fs::remove_file(crate::serve::journal::journal_path(dir, self.cfg.id));
+        }
+    }
+
     /// Cumulative evaluator counters across restarts.
     pub fn eval_stats(&self) -> EvalStats {
         self.eval_base.add(&self.ev.stats())
@@ -310,6 +658,14 @@ impl Session {
                 self.expired = true;
                 self.stop.store(true, Ordering::SeqCst);
                 stopped = Some(StopReason::Expired);
+                break;
+            }
+            if self.over_budget {
+                // like expiry: permanent, observed at a draw boundary;
+                // the step that first observes it reports partial
+                // progress, later steps map to BudgetExceeded
+                self.budget_observed = true;
+                stopped = Some(StopReason::Budget);
                 break;
             }
             if self.sink.cancelled() {
@@ -352,6 +708,17 @@ impl Session {
                 }
             }
         }
+        // durability: a checkpoint covering every draw this step
+        // committed must land before the reply — the acked draw count
+        // is then always recoverable
+        if self.since_journal_ckpt > 0 {
+            if let Err(e) = self.journal_ckpt() {
+                let e = format!("session {}: journal write failed: {e}", self.cfg.id);
+                self.failed = Some(e.clone());
+                self.pump_events();
+                return Err(e);
+            }
+        }
         self.pump_events();
         Ok(StepReport {
             requested: n,
@@ -370,26 +737,39 @@ impl Session {
     /// batch groups, and column-store panels for the existing data stay
     /// cached (`append_version` bumps, `structure_version` does not).
     ///
-    /// Parse errors are non-terminal (nothing was mutated; the client
-    /// just gets a `BadRequest`).  A directive that parses but fails to
+    /// Parse and budget errors are non-terminal (nothing was mutated;
+    /// the client gets a `BadRequest` / `BudgetExceeded` and the
+    /// session stays live).  A directive that parses but fails to
     /// *execute* may leave earlier directives of the same batch applied,
     /// so that error is terminal: the session is marked Failed rather
     /// than serve a half-applied model.  On success the appended source
-    /// is journaled (panic rebuilds replay it after `cfg.program`) and a
-    /// fresh checkpoint is captured so a restart resumes post-append.
+    /// is retained (panic rebuilds replay it after `cfg.program`), a
+    /// fresh checkpoint is captured so a restart resumes post-append,
+    /// and — when durable — one atomic journal record carrying both the
+    /// source and the post-append checkpoint lands before the reply.
     ///
     /// Returns the number of directives appended.
-    pub fn append(&mut self, src: &str) -> Result<usize, String> {
+    pub fn append(&mut self, src: &str) -> Result<usize, AppendErr> {
         if let Some(e) = &self.failed {
-            return Err(e.clone());
+            return Err(AppendErr::Failed(e.clone()));
         }
-        let prog = crate::ppl::parser::parse_program(src)?;
+        // budget before mutation: a refused append leaves the trace
+        // exactly as it was (steps and snapshots keep working)
+        if self.cfg.max_trace_nodes > 0 && self.trace.num_live_nodes() >= self.cfg.max_trace_nodes {
+            return Err(AppendErr::Budget(format!(
+                "session {}: trace holds {} live nodes, at its {}-node budget; append refused",
+                self.cfg.id,
+                self.trace.num_live_nodes(),
+                self.cfg.max_trace_nodes
+            )));
+        }
+        let prog = crate::ppl::parser::parse_program(src).map_err(AppendErr::Parse)?;
         let n = prog.len();
         for d in &prog {
             if let Err(e) = self.trace.append_directive(d, &mut self.rng) {
                 let e = format!("session {}: append failed mid-batch: {e}", self.cfg.id);
                 self.failed = Some(e.clone());
-                return Err(e);
+                return Err(AppendErr::Failed(e));
             }
         }
         self.appended.push(src.to_string());
@@ -400,7 +780,90 @@ impl Session {
             &self.trace,
             &self.rng,
         ));
+        // durability: the append record must land before the ack; a
+        // failed write is terminal (the op is never acknowledged, so
+        // recovery serves the pre-append state)
+        if let Err(e) = self.journal_append_record(src) {
+            let e = format!("session {}: journal write failed: {e}", self.cfg.id);
+            self.failed = Some(e.clone());
+            return Err(AppendErr::Failed(e));
+        }
         Ok(n)
+    }
+
+    /// Write the atomic append record (`{src, ckpt}`) and run the
+    /// compaction check.  No-op without a journal.
+    fn journal_append_record(&mut self, src: &str) -> Result<(), String> {
+        if self.journal.is_none() {
+            return Ok(());
+        }
+        let ck_text = self
+            .last_ck
+            .as_ref()
+            .ok_or_else(|| "no checkpoint to journal".to_string())?
+            .encode()?;
+        let payload = Json::Obj(vec![
+            ("src".into(), Json::Str(src.to_string())),
+            ("ckpt".into(), Json::Str(ck_text)),
+        ]);
+        self.journal
+            .as_mut()
+            .expect("checked above")
+            .append_record(KIND_APPEND, payload.encode().as_bytes())?;
+        // the append record carries a checkpoint at the current draw
+        // count, so nothing since it needs re-journaling
+        self.since_journal_ckpt = 0;
+        self.maybe_compact()
+    }
+
+    /// Journal the latest checkpoint and run the compaction check.
+    /// No-op without a journal.
+    fn journal_ckpt(&mut self) -> Result<(), String> {
+        if self.journal.is_none() {
+            return Ok(());
+        }
+        let text = self
+            .last_ck
+            .as_ref()
+            .ok_or_else(|| "no checkpoint to journal".to_string())?
+            .encode()?;
+        self.journal
+            .as_mut()
+            .expect("checked above")
+            .append_record(KIND_CKPT, text.as_bytes())?;
+        self.since_journal_ckpt = 0;
+        self.maybe_compact()
+    }
+
+    /// Compact the journal when it outgrows its cap (the session's
+    /// `max_journal_bytes`, or [`COMPACT_THRESHOLD`] when uncapped).
+    /// A session whose *compacted* journal still exceeds its budget is
+    /// permanently over budget: the next draw boundary reports
+    /// `stopped:"budget"` and later steps get `BudgetExceeded`.
+    fn maybe_compact(&mut self) -> Result<(), String> {
+        let cap = if self.cfg.max_journal_bytes > 0 {
+            self.cfg.max_journal_bytes
+        } else {
+            COMPACT_THRESHOLD
+        };
+        let over = match self.journal.as_ref() {
+            Some(j) => j.bytes() > cap,
+            None => false,
+        };
+        if !over {
+            return Ok(());
+        }
+        let payload = journal_payload(&self.cfg);
+        let ck_text = match self.last_ck.as_ref() {
+            Some(ck) => Some(ck.encode()?),
+            None => None,
+        };
+        let j = self.journal.as_mut().expect("checked above");
+        j.compact(&payload, &self.appended, ck_text.as_deref())?;
+        if self.cfg.max_journal_bytes > 0 && j.bytes() > self.cfg.max_journal_bytes {
+            self.over_budget = true;
+        }
+        Ok(())
     }
 
     /// One committed draw: run the inference program once, record the
@@ -454,6 +917,27 @@ impl Session {
             &self.trace,
             &self.rng,
         ));
+        // mid-step journal cadence: bounds replay after a crash
+        // mid-step (the end-of-step flush covers the acked count)
+        if self.journal.is_some() {
+            self.since_journal_ckpt += 1;
+            let every = if self.cfg.journal_every == 0 {
+                DEFAULT_JOURNAL_EVERY
+            } else {
+                self.cfg.journal_every
+            };
+            if self.since_journal_ckpt >= every {
+                if let Err(e) = self.journal_ckpt() {
+                    // terminal Model error: the draw happened in memory
+                    // but can no longer be made durable, so it must
+                    // never be acknowledged
+                    return Err(DrawErr::Model(format!(
+                        "session {}: journal write failed: {e}",
+                        self.cfg.id
+                    )));
+                }
+            }
+        }
         Ok(())
     }
 
@@ -549,6 +1033,7 @@ impl Session {
                 "sections".into(),
                 Json::Num((e.planned + e.fallback) as f64),
             ),
+            ("journal_bytes".into(), Json::Num(self.journal_bytes() as f64)),
             (
                 "monitor".into(),
                 match &self.last_snap {
@@ -707,6 +1192,84 @@ mod tests {
         assert!(s.failed().is_none(), "parse errors leave the session live");
         s.step(2, None).unwrap();
         assert_eq!(s.total_draws(), 4);
+    }
+
+    fn scratch_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("subppl-sess-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn journal_recovery_is_bitwise() {
+        let dir = scratch_dir("rec");
+        // "interrupted" run: steps, an acknowledged append, more steps,
+        // then the process dies (drop = nothing further is flushed; the
+        // journal already holds everything acknowledged)
+        let mut c = cfg(11);
+        c.state_dir = Some(dir.clone());
+        c.journal_every = 4;
+        let mut s = Session::new(c).unwrap();
+        s.step(10, None).unwrap();
+        s.append("[observe (normal mu 0.5) -3.0]").unwrap();
+        s.step(5, None).unwrap();
+        drop(s);
+
+        let st = crate::serve::journal::read_journal(&journal_path(&dir, 11)).unwrap();
+        assert!(!st.torn);
+        assert_eq!(st.appends.len(), 1);
+        let mut rc = cfg_from_journal(11, &st.create).unwrap();
+        assert_eq!(rc.seed, 42, "create record round-trips the seed");
+        rc.state_dir = Some(dir.clone());
+        let mut r = Session::recover(rc, &st.appends, st.ckpt.as_deref()).unwrap();
+        assert_eq!(r.total_draws(), 15, "every acked draw was recovered");
+        r.step(10, None).unwrap();
+
+        // control: same (seed, id, append schedule), never interrupted
+        let mut u = Session::new(cfg(11)).unwrap();
+        u.step(10, None).unwrap();
+        u.append("[observe (normal mu 0.5) -3.0]").unwrap();
+        u.step(15, None).unwrap();
+        assert_eq!(
+            r.last_row[0].to_bits(),
+            u.last_row[0].to_bits(),
+            "recovered draws must be bitwise identical to the uninterrupted run"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trace_budget_refuses_append_but_session_lives() {
+        let mut c = cfg(12);
+        c.max_trace_nodes = 1;
+        let mut s = Session::new(c).unwrap();
+        s.step(2, None).unwrap();
+        match s.append("[observe (normal mu 0.5) 0.1]") {
+            Err(AppendErr::Budget(_)) => {}
+            other => panic!("expected a budget refusal, got {other:?}"),
+        }
+        assert!(s.failed().is_none(), "budget refusals are not terminal");
+        s.step(2, None).unwrap();
+        assert_eq!(s.total_draws(), 4);
+    }
+
+    #[test]
+    fn journal_budget_is_permanent_and_observed_at_a_draw_boundary() {
+        let dir = scratch_dir("budget");
+        let mut c = cfg(13);
+        c.state_dir = Some(dir.clone());
+        c.journal_every = 1;
+        // even a compacted journal exceeds one byte
+        c.max_journal_bytes = 1;
+        let mut s = Session::new(c).unwrap();
+        let rep = s.step(5, None).unwrap();
+        assert_eq!(rep.done, 1, "the violating draw boundary still reports");
+        assert_eq!(rep.stopped, Some(StopReason::Budget));
+        assert!(s.budget_exceeded());
+        let rep = s.step(5, None).unwrap();
+        assert_eq!(rep.done, 0);
+        assert_eq!(rep.stopped, Some(StopReason::Budget));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -504,6 +504,109 @@ fn tcp_split_frame_across_read_timeouts_still_parses() {
     handle.join().expect("server thread");
 }
 
+/// The protocol-robustness sweep: hostile framing — non-UTF-8 garbage,
+/// zero-length lines, truncated frames, oversized frames, endless
+/// newline-free streams — always gets a typed error frame or a clean
+/// disconnect, never a panic or a wedged accept loop.
+#[test]
+fn tcp_hostile_frames_error_or_disconnect_cleanly() {
+    let _g = serial_lock();
+    let (addr, handle) = start_server(ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        use_pool: false,
+        max_frame_bytes: 4096,
+        ..ServeCfg::default()
+    });
+    let err_code = |frame: &Json| -> Option<String> {
+        frame
+            .get("error")
+            .and_then(|e| e.get("code"))
+            .and_then(Json::as_str)
+            .map(str::to_string)
+    };
+
+    // zero-length and whitespace-only lines are ignored as keepalives;
+    // the frame after them is served on the same connection
+    {
+        let mut c = Client::connect(&addr);
+        c.writer.write_all(b"\n\n   \n").unwrap();
+        c.writer.flush().unwrap();
+        let pong = c.rpc(r#"{"id":1,"method":"ping"}"#);
+        assert_eq!(ok_body(&pong).get("pong"), Some(&Json::Bool(true)));
+    }
+
+    // non-UTF-8 garbage interleaved between valid frames: the garbage
+    // line gets a BadRequest frame, its neighbors are served normally
+    {
+        let mut c = Client::connect(&addr);
+        let pong = c.rpc(r#"{"id":2,"method":"ping"}"#);
+        assert_eq!(ok_body(&pong).get("pong"), Some(&Json::Bool(true)));
+        c.writer
+            .write_all(&[0xff, 0xfe, b'{', 0x80, 0x00, b'}', b'\n'])
+            .unwrap();
+        c.writer.flush().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let resp = Json::parse(c.read_line(deadline).expect("error frame").trim()).unwrap();
+        assert_eq!(err_code(&resp).as_deref(), Some("BadRequest"), "{resp:?}");
+        let pong = c.rpc(r#"{"id":3,"method":"ping"}"#);
+        assert_eq!(ok_body(&pong).get("pong"), Some(&Json::Bool(true)));
+    }
+
+    // a truncated frame followed by a client hangup: no newline ever
+    // arrived, so no reply is owed — the disconnect is clean and the
+    // server moves on
+    {
+        let mut c = Client::connect(&addr);
+        c.writer.write_all(br#"{"id":4,"method":"pi"#).unwrap();
+        c.writer.flush().unwrap();
+    } // dropped mid-frame
+
+    // an oversized complete frame: one BadRequest, then the connection
+    // closes (the frame boundary is not trusted past the cap)
+    {
+        let mut c = Client::connect(&addr);
+        let mut big = vec![b'x'; 8192];
+        big.push(b'\n');
+        c.writer.write_all(&big).unwrap();
+        c.writer.flush().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let resp = Json::parse(c.read_line(deadline).expect("refusal frame").trim()).unwrap();
+        assert_eq!(err_code(&resp).as_deref(), Some("BadRequest"), "{resp:?}");
+        assert!(
+            c.read_line(Instant::now() + Duration::from_secs(10)).is_none(),
+            "the connection must close after an oversized frame"
+        );
+    }
+
+    // an endless newline-free stream is refused once the accumulator
+    // passes the cap — the server must not buffer it without bound
+    {
+        let mut c = Client::connect(&addr);
+        for _ in 0..3 {
+            // 3 × 2048 > the 4096 cap, no newline anywhere
+            if c.writer.write_all(&[b'y'; 2048]).is_err() {
+                break; // server already hung up on us — also a pass
+            }
+            let _ = c.writer.flush();
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        if let Some(line) = c.read_line(deadline) {
+            let resp = Json::parse(line.trim()).unwrap();
+            assert_eq!(err_code(&resp).as_deref(), Some("BadRequest"), "{resp:?}");
+        }
+    }
+
+    // after all of that abuse the accept loop still serves fresh
+    // connections
+    {
+        let mut c = Client::connect(&addr);
+        let pong = c.rpc(r#"{"id":9,"method":"ping"}"#);
+        assert_eq!(ok_body(&pong).get("pong"), Some(&Json::Bool(true)));
+        c.rpc(r#"{"id":10,"method":"shutdown"}"#);
+    }
+    handle.join().expect("server thread");
+}
+
 // ---------------------------------------------------------------------
 // Tier: deterministic fault suite (--features fault-inject)
 // ---------------------------------------------------------------------

@@ -1,0 +1,385 @@
+//! Crash-durability integration tests for the serve write-ahead
+//! journal (tentpole of the durable-sessions PR).
+//!
+//! The contract under test: every *acknowledged* create / append /
+//! step is durable in the per-session journal before its reply, and a
+//! restarted server (`--recover`) rebuilds each session
+//! **bitwise-identically** to the uninterrupted run — same `(seed, id)`
+//! RNG stream, journaled appends replayed in order, the last durable
+//! checkpoint restored.  A crash is simulated by dropping the `Server`
+//! without a drain (nothing unacknowledged is ever in the journal, so
+//! an abrupt stop loses exactly the unacknowledged work — which is the
+//! claim).  Torn journal tails — a crash mid-`write` — are exercised
+//! both by direct file surgery (always on) and by the `torn-write@k` /
+//! `kill-recover@k` fault kinds (`--features fault-inject`).
+//!
+//! Sessions register process-global cancel flags, and the fault
+//! counters are process-global too, so this binary serializes on one
+//! mutex like `tests/serve.rs` does.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use subppl::serve::{CreateParams, ErrCode, Json, ServeCfg, Server, StopReason};
+
+fn serial_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+const MU_MODEL: &str = r#"
+    [assume mu (scope_include 'mu 0 (normal 0 1))]
+    [observe (normal mu 0.5) 1.2]
+    [observe (normal mu 0.5) 0.8]
+"#;
+const MU_INFER: &str = "(mh mu one drift 0.5 1)";
+const OBS: &str = "[observe (normal mu 0.5) -3.0]";
+
+fn mu_params(seed: u64) -> CreateParams {
+    CreateParams {
+        program: MU_MODEL.into(),
+        infer: Some(MU_INFER.into()),
+        watch: vec!["mu".into()],
+        seed: Some(seed),
+        ..CreateParams::default()
+    }
+}
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "subppl-recovery-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn durable_cfg(dir: &std::path::Path) -> ServeCfg {
+    ServeCfg {
+        use_pool: false,
+        state_dir: Some(dir.to_path_buf()),
+        ..ServeCfg::default()
+    }
+}
+
+/// The watched `mu` of a served session, as raw bits (bitwise
+/// comparisons only — approximate equality would hide divergence).
+fn mu_bits(srv: &std::sync::Arc<Server>, id: u64) -> u64 {
+    srv.snapshot(id)
+        .unwrap()
+        .get("values")
+        .and_then(|v| v.get("mu"))
+        .and_then(Json::as_f64)
+        .expect("watched mu present")
+        .to_bits()
+}
+
+/// The uninterrupted control: one fresh (journal-free) server running
+/// the same schedule in one life — `n` draws, the append, `m` more.
+fn control_bits(seed: u64, n: usize, append: bool, m: usize) -> u64 {
+    let ctl = Server::new(ServeCfg {
+        use_pool: false,
+        ..ServeCfg::default()
+    });
+    let id = ctl.create(mu_params(seed)).unwrap();
+    ctl.step(id, n, 0).unwrap();
+    if append {
+        ctl.append(id, OBS.into()).unwrap();
+    }
+    if m > 0 {
+        ctl.step(id, m, 0).unwrap();
+    }
+    let bits = mu_bits(&ctl, id);
+    ctl.drain();
+    bits
+}
+
+// ---------------------------------------------------------------------
+// Tier: always-on recovery tests
+// ---------------------------------------------------------------------
+
+/// The acceptance test: N draws + an append + more draws, an abrupt
+/// stop (no drain), `--recover`, then M draws — bitwise identical to
+/// N + append + M uninterrupted.  The recovered registry also resumes
+/// admission with non-colliding ids.
+#[test]
+fn kill_and_recover_continues_bitwise_with_appends() {
+    let _g = serial_lock();
+    #[cfg(feature = "fault-inject")]
+    subppl::runtime::faults::clear();
+    let dir = scratch("bitwise");
+    let srv = Server::new(durable_cfg(&dir));
+    let id = srv.create(mu_params(7)).unwrap();
+    srv.step(id, 10, 0).unwrap();
+    srv.append(id, OBS.into()).unwrap();
+    srv.step(id, 3, 0).unwrap();
+    // crash: no drain, no shutdown — acknowledged work must already
+    // be durable
+    drop(srv);
+
+    let srv = Server::new(ServeCfg {
+        recover: true,
+        ..durable_cfg(&dir)
+    });
+    assert_eq!(srv.recover_sessions().unwrap(), 1);
+    let rep = srv.step(id, 7, 0).unwrap();
+    assert_eq!(rep.total, 20, "draw count survives the crash");
+    let recovered = mu_bits(&srv, id);
+    assert_eq!(
+        recovered,
+        control_bits(7, 10, true, 10),
+        "recovered draws diverged from the uninterrupted run"
+    );
+    // the registry is live again: fresh creates get fresh ids and step
+    let fresh = srv.create(mu_params(7)).unwrap();
+    assert!(fresh > id, "recovered ids must not be reissued");
+    assert_eq!(srv.step(fresh, 5, 0).unwrap().done, 5);
+    srv.drain();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A torn journal tail — the file ends mid-record, as a crash mid-
+/// `write` leaves it — is detected, truncated, and recovery restores
+/// the last *durable* checkpoint: the half-written record's work is
+/// exactly the unacknowledged work, and the continuation is bitwise.
+#[test]
+fn torn_journal_tail_is_truncated_and_recovery_is_bitwise() {
+    let _g = serial_lock();
+    #[cfg(feature = "fault-inject")]
+    subppl::runtime::faults::clear();
+    let dir = scratch("torn");
+    let srv = Server::new(durable_cfg(&dir));
+    let id = srv.create(mu_params(3)).unwrap();
+    srv.step(id, 8, 0).unwrap();
+    let path = subppl::serve::journal_path(&dir, id);
+    let len_at_8 = std::fs::metadata(&path).unwrap().len();
+    srv.step(id, 4, 0).unwrap();
+    drop(srv);
+
+    // file surgery: keep only half of the bytes the last step added —
+    // the draw-12 checkpoint record is now half-written
+    let bytes = std::fs::read(&path).unwrap();
+    assert!(bytes.len() as u64 > len_at_8, "the second step journaled nothing");
+    let torn_len = len_at_8 as usize + (bytes.len() - len_at_8 as usize) / 2;
+    std::fs::write(&path, &bytes[..torn_len]).unwrap();
+
+    let srv = Server::new(ServeCfg {
+        recover: true,
+        ..durable_cfg(&dir)
+    });
+    assert_eq!(srv.recover_sessions().unwrap(), 1);
+    let rep = srv.step(id, 12, 0).unwrap();
+    assert_eq!(
+        rep.total, 20,
+        "recovery must restore the draw-8 checkpoint (the torn tail is lost work)"
+    );
+    assert_eq!(
+        mu_bits(&srv, id),
+        control_bits(3, 20, false, 0),
+        "post-truncation draws diverged from the uninterrupted run"
+    );
+    srv.drain();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Journal compaction (forced by a small `max_journal_bytes`) must not
+/// lose recovery state: the compacted journal still rebuilds the
+/// session bitwise, and the file stays near its cap instead of growing
+/// with every draw.
+#[test]
+fn compaction_keeps_recovery_bitwise_and_the_journal_small() {
+    let _g = serial_lock();
+    #[cfg(feature = "fault-inject")]
+    subppl::runtime::faults::clear();
+    let dir = scratch("compact");
+    let mut cfg = durable_cfg(&dir);
+    cfg.journal_every = 1; // a checkpoint record per draw: heavy churn
+    let srv = Server::new(cfg.clone());
+    let mut p = mu_params(5);
+    p.max_journal_bytes = 8192;
+    let id = srv.create(p).unwrap();
+    srv.step(id, 50, 0).unwrap();
+    srv.append(id, OBS.into()).unwrap();
+    srv.step(id, 10, 0).unwrap();
+    let path = subppl::serve::journal_path(&dir, id);
+    let len = std::fs::metadata(&path).unwrap().len();
+    assert!(
+        len <= 8192,
+        "60 per-draw checkpoints must compact under the 8192-byte cap (got {len})"
+    );
+    drop(srv);
+
+    let srv = Server::new(ServeCfg {
+        recover: true,
+        ..cfg
+    });
+    assert_eq!(srv.recover_sessions().unwrap(), 1);
+    srv.step(id, 10, 0).unwrap();
+    assert_eq!(
+        mu_bits(&srv, id),
+        control_bits(5, 50, true, 20),
+        "recovery from a compacted journal diverged"
+    );
+    srv.drain();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Per-session resource ceilings surface as `BudgetExceeded` on
+/// exactly the offending session — its neighbor on the same server
+/// keeps stepping, and a trace-budget append refusal mutates nothing.
+#[test]
+fn budget_ceilings_degrade_only_that_session() {
+    let _g = serial_lock();
+    #[cfg(feature = "fault-inject")]
+    subppl::runtime::faults::clear();
+    let dir = scratch("budget");
+    let mut cfg = durable_cfg(&dir);
+    cfg.journal_every = 1;
+    let srv = Server::new(cfg);
+    // the offender: a journal-bytes cap no compaction can satisfy
+    let mut p = mu_params(2);
+    p.max_journal_bytes = 1;
+    let hog = srv.create(p).unwrap();
+    // the innocent neighbor
+    let ok = srv.create(mu_params(2)).unwrap();
+    // first step to *observe* the breach reports it on an ok frame,
+    // mirroring the expiry convention
+    let rep = srv.step(hog, 5, 0).unwrap();
+    assert_eq!(rep.stopped, Some(StopReason::Budget));
+    assert!(rep.done < 5);
+    // the breach is permanent: later steps get the typed error
+    assert_eq!(
+        srv.step(hog, 1, 0).unwrap_err().code,
+        ErrCode::BudgetExceeded
+    );
+    // the neighbor never notices
+    assert_eq!(srv.step(ok, 10, 0).unwrap().done, 10);
+    // trace-node ceiling: the append is refused, nothing is mutated,
+    // the session keeps stepping and snapshotting
+    let mut p = mu_params(4);
+    p.max_trace_nodes = 1;
+    let tiny = srv.create(p).unwrap();
+    srv.step(tiny, 3, 0).unwrap();
+    let err = srv.append(tiny, OBS.into()).unwrap_err();
+    assert_eq!(err.code, ErrCode::BudgetExceeded);
+    assert_eq!(srv.step(tiny, 2, 0).unwrap().total, 5);
+    srv.drain();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Tier: deterministic fault suite (--features fault-inject)
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "fault-inject")]
+mod faulted {
+    use super::*;
+    use subppl::runtime::faults::{self, FaultPlan};
+
+    /// `torn-write@k` half-writes the k-th journal record and
+    /// `kill-recover@k` drops it entirely — both mid-operation.  The
+    /// operation errors (never a false ack), the session turns Failed,
+    /// and recovery restores the last durable checkpoint: the
+    /// continuation is bitwise identical to the uninterrupted run.
+    #[test]
+    fn injected_journal_crashes_recover_bitwise() {
+        for (label, plan) in [
+            (
+                "torn-write",
+                FaultPlan {
+                    // counters reset at install: the first record write
+                    // after arming (the draw-6 checkpoint) is torn
+                    torn_write_at: 1,
+                    ..FaultPlan::default()
+                },
+            ),
+            (
+                "kill-recover",
+                FaultPlan {
+                    kill_recover_at: 1,
+                    ..FaultPlan::default()
+                },
+            ),
+        ] {
+            let _g = serial_lock();
+            faults::clear();
+            let dir = scratch(label);
+            let mut cfg = durable_cfg(&dir);
+            cfg.journal_every = 1;
+            let srv = Server::new(cfg.clone());
+            let id = srv.create(mu_params(11)).unwrap();
+            srv.step(id, 5, 0).unwrap();
+            faults::install(plan);
+            // the injected journal failure surfaces as a step error —
+            // the drawn-but-never-durable work is not acknowledged
+            let err = srv.step(id, 1, 0).unwrap_err();
+            assert_eq!(err.code, ErrCode::Failed, "{label}: {err:?}");
+            faults::clear();
+            // the failure is terminal for that session
+            assert_eq!(
+                srv.step(id, 1, 0).unwrap_err().code,
+                ErrCode::Failed,
+                "{label}: a journal failure must be terminal"
+            );
+            drop(srv);
+
+            let srv = Server::new(ServeCfg {
+                recover: true,
+                ..cfg
+            });
+            assert_eq!(srv.recover_sessions().unwrap(), 1, "{label}");
+            let rep = srv.step(id, 15, 0).unwrap();
+            assert_eq!(
+                rep.total, 20,
+                "{label}: recovery must resume from the durable draw-5 checkpoint"
+            );
+            assert_eq!(
+                mu_bits(&srv, id),
+                control_bits(11, 20, false, 0),
+                "{label}: post-crash draws diverged from the uninterrupted run"
+            );
+            srv.drain();
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    /// `torn-write@k` during an *append* refuses the append (no false
+    /// ack) and recovery sees only the durable prefix: the journaled
+    /// model is the pre-append one, bitwise.
+    #[test]
+    fn torn_append_is_refused_and_not_recovered() {
+        let _g = serial_lock();
+        faults::clear();
+        let dir = scratch("torn-append");
+        let cfg = durable_cfg(&dir);
+        let srv = Server::new(cfg.clone());
+        let id = srv.create(mu_params(13)).unwrap();
+        srv.step(id, 6, 0).unwrap();
+        faults::install(FaultPlan {
+            // counters reset at install: the first record write after
+            // arming is the append record itself
+            torn_write_at: 1,
+            ..FaultPlan::default()
+        });
+        let err = srv.append(id, OBS.into()).unwrap_err();
+        assert_eq!(err.code, ErrCode::Failed, "{err:?}");
+        faults::clear();
+        drop(srv);
+
+        let srv = Server::new(ServeCfg {
+            recover: true,
+            ..cfg
+        });
+        assert_eq!(srv.recover_sessions().unwrap(), 1);
+        // the refused append is gone: the session continues the
+        // *unappended* schedule bitwise
+        srv.step(id, 14, 0).unwrap();
+        assert_eq!(
+            mu_bits(&srv, id),
+            control_bits(13, 20, false, 0),
+            "a torn append must not survive into recovery"
+        );
+        srv.drain();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
